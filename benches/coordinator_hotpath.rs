@@ -1,0 +1,56 @@
+//! L3 hot-path microbenchmarks (the §Perf profiling targets): everything
+//! the coordinator does *around* executable execution — KV re-bucketing,
+//! literal conversion, ring-buffer compaction, pooling, argmax. The
+//! perf target is that this overhead stays <10% of executable time.
+//! Needs no artifacts (pure host-side substrate work).
+
+use flux_attention::kvcache::{FullCache, SparseCache};
+use flux_attention::model::argmax;
+use flux_attention::router::pool_descriptor;
+use flux_attention::runtime::HostTensor;
+use flux_attention::util::bench::Bench;
+
+fn main() {
+    let (h, d) = (4usize, 32usize);
+    let mut b = Bench::new("coordinator_hotpath");
+
+    // full-cache re-bucketing (dense decode argument prep)
+    for len in [256usize, 1024, 2048] {
+        let mut cache = FullCache::new(h, d, len);
+        for _ in 0..len {
+            cache.append(&vec![1.0; h * d], &vec![2.0; h * d]);
+        }
+        b.run(&format!("kv_as_tensors/full/{len}"), 3, 50, || cache.as_tensors(len));
+    }
+    let mut sc = SparseCache::new(h, d, 16, 128, 192);
+    for _ in 0..500 {
+        sc.append(&vec![1.0; h * d], &vec![2.0; h * d]);
+    }
+    b.run("kv_as_tensors/sparse", 3, 100, || sc.as_tensors());
+
+    // literal conversion of decode-sized tensors
+    for len in [192usize, 2048] {
+        let t = HostTensor::zeros(vec![h, len, d]);
+        b.run(&format!("to_literal/{len}"), 3, 100, || t.to_literal().unwrap());
+    }
+
+    // pooling + argmax (per-layer / per-token host work)
+    let hidden = HostTensor::zeros(vec![2048, 128]);
+    b.run("pool_descriptor/2048", 5, 200, || pool_descriptor(&hidden, 2048, 16));
+    let logits = vec![0.5f32; 512];
+    b.run("argmax/512", 5, 500, || argmax(&logits));
+
+    // cache append (per-layer per-token)
+    let mut cache = FullCache::new(h, d, 2048);
+    let k = vec![1.0f32; h * d];
+    b.run("full_cache_append", 5, 500, || {
+        if cache.len() >= 2048 {
+            cache = FullCache::new(h, d, 2048);
+        }
+        cache.append(&k, &k)
+    });
+    let mut scache = SparseCache::new(h, d, 16, 128, 192);
+    b.run("sparse_cache_append", 5, 500, || scache.append(&k, &k));
+
+    b.save();
+}

@@ -1,0 +1,50 @@
+//! Fig 3(b) / Fig 1(b) bench: per-token decode latency, full-KV dense
+//! decode vs the sink+local sparse decode, across KV lengths. The
+//! dense/sparse ratio is the paper's kernel-level decode speedup series.
+
+use flux_attention::engine::Engine;
+use flux_attention::router::{AttnMode, DecodeMode, Policy};
+use flux_attention::util::bench::Bench;
+use flux_attention::util::rng::Rng;
+use flux_attention::workload::{generate, Task};
+
+fn main() {
+    let dir = std::path::PathBuf::from(
+        std::env::var("FLUX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping decode_kernel: run `make artifacts` first");
+        return;
+    }
+    let mut engine = Engine::load(&dir).expect("engine load");
+    let n_layers = engine.cfg().model.n_layers;
+    let mut b = Bench::new("decode");
+    for seq in [256usize, 512, 1024, 2000] {
+        let mut rng = Rng::seed_from_u64(2);
+        let sample = generate(Task::PRe, &mut rng, seq);
+
+        let (id, _) =
+            engine.prefill(&sample.prompt, &Policy::Backbone, "balanced").expect("prefill");
+        let dense = b.run(&format!("decode/dense/{seq}"), 2, 10, || {
+            engine.decode_step(id).expect("decode")
+        });
+        engine.release(id);
+
+        let sparse_policy = Policy::Static {
+            modes: vec![AttnMode::Ssa; n_layers],
+            decode: DecodeMode::Sparse,
+        };
+        let (id, _) =
+            engine.prefill(&sample.prompt, &sparse_policy, "balanced").expect("prefill");
+        let sparse = b.run(&format!("decode/sparse/{seq}"), 2, 10, || {
+            engine.decode_step(id).expect("decode")
+        });
+        engine.release(id);
+
+        println!(
+            "  -> kv {seq}: layer-level sparse decode speedup {:.2}x",
+            dense.mean_us / sparse.mean_us.max(1e-9)
+        );
+    }
+    b.save();
+}

@@ -1,0 +1,39 @@
+//! Fig 3(a) bench: end-to-end prefill latency per attention mode across
+//! context buckets. The dense/FA row is the 1.0x baseline; the mode/FA
+//! latency ratios give the speedup series of the paper's figure.
+//!
+//! Requires `make artifacts`. Skips gracefully when artifacts are absent.
+
+use flux_attention::engine::Engine;
+use flux_attention::router::{AttnMode, DecodeMode, Policy};
+use flux_attention::util::bench::Bench;
+use flux_attention::util::rng::Rng;
+use flux_attention::workload::{generate, Task};
+
+fn main() {
+    let dir = std::path::PathBuf::from(
+        std::env::var("FLUX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping prefill_speedup: run `make artifacts` first");
+        return;
+    }
+    let mut engine = Engine::load(&dir).expect("engine load");
+    let n_layers = engine.cfg().model.n_layers;
+    let mut b = Bench::new("prefill");
+    for seq in [128usize, 512, 2040] {
+        let mut rng = Rng::seed_from_u64(1);
+        let sample = generate(Task::PRe, &mut rng, seq);
+        for mode in [AttnMode::Fa, AttnMode::Ssa, AttnMode::Ta, AttnMode::Xa] {
+            let policy =
+                Policy::Static { modes: vec![mode; n_layers], decode: DecodeMode::Dense };
+            let iters = if seq > 1024 { 3 } else { 5 };
+            b.run(&format!("prefill/{}/{}", mode.name(), seq), 1, iters, || {
+                let (id, _) =
+                    engine.prefill(&sample.prompt, &policy, "balanced").expect("prefill");
+                engine.release(id);
+            });
+        }
+    }
+    b.save();
+}

@@ -1,0 +1,41 @@
+//! Fig 9 bench: Layer-Router overhead (pooling + router executable) per
+//! layer across context lengths — the paper's claim is ~0.2 ms/layer and
+//! length-invariant from 512 to 1M tokens; here the descriptor is fixed
+//! (2 d_model) so invariance is structural, and we measure it up to 1M
+//! rows of synthetic hidden state.
+
+use flux_attention::engine::Engine;
+use flux_attention::router::pool_descriptor;
+use flux_attention::runtime::HostTensor;
+use flux_attention::util::bench::Bench;
+
+fn main() {
+    let dir = std::path::PathBuf::from(
+        std::env::var("FLUX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping router_overhead: run `make artifacts` first");
+        return;
+    }
+    let mut engine = Engine::load(&dir).expect("engine load");
+    let d = engine.cfg().model.d_model;
+    let pool = engine.cfg().sparsity.pool_size;
+
+    // pooling alone (host-side) across sequence lengths: O(pool * d)
+    let mut b = Bench::new("router_overhead");
+    for s in [512usize, 8_192, 65_536, 1_048_576] {
+        let hidden = HostTensor::zeros(vec![s, d]);
+        b.run(&format!("pooling/{s}"), 5, 50, || pool_descriptor(&hidden, s, pool));
+    }
+
+    // full routing step: pooling + router executable, per layer
+    for s in [512usize, 8_192, 65_536, 1_048_576] {
+        let hidden = HostTensor::zeros(vec![s, d]);
+        b.run(&format!("router_step/{s}"), 3, 30, || {
+            let desc = pool_descriptor(&hidden, s, pool);
+            let net = engine.routers.get("balanced").expect("router");
+            net.route(&mut engine.rt, 0, &desc).expect("route")
+        });
+    }
+    b.save();
+}

@@ -1,0 +1,96 @@
+//! End-to-end quickstart: load the trained artifacts, serve a batch of
+//! mixed-category requests through the full coordinator (continuous
+//! batching + dynamic layer routing), and report accuracy, latency,
+//! throughput and routing decisions.
+//!
+//! This is the repo's end-to-end validation driver (EXPERIMENTS.md §E2E):
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use flux_attention::config::ServingConfig;
+use flux_attention::coordinator::{Coordinator, Request};
+use flux_attention::engine::EngineHandle;
+use flux_attention::eval::exact_match;
+use flux_attention::router::{AttnMode, DecodeMode, Policy};
+use flux_attention::tokenizer::Tokenizer;
+use flux_attention::util::rng::Rng;
+use flux_attention::workload::{generate, Task};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::var("FLUX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    eprintln!("loading engine from {artifacts:?} ...");
+    let engine = EngineHandle::spawn(artifacts)?;
+    let tok = Tokenizer::new();
+    let coord = Coordinator::start(engine, ServingConfig::default());
+
+    // a mixed batch: retrieval-intensive + context-holistic tasks
+    let tasks = [
+        Task::PRe,
+        Task::Qasper,
+        Task::HotQA,
+        Task::Gov,
+        Task::Trec,
+        Task::Lcc,
+        Task::PRe,
+        Task::Gov,
+    ];
+    let mut rng = Rng::seed_from_u64(2026);
+    let policy = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Dense };
+
+    let t0 = std::time::Instant::now();
+    let mut handles = vec![];
+    for &task in &tasks {
+        let sample = generate(task, &mut rng, 512);
+        let coord = coord.clone();
+        let policy = policy.clone();
+        let answer = sample.answer.clone();
+        handles.push((
+            task,
+            answer,
+            std::thread::spawn(move || {
+                coord.submit(Request {
+                    max_new: sample.answer.len() + 1,
+                    prompt: sample.prompt,
+                    policy,
+                    router: "balanced".into(),
+                })
+            }),
+        ));
+    }
+
+    println!(
+        "{:<8} {:>8} {:>9} {:>9} {:>6}  {:<22} routing",
+        "task", "ttft_ms", "e2e_ms", "dec_ms/t", "omsr", "answer"
+    );
+    let mut correct = 0usize;
+    let n = handles.len();
+    for (task, answer, h) in handles {
+        let r = h.join().expect("thread")?;
+        let ok = exact_match(&r.tokens, &answer);
+        correct += ok as usize;
+        println!(
+            "{:<8} {:>8.1} {:>9.1} {:>9.2} {:>6.2}  {:<22} {}",
+            task.name(),
+            r.ttft_us as f64 / 1e3,
+            r.e2e_us as f64 / 1e3,
+            r.decode_us_per_token / 1e3,
+            r.omsr,
+            format!("{} [{}]", tok.decode(&r.tokens), if ok { "OK" } else { "MISS" }),
+            r.modes.join(","),
+        );
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    println!("\n{}", coord.metrics.lock().unwrap().summary());
+    println!(
+        "accuracy {}/{}  wall {:.1}s  ({:.2} req/s)",
+        correct,
+        n,
+        elapsed,
+        n as f64 / elapsed
+    );
+    Ok(())
+}

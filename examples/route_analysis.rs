@@ -1,0 +1,70 @@
+//! Routing analysis: visualize the Layer Router's per-task decisions
+//! (paper Fig 4) and the router-overhead length-invariance (Fig 9)
+//! directly on the serving engine.
+//!
+//! ```bash
+//! cargo run --release --example route_analysis
+//! ```
+
+use flux_attention::engine::Engine;
+use flux_attention::router::{AttnMode, DecodeMode, Policy};
+use flux_attention::workload::{generate, Task};
+use flux_attention::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::var("FLUX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let mut engine = Engine::load(&artifacts)?;
+    let policy = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Dense };
+    let n_layers = engine.cfg().model.n_layers;
+    let n = 8;
+
+    println!("FA-activation frequency per layer (dark = always FA):\n");
+    print!("{:<10}", "task");
+    for l in 0..n_layers {
+        print!(" L{l} ");
+    }
+    println!("  omsr");
+    for task in [Task::Qasper, Task::HotQA, Task::PRe, Task::Gov, Task::Trec, Task::Lcc] {
+        let mut counts = vec![0usize; n_layers];
+        let mut omsr = 0.0;
+        let mut rng = Rng::seed_from_u64(task as u64);
+        for _ in 0..n {
+            let s = generate(task, &mut rng, 512);
+            let (id, report) = engine.prefill(&s.prompt, &policy, "balanced")?;
+            engine.release(id);
+            omsr += report.omsr / n as f64;
+            for (c, m) in counts.iter_mut().zip(&report.modes) {
+                *c += (*m == AttnMode::Fa) as usize;
+            }
+        }
+        print!("{:<10}", task.name());
+        for &c in &counts {
+            let f = c as f64 / n as f64;
+            let glyph = match (f * 4.0).round() as usize {
+                0 => " . ",
+                1 => " - ",
+                2 => " + ",
+                3 => " * ",
+                _ => " # ",
+            };
+            print!("{glyph} ");
+        }
+        println!("  {omsr:.2}");
+    }
+
+    println!("\nrouter overhead (ms per layer) vs context length:");
+    for seq in [128usize, 256, 512, 1024, 2040] {
+        let mut rng = Rng::seed_from_u64(99);
+        let s = generate(Task::PRe, &mut rng, seq);
+        let (id, report) = engine.prefill(&s.prompt, &policy, "balanced")?;
+        engine.release(id);
+        println!(
+            "  ctx {:>5}: {:.4} ms/layer",
+            seq,
+            report.router_us as f64 / 1e3 / n_layers as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Long-context serving demo: starts the JSONL TCP server in-process,
+//! connects as a client, and streams a set of long-context requests with
+//! different policies — the paper's deployment scenario (section 3.3).
+//!
+//! ```bash
+//! cargo run --release --example serve_longcontext
+//! ```
+
+use flux_attention::config::{MetaConfig, ServingConfig};
+use flux_attention::coordinator::Coordinator;
+use flux_attention::engine::EngineHandle;
+use flux_attention::server::{client_request, serve, WireRequest};
+use flux_attention::util::rng::Rng;
+use flux_attention::workload::{generate, Task};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::var("FLUX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let cfg = MetaConfig::load(&artifacts)?;
+    let n_layers = cfg.model.n_layers;
+    let engine = EngineHandle::spawn(artifacts)?;
+    let addr = "127.0.0.1:7071";
+
+    let coord = Coordinator::start(engine, ServingConfig::default());
+    let server_coord = coord.clone();
+    std::thread::spawn(move || {
+        let _ = serve(server_coord, addr, n_layers);
+    });
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    let mut rng = Rng::seed_from_u64(7);
+    let scenarios = [
+        ("backbone", Task::PRe, 1024, false),
+        ("flux-ssa", Task::PRe, 1024, false),
+        ("flux-ssa", Task::Gov, 1024, false),
+        ("flux-ta", Task::HotQA, 2040, false),
+        ("flux-ssa", Task::Trec, 2040, true), // sparse decode
+    ];
+    println!(
+        "{:<10} {:<8} {:>6} {:>4} {:>9} {:>9} {:>7}",
+        "policy", "task", "ctx", "sd", "ttft_ms", "e2e_ms", "omsr"
+    );
+    for (policy, task, ctx, sd) in scenarios {
+        let sample = generate(task, &mut rng, ctx);
+        let req = WireRequest {
+            prompt: sample.prompt.clone(),
+            max_new: sample.answer.len() + 1,
+            policy: policy.into(),
+            router: "balanced".into(),
+            sparse_decode: sd,
+        };
+        let resp = client_request(addr, &req)?;
+        if let Some(e) = &resp.error {
+            println!("{policy:<10} {:<8} error: {e}", task.name());
+            continue;
+        }
+        println!(
+            "{:<10} {:<8} {:>6} {:>4} {:>9.1} {:>9.1} {:>7.2}   -> {}",
+            policy,
+            task.name(),
+            sample.prompt.len(),
+            sd as u8,
+            resp.ttft_ms,
+            resp.e2e_ms,
+            resp.omsr,
+            resp.text
+        );
+    }
+    println!("\nserver metrics: {}", coord.metrics.lock().unwrap().summary());
+    Ok(())
+}

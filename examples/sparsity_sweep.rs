@@ -1,0 +1,48 @@
+//! Sparsity sweep: the accuracy/latency trade-off across static Omega
+//! levels and the FluxAttention dynamic policy — a runnable version of
+//! the paper's motivating experiment (section 2.3 / Fig 1a) on live
+//! serving hardware.
+//!
+//! ```bash
+//! cargo run --release --example sparsity_sweep
+//! ```
+
+use flux_attention::baselines::entropy_ranked_modes;
+use flux_attention::engine::Engine;
+use flux_attention::eval::{experiments::entropy_scores, run_task};
+use flux_attention::router::{AttnMode, DecodeMode, Policy};
+use flux_attention::workload::Task;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::var("FLUX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let mut engine = Engine::load(&artifacts)?;
+    let seq_len = 512;
+    let n = 4;
+    let scores = entropy_scores(&mut engine, seq_len)?;
+    println!("layer entropy scores: {scores:.3?}\n");
+
+    println!(
+        "{:<14} {:>6} {:>9} {:>9} {:>11} {:>11}",
+        "policy", "omega", "pre_acc", "gov_acc", "prefill_ms", "kv_bytes"
+    );
+    for omega in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let modes = entropy_ranked_modes(&scores, omega, AttnMode::Ssa);
+        let policy = Policy::Static { modes, decode: DecodeMode::Sparse };
+        let r1 = run_task(&mut engine, Task::PRe, &policy, "balanced", n, seq_len, 1)?;
+        let r2 = run_task(&mut engine, Task::Gov, &policy, "balanced", n, seq_len, 2)?;
+        println!(
+            "{:<14} {:>6.2} {:>9.1} {:>9.1} {:>11.1} {:>11.0}",
+            "entropy-static", omega, r1.acc, r2.acc, r1.prefill_ms, r1.kv_bytes
+        );
+    }
+    let flux = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Sparse };
+    let r1 = run_task(&mut engine, Task::PRe, &flux, "balanced", n, seq_len, 1)?;
+    let r2 = run_task(&mut engine, Task::Gov, &flux, "balanced", n, seq_len, 2)?;
+    println!(
+        "{:<14} {:>6.2} {:>9.1} {:>9.1} {:>11.1} {:>11.0}   (dynamic, per-request)",
+        "flux-ssa", (r1.omsr + r2.omsr) / 2.0, r1.acc, r2.acc, r1.prefill_ms, r1.kv_bytes
+    );
+    Ok(())
+}

@@ -1,0 +1,172 @@
+"""AOT export: lower every executable variant to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (/opt/xla-example/README.md).
+
+Lowering recipe (mirrors /opt/xla-example/gen_hlo.py):
+
+    lowered = jax.jit(fn).lower(*specs)
+    mlir    = lowered.compiler_ir("stablehlo")
+    comp    = xla_client._xla.mlir.mlir_module_to_xla_computation(
+                  str(mlir), use_tuple_args=False, return_tuple=True)
+    text    = comp.as_hlo_text()
+
+Everything is lowered with return_tuple=True; the rust runtime unwraps
+with `to_tuple1()`/tuple indexing.
+
+Also exports the trained weights as a raw f32 blob + JSON manifest
+(weights.bin / weights.json) and the full model/runtime configuration
+(model_meta.json) for the rust loader.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--skip-weights]
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .config import (MODEL, SPARSITY, ROUTER, PREFILL_BUCKETS,
+                     DECODE_KV_BUCKETS, dump_meta)
+from . import model as M
+
+# sparse-decode ring buffer size: sink + local + current, rounded up to
+# the decode kernel block (64)
+SA_BUF = ((SPARSITY.sa_decode_window + 63) // 64) * 64  # 192
+
+
+def to_hlo_text(fn, *specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def executable_specs():
+    """Every (name, fn, specs) triple to lower. See DESIGN.md section 1."""
+    d, ff, h, dd, v = (MODEL.d_model, MODEL.d_ff, MODEL.n_heads,
+                       MODEL.head_dim, MODEL.vocab_size)
+    rh = ROUTER.d_hidden
+    layer_w = [f32(d), f32(d, d), f32(d, d), f32(d, d), f32(d, d), f32(d),
+               f32(d, ff), f32(ff, d)]
+    out = []
+    for s in PREFILL_BUCKETS:
+        for mode in M.MODES:
+            out.append((
+                f"layer_{mode}_prefill_{s}",
+                functools.partial(M.prefill_layer_step, mode),
+                [f32(s, d)] + layer_w,
+            ))
+    out.append(("decode_qkv",
+                M.decode_qkv_step,
+                [f32(d), i32(1), f32(d), f32(d, d), f32(d, d), f32(d, d)]))
+    for k in DECODE_KV_BUCKETS:
+        out.append((
+            f"decode_attend_fa_{k}",
+            M.decode_attend_step,
+            [f32(d), f32(h, dd), f32(h, k, dd), f32(h, k, dd), i32(1),
+             f32(d, d), f32(d), f32(d, ff), f32(ff, d)],
+        ))
+    out.append((
+        "decode_attend_sa",
+        M.decode_attend_step,
+        [f32(d), f32(h, dd), f32(h, SA_BUF, dd), f32(h, SA_BUF, dd), i32(1),
+         f32(d, d), f32(d), f32(d, ff), f32(ff, d)],
+    ))
+    out.append(("router",
+                M.router_step,
+                [f32(2 * d), f32(2 * d, rh), f32(rh), f32(rh, 2), f32(2)]))
+    out.append(("lm_head", M.lm_head_step, [f32(d), f32(d), f32(d, v)]))
+    return out
+
+
+def export_weights(out_dir):
+    """model.npz + router_*.npz -> raw f32 blob(s) + manifest for rust."""
+    from .train import export_flat_bin
+    exported = []
+    model_npz = os.path.join(out_dir, "model.npz")
+    if os.path.exists(model_npz):
+        d = dict(np.load(model_npz))
+        export_flat_bin(d, os.path.join(out_dir, "weights.bin"),
+                        os.path.join(out_dir, "weights.json"))
+        exported.append("weights.bin")
+    for fn in sorted(os.listdir(out_dir)):
+        if fn.startswith("router_") and fn.endswith(".npz"):
+            name = fn[:-4]
+            d = dict(np.load(os.path.join(out_dir, fn)))
+            export_flat_bin(d, os.path.join(out_dir, f"{name}.bin"),
+                            os.path.join(out_dir, f"{name}.json"))
+            exported.append(f"{name}.bin")
+    cont = os.path.join(out_dir, "model_continued.npz")
+    if os.path.exists(cont):
+        d = dict(np.load(cont))
+        export_flat_bin(d, os.path.join(out_dir, "weights_continued.bin"),
+                        os.path.join(out_dir, "weights_continued.json"))
+        exported.append("weights_continued.bin")
+    return exported
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--skip-weights", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated exe-name substrings to lower")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"executables": [], "weights": []}
+    for name, fn, specs in executable_specs():
+        if args.only and not any(p in name for p in args.only.split(",")):
+            continue
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        t0 = time.time()
+        text = to_hlo_text(fn, *specs)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["executables"].append(name)
+        print(f"lowered {name}: {len(text)} chars ({time.time()-t0:.1f}s)",
+              flush=True)
+
+    if not args.skip_weights:
+        manifest["weights"] = export_weights(args.out_dir)
+
+    dump_meta(os.path.join(args.out_dir, "model_meta.json"))
+    # extend meta with runtime constants the rust side needs
+    meta_path = os.path.join(args.out_dir, "model_meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["sa_buf"] = SA_BUF
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+
+    # never clobber a fuller manifest with a partial/weights-only run:
+    # the executable list is always recovered from the directory contents
+    manifest["executables"] = sorted(
+        f[:-len(".hlo.txt")] for f in os.listdir(args.out_dir)
+        if f.endswith(".hlo.txt"))
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['executables'])} executables")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Scaled hyperparameter configuration for the FluxAttention reproduction.
+
+Mirrors Table 3 of the paper, scaled ~32x down in context length (paper
+trains at 65,536 tokens on 8xA800; we train at <=1,024 on CPU) with the
+sparse-attention geometry (sink/local/block sizes) scaled by the same
+factor so the context/window ratios -- which drive the FA-vs-SA
+behavioural crossovers -- are preserved. See DESIGN.md section 2.
+"""
+
+from dataclasses import dataclass, field, asdict
+import json
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Backbone transformer configuration (the frozen "pretrained LLM")."""
+
+    vocab_size: int = 512
+    d_model: int = 128
+    n_layers: int = 8
+    n_heads: int = 4
+    head_dim: int = 32  # d_model / n_heads
+    d_ff: int = 512
+    max_seq_len: int = 2048
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+
+    def __post_init__(self):
+        assert self.n_heads * self.head_dim == self.d_model
+
+
+@dataclass(frozen=True)
+class SparsityConfig:
+    """Sparse-attention geometry (paper Table 3, "Sparsity Config", /16).
+
+    Paper (64K contexts): sink 128, local 2048, block 64, stride 16.
+    Ours (2K contexts):   sink 16,  local 128,  block 16, stride 4.
+    """
+
+    sink_size: int = 16
+    local_size: int = 128
+    block_size: int = 16
+    xattn_stride: int = 4
+    xattn_keep_ratio: float = 0.25  # fraction of kv blocks kept per q block
+    triangle_last_q: int = 64  # dense rows at the bottom of the matrix
+    pool_size: int = 16  # prefill/suffix pooling window (paper: 100)
+
+    @property
+    def sa_decode_window(self) -> int:
+        # sparse-decode ring buffer: sink + local (+1 for current token)
+        return self.sink_size + self.local_size + 1
+
+
+@dataclass(frozen=True)
+class RouterConfig:
+    """Layer Router: Context Encoder MLP + Router Head MLP."""
+
+    d_hidden: int = 64
+    tau_start: float = 2.0  # Gumbel-Softmax temperature annealing
+    tau_end: float = 0.3
+    # Task-dependent sparsity budgets t (permissible fraction of SA layers).
+    # Paper section 4.1: t=1.0 for context-holistic, t=0.45 for retrieval.
+    t_retrieval: float = 0.45
+    t_holistic: float = 1.0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Optimization settings (paper Table 3, scaled)."""
+
+    seed: int = 0
+    # backbone pretraining (substitute for the public pretrained checkpoint)
+    pretrain_steps: int = 1100
+    pretrain_batch: int = 8
+    pretrain_seq: int = 512
+    pretrain_lr: float = 2e-3
+    # router training (the paper's 300-step, 12h-on-8xA800 run, scaled)
+    router_steps: int = 120
+    router_batch: int = 8
+    router_seq: int = 256
+    router_lr: float = 5e-4  # paper: "Mask LR" 5e-4
+    lambda_lr: float = 1e-3  # paper: "Reg. LR" 1e-3
+    warmup_ratio: float = 0.2
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    weight_decay: float = 0.1
+    # continued training with a frozen router (paper section 5.3)
+    continued_steps: int = 60
+    continued_lr: float = 3e-4
+
+
+# Executable bucket sizes for the AOT artifacts (powers of two).
+PREFILL_BUCKETS = (128, 256, 512, 1024, 2048)
+DECODE_KV_BUCKETS = (128, 256, 512, 1024, 2048)
+
+MODEL = ModelConfig()
+SPARSITY = SparsityConfig()
+ROUTER = RouterConfig()
+TRAIN = TrainConfig()
+
+
+def dump_meta(path: str) -> None:
+    """Write the full configuration as JSON for the rust side."""
+    meta = {
+        "model": asdict(MODEL),
+        "sparsity": asdict(SPARSITY),
+        "router": asdict(ROUTER),
+        "train": asdict(TRAIN),
+        "prefill_buckets": list(PREFILL_BUCKETS),
+        "decode_kv_buckets": list(DECODE_KV_BUCKETS),
+        "sa_decode_window": SPARSITY.sa_decode_window,
+    }
+    with open(path, "w") as f:
+        json.dump(meta, f, indent=2)

@@ -1,0 +1,389 @@
+"""Synthetic long-context task suite (training-time mirror of rust workload/).
+
+Thirteen LongBench-E proxy tasks across the paper's six categories, plus
+the RULER needle ladder and the reasoning/math proxies used in Table 2.
+Each task is engineered to sit in the same *sparsity-sensitivity class*
+as its LongBench counterpart (DESIGN.md section 2):
+
+  retrieval-intensive  -- the answer depends on an exact lookup of a
+      token placed at an arbitrary (often deep) position; truncating
+      historical KV destroys it.
+  context-holistic     -- the answer is recoverable from coarse local
+      statistics (majority markers, repeated ICL mappings, local code
+      patterns); a sink+window view suffices.
+
+Token map (vocab 512):
+  0 PAD  1 BOS  2 EOS  3 SEP  4 QUERY  5 ANSWER  6..31 task tags
+  32..511 content tokens.
+
+The rust `workload` module reimplements exactly these generators (same
+layout, same seeds via SplitMix64 -> independent streams; parity is not
+required across languages, only distributional equivalence).
+"""
+
+import numpy as np
+
+PAD, BOS, EOS, SEP, QUERY, ANSWER = 0, 1, 2, 3, 4, 5
+TAG_BASE = 6
+CONTENT = 32
+VOCAB = 512
+NCONTENT = VOCAB - CONTENT  # 480
+
+RETRIEVAL_TASKS = ("qasper", "mfen", "hotqa", "wiki2", "pcount", "pre")
+HOLISTIC_TASKS = ("gov", "mnews", "trec", "tqa", "sams", "rbp", "lcc")
+TASKS = RETRIEVAL_TASKS + HOLISTIC_TASKS
+
+CATEGORY = {  # LongBench-E category per task
+    "qasper": "sdocqa", "mfen": "sdocqa",
+    "hotqa": "mdocqa", "wiki2": "mdocqa",
+    "gov": "summ", "mnews": "summ",
+    "trec": "icl", "tqa": "icl", "sams": "icl",
+    "pcount": "synthetic", "pre": "synthetic",
+    "rbp": "code", "lcc": "code",
+}
+
+TAG = {t: TAG_BASE + i for i, t in enumerate(
+    TASKS + ("ruler", "lbv2e", "lbv2h", "gsm", "aime"))}
+
+
+def _tok(i):
+    return CONTENT + int(i) % NCONTENT
+
+
+def _filler(rng, n):
+    return rng.integers(CONTENT, VOCAB, size=n).tolist()
+
+
+class Sample(dict):
+    """tokens (exact length), answer span, category flags."""
+
+    def __init__(self, tokens, ans_start, ans_len, task):
+        super().__init__(tokens=np.asarray(tokens, np.int32),
+                         ans_start=ans_start, ans_len=ans_len, task=task,
+                         retrieval=task not in HOLISTIC_TASKS)
+
+
+def _assemble(task, rng, seq_len, ctx_builder, query, answer):
+    """[BOS TAG ctx... QUERY q... ANSWER a... EOS], sized to seq_len."""
+    overhead = 2 + 1 + len(query) + 1 + len(answer) + 1
+    ctx = ctx_builder(seq_len - overhead)
+    toks = ([BOS, TAG[task]] + ctx + [QUERY] + query + [ANSWER]
+            + answer + [EOS])
+    assert len(toks) == seq_len, (task, len(toks), seq_len)
+    ans_start = 2 + len(ctx) + 1 + len(query) + 1
+    return Sample(toks, ans_start, len(answer), task)
+
+
+def _scatter(rng, n, items):
+    """Spread token groups across n filler slots; returns token list of
+    exactly n tokens with each group inserted at a distinct depth."""
+    out = _filler(rng, n)
+    total = sum(len(it) for it in items)
+    assert total <= n
+    # non-overlapping random offsets
+    free = n - total
+    gaps = rng.multinomial(free, np.ones(len(items) + 1) / (len(items) + 1))
+    pos = 0
+    cursor = 0
+    for gap, it in zip(gaps[:-1], items):
+        cursor += gap
+        out[cursor:cursor + len(it)] = it
+        cursor += len(it)
+    return out[:n]
+
+
+# --------------------------- retrieval-intensive ---------------------------
+
+def gen_qasper(rng, seq_len):
+    """Single-doc QA: facts (SEP key val), query one key."""
+    nfacts = max(2, min(16, seq_len // 48))
+    keys = rng.choice(NCONTENT, nfacts, replace=False)
+    vals = rng.integers(0, NCONTENT, nfacts)
+    facts = [[SEP, _tok(k), _tok(v)] for k, v in zip(keys, vals)]
+    t = rng.integers(nfacts)
+    return _assemble("qasper", rng, seq_len,
+                     lambda n: _scatter(rng, n, facts),
+                     [_tok(keys[t])], [_tok(vals[t])])
+
+
+def gen_mfen(rng, seq_len):
+    """Multi-field QA: (SEP entity field value); query entity+field."""
+    nent = max(2, min(10, seq_len // 64))
+    ents = rng.choice(NCONTENT // 2, nent, replace=False)
+    f1 = rng.integers(0, NCONTENT, nent)
+    f2 = rng.integers(0, NCONTENT, nent)
+    fields = [NCONTENT // 2, NCONTENT // 2 + 1]  # two field tags
+    facts = []
+    for e, a, b in zip(ents, f1, f2):
+        facts.append([SEP, _tok(e), _tok(fields[0]), _tok(a)])
+        facts.append([SEP, _tok(e), _tok(fields[1]), _tok(b)])
+    t = rng.integers(nent)
+    fsel = rng.integers(2)
+    val = (f1 if fsel == 0 else f2)[t]
+    return _assemble("mfen", rng, seq_len,
+                     lambda n: _scatter(rng, n, facts),
+                     [_tok(ents[t]), _tok(fields[fsel])], [_tok(val)])
+
+
+def gen_hotqa(rng, seq_len):
+    """2-hop: (A -> B), (B -> C); query A, answer C."""
+    nchains = max(2, min(8, seq_len // 96))
+    a = rng.choice(NCONTENT // 3, nchains, replace=False)
+    b = rng.choice(NCONTENT // 3, nchains, replace=False) + NCONTENT // 3
+    c = rng.integers(0, NCONTENT, nchains)
+    hops = []
+    for i in range(nchains):
+        hops.append([SEP, _tok(a[i]), _tok(b[i])])
+        hops.append([SEP, _tok(b[i]), _tok(c[i])])
+    t = rng.integers(nchains)
+    return _assemble("hotqa", rng, seq_len,
+                     lambda n: _scatter(rng, n, hops),
+                     [_tok(a[t])], [_tok(c[t])])
+
+
+def gen_wiki2(rng, seq_len):
+    """3-hop chain resolution."""
+    nchains = max(2, min(6, seq_len // 128))
+    base = NCONTENT // 4
+    a = rng.choice(base, nchains, replace=False)
+    b = rng.choice(base, nchains, replace=False) + base
+    c = rng.choice(base, nchains, replace=False) + 2 * base
+    d = rng.integers(0, NCONTENT, nchains)
+    hops = []
+    for i in range(nchains):
+        hops += [[SEP, _tok(a[i]), _tok(b[i])],
+                 [SEP, _tok(b[i]), _tok(c[i])],
+                 [SEP, _tok(c[i]), _tok(d[i])]]
+    t = rng.integers(nchains)
+    return _assemble("wiki2", rng, seq_len,
+                     lambda n: _scatter(rng, n, hops),
+                     [_tok(a[t])], [_tok(d[t])])
+
+
+def gen_pcount(rng, seq_len):
+    """Count marker occurrences (mod 32). Globally hard for everyone."""
+    marker = _tok(rng.integers(NCONTENT))
+    count = int(rng.integers(1, 24))
+
+    def build(n):
+        return _scatter(rng, n, [[marker]] * count)
+
+    return _assemble("pcount", rng, seq_len, build, [marker],
+                     [_tok(count)])
+
+
+def gen_pre(rng, seq_len):
+    """Passage retrieval / passkey at a uniform random depth."""
+    key = _tok(rng.integers(NCONTENT))
+    val = _tok(rng.integers(NCONTENT))
+
+    def build(n):
+        out = _filler(rng, n)
+        pos = int(rng.integers(0, max(1, n - 3)))
+        out[pos:pos + 3] = [SEP, key, val]
+        return out[:n]
+
+    return _assemble("pre", rng, seq_len, build, [key], [val])
+
+
+# ----------------------------- context-holistic ----------------------------
+
+def gen_gov(rng, seq_len):
+    """Majority topic marker: (SEP topic) markers; majority ~ 60%."""
+    topics = rng.choice(NCONTENT, 3, replace=False)
+    nmark = max(6, seq_len // 24)
+    probs = np.array([0.6, 0.25, 0.15])
+    draws = rng.choice(3, nmark, p=probs)
+    marks = [[SEP, _tok(topics[i])] for i in draws]
+    maj = topics[np.bincount(draws, minlength=3).argmax()]
+    return _assemble("gov", rng, seq_len,
+                     lambda n: _scatter(rng, n, marks),
+                     [SEP], [_tok(maj)])
+
+
+def gen_mnews(rng, seq_len):
+    """Most frequent headline token after QUERY-marker sentences."""
+    heads = rng.choice(NCONTENT, 4, replace=False)
+    nsent = max(6, seq_len // 32)
+    probs = np.array([0.55, 0.2, 0.15, 0.1])
+    draws = rng.choice(4, nsent, p=probs)
+    sents = [[SEP, _tok(heads[i]), *_filler(rng, 2)] for i in draws]
+    maj = heads[np.bincount(draws, minlength=4).argmax()]
+    return _assemble("mnews", rng, seq_len,
+                     lambda n: _scatter(rng, n, sents),
+                     [SEP, SEP], [_tok(maj)])
+
+
+def _icl_task(name, rng, seq_len, npat):
+    """Repeated pattern->label pairs; query pattern appears densely, so a
+    recent in-window example always exists (holistic-robust)."""
+    pats = rng.choice(NCONTENT // 2, npat, replace=False)
+    labels = rng.choice(NCONTENT // 2, npat, replace=False) + NCONTENT // 2
+    t = rng.integers(npat)
+
+    def build(n):
+        out = []
+        while len(out) + 3 <= n:
+            i = rng.integers(npat) if rng.random() > 0.3 else t
+            out += [SEP, _tok(pats[i]), _tok(labels[i])]
+        out += _filler(rng, n - len(out))
+        return out[:n]
+
+    return _assemble(name, rng, seq_len, build, [_tok(pats[t])],
+                     [_tok(labels[t])])
+
+
+def gen_trec(rng, seq_len):
+    return _icl_task("trec", rng, seq_len, 6)
+
+
+def gen_tqa(rng, seq_len):
+    return _icl_task("tqa", rng, seq_len, 10)
+
+
+def gen_sams(rng, seq_len):
+    """Dominant-speaker summarization over dialogue turns."""
+    speakers = rng.choice(NCONTENT, 3, replace=False)
+    probs = np.array([0.55, 0.25, 0.2])
+    nturn = max(6, seq_len // 24)
+    draws = rng.choice(3, nturn, p=probs)
+    turns = [[SEP, _tok(speakers[i]), *_filler(rng, 3)] for i in draws]
+    maj = speakers[np.bincount(draws, minlength=3).argmax()]
+    return _assemble("sams", rng, seq_len,
+                     lambda n: _scatter(rng, n, turns),
+                     [SEP, QUERY], [_tok(maj)])
+
+
+def gen_rbp(rng, seq_len):
+    """Repo-level next-line prediction: line_{i+1}[0] = line_i[0] + step.
+    Purely local pattern continuation."""
+    step = int(rng.integers(1, 7))
+    start = int(rng.integers(NCONTENT))
+    width = 4
+    n_ctx = seq_len - 7  # overhead of [BOS TAG ... QUERY q ANSWER a EOS]
+    nlines = n_ctx // (width + 1)
+    out = []
+    for i in range(nlines):
+        out += [SEP, _tok(start + i * step), *_filler(rng, width - 1)]
+    out += [SEP] * (n_ctx - len(out))
+    next_tok = _tok(start + nlines * step)
+    return _assemble("rbp", rng, seq_len, lambda n: out[:n], [SEP],
+                     [next_tok])
+
+
+def gen_lcc(rng, seq_len):
+    """Local code completion: repeating k-period token sequence; answer
+    is the continuation of the period."""
+    period = int(rng.integers(3, 8))
+    motif = [_tok(x) for x in rng.integers(0, NCONTENT, period)]
+    n_ctx = seq_len - 7
+    out = (motif * (n_ctx // period + 1))[:n_ctx]
+    next_tok = motif[n_ctx % period]
+    return _assemble("lcc", rng, seq_len, lambda n: out[:n], [SEP],
+                     [next_tok])
+
+
+# -------------------- Table-2 proxies (RULER / LB-v2 / math) ---------------
+
+def gen_ruler(rng, seq_len):
+    """RULER needle ladder: passkey at controlled depth (== pre)."""
+    s = gen_pre(rng, seq_len)
+    s["task"] = "ruler"
+    return s
+
+
+def _chain_task(name, rng, seq_len, hops):
+    """k-hop variable resolution with distractor chains (LongBench-v2)."""
+    nchains = 4
+    per = NCONTENT // (hops + 1)
+    chains = []
+    finals = []
+    heads = rng.choice(per, nchains, replace=False)
+    for ci in range(nchains):
+        cur = heads[ci]
+        toks = []
+        for hp in range(hops):
+            nxt = int(rng.integers(per)) + (hp + 1) * per
+            toks.append([SEP, _tok(cur), _tok(nxt)])
+            cur = nxt
+        chains += toks
+        finals.append(cur)
+    t = rng.integers(nchains)
+    return _assemble(name, rng, seq_len,
+                     lambda n: _scatter(rng, n, chains),
+                     [_tok(heads[t])], [_tok(finals[t])])
+
+
+def gen_lbv2_easy(rng, seq_len):
+    return _chain_task("lbv2e", rng, seq_len, hops=2)
+
+
+def gen_lbv2_hard(rng, seq_len):
+    return _chain_task("lbv2h", rng, seq_len, hops=4)
+
+
+def _arith_task(name, rng, seq_len, ops, mul):
+    """Chained modular arithmetic: running value over ops steps, mod 97.
+
+    Sequence [SEP op operand] triples in order; answer = final value.
+    Requires carrying state across the whole chain (reasoning proxy).
+    """
+    mod = 97
+    val = int(rng.integers(mod))
+    triples = [[SEP, QUERY, _tok(val)]]  # initial value statement
+    for _ in range(ops):
+        x = int(rng.integers(1, 10))
+        if mul and rng.random() < 0.3:
+            val = (val * x) % mod
+            triples.append([SEP, _tok(NCONTENT - 2), _tok(x)])
+        else:
+            val = (val + x) % mod
+            triples.append([SEP, _tok(NCONTENT - 1), _tok(x)])
+
+    def build(n):
+        flat = [t for tr in triples for t in tr]
+        return (flat + _filler(rng, n))[:n] if len(flat) <= n else flat[:n]
+
+    return _assemble(name, rng, seq_len, build, [SEP], [_tok(val)])
+
+
+def gen_gsm(rng, seq_len):
+    return _arith_task("gsm", rng, seq_len, ops=6, mul=False)
+
+
+def gen_aime(rng, seq_len):
+    return _arith_task("aime", rng, seq_len, ops=10, mul=True)
+
+
+GENERATORS = {
+    "qasper": gen_qasper, "mfen": gen_mfen, "hotqa": gen_hotqa,
+    "wiki2": gen_wiki2, "gov": gen_gov, "mnews": gen_mnews,
+    "trec": gen_trec, "tqa": gen_tqa, "sams": gen_sams,
+    "pcount": gen_pcount, "pre": gen_pre, "rbp": gen_rbp, "lcc": gen_lcc,
+    "ruler": gen_ruler, "lbv2e": gen_lbv2_easy, "lbv2h": gen_lbv2_hard,
+    "gsm": gen_gsm, "aime": gen_aime,
+}
+
+RETRIEVAL_SET = set(RETRIEVAL_TASKS) | {"ruler", "lbv2e", "lbv2h", "gsm",
+                                        "aime"}
+
+
+def make_batch(rng, tasks, batch, seq_len):
+    """Batch of Samples from a task list -> (tokens (B,S), weights (B,S),
+    ans_starts, ans_lens, is_retrieval)."""
+    toks = np.zeros((batch, seq_len), np.int32)
+    w = np.zeros((batch, seq_len), np.float32)
+    starts, lens, retr = [], [], []
+    for i in range(batch):
+        task = tasks[int(rng.integers(len(tasks)))]
+        s = GENERATORS[task](rng, seq_len)
+        toks[i] = s["tokens"]
+        # next-token prediction: weight 1 everywhere except PAD, 5x on the
+        # answer span (targets are shifted by the training loop)
+        w[i] = (s["tokens"] != PAD).astype(np.float32)
+        a0, al = s["ans_start"], s["ans_len"]
+        w[i, a0:a0 + al] = 5.0
+        starts.append(a0)
+        lens.append(al)
+        retr.append(s["retrieval"])
+    return toks, w, np.array(starts), np.array(lens), np.array(retr)

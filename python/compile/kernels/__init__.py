@@ -1,0 +1,40 @@
+"""L1: Pallas kernels for the FluxAttention attention modes.
+
+All kernels run under interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); each has a pure-jnp oracle in ref.py enforced by pytest.
+"""
+
+from .full_attn import full_attention_pallas
+from .ssa import ssa_attention_pallas
+from .triangle import triangle_attention_pallas
+from .xattn import (
+    xattn_scores_pallas,
+    select_blocks,
+    block_sparse_attention_pallas,
+    xattn_attention_pallas,
+)
+from .router_pool import (
+    prefill_suffix_pool_pallas,
+    router_mlp_pallas,
+    prefill_suffix_pool_ref,
+    router_mlp_ref,
+)
+from .decode import fa_decode_pallas, sa_decode_pallas
+from . import ref
+
+__all__ = [
+    "full_attention_pallas",
+    "ssa_attention_pallas",
+    "triangle_attention_pallas",
+    "xattn_scores_pallas",
+    "select_blocks",
+    "block_sparse_attention_pallas",
+    "xattn_attention_pallas",
+    "prefill_suffix_pool_pallas",
+    "router_mlp_pallas",
+    "prefill_suffix_pool_ref",
+    "router_mlp_ref",
+    "fa_decode_pallas",
+    "sa_decode_pallas",
+    "ref",
+]

@@ -1,0 +1,70 @@
+"""Pallas single-token decode attention kernels.
+
+`fa_decode_pallas` attends one query against a bucketed full KV cache with
+a valid-length mask -- the memory-bandwidth-bound op the paper's decode
+analysis (section 2.3, Fig 1b) is about: latency is proportional to the KV
+bytes streamed.
+
+`sa_decode_pallas` is the same math over the fixed-size sink+local ring
+buffer; its cost is constant in context length, which is where the
+layer-level sparse-decode speedup comes from (the full historical KV for
+routed-sparse layers is never touched, or even retained, after prefill).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+BK = 64
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, bk, kmax):
+    h = pl.program_id(0)
+    d = q_ref.shape[-1]
+    q = pl.load(q_ref, (h, slice(None)))  # (d,)
+    valid_len = len_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    def body(kj, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (h, pl.ds(kj * bk, bk), slice(None)))
+        v = pl.load(v_ref, (h, pl.ds(kj * bk, bk), slice(None)))
+        s = (k @ q) * scale  # (bk,)
+        cols = kj * bk + jax.lax.iota(jnp.int32, bk)
+        s = jnp.where(cols < valid_len, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max())
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_prev * alpha + p.sum()
+        acc = acc * alpha + p @ v
+        return m_new, l_new, acc
+
+    # stream only the blocks containing valid entries
+    n_blocks = (valid_len + bk - 1) // bk
+    m0 = jnp.asarray(NEG_INF, jnp.float32)
+    l0 = jnp.asarray(0.0, jnp.float32)
+    acc0 = jnp.zeros((d,), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    pl.store(o_ref, (h, slice(None)), acc / l)
+
+
+@functools.partial(jax.jit, static_argnames=("bk",))
+def fa_decode_pallas(q, k_cache, v_cache, valid_len, bk: int = BK):
+    """q: (H, D); caches: (H, Kmax, D); valid_len: (1,) i32 -> (H, D)."""
+    h, kmax, d = k_cache.shape
+    bk = min(bk, kmax)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, bk=bk, kmax=kmax),
+        out_shape=jax.ShapeDtypeStruct((h, d), jnp.float32),
+        grid=(h,),
+        interpret=True,
+    )(q, k_cache, v_cache, valid_len)
+
+
+def sa_decode_pallas(q, k_buf, v_buf, valid_len, bk: int = 32):
+    """Sparse decode over the sink+local buffer (fixed small Kmax)."""
+    return fa_decode_pallas(q, k_buf, v_buf, valid_len, bk=bk)

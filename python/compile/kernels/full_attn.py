@@ -1,0 +1,73 @@
+"""Pallas causal full-attention kernel (flash-style online softmax).
+
+Hardware adaptation (DESIGN.md section 3): the CUDA threadblock tiling of
+FlashAttention becomes a Pallas grid over (head, query-block); each grid
+step streams KV blocks HBM->VMEM with `pl.load` + `pl.ds` and carries the
+streaming (max, sum, acc) softmax state across blocks. The kv loop upper
+bound is `qi + 1`, so blocks strictly above the causal diagonal are never
+loaded -- the TPU analogue of never issuing those HBM transactions.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+BQ = 64  # query block rows   (MXU-aligned at 2x the 32-lane half tile)
+BK = 64  # key/value block columns
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int):
+    h = pl.program_id(0)
+    qi = pl.program_id(1)
+    d = q_ref.shape[-1]
+
+    q = pl.load(q_ref, (h, pl.ds(qi * bq, bq), slice(None)))  # (bq, d)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    def body(kj, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (h, pl.ds(kj * bk, bk), slice(None)))  # (bk, d)
+        v = pl.load(v_ref, (h, pl.ds(kj * bk, bk), slice(None)))
+        s = jnp.dot(q, k.T) * scale  # (bq, bk)
+        # exact elementwise causal mask (only the diagonal block needs it,
+        # but computing it unconditionally keeps the body branch-free)
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+        # streaming softmax update
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    # causal bound: kv blocks after the diagonal are never visited
+    m, l, acc = jax.lax.fori_loop(0, qi + 1, body, (m0, l0, acc0))
+    out = acc / l[:, None]
+    pl.store(o_ref, (h, pl.ds(qi * bq, bq), slice(None)), out)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk"))
+def full_attention_pallas(q, k, v, bq: int = BQ, bk: int = BK):
+    """Causal full attention. q, k, v: (H, S, D) f32; returns (H, S, D)."""
+    h, s, d = q.shape
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0
+    return pl.pallas_call(
+        functools.partial(_fa_kernel, bq=bq, bk=bk),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), jnp.float32),
+        grid=(h, s // bq),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,160 @@
+"""Pure-jnp reference oracles for every attention kernel.
+
+These are the ground truth the Pallas kernels (and the rust-executed HLO)
+are validated against in python/tests/. They are also used as the fast
+training-time implementations in model.py -- the Pallas kernels lower to
+the same math under interpret=True, and parity is enforced by pytest.
+
+All prefill functions take (H, S, D) tensors and return (H, S, D).
+All decode functions take a single query (H, D) plus a KV buffer.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mask builders (shared by refs, kernel tests and the model)
+# ---------------------------------------------------------------------------
+
+def causal_mask(s: int) -> jnp.ndarray:
+    """(s, s) bool: True where query i may attend key j (j <= i)."""
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    return j <= i
+
+
+def ssa_mask(s: int, sink: int, local: int) -> jnp.ndarray:
+    """Streaming sparse attention: causal AND (sink cols OR local band).
+
+    Matches StreamingLLM-style attention-sink + sliding-window geometry
+    (paper eq. 2 with K~,V~ = sink union window).
+    """
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    return (j <= i) & ((j < sink) | (i - j < local))
+
+
+def triangle_mask(s: int, sink: int, local: int, last_q: int) -> jnp.ndarray:
+    """TriangleMix-style: streaming band plus dense last-q rows.
+
+    The bottom `last_q` query rows attend densely (they dominate
+    decoding-time contribution); earlier rows use sink+local only.
+    """
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    streaming = (j < sink) | (i - j < local)
+    dense_rows = i >= (s - last_q)
+    return (j <= i) & (streaming | dense_rows)
+
+
+def xattn_block_scores(q: jnp.ndarray, k: jnp.ndarray, block: int,
+                       stride: int) -> jnp.ndarray:
+    """Antidiagonal block importance scores (XAttention, scaled).
+
+    For each (q-block, kv-block) pair, sums |q_i . k_j| over strided
+    antidiagonal positions of the block -- the antidiagonal crosses every
+    row and column of the block, giving a cheap unbiased probe of block
+    mass. Returns (H, nb, nb) scores.
+    """
+    h, s, d = q.shape
+    nb = s // block
+    scores = jnp.einsum("hid,hjd->hij", q, k) / jnp.sqrt(d)
+    scores = jnp.abs(scores).reshape(h, nb, block, nb, block)
+    # strided antidiagonal positions (r, (block - 1 - r) % block)
+    rows = jnp.arange(0, block, stride)
+    cols = (block - 1 - rows) % block
+    picked = scores[:, :, rows, :, :]                  # (h, nb, nr, nb, block)
+    picked = jnp.take_along_axis(
+        picked, cols[None, None, :, None, None], axis=4)  # (h, nb, nr, nb, 1)
+    return picked[..., 0].sum(axis=2)                  # (h, nb, nb)
+
+
+def xattn_block_mask(q: jnp.ndarray, k: jnp.ndarray, block: int, stride: int,
+                     keep_ratio: float, sink: int, local: int) -> jnp.ndarray:
+    """(s, s) bool mask keeping top-k scored causal kv blocks per q block.
+
+    The diagonal block, the sink blocks and the local band are always
+    kept; the remaining budget goes to the highest-scoring blocks. Scores
+    are summed over heads -- the mask is shared by all heads of a layer
+    (layer-level routing keeps memory access contiguous).
+    """
+    h, s, d = q.shape
+    nb = s // block
+    scores = xattn_block_scores(q, k, block, stride).sum(axis=0)  # (nb, nb)
+    bi = jnp.arange(nb)[:, None]
+    bj = jnp.arange(nb)[None, :]
+    causal_b = bj <= bi
+    scores = jnp.where(causal_b, scores, NEG_INF)
+    keep = max(1, int(nb * keep_ratio))
+    thresh = jnp.sort(scores, axis=-1)[:, -keep][:, None]
+    selected = (scores >= thresh) & causal_b
+    # always-on structural blocks: sink blocks, diagonal, local band
+    sink_b = bj < max(1, sink // block)
+    local_b = (bi - bj) < max(1, local // block)
+    selected = selected | ((sink_b | local_b) & causal_b)
+    # expand block mask to token mask, then AND with token-level causality
+    tok = jnp.repeat(jnp.repeat(selected, block, axis=0), block, axis=1)
+    return tok & causal_mask(s)
+
+
+# ---------------------------------------------------------------------------
+# prefill attention references
+# ---------------------------------------------------------------------------
+
+def _masked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      mask: jnp.ndarray) -> jnp.ndarray:
+    d = q.shape[-1]
+    scores = jnp.einsum("hid,hjd->hij", q, k) / jnp.sqrt(d)
+    scores = jnp.where(mask[None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hij,hjd->hid", probs, v)
+
+
+def full_attention(q, k, v):
+    """Causal full attention (paper eq. 1)."""
+    return _masked_attention(q, k, v, causal_mask(q.shape[1]))
+
+
+def ssa_attention(q, k, v, sink: int, local: int):
+    """Streaming sparse attention (paper eq. 2, SSA mode)."""
+    return _masked_attention(q, k, v, ssa_mask(q.shape[1], sink, local))
+
+
+def triangle_attention(q, k, v, sink: int, local: int, last_q: int):
+    """Triangle attention (TA mode)."""
+    return _masked_attention(
+        q, k, v, triangle_mask(q.shape[1], sink, local, last_q))
+
+
+def xattn_attention(q, k, v, block: int, stride: int, keep_ratio: float,
+                    sink: int, local: int):
+    """XAttention block-sparse attention (XA mode)."""
+    mask = xattn_block_mask(q, k, block, stride, keep_ratio, sink, local)
+    return _masked_attention(q, k, v, mask)
+
+
+# ---------------------------------------------------------------------------
+# decode-step references (single query token)
+# ---------------------------------------------------------------------------
+
+def fa_decode(q, k_cache, v_cache, valid_len):
+    """Full-KV decode: q (H, D); caches (H, Kmax, D); mask j < valid_len."""
+    h, kmax, d = k_cache.shape
+    scores = jnp.einsum("hd,hjd->hj", q, k_cache) / jnp.sqrt(d)
+    valid = jnp.arange(kmax)[None, :] < valid_len
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hj,hjd->hd", probs, v_cache)
+
+
+def sa_decode(q, k_buf, v_buf, valid_len):
+    """Sparse decode over the sink+local ring buffer (same math, small K).
+
+    The buffer layout (sink tokens first, then the local window) is
+    managed by the rust KV-cache; numerically the kernel is
+    position-agnostic given RoPE was applied at append time.
+    """
+    return fa_decode(q, k_buf, v_buf, valid_len)

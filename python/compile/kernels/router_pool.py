@@ -1,0 +1,70 @@
+"""Pallas kernels for the Layer Router: boundary pooling + MLP head.
+
+The router (paper section 3.1) receives the incoming query tensor, applies
+Prefill-Suffix Pooling over the boundary tokens, passes the pooled
+descriptor through a Context Encoder MLP and a Router Head MLP, and emits
+unnormalized logits (pi_FA, pi_SA).
+
+Because mean pooling commutes with the linear Q projection
+(pool(W x) = W pool(x)), pooling the layer input and letting the Context
+Encoder's first matrix absorb W_q is an exact reparameterization of
+pooling x_Q itself -- see DESIGN.md section 1. The descriptor is
+fixed-shape (2 d_model), which is what makes the router length-invariant
+(paper Fig. 9).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref, *, pool, s):
+    """Mean of the first `pool` and last `pool` rows of x (s, d)."""
+    d = x_ref.shape[-1]
+    prefix = pl.load(x_ref, (pl.ds(0, pool), slice(None)))
+    suffix = pl.load(x_ref, (pl.ds(s - pool, pool), slice(None)))
+    pl.store(o_ref, (pl.ds(0, d),), prefix.mean(axis=0))
+    pl.store(o_ref, (pl.ds(d, d),), suffix.mean(axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("pool",))
+def prefill_suffix_pool_pallas(x, pool: int):
+    """x: (S, D) hidden states -> (2D,) descriptor."""
+    s, d = x.shape
+    pool = min(pool, s)
+    return pl.pallas_call(
+        functools.partial(_pool_kernel, pool=pool, s=s),
+        out_shape=jax.ShapeDtypeStruct((2 * d,), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _router_kernel(desc_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    desc = desc_ref[...]
+    hidden = jax.nn.gelu(desc @ w1_ref[...] + b1_ref[...])
+    logits = hidden @ w2_ref[...] + b2_ref[...]
+    o_ref[...] = logits
+
+
+@jax.jit
+def router_mlp_pallas(desc, w1, b1, w2, b2):
+    """Context Encoder + Router Head. desc: (2D,) -> logits (2,): [SA, FA]."""
+    return pl.pallas_call(
+        _router_kernel,
+        out_shape=jax.ShapeDtypeStruct((w2.shape[-1],), jnp.float32),
+        interpret=True,
+    )(desc, w1, b1, w2, b2)
+
+
+# pure-jnp reference (oracle for pytest)
+
+def prefill_suffix_pool_ref(x, pool: int):
+    s, d = x.shape
+    pool = min(pool, s)
+    return jnp.concatenate([x[:pool].mean(axis=0), x[s - pool:].mean(axis=0)])
+
+
+def router_mlp_ref(desc, w1, b1, w2, b2):
+    return jax.nn.gelu(desc @ w1 + b1) @ w2 + b2

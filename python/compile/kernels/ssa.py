@@ -1,0 +1,90 @@
+"""Pallas streaming sparse attention (SSA): attention sink + local window.
+
+This is the paper's SA prefill mode (eq. 2) with K~,V~ = the sink tokens
+plus a sliding local window (StreamingLLM geometry, scaled per DESIGN.md).
+
+The efficiency claim is structural: per query block the kernel visits
+only (a) the sink kv blocks and (b) the kv blocks intersecting the local
+window -- two disjoint fori_loops whose combined trip count is
+O(sink + local), independent of sequence length. Blocks outside
+sink union window are never loaded from HBM, which is exactly how
+layer-level sparsity turns bandwidth savings into wall-clock savings.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+BQ = 64
+BK = 64
+
+
+def _make_block_body(q, k_ref, v_ref, h, qi, *, bq, bk, sink, local, scale):
+    """Shared streaming-softmax block step with the exact SSA mask."""
+
+    def body(kj, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (h, pl.ds(kj * bk, bk), slice(None)))
+        v = pl.load(v_ref, (h, pl.ds(kj * bk, bk), slice(None)))
+        s = jnp.dot(q, k.T) * scale
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        visible = (cols <= rows) & ((cols < sink) | (rows - cols < local))
+        s = jnp.where(visible, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        # fully-masked blocks contribute exp(NEG_INF - m) = 0 -- exact
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc
+
+    return body
+
+
+def _ssa_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, sink, local):
+    h = pl.program_id(0)
+    qi = pl.program_id(1)
+    d = q_ref.shape[-1]
+    q = pl.load(q_ref, (h, pl.ds(qi * bq, bq), slice(None)))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    body = _make_block_body(q, k_ref, v_ref, h, qi,
+                            bq=bq, bk=bk, sink=sink, local=local, scale=scale)
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+
+    n_sink_b = -(-sink // bk)  # ceil: blocks that contain any sink column
+    # the local window of the *last* row of this q block reaches back
+    # `local` tokens; the first kv block any row of the block can see
+    # through the window is:
+    local_start = jnp.maximum(n_sink_b, (qi * bq - (local - 1)) // bk)
+
+    # disjoint ranges: sink blocks [0, a), window blocks [max(a, ls), qi+1)
+    a = jnp.minimum(n_sink_b, qi + 1)
+    carry = jax.lax.fori_loop(0, a, body, (m0, l0, acc0))
+    carry = jax.lax.fori_loop(jnp.maximum(a, local_start), qi + 1, body, carry)
+    m, l, acc = carry
+    out = acc / l[:, None]
+    pl.store(o_ref, (h, pl.ds(qi * bq, bq), slice(None)), out)
+
+
+@functools.partial(jax.jit, static_argnames=("sink", "local", "bq", "bk"))
+def ssa_attention_pallas(q, k, v, sink: int, local: int,
+                         bq: int = BQ, bk: int = BK):
+    """Streaming sparse attention. q, k, v: (H, S, D); returns (H, S, D)."""
+    h, s, d = q.shape
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0
+    return pl.pallas_call(
+        functools.partial(_ssa_kernel, bq=bq, bk=bk, sink=sink, local=local),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), jnp.float32),
+        grid=(h, s // bq),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,88 @@
+"""Pallas triangle attention (TA): streaming band + dense last-q rows.
+
+TriangleMix observes that during decoding the contribution of the
+"middle" of the prefill attention matrix is negligible except for the
+final query rows. TA therefore keeps (a) the sink columns, (b) the local
+band, and (c) full attention for the last `last_q` query rows.
+
+Structurally, only query blocks that overlap the last-q region run the
+extra middle kv loop; all other blocks execute the same O(sink + local)
+schedule as SSA. The middle loop's trip count collapses to zero for
+non-dense query blocks, so no HBM traffic is issued for skipped blocks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+BQ = 64
+BK = 64
+
+
+def _ta_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, sink, local, last_q,
+               seq_len):
+    h = pl.program_id(0)
+    qi = pl.program_id(1)
+    d = q_ref.shape[-1]
+    q = pl.load(q_ref, (h, pl.ds(qi * bq, bq), slice(None)))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    def body(kj, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (h, pl.ds(kj * bk, bk), slice(None)))
+        v = pl.load(v_ref, (h, pl.ds(kj * bk, bk), slice(None)))
+        s = jnp.dot(q, k.T) * scale
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        streaming = (cols < sink) | (rows - cols < local)
+        dense = rows >= seq_len - last_q
+        visible = (cols <= rows) & (streaming | dense)
+        s = jnp.where(visible, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+
+    n_sink_b = -(-sink // bk)
+    local_start = jnp.maximum(n_sink_b, (qi * bq - (local - 1)) // bk)
+    a = jnp.minimum(n_sink_b, qi + 1)
+    b = jnp.maximum(a, jnp.minimum(local_start, qi + 1))
+    # does any row of this q block fall in the dense last-q region?
+    is_dense = (qi + 1) * bq > seq_len - last_q
+    # middle range [a, b) is visited only by dense blocks
+    mid_end = jnp.where(is_dense, b, a)
+
+    carry = jax.lax.fori_loop(0, a, body, (m0, l0, acc0))        # sink
+    carry = jax.lax.fori_loop(a, mid_end, body, carry)           # middle
+    carry = jax.lax.fori_loop(b, qi + 1, body, carry)            # window
+    m, l, acc = carry
+    out = acc / l[:, None]
+    pl.store(o_ref, (h, pl.ds(qi * bq, bq), slice(None)), out)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sink", "local", "last_q", "bq", "bk"))
+def triangle_attention_pallas(q, k, v, sink: int, local: int, last_q: int,
+                              bq: int = BQ, bk: int = BK):
+    """Triangle attention. q, k, v: (H, S, D); returns (H, S, D)."""
+    h, s, d = q.shape
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0
+    return pl.pallas_call(
+        functools.partial(_ta_kernel, bq=bq, bk=bk, sink=sink, local=local,
+                          last_q=last_q, seq_len=s),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), jnp.float32),
+        grid=(h, s // bq),
+        interpret=True,
+    )(q, k, v)

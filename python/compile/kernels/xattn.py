@@ -1,0 +1,180 @@
+"""Pallas XAttention (XA): antidiagonal block scoring + block-sparse attn.
+
+Two-stage pipeline, following XAttention (Xu et al., ICML'25), scaled per
+DESIGN.md:
+
+  1. `xattn_scores_pallas` -- a cheap probe kernel that estimates each
+     (q-block, kv-block) importance by summing |q_r . k_c| over strided
+     antidiagonal positions. The antidiagonal crosses every row and
+     column of a block, so the probe touches 1/stride of the block's
+     rows while remaining sensitive to any hot row/column.
+  2. top-k selection over the scores (plain jnp inside the same jitted
+     L2 function) producing a per-q-block kv-block mask; the structural
+     sink/local/diagonal blocks are always kept.
+  3. `block_sparse_attention_pallas` -- consumes the block mask; its kv
+     loop wraps the block step in `lax.cond`, so deselected blocks are
+     genuinely skipped at runtime (no score compute, no HBM loads).
+
+Parity contract (pytest): stage 1 matches ref.xattn_block_scores; the
+composed pipeline matches ref.xattn_attention exactly, because both use
+the same selection rule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+BQ = 64
+BK = 64
+
+
+# ---------------------------------------------------------------------------
+# stage 1: antidiagonal probe scores
+# ---------------------------------------------------------------------------
+
+def _score_kernel(q_ref, k_ref, o_ref, *, block, stride, nb):
+    """Grid (nb,): scores for one q block row against all kv blocks."""
+    qi = pl.program_id(0)
+    h, s, d = q_ref.shape
+    nr = (block + stride - 1) // stride
+    rows = jax.lax.iota(jnp.int32, nr) * stride
+    cols = (block - 1 - rows) % block
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    def body(kj, scores):
+        acc = jnp.zeros((), jnp.float32)
+
+        def head_body(hh, acc):
+            # strided q rows of this block and the matching k columns
+            qs = pl.load(q_ref, (hh, pl.ds(qi * block, block), slice(None)))
+            ks = pl.load(k_ref, (hh, pl.ds(kj * block, block), slice(None)))
+            qr = qs[rows]            # (nr, d)
+            kc = ks[cols]            # (nr, d)
+            dots = jnp.abs(jnp.sum(qr * kc, axis=-1) * scale)
+            return acc + dots.sum()
+
+        acc = jax.lax.fori_loop(0, h, head_body, acc)
+        return scores.at[kj].set(acc)
+
+    scores = jax.lax.fori_loop(0, nb, body, jnp.zeros((nb,), jnp.float32))
+    pl.store(o_ref, (qi, slice(None)), scores)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "stride"))
+def xattn_scores_pallas(q, k, block: int, stride: int):
+    """Head-summed block scores. q, k: (H, S, D); returns (nb, nb)."""
+    h, s, d = q.shape
+    nb = s // block
+    return pl.pallas_call(
+        functools.partial(_score_kernel, block=block, stride=stride, nb=nb),
+        out_shape=jax.ShapeDtypeStruct((nb, nb), jnp.float32),
+        grid=(nb,),
+        interpret=True,
+    )(q, k)
+
+
+# ---------------------------------------------------------------------------
+# stage 2: selection (shared with ref -- same rule, so parity is exact)
+# ---------------------------------------------------------------------------
+
+def select_blocks(scores, block: int, keep_ratio: float, sink: int,
+                  local: int):
+    """Top-k + structural block mask from (nb, nb) scores."""
+    nb = scores.shape[0]
+    bi = jnp.arange(nb)[:, None]
+    bj = jnp.arange(nb)[None, :]
+    causal_b = bj <= bi
+    scores = jnp.where(causal_b, scores, NEG_INF)
+    keep = max(1, int(nb * keep_ratio))
+    thresh = jnp.sort(scores, axis=-1)[:, -keep][:, None]
+    selected = (scores >= thresh) & causal_b
+    sink_b = bj < max(1, sink // block)
+    local_b = (bi - bj) < max(1, local // block)
+    return selected | ((sink_b | local_b) & causal_b)
+
+
+# ---------------------------------------------------------------------------
+# stage 3: block-sparse attention over the selected blocks
+# ---------------------------------------------------------------------------
+
+def _bs_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, bq, bk, blocks_per_q):
+    h = pl.program_id(0)
+    qi = pl.program_id(1)
+    d = q_ref.shape[-1]
+    q = pl.load(q_ref, (h, pl.ds(qi * bq, bq), slice(None)))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    def compute(kj, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (h, pl.ds(kj * bk, bk), slice(None)))
+        v = pl.load(v_ref, (h, pl.ds(kj * bk, bk), slice(None)))
+        s = jnp.dot(q, k.T) * scale
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc
+
+    def body(j, carry):
+        # kv blocks per q block: block-mask granularity is `bk`-aligned
+        # because select_blocks ran at kernel block size (see wrapper).
+        keep = pl.load(mask_ref, (qi * blocks_per_q, j))
+        return jax.lax.cond(keep, lambda c: compute(j, c), lambda c: c, carry)
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, qi + 1, body, (m0, l0, acc0))
+    out = acc / l[:, None]
+    pl.store(o_ref, (h, pl.ds(qi * bq, bq), slice(None)), out)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk"))
+def block_sparse_attention_pallas(q, k, v, block_mask, bq: int = BQ,
+                                  bk: int = BK):
+    """Block-sparse attention. block_mask: (S//bk, S//bk) bool, kernel-block
+    aligned (every kernel kv block is uniformly kept or skipped)."""
+    h, s, d = q.shape
+    bq = min(bq, s)
+    bk = min(bk, s)
+    return pl.pallas_call(
+        functools.partial(_bs_kernel, bq=bq, bk=bk, blocks_per_q=1),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), jnp.float32),
+        grid=(h, s // bq),
+        interpret=True,
+    )(q, k, v, block_mask)
+
+
+def coarsen_mask(fine_mask, fine_block: int, coarse_block: int):
+    """OR-reduce a fine (nb_f, nb_f) block mask to kernel granularity.
+
+    Selection runs at the paper's block size (16); the attention kernel
+    tiles at 64 for MXU alignment. A coarse block is kept iff any fine
+    block inside it is kept; exact per-fine-block masking is then applied
+    elementwise (handled by the wrapper below re-running the fine mask).
+    """
+    r = coarse_block // fine_block
+    nbf = fine_mask.shape[0]
+    nbc = nbf // r
+    m = fine_mask.reshape(nbc, r, nbc, r)
+    return m.any(axis=(1, 3))
+
+
+def xattn_attention_pallas(q, k, v, block: int, stride: int,
+                           keep_ratio: float, sink: int, local: int):
+    """Composed XA pipeline at selection granularity == kernel granularity.
+
+    Runs the kernel with bq = bk = `block` so that the fine-grained
+    selection mask is applied exactly (parity with ref.xattn_attention).
+    """
+    scores = xattn_scores_pallas(q, k, block, stride)
+    mask = select_blocks(scores, block, keep_ratio, sink, local)
+    return block_sparse_attention_pallas(q, k, v, mask, bq=block, bk=block)

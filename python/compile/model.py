@@ -1,0 +1,382 @@
+"""L2: the FluxAttention transformer model in JAX.
+
+Defines:
+  * the backbone transformer (RMSNorm / RoPE / MHA / SwiGLU-free MLP)
+    used both for training (fast jnp refs, vmapped, lax.scan over layers)
+    and for AOT export (per-layer step functions calling the L1 Pallas
+    kernels so they lower into the same HLO);
+  * the Layer Router (Context Encoder MLP + Router Head MLP) with
+    Gumbel-Softmax soft routing (paper eq. 4-5) for training and argmax
+    hard routing for inference;
+  * the flat-signature step functions that aot.py lowers to HLO text for
+    the rust runtime (prefill layer step per attention mode, decode qkv /
+    attend steps, router, lm head).
+
+Python never runs at serving time: everything here is build-time only.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import MODEL, SPARSITY, ROUTER
+from .kernels import ref
+from .kernels.full_attn import full_attention_pallas
+from .kernels.ssa import ssa_attention_pallas
+from .kernels.triangle import triangle_attention_pallas
+from .kernels.xattn import (xattn_scores_pallas, select_blocks,
+                            block_sparse_attention_pallas)
+from .kernels.decode import fa_decode_pallas
+from .kernels.router_pool import router_mlp_pallas
+
+MODES = ("fa", "ssa", "ta", "xa")
+
+
+# ---------------------------------------------------------------------------
+# parameter containers
+# ---------------------------------------------------------------------------
+
+class LayerParams(NamedTuple):
+    """One transformer layer. Arrays may carry a leading (L,) axis when
+    stacked for lax.scan."""
+    norm1: jnp.ndarray   # (d,)
+    wq: jnp.ndarray      # (d, d)
+    wk: jnp.ndarray      # (d, d)
+    wv: jnp.ndarray      # (d, d)
+    wo: jnp.ndarray      # (d, d)
+    norm2: jnp.ndarray   # (d,)
+    w_ff1: jnp.ndarray   # (d, ff)
+    w_ff2: jnp.ndarray   # (ff, d)
+
+
+class Params(NamedTuple):
+    """Backbone parameters. The LM head is weight-tied to the embedding
+    (lm_head = embed.T) -- tying makes the copy/retrieval circuits form
+    orders of magnitude faster at this scale, and the AOT export
+    materializes embed.T as the `lm_head` tensor so the rust runtime is
+    agnostic to the tying."""
+    embed: jnp.ndarray       # (V, d)
+    layers: LayerParams      # stacked (L, ...)
+    norm_f: jnp.ndarray      # (d,)
+
+
+class RouterParams(NamedTuple):
+    """Per-layer Layer Router; stacked (L, ...) like the backbone."""
+    w1: jnp.ndarray  # (2d, hidden)
+    b1: jnp.ndarray  # (hidden,)
+    w2: jnp.ndarray  # (hidden, 2)  logits order: [SA, FA]
+    b2: jnp.ndarray  # (2,)
+
+
+def init_params(key, cfg=MODEL) -> Params:
+    d, ff, v, nl = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.n_layers
+    ks = jax.random.split(key, 8)
+
+    def mat(k, shape, scale=None):
+        scale = scale or (1.0 / jnp.sqrt(shape[0]))
+        return jax.random.normal(k, shape, jnp.float32) * scale
+
+    layers = LayerParams(
+        norm1=jnp.ones((nl, d)),
+        wq=mat(ks[0], (nl, d, d), 1.0 / jnp.sqrt(d)),
+        wk=mat(ks[1], (nl, d, d), 1.0 / jnp.sqrt(d)),
+        wv=mat(ks[2], (nl, d, d), 1.0 / jnp.sqrt(d)),
+        wo=mat(ks[3], (nl, d, d), 1.0 / jnp.sqrt(d)),
+        norm2=jnp.ones((nl, d)),
+        w_ff1=mat(ks[4], (nl, d, ff), 1.0 / jnp.sqrt(d)),
+        w_ff2=mat(ks[5], (nl, ff, d), 1.0 / jnp.sqrt(ff)),
+    )
+    return Params(
+        embed=mat(ks[6], (v, d), 1.0 / jnp.sqrt(d)),
+        layers=layers,
+        norm_f=jnp.ones((d,)),
+    )
+
+
+def init_router(key, cfg=MODEL, rcfg=ROUTER) -> RouterParams:
+    d, h, nl = cfg.d_model, rcfg.d_hidden, cfg.n_layers
+    k1, k2 = jax.random.split(key)
+    return RouterParams(
+        w1=jax.random.normal(k1, (nl, 2 * d, h), jnp.float32) / jnp.sqrt(2 * d),
+        b1=jnp.zeros((nl, h)),
+        w2=jax.random.normal(k2, (nl, h, 2), jnp.float32) / jnp.sqrt(h),
+        b2=jnp.zeros((nl, 2)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=MODEL.rms_eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def rope_tables(positions, head_dim=MODEL.head_dim, theta=MODEL.rope_theta):
+    """cos/sin tables (S, D/2) for integer positions."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2) / head_dim))
+    ang = positions[:, None].astype(jnp.float32) * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, D); cos/sin: (S, D/2). Rotates adjacent pairs."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+
+
+def qkv_proj(lp: LayerParams, x, cos, sin, cfg=MODEL):
+    """x: (S, d) -> q, k, v each (H, S, D), RoPE applied to q and k."""
+    s = x.shape[0]
+    h, dd = cfg.n_heads, cfg.head_dim
+    xn = rms_norm(x, lp.norm1)
+    q = (xn @ lp.wq).reshape(s, h, dd).transpose(1, 0, 2)
+    k = (xn @ lp.wk).reshape(s, h, dd).transpose(1, 0, 2)
+    v = (xn @ lp.wv).reshape(s, h, dd).transpose(1, 0, 2)
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin), v
+
+
+def attn_out_mlp(lp: LayerParams, x, ctx, cfg=MODEL):
+    """Residual add of attention output + MLP block. ctx: (H, S, D)."""
+    s = x.shape[0]
+    merged = ctx.transpose(1, 0, 2).reshape(s, cfg.d_model)
+    x = x + merged @ lp.wo
+    xn = rms_norm(x, lp.norm2)
+    return x + jax.nn.gelu(xn @ lp.w_ff1) @ lp.w_ff2
+
+
+def sparse_attention_ref(q, k, v, mode: str, sp=SPARSITY):
+    """Training-time (fast jnp) attention for a given mode."""
+    if mode == "fa":
+        return ref.full_attention(q, k, v)
+    if mode == "ssa":
+        return ref.ssa_attention(q, k, v, sp.sink_size, sp.local_size)
+    if mode == "ta":
+        return ref.triangle_attention(q, k, v, sp.sink_size, sp.local_size,
+                                      sp.triangle_last_q)
+    if mode == "xa":
+        return ref.xattn_attention(q, k, v, sp.block_size, sp.xattn_stride,
+                                   sp.xattn_keep_ratio, sp.sink_size,
+                                   sp.local_size)
+    raise ValueError(mode)
+
+
+def sparse_attention_pallas(q, k, v, mode: str, sp=SPARSITY):
+    """AOT-export attention: the L1 Pallas kernels."""
+    if mode == "fa":
+        return full_attention_pallas(q, k, v)
+    if mode == "ssa":
+        return ssa_attention_pallas(q, k, v, sp.sink_size, sp.local_size)
+    if mode == "ta":
+        return triangle_attention_pallas(q, k, v, sp.sink_size, sp.local_size,
+                                         sp.triangle_last_q)
+    if mode == "xa":
+        scores = xattn_scores_pallas(q, k, sp.block_size, sp.xattn_stride)
+        mask = select_blocks(scores, sp.block_size, sp.xattn_keep_ratio,
+                             sp.sink_size, sp.local_size)
+        return block_sparse_attention_pallas(q, k, v, mask, bq=sp.block_size,
+                                             bk=sp.block_size)
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# AOT step functions (flat signatures; lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+def prefill_layer_step(mode: str, x, norm1, wq, wk, wv, wo, norm2, w_ff1,
+                       w_ff2):
+    """One transformer layer over a full (bucketed) prompt.
+
+    x: (S, d). Returns (x_out (S, d), k (H, S, D), v (H, S, D)).
+    Padding contract: rust pads prompts to the bucket at the END; causal
+    masking guarantees all valid rows are exact.
+    """
+    lp = LayerParams(norm1, wq, wk, wv, wo, norm2, w_ff1, w_ff2)
+    s = x.shape[0]
+    cos, sin = rope_tables(jnp.arange(s))
+    q, k, v = qkv_proj(lp, x, cos, sin)
+    ctx = sparse_attention_pallas(q, k, v, mode)
+    return attn_out_mlp(lp, x, ctx), k, v
+
+
+def decode_qkv_step(x, pos, norm1, wq, wk, wv):
+    """Decode stage 1: project + RoPE the current token.
+
+    x: (d,), pos: (1,) i32. Returns q, k, v each (H, D). Rust appends
+    k, v into its KV cache before calling the attend step.
+    """
+    h, dd = MODEL.n_heads, MODEL.head_dim
+    xn = rms_norm(x, norm1)
+    q = (xn @ wq).reshape(h, dd)
+    k = (xn @ wk).reshape(h, dd)
+    v = (xn @ wv).reshape(h, dd)
+    cos, sin = rope_tables(pos.astype(jnp.int32))
+    q = apply_rope(q[:, None, :], cos, sin)[:, 0]
+    k = apply_rope(k[:, None, :], cos, sin)[:, 0]
+    return q, k, v
+
+
+def decode_attend_step(x, q, k_cache, v_cache, valid_len, wo, norm2, w_ff1,
+                       w_ff2):
+    """Decode stage 2: attend over the cache (which already contains the
+    current token) and finish the layer. x: (d,) residual input."""
+    ctx = fa_decode_pallas(q, k_cache, v_cache, valid_len)  # (H, D)
+    merged = ctx.reshape(MODEL.d_model)
+    x = x + merged @ wo
+    xn = rms_norm(x, norm2)
+    return x + jax.nn.gelu(xn @ w_ff1) @ w_ff2
+
+
+def router_step(desc, w1, b1, w2, b2):
+    """Layer Router logits from a (2d,) pooled descriptor: [SA, FA]."""
+    return router_mlp_pallas(desc, w1, b1, w2, b2)
+
+
+def lm_head_step(x, norm_f, lm_head):
+    """Final norm + vocabulary projection for one token. x: (d,)."""
+    return rms_norm(x, norm_f) @ lm_head
+
+
+def lm_head_seq_step(x, norm_f, lm_head):
+    """Bucketed scoring path: x (S, d) -> logits (S, V)."""
+    return rms_norm(x, norm_f) @ lm_head
+
+
+# ---------------------------------------------------------------------------
+# training-time whole-model forward (fast jnp refs, scan over layers)
+# ---------------------------------------------------------------------------
+
+def forward_train(params: Params, tokens, sa_mode: str = "ssa",
+                  r_soft=None, cfg=MODEL):
+    """Batched forward. tokens: (B, S) i32.
+
+    r_soft: optional (L, B) FA-selection probabilities (paper eq. 5); when
+    given, each layer's output is the convex combination
+    r * FA(x) + (1 - r) * SA(x). When None, pure full attention.
+    Returns logits (B, S, V).
+    """
+    b, s = tokens.shape
+    x = params.embed[tokens]  # (B, S, d)
+    cos, sin = rope_tables(jnp.arange(s))
+
+    def scan_body(x, inp):
+        lp, r = inp
+        y_fa = _layer_fwd_b(lp, x, cos, sin, "fa")
+        if r_soft is None:
+            return y_fa, None
+        y_sa = _layer_fwd_b(lp, x, cos, sin, sa_mode)
+        y = r[:, None, None] * y_fa + (1.0 - r[:, None, None]) * y_sa
+        return y, None
+
+    rs = r_soft if r_soft is not None else jnp.ones((cfg.n_layers, b))
+    x, _ = jax.lax.scan(scan_body, x, (params.layers, rs))
+    return rms_norm(x, params.norm_f) @ params.embed.T
+
+
+def _layer_fwd(lp: LayerParams, x, cos, sin, mode: str):
+    q, k, v = qkv_proj(lp, x, cos, sin)
+    ctx = sparse_attention_ref(q, k, v, mode)
+    return attn_out_mlp(lp, x, ctx)
+
+
+def _layer_fwd_b(lp: LayerParams, x, cos, sin, mode: str):
+    """Batched layer forward; mode stays a static python string."""
+    return jax.vmap(
+        functools.partial(_layer_fwd, mode=mode),
+        in_axes=(None, 0, None, None))(lp, x, cos, sin)
+
+
+def forward_hard_routed(params: Params, tokens, layer_modes, cfg=MODEL):
+    """Inference-style forward with per-layer hard modes (python list of
+    mode strings, len L). Used by python-side eval; rust replicates this
+    layer dispatch at serving time."""
+    b, s = tokens.shape
+    x = params.embed[tokens]
+    cos, sin = rope_tables(jnp.arange(s))
+    layer_list = [jax.tree.map(lambda a: a[i], params.layers)
+                  for i in range(cfg.n_layers)]
+    for lp, mode in zip(layer_list, layer_modes):
+        x = _layer_fwd_b(lp, x, cos, sin, mode)
+    return rms_norm(x, params.norm_f) @ params.embed.T
+
+
+# ---------------------------------------------------------------------------
+# Layer Router forward (training + eval)
+# ---------------------------------------------------------------------------
+
+def pool_descriptor(x, pool=SPARSITY.pool_size):
+    """Prefill-Suffix Pooling of (S, d) hidden states -> (2d,)."""
+    s = x.shape[0]
+    p = min(pool, s)
+    return jnp.concatenate([x[:p].mean(axis=0), x[s - p:].mean(axis=0)])
+
+
+def router_logits_all_layers(rp: RouterParams, params: Params, tokens,
+                             pool=SPARSITY.pool_size, cfg=MODEL,
+                             sa_mode: str = "ssa", hard: bool = True):
+    """Run the model layer-by-layer, routing each layer from its own
+    input descriptor (matching the serving data path). Returns
+    (modes (L, B) bool FA?, logits (L, B, 2)). Uses hard routing."""
+    b, s = tokens.shape
+    x = params.embed[tokens]
+    cos, sin = rope_tables(jnp.arange(s))
+    modes, logits_all = [], []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params.layers)
+        desc = jax.vmap(pool_descriptor, in_axes=(0, None))(x, pool)  # (B, 2d)
+        logits = jax.nn.gelu(desc @ rp.w1[i] + rp.b1[i]) @ rp.w2[i] + rp.b2[i]
+        is_fa = logits[:, 1] > logits[:, 0]  # (B,)
+        logits_all.append(logits)
+        y_fa = _layer_fwd_b(lp, x, cos, sin, "fa")
+        y_sa = _layer_fwd_b(lp, x, cos, sin, sa_mode)
+        x = jnp.where(is_fa[:, None, None], y_fa, y_sa)
+        modes.append(is_fa)
+    return jnp.stack(modes), jnp.stack(logits_all)
+
+
+def gumbel_soft_route(key, logits, tau):
+    """Paper eq. 4: Gumbel-Softmax relaxation. logits (..., 2) -> r_soft
+    = P(FA) in (0, 1)."""
+    g = jax.random.gumbel(key, logits.shape)
+    z = (logits + g) / tau
+    return jax.nn.softmax(z, axis=-1)[..., 1]
+
+
+def routed_forward_train(params: Params, rp: RouterParams, tokens, key, tau,
+                         sa_mode: str = "ssa", pool=SPARSITY.pool_size,
+                         cfg=MODEL):
+    """Soft-routed forward for router training (paper eq. 4-5).
+
+    Per layer: pool the layer input, compute router logits, sample r_soft
+    via Gumbel-Softmax, output the convex combination of FA and SA paths.
+    Returns (logits (B, S, V), r_soft (L, B)).
+    """
+    b, s = tokens.shape
+    x = params.embed[tokens]
+    cos, sin = rope_tables(jnp.arange(s))
+    keys = jax.random.split(key, cfg.n_layers)
+    r_all = []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params.layers)
+        desc = jax.vmap(pool_descriptor, in_axes=(0, None))(x, pool)
+        logits = jax.nn.gelu(desc @ rp.w1[i] + rp.b1[i]) @ rp.w2[i] + rp.b2[i]
+        r = gumbel_soft_route(keys[i], logits, tau)  # (B,)
+        y_fa = _layer_fwd_b(lp, x, cos, sin, "fa")
+        y_sa = _layer_fwd_b(lp, x, cos, sin, sa_mode)
+        x = r[:, None, None] * y_fa + (1.0 - r[:, None, None]) * y_sa
+        r_all.append(r)
+    logits_lm = rms_norm(x, params.norm_f) @ params.embed.T
+    return logits_lm, jnp.stack(r_all)
+
+
+def cross_entropy(logits, targets, weights):
+    """Token CE with position weights. logits (B,S,V), targets (B,S)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return (nll * weights).sum() / jnp.maximum(weights.sum(), 1.0)

@@ -1,0 +1,415 @@
+"""Build-time training for the FluxAttention reproduction.
+
+Stages (all offline; nothing here runs at serving time):
+
+  pretrain   -- train the tiny backbone from scratch on the synthetic
+                task mixture (substitute for the public Qwen3/Llama
+                checkpoints, DESIGN.md section 2). Full attention.
+  router     -- the paper's contribution: freeze the backbone, train the
+                per-layer Layer Router with Gumbel-Softmax soft routing
+                (eq. 4-5), temperature annealing, and the Lagrangian
+                sparsity objective (eq. 6) with task-dependent targets
+                and dual ascent on lambda1/lambda2. Emits the trajectory
+                JSON used for paper Figs 5, 7, 8, 10.
+  continued  -- freeze the trained router (hard routing), unfreeze the
+                backbone, continue training on the mixture (paper
+                section 5.3 / Fig 6).
+  eval       -- teacher-forced answer accuracy per task under a routing
+                policy; used for the python-side sanity numbers (the
+                authoritative tables are produced by the rust harness).
+
+Usage:  python -m compile.train --stage pretrain
+        python -m compile.train --stage router --name balanced
+        python -m compile.train --stage router --name unbalanced --data-mix unbalanced
+        python -m compile.train --stage router --name t35 --t-retrieval 0.35
+        python -m compile.train --stage router --name pool8 --pool 8
+        python -m compile.train --stage continued
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import data
+from .config import MODEL, ROUTER, TRAIN, SPARSITY
+from .model import (Params, RouterParams, init_params, init_router,
+                    forward_train, routed_forward_train, cross_entropy,
+                    router_logits_all_layers, forward_hard_routed)
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+CURVES = os.path.join(ART, "curves")
+
+
+# ---------------------------------------------------------------------------
+# minimal AdamW (no optax in the image)
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adamw_update(params, grads, state, lr, b1=TRAIN.adam_b1,
+                 b2=TRAIN.adam_b2, eps=1e-8, wd=TRAIN.weight_decay):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"],
+                     grads)
+    mhat = jax.tree.map(lambda m: m / (1 - b1 ** t), m)
+    vhat = jax.tree.map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree.map(
+        lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p),
+        params, mhat, vhat)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, total, base, warmup_ratio=TRAIN.warmup_ratio):
+    warm = max(1, int(total * warmup_ratio))
+    lin = step / warm
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * (step - warm) / max(1, total - warm)))
+    return base * jnp.where(step < warm, lin, cos)
+
+
+# ---------------------------------------------------------------------------
+# (de)serialization: flat npz + raw little-endian binary for rust
+# ---------------------------------------------------------------------------
+
+def params_to_dict(params: Params):
+    # lm_head is materialized as embed.T for the rust runtime (the
+    # backbone itself is weight-tied; see model.Params)
+    d = {"embed": params.embed, "norm_f": params.norm_f,
+         "lm_head": params.embed.T}
+    for f in params.layers._fields:
+        d[f"layers.{f}"] = getattr(params.layers, f)
+    return {k: np.asarray(v) for k, v in d.items()}
+
+
+def dict_to_params(d) -> Params:
+    from .model import LayerParams
+    return Params(
+        embed=jnp.asarray(d["embed"]),
+        layers=LayerParams(**{f: jnp.asarray(d[f"layers.{f}"])
+                              for f in LayerParams._fields}),
+        norm_f=jnp.asarray(d["norm_f"]),
+    )
+
+
+def router_to_dict(rp: RouterParams):
+    return {f: np.asarray(getattr(rp, f)) for f in rp._fields}
+
+
+def dict_to_router(d) -> RouterParams:
+    return RouterParams(**{f: jnp.asarray(d[f]) for f in RouterParams._fields})
+
+
+def save_npz(path, d):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.savez(path, **d)
+
+
+def load_npz(path):
+    return dict(np.load(path))
+
+
+def export_flat_bin(d, bin_path, manifest_path):
+    """Raw f32 little-endian blob + JSON manifest for the rust loader."""
+    entries = []
+    with open(bin_path, "wb") as f:
+        off = 0
+        for name in sorted(d):
+            arr = np.ascontiguousarray(d[name], np.float32)
+            f.write(arr.tobytes())
+            entries.append({"name": name, "offset": off,
+                            "shape": list(arr.shape)})
+            off += arr.nbytes
+    with open(manifest_path, "w") as f:
+        json.dump(entries, f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# stage: pretrain
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _pretrain_step(params, opt, tokens, weights, lr):
+    def loss_fn(p):
+        logits = forward_train(p, tokens)
+        return cross_entropy(logits[:, :-1], tokens[:, 1:],
+                             weights[:, 1:])
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt = adamw_update(params, grads, opt, lr)
+    return params, opt, loss
+
+
+def stage_pretrain(args):
+    rng = np.random.default_rng(TRAIN.seed)
+    key = jax.random.PRNGKey(TRAIN.seed)
+    mpath = os.path.join(ART, "model.npz")
+    if args.resume and os.path.exists(mpath):
+        params = dict_to_params(load_npz(mpath))
+        print("[pretrain] resumed from artifacts/model.npz")
+    else:
+        params = init_params(key)
+    opt = adamw_init(params)
+    steps = args.steps or TRAIN.pretrain_steps
+    log, t0 = [], time.time()
+    # curriculum: short sequences first (retrieval circuits form fast),
+    # then longer batches so RoPE sees longer positions. The answer
+    # span dominates the loss (unlearnable iid filler is downweighted).
+    for step in range(steps):
+        frac = step / max(1, steps)
+        b, s = (32, 64) if frac < 0.55 else (16, 128) if frac < 0.8 else (8, 256)
+        tasks = (os.environ.get("PRETRAIN_TASKS", "").split(",")
+                 if os.environ.get("PRETRAIN_TASKS") else list(data.TASKS))
+        toks, w, *_ = data.make_batch(rng, tasks, b, s)
+        w = np.where(w == 5.0, 25.0, 0.25).astype(np.float32) * (toks != 0)
+        lr = cosine_lr(step, steps, args.lr or TRAIN.pretrain_lr)
+        params, opt, loss = _pretrain_step(params, opt, jnp.asarray(toks),
+                                           jnp.asarray(w), lr)
+        if step % 20 == 0 or step == steps - 1:
+            log.append({"step": step, "loss": float(loss),
+                        "elapsed": time.time() - t0})
+            print(f"[pretrain] step {step} loss {float(loss):.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+        if step % 200 == 199:
+            acc = evaluate(params, None, rng, tasks=("pre", "lcc"),
+                           n_batches=1, seq_len=128,
+                           fixed_modes=["fa"] * MODEL.n_layers)
+            print(f"[pretrain] step {step} acc "
+                  f"{ {k: round(v['acc'], 2) for k, v in acc.items()} }",
+                  flush=True)
+    save_npz(os.path.join(ART, "model.npz"), params_to_dict(params))
+    os.makedirs(CURVES, exist_ok=True)
+    with open(os.path.join(CURVES, "pretrain.json"), "w") as f:
+        json.dump(log, f)
+    print("saved artifacts/model.npz")
+
+
+# ---------------------------------------------------------------------------
+# stage: router (the paper's training objective)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(1, 2),
+                   static_argnames=("sa_mode", "pool"))
+def _router_step(params, rp, opt, tokens, weights, key, tau, lam1, lam2,
+                 t_target, lr, sa_mode="ssa", pool=SPARSITY.pool_size):
+    def loss_fn(r):
+        logits, r_soft = routed_forward_train(params, r, tokens, key, tau,
+                                              sa_mode=sa_mode, pool=pool)
+        lm = cross_entropy(logits[:, :-1], tokens[:, 1:], weights[:, 1:])
+        # L_diff = E[1 - r_soft] - t  (expected SA fraction vs budget)
+        l_diff = jnp.mean(1.0 - r_soft) - t_target
+        reg = lam1 * l_diff + lam2 * l_diff * l_diff
+        return lm + reg, (lm, l_diff, jnp.mean(1.0 - r_soft))
+    (loss, (lm, l_diff, sa_frac)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(rp)
+    rp, opt = adamw_update(rp, grads, opt, lr, wd=0.0)
+    return rp, opt, lm, l_diff, sa_frac
+
+
+def stage_router(args):
+    rng = np.random.default_rng(TRAIN.seed + 1)
+    params = dict_to_params(load_npz(os.path.join(ART, "model.npz")))
+    rp = init_router(jax.random.PRNGKey(TRAIN.seed + 2))
+    opt = adamw_init(rp)
+    key = jax.random.PRNGKey(TRAIN.seed + 3)
+    steps = args.steps or TRAIN.router_steps
+    pool = args.pool or SPARSITY.pool_size
+    t_retr = args.t_retrieval if args.t_retrieval is not None \
+        else ROUTER.t_retrieval
+    t_hol = ROUTER.t_holistic
+    # per-category Lagrange multipliers, dual ascent (paper eq. 6)
+    lam = {"retr": [0.5, 0.5], "hol": [0.5, 0.5]}
+    slack = 0.05  # non-tight constraint slack
+    retr = [t for t in data.TASKS if t in data.RETRIEVAL_SET]
+    hol = [t for t in data.TASKS if t not in data.RETRIEVAL_SET]
+    # unbalanced mix (paper Fig 7 right): dominated by holistic tasks
+    p_retr = 0.5 if args.data_mix == "balanced" else 0.1
+    traj = []
+    t0 = time.time()
+    for step in range(steps):
+        is_retr = rng.random() < p_retr
+        cat = "retr" if is_retr else "hol"
+        tasks = retr if is_retr else hol
+        t_target = t_retr if is_retr else t_hol
+        toks, w, *_ = data.make_batch(rng, tasks, TRAIN.router_batch,
+                                      args.seq or TRAIN.router_seq)
+        tau = ROUTER.tau_start + (ROUTER.tau_end - ROUTER.tau_start) * (
+            step / max(1, steps - 1))
+        key, sub = jax.random.split(key)
+        lr = cosine_lr(step, steps, TRAIN.router_lr)
+        rp, opt, lm, l_diff, sa_frac = _router_step(
+            params, rp, opt, jnp.asarray(toks), jnp.asarray(w), sub,
+            jnp.float32(tau), jnp.float32(lam[cat][0]),
+            jnp.float32(lam[cat][1]), jnp.float32(t_target), lr,
+            pool=pool)
+        # dual ascent on the multipliers (gradient ascent of eq. 6 in
+        # lambda, with a slack so the constraint is non-tight)
+        ld = float(l_diff)
+        lam[cat][0] = float(np.clip(lam[cat][0] + TRAIN.lambda_lr * ld
+                                    * 100, 0.0, 10.0))
+        lam[cat][1] = float(np.clip(
+            lam[cat][1] + TRAIN.lambda_lr * (ld * ld - slack ** 2) * 100,
+            0.0, 10.0))
+        traj.append({"step": step, "cat": cat, "lm_loss": float(lm),
+                     "l_diff": ld, "sa_frac": float(sa_frac), "tau": tau,
+                     "lam1_retr": lam["retr"][0], "lam2_retr": lam["retr"][1],
+                     "lam1_hol": lam["hol"][0], "lam2_hol": lam["hol"][1]})
+        if step % 10 == 0 or step == steps - 1:
+            print(f"[router/{args.name}] step {step} cat {cat} "
+                  f"lm {float(lm):.3f} sa {float(sa_frac):.3f} tau {tau:.2f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    save_npz(os.path.join(ART, f"router_{args.name}.npz"),
+             router_to_dict(rp))
+    os.makedirs(CURVES, exist_ok=True)
+    with open(os.path.join(CURVES, f"router_{args.name}.json"), "w") as f:
+        json.dump({"config": {"t_retrieval": t_retr, "pool": pool,
+                              "data_mix": args.data_mix,
+                              "steps": steps}, "trajectory": traj}, f)
+    print(f"saved artifacts/router_{args.name}.npz")
+
+
+# ---------------------------------------------------------------------------
+# stage: continued training with frozen router (paper Fig 6)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0, 2))
+def _continued_step(params, rp, opt, tokens, weights, lr):
+    def loss_fn(p):
+        # near-hard routing with a frozen router: tau ~ 0 saturates the
+        # soft weights to 0/1, so gradients flow through the selected
+        # branch only (the selection itself is non-differentiable)
+        logits, _ = routed_forward_train(
+            p, rp, tokens, jax.random.PRNGKey(0), 1e-3)
+        return cross_entropy(logits[:, :-1], tokens[:, 1:], weights[:, 1:])
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt = adamw_update(params, grads, opt, lr)
+    return params, opt, loss
+
+
+def stage_continued(args):
+    rng = np.random.default_rng(TRAIN.seed + 5)
+    params = dict_to_params(load_npz(os.path.join(ART, "model.npz")))
+    rp = dict_to_router(load_npz(os.path.join(ART, "router_balanced.npz")))
+    opt = adamw_init(params)
+    steps = args.steps or TRAIN.continued_steps
+    traj = []
+    t0 = time.time()
+    for step in range(steps):
+        toks, w, *_ = data.make_batch(rng, list(data.TASKS), 4, 256)
+        lr = cosine_lr(step, steps, TRAIN.continued_lr)
+        params, opt, loss = _continued_step(params, rp, opt,
+                                            jnp.asarray(toks),
+                                            jnp.asarray(w), lr)
+        if step % 10 == 0 or step == steps - 1:
+            acc = evaluate(params, rp, rng, tasks=("pre", "gov", "trec"),
+                           n_batches=2, seq_len=256)
+            mean_acc = float(np.mean([a["acc"] for a in acc.values()]))
+            traj.append({"step": step, "loss": float(loss),
+                         "acc": mean_acc})
+            print(f"[continued] step {step} loss {float(loss):.3f} "
+                  f"acc {mean_acc:.3f} ({time.time()-t0:.0f}s)", flush=True)
+    save_npz(os.path.join(ART, "model_continued.npz"),
+             params_to_dict(params))
+    with open(os.path.join(CURVES, "continued.json"), "w") as f:
+        json.dump(traj, f)
+    print("saved artifacts/model_continued.npz")
+
+
+# ---------------------------------------------------------------------------
+# evaluation (teacher-forced answer accuracy)
+# ---------------------------------------------------------------------------
+
+def evaluate(params, rp, rng, tasks, n_batches=4, seq_len=512, batch=8,
+             sa_mode="ssa", fixed_modes=None, pool=SPARSITY.pool_size):
+    """Answer-position argmax accuracy per task.
+
+    rp: RouterParams for dynamic routing, or None with fixed_modes (a
+    list of L mode strings) for static baselines.
+    """
+    out = {}
+    for task in tasks:
+        hits, total, sa_layers, n_routed = 0, 0, 0, 0
+        for _ in range(n_batches):
+            toks, w, starts, lens, _ = data.make_batch(
+                rng, [task], batch, seq_len)
+            jtoks = jnp.asarray(toks)
+            if fixed_modes is not None:
+                logits = forward_hard_routed(params, jtoks, fixed_modes)
+            else:
+                logits, modes = _routed_eval_forward(params, rp, jtoks,
+                                                     pool, sa_mode)
+                sa_layers += int((~np.asarray(modes)).sum())
+                n_routed += modes.size
+            pred = np.asarray(jnp.argmax(logits, axis=-1))
+            for i in range(batch):
+                a0, al = int(starts[i]), int(lens[i])
+                # logits at position p predict token p+1
+                ok = all(pred[i, a0 - 1 + j] == toks[i, a0 + j]
+                         for j in range(al))
+                hits += int(ok)
+                total += 1
+        out[task] = {"acc": hits / total,
+                     "omsr": (sa_layers / n_routed) if n_routed else None}
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("pool", "sa_mode"))
+def _routed_eval_forward(params, rp, tokens, pool, sa_mode):
+    """Hard-routed forward (per-sample routing). Returns (logits, modes)
+    with modes (L, B) bool (True = FA)."""
+    from .model import (rope_tables, rms_norm, pool_descriptor,
+                        _layer_fwd_b)
+    b, s = tokens.shape
+    x = params.embed[tokens]
+    cos, sin = rope_tables(jnp.arange(s))
+    modes = []
+    for i in range(MODEL.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params.layers)
+        desc = jax.vmap(pool_descriptor, in_axes=(0, None))(x, pool)
+        logits = jax.nn.gelu(desc @ rp.w1[i] + rp.b1[i]) @ rp.w2[i] + rp.b2[i]
+        is_fa = logits[:, 1] > logits[:, 0]
+        y_fa = _layer_fwd_b(lp, x, cos, sin, "fa")
+        y_sa = _layer_fwd_b(lp, x, cos, sin, sa_mode)
+        x = jnp.where(is_fa[:, None, None], y_fa, y_sa)
+        modes.append(is_fa)
+    return rms_norm(x, params.norm_f) @ params.embed.T, jnp.stack(modes)
+
+
+def stage_eval(args):
+    rng = np.random.default_rng(TRAIN.seed + 9)
+    params = dict_to_params(load_npz(os.path.join(ART, "model.npz")))
+    rp = dict_to_router(load_npz(
+        os.path.join(ART, f"router_{args.name}.npz")))
+    res = evaluate(params, rp, rng, tasks=list(data.TASKS),
+                   n_batches=args.n_batches, seq_len=args.seq or 512)
+    print(json.dumps(res, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stage", required=True,
+                    choices=["pretrain", "router", "continued", "eval"])
+    ap.add_argument("--name", default="balanced")
+    ap.add_argument("--data-mix", default="balanced",
+                    choices=["balanced", "unbalanced"])
+    ap.add_argument("--t-retrieval", type=float, default=None)
+    ap.add_argument("--pool", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--n-batches", type=int, default=2)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    {"pretrain": stage_pretrain, "router": stage_router,
+     "continued": stage_continued, "eval": stage_eval}[args.stage](args)
+
+
+if __name__ == "__main__":
+    main()

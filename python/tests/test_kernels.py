@@ -1,0 +1,201 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Includes hypothesis sweeps over shapes/seeds and semantic property tests
+(causality, sink/window locality) that perturb inputs outside the mask
+support and assert output invariance.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    full_attention_pallas, ssa_attention_pallas, triangle_attention_pallas,
+    xattn_scores_pallas, xattn_attention_pallas, fa_decode_pallas,
+    sa_decode_pallas, prefill_suffix_pool_pallas, prefill_suffix_pool_ref,
+    router_mlp_pallas, router_mlp_ref, ref,
+)
+
+HSETTINGS = dict(deadline=None, max_examples=8, derandomize=True)
+
+
+def rand_qkv(seed, h, s, d, scale=0.5):
+    rng = np.random.default_rng(seed)
+    mk = lambda: jnp.asarray(rng.standard_normal((h, s, d)),
+                             jnp.float32) * scale
+    return mk(), mk(), mk()
+
+
+# ---------------------------------------------------------------------------
+# parity vs oracle
+# ---------------------------------------------------------------------------
+
+@settings(**HSETTINGS)
+@given(seed=st.integers(0, 2**16), s=st.sampled_from([64, 128, 256]),
+       h=st.sampled_from([1, 2, 4]), d=st.sampled_from([16, 32]))
+def test_full_attention_matches_ref(seed, s, h, d):
+    q, k, v = rand_qkv(seed, h, s, d)
+    out = full_attention_pallas(q, k, v)
+    np.testing.assert_allclose(out, ref.full_attention(q, k, v),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(**HSETTINGS)
+@given(seed=st.integers(0, 2**16), s=st.sampled_from([128, 256]),
+       sink=st.sampled_from([8, 16, 64]), local=st.sampled_from([32, 128]))
+def test_ssa_matches_ref(seed, s, sink, local):
+    q, k, v = rand_qkv(seed, 2, s, 32)
+    out = ssa_attention_pallas(q, k, v, sink, local)
+    np.testing.assert_allclose(out, ref.ssa_attention(q, k, v, sink, local),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(**HSETTINGS)
+@given(seed=st.integers(0, 2**16), s=st.sampled_from([128, 256]),
+       last_q=st.sampled_from([32, 64, 128]))
+def test_triangle_matches_ref(seed, s, last_q):
+    q, k, v = rand_qkv(seed, 2, s, 32)
+    out = triangle_attention_pallas(q, k, v, 16, 64, last_q)
+    np.testing.assert_allclose(
+        out, ref.triangle_attention(q, k, v, 16, 64, last_q),
+        rtol=2e-5, atol=2e-5)
+
+
+@settings(**HSETTINGS)
+@given(seed=st.integers(0, 2**16), s=st.sampled_from([128, 256]))
+def test_xattn_scores_match_ref(seed, s):
+    q, k, _ = rand_qkv(seed, 2, s, 32)
+    got = xattn_scores_pallas(q, k, 16, 4)
+    want = ref.xattn_block_scores(q, k, 16, 4).sum(axis=0)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(**HSETTINGS)
+@given(seed=st.integers(0, 2**16),
+       keep=st.sampled_from([0.125, 0.25, 0.5]))
+def test_xattn_pipeline_matches_ref(seed, keep):
+    q, k, v = rand_qkv(seed, 2, 128, 32)
+    out = xattn_attention_pallas(q, k, v, 16, 4, keep, 16, 64)
+    want = ref.xattn_attention(q, k, v, 16, 4, keep, 16, 64)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(**HSETTINGS)
+@given(seed=st.integers(0, 2**16), kmax=st.sampled_from([128, 256]),
+       valid=st.integers(1, 128))
+def test_fa_decode_matches_ref(seed, kmax, valid):
+    rng = np.random.default_rng(seed)
+    h, d = 4, 32
+    q = jnp.asarray(rng.standard_normal((h, d)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((h, kmax, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((h, kmax, d)), jnp.float32)
+    out = fa_decode_pallas(q, kc, vc, jnp.asarray([valid], jnp.int32))
+    np.testing.assert_allclose(out, ref.fa_decode(q, kc, vc, valid),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sa_decode_matches_ref():
+    rng = np.random.default_rng(7)
+    h, d, buf = 4, 32, 192
+    q = jnp.asarray(rng.standard_normal((h, d)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((h, buf, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((h, buf, d)), jnp.float32)
+    out = sa_decode_pallas(q, kc, vc, jnp.asarray([145], jnp.int32))
+    np.testing.assert_allclose(out, ref.sa_decode(q, kc, vc, 145),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# semantic properties (mask support)
+# ---------------------------------------------------------------------------
+
+def test_full_attention_is_causal():
+    """Perturbing future keys/values must not change earlier outputs."""
+    q, k, v = rand_qkv(3, 2, 128, 32)
+    base = full_attention_pallas(q, k, v)
+    k2 = k.at[:, 100:].add(3.0)
+    v2 = v.at[:, 100:].add(-5.0)
+    pert = full_attention_pallas(q, k2, v2)
+    np.testing.assert_allclose(base[:, :100], pert[:, :100],
+                               rtol=1e-6, atol=1e-6)
+    assert not np.allclose(base[:, 100:], pert[:, 100:])
+
+
+def test_ssa_ignores_outside_sink_and_window():
+    """Rows past sink+local must be blind to the masked middle region."""
+    sink, local, s = 16, 32, 256
+    q, k, v = rand_qkv(4, 2, s, 32)
+    base = ssa_attention_pallas(q, k, v, sink, local)
+    # perturb keys in (sink, i-local] for the last row block: indices
+    # 32..(192) are invisible to rows >= 224
+    k2 = k.at[:, 32:192].add(7.0)
+    v2 = v.at[:, 32:192].add(7.0)
+    pert = ssa_attention_pallas(q, k2, v2, sink, local)
+    np.testing.assert_allclose(base[:, 224:], pert[:, 224:],
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_triangle_last_rows_are_dense():
+    """Dense last-q rows must see middle-region perturbations."""
+    sink, local, last_q, s = 16, 32, 64, 256
+    q, k, v = rand_qkv(5, 2, s, 32)
+    base = triangle_attention_pallas(q, k, v, sink, local, last_q)
+    k2 = k.at[:, 64:128].add(5.0)
+    pert = triangle_attention_pallas(q, k2, v, sink, local, last_q)
+    # streaming rows in [160, 192) cannot see cols 64..128
+    np.testing.assert_allclose(base[:, 160:192], pert[:, 160:192],
+                               rtol=1e-6, atol=1e-6)
+    # dense rows (last 64) must change
+    assert not np.allclose(base[:, 192:], pert[:, 192:])
+
+
+def test_decode_valid_len_masks_tail():
+    rng = np.random.default_rng(11)
+    h, d, kmax = 2, 32, 128
+    q = jnp.asarray(rng.standard_normal((h, d)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((h, kmax, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((h, kmax, d)), jnp.float32)
+    base = fa_decode_pallas(q, kc, vc, jnp.asarray([50], jnp.int32))
+    kc2 = kc.at[:, 50:].set(99.0)
+    vc2 = vc.at[:, 50:].set(-99.0)
+    pert = fa_decode_pallas(q, kc2, vc2, jnp.asarray([50], jnp.int32))
+    np.testing.assert_allclose(base, pert, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pooling / router MLP
+# ---------------------------------------------------------------------------
+
+@settings(**HSETTINGS)
+@given(seed=st.integers(0, 2**16), s=st.sampled_from([32, 128, 512]),
+       pool=st.sampled_from([8, 16, 64]))
+def test_pool_matches_ref(seed, s, pool):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((s, 64)), jnp.float32)
+    np.testing.assert_allclose(prefill_suffix_pool_pallas(x, pool),
+                               prefill_suffix_pool_ref(x, pool),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(**HSETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_router_mlp_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    d, h = 256, 64
+    desc = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((d, h)) * 0.1, jnp.float32)
+    b1 = jnp.asarray(rng.standard_normal(h) * 0.1, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((h, 2)) * 0.1, jnp.float32)
+    b2 = jnp.asarray(rng.standard_normal(2) * 0.1, jnp.float32)
+    np.testing.assert_allclose(router_mlp_pallas(desc, w1, b1, w2, b2),
+                               router_mlp_ref(desc, w1, b1, w2, b2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pool_length_invariance_of_descriptor_dim():
+    """Router input dim is constant across sequence lengths (Fig 9)."""
+    for s in (64, 256, 2048):
+        x = jnp.ones((s, 128), jnp.float32)
+        assert prefill_suffix_pool_pallas(x, 16).shape == (256,)

@@ -1,0 +1,164 @@
+"""L2 correctness: model shapes, prefill/decode equivalence, routing.
+
+The decode-consistency test is the core serving-correctness signal: the
+per-token decode path (decode_qkv_step -> cache append -> decode_attend
+_step) must reproduce the prefill path row-for-row, because the rust
+coordinator runs exactly those step functions.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import data
+from compile.config import MODEL, SPARSITY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def rparams():
+    return M.init_router(jax.random.PRNGKey(1))
+
+
+def layer_of(params, i):
+    return jax.tree.map(lambda a: a[i], params.layers)
+
+
+def test_forward_shapes(params):
+    toks = jnp.zeros((2, 128), jnp.int32)
+    logits = M.forward_train(params, toks)
+    assert logits.shape == (2, 128, MODEL.vocab_size)
+
+
+def test_prefill_layer_step_shapes(params):
+    lp = layer_of(params, 0)
+    x = jnp.ones((128, MODEL.d_model), jnp.float32)
+    for mode in M.MODES:
+        y, k, v = M.prefill_layer_step(mode, x, *lp)
+        assert y.shape == x.shape
+        assert k.shape == (MODEL.n_heads, 128, MODEL.head_dim)
+        assert v.shape == k.shape
+
+
+def test_prefill_padding_contract(params):
+    """Valid rows are exact regardless of trailing padding (causality)."""
+    lp = layer_of(params, 0)
+    rng = np.random.default_rng(0)
+    x_short = jnp.asarray(rng.standard_normal((128, MODEL.d_model)),
+                          jnp.float32)
+    x_padded = jnp.concatenate(
+        [x_short, jnp.asarray(rng.standard_normal((128, MODEL.d_model)),
+                              jnp.float32) * 50.0])
+    y_short, *_ = M.prefill_layer_step("fa", x_short, *lp)
+    y_pad, *_ = M.prefill_layer_step("fa", x_padded, *lp)
+    np.testing.assert_allclose(y_short, y_pad[:128], rtol=2e-4, atol=2e-4)
+
+
+def test_decode_consistency_with_prefill(params):
+    """Teacher-forcing equivalence: running the decode step over a
+    sequence token-by-token must match the prefill layer output."""
+    lp = layer_of(params, 0)
+    s = 64
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((s, MODEL.d_model)), jnp.float32)
+    y_prefill, k_pre, v_pre = M.prefill_layer_step("fa", x, *lp)
+
+    h, dd = MODEL.n_heads, MODEL.head_dim
+    k_cache = np.zeros((h, s, dd), np.float32)
+    v_cache = np.zeros((h, s, dd), np.float32)
+    outs = []
+    for t in range(s):
+        q, k_new, v_new = M.decode_qkv_step(
+            x[t], jnp.asarray([t], jnp.int32), lp.norm1, lp.wq, lp.wk,
+            lp.wv)
+        k_cache[:, t] = np.asarray(k_new)
+        v_cache[:, t] = np.asarray(v_new)
+        y = M.decode_attend_step(
+            x[t], q, jnp.asarray(k_cache), jnp.asarray(v_cache),
+            jnp.asarray([t + 1], jnp.int32), lp.wo, lp.norm2, lp.w_ff1,
+            lp.w_ff2)
+        outs.append(np.asarray(y))
+    np.testing.assert_allclose(np.stack(outs), y_prefill, rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(k_cache, k_pre, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_kv_cache_roundtrip_rope(params):
+    """RoPE at append time: cached keys already carry their position."""
+    lp = layer_of(params, 3)
+    x = jnp.ones((MODEL.d_model,), jnp.float32)
+    q0, k0, _ = M.decode_qkv_step(x, jnp.asarray([0], jnp.int32),
+                                  lp.norm1, lp.wq, lp.wk, lp.wv)
+    q9, k9, _ = M.decode_qkv_step(x, jnp.asarray([9], jnp.int32),
+                                  lp.norm1, lp.wq, lp.wk, lp.wv)
+    # same input, different positions -> different rotations
+    assert not np.allclose(k0, k9)
+    # RoPE preserves norms
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(k0), axis=-1),
+                               np.linalg.norm(np.asarray(k9), axis=-1),
+                               rtol=1e-5)
+
+
+def test_router_soft_hard_consistency(params, rparams):
+    """As tau -> 0, soft routing must converge to the argmax decision."""
+    toks = jnp.asarray(np.random.default_rng(2).integers(
+        32, 512, (2, 128)), jnp.int32)
+    key = jax.random.PRNGKey(0)
+    _, r_cold = M.routed_forward_train(params, rparams, toks, key, 1e-4)
+    assert np.all((np.asarray(r_cold) < 1e-3) | (np.asarray(r_cold) > 1 - 1e-3))
+
+
+def test_gumbel_soft_route_range():
+    key = jax.random.PRNGKey(0)
+    logits = jnp.asarray(np.random.default_rng(0).standard_normal((8, 2)),
+                         jnp.float32)
+    r = M.gumbel_soft_route(key, logits, 1.0)
+    assert r.shape == (8,)
+    assert np.all((np.asarray(r) > 0) & (np.asarray(r) < 1))
+
+
+def test_routed_forward_blends(params, rparams):
+    toks = jnp.asarray(np.random.default_rng(3).integers(32, 512, (2, 128)),
+                       jnp.int32)
+    logits, r = M.routed_forward_train(params, rparams, toks,
+                                       jax.random.PRNGKey(1), 1.0)
+    assert logits.shape == (2, 128, MODEL.vocab_size)
+    assert r.shape == (MODEL.n_layers, 2)
+
+
+def test_hard_routed_modes_change_output(params):
+    toks = jnp.asarray(np.random.default_rng(4).integers(32, 512, (1, 256)),
+                       jnp.int32)
+    fa = M.forward_hard_routed(params, toks, ["fa"] * MODEL.n_layers)
+    sa = M.forward_hard_routed(params, toks, ["ssa"] * MODEL.n_layers)
+    assert not np.allclose(fa, sa)
+
+
+def test_lm_head_step(params):
+    x = jnp.ones((MODEL.d_model,), jnp.float32)
+    logits = M.lm_head_step(x, params.norm_f, params.embed.T)
+    assert logits.shape == (MODEL.vocab_size,)
+
+
+def test_cross_entropy_weighting():
+    logits = jnp.zeros((1, 4, 8))
+    targets = jnp.zeros((1, 4), jnp.int32)
+    w_all = jnp.ones((1, 4))
+    w_none = jnp.zeros((1, 4))
+    assert float(M.cross_entropy(logits, targets, w_all)) > 0
+    assert float(M.cross_entropy(logits, targets, w_none)) == 0
+
+
+def test_pool_descriptor_matches_kernel():
+    from compile.kernels import prefill_suffix_pool_pallas
+    x = jnp.asarray(np.random.default_rng(5).standard_normal((256, 128)),
+                    jnp.float32)
+    np.testing.assert_allclose(M.pool_descriptor(x, 16),
+                               prefill_suffix_pool_pallas(x, 16),
+                               rtol=1e-6, atol=1e-6)

@@ -1,0 +1,223 @@
+//! Static sparse-attention baselines (paper Tables 1-2 comparison rows)
+//! and the UnComp-style matrix-entropy layer profiler (paper section 2.3
+//! / Appendix C) used for Fig 1a's progressive sparsification.
+//!
+//! Baselines are *layerised* versions of the head-level originals — the
+//! substitution the paper itself makes when comparing at matched
+//! Omega_MSR (DESIGN.md section 2):
+//!   * DuoAttention-like: entropy-profiled retrieval layers keep FA, the
+//!     rest stream (SSA), fixed ratio 0.5.
+//!   * PruLong-like: same identification, but alternating assignment
+//!     bias toward early layers (its learned masks concentrate retrieval
+//!     capacity early).
+//!   * TriangleMix: dense shallow layers, Triangle attention deep
+//!     layers (the paper's static heuristic comparator).
+
+use crate::router::AttnMode;
+
+/// Symmetric Jacobi eigenvalue solver (d x d). The substrate for the
+/// matrix-entropy score — no LAPACK in this environment, so we build it.
+pub fn jacobi_eigenvalues(mat: &[f64], d: usize, sweeps: usize) -> Vec<f64> {
+    assert_eq!(mat.len(), d * d);
+    let mut a = mat.to_vec();
+    for _ in 0..sweeps {
+        let mut off = 0.0;
+        for p in 0..d {
+            for q in (p + 1)..d {
+                off += a[p * d + q] * a[p * d + q];
+            }
+        }
+        if off < 1e-18 {
+            break;
+        }
+        for p in 0..d {
+            for q in (p + 1)..d {
+                let apq = a[p * d + q];
+                if apq.abs() < 1e-15 {
+                    continue;
+                }
+                let app = a[p * d + p];
+                let aqq = a[q * d + q];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for i in 0..d {
+                    let aip = a[i * d + p];
+                    let aiq = a[i * d + q];
+                    a[i * d + p] = c * aip - s * aiq;
+                    a[i * d + q] = s * aip + c * aiq;
+                }
+                for i in 0..d {
+                    let api = a[p * d + i];
+                    let aqi = a[q * d + i];
+                    a[p * d + i] = c * api - s * aqi;
+                    a[q * d + i] = s * api + c * aqi;
+                }
+            }
+        }
+    }
+    (0..d).map(|i| a[i * d + i]).collect()
+}
+
+/// UnComp matrix entropy of hidden states `(s, d)` (paper eq. 7):
+/// von Neumann entropy of the trace-normalized covariance, truncated to
+/// the top-K eigenvalues.
+pub fn matrix_entropy(hidden: &[f32], s: usize, d: usize, top_k: usize) -> f64 {
+    assert_eq!(hidden.len(), s * d);
+    // covariance (d x d) = X^T X (s >> d here, so d x d is the cheap side)
+    let mut cov = vec![0f64; d * d];
+    for t in 0..s {
+        let row = &hidden[t * d..(t + 1) * d];
+        for i in 0..d {
+            let xi = row[i] as f64;
+            for j in i..d {
+                cov[i * d + j] += xi * row[j] as f64;
+            }
+        }
+    }
+    for i in 0..d {
+        for j in 0..i {
+            cov[i * d + j] = cov[j * d + i];
+        }
+    }
+    let trace: f64 = (0..d).map(|i| cov[i * d + i]).sum();
+    if trace <= 0.0 {
+        return 0.0;
+    }
+    for x in cov.iter_mut() {
+        *x /= trace;
+    }
+    let mut ev = jacobi_eigenvalues(&cov, d, 12);
+    ev.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    ev.truncate(top_k);
+    -ev.iter().filter(|&&l| l > 1e-12).map(|&l| l * l.ln()).sum::<f64>()
+}
+
+/// Progressive entropy-ranked sparsification (paper Appendix C.2):
+/// keep the top-`k = floor((1 - omega) * L)` entropy layers as FA,
+/// replace the rest with `sa_mode`.
+pub fn entropy_ranked_modes(scores: &[f64], omega: f64, sa_mode: AttnMode) -> Vec<AttnMode> {
+    let l = scores.len();
+    let keep_fa = ((1.0 - omega) * l as f64).floor() as usize;
+    let mut idx: Vec<usize> = (0..l).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut modes = vec![sa_mode; l];
+    for &i in idx.iter().take(keep_fa) {
+        modes[i] = AttnMode::Fa;
+    }
+    modes
+}
+
+/// DuoAttention-like static allocation at Omega = 0.5.
+pub fn duo_attention_modes(scores: &[f64]) -> Vec<AttnMode> {
+    entropy_ranked_modes(scores, 0.5, AttnMode::Ssa)
+}
+
+/// PruLong-like: Omega = 0.5 with an early-layer retrieval bias — the
+/// first quarter of layers is always FA, the remaining FA budget goes
+/// to the highest-entropy layers.
+pub fn prulong_modes(scores: &[f64]) -> Vec<AttnMode> {
+    let l = scores.len();
+    let keep_fa = l / 2;
+    let forced = (l / 4).max(1);
+    let mut modes = vec![AttnMode::Ssa; l];
+    for m in modes.iter_mut().take(forced) {
+        *m = AttnMode::Fa;
+    }
+    let mut idx: Vec<usize> = (forced..l).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    for &i in idx.iter().take(keep_fa.saturating_sub(forced)) {
+        modes[i] = AttnMode::Fa;
+    }
+    modes
+}
+
+/// TriangleMix: dense shallow half, Triangle attention deep half.
+pub fn trianglemix_modes(n_layers: usize) -> Vec<AttnMode> {
+    (0..n_layers)
+        .map(|i| if i < n_layers / 2 { AttnMode::Fa } else { AttnMode::Ta })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jacobi_diagonalizes_known_matrix() {
+        // [[2, 1], [1, 2]] -> eigenvalues 1, 3
+        let mut ev = jacobi_eigenvalues(&[2.0, 1.0, 1.0, 2.0], 2, 10);
+        ev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((ev[0] - 1.0).abs() < 1e-9);
+        assert!((ev[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jacobi_identity() {
+        let d = 4;
+        let mut m = vec![0.0; d * d];
+        for i in 0..d {
+            m[i * d + i] = (i + 1) as f64;
+        }
+        let mut ev = jacobi_eigenvalues(&m, d, 4);
+        ev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (i, e) in ev.iter().enumerate() {
+            assert!((e - (i + 1) as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn entropy_rank_ordering() {
+        // rank-1 hidden states -> ~zero entropy; iid noise -> high
+        let s = 64;
+        let d = 8;
+        let rank1: Vec<f32> = (0..s * d).map(|i| ((i / d) as f32 + 1.0)).collect();
+        let mut noise = vec![0f32; s * d];
+        let mut state = 12345u64;
+        for x in noise.iter_mut() {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            *x = ((state >> 33) as f32 / 2e9) - 1.0;
+        }
+        let e_low = matrix_entropy(&rank1, s, d, d);
+        let e_high = matrix_entropy(&noise, s, d, d);
+        assert!(e_high > e_low + 0.5, "high {e_high} low {e_low}");
+    }
+
+    #[test]
+    fn entropy_ranked_keeps_top_layers_fa() {
+        let scores = vec![0.1, 0.9, 0.5, 0.7];
+        let modes = entropy_ranked_modes(&scores, 0.5, AttnMode::Ssa);
+        assert_eq!(modes[1], AttnMode::Fa);
+        assert_eq!(modes[3], AttnMode::Fa);
+        assert_eq!(modes[0], AttnMode::Ssa);
+        assert_eq!(modes[2], AttnMode::Ssa);
+    }
+
+    #[test]
+    fn omega_extremes() {
+        let scores = vec![0.5; 8];
+        assert!(entropy_ranked_modes(&scores, 0.0, AttnMode::Ssa)
+            .iter()
+            .all(|m| *m == AttnMode::Fa));
+        assert!(entropy_ranked_modes(&scores, 1.0, AttnMode::Ssa)
+            .iter()
+            .all(|m| *m == AttnMode::Ssa));
+    }
+
+    #[test]
+    fn prulong_forces_early_layers() {
+        let scores = vec![0.0, 0.0, 0.9, 0.9, 0.9, 0.9, 0.1, 0.1];
+        let modes = prulong_modes(&scores);
+        assert_eq!(modes[0], AttnMode::Fa);
+        assert_eq!(modes[1], AttnMode::Fa);
+        assert_eq!(modes.iter().filter(|m| **m == AttnMode::Fa).count(), 4);
+    }
+
+    #[test]
+    fn trianglemix_split() {
+        let m = trianglemix_modes(8);
+        assert!(m[..4].iter().all(|x| *x == AttnMode::Fa));
+        assert!(m[4..].iter().all(|x| *x == AttnMode::Ta));
+    }
+}

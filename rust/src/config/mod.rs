@@ -1,0 +1,246 @@
+//! Typed configuration: mirrors `python/compile/config.py` (paper Table 3,
+//! scaled) and is loaded from `artifacts/model_meta.json` so the two sides
+//! can never drift.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq_len: usize,
+    pub rope_theta: f64,
+    pub rms_eps: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SparsityConfig {
+    pub sink_size: usize,
+    pub local_size: usize,
+    pub block_size: usize,
+    pub xattn_stride: usize,
+    pub xattn_keep_ratio: f64,
+    pub triangle_last_q: usize,
+    pub pool_size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct RouterCfg {
+    pub d_hidden: usize,
+    pub tau_start: f64,
+    pub tau_end: f64,
+    pub t_retrieval: f64,
+    pub t_holistic: f64,
+}
+
+/// Full build-time metadata written by `python -m compile.aot`.
+#[derive(Debug, Clone)]
+pub struct MetaConfig {
+    pub model: ModelConfig,
+    pub sparsity: SparsityConfig,
+    pub router: RouterCfg,
+    pub prefill_buckets: Vec<usize>,
+    pub decode_kv_buckets: Vec<usize>,
+    pub sa_decode_window: usize,
+    pub sa_buf: usize,
+    pub artifacts_dir: PathBuf,
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .with_context(|| format!("missing numeric field '{key}'"))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("missing numeric field '{key}'"))
+}
+
+fn usize_arr(j: &Json, key: &str) -> Result<Vec<usize>> {
+    Ok(j.get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("missing array '{key}'"))?
+        .iter()
+        .filter_map(Json::as_usize)
+        .collect())
+}
+
+impl MetaConfig {
+    /// Load from `<artifacts>/model_meta.json`.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let path = dir.join("model_meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let cfg = Self::from_json_str(&text, dir)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json_str(text: &str, dir: PathBuf) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("model_meta.json: {e}"))?;
+        let m = j.get("model").context("missing 'model'")?;
+        let s = j.get("sparsity").context("missing 'sparsity'")?;
+        let r = j.get("router").context("missing 'router'")?;
+        Ok(MetaConfig {
+            model: ModelConfig {
+                vocab_size: req_usize(m, "vocab_size")?,
+                d_model: req_usize(m, "d_model")?,
+                n_layers: req_usize(m, "n_layers")?,
+                n_heads: req_usize(m, "n_heads")?,
+                head_dim: req_usize(m, "head_dim")?,
+                d_ff: req_usize(m, "d_ff")?,
+                max_seq_len: req_usize(m, "max_seq_len")?,
+                rope_theta: req_f64(m, "rope_theta")?,
+                rms_eps: req_f64(m, "rms_eps")?,
+            },
+            sparsity: SparsityConfig {
+                sink_size: req_usize(s, "sink_size")?,
+                local_size: req_usize(s, "local_size")?,
+                block_size: req_usize(s, "block_size")?,
+                xattn_stride: req_usize(s, "xattn_stride")?,
+                xattn_keep_ratio: req_f64(s, "xattn_keep_ratio")?,
+                triangle_last_q: req_usize(s, "triangle_last_q")?,
+                pool_size: req_usize(s, "pool_size")?,
+            },
+            router: RouterCfg {
+                d_hidden: req_usize(r, "d_hidden")?,
+                tau_start: req_f64(r, "tau_start")?,
+                tau_end: req_f64(r, "tau_end")?,
+                t_retrieval: req_f64(r, "t_retrieval")?,
+                t_holistic: req_f64(r, "t_holistic")?,
+            },
+            prefill_buckets: usize_arr(&j, "prefill_buckets")?,
+            decode_kv_buckets: usize_arr(&j, "decode_kv_buckets")?,
+            sa_decode_window: req_usize(&j, "sa_decode_window")?,
+            sa_buf: req_usize(&j, "sa_buf")?,
+            artifacts_dir: dir,
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.model.n_heads * self.model.head_dim == self.model.d_model,
+            "n_heads * head_dim must equal d_model"
+        );
+        anyhow::ensure!(
+            self.sa_buf >= self.sa_decode_window,
+            "sparse decode buffer smaller than sink+local window"
+        );
+        anyhow::ensure!(
+            self.prefill_buckets.windows(2).all(|w| w[0] < w[1]),
+            "prefill buckets must be strictly increasing"
+        );
+        anyhow::ensure!(
+            self.decode_kv_buckets.windows(2).all(|w| w[0] < w[1]),
+            "decode buckets must be strictly increasing"
+        );
+        Ok(())
+    }
+
+    /// Smallest prefill bucket that fits `len` tokens.
+    pub fn prefill_bucket(&self, len: usize) -> Option<usize> {
+        self.prefill_buckets.iter().copied().find(|&b| b >= len)
+    }
+
+    /// Smallest decode KV bucket that fits `len` cached tokens.
+    pub fn decode_bucket(&self, len: usize) -> Option<usize> {
+        self.decode_kv_buckets.iter().copied().find(|&b| b >= len)
+    }
+
+    /// Default artifacts location (env override for tests/benches).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FLUX_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+/// Serving-side knobs (the paper's deployment configuration, section 3.3).
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// max new tokens per request unless the request overrides
+    pub max_new_tokens: usize,
+    /// admission-queue capacity before back-pressure rejects
+    pub queue_capacity: usize,
+    /// decode-priority: how many decode rounds the scheduler runs per
+    /// admitted prefill (continuous batching anti-starvation knob)
+    pub decode_steps_per_prefill: usize,
+    /// maximum concurrently active (prefilled, decoding) requests
+    pub max_active_requests: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            max_new_tokens: 8,
+            queue_capacity: 256,
+            decode_steps_per_prefill: 4,
+            max_active_requests: 32,
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) const TEST_META_JSON: &str = r#"{
+    "model": {"vocab_size":512,"d_model":128,"n_layers":8,
+              "n_heads":4,"head_dim":32,"d_ff":512,
+              "max_seq_len":2048,"rope_theta":10000.0,
+              "rms_eps":1e-5},
+    "sparsity": {"sink_size":16,"local_size":128,"block_size":16,
+                 "xattn_stride":4,"xattn_keep_ratio":0.25,
+                 "triangle_last_q":64,"pool_size":16},
+    "router": {"d_hidden":64,"tau_start":2.0,"tau_end":0.3,
+               "t_retrieval":0.45,"t_holistic":1.0},
+    "prefill_buckets": [128,256,512,1024,2048],
+    "decode_kv_buckets": [128,256,512,1024,2048],
+    "sa_decode_window": 145,
+    "sa_buf": 192
+}"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta_for_test() -> MetaConfig {
+        MetaConfig::from_json_str(TEST_META_JSON, PathBuf::from("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = meta_for_test();
+        assert_eq!(m.prefill_bucket(1), Some(128));
+        assert_eq!(m.prefill_bucket(128), Some(128));
+        assert_eq!(m.prefill_bucket(129), Some(256));
+        assert_eq!(m.prefill_bucket(2048), Some(2048));
+        assert_eq!(m.prefill_bucket(2049), None);
+        assert_eq!(m.decode_bucket(500), Some(512));
+    }
+
+    #[test]
+    fn validation_accepts_good_config() {
+        meta_for_test().validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad_buffer() {
+        let mut m = meta_for_test();
+        m.sa_buf = 10;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn missing_field_is_an_error() {
+        assert!(MetaConfig::from_json_str("{}", PathBuf::from("/tmp")).is_err());
+    }
+}

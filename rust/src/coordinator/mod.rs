@@ -1,0 +1,271 @@
+//! The serving coordinator: request lifecycle, admission control,
+//! continuous batching and the prefill/decode scheduler.
+//!
+//! This is the L3 systems half of the paper: the Layer Router decides
+//! *what* to compute per layer; the coordinator decides *when*, keeping
+//! decode latency low (decode-priority round-robin over the active set)
+//! while admitting new prefills, and tracking per-request routing
+//! decisions cached at prefill time (paper section 3.3 — zero per-token
+//! routing overhead).
+//!
+//! Threading model (no async runtime in the offline vendor set): one
+//! scheduler thread owns the active set and drives the engine thread;
+//! clients block on a per-request reply channel. This matches the
+//! single-device execution reality — the engine serializes all kernel
+//! launches regardless.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::ServingConfig;
+use crate::engine::EngineHandle;
+use crate::metrics::ServingMetrics;
+use crate::router::Policy;
+use crate::tokenizer::EOS;
+
+/// A client-facing request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub policy: Policy,
+    pub router: String,
+}
+
+/// Completed response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub tokens: Vec<u32>,
+    pub omsr: f64,
+    pub modes: Vec<String>,
+    pub ttft_us: u64,
+    pub e2e_us: u64,
+    pub decode_us_per_token: f64,
+    pub queue_us: u64,
+}
+
+struct Active {
+    engine_id: u64,
+    generated: Vec<u32>,
+    max_new: usize,
+    omsr: f64,
+    modes: Vec<String>,
+    t_arrival: Instant,
+    t_first_token: Instant,
+    decode_us: u64,
+    queue_us: u64,
+    reply: Sender<Result<Response>>,
+}
+
+struct Pending {
+    req: Request,
+    reply: Sender<Result<Response>>,
+    t_arrival: Instant,
+}
+
+/// Continuous-batching coordinator handle. `submit` blocks until the
+/// request completes; clients use one thread per in-flight request
+/// (see `submit_async` for a non-blocking variant returning a channel).
+pub struct Coordinator {
+    queue_tx: SyncSender<Pending>,
+    queue_depth: Arc<AtomicUsize>,
+    pub metrics: Arc<Mutex<ServingMetrics>>,
+}
+
+impl Coordinator {
+    /// Start the scheduler thread.
+    pub fn start(engine: EngineHandle, cfg: ServingConfig) -> Arc<Self> {
+        let (queue_tx, queue_rx) = std::sync::mpsc::sync_channel(cfg.queue_capacity);
+        let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
+        let queue_depth = Arc::new(AtomicUsize::new(0));
+        let coord = Arc::new(Self {
+            queue_tx,
+            queue_depth: queue_depth.clone(),
+            metrics: metrics.clone(),
+        });
+        std::thread::Builder::new()
+            .name("flux-scheduler".into())
+            .spawn(move || scheduler_loop(engine, cfg, queue_rx, queue_depth, metrics))
+            .expect("spawn scheduler");
+        coord
+    }
+
+    /// Submit and wait for completion. Fails fast when the admission
+    /// queue is full (backpressure).
+    pub fn submit(&self, req: Request) -> Result<Response> {
+        self.submit_async(req)?
+            .recv()
+            .map_err(|_| anyhow::anyhow!("scheduler shut down"))?
+    }
+
+    /// Submit and get the reply channel immediately.
+    pub fn submit_async(&self, req: Request) -> Result<Receiver<Result<Response>>> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        let pending = Pending { req, reply, t_arrival: Instant::now() };
+        match self.queue_tx.try_send(pending) {
+            Ok(()) => {
+                self.queue_depth.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.lock().unwrap().requests_rejected += 1;
+                anyhow::bail!("admission queue full: request rejected (backpressure)")
+            }
+            Err(TrySendError::Disconnected(_)) => anyhow::bail!("scheduler shut down"),
+        }
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+}
+
+fn scheduler_loop(
+    engine: EngineHandle,
+    cfg: ServingConfig,
+    queue_rx: Receiver<Pending>,
+    queue_depth: Arc<AtomicUsize>,
+    metrics: Arc<Mutex<ServingMetrics>>,
+) {
+    let mut active: VecDeque<Active> = VecDeque::new();
+    let mut queue_closed = false;
+    loop {
+        // --- admission: take at most one prefill per outer iteration
+        // (decode-priority), more if the active set is empty ---
+        while !queue_closed && active.len() < cfg.max_active_requests {
+            let pending = if active.is_empty() {
+                match queue_rx.recv() {
+                    Ok(p) => Some(p),
+                    Err(_) => {
+                        queue_closed = true;
+                        None
+                    }
+                }
+            } else {
+                match queue_rx.try_recv() {
+                    Ok(p) => Some(p),
+                    Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        queue_closed = true;
+                        None
+                    }
+                }
+            };
+            let Some(Pending { req, reply, t_arrival }) = pending else { break };
+            queue_depth.fetch_sub(1, Ordering::Relaxed);
+            let queue_us = t_arrival.elapsed().as_micros() as u64;
+            match engine.prefill(req.prompt.clone(), req.policy.clone(), req.router.clone()) {
+                Ok((engine_id, report)) => {
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        m.prefill.record_us(report.total_us);
+                        m.router_overhead.record_us(report.router_us);
+                        m.ttft.record_us(queue_us + report.total_us);
+                        m.prompt_tokens += report.prompt_len as u64;
+                        m.record_omsr(&req.policy.label(), report.omsr);
+                    }
+                    active.push_back(Active {
+                        engine_id,
+                        generated: vec![report.first_token],
+                        max_new: req.max_new.max(1),
+                        omsr: report.omsr,
+                        modes: report.modes.iter().map(|m| m.name().into()).collect(),
+                        t_arrival,
+                        t_first_token: Instant::now(),
+                        decode_us: 0,
+                        queue_us,
+                        reply,
+                    });
+                }
+                Err(e) => {
+                    let _ = reply.send(Err(e));
+                    metrics.lock().unwrap().requests_rejected += 1;
+                }
+            }
+            // decode-priority: stop admitting once something is active
+            break;
+        }
+
+        if active.is_empty() {
+            if queue_closed {
+                return;
+            }
+            continue;
+        }
+
+        // --- decode rounds over the active set ---
+        for _ in 0..cfg.decode_steps_per_prefill {
+            let mut still_active = VecDeque::new();
+            while let Some(mut a) = active.pop_front() {
+                let done =
+                    a.generated.len() >= a.max_new || *a.generated.last().unwrap() == EOS;
+                if done {
+                    finish(&engine, &metrics, a);
+                    continue;
+                }
+                let t0 = Instant::now();
+                match engine.decode_step(a.engine_id) {
+                    Ok(tok) => {
+                        let dt = t0.elapsed().as_micros() as u64;
+                        a.decode_us += dt;
+                        metrics.lock().unwrap().decode.record_us(dt);
+                        a.generated.push(tok);
+                        still_active.push_back(a);
+                    }
+                    Err(e) => {
+                        let _ = a.reply.send(Err(e));
+                        engine.release(a.engine_id);
+                    }
+                }
+            }
+            active = still_active;
+            if active.is_empty() {
+                break;
+            }
+        }
+    }
+}
+
+fn finish(engine: &EngineHandle, metrics: &Arc<Mutex<ServingMetrics>>, a: Active) {
+    engine.release(a.engine_id);
+    let e2e = a.t_arrival.elapsed().as_micros() as u64;
+    let n_dec = a.generated.len().saturating_sub(1).max(1);
+    let resp = Response {
+        omsr: a.omsr,
+        modes: a.modes,
+        ttft_us: a.t_first_token.duration_since(a.t_arrival).as_micros() as u64,
+        e2e_us: e2e,
+        decode_us_per_token: a.decode_us as f64 / n_dec as f64,
+        queue_us: a.queue_us,
+        tokens: a.generated,
+    };
+    {
+        let mut m = metrics.lock().unwrap();
+        m.requests_completed += 1;
+        m.tokens_generated += resp.tokens.len() as u64;
+        m.e2e.record_us(e2e);
+    }
+    let _ = a.reply.send(Ok(resp));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_defaults_compose() {
+        let r = Request {
+            prompt: vec![1, 2, 3],
+            max_new: 4,
+            policy: Policy::Backbone,
+            router: "balanced".into(),
+        };
+        assert_eq!(r.policy.label(), "backbone");
+        assert_eq!(r.max_new, 4);
+    }
+}

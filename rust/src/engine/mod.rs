@@ -1,0 +1,472 @@
+//! The serving engine: owns the PJRT runtime, model weights, routers and
+//! all per-request KV state, and executes prefill / decode steps.
+//!
+//! PJRT handles are `!Send`, so the [`Engine`] lives on one dedicated
+//! executor thread; the async coordinator drives it through the
+//! [`EngineHandle`] channel API (mirrors the single-GPU worker model of
+//! vLLM-style engines — one device, serialized kernel stream).
+//!
+//! Request data path (DESIGN.md section 6):
+//!
+//! ```text
+//! prefill:  embed -> for each layer: [pool -> route]? -> layer exe
+//!           -> cache K/V (full or sink+local per routing) -> lm_head
+//! decode:   embed(tok) -> for each layer: qkv exe -> cache.append ->
+//!           attend exe (fa bucket | sa ring) -> lm_head -> next token
+//! ```
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::MetaConfig;
+use crate::kvcache::{FullCache, LayerCache, SparseCache};
+use crate::model::{argmax, ModelWeights};
+use crate::router::{pool_descriptor, AttnMode, DecodeMode, Policy, RouterNet};
+use crate::runtime::{i32_literal, HostTensor, Runtime, WeightStore};
+
+/// Timing + routing info returned by prefill (feeds metrics and the
+/// paper's efficiency figures).
+#[derive(Debug, Clone)]
+pub struct PrefillReport {
+    pub bucket: usize,
+    pub prompt_len: usize,
+    pub modes: Vec<AttnMode>,
+    pub omsr: f64,
+    pub total_us: u64,
+    pub router_us: u64,
+    pub first_token: u32,
+    pub kv_bytes: usize,
+}
+
+/// One live request's state inside the engine.
+pub struct RequestState {
+    pub caches: Vec<LayerCache>,
+    pub modes: Vec<AttnMode>,
+    pub decode_mode: DecodeMode,
+    pub n_tokens: usize, // prompt + generated so far (positions)
+    pub last_token: u32,
+}
+
+/// The engine proper (not `Send`; lives on the executor thread).
+pub struct Engine {
+    pub rt: Runtime,
+    pub weights: ModelWeights,
+    pub routers: HashMap<String, RouterNet>,
+    cfg: MetaConfig,
+    requests: HashMap<u64, RequestState>,
+    next_id: u64,
+}
+
+impl Engine {
+    /// Load runtime + weights + every available router variant and
+    /// compile all executables listed in the manifest.
+    pub fn load(artifacts: &std::path::Path) -> Result<Self> {
+        let cfg = MetaConfig::load(artifacts)?;
+        let mut rt = Runtime::new(artifacts)?;
+        let manifest = crate::util::json::Json::parse(&std::fs::read_to_string(
+            artifacts.join("manifest.json"),
+        )?)
+        .map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
+        for exe in manifest
+            .get("executables")
+            .and_then(crate::util::json::Json::as_arr)
+            .unwrap_or(&[])
+        {
+            if let Some(name) = exe.as_str() {
+                rt.load(name)?;
+            }
+        }
+        let ws = WeightStore::load(artifacts.join("weights.bin"), artifacts.join("weights.json"))?;
+        let weights = ModelWeights::load(&cfg, &ws)?;
+        let mut routers = HashMap::new();
+        for entry in std::fs::read_dir(artifacts)? {
+            let path = entry?.path();
+            let name = path.file_name().unwrap().to_string_lossy().to_string();
+            if let Some(stem) = name.strip_suffix(".bin") {
+                if let Some(variant) = stem.strip_prefix("router_") {
+                    let rws = WeightStore::load(&path, artifacts.join(format!("{stem}.json")))?;
+                    routers.insert(variant.to_string(), RouterNet::load(&rws, cfg.model.n_layers)?);
+                }
+            }
+        }
+        Ok(Self { rt, weights, routers, cfg, requests: HashMap::new(), next_id: 0 })
+    }
+
+    pub fn cfg(&self) -> &MetaConfig {
+        &self.cfg
+    }
+
+    pub fn router(&self, name: &str) -> Result<&RouterNet> {
+        self.routers
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("router variant '{name}' not found in artifacts"))
+    }
+
+    pub fn active_requests(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn total_kv_bytes(&self) -> usize {
+        self.requests
+            .values()
+            .map(|r| r.caches.iter().map(|c| c.bytes()).sum::<usize>())
+            .sum()
+    }
+
+    /// Prefill a prompt under `policy` using router variant
+    /// `router_name` (ignored for static policies). Returns the request
+    /// id and a report.
+    pub fn prefill(
+        &mut self,
+        tokens: &[u32],
+        policy: &Policy,
+        router_name: &str,
+    ) -> Result<(u64, PrefillReport)> {
+        let t_start = Instant::now();
+        let cfg = &self.cfg;
+        let n_layers = cfg.model.n_layers;
+        let bucket = cfg
+            .prefill_bucket(tokens.len())
+            .ok_or_else(|| anyhow::anyhow!("prompt of {} tokens exceeds max bucket", tokens.len()))?;
+        let valid = tokens.len();
+        let pool = cfg.sparsity.pool_size;
+        let sink = cfg.sparsity.sink_size;
+        let local = cfg.sparsity.local_size;
+        let sa_buf = cfg.sa_buf;
+        let (nh, hd) = (cfg.model.n_heads, cfg.model.head_dim);
+        let decode_mode = policy.decode_mode();
+
+        let mut hidden = self.weights.embed_tokens(tokens, bucket);
+        let mut modes = Vec::with_capacity(n_layers);
+        let mut caches = Vec::with_capacity(n_layers);
+        let mut router_us = 0u64;
+
+        for layer in 0..n_layers {
+            // --- routing decision for this layer ---
+            let mode = match policy {
+                Policy::Backbone => AttnMode::Fa,
+                Policy::Static { modes, .. } => modes[layer],
+                Policy::Flux { sa_mode, .. } => {
+                    let t0 = Instant::now();
+                    let desc = pool_descriptor(&hidden, valid, pool);
+                    let net = self
+                        .routers
+                        .get(router_name)
+                        .ok_or_else(|| anyhow::anyhow!("router '{router_name}' missing"))?;
+                    let (is_fa, _) = net.route(&mut self.rt, layer, &desc)?;
+                    router_us += t0.elapsed().as_micros() as u64;
+                    if is_fa {
+                        AttnMode::Fa
+                    } else {
+                        *sa_mode
+                    }
+                }
+            };
+            modes.push(mode);
+
+            // --- layer execution ---
+            let exe = format!("{}_{}", mode.exe_prefix(), bucket);
+            let hlit = hidden.to_literal()?;
+            let w = &self.weights.layers[layer];
+            let out = self.rt.run(
+                &exe,
+                &[&hlit, &w.norm1, &w.wq, &w.wk, &w.wv, &w.wo, &w.norm2, &w.w_ff1, &w.w_ff2],
+            )?;
+            let (h_out, k, v) = (out[0].clone(), &out[1], &out[2]);
+            hidden = h_out;
+
+            // --- KV retention per routing decision + decode mode ---
+            let sparse_cache = decode_mode == DecodeMode::Sparse && mode != AttnMode::Fa;
+            let cache = if sparse_cache {
+                let mut c = SparseCache::new(nh, hd, sink, local, sa_buf);
+                c.load_prefill(k, v, valid);
+                LayerCache::Sparse(c)
+            } else {
+                let mut c = FullCache::new(nh, hd, bucket);
+                c.load_prefill(k, v, valid);
+                LayerCache::Full(c)
+            };
+            caches.push(cache);
+        }
+
+        // first generated token from the last valid position
+        let d = cfg.model.d_model;
+        let last_hidden = HostTensor::new(
+            vec![d],
+            hidden.data[(valid - 1) * d..valid * d].to_vec(),
+        );
+        let llit = last_hidden.to_literal()?;
+        let logits = self
+            .rt
+            .run("lm_head", &[&llit, &self.weights.norm_f, &self.weights.lm_head])?;
+        let first_token = argmax(&logits[0].data);
+
+        let omsr = modes.iter().filter(|m| **m != AttnMode::Fa).count() as f64
+            / n_layers as f64;
+        let kv_bytes: usize = caches.iter().map(|c| c.bytes()).sum();
+        let id = self.next_id;
+        self.next_id += 1;
+        self.requests.insert(
+            id,
+            RequestState {
+                caches,
+                modes: modes.clone(),
+                decode_mode,
+                n_tokens: valid,
+                last_token: first_token,
+            },
+        );
+        Ok((
+            id,
+            PrefillReport {
+                bucket,
+                prompt_len: valid,
+                modes,
+                omsr,
+                total_us: t_start.elapsed().as_micros() as u64,
+                router_us,
+                first_token,
+                kv_bytes,
+            },
+        ))
+    }
+
+    /// One decode step: consume the request's `last_token`, produce the
+    /// next. The caller owns the stop condition (EOS / max tokens).
+    pub fn decode_step(&mut self, id: u64) -> Result<u32> {
+        let cfg = self.cfg.clone();
+        let state = self
+            .requests
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("unknown request {id}"))?;
+        let pos = state.n_tokens;
+        let mut hidden = self.weights.embed_one(state.last_token);
+        let pos_lit = i32_literal(&[pos as i32]);
+
+        for layer in 0..cfg.model.n_layers {
+            let w = &self.weights.layers[layer];
+            let hlit = hidden.to_literal()?;
+            // stage 1: project + rope the current token
+            let qkv = self
+                .rt
+                .run("decode_qkv", &[&hlit, &pos_lit, &w.norm1, &w.wq, &w.wk, &w.wv])?;
+            let (q, k_new, v_new) = (&qkv[0], &qkv[1], &qkv[2]);
+
+            // stage 2: append then attend over the cache
+            let cache = &mut state.caches[layer];
+            match cache {
+                LayerCache::Full(c) => {
+                    c.append(&k_new.data, &v_new.data);
+                    let bucket = cfg
+                        .decode_bucket(c.len())
+                        .ok_or_else(|| anyhow::anyhow!("KV overflow at {}", c.len()))?
+                        .max(c.capacity().min(*cfg.decode_kv_buckets.last().unwrap()));
+                    let (klit, vlit) = c.as_literals(bucket)?;
+                    let valid = i32_literal(&[c.len() as i32]);
+                    let exe = format!("decode_attend_fa_{bucket}");
+                    let out = self.rt.run(
+                        &exe,
+                        &[
+                            &hlit,
+                            &q.to_literal()?,
+                            &klit,
+                            &vlit,
+                            &valid,
+                            &w.wo,
+                            &w.norm2,
+                            &w.w_ff1,
+                            &w.w_ff2,
+                        ],
+                    )?;
+                    hidden = out[0].clone();
+                }
+                LayerCache::Sparse(c) => {
+                    c.append(&k_new.data, &v_new.data);
+                    let (kt, vt, valid) = c.as_tensors();
+                    let vlit = i32_literal(&[valid as i32]);
+                    let out = self.rt.run(
+                        "decode_attend_sa",
+                        &[
+                            &hlit,
+                            &q.to_literal()?,
+                            &kt.to_literal()?,
+                            &vt.to_literal()?,
+                            &vlit,
+                            &w.wo,
+                            &w.norm2,
+                            &w.w_ff1,
+                            &w.w_ff2,
+                        ],
+                    )?;
+                    hidden = out[0].clone();
+                }
+            }
+        }
+
+        let hlit = hidden.to_literal()?;
+        let logits = self
+            .rt
+            .run("lm_head", &[&hlit, &self.weights.norm_f, &self.weights.lm_head])?;
+        let next = argmax(&logits[0].data);
+        let state = self.requests.get_mut(&id).unwrap();
+        state.n_tokens += 1;
+        state.last_token = next;
+        Ok(next)
+    }
+
+    /// Convenience: prefill + greedy decode until EOS or `max_new`.
+    pub fn generate(
+        &mut self,
+        tokens: &[u32],
+        policy: &Policy,
+        router_name: &str,
+        max_new: usize,
+    ) -> Result<(Vec<u32>, PrefillReport)> {
+        let (id, report) = self.prefill(tokens, policy, router_name)?;
+        let mut out = vec![report.first_token];
+        while out.len() < max_new && *out.last().unwrap() != crate::tokenizer::EOS {
+            out.push(self.decode_step(id)?);
+        }
+        self.release(id);
+        Ok((out, report))
+    }
+
+    /// UnComp-style layer profiling (paper Appendix C.1): run an FA
+    /// prefill and return each layer's matrix-entropy score of its
+    /// output hidden states. Feeds the entropy-ranked static baselines
+    /// and the Fig 1a progressive-sparsification experiment.
+    pub fn profile_entropy(&mut self, tokens: &[u32], top_k: usize) -> Result<Vec<f64>> {
+        let cfg = &self.cfg;
+        let bucket = cfg
+            .prefill_bucket(tokens.len())
+            .ok_or_else(|| anyhow::anyhow!("prompt too long"))?;
+        let valid = tokens.len();
+        let d = cfg.model.d_model;
+        let mut hidden = self.weights.embed_tokens(tokens, bucket);
+        let mut scores = Vec::with_capacity(cfg.model.n_layers);
+        for layer in 0..cfg.model.n_layers {
+            let exe = format!("layer_fa_prefill_{bucket}");
+            let hlit = hidden.to_literal()?;
+            let w = &self.weights.layers[layer];
+            let out = self.rt.run(
+                &exe,
+                &[&hlit, &w.norm1, &w.wq, &w.wk, &w.wv, &w.wo, &w.norm2, &w.w_ff1, &w.w_ff2],
+            )?;
+            hidden = out[0].clone();
+            scores.push(crate::baselines::matrix_entropy(
+                &hidden.data[..valid * d],
+                valid,
+                d,
+                top_k,
+            ));
+        }
+        Ok(scores)
+    }
+
+    /// Drop a request's state (cancellation or completion).
+    pub fn release(&mut self, id: u64) -> bool {
+        self.requests.remove(&id).is_some()
+    }
+
+    pub fn request_state(&self, id: u64) -> Option<&RequestState> {
+        self.requests.get(&id)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EngineHandle: Send/Sync channel facade for the async coordinator
+// ---------------------------------------------------------------------------
+
+pub enum EngineJob {
+    Prefill {
+        tokens: Vec<u32>,
+        policy: Policy,
+        router: String,
+        reply: std::sync::mpsc::Sender<Result<(u64, PrefillReport)>>,
+    },
+    DecodeStep {
+        id: u64,
+        reply: std::sync::mpsc::Sender<Result<u32>>,
+    },
+    Release {
+        id: u64,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle that forwards jobs to the executor thread.
+/// Calls are blocking (the engine serializes all device work anyway);
+/// the thread-based coordinator runs them from its scheduler thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: std::sync::mpsc::Sender<EngineJob>,
+}
+
+impl EngineHandle {
+    /// Spawn the executor thread and load the engine on it.
+    pub fn spawn(artifacts: std::path::PathBuf) -> Result<Self> {
+        let (tx, rx) = std::sync::mpsc::channel::<EngineJob>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("flux-engine".into())
+            .spawn(move || {
+                let mut engine = match Engine::load(&artifacts) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        EngineJob::Prefill { tokens, policy, router, reply } => {
+                            let _ = reply.send(engine.prefill(&tokens, &policy, &router));
+                        }
+                        EngineJob::DecodeStep { id, reply } => {
+                            let _ = reply.send(engine.decode_step(id));
+                        }
+                        EngineJob::Release { id } => {
+                            engine.release(id);
+                        }
+                        EngineJob::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx.recv()??;
+        Ok(Self { tx })
+    }
+
+    pub fn prefill(
+        &self,
+        tokens: Vec<u32>,
+        policy: Policy,
+        router: String,
+    ) -> Result<(u64, PrefillReport)> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(EngineJob::Prefill { tokens, policy, router, reply })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv()?
+    }
+
+    pub fn decode_step(&self, id: u64) -> Result<u32> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(EngineJob::DecodeStep { id, reply })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv()?
+    }
+
+    pub fn release(&self, id: u64) {
+        let _ = self.tx.send(EngineJob::Release { id });
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(EngineJob::Shutdown);
+    }
+}

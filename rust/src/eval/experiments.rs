@@ -1,0 +1,542 @@
+//! Experiment drivers: one function per paper table/figure.
+//! Each prints the paper-style table and writes JSON to `results/`.
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::engine::Engine;
+use crate::gpu_sim::{decode_speedup, GpuSimConfig, SimPolicy};
+use crate::jobj;
+use crate::router::{AttnMode, DecodeMode, Policy};
+use crate::tokenizer::Tokenizer;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::{generate, Task, LONGBENCH_TASKS};
+
+use super::{format_table, run_task, TaskResult};
+
+fn save_json(name: &str, value: &Json) -> Result<()> {
+    std::fs::create_dir_all("results")?;
+    std::fs::write(format!("results/{name}.json"), value.to_string())?;
+    Ok(())
+}
+
+/// Calibrate entropy scores on a small mixed prompt set.
+pub fn entropy_scores(engine: &mut Engine, seq_len: usize) -> Result<Vec<f64>> {
+    let mut rng = Rng::seed_from_u64(1234);
+    let n_layers = engine.cfg().model.n_layers;
+    let mut acc = vec![0.0; n_layers];
+    let tasks = [Task::PRe, Task::Gov, Task::HotQA, Task::Trec];
+    for task in tasks {
+        let s = generate(task, &mut rng, seq_len);
+        let top_k = engine.cfg().model.d_model;
+        let scores = engine.profile_entropy(&s.prompt, top_k)?;
+        for (a, s) in acc.iter_mut().zip(scores) {
+            *a += s;
+        }
+    }
+    for a in acc.iter_mut() {
+        *a /= tasks.len() as f64;
+    }
+    Ok(acc)
+}
+
+/// The paper's baseline + FluxAttn method set for Tables 1-2.
+pub fn method_set(engine: &mut Engine, seq_len: usize) -> Result<Vec<(String, Policy)>> {
+    let scores = entropy_scores(engine, seq_len)?;
+    let n_layers = engine.cfg().model.n_layers;
+    Ok(vec![
+        ("backbone".into(), Policy::Backbone),
+        (
+            "+DuoAttention".into(),
+            Policy::Static {
+                modes: baselines::duo_attention_modes(&scores),
+                decode: DecodeMode::Dense,
+            },
+        ),
+        (
+            "+PruLong".into(),
+            Policy::Static {
+                modes: baselines::prulong_modes(&scores),
+                decode: DecodeMode::Dense,
+            },
+        ),
+        (
+            "+TriangleMix".into(),
+            Policy::Static {
+                modes: baselines::trianglemix_modes(n_layers),
+                decode: DecodeMode::Dense,
+            },
+        ),
+        (
+            "+FluxAttn(FA-SSA)".into(),
+            Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Dense },
+        ),
+        (
+            "+FluxAttn(FA-XA)".into(),
+            Policy::Flux { sa_mode: AttnMode::Xa, decode: DecodeMode::Dense },
+        ),
+        (
+            "+FluxAttn(FA-TA)".into(),
+            Policy::Flux { sa_mode: AttnMode::Ta, decode: DecodeMode::Dense },
+        ),
+        (
+            "+FluxAttn(FA-SSA)sd".into(),
+            Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Sparse },
+        ),
+    ])
+}
+
+/// Fig 1(a): accuracy vs progressive entropy-ranked sparsity.
+pub fn fig1a(engine: &mut Engine, n: usize, seq_len: usize) -> Result<()> {
+    let scores = entropy_scores(engine, seq_len)?;
+    let omegas = [0.0, 0.25, 0.5, 0.75, 1.0];
+    let tasks = [Task::PRe, Task::HotQA, Task::Gov, Task::Trec];
+    let mut out = Json::obj();
+    println!("== Fig 1(a): accuracy vs Omega_MSR (entropy-ranked static) ==");
+    println!("{:<10}{:>8}{:>8}{:>8}{:>8}", "omega", "pre", "hotqa", "gov", "trec");
+    for &omega in &omegas {
+        let modes = baselines::entropy_ranked_modes(&scores, omega, AttnMode::Ssa);
+        let policy = Policy::Static { modes, decode: DecodeMode::Dense };
+        let mut row = Json::obj();
+        let mut accs = vec![];
+        for task in tasks {
+            let r = run_task(engine, task, &policy, "balanced", n, seq_len, 11)?;
+            row.set(task.name(), Json::from(r.acc));
+            accs.push(r.acc);
+        }
+        println!(
+            "{:<10.2}{:>8.1}{:>8.1}{:>8.1}{:>8.1}",
+            omega, accs[0], accs[1], accs[2], accs[3]
+        );
+        out.set(&format!("{omega}"), row);
+    }
+    save_json("fig1a", &out)
+}
+
+/// Fig 1(b): decode speedup — head-level vs layer-level (GPU simulator,
+/// paper scale) + measured CPU ratio at repo scale.
+pub fn fig1b(engine: &mut Engine) -> Result<()> {
+    let cfg = GpuSimConfig::default();
+    println!("== Fig 1(b): decode speedup at Omega=0.5 (A800 simulator) ==");
+    println!("{:<12}{:>12}{:>12}", "context", "head-level", "layer-level");
+    let mut sim = Json::Arr(vec![]);
+    for ctx in [8_192usize, 16_384, 32_768, 65_536, 131_072, 262_144] {
+        let hl =
+            decode_speedup(&cfg, &SimPolicy::HeadLevel { sparse_frac: 0.5, window: 2048 }, ctx);
+        let ll =
+            decode_speedup(&cfg, &SimPolicy::LayerLevel { sparse_frac: 0.5, window: 2048 }, ctx);
+        println!("{:<12}{:>12.2}{:>12.2}", ctx, hl, ll);
+        sim.push(jobj! {"context" => ctx, "head_level" => hl, "layer_level" => ll});
+    }
+
+    println!("-- measured (CPU PJRT, layer-level sparse decode vs dense) --");
+    let mut measured = Json::Arr(vec![]);
+    let n_layers = engine.cfg().model.n_layers;
+    for seq in [256usize, 512, 1024, 2040] {
+        let dense = run_task(engine, Task::PRe, &Policy::Backbone, "balanced", 2, seq, 21)?;
+        let sparse = run_task(
+            engine,
+            Task::PRe,
+            &Policy::Static {
+                modes: vec![AttnMode::Ssa; n_layers],
+                decode: DecodeMode::Sparse,
+            },
+            "balanced",
+            2,
+            seq,
+            21,
+        )?;
+        let speedup = dense.decode_ms_per_tok / sparse.decode_ms_per_tok.max(1e-9);
+        println!(
+            "ctx {seq:>5}: dense {:.2} ms/tok, sparse {:.2} ms/tok, speedup {speedup:.2}x",
+            dense.decode_ms_per_tok, sparse.decode_ms_per_tok,
+        );
+        measured.push(jobj! {
+            "context" => seq, "dense_ms" => dense.decode_ms_per_tok,
+            "sparse_ms" => sparse.decode_ms_per_tok, "speedup" => speedup
+        });
+    }
+    let mut out = Json::obj();
+    out.set("simulated", sim);
+    out.set("measured", measured);
+    save_json("fig1b", &out)
+}
+
+/// Table 1: LongBench-E proxy, all methods.
+pub fn table1(engine: &mut Engine, n: usize, seq_len: usize) -> Result<()> {
+    let methods = method_set(engine, seq_len)?;
+    let mut rows: Vec<(String, Vec<TaskResult>)> = vec![];
+    for (label, policy) in &methods {
+        let mut results = vec![];
+        for task in LONGBENCH_TASKS {
+            results.push(run_task(engine, task, policy, "balanced", n, seq_len, 42)?);
+        }
+        eprintln!("  [table1] {label} done");
+        rows.push((label.clone(), results));
+    }
+    println!("{}", format_table("Table 1: LongBench-E proxy", &rows));
+    let mut j = Json::Arr(vec![]);
+    for (l, rs) in &rows {
+        let mut tasks = Json::Arr(vec![]);
+        for r in rs {
+            tasks.push(jobj! {"task" => r.task.name(), "acc" => r.acc, "omsr" => r.omsr});
+        }
+        let mut o = Json::obj();
+        o.set("method", Json::from(l.as_str()));
+        o.set("tasks", tasks);
+        j.push(o);
+    }
+    save_json("table1", &j)
+}
+
+/// Table 2: RULER ladder + LongBench-v2 + math proxies.
+pub fn table2(engine: &mut Engine, n: usize) -> Result<()> {
+    let lengths = [64usize, 96, 128, 192, 256, 512];
+    let methods = method_set(engine, 512)?;
+    println!("== Table 2: RULER ladder / LongBench-v2 / Math ==");
+    print!("{:<22}", "method");
+    for l in lengths {
+        print!("{l:>7}");
+    }
+    println!("{:>8}{:>8}{:>8}{:>8}", "lbv2-e", "lbv2-h", "gsm8k", "aime24");
+    let mut j = Json::Arr(vec![]);
+    for (label, policy) in &methods {
+        print!("{label:<22}");
+        let mut ruler = Json::Arr(vec![]);
+        for &len in &lengths {
+            let r = run_task(engine, Task::Ruler, policy, "balanced", n, len, 77)?;
+            print!("{:>7.1}", r.acc);
+            ruler.push(jobj! {"len" => len, "acc" => r.acc});
+        }
+        let e = run_task(engine, Task::Lbv2Easy, policy, "balanced", n, 256, 78)?;
+        let h = run_task(engine, Task::Lbv2Hard, policy, "balanced", n, 256, 79)?;
+        let g = run_task(engine, Task::Gsm, policy, "balanced", n, 128, 80)?;
+        let a = run_task(engine, Task::Aime, policy, "balanced", n, 128, 81)?;
+        println!("{:>8.1}{:>8.1}{:>8.1}{:>8.1}", e.acc, h.acc, g.acc, a.acc);
+        let mut o = jobj! {
+            "method" => label.as_str(), "lbv2_easy" => e.acc, "lbv2_hard" => h.acc,
+            "gsm" => g.acc, "aime" => a.acc
+        };
+        o.set("ruler", ruler);
+        j.push(o);
+    }
+    save_json("table2", &j)
+}
+
+/// Fig 3: prefill end-to-end + decode latency vs context length.
+pub fn fig3(engine: &mut Engine) -> Result<()> {
+    println!("== Fig 3(a): prefill latency vs context (end-to-end) ==");
+    let n_layers = engine.cfg().model.n_layers;
+    let policies: Vec<(String, Policy)> = vec![
+        ("dense".into(), Policy::Backbone),
+        ("flux-ta".into(), Policy::Flux { sa_mode: AttnMode::Ta, decode: DecodeMode::Dense }),
+        (
+            "all-ssa".into(),
+            Policy::Static { modes: vec![AttnMode::Ssa; n_layers], decode: DecodeMode::Dense },
+        ),
+        (
+            "all-ta".into(),
+            Policy::Static { modes: vec![AttnMode::Ta; n_layers], decode: DecodeMode::Dense },
+        ),
+    ];
+    let mut j = Json::Arr(vec![]);
+    for seq in [128usize, 256, 512, 1024, 2040] {
+        let mut row = jobj! {"context" => seq};
+        let mut dense_ms = 0.0;
+        for (label, policy) in &policies {
+            let r = run_task(engine, Task::PRe, policy, "balanced", 2, seq, 33)?;
+            if label == "dense" {
+                dense_ms = r.prefill_ms;
+            }
+            let speedup = dense_ms / r.prefill_ms.max(1e-9);
+            println!(
+                "ctx {seq:>5} {label:<10} prefill {:>9.1} ms  speedup {speedup:.2}x",
+                r.prefill_ms
+            );
+            row.set(label, jobj! {"ms" => r.prefill_ms, "speedup" => speedup});
+        }
+        j.push(row);
+    }
+    save_json("fig3a", &j)?;
+
+    println!("== Fig 3(b): decode kernel latency vs KV length ==");
+    let mut j = Json::Arr(vec![]);
+    for seq in [256usize, 512, 1024, 2040] {
+        let dense = run_task(engine, Task::PRe, &Policy::Backbone, "balanced", 1, seq, 61)?;
+        let sp = run_task(
+            engine,
+            Task::PRe,
+            &Policy::Static {
+                modes: vec![AttnMode::Ssa; n_layers],
+                decode: DecodeMode::Sparse,
+            },
+            "balanced",
+            1,
+            seq,
+            61,
+        )?;
+        let ratio = dense.decode_ms_per_tok / sp.decode_ms_per_tok.max(1e-9);
+        println!(
+            "kv {seq:>5}: dense {:.2} ms, sparse {:.2} ms, {ratio:.2}x",
+            dense.decode_ms_per_tok, sp.decode_ms_per_tok
+        );
+        j.push(jobj! {"kv" => seq, "dense_ms" => dense.decode_ms_per_tok,
+                      "sparse_ms" => sp.decode_ms_per_tok, "speedup" => ratio});
+    }
+    save_json("fig3b", &j)
+}
+
+/// Fig 4: layer x task routing activation heat map.
+pub fn fig4(engine: &mut Engine, n: usize, seq_len: usize) -> Result<()> {
+    let policy = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Dense };
+    let n_layers = engine.cfg().model.n_layers;
+    let tasks = [Task::Qasper, Task::HotQA, Task::Gov, Task::Trec, Task::PRe, Task::Lcc];
+    println!("== Fig 4: FA activation frequency per (task, layer) ==");
+    print!("{:<10}", "task");
+    for l in 0..n_layers {
+        print!("  L{l}");
+    }
+    println!();
+    let mut j = Json::obj();
+    for task in tasks {
+        let mut counts = vec![0usize; n_layers];
+        let mut rng = Rng::seed_from_u64(91 ^ task as u64);
+        for _ in 0..n {
+            let s = generate(task, &mut rng, seq_len);
+            let (id, report) = engine.prefill(&s.prompt, &policy, "balanced")?;
+            engine.release(id);
+            for (c, m) in counts.iter_mut().zip(&report.modes) {
+                *c += (*m == AttnMode::Fa) as usize;
+            }
+        }
+        print!("{:<10}", task.name());
+        let freqs: Vec<f64> = counts.iter().map(|&c| c as f64 / n as f64).collect();
+        for f in &freqs {
+            print!("{f:>4.1}");
+        }
+        println!();
+        j.set(task.name(), Json::from(freqs));
+    }
+    save_json("fig4", &j)
+}
+
+/// Fig 5 / Fig 8: evaluate router sweep variants (t-targets / pooling).
+pub fn sweep(
+    engine: &mut Engine,
+    variants: &[String],
+    n: usize,
+    seq_len: usize,
+    name: &str,
+) -> Result<()> {
+    let tasks = [Task::PRe, Task::HotQA, Task::Gov, Task::Trec];
+    println!("== {name}: performance + Omega_MSR per router variant ==");
+    let mut j = Json::Arr(vec![]);
+    for v in variants {
+        if engine.router(v).is_err() {
+            eprintln!("  (skipping missing router variant {v})");
+            continue;
+        }
+        let policy = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Dense };
+        let mut accs = Json::obj();
+        let mut mean = 0.0;
+        let mut omsr = 0.0;
+        for task in tasks {
+            let r = run_task(engine, task, &policy, v, n, seq_len, 55)?;
+            accs.set(task.name(), Json::from(r.acc));
+            mean += r.acc / tasks.len() as f64;
+            omsr += r.omsr / tasks.len() as f64;
+        }
+        println!("variant {v:<12} mean_acc {mean:>6.1}  omsr {omsr:.2}");
+        let mut o = jobj! {"variant" => v.as_str(), "mean" => mean, "omsr" => omsr};
+        o.set("accs", accs);
+        j.push(o);
+    }
+    save_json(name, &j)
+}
+
+/// Fig 9: router overhead vs sequence length (length invariance).
+pub fn fig9(engine: &mut Engine) -> Result<()> {
+    println!("== Fig 9: router overhead per layer vs context length ==");
+    let policy = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Dense };
+    let n_layers = engine.cfg().model.n_layers as f64;
+    let mut j = Json::Arr(vec![]);
+    for seq in [128usize, 256, 512, 1024, 2040] {
+        let mut rng = Rng::seed_from_u64(seq as u64);
+        let s = generate(Task::PRe, &mut rng, seq);
+        let mut total = 0u64;
+        let reps = 3;
+        for _ in 0..reps {
+            let (id, report) = engine.prefill(&s.prompt, &policy, "balanced")?;
+            engine.release(id);
+            total += report.router_us;
+        }
+        let per_layer_ms = total as f64 / reps as f64 / n_layers / 1e3;
+        println!("ctx {seq:>5}: {per_layer_ms:.4} ms/layer");
+        j.push(jobj! {"context" => seq, "ms_per_layer" => per_layer_ms});
+    }
+    save_json("fig9", &j)
+}
+
+/// Error-analysis transcripts (paper Figs 11-13 substitute).
+pub fn cases(engine: &mut Engine) -> Result<()> {
+    let tok = Tokenizer::new();
+    let mut rng = Rng::seed_from_u64(7);
+    println!("== Qualitative cases (paper Figs 11-13) ==");
+    let n_layers = engine.cfg().model.n_layers;
+    let mut j = Json::Arr(vec![]);
+    for task in [Task::Qasper, Task::HotQA, Task::PRe] {
+        let s = generate(task, &mut rng, 512);
+        let methods: Vec<(String, Policy)> = vec![
+            ("backbone".into(), Policy::Backbone),
+            (
+                "all-ssa(static)".into(),
+                Policy::Static { modes: vec![AttnMode::Ssa; n_layers], decode: DecodeMode::Dense },
+            ),
+            ("flux-ssa".into(), Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Dense }),
+        ];
+        println!(
+            "--- task {} | query ...{} | gold {}",
+            task.name(),
+            tok.decode(&s.prompt[s.prompt.len().saturating_sub(4)..]),
+            tok.decode(&s.answer)
+        );
+        let mut case = jobj! {
+            "task" => task.name(),
+            "query_tail" => tok.decode(&s.prompt[s.prompt.len().saturating_sub(8)..]),
+            "gold" => tok.decode(&s.answer)
+        };
+        for (label, policy) in methods {
+            let (gen, report) =
+                engine.generate(&s.prompt, &policy, "balanced", s.answer.len() + 1)?;
+            let correct = super::exact_match(&gen, &s.answer);
+            println!(
+                "  {label:<16} -> {:<18} {} (omsr {:.2})",
+                tok.decode(&gen),
+                if correct { "CORRECT" } else { "WRONG" },
+                report.omsr
+            );
+            case.set(&label, jobj! {"pred" => tok.decode(&gen), "correct" => correct});
+        }
+        j.push(case);
+    }
+    save_json("cases", &j)
+}
+
+/// Memory accounting table: KV bytes per policy (supports the paper's
+/// "KV cache reduction" claim in section 3.3).
+pub fn kv_memory(engine: &mut Engine, seq_len: usize) -> Result<()> {
+    println!("== KV memory per request at ctx {seq_len} ==");
+    let n_layers = engine.cfg().model.n_layers;
+    let mut j = Json::Arr(vec![]);
+    for (label, policy) in [
+        ("dense".to_string(), Policy::Backbone),
+        (
+            "flux-ssa-sd".to_string(),
+            Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Sparse },
+        ),
+        (
+            "all-ssa-sd".to_string(),
+            Policy::Static { modes: vec![AttnMode::Ssa; n_layers], decode: DecodeMode::Sparse },
+        ),
+    ] {
+        let r = run_task(engine, Task::PRe, &policy, "balanced", 2, seq_len, 17)?;
+        println!("{label:<14} {:>12.0} bytes", r.kv_bytes);
+        j.push(jobj! {"policy" => label, "kv_bytes" => r.kv_bytes});
+    }
+    save_json("kv_memory", &j)
+}
+
+/// Figs 6/7/10: summarize the python-side training trajectories
+/// (artifacts/curves/*.json) — LM loss, per-category sparsity (Omega)
+/// convergence, lambda dynamics, balanced-vs-unbalanced divergence, and
+/// the continued-training accuracy curve.
+pub fn curves(artifacts: &std::path::Path) -> Result<()> {
+    let dir = artifacts.join("curves");
+    let read = |name: &str| -> Option<Json> {
+        std::fs::read_to_string(dir.join(name))
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+    };
+
+    println!("== Fig 10: router training dynamics (balanced mix) ==");
+    if let Some(j) = read("router_balanced.json") {
+        if let Some(traj) = j.get("trajectory").and_then(Json::as_arr) {
+            let tail = |cat: &str, key: &str| -> Vec<f64> {
+                traj.iter()
+                    .filter(|e| e.get("cat").and_then(Json::as_str) == Some(cat))
+                    .filter_map(|e| e.get(key).and_then(Json::as_f64))
+                    .collect()
+            };
+            for cat in ["retr", "hol"] {
+                let sa = tail(cat, "sa_frac");
+                let lm = tail(cat, "lm_loss");
+                if sa.is_empty() {
+                    continue;
+                }
+                let last = &sa[sa.len().saturating_sub(8)..];
+                let sa_end = last.iter().sum::<f64>() / last.len() as f64;
+                println!(
+                    "  {cat:<5} batches={:<4} lm_loss {:.3} -> {:.3}   sa_frac -> {sa_end:.3}",
+                    sa.len(),
+                    lm.first().unwrap_or(&0.0),
+                    lm.last().unwrap_or(&0.0),
+                );
+            }
+            if let Some(last) = traj.last() {
+                println!(
+                    "  lambda1 retr {:.2} hol {:.2} | lambda2 retr {:.2} hol {:.2}",
+                    last.get("lam1_retr").and_then(Json::as_f64).unwrap_or(0.0),
+                    last.get("lam1_hol").and_then(Json::as_f64).unwrap_or(0.0),
+                    last.get("lam2_retr").and_then(Json::as_f64).unwrap_or(0.0),
+                    last.get("lam2_hol").and_then(Json::as_f64).unwrap_or(0.0),
+                );
+            }
+        }
+    } else {
+        println!("  (artifacts/curves/router_balanced.json missing)");
+    }
+
+    println!("== Fig 7: balanced vs unbalanced data mix ==");
+    for name in ["router_balanced.json", "router_unbalanced.json"] {
+        if let Some(j) = read(name) {
+            if let Some(traj) = j.get("trajectory").and_then(Json::as_arr) {
+                let sa = |cat: &str| -> f64 {
+                    let v: Vec<f64> = traj
+                        .iter()
+                        .rev()
+                        .filter(|e| e.get("cat").and_then(Json::as_str) == Some(cat))
+                        .take(8)
+                        .filter_map(|e| e.get("sa_frac").and_then(Json::as_f64))
+                        .collect();
+                    if v.is_empty() { f64::NAN } else { v.iter().sum::<f64>() / v.len() as f64 }
+                };
+                println!(
+                    "  {name:<26} final sa_frac: retr {:.3}  hol {:.3}  (divergence {:.3})",
+                    sa("retr"),
+                    sa("hol"),
+                    (sa("hol") - sa("retr")).abs()
+                );
+            }
+        } else {
+            println!("  ({name} missing)");
+        }
+    }
+
+    println!("== Fig 6: continued training with frozen router ==");
+    if let Some(j) = read("continued.json") {
+        if let Some(arr) = j.as_arr() {
+            for e in arr {
+                println!(
+                    "  step {:>4}  loss {:.3}  acc {:.3}",
+                    e.get("step").and_then(Json::as_usize).unwrap_or(0),
+                    e.get("loss").and_then(Json::as_f64).unwrap_or(0.0),
+                    e.get("acc").and_then(Json::as_f64).unwrap_or(0.0)
+                );
+            }
+        }
+    } else {
+        println!("  (artifacts/curves/continued.json missing — run `python -m compile.train --stage continued`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,160 @@
+//! Evaluation harness: task scoring + the experiment drivers that
+//! regenerate every table and figure of the paper (DESIGN.md section 5).
+//!
+//! Scoring contract (LOOM-Eval substitute): greedy generation, exact
+//! match of the expected answer tokens (all our proxy answers are short
+//! and deterministic), scaled to 0-100 like the paper's tables.
+
+pub mod experiments;
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+
+use crate::engine::Engine;
+use crate::router::Policy;
+use crate::tokenizer::EOS;
+use crate::workload::{generate, Sample, Task};
+
+/// Aggregated result of evaluating one (task, policy) cell.
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub task: Task,
+    pub n: usize,
+    pub acc: f64,
+    pub omsr: f64,
+    pub prefill_ms: f64,
+    pub decode_ms_per_tok: f64,
+    pub kv_bytes: f64,
+}
+
+/// Exact-match score of a generation against the expected answer.
+/// The generation may legitimately continue past the answer (EOS or
+/// padding filler); only the leading `answer.len()` tokens count.
+pub fn exact_match(generated: &[u32], answer: &[u32]) -> bool {
+    generated.len() >= answer.len() && &generated[..answer.len()] == answer
+}
+
+/// Token-level F1 (multi-token answers; reported for completeness).
+pub fn token_f1(generated: &[u32], answer: &[u32]) -> f64 {
+    if answer.is_empty() {
+        return 0.0;
+    }
+    let gen: Vec<u32> = generated.iter().copied().filter(|&t| t != EOS).collect();
+    if gen.is_empty() {
+        return 0.0;
+    }
+    let mut hits = 0usize;
+    let mut pool = answer.to_vec();
+    for g in &gen {
+        if let Some(i) = pool.iter().position(|a| a == g) {
+            pool.remove(i);
+            hits += 1;
+        }
+    }
+    let p = hits as f64 / gen.len() as f64;
+    let r = hits as f64 / answer.len() as f64;
+    if p + r == 0.0 {
+        0.0
+    } else {
+        2.0 * p * r / (p + r)
+    }
+}
+
+/// Evaluate `n` samples of `task` at `seq_len` under `policy`.
+pub fn run_task(
+    engine: &mut Engine,
+    task: Task,
+    policy: &Policy,
+    router: &str,
+    n: usize,
+    seq_len: usize,
+    seed: u64,
+) -> Result<TaskResult> {
+    let mut rng = Rng::seed_from_u64(seed ^ ((task as u64) << 32) ^ seq_len as u64);
+    let mut hits = 0usize;
+    let mut omsr_sum = 0.0;
+    let mut prefill_us = 0u64;
+    let mut decode_us = 0u64;
+    let mut decode_toks = 0usize;
+    let mut kv_bytes = 0.0;
+    for _ in 0..n {
+        let Sample { prompt, answer, .. } = generate(task, &mut rng, seq_len);
+        let max_new = answer.len() + 1;
+        let (id, report) = engine.prefill(&prompt, policy, router)?;
+        let mut gen = vec![report.first_token];
+        let t0 = std::time::Instant::now();
+        while gen.len() < max_new && *gen.last().unwrap() != EOS {
+            gen.push(engine.decode_step(id)?);
+        }
+        decode_us += t0.elapsed().as_micros() as u64;
+        decode_toks += gen.len().saturating_sub(1);
+        engine.release(id);
+        hits += exact_match(&gen, &answer) as usize;
+        omsr_sum += report.omsr;
+        prefill_us += report.total_us;
+        kv_bytes += report.kv_bytes as f64;
+    }
+    Ok(TaskResult {
+        task,
+        n,
+        acc: 100.0 * hits as f64 / n as f64,
+        omsr: omsr_sum / n as f64,
+        prefill_ms: prefill_us as f64 / 1e3 / n as f64,
+        decode_ms_per_tok: if decode_toks > 0 {
+            decode_us as f64 / 1e3 / decode_toks as f64
+        } else {
+            0.0
+        },
+        kv_bytes: kv_bytes / n as f64,
+    })
+}
+
+/// Pretty one-row-per-task table, paper style.
+pub fn format_table(title: &str, rows: &[(String, Vec<TaskResult>)]) -> String {
+    let mut out = format!("== {title} ==\n");
+    if let Some((_, first)) = rows.first() {
+        out.push_str(&format!("{:<22}", "method"));
+        for r in first {
+            out.push_str(&format!("{:>9}", r.task.name()));
+        }
+        out.push_str(&format!("{:>8}{:>7}\n", "avg", "omsr"));
+    }
+    for (label, results) in rows {
+        out.push_str(&format!("{label:<22}"));
+        let mut sum = 0.0;
+        let mut osum = 0.0;
+        for r in results {
+            out.push_str(&format!("{:>9.2}", r.acc));
+            sum += r.acc;
+            osum += r.omsr;
+        }
+        let n = results.len() as f64;
+        out.push_str(&format!("{:>8.2}{:>7.2}\n", sum / n, osum / n));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_match_semantics() {
+        assert!(exact_match(&[5, 2], &[5]));
+        assert!(exact_match(&[5, 9, 9], &[5, 9]));
+        assert!(!exact_match(&[9], &[5]));
+        assert!(!exact_match(&[], &[5]));
+    }
+
+    #[test]
+    fn f1_bounds() {
+        // use content-range ids (2 == EOS is filtered from generations)
+        assert_eq!(token_f1(&[41, 42, 43], &[41, 42, 43]), 1.0);
+        assert_eq!(token_f1(&[70, 80], &[41, 42]), 0.0);
+        let f = token_f1(&[41, 99], &[41, 42]);
+        assert!(f > 0.0 && f < 1.0);
+        // EOS in the generation is ignored, not counted as a miss
+        assert_eq!(token_f1(&[41, 2], &[41]), 1.0);
+    }
+}

@@ -1,0 +1,167 @@
+//! A800 decode-latency simulator: reproduces the head-level
+//! synchronization long-tail of paper section 2.3 / Fig 1(b).
+//!
+//! Model (memory-bandwidth-bound decode, batch 1, BF16):
+//!
+//! * Each attention layer launches one thread block per head; head `h`
+//!   must stream `bytes(h) = 2 * kv_len(h) * head_dim * 2B` of KV from
+//!   HBM.
+//! * Aggregate HBM bandwidth is `BW_TOTAL`; a single thread block can
+//!   sustain at most `BW_TOTAL / n_heads_slots` (limited by per-SM
+//!   outstanding-request capacity) — this is what creates the long
+//!   tail: a lone retrieval head cannot soak the whole bus.
+//! * Layer latency = max(sum(bytes)/BW_TOTAL, max_h bytes(h)/BW_BLOCK)
+//!   + kernel-launch/sync overhead. Layers run sequentially.
+//!
+//! Calibration constants follow the A800-80G public spec (1935 GB/s
+//! HBM2e, 108 SMs); absolute numbers are not the claim — the *shape*
+//! (head-level ~= dense, layer-level ~ proportional) is (DESIGN.md §2).
+
+/// Simulator configuration.
+#[derive(Debug, Clone)]
+pub struct GpuSimConfig {
+    /// aggregate HBM bandwidth, bytes/sec
+    pub hbm_bw: f64,
+    /// fraction of aggregate bandwidth one thread block can sustain
+    pub per_block_bw_frac: f64,
+    /// fixed per-layer kernel launch + barrier cost, seconds
+    pub layer_overhead_s: f64,
+    /// bytes per KV element (BF16)
+    pub dtype_bytes: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_layers: usize,
+}
+
+impl Default for GpuSimConfig {
+    fn default() -> Self {
+        Self {
+            hbm_bw: 1.935e12,            // A800-80G HBM2e
+            // one decode-attention thread block pins a few SMs' worth of
+            // outstanding HBM loads (~4.5 of 108 SMs): a lone retrieval
+            // head cannot soak the whole bus, which is exactly the
+            // synchronization long-tail of paper section 2.3
+            per_block_bw_frac: 1.0 / 24.0,
+            layer_overhead_s: 4e-6, // launch + __syncthreads tail
+            dtype_bytes: 2,
+            n_heads: 32,
+            head_dim: 128,
+            n_layers: 32,
+        }
+    }
+}
+
+/// Per-layer sparsity assignment for the simulator.
+#[derive(Debug, Clone)]
+pub enum SimPolicy {
+    /// all heads in all layers see the full context
+    Dense,
+    /// head-level: in every layer, `sparse_frac` of heads use the
+    /// sink+local window, the rest keep full context (Elastic-Attention
+    /// -style allocation)
+    HeadLevel { sparse_frac: f64, window: usize },
+    /// layer-level: `sparse_frac` of layers use the window for *all*
+    /// heads (FluxAttention)
+    LayerLevel { sparse_frac: f64, window: usize },
+}
+
+/// Simulated decode latency for one token at `context_len`.
+pub fn decode_latency_s(cfg: &GpuSimConfig, policy: &SimPolicy, context_len: usize) -> f64 {
+    let bytes_per_tok = 2.0 * cfg.head_dim as f64 * cfg.dtype_bytes as f64;
+    let per_block_bw = cfg.hbm_bw * cfg.per_block_bw_frac;
+    let layer_time = |head_lens: &[usize]| -> f64 {
+        let total_bytes: f64 = head_lens.iter().map(|&l| l as f64 * bytes_per_tok).sum();
+        let max_head_bytes = head_lens
+            .iter()
+            .map(|&l| l as f64 * bytes_per_tok)
+            .fold(0.0, f64::max);
+        (total_bytes / cfg.hbm_bw).max(max_head_bytes / per_block_bw) + cfg.layer_overhead_s
+    };
+
+    let mut total = 0.0;
+    for layer in 0..cfg.n_layers {
+        let lens: Vec<usize> = match policy {
+            SimPolicy::Dense => vec![context_len; cfg.n_heads],
+            SimPolicy::HeadLevel { sparse_frac, window } => {
+                let n_sparse = (cfg.n_heads as f64 * sparse_frac).round() as usize;
+                (0..cfg.n_heads)
+                    .map(|h| if h < n_sparse { (*window).min(context_len) } else { context_len })
+                    .collect()
+            }
+            SimPolicy::LayerLevel { sparse_frac, window } => {
+                let n_sparse_layers = (cfg.n_layers as f64 * sparse_frac).round() as usize;
+                let len = if layer < n_sparse_layers {
+                    (*window).min(context_len)
+                } else {
+                    context_len
+                };
+                vec![len; cfg.n_heads]
+            }
+        };
+        total += layer_time(&lens);
+    }
+    total
+}
+
+/// Speedup of `policy` over dense decode at `context_len`.
+pub fn decode_speedup(cfg: &GpuSimConfig, policy: &SimPolicy, context_len: usize) -> f64 {
+    decode_latency_s(cfg, &SimPolicy::Dense, context_len)
+        / decode_latency_s(cfg, policy, context_len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GpuSimConfig {
+        GpuSimConfig::default()
+    }
+
+    #[test]
+    fn dense_latency_grows_with_context() {
+        let c = cfg();
+        let l1 = decode_latency_s(&c, &SimPolicy::Dense, 8_192);
+        let l2 = decode_latency_s(&c, &SimPolicy::Dense, 262_144);
+        assert!(l2 > l1 * 10.0);
+    }
+
+    #[test]
+    fn head_level_speedup_is_marginal() {
+        // paper Fig 1(b): head-level sparsity yields only marginal
+        // wall-clock gains because retrieval heads dominate (long tail)
+        let c = cfg();
+        let hl = SimPolicy::HeadLevel { sparse_frac: 0.5, window: 2048 };
+        let s = decode_speedup(&c, &hl, 262_144);
+        assert!(s < 1.5, "head-level speedup should be marginal, got {s:.2}");
+    }
+
+    #[test]
+    fn layer_level_speedup_is_proportional() {
+        let c = cfg();
+        let ll = SimPolicy::LayerLevel { sparse_frac: 0.5, window: 2048 };
+        let s = decode_speedup(&c, &ll, 262_144);
+        assert!(s > 1.8, "layer-level speedup should approach 2x, got {s:.2}");
+    }
+
+    #[test]
+    fn layer_beats_head_at_matched_omega() {
+        let c = cfg();
+        for ctx in [16_384usize, 65_536, 262_144] {
+            let hl = decode_speedup(&c, &SimPolicy::HeadLevel { sparse_frac: 0.5, window: 2048 }, ctx);
+            let ll = decode_speedup(&c, &SimPolicy::LayerLevel { sparse_frac: 0.5, window: 2048 }, ctx);
+            assert!(ll > hl, "ctx {ctx}: layer {ll:.2} <= head {hl:.2}");
+        }
+    }
+
+    #[test]
+    fn full_sparsity_saturates_at_overhead() {
+        let c = cfg();
+        let ll = SimPolicy::LayerLevel { sparse_frac: 1.0, window: 2048 };
+        let lat = decode_latency_s(&c, &ll, 1_048_576);
+        // all layers windowed: latency should be microseconds-scale,
+        // bounded by overhead, independent of the million-token context
+        assert!(lat < c.n_layers as f64 * (c.layer_overhead_s + 1e-4));
+        let lat_small = decode_latency_s(&c, &ll, 4_096);
+        assert!((lat - lat_small).abs() / lat < 0.05);
+    }
+}

@@ -1,0 +1,419 @@
+//! KV-cache manager: per-layer full caches (bucketed growth) and sparse
+//! sink+local ring buffers (the paper's sparse-decode configuration,
+//! section 3.3).
+//!
+//! Layout contract with the AOT decode executables:
+//!   * full cache  -> `(H, K_bucket, D)` row-major, `valid_len` slots
+//!     filled from the front;
+//!   * sparse cache -> `(H, SA_BUF, D)` with the sink tokens first and
+//!     the local window following in temporal order. Attention is a
+//!     set operation (RoPE was applied at append time), so buffer order
+//!     only has to be consistent, not positional.
+
+use crate::runtime::HostTensor;
+
+/// Full-history KV cache for one layer (FA / retrieval layers).
+#[derive(Debug, Clone)]
+pub struct FullCache {
+    n_heads: usize,
+    head_dim: usize,
+    capacity: usize, // current bucket
+    len: usize,
+    k: Vec<f32>, // (H, capacity, D)
+    v: Vec<f32>,
+}
+
+impl FullCache {
+    pub fn new(n_heads: usize, head_dim: usize, capacity: usize) -> Self {
+        Self {
+            n_heads,
+            head_dim,
+            capacity,
+            len: 0,
+            k: vec![0.0; n_heads * capacity * head_dim],
+            v: vec![0.0; n_heads * capacity * head_dim],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// KV bytes currently held (memory accounting for Table 1 notes).
+    pub fn bytes(&self) -> usize {
+        2 * self.n_heads * self.capacity * self.head_dim * 4
+    }
+
+    /// Bulk-load prefill outputs `k`, `v` shaped `(H, S_bucket, D)` of
+    /// which the first `valid` columns are real tokens.
+    pub fn load_prefill(&mut self, k: &HostTensor, v: &HostTensor, valid: usize) {
+        let (h, d) = (self.n_heads, self.head_dim);
+        assert_eq!(k.shape.len(), 3);
+        assert_eq!(k.shape[0], h);
+        assert_eq!(k.shape[2], d);
+        let s_in = k.shape[1];
+        assert!(valid <= s_in);
+        self.ensure_capacity(valid);
+        for hh in 0..h {
+            for t in 0..valid {
+                let src = (hh * s_in + t) * d;
+                let dst = (hh * self.capacity + t) * d;
+                self.k[dst..dst + d].copy_from_slice(&k.data[src..src + d]);
+                self.v[dst..dst + d].copy_from_slice(&v.data[src..src + d]);
+            }
+        }
+        self.len = valid;
+    }
+
+    /// Append one token's `(H, D)` k/v.
+    pub fn append(&mut self, k_new: &[f32], v_new: &[f32]) {
+        let (h, d) = (self.n_heads, self.head_dim);
+        assert_eq!(k_new.len(), h * d);
+        self.ensure_capacity(self.len + 1);
+        for hh in 0..h {
+            let dst = (hh * self.capacity + self.len) * d;
+            self.k[dst..dst + d].copy_from_slice(&k_new[hh * d..(hh + 1) * d]);
+            self.v[dst..dst + d].copy_from_slice(&v_new[hh * d..(hh + 1) * d]);
+        }
+        self.len += 1;
+    }
+
+    fn ensure_capacity(&mut self, need: usize) {
+        if need <= self.capacity {
+            return;
+        }
+        let mut cap = self.capacity.max(1);
+        while cap < need {
+            cap *= 2;
+        }
+        let (h, d) = (self.n_heads, self.head_dim);
+        let mut k = vec![0.0; h * cap * d];
+        let mut v = vec![0.0; h * cap * d];
+        for hh in 0..h {
+            for t in 0..self.len {
+                let src = (hh * self.capacity + t) * d;
+                let dst = (hh * cap + t) * d;
+                k[dst..dst + d].copy_from_slice(&self.k[src..src + d]);
+                v[dst..dst + d].copy_from_slice(&self.v[src..src + d]);
+            }
+        }
+        self.k = k;
+        self.v = v;
+        self.capacity = cap;
+    }
+
+    /// Fast path for the decode hot loop: when the cache's internal
+    /// capacity already equals the requested bucket (the common case —
+    /// both are powers of two grown in lockstep), build the XLA
+    /// literals straight from the internal buffers, saving one full
+    /// re-layout copy per layer per token (see EXPERIMENTS.md §Perf).
+    pub fn as_literals(&self, bucket: usize) -> anyhow::Result<(xla::Literal, xla::Literal)> {
+        let (h, d) = (self.n_heads, self.head_dim);
+        let dims = [h as i64, bucket as i64, d as i64];
+        if bucket == self.capacity {
+            return Ok((
+                xla::Literal::vec1(&self.k).reshape(&dims)?,
+                xla::Literal::vec1(&self.v).reshape(&dims)?,
+            ));
+        }
+        let (kt, vt) = self.as_tensors(bucket);
+        Ok((kt.to_literal()?, vt.to_literal()?))
+    }
+
+    /// Re-bucket into `(H, bucket, D)` tensors for the decode executable.
+    pub fn as_tensors(&self, bucket: usize) -> (HostTensor, HostTensor) {
+        assert!(bucket >= self.len, "bucket {bucket} < len {}", self.len);
+        let (h, d) = (self.n_heads, self.head_dim);
+        let mut k = vec![0.0; h * bucket * d];
+        let mut v = vec![0.0; h * bucket * d];
+        for hh in 0..h {
+            let src0 = hh * self.capacity * d;
+            let dst0 = hh * bucket * d;
+            let n = self.len * d;
+            k[dst0..dst0 + n].copy_from_slice(&self.k[src0..src0 + n]);
+            v[dst0..dst0 + n].copy_from_slice(&self.v[src0..src0 + n]);
+        }
+        (
+            HostTensor::new(vec![h, bucket, d], k),
+            HostTensor::new(vec![h, bucket, d], v),
+        )
+    }
+}
+
+/// Sink + local-window ring cache for sparse-decode layers. Holds at
+/// most `sink + local + 1` tokens; the full history is never retained —
+/// this is the paper's KV-memory reduction.
+#[derive(Debug, Clone)]
+pub struct SparseCache {
+    n_heads: usize,
+    head_dim: usize,
+    sink: usize,
+    local: usize,
+    buf: usize,
+    /// tokens stored: first `sink_len` are sink slots, the rest is the
+    /// window oldest->newest; each entry is an (H*D) k vec + v vec
+    sink_k: Vec<f32>,
+    sink_v: Vec<f32>,
+    sink_len: usize,
+    win_k: std::collections::VecDeque<Vec<f32>>,
+    win_v: std::collections::VecDeque<Vec<f32>>,
+    total_seen: usize,
+}
+
+impl SparseCache {
+    pub fn new(n_heads: usize, head_dim: usize, sink: usize, local: usize, buf: usize) -> Self {
+        assert!(buf >= sink + local + 1);
+        Self {
+            n_heads,
+            head_dim,
+            sink,
+            local,
+            buf,
+            sink_k: vec![0.0; sink * n_heads * head_dim],
+            sink_v: vec![0.0; sink * n_heads * head_dim],
+            sink_len: 0,
+            win_k: Default::default(),
+            win_v: Default::default(),
+            total_seen: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sink_len + self.win_k.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn total_seen(&self) -> usize {
+        self.total_seen
+    }
+
+    pub fn bytes(&self) -> usize {
+        2 * self.buf * self.n_heads * self.head_dim * 4
+    }
+
+    /// Load from prefill outputs, keeping only sink + trailing window —
+    /// the "fully bypassing full historical KV storage" step.
+    pub fn load_prefill(&mut self, k: &HostTensor, v: &HostTensor, valid: usize) {
+        let (h, d) = (self.n_heads, self.head_dim);
+        let s_in = k.shape[1];
+        assert!(valid <= s_in);
+        let hd = h * d;
+        let grab = |src: &HostTensor, t: usize| -> Vec<f32> {
+            let mut out = vec![0.0; hd];
+            for hh in 0..h {
+                let s0 = (hh * s_in + t) * d;
+                out[hh * d..(hh + 1) * d].copy_from_slice(&src.data[s0..s0 + d]);
+            }
+            out
+        };
+        self.sink_len = valid.min(self.sink);
+        for t in 0..self.sink_len {
+            let kk = grab(k, t);
+            let vv = grab(v, t);
+            self.sink_k[t * hd..(t + 1) * hd].copy_from_slice(&kk);
+            self.sink_v[t * hd..(t + 1) * hd].copy_from_slice(&vv);
+        }
+        self.win_k.clear();
+        self.win_v.clear();
+        let win_start = valid.saturating_sub(self.local).max(self.sink_len);
+        for t in win_start..valid {
+            self.win_k.push_back(grab(k, t));
+            self.win_v.push_back(grab(v, t));
+        }
+        self.total_seen = valid;
+    }
+
+    /// Append one decoded token, evicting the oldest window entry when
+    /// the window exceeds `local`.
+    pub fn append(&mut self, k_new: &[f32], v_new: &[f32]) {
+        let hd = self.n_heads * self.head_dim;
+        assert_eq!(k_new.len(), hd);
+        if self.sink_len < self.sink {
+            let t = self.sink_len;
+            self.sink_k[t * hd..(t + 1) * hd].copy_from_slice(k_new);
+            self.sink_v[t * hd..(t + 1) * hd].copy_from_slice(v_new);
+            self.sink_len += 1;
+        } else {
+            self.win_k.push_back(k_new.to_vec());
+            self.win_v.push_back(v_new.to_vec());
+            if self.win_k.len() > self.local {
+                self.win_k.pop_front();
+                self.win_v.pop_front();
+            }
+        }
+        self.total_seen += 1;
+    }
+
+    /// Compact into the `(H, SA_BUF, D)` tensor pair + valid length for
+    /// the sparse-decode executable.
+    pub fn as_tensors(&self) -> (HostTensor, HostTensor, usize) {
+        let (h, d) = (self.n_heads, self.head_dim);
+        let hd = h * d;
+        let valid = self.len();
+        let mut k = vec![0.0; h * self.buf * d];
+        let mut v = vec![0.0; h * self.buf * d];
+        let write = |slot: usize, kk: &[f32], vv: &[f32], k: &mut [f32], v: &mut [f32]| {
+            for hh in 0..h {
+                let dst = (hh * self.buf + slot) * d;
+                k[dst..dst + d].copy_from_slice(&kk[hh * d..(hh + 1) * d]);
+                v[dst..dst + d].copy_from_slice(&vv[hh * d..(hh + 1) * d]);
+            }
+        };
+        for t in 0..self.sink_len {
+            let kk = &self.sink_k[t * hd..(t + 1) * hd];
+            let vv = &self.sink_v[t * hd..(t + 1) * hd];
+            write(t, kk, vv, &mut k, &mut v);
+        }
+        for (i, (kk, vv)) in self.win_k.iter().zip(&self.win_v).enumerate() {
+            write(self.sink_len + i, kk, vv, &mut k, &mut v);
+        }
+        (
+            HostTensor::new(vec![h, self.buf, d], k),
+            HostTensor::new(vec![h, self.buf, d], v),
+            valid,
+        )
+    }
+}
+
+/// Per-layer cache: the routing decision selects the layout.
+#[derive(Debug, Clone)]
+pub enum LayerCache {
+    Full(FullCache),
+    Sparse(SparseCache),
+}
+
+impl LayerCache {
+    pub fn len(&self) -> usize {
+        match self {
+            LayerCache::Full(c) => c.len(),
+            LayerCache::Sparse(c) => c.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            LayerCache::Full(c) => c.bytes(),
+            LayerCache::Sparse(c) => c.bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ht(h: usize, s: usize, d: usize, f: impl Fn(usize, usize, usize) -> f32) -> HostTensor {
+        let mut data = vec![0.0; h * s * d];
+        for hh in 0..h {
+            for t in 0..s {
+                for dd in 0..d {
+                    data[(hh * s + t) * d + dd] = f(hh, t, dd);
+                }
+            }
+        }
+        HostTensor::new(vec![h, s, d], data)
+    }
+
+    #[test]
+    fn full_cache_prefill_then_append() {
+        let mut c = FullCache::new(2, 4, 8);
+        let k = ht(2, 8, 4, |h, t, d| (h * 100 + t * 10 + d) as f32);
+        let v = ht(2, 8, 4, |h, t, d| -((h * 100 + t * 10 + d) as f32));
+        c.load_prefill(&k, &v, 5);
+        assert_eq!(c.len(), 5);
+        c.append(&[1.0; 8], &[2.0; 8]);
+        assert_eq!(c.len(), 6);
+        let (kt, _vt) = c.as_tensors(8);
+        // head 0, token 3, dim 2 == 32
+        assert_eq!(kt.data[(0 * 8 + 3) * 4 + 2], 32.0);
+        // appended token at slot 5
+        assert_eq!(kt.data[(0 * 8 + 5) * 4], 1.0);
+        // padding after valid
+        assert_eq!(kt.data[(0 * 8 + 6) * 4], 0.0);
+    }
+
+    #[test]
+    fn full_cache_grows_buckets() {
+        let mut c = FullCache::new(1, 2, 4);
+        for i in 0..10 {
+            c.append(&[i as f32, 0.0], &[0.0, i as f32]);
+        }
+        assert_eq!(c.len(), 10);
+        assert!(c.capacity() >= 10);
+        let (kt, vt) = c.as_tensors(16);
+        for i in 0..10 {
+            assert_eq!(kt.data[i * 2], i as f32);
+            assert_eq!(vt.data[i * 2 + 1], i as f32);
+        }
+    }
+
+    #[test]
+    fn sparse_cache_keeps_sink_and_window_only() {
+        let sink = 2;
+        let local = 3;
+        let mut c = SparseCache::new(1, 1, sink, local, 8);
+        let k = ht(1, 16, 1, |_, t, _| t as f32);
+        let v = ht(1, 16, 1, |_, t, _| t as f32 + 0.5);
+        c.load_prefill(&k, &v, 10);
+        // sink = tokens 0,1; window = tokens 7,8,9
+        assert_eq!(c.len(), 5);
+        assert_eq!(c.total_seen(), 10);
+        let (kt, _, valid) = c.as_tensors();
+        assert_eq!(valid, 5);
+        assert_eq!(&kt.data[..5], &[0.0, 1.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn sparse_cache_window_eviction() {
+        let mut c = SparseCache::new(1, 1, 1, 2, 4);
+        for i in 0..6 {
+            c.append(&[i as f32], &[i as f32]);
+        }
+        // sink token 0; window = last two tokens (4, 5)
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.total_seen(), 6);
+        let (kt, _, valid) = c.as_tensors();
+        assert_eq!(valid, 3);
+        assert_eq!(&kt.data[..3], &[0.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn sparse_cache_bounded_memory() {
+        let mut c = SparseCache::new(4, 32, 16, 128, 192);
+        let bytes0 = c.bytes();
+        for _ in 0..1000 {
+            c.append(&vec![0.0; 128], &vec![0.0; 128]);
+        }
+        assert_eq!(c.bytes(), bytes0, "sparse cache must be O(1) memory");
+        assert!(c.len() <= 16 + 128);
+    }
+
+    #[test]
+    fn sparse_prefill_shorter_than_sink() {
+        let mut c = SparseCache::new(1, 1, 4, 4, 16);
+        let k = ht(1, 8, 1, |_, t, _| t as f32);
+        c.load_prefill(&k, &k.clone(), 3);
+        assert_eq!(c.len(), 3);
+        // appends continue filling the sink region first
+        c.append(&[99.0], &[99.0]);
+        assert_eq!(c.len(), 4);
+        let (kt, _, valid) = c.as_tensors();
+        assert_eq!(valid, 4);
+        assert_eq!(&kt.data[..4], &[0.0, 1.0, 2.0, 99.0]);
+    }
+}

@@ -1,0 +1,32 @@
+//! FluxAttention: a context-aware, layer-level hybrid-attention serving
+//! engine — reproduction of *Flux Attention: Context-Aware Hybrid Attention
+//! for Efficient LLMs Inference* (Qiu et al., 2026).
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the serving coordinator: request router,
+//!   continuous batcher, prefill/decode scheduler, KV-cache manager with
+//!   full and sparse (sink+local) layouts, the Layer Router integration,
+//!   baselines, a GPU decode-latency simulator, metrics and the eval
+//!   harness. Python never runs on the request path.
+//! * **L2/L1 (python/, build-time)** — the JAX model and Pallas kernels,
+//!   AOT-lowered to HLO-text artifacts loaded here via the PJRT C API.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod eval;
+pub mod gpu_sim;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod router;
+pub mod runtime;
+pub mod server;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+pub use config::MetaConfig;
+pub use engine::{Engine, EngineHandle};
+pub use router::{AttnMode, DecodeMode, Policy};

@@ -1,0 +1,248 @@
+//! `flux` — the FluxAttention serving CLI (hand-rolled argument parsing;
+//! no clap in the offline vendor set).
+//!
+//! Usage:
+//!   flux [--artifacts DIR] serve [--addr HOST:PORT]
+//!   flux [--artifacts DIR] generate [--task T] [--seq-len N]
+//!                                   [--policy P] [--router R] [--sparse-decode]
+//!   flux [--artifacts DIR] experiment <id> [--n N] [--seq-len N]
+//!        ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves all
+//!   flux [--artifacts DIR] bench-serve [--requests N] [--seq-len N]
+//!                                      [--rate R] [--policy P]
+//!   flux [--artifacts DIR] info
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use flux_attention::config::{MetaConfig, ServingConfig};
+use flux_attention::coordinator::{Coordinator, Request};
+use flux_attention::engine::{Engine, EngineHandle};
+use flux_attention::eval::experiments;
+use flux_attention::server;
+use flux_attention::tokenizer::Tokenizer;
+use flux_attention::util::rng::Rng;
+use flux_attention::workload::{self, Task};
+
+/// Trivial flag parser: --key value / --key (bool) / positionals.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = vec![];
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Self { positional, flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn parse_task(s: &str) -> Result<Task> {
+    Ok(match s {
+        "qasper" => Task::Qasper,
+        "mfen" | "mf-en" => Task::MFen,
+        "hotqa" => Task::HotQA,
+        "2wiki" | "wiki2" => Task::Wiki2,
+        "gov" => Task::Gov,
+        "mnews" | "m.news" => Task::MNews,
+        "trec" => Task::Trec,
+        "tqa" => Task::Tqa,
+        "sams" => Task::Sams,
+        "pcount" => Task::PCount,
+        "pre" => Task::PRe,
+        "rbp" | "rb-p" => Task::Rbp,
+        "lcc" => Task::Lcc,
+        "ruler" => Task::Ruler,
+        "lbv2e" => Task::Lbv2Easy,
+        "lbv2h" => Task::Lbv2Hard,
+        "gsm" | "gsm8k" => Task::Gsm,
+        "aime" | "aime24" => Task::Aime,
+        other => anyhow::bail!("unknown task {other}"),
+    })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+
+    match cmd {
+        "serve" => {
+            let cfg = MetaConfig::load(&artifacts)?;
+            let engine = EngineHandle::spawn(artifacts.clone())?;
+            let coord = Coordinator::start(engine, ServingConfig::default());
+            server::serve(coord, &args.get("addr", "127.0.0.1:7070"), cfg.model.n_layers)
+        }
+        "generate" => {
+            let mut engine = Engine::load(&artifacts)?;
+            let n_layers = engine.cfg().model.n_layers;
+            let pol = server::parse_policy(
+                &args.get("policy", "flux-ssa"),
+                args.has("sparse-decode"),
+                n_layers,
+            )?;
+            let tok = Tokenizer::new();
+            let mut rng = Rng::seed_from_u64(args.get_usize("seed", 0) as u64);
+            let task = parse_task(&args.get("task", "pre"))?;
+            let sample = workload::generate(task, &mut rng, args.get_usize("seq-len", 256));
+            let (gen, report) =
+                engine.generate(&sample.prompt, &pol, &args.get("router", "balanced"),
+                                sample.answer.len() + 1)?;
+            println!("task      : {}", task.name());
+            println!("prompt    : {} tokens (bucket {})", report.prompt_len, report.bucket);
+            println!(
+                "routing   : {:?}",
+                report.modes.iter().map(|m| m.name()).collect::<Vec<_>>()
+            );
+            println!("omsr      : {:.2}", report.omsr);
+            println!(
+                "prefill   : {:.1} ms (router {:.2} ms)",
+                report.total_us as f64 / 1e3,
+                report.router_us as f64 / 1e3
+            );
+            println!("generated : {}", tok.decode(&gen));
+            println!("expected  : {}", tok.decode(&sample.answer));
+            println!("correct   : {}", flux_attention::eval::exact_match(&gen, &sample.answer));
+            Ok(())
+        }
+        "experiment" => {
+            let id = args
+                .positional
+                .get(1)
+                .map(String::as_str)
+                .ok_or_else(|| anyhow::anyhow!("experiment id required"))?;
+            let mut engine = Engine::load(&artifacts)?;
+            run_experiment(
+                &mut engine,
+                id,
+                args.get_usize("n", 6),
+                args.get_usize("seq-len", 256),
+            )
+        }
+        "bench-serve" => {
+            let cfg = MetaConfig::load(&artifacts)?;
+            let n_layers = cfg.model.n_layers;
+            let engine = EngineHandle::spawn(artifacts.clone())?;
+            let coord = Coordinator::start(engine, ServingConfig::default());
+            let tasks = [Task::PRe, Task::Gov, Task::HotQA, Task::Trec];
+            let trace = workload::poisson_trace(
+                3,
+                &tasks,
+                args.get_usize("requests", 16),
+                args.get_usize("seq-len", 256),
+                args.get_f64("rate", 20.0),
+            );
+            let n_requests = trace.len();
+            let policy_str = args.get("policy", "flux-ssa");
+            let t0 = std::time::Instant::now();
+            let mut handles = vec![];
+            for entry in trace {
+                let coord = coord.clone();
+                let pol = server::parse_policy(&policy_str, false, n_layers)?;
+                handles.push(std::thread::spawn(move || {
+                    let wait = entry.arrival_ms.saturating_sub(t0.elapsed().as_millis() as u64);
+                    std::thread::sleep(std::time::Duration::from_millis(wait));
+                    coord.submit(Request {
+                        max_new: entry.sample.answer.len() + 1,
+                        prompt: entry.sample.prompt,
+                        policy: pol,
+                        router: "balanced".into(),
+                    })
+                }));
+            }
+            let mut ok = 0usize;
+            for h in handles {
+                if h.join().map(|r| r.is_ok()).unwrap_or(false) {
+                    ok += 1;
+                }
+            }
+            let elapsed = t0.elapsed().as_secs_f64();
+            println!("{}", coord.metrics.lock().unwrap().summary());
+            println!(
+                "completed {ok}/{n_requests} in {elapsed:.1}s ({:.2} req/s)",
+                ok as f64 / elapsed
+            );
+            Ok(())
+        }
+        "info" => {
+            let cfg = MetaConfig::load(&artifacts)?;
+            println!("{cfg:#?}");
+            Ok(())
+        }
+        _ => {
+            eprintln!("usage: flux [--artifacts DIR] <serve|generate|experiment|bench-serve|info> [flags]");
+            eprintln!("experiment ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves all");
+            Ok(())
+        }
+    }
+}
+
+fn run_experiment(engine: &mut Engine, id: &str, n: usize, seq_len: usize) -> Result<()> {
+    let t_sweep: Vec<String> =
+        ["t25", "t35", "balanced", "t55"].iter().map(|s| s.to_string()).collect();
+    let pool_sweep: Vec<String> = ["pool8", "balanced", "pool64", "pool128", "poolfull"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    match id {
+        "fig1a" => experiments::fig1a(engine, n, seq_len),
+        "fig1b" => experiments::fig1b(engine),
+        "table1" => experiments::table1(engine, n, seq_len),
+        "table2" => experiments::table2(engine, n),
+        "fig3" => experiments::fig3(engine),
+        "fig4" => experiments::fig4(engine, n, seq_len),
+        "fig5" => experiments::sweep(engine, &t_sweep, n, seq_len, "fig5"),
+        "fig8" => experiments::sweep(engine, &pool_sweep, n, seq_len, "fig8"),
+        "fig9" => experiments::fig9(engine),
+        "cases" => experiments::cases(engine),
+        "kvmem" => experiments::kv_memory(engine, seq_len),
+        "curves" => {
+            let dir = engine.cfg().artifacts_dir.clone();
+            experiments::curves(&dir)
+        }
+        "all" => {
+            for e in [
+                "fig1a", "fig1b", "table1", "table2", "fig3", "fig4", "fig5", "fig8", "fig9",
+                "cases", "kvmem", "curves",
+            ] {
+                println!("\n################ {e} ################");
+                run_experiment(engine, e, n, seq_len)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment {other}"),
+    }
+}

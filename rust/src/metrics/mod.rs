@@ -1,0 +1,138 @@
+//! Serving metrics: latency histograms, throughput counters, Omega_MSR
+//! accounting per task category.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Simple fixed-bucket latency histogram with exact percentile support
+/// (stores all samples; serving runs here are small enough).
+#[derive(Debug, Default, Clone)]
+pub struct LatencyHistogram {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+    }
+
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.samples_us.is_empty() {
+            return 0;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_unstable();
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn p50_us(&self) -> u64 {
+        self.percentile_us(50.0)
+    }
+
+    pub fn p95_us(&self) -> u64 {
+        self.percentile_us(95.0)
+    }
+
+    pub fn p99_us(&self) -> u64 {
+        self.percentile_us(99.0)
+    }
+}
+
+/// Aggregated serving metrics, exported by the coordinator.
+#[derive(Debug, Default, Clone)]
+pub struct ServingMetrics {
+    pub prefill: LatencyHistogram,
+    pub decode: LatencyHistogram,
+    pub ttft: LatencyHistogram,
+    pub e2e: LatencyHistogram,
+    pub router_overhead: LatencyHistogram,
+    pub requests_completed: u64,
+    pub requests_rejected: u64,
+    pub tokens_generated: u64,
+    pub prompt_tokens: u64,
+    /// Omega_MSR sum + count per policy label
+    omsr: HashMap<String, (f64, u64)>,
+}
+
+impl ServingMetrics {
+    pub fn record_omsr(&mut self, label: &str, omsr: f64) {
+        let e = self.omsr.entry(label.to_string()).or_insert((0.0, 0));
+        e.0 += omsr;
+        e.1 += 1;
+    }
+
+    pub fn mean_omsr(&self, label: &str) -> Option<f64> {
+        self.omsr.get(label).map(|(s, n)| s / *n as f64)
+    }
+
+    pub fn decode_throughput_tok_s(&self) -> f64 {
+        let total_us: u64 = self.decode.samples_us.iter().sum();
+        if total_us == 0 {
+            return 0.0;
+        }
+        self.decode.count() as f64 / (total_us as f64 / 1e6)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} rejected={} tokens={} ttft_p50={:.1}ms ttft_p95={:.1}ms \
+             decode_p50={:.2}ms decode_tput={:.1}tok/s",
+            self.requests_completed,
+            self.requests_rejected,
+            self.tokens_generated,
+            self.ttft.p50_us() as f64 / 1e3,
+            self.ttft.p95_us() as f64 / 1e3,
+            self.decode.p50_us() as f64 / 1e3,
+            self.decode_throughput_tok_s(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_are_order_free() {
+        let mut h = LatencyHistogram::default();
+        for v in [50u64, 10, 30, 20, 40] {
+            h.record_us(v);
+        }
+        assert_eq!(h.p50_us(), 30);
+        assert_eq!(h.percentile_us(0.0), 10);
+        assert_eq!(h.percentile_us(100.0), 50);
+        assert!((h.mean_us() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.p99_us(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn omsr_accounting() {
+        let mut m = ServingMetrics::default();
+        m.record_omsr("flux", 0.5);
+        m.record_omsr("flux", 0.3);
+        assert!((m.mean_omsr("flux").unwrap() - 0.4).abs() < 1e-9);
+        assert!(m.mean_omsr("other").is_none());
+    }
+}

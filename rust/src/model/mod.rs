@@ -1,0 +1,102 @@
+//! Model weights + the layer-by-layer execution engine primitives.
+//!
+//! Weights are loaded once from the AOT export and kept as XLA literals
+//! (one set per layer) so every executable call just borrows them —
+//! no per-call conversion on the hot path.
+
+use anyhow::Result;
+
+use crate::config::MetaConfig;
+use crate::runtime::{HostTensor, WeightStore};
+
+/// Per-layer backbone weights, pre-converted to literals in the
+/// argument order of the prefill/decode executables.
+pub struct LayerWeights {
+    pub norm1: xla::Literal,
+    pub wq: xla::Literal,
+    pub wk: xla::Literal,
+    pub wv: xla::Literal,
+    pub wo: xla::Literal,
+    pub norm2: xla::Literal,
+    pub w_ff1: xla::Literal,
+    pub w_ff2: xla::Literal,
+}
+
+/// All backbone weights.
+pub struct ModelWeights {
+    pub layers: Vec<LayerWeights>,
+    pub norm_f: xla::Literal,
+    pub lm_head: xla::Literal,
+    /// host-side embedding table (V, d) — lookup happens in rust
+    pub embed: HostTensor,
+    pub cfg: MetaConfig,
+}
+
+impl ModelWeights {
+    pub fn load(cfg: &MetaConfig, ws: &WeightStore) -> Result<Self> {
+        let mut layers = Vec::with_capacity(cfg.model.n_layers);
+        for i in 0..cfg.model.n_layers {
+            layers.push(LayerWeights {
+                norm1: ws.layer_slice("layers.norm1", i)?.to_literal()?,
+                wq: ws.layer_slice("layers.wq", i)?.to_literal()?,
+                wk: ws.layer_slice("layers.wk", i)?.to_literal()?,
+                wv: ws.layer_slice("layers.wv", i)?.to_literal()?,
+                wo: ws.layer_slice("layers.wo", i)?.to_literal()?,
+                norm2: ws.layer_slice("layers.norm2", i)?.to_literal()?,
+                w_ff1: ws.layer_slice("layers.w_ff1", i)?.to_literal()?,
+                w_ff2: ws.layer_slice("layers.w_ff2", i)?.to_literal()?,
+            });
+        }
+        Ok(Self {
+            layers,
+            norm_f: ws.get("norm_f")?.to_literal()?,
+            lm_head: ws.get("lm_head")?.to_literal()?,
+            embed: ws.get("embed")?.clone(),
+            cfg: cfg.clone(),
+        })
+    }
+
+    /// Embedding lookup: tokens -> `(S_bucket, d)` hidden states, padded
+    /// with zeros past `tokens.len()`.
+    pub fn embed_tokens(&self, tokens: &[u32], bucket: usize) -> HostTensor {
+        let d = self.cfg.model.d_model;
+        let v = self.cfg.model.vocab_size;
+        let mut out = vec![0.0f32; bucket * d];
+        for (t, &id) in tokens.iter().enumerate().take(bucket) {
+            let id = (id as usize).min(v - 1);
+            out[t * d..(t + 1) * d].copy_from_slice(&self.embed.data[id * d..(id + 1) * d]);
+        }
+        HostTensor::new(vec![bucket, d], out)
+    }
+
+    /// Embedding of a single token -> `(d,)`.
+    pub fn embed_one(&self, token: u32) -> HostTensor {
+        let d = self.cfg.model.d_model;
+        let id = (token as usize).min(self.cfg.model.vocab_size - 1);
+        HostTensor::new(vec![d], self.embed.data[id * d..(id + 1) * d].to_vec())
+    }
+}
+
+/// Greedy argmax over vocabulary logits.
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0, 2.9]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

@@ -1,0 +1,226 @@
+//! Layer-Router runtime + attention-allocation policies.
+//!
+//! The paper's inference-time contract (section 3.3): the router runs
+//! **once per layer during prefill**, producing a hard FA/SA decision
+//! from a pooled boundary descriptor of that layer's input; the decision
+//! is cached for the whole request and reused by every decode step.
+
+use anyhow::Result;
+
+use crate::runtime::{HostTensor, Runtime, WeightStore};
+
+/// Attention mode of one layer (prefill kernels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AttnMode {
+    /// full causal attention (retrieval layers)
+    Fa,
+    /// streaming sparse: sink + local window
+    Ssa,
+    /// triangle: streaming + dense last-q rows
+    Ta,
+    /// x-attention: antidiagonal-scored block sparse
+    Xa,
+}
+
+impl AttnMode {
+    pub fn exe_prefix(&self) -> &'static str {
+        match self {
+            AttnMode::Fa => "layer_fa_prefill",
+            AttnMode::Ssa => "layer_ssa_prefill",
+            AttnMode::Ta => "layer_ta_prefill",
+            AttnMode::Xa => "layer_xa_prefill",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fa" => AttnMode::Fa,
+            "ssa" => AttnMode::Ssa,
+            "ta" => AttnMode::Ta,
+            "xa" => AttnMode::Xa,
+            other => anyhow::bail!("unknown attention mode {other}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttnMode::Fa => "fa",
+            AttnMode::Ssa => "ssa",
+            AttnMode::Ta => "ta",
+            AttnMode::Xa => "xa",
+        }
+    }
+}
+
+/// Decode-phase cache policy (paper Table 1 shaded rows = `Sparse`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// every layer keeps the full KV cache; decode is always dense
+    Dense,
+    /// SA-routed layers keep only the sink+local ring buffer
+    Sparse,
+}
+
+/// Attention-allocation policy for a request.
+#[derive(Debug, Clone)]
+pub enum Policy {
+    /// the unmodified backbone: FA everywhere
+    Backbone,
+    /// FluxAttention: dynamic layer-level routing; `sa_mode` is the
+    /// sparse kernel ("FA-SSA", "FA-XA", "FA-TA" configurations)
+    Flux { sa_mode: AttnMode, decode: DecodeMode },
+    /// static per-layer allocation (baselines: DuoAttention-/PruLong-
+    /// like layerised variants, TriangleMix, entropy-ranked)
+    Static { modes: Vec<AttnMode>, decode: DecodeMode },
+}
+
+impl Policy {
+    pub fn label(&self) -> String {
+        match self {
+            Policy::Backbone => "backbone".into(),
+            Policy::Flux { sa_mode, decode } => format!(
+                "flux-fa-{}{}",
+                sa_mode.name(),
+                if *decode == DecodeMode::Sparse { "-sd" } else { "" }
+            ),
+            Policy::Static { modes, decode } => {
+                let n_sa = modes.iter().filter(|m| **m != AttnMode::Fa).count();
+                format!(
+                    "static-{}of{}{}",
+                    n_sa,
+                    modes.len(),
+                    if *decode == DecodeMode::Sparse { "-sd" } else { "" }
+                )
+            }
+        }
+    }
+
+    pub fn decode_mode(&self) -> DecodeMode {
+        match self {
+            Policy::Backbone => DecodeMode::Dense,
+            Policy::Flux { decode, .. } | Policy::Static { decode, .. } => *decode,
+        }
+    }
+}
+
+/// Prefill-Suffix Pooling on the host: mean of the first and last
+/// `pool` valid rows of `(S, d)` hidden states -> `(2d,)` descriptor.
+/// O(pool * d) regardless of sequence length — the paper's Fig 9
+/// length-invariance comes from exactly this.
+pub fn pool_descriptor(hidden: &HostTensor, valid: usize, pool: usize) -> HostTensor {
+    let d = hidden.shape[1];
+    let p = pool.min(valid).max(1);
+    let mut desc = vec![0.0f32; 2 * d];
+    for t in 0..p {
+        let row = &hidden.data[t * d..(t + 1) * d];
+        for (o, x) in desc[..d].iter_mut().zip(row) {
+            *o += x;
+        }
+    }
+    for t in (valid - p)..valid {
+        let row = &hidden.data[t * d..(t + 1) * d];
+        for (o, x) in desc[d..].iter_mut().zip(row) {
+            *o += x;
+        }
+    }
+    let inv = 1.0 / p as f32;
+    for o in desc.iter_mut() {
+        *o *= inv;
+    }
+    HostTensor::new(vec![2 * d], desc)
+}
+
+/// Trained Layer-Router weights (per layer), kept as XLA literals ready
+/// to feed the `router` executable.
+pub struct RouterNet {
+    layers: Vec<[xla::Literal; 4]>, // w1, b1, w2, b2
+}
+
+impl RouterNet {
+    /// Load from a `router_<name>.bin/.json` export.
+    pub fn load(ws: &WeightStore, n_layers: usize) -> Result<Self> {
+        let mut layers = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            let w1 = ws.layer_slice("w1", i)?.to_literal()?;
+            let b1 = ws.layer_slice("b1", i)?.to_literal()?;
+            let w2 = ws.layer_slice("w2", i)?.to_literal()?;
+            let b2 = ws.layer_slice("b2", i)?.to_literal()?;
+            layers.push([w1, b1, w2, b2]);
+        }
+        Ok(Self { layers })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Hard routing for layer `i`: true = FA (logit order is [SA, FA]).
+    /// Returns (is_fa, logits).
+    pub fn route(
+        &self,
+        rt: &mut Runtime,
+        layer: usize,
+        desc: &HostTensor,
+    ) -> Result<(bool, [f32; 2])> {
+        let dlit = desc.to_literal()?;
+        let [w1, b1, w2, b2] = &self.layers[layer];
+        let out = rt.run("router", &[&dlit, w1, b1, w2, b2])?;
+        let logits = &out[0].data;
+        anyhow::ensure!(logits.len() == 2, "router output must be 2 logits");
+        Ok((logits[1] > logits[0], [logits[0], logits[1]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pooling_is_mean_of_boundaries() {
+        // rows: 0..8, d=2; valid 8, pool 2 -> prefix mean rows 0,1;
+        // suffix mean rows 6,7
+        let data: Vec<f32> = (0..16).map(|x| x as f32).collect();
+        let h = HostTensor::new(vec![8, 2], data);
+        let d = pool_descriptor(&h, 8, 2);
+        assert_eq!(d.shape, vec![4]);
+        assert_eq!(d.data, vec![1.0, 2.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn pooling_clamps_to_valid() {
+        let h = HostTensor::new(vec![8, 1], (0..8).map(|x| x as f32).collect());
+        // only 3 valid rows, pool 16 -> both descriptors over rows 0..3
+        let d = pool_descriptor(&h, 3, 16);
+        assert!((d.data[0] - 1.0).abs() < 1e-6);
+        assert!((d.data[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pooling_cost_is_length_invariant() {
+        // structural check: descriptor dim independent of S
+        for s in [16usize, 256, 2048] {
+            let h = HostTensor::zeros(vec![s, 4]);
+            assert_eq!(pool_descriptor(&h, s, 16).shape, vec![8]);
+        }
+    }
+
+    #[test]
+    fn policy_labels() {
+        assert_eq!(Policy::Backbone.label(), "backbone");
+        let p = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Sparse };
+        assert_eq!(p.label(), "flux-fa-ssa-sd");
+        let s = Policy::Static {
+            modes: vec![AttnMode::Fa, AttnMode::Ta],
+            decode: DecodeMode::Dense,
+        };
+        assert_eq!(s.label(), "static-1of2");
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [AttnMode::Fa, AttnMode::Ssa, AttnMode::Ta, AttnMode::Xa] {
+            assert_eq!(AttnMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(AttnMode::parse("bogus").is_err());
+    }
+}

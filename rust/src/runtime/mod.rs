@@ -1,0 +1,261 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Interchange is HLO *text* — jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §1).
+//!
+//! The runtime is deliberately `!Send`: PJRT handles are raw pointers.
+//! The [`crate::engine`] owns it on a dedicated executor thread and the
+//! async coordinator talks to that thread over channels.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// A host-side f32 tensor: shape + row-major data. The lingua franca
+/// between the coordinator, KV caches and the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Convert to an XLA literal (copies).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit
+            .array_shape()?
+            .dims()
+            .iter()
+            .map(|&d| d as usize)
+            .collect();
+        Ok(Self { shape, data: lit.to_vec::<f32>()? })
+    }
+}
+
+/// i32 scalar-vector helper (valid lengths, positions).
+pub fn i32_literal(vals: &[i32]) -> Literal {
+    Literal::vec1(vals)
+}
+
+/// Cumulative execution statistics per executable (feeds the §Perf pass
+/// and the Fig 9 router-overhead bench).
+#[derive(Debug, Default, Clone)]
+pub struct ExeStats {
+    pub calls: u64,
+    pub total_us: u64,
+}
+
+/// Loads, compiles and caches the AOT executables.
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    exes: HashMap<String, PjRtLoadedExecutable>,
+    stats: HashMap<String, ExeStats>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(Self {
+            client,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            exes: HashMap::new(),
+            stats: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) the executable `name` from
+    /// `<dir>/<name>.hlo.txt`.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+            .with_context(|| format!("loading {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+            .with_context(|| format!("compiling {name}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Execute `name` with literal arguments; returns the decomposed
+    /// output tuple as host tensors (every artifact is lowered with
+    /// `return_tuple=True`).
+    pub fn run(&mut self, name: &str, args: &[&Literal]) -> Result<Vec<HostTensor>> {
+        let t0 = Instant::now();
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("executable {name} not loaded"))?;
+        let out = exe.execute::<&Literal>(args).map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let mut tensors = Vec::with_capacity(parts.len());
+        for p in &parts {
+            tensors.push(HostTensor::from_literal(p)?);
+        }
+        let st = self.stats.entry(name.to_string()).or_default();
+        st.calls += 1;
+        st.total_us += t0.elapsed().as_micros() as u64;
+        Ok(tensors)
+    }
+
+    /// Raw-literal variant for callers that keep outputs as literals.
+    pub fn run_raw(&mut self, name: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let t0 = Instant::now();
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("executable {name} not loaded"))?;
+        let out = exe.execute::<&Literal>(args).map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let st = self.stats.entry(name.to_string()).or_default();
+        st.calls += 1;
+        st.total_us += t0.elapsed().as_micros() as u64;
+        Ok(parts)
+    }
+
+    pub fn stats(&self) -> &HashMap<String, ExeStats> {
+        &self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats.clear();
+    }
+}
+
+/// Weight blob loader: `weights.bin` (raw little-endian f32) + the JSON
+/// manifest written by `python/compile/train.py::export_flat_bin`.
+#[derive(Debug)]
+pub struct WeightStore {
+    tensors: HashMap<String, HostTensor>,
+}
+
+impl WeightStore {
+    pub fn load(bin_path: impl AsRef<Path>, manifest_path: impl AsRef<Path>) -> Result<Self> {
+        let blob = std::fs::read(&bin_path)
+            .with_context(|| format!("reading {:?}", bin_path.as_ref()))?;
+        let manifest = crate::util::json::Json::parse(
+            &std::fs::read_to_string(&manifest_path)?,
+        )
+        .map_err(|e| anyhow::anyhow!("weights manifest: {e}"))?;
+        let mut tensors = HashMap::new();
+        for e in manifest.as_arr().context("manifest must be an array")? {
+            let name = e.get("name").and_then(|v| v.as_str()).context("entry name")?;
+            let offset = e.get("offset").and_then(|v| v.as_usize()).context("entry offset")?;
+            let shape: Vec<usize> = e
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .context("entry shape")?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect();
+            let n: usize = shape.iter().product();
+            anyhow::ensure!(offset + n * 4 <= blob.len(), "weight {name} out of range");
+            let bytes = &blob[offset..offset + n * 4];
+            let mut data = vec![0f32; n];
+            for (i, ch) in bytes.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+            }
+            tensors.insert(name.to_string(), HostTensor::new(shape, data));
+        }
+        Ok(Self { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("weight {name} missing from manifest"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Slice layer `i` out of a stacked `(L, ...)` tensor.
+    pub fn layer_slice(&self, name: &str, i: usize) -> Result<HostTensor> {
+        let t = self.get(name)?;
+        anyhow::ensure!(!t.shape.is_empty(), "scalar tensor has no layer axis");
+        let per: usize = t.shape[1..].iter().product();
+        anyhow::ensure!(i < t.shape[0], "layer index {i} out of range");
+        Ok(HostTensor::new(
+            t.shape[1..].to_vec(),
+            t.data[i * per..(i + 1) * per].to_vec(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_roundtrip() {
+        let t = HostTensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect());
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn weight_store_layer_slice() {
+        let dir = std::env::temp_dir().join("flux_ws_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let data: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("w.bin"), &bytes).unwrap();
+        std::fs::write(
+            dir.join("w.json"),
+            r#"[{"name":"layers.w","offset":0,"shape":[3,2,2]}]"#,
+        )
+        .unwrap();
+        let ws = WeightStore::load(dir.join("w.bin"), dir.join("w.json")).unwrap();
+        let l1 = ws.layer_slice("layers.w", 1).unwrap();
+        assert_eq!(l1.shape, vec![2, 2]);
+        assert_eq!(l1.data, vec![4.0, 5.0, 6.0, 7.0]);
+    }
+}

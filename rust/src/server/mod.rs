@@ -1,0 +1,287 @@
+//! JSON-lines TCP serving front end + client (std::net, thread-per-
+//! connection; no async runtime in the offline vendor set).
+//!
+//! Protocol: one JSON object per line.
+//!   request:  {"prompt": [u32...], "max_new": 8, "policy": "flux-ssa",
+//!              "router": "balanced", "sparse_decode": false}
+//!   response: {"tokens": [...], "text": "...", "omsr": 0.5,
+//!              "modes": ["fa", ...], "ttft_ms": 1.2, "e2e_ms": 3.4}
+//!
+//! policy strings: "backbone" | "flux-ssa" | "flux-xa" | "flux-ta"
+//!                 | "static:<mode-csv>" (e.g. "static:fa,fa,ssa,...")
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Coordinator, Request};
+use crate::router::{AttnMode, DecodeMode, Policy};
+use crate::tokenizer::Tokenizer;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct WireRequest {
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub policy: String,
+    pub router: String,
+    pub sparse_decode: bool,
+}
+
+impl Default for WireRequest {
+    fn default() -> Self {
+        Self {
+            prompt: vec![],
+            max_new: 8,
+            policy: "flux-ssa".into(),
+            router: "balanced".into(),
+            sparse_decode: false,
+        }
+    }
+}
+
+impl WireRequest {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut w = WireRequest {
+            prompt: j
+                .get("prompt")
+                .and_then(Json::as_arr)
+                .context("missing 'prompt'")?
+                .iter()
+                .filter_map(|v| v.as_usize().map(|x| x as u32))
+                .collect(),
+            ..Default::default()
+        };
+        if let Some(m) = j.get("max_new").and_then(Json::as_usize) {
+            w.max_new = m;
+        }
+        if let Some(p) = j.get("policy").and_then(Json::as_str) {
+            w.policy = p.to_string();
+        }
+        if let Some(r) = j.get("router").and_then(Json::as_str) {
+            w.router = r.to_string();
+        }
+        if let Some(s) = j.get("sparse_decode").and_then(Json::as_bool) {
+            w.sparse_decode = s;
+        }
+        Ok(w)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("prompt", Json::from(self.prompt.iter().map(|&t| t as usize).collect::<Vec<_>>()));
+        o.set("max_new", Json::from(self.max_new));
+        o.set("policy", Json::from(self.policy.as_str()));
+        o.set("router", Json::from(self.router.as_str()));
+        o.set("sparse_decode", Json::from(self.sparse_decode));
+        o
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct WireResponse {
+    pub tokens: Vec<u32>,
+    pub text: String,
+    pub omsr: f64,
+    pub modes: Vec<String>,
+    pub ttft_ms: f64,
+    pub e2e_ms: f64,
+    pub decode_ms_per_token: f64,
+    pub error: Option<String>,
+}
+
+impl WireResponse {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("tokens", Json::from(self.tokens.iter().map(|&t| t as usize).collect::<Vec<_>>()));
+        o.set("text", Json::from(self.text.as_str()));
+        o.set("omsr", Json::from(self.omsr));
+        o.set("modes", Json::from(self.modes.clone()));
+        o.set("ttft_ms", Json::from(self.ttft_ms));
+        o.set("e2e_ms", Json::from(self.e2e_ms));
+        o.set("decode_ms_per_token", Json::from(self.decode_ms_per_token));
+        match &self.error {
+            Some(e) => o.set("error", Json::from(e.as_str())),
+            None => o.set("error", Json::Null),
+        };
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Self {
+        WireResponse {
+            tokens: j
+                .get("tokens")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|v| v.as_usize().map(|x| x as u32)).collect())
+                .unwrap_or_default(),
+            text: j.get("text").and_then(Json::as_str).unwrap_or("").to_string(),
+            omsr: j.get("omsr").and_then(Json::as_f64).unwrap_or(0.0),
+            modes: j
+                .get("modes")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+                .unwrap_or_default(),
+            ttft_ms: j.get("ttft_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            e2e_ms: j.get("e2e_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            decode_ms_per_token: j.get("decode_ms_per_token").and_then(Json::as_f64).unwrap_or(0.0),
+            error: j.get("error").and_then(Json::as_str).map(String::from),
+        }
+    }
+}
+
+/// Parse a wire policy string into a [`Policy`].
+pub fn parse_policy(s: &str, sparse_decode: bool, n_layers: usize) -> Result<Policy> {
+    let decode = if sparse_decode { DecodeMode::Sparse } else { DecodeMode::Dense };
+    match s {
+        "backbone" => Ok(Policy::Backbone),
+        "flux-ssa" => Ok(Policy::Flux { sa_mode: AttnMode::Ssa, decode }),
+        "flux-xa" => Ok(Policy::Flux { sa_mode: AttnMode::Xa, decode }),
+        "flux-ta" => Ok(Policy::Flux { sa_mode: AttnMode::Ta, decode }),
+        other => {
+            if let Some(csv) = other.strip_prefix("static:") {
+                let modes: Result<Vec<AttnMode>> = csv.split(',').map(AttnMode::parse).collect();
+                let modes = modes?;
+                anyhow::ensure!(
+                    modes.len() == n_layers,
+                    "static policy needs {n_layers} modes, got {}",
+                    modes.len()
+                );
+                Ok(Policy::Static { modes, decode })
+            } else {
+                anyhow::bail!("unknown policy '{other}'")
+            }
+        }
+    }
+}
+
+/// Serve forever on `addr` (thread per connection).
+pub fn serve(coord: Arc<Coordinator>, addr: &str, n_layers: usize) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("flux server listening on {addr}");
+    for sock in listener.incoming() {
+        let sock = sock?;
+        let coord = coord.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(coord, sock, n_layers) {
+                eprintln!("connection error: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(coord: Arc<Coordinator>, sock: TcpStream, n_layers: usize) -> Result<()> {
+    let mut wr = sock.try_clone()?;
+    let rd = BufReader::new(sock);
+    let tok = Tokenizer::new();
+    for line in rd.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = process_line(&coord, &tok, &line, n_layers);
+        wr.write_all(format!("{}\n", resp.to_json()).as_bytes())?;
+        wr.flush()?;
+    }
+    Ok(())
+}
+
+fn process_line(coord: &Coordinator, tok: &Tokenizer, line: &str, n_layers: usize) -> WireResponse {
+    let parsed = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return error_response(&format!("bad json: {e}")),
+    };
+    let wire = match WireRequest::from_json(&parsed) {
+        Ok(w) => w,
+        Err(e) => return error_response(&format!("bad request: {e}")),
+    };
+    let policy = match parse_policy(&wire.policy, wire.sparse_decode, n_layers) {
+        Ok(p) => p,
+        Err(e) => return error_response(&e.to_string()),
+    };
+    match coord.submit(Request {
+        prompt: wire.prompt,
+        max_new: wire.max_new,
+        policy,
+        router: wire.router,
+    }) {
+        Ok(r) => WireResponse {
+            text: tok.decode(&r.tokens),
+            tokens: r.tokens,
+            omsr: r.omsr,
+            modes: r.modes,
+            ttft_ms: r.ttft_us as f64 / 1e3,
+            e2e_ms: r.e2e_us as f64 / 1e3,
+            decode_ms_per_token: r.decode_us_per_token / 1e3,
+            error: None,
+        },
+        Err(e) => error_response(&e.to_string()),
+    }
+}
+
+fn error_response(msg: &str) -> WireResponse {
+    WireResponse { error: Some(msg.to_string()), ..Default::default() }
+}
+
+/// Minimal blocking client for examples and tests.
+pub fn client_request(addr: &str, req: &WireRequest) -> Result<WireResponse> {
+    let sock = TcpStream::connect(addr)?;
+    let mut wr = sock.try_clone()?;
+    wr.write_all(format!("{}\n", req.to_json()).as_bytes())?;
+    wr.flush()?;
+    let mut rd = BufReader::new(sock);
+    let mut line = String::new();
+    rd.read_line(&mut line)?;
+    anyhow::ensure!(!line.is_empty(), "server closed connection");
+    let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+    Ok(WireResponse::from_json(&j))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parsing() {
+        assert!(matches!(parse_policy("backbone", false, 8).unwrap(), Policy::Backbone));
+        let p = parse_policy("flux-ta", true, 8).unwrap();
+        assert_eq!(p.label(), "flux-fa-ta-sd");
+        let s = parse_policy("static:fa,fa,ssa,ssa,fa,fa,ssa,ssa", false, 8).unwrap();
+        assert_eq!(s.label(), "static-4of8");
+        assert!(parse_policy("static:fa,fa", false, 8).is_err());
+        assert!(parse_policy("nope", false, 8).is_err());
+    }
+
+    #[test]
+    fn wire_request_roundtrip() {
+        let j = Json::parse(r#"{"prompt":[1,2]}"#).unwrap();
+        let w = WireRequest::from_json(&j).unwrap();
+        assert_eq!(w.max_new, 8);
+        assert_eq!(w.policy, "flux-ssa");
+        assert!(!w.sparse_decode);
+        let j2 = Json::parse(&w.to_json().to_string()).unwrap();
+        let w2 = WireRequest::from_json(&j2).unwrap();
+        assert_eq!(w2.prompt, vec![1, 2]);
+    }
+
+    #[test]
+    fn wire_response_roundtrip() {
+        let r = WireResponse {
+            tokens: vec![5, 2],
+            text: "w0 <eos>".into(),
+            omsr: 0.5,
+            modes: vec!["fa".into(), "ssa".into()],
+            ttft_ms: 1.5,
+            e2e_ms: 3.0,
+            decode_ms_per_token: 0.7,
+            error: None,
+        };
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        let r2 = WireResponse::from_json(&j);
+        assert_eq!(r2.tokens, r.tokens);
+        assert_eq!(r2.modes, r.modes);
+        assert!(r2.error.is_none());
+    }
+}

@@ -1,0 +1,116 @@
+//! Deterministic word-level tokenizer over the synthetic vocabulary.
+//!
+//! The serving stack operates on the same 512-symbol vocabulary the
+//! backbone was pretrained on (python/compile/data.py). Symbols render
+//! as short words (`w17`, control tokens as `<bos>` etc.) so transcripts
+//! in the error-analysis experiment (paper Figs 11-13) are readable.
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const SEP: u32 = 3;
+pub const QUERY: u32 = 4;
+pub const ANSWER: u32 = 5;
+pub const TAG_BASE: u32 = 6;
+pub const CONTENT: u32 = 32;
+pub const VOCAB: u32 = 512;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        Self
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB as usize
+    }
+
+    pub fn decode_token(&self, id: u32) -> String {
+        match id {
+            PAD => "<pad>".into(),
+            BOS => "<bos>".into(),
+            EOS => "<eos>".into(),
+            SEP => "<sep>".into(),
+            QUERY => "<query>".into(),
+            ANSWER => "<answer>".into(),
+            t if t < CONTENT => format!("<tag{}>", t - TAG_BASE),
+            t if t < VOCAB => format!("w{}", t - CONTENT),
+            t => format!("<invalid{t}>"),
+        }
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| self.decode_token(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn encode_token(&self, word: &str) -> Option<u32> {
+        match word {
+            "<pad>" => Some(PAD),
+            "<bos>" => Some(BOS),
+            "<eos>" => Some(EOS),
+            "<sep>" => Some(SEP),
+            "<query>" => Some(QUERY),
+            "<answer>" => Some(ANSWER),
+            w => {
+                if let Some(n) = w.strip_prefix("<tag").and_then(|s| {
+                    s.strip_suffix('>').and_then(|s| s.parse::<u32>().ok())
+                }) {
+                    let id = TAG_BASE + n;
+                    (id < CONTENT).then_some(id)
+                } else if let Some(n) =
+                    w.strip_prefix('w').and_then(|s| s.parse::<u32>().ok())
+                {
+                    let id = CONTENT + n;
+                    (id < VOCAB).then_some(id)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace()
+            .filter_map(|w| self.encode_token(w))
+            .collect()
+    }
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_every_token() {
+        let t = Tokenizer::new();
+        for id in 0..VOCAB {
+            let s = t.decode_token(id);
+            assert_eq!(t.encode_token(&s), Some(id), "token {id} ({s})");
+        }
+    }
+
+    #[test]
+    fn roundtrip_sequence() {
+        let t = Tokenizer::new();
+        let ids = vec![BOS, TAG_BASE + 3, CONTENT + 7, SEP, CONTENT + 400, EOS];
+        let text = t.decode(&ids);
+        assert_eq!(t.encode(&text), ids);
+    }
+
+    #[test]
+    fn invalid_words_are_skipped() {
+        let t = Tokenizer::new();
+        assert!(t.encode("hello world w9999 <tag99>").is_empty());
+    }
+}

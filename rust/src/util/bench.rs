@@ -1,0 +1,91 @@
+//! Micro-benchmark substrate (no criterion in the vendor set).
+//!
+//! Warmup + timed iterations with mean / p50 / p95 reporting and a
+//! machine-readable JSON dump per group, so `cargo bench` output can be
+//! diffed across the §Perf optimization iterations.
+
+use std::time::Instant;
+
+use super::json::Json;
+
+pub struct Bench {
+    group: String,
+    results: Vec<(String, Stats)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        println!("\n== bench group: {group} ==");
+        Self { group: group.to_string(), results: vec![] }
+    }
+
+    /// Run `f` repeatedly: `warmup` unmeasured + `iters` measured calls.
+    /// Returns the stats so callers can derive ratios (speedup series).
+    pub fn run<R>(&mut self, name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> Stats {
+        for _ in 0..warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64 / 1e3);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = Stats {
+            iters,
+            mean_us: samples.iter().sum::<f64>() / iters as f64,
+            p50_us: samples[iters / 2],
+            p95_us: samples[((iters as f64 * 0.95) as usize).min(iters - 1)],
+        };
+        println!(
+            "{:<40} mean {:>10.2} us   p50 {:>10.2} us   p95 {:>10.2} us   ({} iters)",
+            name, stats.mean_us, stats.p50_us, stats.p95_us, iters
+        );
+        self.results.push((name.to_string(), stats));
+        stats
+    }
+
+    /// Write results to `results/bench_<group>.json`.
+    pub fn save(&self) {
+        let _ = std::fs::create_dir_all("results");
+        let mut arr = Json::Arr(vec![]);
+        for (name, s) in &self.results {
+            let mut o = Json::obj();
+            o.set("name", Json::from(name.clone()));
+            o.set("mean_us", Json::from(s.mean_us));
+            o.set("p50_us", Json::from(s.p50_us));
+            o.set("p95_us", Json::from(s.p95_us));
+            arr.push(o);
+        }
+        let path = format!("results/bench_{}.json", self.group);
+        let _ = std::fs::write(&path, arr.to_string());
+        println!("(saved {path})");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bench::new("selftest");
+        let mut acc = 0u64;
+        b.run("noop", 2, 16, || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].1.mean_us >= 0.0);
+        assert!(b.results[0].1.p95_us >= b.results[0].1.p50_us);
+    }
+}

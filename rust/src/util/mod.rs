@@ -1,0 +1,7 @@
+//! In-crate substrates for the offline build environment (DESIGN.md §4):
+//! JSON, deterministic RNG, bench harness and property-test runner.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,73 @@
+//! Property-testing substrate (no proptest in the vendor set): a small
+//! seeded case-runner. Each property runs N random cases; on failure it
+//! reports the seed so the case replays deterministically.
+
+use super::rng::Rng;
+
+/// Run `cases` random trials of `prop`. `prop` gets a seeded [`Rng`]
+/// and returns `Err(msg)` on violation.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0xF1u64 << 32 | case as u64;
+        let mut rng = Rng::seed_from_u64(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// assertion helpers returning Result for use inside properties
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "assertion failed: {} == {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("adds", 32, |rng| {
+            let a = rng.gen_range(100);
+            let b = rng.gen_range(100);
+            prop_assert_eq!(a + b, b + a);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 8, |rng| {
+            let x = rng.gen_range(10);
+            prop_assert!(x < 5, "x was {x}");
+            Ok(())
+        });
+    }
+}

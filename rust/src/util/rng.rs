@@ -1,0 +1,150 @@
+//! Deterministic RNG substrate (no `rand` crate in the vendor set):
+//! SplitMix64 core with the sampling helpers the workload generators
+//! need (ranges, floats, shuffles, multinomial-ish scatter gaps).
+
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// uniform in [0, n) — n must be > 0
+    pub fn gen_range(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        // multiply-shift rejection-free (bias < 2^-64 * n, negligible)
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// uniform in [lo, hi)
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.gen_range(hi - lo)
+    }
+
+    pub fn range_u32(&mut self, lo: u32, hi: u32) -> u32 {
+        lo + self.gen_range((hi - lo) as usize) as u32
+    }
+
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.gen_range((hi - lo) as usize) as i64
+    }
+
+    /// uniform f64 in [0, 1)
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.gen_range(i + 1);
+            v.swap(i, j);
+        }
+    }
+
+    /// pick k distinct values from [lo, hi)
+    pub fn choose_distinct_u32(&mut self, lo: u32, hi: u32, k: usize) -> Vec<u32> {
+        let mut pool: Vec<u32> = (lo..hi).collect();
+        self.shuffle(&mut pool);
+        pool.truncate(k);
+        pool
+    }
+
+    /// categorical sample over unnormalized weights
+    pub fn categorical(&mut self, probs: &[f64]) -> usize {
+        let total: f64 = probs.iter().sum();
+        let mut r = self.f64() * total;
+        for (i, &p) in probs.iter().enumerate() {
+            r -= p;
+            if r < 0.0 {
+                return i;
+            }
+        }
+        probs.len() - 1
+    }
+
+    /// exponential inter-arrival (Poisson process), rate per second
+    pub fn exp_ms(&mut self, rate_per_s: f64) -> f64 {
+        -(1.0 - self.f64()).ln() / rate_per_s * 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seed_from_u64(7);
+        let mut b = Rng::seed_from_u64(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let x = r.range(10, 20);
+            assert!((10..20).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval_and_mean() {
+        let mut r = Rng::seed_from_u64(2);
+        let mut sum = 0.0;
+        let n = 20_000;
+        for _ in 0..n {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seed_from_u64(3);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn distinct_choice() {
+        let mut r = Rng::seed_from_u64(4);
+        let v = r.choose_distinct_u32(10, 30, 5);
+        assert_eq!(v.len(), 5);
+        let mut s = v.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 5);
+        assert!(v.iter().all(|&x| (10..30).contains(&x)));
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::seed_from_u64(5);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.categorical(&[0.6, 0.25, 0.15])] += 1;
+        }
+        assert!(counts[0] > counts[1] && counts[1] > counts[2]);
+        assert!((counts[0] as f64 / 30_000.0 - 0.6).abs() < 0.03);
+    }
+}

@@ -1,0 +1,604 @@
+//! Workload generators: the LongBench-E proxy suite, the RULER needle
+//! ladder, the reasoning/math proxies and Poisson request-arrival traces.
+//!
+//! Mirrors `python/compile/data.py` (same task taxonomy, same layout
+//! `[BOS TAG ctx.. QUERY q.. ANSWER a.. EOS]`, same sparsity-sensitivity
+//! classes); distributional equivalence is what matters — the backbone
+//! was pretrained on the python generators.
+
+use crate::util::rng::Rng;
+
+use crate::tokenizer::{ANSWER, BOS, CONTENT, QUERY, SEP, TAG_BASE, VOCAB};
+
+pub const NCONTENT: u32 = VOCAB - CONTENT; // 480
+
+/// LongBench-E category (paper Table 1 columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    SDocQA,
+    MDocQA,
+    Summ,
+    Icl,
+    Synthetic,
+    Code,
+    Ruler,
+    Reasoning,
+    Math,
+}
+
+/// Every generatable task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    Qasper,
+    MFen,
+    HotQA,
+    Wiki2,
+    Gov,
+    MNews,
+    Trec,
+    Tqa,
+    Sams,
+    PCount,
+    PRe,
+    Rbp,
+    Lcc,
+    Ruler,
+    Lbv2Easy,
+    Lbv2Hard,
+    Gsm,
+    Aime,
+}
+
+pub const LONGBENCH_TASKS: [Task; 13] = [
+    Task::Qasper,
+    Task::MFen,
+    Task::HotQA,
+    Task::Wiki2,
+    Task::Gov,
+    Task::MNews,
+    Task::Trec,
+    Task::Tqa,
+    Task::Sams,
+    Task::PCount,
+    Task::PRe,
+    Task::Rbp,
+    Task::Lcc,
+];
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Qasper => "qasper",
+            Task::MFen => "mf-en",
+            Task::HotQA => "hotqa",
+            Task::Wiki2 => "2wiki",
+            Task::Gov => "gov",
+            Task::MNews => "m.news",
+            Task::Trec => "trec",
+            Task::Tqa => "tqa",
+            Task::Sams => "sams",
+            Task::PCount => "pcount",
+            Task::PRe => "pre",
+            Task::Rbp => "rb-p",
+            Task::Lcc => "lcc",
+            Task::Ruler => "ruler",
+            Task::Lbv2Easy => "lbv2-easy",
+            Task::Lbv2Hard => "lbv2-hard",
+            Task::Gsm => "gsm8k",
+            Task::Aime => "aime24",
+        }
+    }
+
+    pub fn category(&self) -> Category {
+        match self {
+            Task::Qasper | Task::MFen => Category::SDocQA,
+            Task::HotQA | Task::Wiki2 => Category::MDocQA,
+            Task::Gov | Task::MNews => Category::Summ,
+            Task::Trec | Task::Tqa | Task::Sams => Category::Icl,
+            Task::PCount | Task::PRe => Category::Synthetic,
+            Task::Rbp | Task::Lcc => Category::Code,
+            Task::Ruler => Category::Ruler,
+            Task::Lbv2Easy | Task::Lbv2Hard => Category::Reasoning,
+            Task::Gsm | Task::Aime => Category::Math,
+        }
+    }
+
+    /// Retrieval-intensive tasks need dense token interactions (paper
+    /// section 2.3); holistic tasks survive aggressive sparsity.
+    pub fn is_retrieval(&self) -> bool {
+        !matches!(
+            self,
+            Task::Gov
+                | Task::MNews
+                | Task::Trec
+                | Task::Tqa
+                | Task::Sams
+                | Task::Rbp
+                | Task::Lcc
+        )
+    }
+
+    fn tag(&self) -> u32 {
+        let idx = match self {
+            Task::Qasper => 0,
+            Task::MFen => 1,
+            Task::HotQA => 2,
+            Task::Wiki2 => 3,
+            Task::Gov => 4,
+            Task::MNews => 5,
+            Task::Trec => 6,
+            Task::Tqa => 7,
+            Task::Sams => 8,
+            Task::PCount => 9,
+            Task::PRe => 10,
+            Task::Rbp => 11,
+            Task::Lcc => 12,
+            Task::Ruler => 13,
+            Task::Lbv2Easy => 14,
+            Task::Lbv2Hard => 15,
+            Task::Gsm => 16,
+            Task::Aime => 17,
+        };
+        TAG_BASE + idx
+    }
+}
+
+/// One generated request: the prompt ends right after the ANSWER marker;
+/// `answer` is the expected continuation (excluding EOS).
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub task: Task,
+    pub prompt: Vec<u32>,
+    pub answer: Vec<u32>,
+}
+
+fn tok(i: i64) -> u32 {
+    CONTENT + (i.rem_euclid(NCONTENT as i64)) as u32
+}
+
+fn filler(rng: &mut Rng, n: usize) -> Vec<u32> {
+    (0..n).map(|_| rng.range_u32(CONTENT, VOCAB)).collect()
+}
+
+/// Spread token groups over `n` filler tokens at random non-overlapping
+/// depths (mirrors data.py `_scatter`).
+fn scatter(rng: &mut Rng, n: usize, items: &[Vec<u32>]) -> Vec<u32> {
+    let mut out = filler(rng, n);
+    let total: usize = items.iter().map(|i| i.len()).sum();
+    assert!(total <= n, "scatter overflow: {total} > {n}");
+    let free = n - total;
+    // sample gap sizes ~ uniform multinomial
+    let mut gaps = vec![0usize; items.len() + 1];
+    for _ in 0..free {
+        let g = rng.range(0, gaps.len());
+        gaps[g] += 1;
+    }
+    let mut cursor = 0usize;
+    for (gap, item) in gaps.iter().zip(items.iter()) {
+        cursor += gap;
+        out[cursor..cursor + item.len()].copy_from_slice(item);
+        cursor += item.len();
+    }
+    out.truncate(n);
+    out
+}
+
+/// Assemble `[BOS TAG ctx.. QUERY q.. ANSWER]` + expected answer.
+fn assemble(task: Task, ctx: Vec<u32>, query: Vec<u32>, answer: Vec<u32>) -> Sample {
+    let mut prompt = Vec::with_capacity(ctx.len() + query.len() + 4);
+    prompt.push(BOS);
+    prompt.push(task.tag());
+    prompt.extend_from_slice(&ctx);
+    prompt.push(QUERY);
+    prompt.extend_from_slice(&query);
+    prompt.push(ANSWER);
+    Sample { task, prompt, answer }
+}
+
+/// Context budget for a target *prompt* length (the python generators
+/// size full sequences; here the answer+EOS live on the generation side).
+fn ctx_len(seq_len: usize, qlen: usize) -> usize {
+    // prompt = BOS + TAG + ctx + QUERY + q + ANSWER  ->  ctx = len - 4 - qlen
+    seq_len.saturating_sub(4 + qlen).max(8)
+}
+
+pub fn generate(task: Task, rng: &mut Rng, seq_len: usize) -> Sample {
+    match task {
+        Task::Qasper => gen_qasper(rng, seq_len),
+        Task::MFen => gen_mfen(rng, seq_len),
+        Task::HotQA => gen_hotqa(rng, seq_len),
+        Task::Wiki2 => gen_wiki2(rng, seq_len),
+        Task::Gov => gen_majority(Task::Gov, rng, seq_len, 3, &[0.6, 0.25, 0.15], 0),
+        Task::MNews => gen_majority(Task::MNews, rng, seq_len, 4, &[0.55, 0.2, 0.15, 0.1], 2),
+        Task::Trec => gen_icl(Task::Trec, rng, seq_len, 6),
+        Task::Tqa => gen_icl(Task::Tqa, rng, seq_len, 10),
+        Task::Sams => gen_majority(Task::Sams, rng, seq_len, 3, &[0.55, 0.25, 0.2], 3),
+        Task::PCount => gen_pcount(rng, seq_len),
+        Task::PRe | Task::Ruler => gen_pre(task, rng, seq_len),
+        Task::Lbv2Easy => gen_chain(Task::Lbv2Easy, rng, seq_len, 2),
+        Task::Lbv2Hard => gen_chain(Task::Lbv2Hard, rng, seq_len, 4),
+        Task::Gsm => gen_arith(Task::Gsm, rng, seq_len, 6, false),
+        Task::Aime => gen_arith(Task::Aime, rng, seq_len, 10, true),
+        Task::Rbp => gen_rbp(rng, seq_len),
+        Task::Lcc => gen_lcc(rng, seq_len),
+    }
+}
+
+fn gen_qasper(rng: &mut Rng, seq_len: usize) -> Sample {
+    let n = ctx_len(seq_len, 1);
+    let nfacts = (n / 48).clamp(2, 16);
+    let mut keys: Vec<u32> = (0..NCONTENT).collect();
+    rng.shuffle(&mut keys);
+    keys.truncate(nfacts);
+    let vals: Vec<u32> = (0..nfacts).map(|_| rng.range_u32(0, NCONTENT) ).collect();
+    let facts: Vec<Vec<u32>> = keys
+        .iter()
+        .zip(&vals)
+        .map(|(&k, &v)| vec![SEP, CONTENT + k, CONTENT + v])
+        .collect();
+    let t = rng.gen_range(nfacts as usize);
+    let ctx = scatter(rng, n, &facts);
+    assemble(Task::Qasper, ctx, vec![CONTENT + keys[t]], vec![CONTENT + vals[t]])
+}
+
+fn gen_mfen(rng: &mut Rng, seq_len: usize) -> Sample {
+    let n = ctx_len(seq_len, 2);
+    let nent = (n / 64).clamp(2, 10);
+    let half = NCONTENT / 2;
+    let mut ents: Vec<u32> = (0..half).collect();
+    rng.shuffle(&mut ents);
+    ents.truncate(nent);
+    let f1: Vec<u32> = (0..nent).map(|_| rng.range_u32(0, NCONTENT) ).collect();
+    let f2: Vec<u32> = (0..nent).map(|_| rng.range_u32(0, NCONTENT) ).collect();
+    let field_tags = [half, half + 1];
+    let mut facts = Vec::new();
+    for i in 0..nent {
+        facts.push(vec![SEP, CONTENT + ents[i], CONTENT + field_tags[0], CONTENT + f1[i]]);
+        facts.push(vec![SEP, CONTENT + ents[i], CONTENT + field_tags[1], CONTENT + f2[i]]);
+    }
+    let t = rng.gen_range(nent as usize);
+    let fs = rng.gen_range(2usize as usize);
+    let val = if fs == 0 { f1[t] } else { f2[t] };
+    let ctx = scatter(rng, n, &facts);
+    assemble(
+        Task::MFen,
+        ctx,
+        vec![CONTENT + ents[t], CONTENT + field_tags[fs]],
+        vec![CONTENT + val],
+    )
+}
+
+fn gen_hotqa(rng: &mut Rng, seq_len: usize) -> Sample {
+    let n = ctx_len(seq_len, 1);
+    let nchains = (n / 96).clamp(2, 8);
+    let third = NCONTENT / 3;
+    let mut a: Vec<u32> = (0..third).collect();
+    rng.shuffle(&mut a);
+    a.truncate(nchains);
+    let mut b: Vec<u32> = (third..2 * third).collect();
+    rng.shuffle(&mut b);
+    b.truncate(nchains);
+    let c: Vec<u32> = (0..nchains).map(|_| rng.range_u32(0, NCONTENT) ).collect();
+    let mut hops = Vec::new();
+    for i in 0..nchains {
+        hops.push(vec![SEP, CONTENT + a[i], CONTENT + b[i]]);
+        hops.push(vec![SEP, CONTENT + b[i], CONTENT + c[i]]);
+    }
+    let t = rng.gen_range(nchains as usize);
+    let ctx = scatter(rng, n, &hops);
+    assemble(Task::HotQA, ctx, vec![CONTENT + a[t]], vec![CONTENT + c[t]])
+}
+
+fn gen_wiki2(rng: &mut Rng, seq_len: usize) -> Sample {
+    let n = ctx_len(seq_len, 1);
+    let nchains = (n / 128).clamp(2, 6);
+    let q = NCONTENT / 4;
+    let mut pick = |lo: u32| {
+        let mut v: Vec<u32> = (lo..lo + q).collect();
+        rng.shuffle(&mut v);
+        v.truncate(nchains);
+        v
+    };
+    let a = pick(0);
+    let b = pick(q);
+    let c = pick(2 * q);
+    let d: Vec<u32> = (0..nchains).map(|_| rng.range_u32(0, NCONTENT) ).collect();
+    let mut hops = Vec::new();
+    for i in 0..nchains {
+        hops.push(vec![SEP, CONTENT + a[i], CONTENT + b[i]]);
+        hops.push(vec![SEP, CONTENT + b[i], CONTENT + c[i]]);
+        hops.push(vec![SEP, CONTENT + c[i], CONTENT + d[i]]);
+    }
+    let t = rng.gen_range(nchains as usize);
+    let ctx = scatter(rng, n, &hops);
+    assemble(Task::Wiki2, ctx, vec![CONTENT + a[t]], vec![CONTENT + d[t]])
+}
+
+/// Majority-marker family (gov / m.news / sams): answer = most frequent
+/// marker; markers are spread uniformly so a local window sees enough.
+fn gen_majority(task: Task, rng: &mut Rng, seq_len: usize, k: usize, probs: &[f64], extra: usize) -> Sample {
+    let qlen = match task {
+        Task::Gov => 1,
+        Task::MNews => 2,
+        _ => 2,
+    };
+    let n = ctx_len(seq_len, qlen);
+    let mut topics: Vec<u32> = (0..NCONTENT).collect();
+    rng.shuffle(&mut topics);
+    topics.truncate(k);
+    let per = 2 + extra;
+    let nmark = (n / (per * 8)).max(6);
+    let mut counts = vec![0usize; k];
+    let mut marks = Vec::new();
+    for _ in 0..nmark {
+        let pick = rng.categorical(probs).min(k - 1);
+        counts[pick] += 1;
+        let mut m = vec![SEP, CONTENT + topics[pick]];
+        m.extend(filler(rng, extra));
+        marks.push(m);
+    }
+    let maj = topics[counts
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &c)| c)
+        .map(|(i, _)| i)
+        .unwrap()];
+    let ctx = scatter(rng, n, &marks);
+    let query = match task {
+        Task::Gov => vec![SEP],
+        Task::MNews => vec![SEP, SEP],
+        _ => vec![SEP, QUERY],
+    };
+    assemble(task, ctx, query, vec![CONTENT + maj])
+}
+
+/// In-context-learning family: repeated (pattern -> label) pairs; the
+/// queried pattern recurs densely, so a recent example is in-window.
+fn gen_icl(task: Task, rng: &mut Rng, seq_len: usize, npat: usize) -> Sample {
+    let n = ctx_len(seq_len, 1);
+    let half = NCONTENT / 2;
+    let mut pats: Vec<u32> = (0..half).collect();
+    rng.shuffle(&mut pats);
+    pats.truncate(npat);
+    let mut labels: Vec<u32> = (half..NCONTENT).collect();
+    rng.shuffle(&mut labels);
+    labels.truncate(npat);
+    let t = rng.gen_range(npat as usize);
+    let mut ctx = Vec::with_capacity(n);
+    while ctx.len() + 3 <= n {
+        let i = if rng.f64() > 0.3 { rng.gen_range(npat as usize) } else { t };
+        ctx.extend_from_slice(&[SEP, CONTENT + pats[i], CONTENT + labels[i]]);
+    }
+    ctx.extend(filler(rng, n - ctx.len()));
+    assemble(task, ctx, vec![CONTENT + pats[t]], vec![CONTENT + labels[t]])
+}
+
+fn gen_pcount(rng: &mut Rng, seq_len: usize) -> Sample {
+    let n = ctx_len(seq_len, 1);
+    let marker = CONTENT + rng.range_u32(0, NCONTENT) ;
+    let count = rng.range(1, 24);
+    let items: Vec<Vec<u32>> = (0..count).map(|_| vec![marker]).collect();
+    let ctx = scatter(rng, n, &items);
+    assemble(Task::PCount, ctx, vec![marker], vec![tok(count as i64)])
+}
+
+fn gen_pre(task: Task, rng: &mut Rng, seq_len: usize) -> Sample {
+    let n = ctx_len(seq_len, 1);
+    let key = CONTENT + rng.range_u32(0, NCONTENT) ;
+    let val = CONTENT + rng.range_u32(0, NCONTENT) ;
+    let mut ctx = filler(rng, n);
+    let pos = rng.range(0, n.saturating_sub(3).max(1));
+    ctx[pos] = SEP;
+    ctx[pos + 1] = key;
+    ctx[pos + 2] = val;
+    assemble(task, ctx, vec![key], vec![val])
+}
+
+fn gen_chain(task: Task, rng: &mut Rng, seq_len: usize, hops: usize) -> Sample {
+    let n = ctx_len(seq_len, 1);
+    let nchains = 4usize;
+    let per = NCONTENT / (hops as u32 + 1);
+    let mut heads: Vec<u32> = (0..per).collect();
+    rng.shuffle(&mut heads);
+    heads.truncate(nchains);
+    let mut triples = Vec::new();
+    let mut finals = Vec::new();
+    for &h in &heads {
+        let mut cur = h;
+        for hp in 0..hops {
+            let nxt = rng.range_u32(0, per) + (hp as u32 + 1) * per;
+            triples.push(vec![SEP, CONTENT + cur, CONTENT + nxt]);
+            cur = nxt;
+        }
+        finals.push(cur);
+    }
+    let t = rng.gen_range(nchains as usize);
+    let ctx = scatter(rng, n, &triples);
+    assemble(task, ctx, vec![CONTENT + heads[t]], vec![CONTENT + finals[t]])
+}
+
+fn gen_arith(task: Task, rng: &mut Rng, seq_len: usize, ops: usize, mul: bool) -> Sample {
+    let n = ctx_len(seq_len, 1);
+    let modn: i64 = 97;
+    let mut val = rng.gen_range(modn as usize) as i64;
+    let mut flat = vec![SEP, QUERY, tok(val)];
+    let add_tag = tok(NCONTENT as i64 - 1);
+    let mul_tag = tok(NCONTENT as i64 - 2);
+    for _ in 0..ops {
+        let x = rng.range(1, 10) as i64;
+        if mul && rng.f64() < 0.3 {
+            val = (val * x) % modn;
+            flat.extend_from_slice(&[SEP, mul_tag, tok(x)]);
+        } else {
+            val = (val + x) % modn;
+            flat.extend_from_slice(&[SEP, add_tag, tok(x)]);
+        }
+    }
+    let mut ctx = flat;
+    if ctx.len() < n {
+        let extra = filler(rng, n - ctx.len());
+        ctx.extend(extra);
+    }
+    ctx.truncate(n);
+    assemble(task, ctx, vec![SEP], vec![tok(val)])
+}
+
+fn gen_rbp(rng: &mut Rng, seq_len: usize) -> Sample {
+    let n = ctx_len(seq_len, 1);
+    let step = rng.range(1, 7) as i64;
+    let start = rng.range_u32(0, NCONTENT)  as i64;
+    let width = 4usize;
+    let nlines = n / (width + 1);
+    let mut ctx = Vec::with_capacity(n);
+    for i in 0..nlines {
+        ctx.push(SEP);
+        ctx.push(tok(start + i as i64 * step));
+        ctx.extend(filler(rng, width - 1));
+    }
+    while ctx.len() < n {
+        ctx.push(SEP);
+    }
+    ctx.truncate(n);
+    let next = tok(start + nlines as i64 * step);
+    assemble(Task::Rbp, ctx, vec![SEP], vec![next])
+}
+
+fn gen_lcc(rng: &mut Rng, seq_len: usize) -> Sample {
+    let n = ctx_len(seq_len, 1);
+    let period = rng.range(3, 8);
+    let motif: Vec<u32> = (0..period).map(|_| CONTENT + rng.range_u32(0, NCONTENT) ).collect();
+    let ctx: Vec<u32> = (0..n).map(|i| motif[i % period]).collect();
+    let next = motif[n % period];
+    assemble(Task::Lcc, ctx, vec![SEP], vec![next])
+}
+
+// ---------------------------------------------------------------------------
+// request arrival traces (serving benchmarks)
+// ---------------------------------------------------------------------------
+
+/// A serving trace: request index, arrival time offset, and sample.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    pub arrival_ms: u64,
+    pub sample: Sample,
+}
+
+/// Poisson arrivals over a task mixture — the workload for the
+/// end-to-end serving benchmarks (Fig 3a uses the batch variant).
+pub fn poisson_trace(
+    seed: u64,
+    tasks: &[Task],
+    n_requests: usize,
+    seq_len: usize,
+    rate_per_s: f64,
+) -> Vec<TraceEntry> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut t_ms = 0f64;
+    (0..n_requests)
+        .map(|i| {
+            let dt = -(1.0 - rng.f64()).ln() / rate_per_s * 1000.0;
+            t_ms += dt;
+            let task = tasks[i % tasks.len()];
+            TraceEntry {
+                arrival_ms: t_ms as u64,
+                sample: generate(task, &mut rng, seq_len),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(42)
+    }
+
+    #[test]
+    fn all_tasks_generate_within_length() {
+        let all = [
+            Task::Qasper, Task::MFen, Task::HotQA, Task::Wiki2, Task::Gov,
+            Task::MNews, Task::Trec, Task::Tqa, Task::Sams, Task::PCount,
+            Task::PRe, Task::Rbp, Task::Lcc, Task::Ruler, Task::Lbv2Easy,
+            Task::Lbv2Hard, Task::Gsm, Task::Aime,
+        ];
+        let mut r = rng();
+        for task in all {
+            for len in [128usize, 256, 512, 1024] {
+                let s = generate(task, &mut r, len);
+                assert!(s.prompt.len() <= len, "{task:?} at {len}: {}", s.prompt.len());
+                assert!(s.prompt.len() >= len / 2, "{task:?} too short at {len}");
+                assert_eq!(s.prompt[0], BOS);
+                assert_eq!(*s.prompt.last().unwrap(), ANSWER);
+                assert!(!s.answer.is_empty());
+                assert!(s.answer.iter().all(|&a| a >= CONTENT && a < VOCAB));
+            }
+        }
+    }
+
+    #[test]
+    fn qasper_answer_is_retrievable() {
+        let mut r = rng();
+        for _ in 0..20 {
+            let s = generate(Task::Qasper, &mut r, 256);
+            let qpos = s.prompt.iter().rposition(|&t| t == QUERY).unwrap();
+            let key = s.prompt[qpos + 1];
+            let found = (0..qpos).any(|i| {
+                s.prompt[i] == SEP
+                    && s.prompt.get(i + 1) == Some(&key)
+                    && s.prompt.get(i + 2) == Some(&s.answer[0])
+            });
+            assert!(found, "fact not found in context");
+        }
+    }
+
+    #[test]
+    fn pre_needle_depth_is_uniform() {
+        let mut r = rng();
+        let mut depths = vec![];
+        for _ in 0..50 {
+            let s = generate(Task::PRe, &mut r, 512);
+            let qpos = s.prompt.iter().rposition(|&t| t == QUERY).unwrap();
+            let key = s.prompt[qpos + 1];
+            depths.push(s.prompt.iter().position(|&t| t == key).unwrap() as f64);
+        }
+        let mean = depths.iter().sum::<f64>() / depths.len() as f64;
+        let var = depths.iter().map(|d| (d - mean).powi(2)).sum::<f64>() / depths.len() as f64;
+        assert!(var.sqrt() > 50.0, "needle depths not spread: sd={}", var.sqrt());
+    }
+
+    #[test]
+    fn trec_example_in_local_window() {
+        let mut r = rng();
+        let mut hits = 0;
+        for _ in 0..20 {
+            let s = generate(Task::Trec, &mut r, 512);
+            let qpos = s.prompt.iter().rposition(|&t| t == QUERY).unwrap();
+            let pat = s.prompt[qpos + 1];
+            let lo = qpos.saturating_sub(128);
+            if s.prompt[lo..qpos].contains(&pat) {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 16, "only {hits}/20 queries had in-window examples");
+    }
+
+    #[test]
+    fn poisson_trace_is_monotone() {
+        let tr = poisson_trace(7, &[Task::PRe, Task::Gov], 32, 256, 10.0);
+        assert_eq!(tr.len(), 32);
+        for w in tr.windows(2) {
+            assert!(w[0].arrival_ms <= w[1].arrival_ms);
+        }
+    }
+
+    #[test]
+    fn category_split_matches_design() {
+        assert!(Task::PRe.is_retrieval());
+        assert!(Task::HotQA.is_retrieval());
+        assert!(!Task::Gov.is_retrieval());
+        assert!(!Task::Lcc.is_retrieval());
+        assert_eq!(LONGBENCH_TASKS.len(), 13);
+    }
+}

@@ -1,0 +1,222 @@
+//! Property-based tests on coordinator-side invariants (no artifacts
+//! needed): KV-cache accounting, ring-buffer semantics, routing policy
+//! algebra, tokenizer round-trips, workload layout, simulator
+//! monotonicity, eigensolver conservation laws.
+//!
+//! Uses the in-crate property runner (`util::prop`): seeded random
+//! cases; failures report the replayable seed.
+
+use flux_attention::baselines::{entropy_ranked_modes, jacobi_eigenvalues};
+use flux_attention::gpu_sim::{decode_latency_s, GpuSimConfig, SimPolicy};
+use flux_attention::kvcache::{FullCache, SparseCache};
+use flux_attention::router::{pool_descriptor, AttnMode};
+use flux_attention::runtime::HostTensor;
+use flux_attention::tokenizer::Tokenizer;
+use flux_attention::util::prop::check;
+use flux_attention::util::rng::Rng;
+use flux_attention::workload::{generate, Task};
+use flux_attention::{prop_assert, prop_assert_eq};
+
+#[test]
+fn full_cache_accounting() {
+    check("full_cache_accounting", 64, |rng| {
+        let n = rng.range(1, 300);
+        let cap = rng.range(1, 64);
+        let mut c = FullCache::new(2, 4, cap);
+        for i in 0..n {
+            let k = vec![i as f32; 8];
+            c.append(&k, &k);
+        }
+        prop_assert_eq!(c.len(), n);
+        prop_assert!(c.capacity() >= n);
+        let bucket = c.len().next_power_of_two();
+        let (kt, _) = c.as_tensors(bucket);
+        for i in 0..n {
+            prop_assert_eq!(kt.data[i * 4], i as f32);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sparse_cache_window_invariant() {
+    check("sparse_cache_window_invariant", 64, |rng| {
+        let n = rng.range(1, 400);
+        let sink = rng.range(1, 8);
+        let local = rng.range(1, 16);
+        let buf = sink + local + 1;
+        let mut c = SparseCache::new(1, 1, sink, local, buf);
+        for i in 0..n {
+            c.append(&[i as f32], &[i as f32]);
+        }
+        prop_assert!(c.len() <= sink + local);
+        prop_assert_eq!(c.total_seen(), n);
+        let (kt, _, valid) = c.as_tensors();
+        let n_sink = n.min(sink);
+        for t in 0..n_sink {
+            prop_assert_eq!(kt.data[t], t as f32);
+        }
+        let n_win = (n - n_sink).min(local);
+        for (j, t) in ((n - n_win)..n).enumerate() {
+            prop_assert_eq!(kt.data[n_sink + j], t as f32);
+        }
+        prop_assert_eq!(valid, n_sink + n_win);
+        Ok(())
+    });
+}
+
+#[test]
+fn sparse_prefill_equals_appends() {
+    check("sparse_prefill_equals_appends", 64, |rng| {
+        let valid = rng.range(1, 64);
+        let (sink, local, buf) = (4usize, 8usize, 16usize);
+        let mk = |t: usize| vec![t as f32];
+        let mut by_append = SparseCache::new(1, 1, sink, local, buf);
+        for t in 0..valid {
+            by_append.append(&mk(t), &mk(t));
+        }
+        let data: Vec<f32> = (0..64).map(|t| t as f32).collect();
+        let kt = HostTensor::new(vec![1, 64, 1], data);
+        let mut by_prefill = SparseCache::new(1, 1, sink, local, buf);
+        by_prefill.load_prefill(&kt, &kt.clone(), valid);
+        let (a, _, va) = by_append.as_tensors();
+        let (p, _, vp) = by_prefill.as_tensors();
+        prop_assert_eq!(va, vp);
+        prop_assert_eq!(&a.data[..va], &p.data[..vp]);
+        Ok(())
+    });
+}
+
+#[test]
+fn pooling_bounds() {
+    check("pooling_bounds", 64, |rng| {
+        let s = rng.range(1, 256);
+        let d = rng.range(1, 16);
+        let pool = rng.range(1, 32);
+        let data: Vec<f32> = (0..s * d).map(|i| (i % 7) as f32 - 3.0).collect();
+        let h = HostTensor::new(vec![s, d], data.clone());
+        let desc = pool_descriptor(&h, s, pool);
+        prop_assert_eq!(desc.shape, vec![2 * d]);
+        let lo = data.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        for &x in &desc.data {
+            prop_assert!(x >= lo - 1e-5 && x <= hi + 1e-5, "desc value {x} out of [{lo},{hi}]");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn entropy_ranking_budget() {
+    check("entropy_ranking_budget", 64, |rng| {
+        let l = rng.range(2, 32);
+        let omega = rng.f64();
+        let scores: Vec<f64> = (0..l).map(|i| (i * 37 % 11) as f64).collect();
+        let modes = entropy_ranked_modes(&scores, omega, AttnMode::Ssa);
+        let n_fa = modes.iter().filter(|m| **m == AttnMode::Fa).count();
+        prop_assert_eq!(n_fa, ((1.0 - omega) * l as f64).floor() as usize);
+        Ok(())
+    });
+}
+
+#[test]
+fn tokenizer_roundtrip() {
+    check("tokenizer_roundtrip", 64, |rng| {
+        let t = Tokenizer::new();
+        let n = rng.range(0, 64);
+        let ids: Vec<u32> = (0..n).map(|_| rng.range_u32(0, 512)).collect();
+        let text = t.decode(&ids);
+        prop_assert_eq!(t.encode(&text), ids);
+        Ok(())
+    });
+}
+
+#[test]
+fn workload_layout() {
+    check("workload_layout", 48, |rng| {
+        let len = rng.range(64, 1024);
+        for task in [Task::Qasper, Task::PRe, Task::Gov, Task::Trec, Task::Gsm] {
+            let s = generate(task, rng, len);
+            prop_assert!(s.prompt.len() <= len, "{:?} too long", task);
+            prop_assert_eq!(*s.prompt.last().unwrap(), 5u32); // ANSWER
+            prop_assert!(!s.answer.is_empty());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gpu_sim_monotonicity() {
+    check("gpu_sim_monotonicity", 64, |rng| {
+        let cfg = GpuSimConfig::default();
+        let c1 = rng.range(1024, 100_000);
+        let c2 = c1 * rng.range(2, 8);
+        for p in [
+            SimPolicy::Dense,
+            SimPolicy::HeadLevel { sparse_frac: 0.5, window: 2048 },
+            SimPolicy::LayerLevel { sparse_frac: 0.5, window: 2048 },
+        ] {
+            prop_assert!(
+                decode_latency_s(&cfg, &p, c2) >= decode_latency_s(&cfg, &p, c1),
+                "latency not monotone for {p:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn jacobi_trace_preserved() {
+    check("jacobi_trace_preserved", 64, |rng| {
+        // symmetric PSD A = B B^T for random 3x3 B
+        let d = 3;
+        let vals: Vec<f64> = (0..9).map(|_| rng.f64() * 4.0 - 2.0).collect();
+        let mut a = vec![0.0; 9];
+        for i in 0..d {
+            for j in 0..d {
+                let mut s = 0.0;
+                for k in 0..d {
+                    s += vals[i * d + k] * vals[j * d + k];
+                }
+                a[i * d + j] = s;
+            }
+        }
+        let trace: f64 = (0..d).map(|i| a[i * d + i]).sum();
+        let ev = jacobi_eigenvalues(&a, d, 16);
+        let sum: f64 = ev.iter().sum();
+        prop_assert!(
+            (sum - trace).abs() < 1e-8 * (1.0 + trace.abs()),
+            "trace {trace} vs eigensum {sum}"
+        );
+        for &e in &ev {
+            prop_assert!(e > -1e-9, "negative eigenvalue {e} from PSD matrix");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn json_roundtrip_numbers_and_strings() {
+    use flux_attention::util::json::Json;
+    check("json_roundtrip", 64, |rng| {
+        let mut o = Json::obj();
+        let n = rng.range(1, 12);
+        for i in 0..n {
+            match rng.gen_range(3) {
+                0 => {
+                    o.set(&format!("k{i}"), Json::from(rng.gen_range(100000)));
+                }
+                1 => {
+                    o.set(&format!("k{i}"), Json::from(rng.f64()));
+                }
+                _ => {
+                    o.set(&format!("k{i}"), Json::from(format!("v\"{}\\n", rng.gen_range(99))));
+                }
+            }
+        }
+        let text = o.to_string();
+        let back = Json::parse(&text).map_err(|e| e.to_string())?;
+        prop_assert_eq!(back.to_string(), text);
+        Ok(())
+    });
+}
