@@ -28,10 +28,11 @@ fn main() {
     }
     b.run("kv_as_tensors/sparse", 3, 100, || sc.as_tensors());
 
-    // literal conversion of decode-sized tensors
+    // host-tensor materialization of decode-sized arguments (the
+    // backend-boundary copy that replaced per-call literal conversion)
     for len in [192usize, 2048] {
         let t = HostTensor::zeros(vec![h, len, d]);
-        b.run(&format!("to_literal/{len}"), 3, 100, || t.to_literal().unwrap());
+        b.run(&format!("tensor_clone/{len}"), 3, 100, || t.clone());
     }
 
     // pooling + argmax (per-layer / per-token host work)

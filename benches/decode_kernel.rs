@@ -9,17 +9,23 @@ use flux_attention::util::rng::Rng;
 use flux_attention::workload::{generate, Task};
 
 fn main() {
-    let dir = std::path::PathBuf::from(
-        std::env::var("FLUX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    );
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping decode_kernel: run `make artifacts` first");
-        return;
-    }
+    // $FLUX_ARTIFACTS when populated, otherwise hermetic synthetic
+    // artifacts on the RefBackend — the bench always runs.
+    let dir = flux_attention::runtime::synthetic::ensure_default().expect("artifacts");
     let mut engine = Engine::load(&dir).expect("engine load");
     let n_layers = engine.cfg().model.n_layers;
+    // stay inside the artifact bucket ledger (synthetic tops out lower
+    // than the full AOT export)
+    let max_prefill = *engine.cfg().prefill_buckets.last().unwrap();
+    let max_decode = *engine.cfg().decode_kv_buckets.last().unwrap();
     let mut b = Bench::new("decode");
     for seq in [256usize, 512, 1024, 2000] {
+        if seq > max_prefill || seq + 16 > max_decode {
+            eprintln!(
+                "  (skipping kv {seq}: exceeds bucket ledger, prefill max {max_prefill} / decode max {max_decode})"
+            );
+            continue;
+        }
         let mut rng = Rng::seed_from_u64(2);
         let sample = generate(Task::PRe, &mut rng, seq);
 

@@ -2,7 +2,8 @@
 //! context buckets. The dense/FA row is the 1.0x baseline; the mode/FA
 //! latency ratios give the speedup series of the paper's figure.
 //!
-//! Requires `make artifacts`. Skips gracefully when artifacts are absent.
+//! Uses `$FLUX_ARTIFACTS` when populated, otherwise hermetic synthetic
+//! artifacts on the pure-Rust RefBackend.
 
 use flux_attention::engine::Engine;
 use flux_attention::router::{AttnMode, DecodeMode, Policy};
@@ -11,17 +12,18 @@ use flux_attention::util::rng::Rng;
 use flux_attention::workload::{generate, Task};
 
 fn main() {
-    let dir = std::path::PathBuf::from(
-        std::env::var("FLUX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    );
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping prefill_speedup: run `make artifacts` first");
-        return;
-    }
+    // $FLUX_ARTIFACTS when populated, otherwise hermetic synthetic
+    // artifacts on the RefBackend — the bench always runs.
+    let dir = flux_attention::runtime::synthetic::ensure_default().expect("artifacts");
     let mut engine = Engine::load(&dir).expect("engine load");
     let n_layers = engine.cfg().model.n_layers;
+    let max_prefill = *engine.cfg().prefill_buckets.last().unwrap();
     let mut b = Bench::new("prefill");
     for seq in [128usize, 512, 2040] {
+        if seq > max_prefill {
+            eprintln!("  (skipping ctx {seq}: exceeds max prefill bucket {max_prefill})");
+            continue;
+        }
         let mut rng = Rng::seed_from_u64(1);
         let sample = generate(Task::PRe, &mut rng, seq);
         for mode in [AttnMode::Fa, AttnMode::Ssa, AttnMode::Ta, AttnMode::Xa] {

@@ -19,9 +19,8 @@ use flux_attention::util::rng::Rng;
 use flux_attention::workload::{generate, Task};
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = std::path::PathBuf::from(
-        std::env::var("FLUX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    );
+    // $FLUX_ARTIFACTS (trained AOT export) or hermetic synthetic artifacts
+    let artifacts = flux_attention::runtime::synthetic::ensure_default()?;
     eprintln!("loading engine from {artifacts:?} ...");
     let engine = EngineHandle::spawn(artifacts)?;
     let tok = Tokenizer::new();

@@ -12,9 +12,8 @@ use flux_attention::workload::{generate, Task};
 use flux_attention::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = std::path::PathBuf::from(
-        std::env::var("FLUX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    );
+    // $FLUX_ARTIFACTS (trained AOT export) or hermetic synthetic artifacts
+    let artifacts = flux_attention::runtime::synthetic::ensure_default()?;
     let mut engine = Engine::load(&artifacts)?;
     let policy = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Dense };
     let n_layers = engine.cfg().model.n_layers;
@@ -55,7 +54,11 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("\nrouter overhead (ms per layer) vs context length:");
+    let max_prefill = *engine.cfg().prefill_buckets.last().unwrap();
     for seq in [128usize, 256, 512, 1024, 2040] {
+        if seq > max_prefill {
+            continue; // synthetic bucket ledger tops out below the AOT export
+        }
         let mut rng = Rng::seed_from_u64(99);
         let s = generate(Task::PRe, &mut rng, seq);
         let (id, report) = engine.prefill(&s.prompt, &policy, "balanced")?;

@@ -14,9 +14,8 @@ use flux_attention::router::{AttnMode, DecodeMode, Policy};
 use flux_attention::workload::Task;
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = std::path::PathBuf::from(
-        std::env::var("FLUX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    );
+    // $FLUX_ARTIFACTS (trained AOT export) or hermetic synthetic artifacts
+    let artifacts = flux_attention::runtime::synthetic::ensure_default()?;
     let mut engine = Engine::load(&artifacts)?;
     let seq_len = 512;
     let n = 4;

@@ -158,6 +158,26 @@ impl MetaConfig {
         self.decode_kv_buckets.iter().copied().find(|&b| b >= len)
     }
 
+    /// Bucket for a dense decode-attend over a cache holding `len`
+    /// tokens in a backing store of `capacity` slots.
+    ///
+    /// Prefers `capacity` when it is itself a published decode bucket —
+    /// the cache's internal buffer is then already in executable layout
+    /// and `FullCache::as_tensors` takes its zero-re-layout fast path.
+    /// Otherwise (prefill buckets misaligned with decode buckets, or a
+    /// capacity grown past the largest bucket) falls back to the
+    /// smallest published bucket that fits `len`. The old
+    /// `decode_bucket(len).max(capacity.min(last))` expression instead
+    /// selected non-existent executables whenever a grown capacity was
+    /// not a published bucket (regression-tested in
+    /// `tests/integration.rs::decode_bucket_selection_across_boundaries`).
+    pub fn decode_attend_bucket(&self, len: usize, capacity: usize) -> Option<usize> {
+        if capacity >= len && self.decode_kv_buckets.contains(&capacity) {
+            return Some(capacity);
+        }
+        self.decode_bucket(len)
+    }
+
     /// Default artifacts location (env override for tests/benches).
     pub fn default_dir() -> PathBuf {
         std::env::var("FLUX_ARTIFACTS")
@@ -225,6 +245,24 @@ mod tests {
         assert_eq!(m.prefill_bucket(2048), Some(2048));
         assert_eq!(m.prefill_bucket(2049), None);
         assert_eq!(m.decode_bucket(500), Some(512));
+    }
+
+    #[test]
+    fn decode_attend_bucket_prefers_aligned_capacity() {
+        let m = meta_for_test(); // decode buckets [128, 256, 512, 1024, 2048]
+        // capacity is a published bucket -> reuse it (fast path), even
+        // when a smaller bucket would fit
+        assert_eq!(m.decode_attend_bucket(130, 256), Some(256));
+        assert_eq!(m.decode_attend_bucket(10, 2048), Some(2048));
+        // capacity NOT a published bucket (e.g. grown from a 96-slot
+        // prefill bucket): fall back to the smallest bucket >= len
+        assert_eq!(m.decode_attend_bucket(97, 192), Some(128));
+        assert_eq!(m.decode_attend_bucket(129, 192), Some(256));
+        // boundary: exactly at a bucket edge
+        assert_eq!(m.decode_attend_bucket(128, 128), Some(128));
+        assert_eq!(m.decode_attend_bucket(129, 4096), Some(256));
+        // overflow past the largest bucket is a hard None
+        assert_eq!(m.decode_attend_bucket(2049, 4096), None);
     }
 
     #[test]

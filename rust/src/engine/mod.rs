@@ -1,12 +1,17 @@
-//! The serving engine: owns the PJRT runtime, model weights, routers and
-//! all per-request KV state, and executes prefill / decode steps.
+//! The serving engine: owns the execution backend, model weights,
+//! routers and all per-request KV state, and executes prefill / decode
+//! steps.
 //!
-//! PJRT handles are `!Send`, so the [`Engine`] lives on one dedicated
-//! executor thread; the async coordinator drives it through the
-//! [`EngineHandle`] channel API (mirrors the single-GPU worker model of
-//! vLLM-style engines — one device, serialized kernel stream).
+//! Backends are not required to be `Send` (PJRT handles are raw
+//! pointers), so the [`Engine`] lives on one dedicated executor thread;
+//! the coordinator drives it through the [`EngineHandle`] channel API
+//! (mirrors the single-GPU worker model of vLLM-style engines — one
+//! device, serialized kernel stream). Which backend runs underneath —
+//! the pure-Rust [`crate::runtime::RefBackend`] or PJRT — is decided by
+//! [`crate::runtime::open_backend`] from the artifact manifest; the
+//! engine itself is backend-agnostic (DESIGN.md §2).
 //!
-//! Request data path (DESIGN.md section 6):
+//! Request data path (DESIGN.md §5):
 //!
 //! ```text
 //! prefill:  embed -> for each layer: [pool -> route]? -> layer exe
@@ -24,7 +29,7 @@ use crate::config::MetaConfig;
 use crate::kvcache::{FullCache, LayerCache, SparseCache};
 use crate::model::{argmax, ModelWeights};
 use crate::router::{pool_descriptor, AttnMode, DecodeMode, Policy, RouterNet};
-use crate::runtime::{i32_literal, HostTensor, Runtime, WeightStore};
+use crate::runtime::{open_backend, Arg, Backend, HostTensor, WeightStore};
 
 /// Timing + routing info returned by prefill (feeds metrics and the
 /// paper's efficiency figures).
@@ -51,7 +56,7 @@ pub struct RequestState {
 
 /// The engine proper (not `Send`; lives on the executor thread).
 pub struct Engine {
-    pub rt: Runtime,
+    pub rt: Box<dyn Backend>,
     pub weights: ModelWeights,
     pub routers: HashMap<String, RouterNet>,
     cfg: MetaConfig,
@@ -60,15 +65,16 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Load runtime + weights + every available router variant and
-    /// compile all executables listed in the manifest.
+    /// Load backend + weights + every available router variant and
+    /// prepare all executables listed in the manifest.
     pub fn load(artifacts: &std::path::Path) -> Result<Self> {
         let cfg = MetaConfig::load(artifacts)?;
-        let mut rt = Runtime::new(artifacts)?;
         let manifest = crate::util::json::Json::parse(&std::fs::read_to_string(
             artifacts.join("manifest.json"),
         )?)
         .map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
+        let hint = manifest.get("backend").and_then(crate::util::json::Json::as_str);
+        let mut rt = open_backend(&cfg, hint)?;
         for exe in manifest
             .get("executables")
             .and_then(crate::util::json::Json::as_arr)
@@ -136,6 +142,7 @@ impl Engine {
         let local = cfg.sparsity.local_size;
         let sa_buf = cfg.sa_buf;
         let (nh, hd) = (cfg.model.n_heads, cfg.model.head_dim);
+        let d = cfg.model.d_model;
         let decode_mode = policy.decode_mode();
 
         let mut hidden = self.weights.embed_tokens(tokens, bucket);
@@ -155,7 +162,7 @@ impl Engine {
                         .routers
                         .get(router_name)
                         .ok_or_else(|| anyhow::anyhow!("router '{router_name}' missing"))?;
-                    let (is_fa, _) = net.route(&mut self.rt, layer, &desc)?;
+                    let (is_fa, _) = net.route(&mut *self.rt, layer, &desc)?;
                     router_us += t0.elapsed().as_micros() as u64;
                     if is_fa {
                         AttnMode::Fa
@@ -168,39 +175,53 @@ impl Engine {
 
             // --- layer execution ---
             let exe = format!("{}_{}", mode.exe_prefix(), bucket);
-            let hlit = hidden.to_literal()?;
             let w = &self.weights.layers[layer];
-            let out = self.rt.run(
+            let mut out = self.rt.run(
                 &exe,
-                &[&hlit, &w.norm1, &w.wq, &w.wk, &w.wv, &w.wo, &w.norm2, &w.w_ff1, &w.w_ff2],
+                &[
+                    Arg::F32(&hidden),
+                    Arg::F32(&w.norm1),
+                    Arg::F32(&w.wq),
+                    Arg::F32(&w.wk),
+                    Arg::F32(&w.wv),
+                    Arg::F32(&w.wo),
+                    Arg::F32(&w.norm2),
+                    Arg::F32(&w.w_ff1),
+                    Arg::F32(&w.w_ff2),
+                ],
             )?;
-            let (h_out, k, v) = (out[0].clone(), &out[1], &out[2]);
-            hidden = h_out;
+            anyhow::ensure!(out.len() == 3, "prefill layer must return (hidden, k, v)");
+            let v = out.pop().unwrap();
+            let k = out.pop().unwrap();
+            hidden = out.pop().unwrap();
 
             // --- KV retention per routing decision + decode mode ---
             let sparse_cache = decode_mode == DecodeMode::Sparse && mode != AttnMode::Fa;
             let cache = if sparse_cache {
                 let mut c = SparseCache::new(nh, hd, sink, local, sa_buf);
-                c.load_prefill(k, v, valid);
+                c.load_prefill(&k, &v, valid);
                 LayerCache::Sparse(c)
             } else {
                 let mut c = FullCache::new(nh, hd, bucket);
-                c.load_prefill(k, v, valid);
+                c.load_prefill(&k, &v, valid);
                 LayerCache::Full(c)
             };
             caches.push(cache);
         }
 
         // first generated token from the last valid position
-        let d = cfg.model.d_model;
         let last_hidden = HostTensor::new(
             vec![d],
             hidden.data[(valid - 1) * d..valid * d].to_vec(),
         );
-        let llit = last_hidden.to_literal()?;
-        let logits = self
-            .rt
-            .run("lm_head", &[&llit, &self.weights.norm_f, &self.weights.lm_head])?;
+        let logits = self.rt.run(
+            "lm_head",
+            &[
+                Arg::F32(&last_hidden),
+                Arg::F32(&self.weights.norm_f),
+                Arg::F32(&self.weights.lm_head),
+            ],
+        )?;
         let first_token = argmax(&logits[0].data);
 
         let omsr = modes.iter().filter(|m| **m != AttnMode::Fa).count() as f64
@@ -236,22 +257,30 @@ impl Engine {
     /// One decode step: consume the request's `last_token`, produce the
     /// next. The caller owns the stop condition (EOS / max tokens).
     pub fn decode_step(&mut self, id: u64) -> Result<u32> {
-        let cfg = self.cfg.clone();
+        let cfg = &self.cfg;
         let state = self
             .requests
             .get_mut(&id)
             .ok_or_else(|| anyhow::anyhow!("unknown request {id}"))?;
         let pos = state.n_tokens;
         let mut hidden = self.weights.embed_one(state.last_token);
-        let pos_lit = i32_literal(&[pos as i32]);
+        let pos_arr = [pos as i32];
 
         for layer in 0..cfg.model.n_layers {
             let w = &self.weights.layers[layer];
-            let hlit = hidden.to_literal()?;
             // stage 1: project + rope the current token
-            let qkv = self
-                .rt
-                .run("decode_qkv", &[&hlit, &pos_lit, &w.norm1, &w.wq, &w.wk, &w.wv])?;
+            let qkv = self.rt.run(
+                "decode_qkv",
+                &[
+                    Arg::F32(&hidden),
+                    Arg::I32(&pos_arr),
+                    Arg::F32(&w.norm1),
+                    Arg::F32(&w.wq),
+                    Arg::F32(&w.wk),
+                    Arg::F32(&w.wv),
+                ],
+            )?;
+            anyhow::ensure!(qkv.len() == 3, "decode_qkv must return (q, k, v)");
             let (q, k_new, v_new) = (&qkv[0], &qkv[1], &qkv[2]);
 
             // stage 2: append then attend over the cache
@@ -260,57 +289,61 @@ impl Engine {
                 LayerCache::Full(c) => {
                     c.append(&k_new.data, &v_new.data);
                     let bucket = cfg
-                        .decode_bucket(c.len())
-                        .ok_or_else(|| anyhow::anyhow!("KV overflow at {}", c.len()))?
-                        .max(c.capacity().min(*cfg.decode_kv_buckets.last().unwrap()));
-                    let (klit, vlit) = c.as_literals(bucket)?;
-                    let valid = i32_literal(&[c.len() as i32]);
+                        .decode_attend_bucket(c.len(), c.capacity())
+                        .ok_or_else(|| anyhow::anyhow!("KV overflow at {}", c.len()))?;
+                    let (kt, vt) = c.as_tensors(bucket);
+                    let valid_arr = [c.len() as i32];
                     let exe = format!("decode_attend_fa_{bucket}");
                     let out = self.rt.run(
                         &exe,
                         &[
-                            &hlit,
-                            &q.to_literal()?,
-                            &klit,
-                            &vlit,
-                            &valid,
-                            &w.wo,
-                            &w.norm2,
-                            &w.w_ff1,
-                            &w.w_ff2,
+                            Arg::F32(&hidden),
+                            Arg::F32(q),
+                            Arg::F32(&kt),
+                            Arg::F32(&vt),
+                            Arg::I32(&valid_arr),
+                            Arg::F32(&w.wo),
+                            Arg::F32(&w.norm2),
+                            Arg::F32(&w.w_ff1),
+                            Arg::F32(&w.w_ff2),
                         ],
                     )?;
-                    hidden = out[0].clone();
+                    anyhow::ensure!(!out.is_empty(), "decode_attend returned no output");
+                    hidden = out.into_iter().next().unwrap();
                 }
                 LayerCache::Sparse(c) => {
                     c.append(&k_new.data, &v_new.data);
                     let (kt, vt, valid) = c.as_tensors();
-                    let vlit = i32_literal(&[valid as i32]);
+                    let valid_arr = [valid as i32];
                     let out = self.rt.run(
                         "decode_attend_sa",
                         &[
-                            &hlit,
-                            &q.to_literal()?,
-                            &kt.to_literal()?,
-                            &vt.to_literal()?,
-                            &vlit,
-                            &w.wo,
-                            &w.norm2,
-                            &w.w_ff1,
-                            &w.w_ff2,
+                            Arg::F32(&hidden),
+                            Arg::F32(q),
+                            Arg::F32(&kt),
+                            Arg::F32(&vt),
+                            Arg::I32(&valid_arr),
+                            Arg::F32(&w.wo),
+                            Arg::F32(&w.norm2),
+                            Arg::F32(&w.w_ff1),
+                            Arg::F32(&w.w_ff2),
                         ],
                     )?;
-                    hidden = out[0].clone();
+                    anyhow::ensure!(!out.is_empty(), "decode_attend returned no output");
+                    hidden = out.into_iter().next().unwrap();
                 }
             }
         }
 
-        let hlit = hidden.to_literal()?;
-        let logits = self
-            .rt
-            .run("lm_head", &[&hlit, &self.weights.norm_f, &self.weights.lm_head])?;
+        let logits = self.rt.run(
+            "lm_head",
+            &[
+                Arg::F32(&hidden),
+                Arg::F32(&self.weights.norm_f),
+                Arg::F32(&self.weights.lm_head),
+            ],
+        )?;
         let next = argmax(&logits[0].data);
-        let state = self.requests.get_mut(&id).unwrap();
         state.n_tokens += 1;
         state.last_token = next;
         Ok(next)
@@ -344,17 +377,27 @@ impl Engine {
             .ok_or_else(|| anyhow::anyhow!("prompt too long"))?;
         let valid = tokens.len();
         let d = cfg.model.d_model;
+        let n_layers = cfg.model.n_layers;
         let mut hidden = self.weights.embed_tokens(tokens, bucket);
-        let mut scores = Vec::with_capacity(cfg.model.n_layers);
-        for layer in 0..cfg.model.n_layers {
-            let exe = format!("layer_fa_prefill_{bucket}");
-            let hlit = hidden.to_literal()?;
+        let mut scores = Vec::with_capacity(n_layers);
+        let exe = format!("layer_fa_prefill_{bucket}");
+        for layer in 0..n_layers {
             let w = &self.weights.layers[layer];
             let out = self.rt.run(
                 &exe,
-                &[&hlit, &w.norm1, &w.wq, &w.wk, &w.wv, &w.wo, &w.norm2, &w.w_ff1, &w.w_ff2],
+                &[
+                    Arg::F32(&hidden),
+                    Arg::F32(&w.norm1),
+                    Arg::F32(&w.wq),
+                    Arg::F32(&w.wk),
+                    Arg::F32(&w.wv),
+                    Arg::F32(&w.wo),
+                    Arg::F32(&w.norm2),
+                    Arg::F32(&w.w_ff1),
+                    Arg::F32(&w.w_ff2),
+                ],
             )?;
-            hidden = out[0].clone();
+            hidden = out.into_iter().next().unwrap();
             scores.push(crate::baselines::matrix_entropy(
                 &hidden.data[..valid * d],
                 valid,
@@ -376,7 +419,7 @@ impl Engine {
 }
 
 // ---------------------------------------------------------------------------
-// EngineHandle: Send/Sync channel facade for the async coordinator
+// EngineHandle: Send/Sync channel facade for the coordinator
 // ---------------------------------------------------------------------------
 
 pub enum EngineJob {

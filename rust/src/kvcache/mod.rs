@@ -110,28 +110,24 @@ impl FullCache {
         self.capacity = cap;
     }
 
+    /// Re-bucket into `(H, bucket, D)` tensors for the decode executable.
+    ///
     /// Fast path for the decode hot loop: when the cache's internal
     /// capacity already equals the requested bucket (the common case —
-    /// both are powers of two grown in lockstep), build the XLA
-    /// literals straight from the internal buffers, saving one full
-    /// re-layout copy per layer per token (see EXPERIMENTS.md §Perf).
-    pub fn as_literals(&self, bucket: usize) -> anyhow::Result<(xla::Literal, xla::Literal)> {
-        let (h, d) = (self.n_heads, self.head_dim);
-        let dims = [h as i64, bucket as i64, d as i64];
-        if bucket == self.capacity {
-            return Ok((
-                xla::Literal::vec1(&self.k).reshape(&dims)?,
-                xla::Literal::vec1(&self.v).reshape(&dims)?,
-            ));
-        }
-        let (kt, vt) = self.as_tensors(bucket);
-        Ok((kt.to_literal()?, vt.to_literal()?))
-    }
-
-    /// Re-bucket into `(H, bucket, D)` tensors for the decode executable.
+    /// both are published decode buckets grown in lockstep, and
+    /// [`crate::config::MetaConfig::decode_attend_bucket`] prefers the
+    /// capacity exactly for this reason), the internal `(H, capacity, D)`
+    /// buffers are already in executable layout and are cloned wholesale
+    /// instead of re-laid-out per head (see EXPERIMENTS.md §Perf).
     pub fn as_tensors(&self, bucket: usize) -> (HostTensor, HostTensor) {
         assert!(bucket >= self.len, "bucket {bucket} < len {}", self.len);
         let (h, d) = (self.n_heads, self.head_dim);
+        if bucket == self.capacity {
+            return (
+                HostTensor::new(vec![h, bucket, d], self.k.clone()),
+                HostTensor::new(vec![h, bucket, d], self.v.clone()),
+            );
+        }
         let mut k = vec![0.0; h * bucket * d];
         let mut v = vec![0.0; h * bucket * d];
         for hh in 0..h {

@@ -2,14 +2,27 @@
 //! engine — reproduction of *Flux Attention: Context-Aware Hybrid Attention
 //! for Efficient LLMs Inference* (Qiu et al., 2026).
 //!
-//! Architecture (see DESIGN.md):
+//! Architecture (see DESIGN.md at the repository root):
 //! * **L3 (this crate)** — the serving coordinator: request router,
 //!   continuous batcher, prefill/decode scheduler, KV-cache manager with
 //!   full and sparse (sink+local) layouts, the Layer Router integration,
 //!   baselines, a GPU decode-latency simulator, metrics and the eval
 //!   harness. Python never runs on the request path.
+//! * **Execution backends ([`runtime::Backend`])** — the engine calls
+//!   named executables through a pluggable backend seam. The default is
+//!   the hermetic pure-Rust [`runtime::RefBackend`] (reference CPU
+//!   kernels + [`runtime::synthetic`] artifacts — `cargo test` exercises
+//!   the full serving path with zero native dependencies). The `pjrt`
+//!   cargo feature adds [`runtime::pjrt`], which loads AOT HLO-text
+//!   artifacts via the PJRT C API.
 //! * **L2/L1 (python/, build-time)** — the JAX model and Pallas kernels,
-//!   AOT-lowered to HLO-text artifacts loaded here via the PJRT C API.
+//!   AOT-lowered to HLO-text artifacts for the PJRT backend; the
+//!   reference backend mirrors their math in Rust.
+
+// Index-based loops are the house style in the numeric kernels (shapes
+// and strides stay visible); executable signatures mirror the AOT
+// argument lists.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments, clippy::derivable_impls)]
 
 pub mod baselines;
 pub mod config;
@@ -30,3 +43,4 @@ pub mod workload;
 pub use config::MetaConfig;
 pub use engine::{Engine, EngineHandle};
 pub use router::{AttnMode, DecodeMode, Policy};
+pub use runtime::{Backend, HostTensor, RefBackend};

@@ -9,7 +9,14 @@
 //!        ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves all
 //!   flux [--artifacts DIR] bench-serve [--requests N] [--seq-len N]
 //!                                      [--rate R] [--policy P]
+//!   flux [--artifacts DIR] synth [--seed N]
 //!   flux [--artifacts DIR] info
+//!
+//! `synth` writes a deterministic synthetic artifact set (RefBackend
+//! manifest + weights + balanced router) into the artifacts dir, so
+//! every other subcommand runs hermetically without `make artifacts`.
+
+#![allow(clippy::needless_range_loop)]
 
 use std::path::PathBuf;
 
@@ -197,13 +204,23 @@ fn main() -> Result<()> {
             );
             Ok(())
         }
+        "synth" => {
+            let seed = args.get_usize("seed", 0) as u64;
+            let dir = flux_attention::runtime::synthetic::write_artifacts(
+                &artifacts,
+                flux_attention::runtime::synthetic::DEFAULT_META,
+                seed,
+            )?;
+            println!("synthetic artifacts (backend=ref, seed {seed}) written to {dir:?}");
+            Ok(())
+        }
         "info" => {
             let cfg = MetaConfig::load(&artifacts)?;
             println!("{cfg:#?}");
             Ok(())
         }
         _ => {
-            eprintln!("usage: flux [--artifacts DIR] <serve|generate|experiment|bench-serve|info> [flags]");
+            eprintln!("usage: flux [--artifacts DIR] <serve|generate|experiment|bench-serve|synth|info> [flags]");
             eprintln!("experiment ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves all");
             Ok(())
         }

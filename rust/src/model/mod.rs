@@ -1,32 +1,34 @@
 //! Model weights + the layer-by-layer execution engine primitives.
 //!
-//! Weights are loaded once from the AOT export and kept as XLA literals
-//! (one set per layer) so every executable call just borrows them —
-//! no per-call conversion on the hot path.
+//! Weights are loaded once from the artifact export and kept as host
+//! tensors in the argument order of the prefill/decode executables —
+//! every [`crate::runtime::Backend::run`] call just borrows them, so
+//! there is no per-call conversion on the hot path (the PJRT backend
+//! does its own literal conversion at the device boundary).
 
 use anyhow::Result;
 
 use crate::config::MetaConfig;
 use crate::runtime::{HostTensor, WeightStore};
 
-/// Per-layer backbone weights, pre-converted to literals in the
-/// argument order of the prefill/decode executables.
+/// Per-layer backbone weights, in the argument order of the
+/// prefill/decode executables.
 pub struct LayerWeights {
-    pub norm1: xla::Literal,
-    pub wq: xla::Literal,
-    pub wk: xla::Literal,
-    pub wv: xla::Literal,
-    pub wo: xla::Literal,
-    pub norm2: xla::Literal,
-    pub w_ff1: xla::Literal,
-    pub w_ff2: xla::Literal,
+    pub norm1: HostTensor,
+    pub wq: HostTensor,
+    pub wk: HostTensor,
+    pub wv: HostTensor,
+    pub wo: HostTensor,
+    pub norm2: HostTensor,
+    pub w_ff1: HostTensor,
+    pub w_ff2: HostTensor,
 }
 
 /// All backbone weights.
 pub struct ModelWeights {
     pub layers: Vec<LayerWeights>,
-    pub norm_f: xla::Literal,
-    pub lm_head: xla::Literal,
+    pub norm_f: HostTensor,
+    pub lm_head: HostTensor,
     /// host-side embedding table (V, d) — lookup happens in rust
     pub embed: HostTensor,
     pub cfg: MetaConfig,
@@ -37,20 +39,20 @@ impl ModelWeights {
         let mut layers = Vec::with_capacity(cfg.model.n_layers);
         for i in 0..cfg.model.n_layers {
             layers.push(LayerWeights {
-                norm1: ws.layer_slice("layers.norm1", i)?.to_literal()?,
-                wq: ws.layer_slice("layers.wq", i)?.to_literal()?,
-                wk: ws.layer_slice("layers.wk", i)?.to_literal()?,
-                wv: ws.layer_slice("layers.wv", i)?.to_literal()?,
-                wo: ws.layer_slice("layers.wo", i)?.to_literal()?,
-                norm2: ws.layer_slice("layers.norm2", i)?.to_literal()?,
-                w_ff1: ws.layer_slice("layers.w_ff1", i)?.to_literal()?,
-                w_ff2: ws.layer_slice("layers.w_ff2", i)?.to_literal()?,
+                norm1: ws.layer_slice("layers.norm1", i)?,
+                wq: ws.layer_slice("layers.wq", i)?,
+                wk: ws.layer_slice("layers.wk", i)?,
+                wv: ws.layer_slice("layers.wv", i)?,
+                wo: ws.layer_slice("layers.wo", i)?,
+                norm2: ws.layer_slice("layers.norm2", i)?,
+                w_ff1: ws.layer_slice("layers.w_ff1", i)?,
+                w_ff2: ws.layer_slice("layers.w_ff2", i)?,
             });
         }
         Ok(Self {
             layers,
-            norm_f: ws.get("norm_f")?.to_literal()?,
-            lm_head: ws.get("lm_head")?.to_literal()?,
+            norm_f: ws.get("norm_f")?.clone(),
+            lm_head: ws.get("lm_head")?.clone(),
             embed: ws.get("embed")?.clone(),
             cfg: cfg.clone(),
         })

@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use crate::runtime::{HostTensor, Runtime, WeightStore};
+use crate::runtime::{Arg, Backend, HostTensor, WeightStore};
 
 /// Attention mode of one layer (prefill kernels).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -130,10 +130,10 @@ pub fn pool_descriptor(hidden: &HostTensor, valid: usize, pool: usize) -> HostTe
     HostTensor::new(vec![2 * d], desc)
 }
 
-/// Trained Layer-Router weights (per layer), kept as XLA literals ready
-/// to feed the `router` executable.
+/// Trained Layer-Router weights (per layer), kept as host tensors ready
+/// to feed the `router` executable of any backend.
 pub struct RouterNet {
-    layers: Vec<[xla::Literal; 4]>, // w1, b1, w2, b2
+    layers: Vec<[HostTensor; 4]>, // w1, b1, w2, b2
 }
 
 impl RouterNet {
@@ -141,10 +141,10 @@ impl RouterNet {
     pub fn load(ws: &WeightStore, n_layers: usize) -> Result<Self> {
         let mut layers = Vec::with_capacity(n_layers);
         for i in 0..n_layers {
-            let w1 = ws.layer_slice("w1", i)?.to_literal()?;
-            let b1 = ws.layer_slice("b1", i)?.to_literal()?;
-            let w2 = ws.layer_slice("w2", i)?.to_literal()?;
-            let b2 = ws.layer_slice("b2", i)?.to_literal()?;
+            let w1 = ws.layer_slice("w1", i)?;
+            let b1 = ws.layer_slice("b1", i)?;
+            let w2 = ws.layer_slice("w2", i)?;
+            let b2 = ws.layer_slice("b2", i)?;
             layers.push([w1, b1, w2, b2]);
         }
         Ok(Self { layers })
@@ -158,13 +158,15 @@ impl RouterNet {
     /// Returns (is_fa, logits).
     pub fn route(
         &self,
-        rt: &mut Runtime,
+        rt: &mut dyn Backend,
         layer: usize,
         desc: &HostTensor,
     ) -> Result<(bool, [f32; 2])> {
-        let dlit = desc.to_literal()?;
         let [w1, b1, w2, b2] = &self.layers[layer];
-        let out = rt.run("router", &[&dlit, w1, b1, w2, b2])?;
+        let out = rt.run(
+            "router",
+            &[Arg::F32(desc), Arg::F32(w1), Arg::F32(b1), Arg::F32(w2), Arg::F32(b2)],
+        )?;
         let logits = &out[0].data;
         anyhow::ensure!(logits.len() == 2, "router output must be 2 logits");
         Ok((logits[1] > logits[0], [logits[0], logits[1]]))

@@ -1,24 +1,39 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//! Execution backends: the engine-facing [`Backend`] trait plus the
+//! host-side interchange types and artifact weight loading (DESIGN.md §3).
 //!
-//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! Interchange is HLO *text* — jax ≥ 0.5 emits protos with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §1).
+//! The engine never talks to a device API directly — it calls named
+//! executables (`layer_fa_prefill_256`, `decode_qkv`, `lm_head`, …)
+//! through `Backend::run` with [`HostTensor`] / i32 arguments and gets
+//! [`HostTensor`] outputs back. Two implementations exist:
 //!
-//! The runtime is deliberately `!Send`: PJRT handles are raw pointers.
-//! The [`crate::engine`] owns it on a dedicated executor thread and the
-//! async coordinator talks to that thread over channels.
+//! * [`ref_backend::RefBackend`] — pure-Rust CPU kernels mirroring the
+//!   math of `python/compile/kernels/ref.py`. The default: hermetic,
+//!   deterministic, zero native dependencies. Drives the whole test
+//!   suite via [`synthetic`] artifacts.
+//! * [`pjrt::PjrtBackend`] (cargo feature `pjrt`) — loads the AOT
+//!   HLO-text artifacts produced by `python -m compile.aot` and executes
+//!   them through the PJRT C API via the `xla` crate.
+//!
+//! Backends are deliberately NOT required to be `Send`: PJRT handles are
+//! raw pointers. The [`crate::engine`] owns its backend on a dedicated
+//! executor thread and the coordinator talks to that thread over
+//! channels.
 
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::time::Instant;
+use std::path::Path;
 
 use anyhow::{Context, Result};
-use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+pub mod ref_backend;
+pub mod synthetic;
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use ref_backend::RefBackend;
 
 /// A host-side f32 tensor: shape + row-major data. The lingua franca
-/// between the coordinator, KV caches and the PJRT boundary.
+/// between the coordinator, KV caches and every execution backend.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HostTensor {
     pub shape: Vec<usize>,
@@ -39,27 +54,33 @@ impl HostTensor {
     pub fn numel(&self) -> usize {
         self.data.len()
     }
-
-    /// Convert to an XLA literal (copies).
-    pub fn to_literal(&self) -> Result<Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(Literal::vec1(&self.data).reshape(&dims)?)
-    }
-
-    pub fn from_literal(lit: &Literal) -> Result<Self> {
-        let shape = lit
-            .array_shape()?
-            .dims()
-            .iter()
-            .map(|&d| d as usize)
-            .collect();
-        Ok(Self { shape, data: lit.to_vec::<f32>()? })
-    }
 }
 
-/// i32 scalar-vector helper (valid lengths, positions).
-pub fn i32_literal(vals: &[i32]) -> Literal {
-    Literal::vec1(vals)
+/// One borrowed executable argument. Mirrors the two dtypes the AOT
+/// executables accept: f32 tensors and i32 scalar-vectors (positions,
+/// valid lengths).
+#[derive(Debug, Clone, Copy)]
+pub enum Arg<'a> {
+    F32(&'a HostTensor),
+    I32(&'a [i32]),
+}
+
+impl<'a> Arg<'a> {
+    /// Unwrap as an f32 tensor (backend-side argument checking).
+    pub fn f32(&self) -> Result<&'a HostTensor> {
+        match self {
+            Arg::F32(t) => Ok(t),
+            Arg::I32(_) => anyhow::bail!("expected f32 tensor argument, got i32"),
+        }
+    }
+
+    /// Unwrap as an i32 vector.
+    pub fn i32(&self) -> Result<&'a [i32]> {
+        match self {
+            Arg::I32(v) => Ok(v),
+            Arg::F32(_) => anyhow::bail!("expected i32 argument, got f32 tensor"),
+        }
+    }
 }
 
 /// Cumulative execution statistics per executable (feeds the §Perf pass
@@ -70,106 +91,55 @@ pub struct ExeStats {
     pub total_us: u64,
 }
 
-/// Loads, compiles and caches the AOT executables.
-pub struct Runtime {
-    client: PjRtClient,
-    dir: PathBuf,
-    exes: HashMap<String, PjRtLoadedExecutable>,
-    stats: HashMap<String, ExeStats>,
+/// An executable provider: loads named executables from the artifact
+/// directory (or validates them against the model config, for the
+/// reference backend) and runs them on host tensors.
+///
+/// This is the multi-backend seam: the serving stack above it (engine,
+/// coordinator, eval, CLI) is backend-agnostic.
+pub trait Backend {
+    /// Short backend identifier ("ref", "pjrt", …) for logs and tests.
+    fn name(&self) -> &'static str;
+
+    /// Prepare executable `exe` (compile / validate). Idempotent.
+    fn load(&mut self, exe: &str) -> Result<()>;
+
+    fn is_loaded(&self, exe: &str) -> bool;
+
+    /// Execute `exe`; returns the decomposed output tuple. Errors if the
+    /// executable was never loaded or the arguments mismatch its
+    /// signature.
+    fn run(&mut self, exe: &str, args: &[Arg]) -> Result<Vec<HostTensor>>;
+
+    fn stats(&self) -> &HashMap<String, ExeStats>;
+
+    fn reset_stats(&mut self);
 }
 
-impl Runtime {
-    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        Ok(Self {
-            client,
-            dir: artifacts_dir.as_ref().to_path_buf(),
-            exes: HashMap::new(),
-            stats: HashMap::new(),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (and cache) the executable `name` from
-    /// `<dir>/<name>.hlo.txt`.
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.exes.contains_key(name) {
-            return Ok(());
+/// Select and construct a backend for an artifact directory.
+///
+/// `hint` is the optional `"backend"` field of `manifest.json`
+/// (`synthetic` artifacts say `"ref"`). Resolution:
+/// * default build — always the pure-Rust [`RefBackend`];
+/// * `--features pjrt` — [`pjrt::PjrtBackend`] unless the manifest asks
+///   for `"ref"` explicitly.
+pub fn open_backend(
+    cfg: &crate::config::MetaConfig,
+    hint: Option<&str>,
+) -> Result<Box<dyn Backend>> {
+    #[cfg(feature = "pjrt")]
+    {
+        if hint != Some("ref") {
+            return Ok(Box::new(pjrt::PjrtBackend::new(&cfg.artifacts_dir)?));
         }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow::anyhow!("{e:?}"))
-            .with_context(|| format!("loading {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("{e:?}"))
-            .with_context(|| format!("compiling {name}"))?;
-        self.exes.insert(name.to_string(), exe);
-        Ok(())
     }
-
-    pub fn is_loaded(&self, name: &str) -> bool {
-        self.exes.contains_key(name)
-    }
-
-    /// Execute `name` with literal arguments; returns the decomposed
-    /// output tuple as host tensors (every artifact is lowered with
-    /// `return_tuple=True`).
-    pub fn run(&mut self, name: &str, args: &[&Literal]) -> Result<Vec<HostTensor>> {
-        let t0 = Instant::now();
-        let exe = self
-            .exes
-            .get(name)
-            .ok_or_else(|| anyhow::anyhow!("executable {name} not loaded"))?;
-        let out = exe.execute::<&Literal>(args).map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let parts = lit.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let mut tensors = Vec::with_capacity(parts.len());
-        for p in &parts {
-            tensors.push(HostTensor::from_literal(p)?);
-        }
-        let st = self.stats.entry(name.to_string()).or_default();
-        st.calls += 1;
-        st.total_us += t0.elapsed().as_micros() as u64;
-        Ok(tensors)
-    }
-
-    /// Raw-literal variant for callers that keep outputs as literals.
-    pub fn run_raw(&mut self, name: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
-        let t0 = Instant::now();
-        let exe = self
-            .exes
-            .get(name)
-            .ok_or_else(|| anyhow::anyhow!("executable {name} not loaded"))?;
-        let out = exe.execute::<&Literal>(args).map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let parts = lit.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let st = self.stats.entry(name.to_string()).or_default();
-        st.calls += 1;
-        st.total_us += t0.elapsed().as_micros() as u64;
-        Ok(parts)
-    }
-
-    pub fn stats(&self) -> &HashMap<String, ExeStats> {
-        &self.stats
-    }
-
-    pub fn reset_stats(&mut self) {
-        self.stats.clear();
-    }
+    let _ = hint;
+    Ok(Box::new(RefBackend::new(cfg.clone())))
 }
 
 /// Weight blob loader: `weights.bin` (raw little-endian f32) + the JSON
-/// manifest written by `python/compile/train.py::export_flat_bin`.
+/// manifest written by `python/compile/train.py::export_flat_bin` or by
+/// [`synthetic::write_artifacts`].
 #[derive(Debug)]
 pub struct WeightStore {
     tensors: HashMap<String, HostTensor>,
@@ -234,11 +204,13 @@ mod tests {
     use super::*;
 
     #[test]
-    fn host_tensor_roundtrip() {
-        let t = HostTensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect());
-        let lit = t.to_literal().unwrap();
-        let back = HostTensor::from_literal(&lit).unwrap();
-        assert_eq!(t, back);
+    fn arg_unwrapping() {
+        let t = HostTensor::new(vec![2], vec![1.0, 2.0]);
+        let pos = [5i32];
+        assert_eq!(Arg::F32(&t).f32().unwrap().data, vec![1.0, 2.0]);
+        assert_eq!(Arg::I32(&pos).i32().unwrap(), &[5]);
+        assert!(Arg::F32(&t).i32().is_err());
+        assert!(Arg::I32(&pos).f32().is_err());
     }
 
     #[test]

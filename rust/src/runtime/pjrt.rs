@@ -1,0 +1,141 @@
+//! PJRT execution backend (cargo feature `pjrt`): loads the AOT HLO-text
+//! artifacts produced by `python -m compile.aot` and executes them
+//! through the PJRT C API.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Interchange is HLO *text* — jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §3).
+//!
+//! The in-tree `xla` crate is a type-level stub whose client constructor
+//! fails at runtime; point the path dependency at the real crate to
+//! execute against PJRT. Either way this module satisfies the
+//! [`super::Backend`] seam, so everything above the runtime is agnostic.
+//!
+//! `PjrtBackend` is deliberately `!Send`: PJRT handles are raw pointers.
+//! The [`crate::engine`] owns it on a dedicated executor thread.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::{Arg, Backend, ExeStats, HostTensor};
+
+fn to_literal(t: &HostTensor) -> Result<Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Literal::vec1(&t.data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+fn from_literal(lit: &Literal) -> Result<HostTensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("{e:?}"))?
+        .dims()
+        .iter()
+        .map(|&d| d as usize)
+        .collect();
+    Ok(HostTensor {
+        shape,
+        data: lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+    })
+}
+
+/// Loads, compiles and caches the AOT executables.
+pub struct PjrtBackend {
+    client: PjRtClient,
+    dir: PathBuf,
+    exes: HashMap<String, PjRtLoadedExecutable>,
+    stats: HashMap<String, ExeStats>,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(Self {
+            client,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            exes: HashMap::new(),
+            stats: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    /// Compile (and cache) the executable `exe` from `<dir>/<exe>.hlo.txt`.
+    fn load(&mut self, exe: &str) -> Result<()> {
+        if self.exes.contains_key(exe) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{exe}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+            .with_context(|| format!("loading {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let compiled = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+            .with_context(|| format!("compiling {exe}"))?;
+        self.exes.insert(exe.to_string(), compiled);
+        Ok(())
+    }
+
+    fn is_loaded(&self, exe: &str) -> bool {
+        self.exes.contains_key(exe)
+    }
+
+    /// Execute with host-tensor arguments; returns the decomposed output
+    /// tuple (every artifact is lowered with `return_tuple=True`).
+    fn run(&mut self, exe: &str, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let t0 = Instant::now();
+        let compiled = self
+            .exes
+            .get(exe)
+            .ok_or_else(|| anyhow::anyhow!("executable {exe} not loaded"))?;
+        let mut lits = Vec::with_capacity(args.len());
+        for a in args {
+            lits.push(match a {
+                Arg::F32(t) => to_literal(t)?,
+                Arg::I32(v) => Literal::vec1(v),
+            });
+        }
+        let refs: Vec<&Literal> = lits.iter().collect();
+        let out = compiled
+            .execute::<&Literal>(&refs)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let mut tensors = Vec::with_capacity(parts.len());
+        for p in &parts {
+            tensors.push(from_literal(p)?);
+        }
+        let st = self.stats.entry(exe.to_string()).or_default();
+        st.calls += 1;
+        st.total_us += t0.elapsed().as_micros() as u64;
+        Ok(tensors)
+    }
+
+    fn stats(&self) -> &HashMap<String, ExeStats> {
+        &self.stats
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats.clear();
+    }
+}

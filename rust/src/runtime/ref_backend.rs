@@ -1,0 +1,698 @@
+//! `RefBackend`: pure-Rust CPU reference implementations of every AOT
+//! executable, mirroring the math of `python/compile/kernels/ref.py`
+//! (RMSNorm → RoPE → attention variant → residual MLP).
+//!
+//! This is the default execution backend: hermetic (no Python / JAX /
+//! XLA), deterministic (fixed summation order everywhere), and exact in
+//! the serving-correctness sense — a decode step attends over cached K/V
+//! with the *same* inner `attend_one` routine the prefill rows use, so
+//! `prefill(p) + decode(t)` is bit-identical to `prefill(p ++ t)` for
+//! dense layers (the teacher-forcing invariant the integration and
+//! property tests pin down).
+//!
+//! Executable name contract (same names the PJRT artifacts use):
+//!   `layer_{fa,ssa,ta,xa}_prefill_{S}`, `decode_qkv`,
+//!   `decode_attend_fa_{K}`, `decode_attend_sa`, `router`, `lm_head`.
+
+use std::collections::{HashMap, HashSet};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::MetaConfig;
+use super::{Arg, Backend, ExeStats, HostTensor};
+
+/// Attention variant of a prefill executable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Fa,
+    Ssa,
+    Ta,
+    Xa,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ExeKind {
+    Prefill { mode: Mode, bucket: usize },
+    DecodeQkv,
+    DecodeAttend { kbuf: usize },
+    Router,
+    LmHead,
+}
+
+/// Pure-Rust reference backend, parameterized by the model config (the
+/// PJRT artifacts bake these constants into the lowered HLO instead).
+pub struct RefBackend {
+    cfg: MetaConfig,
+    loaded: HashSet<String>,
+    stats: HashMap<String, ExeStats>,
+}
+
+impl RefBackend {
+    pub fn new(cfg: MetaConfig) -> Self {
+        Self { cfg, loaded: HashSet::new(), stats: HashMap::new() }
+    }
+
+    fn parse_exe(&self, exe: &str) -> Result<ExeKind> {
+        if let Some(rest) = exe.strip_prefix("layer_") {
+            let sep = rest
+                .find("_prefill_")
+                .ok_or_else(|| anyhow::anyhow!("bad prefill executable name '{exe}'"))?;
+            let mode = match &rest[..sep] {
+                "fa" => Mode::Fa,
+                "ssa" => Mode::Ssa,
+                "ta" => Mode::Ta,
+                "xa" => Mode::Xa,
+                other => anyhow::bail!("unknown attention mode '{other}' in '{exe}'"),
+            };
+            let bucket: usize = rest[sep + "_prefill_".len()..].parse()?;
+            anyhow::ensure!(
+                self.cfg.prefill_buckets.contains(&bucket),
+                "prefill bucket {bucket} not in config buckets {:?}",
+                self.cfg.prefill_buckets
+            );
+            return Ok(ExeKind::Prefill { mode, bucket });
+        }
+        if exe == "decode_qkv" {
+            return Ok(ExeKind::DecodeQkv);
+        }
+        if let Some(b) = exe.strip_prefix("decode_attend_fa_") {
+            let kbuf: usize = b.parse()?;
+            anyhow::ensure!(
+                self.cfg.decode_kv_buckets.contains(&kbuf),
+                "decode bucket {kbuf} not in config buckets {:?}",
+                self.cfg.decode_kv_buckets
+            );
+            return Ok(ExeKind::DecodeAttend { kbuf });
+        }
+        if exe == "decode_attend_sa" {
+            return Ok(ExeKind::DecodeAttend { kbuf: self.cfg.sa_buf });
+        }
+        if exe == "router" {
+            return Ok(ExeKind::Router);
+        }
+        if exe == "lm_head" {
+            return Ok(ExeKind::LmHead);
+        }
+        anyhow::bail!("RefBackend: unknown executable '{exe}'")
+    }
+
+    fn dispatch(&self, exe: &str, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        match self.parse_exe(exe)? {
+            ExeKind::Prefill { mode, bucket } => self.prefill_layer(mode, bucket, args),
+            ExeKind::DecodeQkv => self.decode_qkv(args),
+            ExeKind::DecodeAttend { kbuf } => self.decode_attend(kbuf, args),
+            ExeKind::Router => self.router_mlp(args),
+            ExeKind::LmHead => self.lm_head(args),
+        }
+    }
+
+    /// One transformer layer over a bucketed prompt.
+    /// Args: x (S,d), norm1 (d), wq/wk/wv/wo (d,d), norm2 (d),
+    /// w_ff1 (d,ff), w_ff2 (ff,d).
+    /// Returns (x_out (S,d), k (H,S,D), v (H,S,D)); k is post-RoPE.
+    fn prefill_layer(&self, mode: Mode, s: usize, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let m = &self.cfg.model;
+        let (d, h, dd, ff) = (m.d_model, m.n_heads, m.head_dim, m.d_ff);
+        anyhow::ensure!(args.len() == 9, "prefill layer expects 9 args, got {}", args.len());
+        let x = args[0].f32()?;
+        want(x, &[s, d], "prefill x")?;
+        let norm1 = args[1].f32()?;
+        let wq = args[2].f32()?;
+        let wk = args[3].f32()?;
+        let wv = args[4].f32()?;
+        let wo = args[5].f32()?;
+        let norm2 = args[6].f32()?;
+        let w_ff1 = args[7].f32()?;
+        let w_ff2 = args[8].f32()?;
+        want(norm1, &[d], "norm1")?;
+        want(wq, &[d, d], "wq")?;
+        want(w_ff1, &[d, ff], "w_ff1")?;
+        want(w_ff2, &[ff, d], "w_ff2")?;
+
+        let eps = m.rms_eps as f32;
+        let xn = rms_norm_rows(&x.data, &norm1.data, s, d, eps);
+        let q = matmul(&xn, &wq.data, s, d, d);
+        let k = matmul(&xn, &wk.data, s, d, d);
+        let v = matmul(&xn, &wv.data, s, d, d);
+
+        // (S, d) -> per-head (H, S, D), RoPE on q and k at absolute
+        // positions 0..S (padding rows are all-zero and stay zero).
+        let mut qh = to_heads(&q, s, h, dd);
+        let mut kh = to_heads(&k, s, h, dd);
+        let vh = to_heads(&v, s, h, dd);
+        for hh in 0..h {
+            for t in 0..s {
+                let o = (hh * s + t) * dd;
+                rope_in_place(&mut qh[o..o + dd], t, m.rope_theta);
+                rope_in_place(&mut kh[o..o + dd], t, m.rope_theta);
+            }
+        }
+
+        // XAttention selects kv blocks once per layer from the roped
+        // q/k (head-summed antidiagonal scores, ref.py xattn_block_mask).
+        let xa_sel = if mode == Mode::Xa {
+            Some(self.xa_selected_blocks(&qh, &kh, s)?)
+        } else {
+            None
+        };
+
+        let sp = &self.cfg.sparsity;
+        let (sink, local, last_q) = (sp.sink_size, sp.local_size, sp.triangle_last_q);
+        let block = sp.block_size;
+
+        let mut ctx = vec![0f32; h * s * dd];
+        let mut js: Vec<usize> = Vec::with_capacity(s);
+        for i in 0..s {
+            js.clear();
+            match mode {
+                Mode::Fa => js.extend(0..=i),
+                Mode::Ssa => js.extend((0..=i).filter(|&j| j < sink || i - j < local)),
+                Mode::Ta => {
+                    if i + last_q >= s {
+                        js.extend(0..=i); // dense last-q rows
+                    } else {
+                        js.extend((0..=i).filter(|&j| j < sink || i - j < local));
+                    }
+                }
+                Mode::Xa => {
+                    let sel = xa_sel.as_ref().unwrap();
+                    let nb = s / block;
+                    js.extend((0..=i).filter(|&j| sel[(i / block) * nb + j / block]));
+                }
+            }
+            for hh in 0..h {
+                let base = hh * s * dd;
+                attend_one(
+                    &qh[base + i * dd..base + (i + 1) * dd],
+                    &kh[base..base + s * dd],
+                    &vh[base..base + s * dd],
+                    dd,
+                    &js,
+                    &mut ctx[base + i * dd..base + (i + 1) * dd],
+                );
+            }
+        }
+
+        // merge heads back to (S, d), then residual attn output + MLP
+        let mut merged = vec![0f32; s * d];
+        for t in 0..s {
+            for hh in 0..h {
+                let src = (hh * s + t) * dd;
+                let dst = t * d + hh * dd;
+                merged[dst..dst + dd].copy_from_slice(&ctx[src..src + dd]);
+            }
+        }
+        let attn_out = matmul(&merged, &wo.data, s, d, d);
+        let mut x2: Vec<f32> = x.data.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
+        let xn2 = rms_norm_rows(&x2, &norm2.data, s, d, eps);
+        let mut mid = matmul(&xn2, &w_ff1.data, s, d, ff);
+        for v in mid.iter_mut() {
+            *v = gelu(*v);
+        }
+        let ffo = matmul(&mid, &w_ff2.data, s, ff, d);
+        for (a, b) in x2.iter_mut().zip(&ffo) {
+            *a += b;
+        }
+
+        Ok(vec![
+            HostTensor::new(vec![s, d], x2),
+            HostTensor::new(vec![h, s, dd], kh),
+            HostTensor::new(vec![h, s, dd], vh),
+        ])
+    }
+
+    /// XAttention block selection (ref.py `xattn_block_mask`): score
+    /// every causal (q-block, kv-block) pair by strided antidiagonal
+    /// |q.k| probes summed over heads; keep the per-row top-`keep`
+    /// blocks plus the structural sink / local / diagonal blocks.
+    fn xa_selected_blocks(&self, qh: &[f32], kh: &[f32], s: usize) -> Result<Vec<bool>> {
+        let sp = &self.cfg.sparsity;
+        let (h, dd) = (self.cfg.model.n_heads, self.cfg.model.head_dim);
+        let block = sp.block_size;
+        anyhow::ensure!(s % block == 0, "bucket {s} not divisible by block {block}");
+        let nb = s / block;
+        let scale = 1.0 / (dd as f32).sqrt();
+        let stride = sp.xattn_stride.max(1);
+
+        let mut scores = vec![0f32; nb * nb];
+        for hh in 0..h {
+            let base = hh * s * dd;
+            for bi in 0..nb {
+                for bj in 0..=bi {
+                    let mut acc = 0f32;
+                    let mut r = 0usize;
+                    while r < block {
+                        let c = block - 1 - r; // (block-1-r) % block for r < block
+                        let qrow = &qh[base + (bi * block + r) * dd..][..dd];
+                        let krow = &kh[base + (bj * block + c) * dd..][..dd];
+                        let mut dot = 0f32;
+                        for t in 0..dd {
+                            dot += qrow[t] * krow[t];
+                        }
+                        acc += (dot * scale).abs();
+                        r += stride;
+                    }
+                    scores[bi * nb + bj] += acc;
+                }
+            }
+        }
+        const NEG_INF: f32 = -1e30;
+        for bi in 0..nb {
+            for bj in (bi + 1)..nb {
+                scores[bi * nb + bj] = NEG_INF;
+            }
+        }
+
+        let keep = ((nb as f64 * sp.xattn_keep_ratio) as usize).max(1);
+        let sink_blocks = (sp.sink_size / block).max(1);
+        let local_blocks = (sp.local_size / block).max(1);
+        let mut sel = vec![false; nb * nb];
+        for bi in 0..nb {
+            let mut row: Vec<f32> = scores[bi * nb..(bi + 1) * nb].to_vec();
+            row.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            let thresh = row[nb - keep];
+            for bj in 0..=bi {
+                let structural = bj < sink_blocks || (bi - bj) < local_blocks;
+                sel[bi * nb + bj] = structural || scores[bi * nb + bj] >= thresh;
+            }
+        }
+        Ok(sel)
+    }
+
+    /// Decode stage 1: project + RoPE the current token.
+    /// Args: x (d,), pos (1,) i32, norm1 (d), wq/wk/wv (d,d).
+    /// Returns q, k, v each (H, D).
+    fn decode_qkv(&self, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let m = &self.cfg.model;
+        let (d, h, dd) = (m.d_model, m.n_heads, m.head_dim);
+        anyhow::ensure!(args.len() == 6, "decode_qkv expects 6 args, got {}", args.len());
+        let x = args[0].f32()?;
+        want(x, &[d], "decode x")?;
+        let pos_arr = args[1].i32()?;
+        anyhow::ensure!(pos_arr.len() == 1, "pos must be a single i32");
+        let pos = pos_arr[0] as usize;
+        let norm1 = args[2].f32()?;
+        let wq = args[3].f32()?;
+        let wk = args[4].f32()?;
+        let wv = args[5].f32()?;
+        want(wq, &[d, d], "wq")?;
+
+        let xn = rms_norm_rows(&x.data, &norm1.data, 1, d, m.rms_eps as f32);
+        let mut q = matmul(&xn, &wq.data, 1, d, d);
+        let mut k = matmul(&xn, &wk.data, 1, d, d);
+        let v = matmul(&xn, &wv.data, 1, d, d);
+        // (d,) reinterpreted as (H, D) is the same contiguous buffer
+        for hh in 0..h {
+            rope_in_place(&mut q[hh * dd..(hh + 1) * dd], pos, m.rope_theta);
+            rope_in_place(&mut k[hh * dd..(hh + 1) * dd], pos, m.rope_theta);
+        }
+        Ok(vec![
+            HostTensor::new(vec![h, dd], q),
+            HostTensor::new(vec![h, dd], k),
+            HostTensor::new(vec![h, dd], v),
+        ])
+    }
+
+    /// Decode stage 2: attend over the cache (which already contains the
+    /// current token) and finish the layer.
+    /// Args: x (d,), q (H,D), k_cache (H,K,D), v_cache (H,K,D),
+    /// valid (1,) i32, wo (d,d), norm2 (d), w_ff1 (d,ff), w_ff2 (ff,d).
+    fn decode_attend(&self, kbuf: usize, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let m = &self.cfg.model;
+        let (d, h, dd, ff) = (m.d_model, m.n_heads, m.head_dim, m.d_ff);
+        anyhow::ensure!(args.len() == 9, "decode_attend expects 9 args, got {}", args.len());
+        let x = args[0].f32()?;
+        want(x, &[d], "decode x")?;
+        let q = args[1].f32()?;
+        want(q, &[h, dd], "decode q")?;
+        let kc = args[2].f32()?;
+        let vc = args[3].f32()?;
+        want(kc, &[h, kbuf, dd], "k cache")?;
+        want(vc, &[h, kbuf, dd], "v cache")?;
+        let valid_arr = args[4].i32()?;
+        anyhow::ensure!(valid_arr.len() == 1, "valid_len must be a single i32");
+        let valid = valid_arr[0] as usize;
+        anyhow::ensure!((1..=kbuf).contains(&valid), "valid {valid} out of range 1..={kbuf}");
+        let wo = args[5].f32()?;
+        let norm2 = args[6].f32()?;
+        let w_ff1 = args[7].f32()?;
+        let w_ff2 = args[8].f32()?;
+
+        let js: Vec<usize> = (0..valid).collect();
+        let mut ctx = vec![0f32; d];
+        for hh in 0..h {
+            let base = hh * kbuf * dd;
+            attend_one(
+                &q.data[hh * dd..(hh + 1) * dd],
+                &kc.data[base..base + kbuf * dd],
+                &vc.data[base..base + kbuf * dd],
+                dd,
+                &js,
+                &mut ctx[hh * dd..(hh + 1) * dd],
+            );
+        }
+        let eps = m.rms_eps as f32;
+        let attn_out = matmul(&ctx, &wo.data, 1, d, d);
+        let mut x2: Vec<f32> = x.data.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
+        let xn2 = rms_norm_rows(&x2, &norm2.data, 1, d, eps);
+        let mut mid = matmul(&xn2, &w_ff1.data, 1, d, ff);
+        for v in mid.iter_mut() {
+            *v = gelu(*v);
+        }
+        let ffo = matmul(&mid, &w_ff2.data, 1, ff, d);
+        for (a, b) in x2.iter_mut().zip(&ffo) {
+            *a += b;
+        }
+        Ok(vec![HostTensor::new(vec![d], x2)])
+    }
+
+    /// Layer-Router MLP: desc (2d,) -> logits (2,) in [SA, FA] order.
+    fn router_mlp(&self, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let d2 = 2 * self.cfg.model.d_model;
+        anyhow::ensure!(args.len() == 5, "router expects 5 args, got {}", args.len());
+        let desc = args[0].f32()?;
+        want(desc, &[d2], "router descriptor")?;
+        let w1 = args[1].f32()?;
+        let b1 = args[2].f32()?;
+        let w2 = args[3].f32()?;
+        let b2 = args[4].f32()?;
+        anyhow::ensure!(w1.shape.len() == 2 && w1.shape[0] == d2, "router w1 shape");
+        let rh = w1.shape[1];
+        want(b1, &[rh], "router b1")?;
+        want(w2, &[rh, 2], "router w2")?;
+        want(b2, &[2], "router b2")?;
+
+        let mut h1 = matmul(&desc.data, &w1.data, 1, d2, rh);
+        for (a, b) in h1.iter_mut().zip(&b1.data) {
+            *a = gelu(*a + b);
+        }
+        let mut logits = matmul(&h1, &w2.data, 1, rh, 2);
+        for (a, b) in logits.iter_mut().zip(&b2.data) {
+            *a += b;
+        }
+        Ok(vec![HostTensor::new(vec![2], logits)])
+    }
+
+    /// Final norm + vocabulary projection for one token.
+    /// Args: x (d,), norm_f (d,), lm_head (d, V).
+    fn lm_head(&self, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let m = &self.cfg.model;
+        let (d, v) = (m.d_model, m.vocab_size);
+        anyhow::ensure!(args.len() == 3, "lm_head expects 3 args, got {}", args.len());
+        let x = args[0].f32()?;
+        want(x, &[d], "lm_head x")?;
+        let norm_f = args[1].f32()?;
+        let w = args[2].f32()?;
+        want(norm_f, &[d], "norm_f")?;
+        want(w, &[d, v], "lm_head weight")?;
+        let xn = rms_norm_rows(&x.data, &norm_f.data, 1, d, m.rms_eps as f32);
+        let logits = matmul(&xn, &w.data, 1, d, v);
+        Ok(vec![HostTensor::new(vec![v], logits)])
+    }
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "ref"
+    }
+
+    fn load(&mut self, exe: &str) -> Result<()> {
+        self.parse_exe(exe)?; // name + config validation
+        self.loaded.insert(exe.to_string());
+        Ok(())
+    }
+
+    fn is_loaded(&self, exe: &str) -> bool {
+        self.loaded.contains(exe)
+    }
+
+    fn run(&mut self, exe: &str, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        anyhow::ensure!(self.loaded.contains(exe), "executable {exe} not loaded");
+        let t0 = Instant::now();
+        let out = self.dispatch(exe, args)?;
+        let st = self.stats.entry(exe.to_string()).or_default();
+        st.calls += 1;
+        st.total_us += t0.elapsed().as_micros() as u64;
+        Ok(out)
+    }
+
+    fn stats(&self) -> &HashMap<String, ExeStats> {
+        &self.stats
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats.clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// numeric helpers — fixed summation order is the determinism/parity
+// contract: prefill rows and decode steps share these exact routines
+// ---------------------------------------------------------------------------
+
+fn want(t: &HostTensor, shape: &[usize], what: &str) -> Result<()> {
+    anyhow::ensure!(
+        t.shape.as_slice() == shape,
+        "{what}: expected shape {shape:?}, got {:?}",
+        t.shape
+    );
+    Ok(())
+}
+
+/// Row-wise RMSNorm: `x * rsqrt(mean(x^2) + eps) * scale`.
+fn rms_norm_rows(x: &[f32], scale: &[f32], rows: usize, d: usize, eps: f32) -> Vec<f32> {
+    let mut out = vec![0f32; rows * d];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mut ss = 0f32;
+        for &v in xr {
+            ss += v * v;
+        }
+        let inv = 1.0 / (ss / d as f32 + eps).sqrt();
+        let or = &mut out[r * d..(r + 1) * d];
+        for i in 0..d {
+            or[i] = xr[i] * inv * scale[i];
+        }
+    }
+    out
+}
+
+/// `x (rows, din) @ w (din, dout)`, accumulating over `din` in index
+/// order (row-major w keeps the inner loop contiguous).
+fn matmul(x: &[f32], w: &[f32], rows: usize, din: usize, dout: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * din);
+    debug_assert_eq!(w.len(), din * dout);
+    let mut out = vec![0f32; rows * dout];
+    for r in 0..rows {
+        let xr = &x[r * din..(r + 1) * din];
+        let or = &mut out[r * dout..(r + 1) * dout];
+        for i in 0..din {
+            let xv = xr[i];
+            let wr = &w[i * dout..(i + 1) * dout];
+            for o in 0..dout {
+                or[o] += xv * wr[o];
+            }
+        }
+    }
+    out
+}
+
+/// tanh-approximated GELU (jax.nn.gelu default).
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Rotate adjacent pairs of one head vector by position `pos`
+/// (model.py `apply_rope`: pair (2i, 2i+1), angle pos / theta^(2i/D)).
+fn rope_in_place(v: &mut [f32], pos: usize, theta: f64) {
+    let dd = v.len();
+    let half = dd / 2;
+    for i in 0..half {
+        let inv = (1.0 / theta.powf((2 * i) as f64 / dd as f64)) as f32;
+        let ang = pos as f32 * inv;
+        let (sin, cos) = ang.sin_cos();
+        let x1 = v[2 * i];
+        let x2 = v[2 * i + 1];
+        v[2 * i] = x1 * cos - x2 * sin;
+        v[2 * i + 1] = x1 * sin + x2 * cos;
+    }
+}
+
+/// `(S, d)` row-major to `(H, S, D)` per-head layout.
+fn to_heads(x: &[f32], s: usize, h: usize, dd: usize) -> Vec<f32> {
+    let d = h * dd;
+    let mut out = vec![0f32; h * s * dd];
+    for t in 0..s {
+        for hh in 0..h {
+            let src = t * d + hh * dd;
+            let dst = (hh * s + t) * dd;
+            out[dst..dst + dd].copy_from_slice(&x[src..src + dd]);
+        }
+    }
+    out
+}
+
+/// Softmax-attend one query over the keys listed in `js` (ascending
+/// indices into the `(K, D)` per-head k/v slices). Shared verbatim by
+/// prefill rows and decode steps — the teacher-forcing parity anchor.
+fn attend_one(q: &[f32], k: &[f32], v: &[f32], dd: usize, js: &[usize], out: &mut [f32]) {
+    debug_assert!(!js.is_empty());
+    let scale = 1.0 / (dd as f32).sqrt();
+    let mut scores = Vec::with_capacity(js.len());
+    let mut maxv = f32::NEG_INFINITY;
+    for &j in js {
+        let kr = &k[j * dd..(j + 1) * dd];
+        let mut dot = 0f32;
+        for t in 0..dd {
+            dot += q[t] * kr[t];
+        }
+        let sc = dot * scale;
+        if sc > maxv {
+            maxv = sc;
+        }
+        scores.push(sc);
+    }
+    let mut denom = 0f32;
+    for sc in scores.iter_mut() {
+        *sc = (*sc - maxv).exp();
+        denom += *sc;
+    }
+    out.fill(0.0);
+    for (idx, &j) in js.iter().enumerate() {
+        let w = scores[idx];
+        let vr = &v[j * dd..(j + 1) * dd];
+        for t in 0..dd {
+            out[t] += w * vr[t];
+        }
+    }
+    let inv = 1.0 / denom;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::synthetic::DEFAULT_META;
+    use std::path::PathBuf;
+
+    fn backend() -> RefBackend {
+        let cfg = MetaConfig::from_json_str(DEFAULT_META, PathBuf::from("/tmp")).unwrap();
+        RefBackend::new(cfg)
+    }
+
+    #[test]
+    fn exe_name_parsing() {
+        let b = backend();
+        assert!(matches!(
+            b.parse_exe("layer_fa_prefill_128").unwrap(),
+            ExeKind::Prefill { mode: Mode::Fa, bucket: 128 }
+        ));
+        assert!(matches!(
+            b.parse_exe("layer_xa_prefill_512").unwrap(),
+            ExeKind::Prefill { mode: Mode::Xa, bucket: 512 }
+        ));
+        assert!(matches!(b.parse_exe("decode_qkv").unwrap(), ExeKind::DecodeQkv));
+        assert!(matches!(
+            b.parse_exe("decode_attend_fa_256").unwrap(),
+            ExeKind::DecodeAttend { kbuf: 256 }
+        ));
+        // sa buffer size comes from the config, not the name
+        let sa = b.parse_exe("decode_attend_sa").unwrap();
+        assert_eq!(sa, ExeKind::DecodeAttend { kbuf: b.cfg.sa_buf });
+        assert!(b.parse_exe("layer_fa_prefill_77").is_err()); // not a bucket
+        assert!(b.parse_exe("warp_drive").is_err());
+    }
+
+    #[test]
+    fn run_requires_load() {
+        let mut b = backend();
+        let x = HostTensor::zeros(vec![b.cfg.model.d_model]);
+        let nf = HostTensor::new(vec![b.cfg.model.d_model], vec![1.0; b.cfg.model.d_model]);
+        let w = HostTensor::zeros(vec![b.cfg.model.d_model, b.cfg.model.vocab_size]);
+        let args = [Arg::F32(&x), Arg::F32(&nf), Arg::F32(&w)];
+        assert!(b.run("lm_head", &args).is_err());
+        b.load("lm_head").unwrap();
+        let out = b.run("lm_head", &args).unwrap();
+        assert_eq!(out[0].shape, vec![b.cfg.model.vocab_size]);
+        assert_eq!(b.stats()["lm_head"].calls, 1);
+    }
+
+    #[test]
+    fn attend_one_is_convex_combination() {
+        // with two keys, the output must lie between the two values
+        let q = [1.0f32, 0.0];
+        let k = [1.0f32, 0.0, -1.0, 0.0]; // (2, 2)
+        let v = [0.0f32, 0.0, 1.0, 1.0];
+        let mut out = [9.0f32, 9.0];
+        attend_one(&q, &k, &v, 2, &[0, 1], &mut out);
+        assert!(out[0] > 0.0 && out[0] < 1.0);
+        assert!((out[0] - out[1]).abs() < 1e-6);
+        // single key: output equals its value exactly
+        attend_one(&q, &k, &v, 2, &[1], &mut out);
+        assert_eq!(out, [1.0, 1.0]);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_is_position_dependent() {
+        let base = [0.3f32, -0.7, 1.1, 0.2];
+        let mut a = base;
+        let mut b = base;
+        rope_in_place(&mut a, 3, 10000.0);
+        rope_in_place(&mut b, 4, 10000.0);
+        let n0: f32 = base.iter().map(|x| x * x).sum();
+        let na: f32 = a.iter().map(|x| x * x).sum();
+        assert!((n0 - na).abs() < 1e-4, "rotation must preserve norm");
+        assert!(a != b, "different positions must rotate differently");
+        let mut c = base;
+        rope_in_place(&mut c, 0, 10000.0);
+        assert_eq!(c, base, "position 0 is the identity rotation");
+    }
+
+    #[test]
+    fn rms_norm_unit_rows() {
+        let d = 4;
+        let x = vec![2.0f32; d];
+        let scale = vec![1.0f32; d];
+        let out = rms_norm_rows(&x, &scale, 1, d, 1e-5);
+        // mean(x^2) = 4 -> rsqrt ~ 0.5 -> out ~ 1.0
+        for &o in &out {
+            assert!((o - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn ssa_prefill_is_deterministic_and_shaped() {
+        let mut b = backend();
+        let m = b.cfg.model.clone();
+        let s = 128usize;
+        b.load("layer_ssa_prefill_128").unwrap();
+        let mk = |shape: Vec<usize>, seed: u64| {
+            let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
+            let n: usize = shape.iter().product();
+            HostTensor::new(shape, (0..n).map(|_| (rng.f64() as f32 - 0.5) * 0.2).collect())
+        };
+        let x = mk(vec![s, m.d_model], 1);
+        let n1 = HostTensor::new(vec![m.d_model], vec![1.0; m.d_model]);
+        let wq = mk(vec![m.d_model, m.d_model], 2);
+        let wk = mk(vec![m.d_model, m.d_model], 3);
+        let wv = mk(vec![m.d_model, m.d_model], 4);
+        let wo = mk(vec![m.d_model, m.d_model], 5);
+        let n2 = n1.clone();
+        let f1 = mk(vec![m.d_model, m.d_ff], 6);
+        let f2 = mk(vec![m.d_ff, m.d_model], 7);
+        let args = [
+            Arg::F32(&x), Arg::F32(&n1), Arg::F32(&wq), Arg::F32(&wk), Arg::F32(&wv),
+            Arg::F32(&wo), Arg::F32(&n2), Arg::F32(&f1), Arg::F32(&f2),
+        ];
+        let o1 = b.run("layer_ssa_prefill_128", &args).unwrap();
+        let o2 = b.run("layer_ssa_prefill_128", &args).unwrap();
+        assert_eq!(o1[0].shape, vec![s, m.d_model]);
+        assert_eq!(o1[1].shape, vec![m.n_heads, s, m.head_dim]);
+        assert_eq!(o1, o2, "reference kernels must be bitwise deterministic");
+        assert!(o1[0].data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,310 @@
+//! Synthetic artifact generator: emits a complete, deterministic
+//! artifact directory (`manifest.json`, `model_meta.json`,
+//! `weights.bin/json`, `router_balanced.bin/json`) from
+//! [`crate::util::rng::Rng`], so the engine, coordinator, eval harness
+//! and CLI run end-to-end with zero Python / JAX / XLA.
+//!
+//! The generated manifest carries `"backend": "ref"`, routing
+//! [`crate::engine::Engine::load`] to the pure-Rust
+//! [`super::RefBackend`]. Weights are untrained (random normal, weight-
+//! tied `lm_head = embed^T`, unit norms) — the test suite pins serving
+//! *invariants* (determinism, teacher-forcing parity, KV bounds,
+//! routing plumbing), none of which depend on trained weights.
+//!
+//! The `router_balanced` variant is bias-dominated by construction:
+//! even layers route FA, odd layers SA, with a tiny descriptor-dependent
+//! term that cannot flip the margin. That makes routing deterministic
+//! and gives every Flux-policy request a stable 0.5 Omega_MSR mix of
+//! full and sparse layers — both cache layouts get exercised.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::MetaConfig;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Default synthetic model configuration: small enough that the full
+/// integration suite runs in seconds, large enough to cover every
+/// bucket/mask code path (4 layers, 4 heads, 1k-token prefill buckets).
+pub const DEFAULT_META: &str = r#"{
+  "model": {"vocab_size": 512, "d_model": 32, "n_layers": 4,
+            "n_heads": 4, "head_dim": 8, "d_ff": 64,
+            "max_seq_len": 2048, "rope_theta": 10000.0,
+            "rms_eps": 1e-5},
+  "sparsity": {"sink_size": 16, "local_size": 64, "block_size": 16,
+               "xattn_stride": 4, "xattn_keep_ratio": 0.25,
+               "triangle_last_q": 32, "pool_size": 16},
+  "router": {"d_hidden": 16, "tau_start": 2.0, "tau_end": 0.3,
+             "t_retrieval": 0.45, "t_holistic": 1.0},
+  "prefill_buckets": [128, 256, 512, 1024],
+  "decode_kv_buckets": [128, 256, 512, 1024, 2048],
+  "sa_decode_window": 81,
+  "sa_buf": 128
+}"#;
+
+/// Standard normal sample (Box–Muller over the SplitMix64 substrate).
+fn normal(rng: &mut Rng) -> f64 {
+    let u1 = rng.f64().max(1e-12);
+    let u2 = rng.f64();
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+/// Accumulates tensors into a flat little-endian f32 blob + the JSON
+/// manifest layout `python/compile/train.py::export_flat_bin` writes.
+struct BlobWriter {
+    bytes: Vec<u8>,
+    entries: Json,
+}
+
+impl BlobWriter {
+    fn new() -> Self {
+        Self { bytes: Vec::new(), entries: Json::Arr(vec![]) }
+    }
+
+    fn push(&mut self, name: &str, shape: &[usize], data: &[f32]) {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "{name} shape mismatch");
+        let mut e = Json::obj();
+        e.set("name", Json::from(name));
+        e.set("offset", Json::from(self.bytes.len()));
+        e.set("shape", Json::from(shape.to_vec()));
+        self.entries.push(e);
+        for v in data {
+            self.bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn save(self, dir: &Path, stem: &str) -> Result<()> {
+        std::fs::write(dir.join(format!("{stem}.bin")), &self.bytes)
+            .with_context(|| format!("writing {stem}.bin"))?;
+        std::fs::write(dir.join(format!("{stem}.json")), self.entries.to_string())
+            .with_context(|| format!("writing {stem}.json"))?;
+        Ok(())
+    }
+}
+
+fn normal_vec(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| (normal(rng) * scale) as f32).collect()
+}
+
+/// The executable list the manifest advertises for a config (the same
+/// names `python -m compile.aot` lowers).
+pub fn executable_names(cfg: &MetaConfig) -> Vec<String> {
+    let mut out = Vec::new();
+    for &s in &cfg.prefill_buckets {
+        for mode in ["fa", "ssa", "ta", "xa"] {
+            out.push(format!("layer_{mode}_prefill_{s}"));
+        }
+    }
+    out.push("decode_qkv".to_string());
+    for &k in &cfg.decode_kv_buckets {
+        out.push(format!("decode_attend_fa_{k}"));
+    }
+    out.push("decode_attend_sa".to_string());
+    out.push("router".to_string());
+    out.push("lm_head".to_string());
+    out
+}
+
+/// Write a full synthetic artifact directory for `meta_json` (a
+/// `model_meta.json` document — see [`DEFAULT_META`]). Deterministic in
+/// `(meta_json, seed)`; overwrites existing files.
+pub fn write_artifacts(dir: &Path, meta_json: &str, seed: u64) -> Result<PathBuf> {
+    let cfg = MetaConfig::from_json_str(meta_json, dir.to_path_buf())
+        .context("synthetic meta config")?;
+    cfg.validate()?;
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    std::fs::write(dir.join("model_meta.json"), meta_json)?;
+
+    let m = &cfg.model;
+    let (v, d, l, ff) = (m.vocab_size, m.d_model, m.n_layers, m.d_ff);
+    let mut rng = Rng::seed_from_u64(seed ^ 0xF1DE_C0DE);
+
+    // backbone weights (weight-tied lm_head = embed^T, like the export)
+    let mut w = BlobWriter::new();
+    let embed = normal_vec(&mut rng, v * d, 1.0 / (d as f64).sqrt());
+    w.push("embed", &[v, d], &embed);
+    w.push("layers.norm1", &[l, d], &vec![1.0f32; l * d]);
+    w.push("layers.wq", &[l, d, d], &normal_vec(&mut rng, l * d * d, 1.0 / (d as f64).sqrt()));
+    w.push("layers.wk", &[l, d, d], &normal_vec(&mut rng, l * d * d, 1.0 / (d as f64).sqrt()));
+    w.push("layers.wv", &[l, d, d], &normal_vec(&mut rng, l * d * d, 1.0 / (d as f64).sqrt()));
+    w.push("layers.wo", &[l, d, d], &normal_vec(&mut rng, l * d * d, 1.0 / (d as f64).sqrt()));
+    w.push("layers.norm2", &[l, d], &vec![1.0f32; l * d]);
+    w.push("layers.w_ff1", &[l, d, ff], &normal_vec(&mut rng, l * d * ff, 1.0 / (d as f64).sqrt()));
+    w.push("layers.w_ff2", &[l, ff, d], &normal_vec(&mut rng, l * ff * d, 1.0 / (ff as f64).sqrt()));
+    w.push("norm_f", &[d], &vec![1.0f32; d]);
+    let mut lm_head = vec![0f32; d * v];
+    for t in 0..v {
+        for i in 0..d {
+            lm_head[i * v + t] = embed[t * d + i];
+        }
+    }
+    w.push("lm_head", &[d, v], &lm_head);
+    w.save(dir, "weights")?;
+
+    // "balanced" router: even layers FA, odd layers SA, via a bias
+    // margin (1.0) that the tiny data-dependent term cannot flip
+    let rh = cfg.router.d_hidden;
+    let mut r = BlobWriter::new();
+    r.push("w1", &[l, 2 * d, rh], &normal_vec(&mut rng, l * 2 * d * rh, 1e-3 / (2.0 * d as f64).sqrt()));
+    r.push("b1", &[l, rh], &vec![0.0f32; l * rh]);
+    r.push("w2", &[l, rh, 2], &normal_vec(&mut rng, l * rh * 2, 1e-3));
+    let mut b2 = vec![0.0f32; l * 2];
+    for layer in 0..l {
+        // logits order is [SA, FA]; is_fa = logits[1] > logits[0]
+        if layer % 2 == 0 {
+            b2[layer * 2 + 1] = 1.0;
+        } else {
+            b2[layer * 2] = 1.0;
+        }
+    }
+    r.push("b2", &[l, 2], &b2);
+    r.save(dir, "router_balanced")?;
+
+    let mut manifest = Json::obj();
+    manifest.set("backend", Json::from("ref"));
+    manifest.set("executables", Json::from(executable_names(&cfg)));
+    manifest.set(
+        "weights",
+        Json::from(vec!["weights.bin".to_string(), "router_balanced.bin".to_string()]),
+    );
+    std::fs::write(dir.join("manifest.json"), manifest.to_string())?;
+    Ok(dir.to_path_buf())
+}
+
+/// Locate (or lazily generate) the default artifact directory for tests,
+/// benches and examples:
+/// 1. `$FLUX_ARTIFACTS` when set and populated (real AOT artifacts win);
+/// 2. otherwise a cached synthetic set under the system temp dir,
+///    generated atomically (write to a scratch dir, rename into place)
+///    so concurrent test binaries cannot observe a half-written tree.
+///
+/// In-process concurrency (parallel `cargo test` threads share a pid and
+/// therefore a scratch path) is serialized through a `OnceLock`;
+/// cross-process races are resolved by the atomic rename.
+pub fn ensure_default() -> Result<PathBuf> {
+    static DEFAULT_DIR: std::sync::OnceLock<std::result::Result<PathBuf, String>> =
+        std::sync::OnceLock::new();
+    match DEFAULT_DIR.get_or_init(|| ensure_default_uncached().map_err(|e| e.to_string())) {
+        Ok(p) => Ok(p.clone()),
+        Err(e) => Err(anyhow::anyhow!("{e}")),
+    }
+}
+
+fn ensure_default_uncached() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("FLUX_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Ok(p);
+        }
+        eprintln!(
+            "FLUX_ARTIFACTS={p:?} has no manifest.json; falling back to synthetic artifacts"
+        );
+    } else {
+        // the CLI's default export location (`make artifacts`): real
+        // trained artifacts win over synthetic ones when present
+        let p = PathBuf::from("artifacts");
+        if p.join("manifest.json").exists() {
+            return Ok(p);
+        }
+    }
+    let dir = std::env::temp_dir().join("flux-synthetic-artifacts-v1");
+    if dir.join("manifest.json").exists() {
+        return Ok(dir);
+    }
+    let scratch = std::env::temp_dir().join(format!(
+        "flux-synthetic-artifacts-v1.scratch-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&scratch);
+    write_artifacts(&scratch, DEFAULT_META, 0)?;
+    match std::fs::rename(&scratch, &dir) {
+        Ok(()) => {}
+        Err(e) => {
+            // lost the race to another process: its tree is complete
+            let _ = std::fs::remove_dir_all(&scratch);
+            anyhow::ensure!(
+                dir.join("manifest.json").exists(),
+                "synthetic artifact dir {dir:?} unusable: {e}"
+            );
+        }
+    }
+    Ok(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::WeightStore;
+
+    fn scratch(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("flux-synth-test-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn artifacts_are_complete_and_loadable() {
+        let dir = scratch("complete");
+        write_artifacts(&dir, DEFAULT_META, 3).unwrap();
+        for f in [
+            "manifest.json",
+            "model_meta.json",
+            "weights.bin",
+            "weights.json",
+            "router_balanced.bin",
+            "router_balanced.json",
+        ] {
+            assert!(dir.join(f).exists(), "missing {f}");
+        }
+        let cfg = MetaConfig::load(&dir).unwrap();
+        let ws = WeightStore::load(dir.join("weights.bin"), dir.join("weights.json")).unwrap();
+        let embed = ws.get("embed").unwrap();
+        assert_eq!(embed.shape, vec![cfg.model.vocab_size, cfg.model.d_model]);
+        let wq1 = ws.layer_slice("layers.wq", 1).unwrap();
+        assert_eq!(wq1.shape, vec![cfg.model.d_model, cfg.model.d_model]);
+        // weight tying: lm_head == embed^T
+        let lm = ws.get("lm_head").unwrap();
+        let (v, d) = (cfg.model.vocab_size, cfg.model.d_model);
+        assert_eq!(lm.data[3 * v + 7], embed.data[7 * d + 3]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn generation_is_deterministic_in_seed() {
+        let d1 = scratch("det1");
+        let d2 = scratch("det2");
+        write_artifacts(&d1, DEFAULT_META, 9).unwrap();
+        write_artifacts(&d2, DEFAULT_META, 9).unwrap();
+        let b1 = std::fs::read(d1.join("weights.bin")).unwrap();
+        let b2 = std::fs::read(d2.join("weights.bin")).unwrap();
+        assert_eq!(b1, b2, "same seed must produce identical blobs");
+        let d3 = scratch("det3");
+        write_artifacts(&d3, DEFAULT_META, 10).unwrap();
+        let b3 = std::fs::read(d3.join("weights.bin")).unwrap();
+        assert_ne!(b1, b3, "different seeds must differ");
+        for d in [d1, d2, d3] {
+            let _ = std::fs::remove_dir_all(&d);
+        }
+    }
+
+    #[test]
+    fn executable_list_covers_every_bucket_and_mode() {
+        let cfg = MetaConfig::from_json_str(DEFAULT_META, PathBuf::from("/tmp")).unwrap();
+        let names = executable_names(&cfg);
+        assert_eq!(
+            names.len(),
+            cfg.prefill_buckets.len() * 4 + 1 + cfg.decode_kv_buckets.len() + 1 + 2
+        );
+        assert!(names.contains(&"layer_xa_prefill_1024".to_string()));
+        assert!(names.contains(&"decode_attend_fa_2048".to_string()));
+        assert!(names.contains(&"decode_attend_sa".to_string()));
+    }
+
+    #[test]
+    fn ensure_default_is_idempotent() {
+        let a = ensure_default().unwrap();
+        let b = ensure_default().unwrap();
+        assert_eq!(a, b);
+        assert!(a.join("manifest.json").exists());
+    }
+}

@@ -1,16 +1,18 @@
-//! Property-based tests on coordinator-side invariants (no artifacts
-//! needed): KV-cache accounting, ring-buffer semantics, routing policy
-//! algebra, tokenizer round-trips, workload layout, simulator
-//! monotonicity, eigensolver conservation laws.
+//! Property-based tests on coordinator-side invariants (KV-cache
+//! accounting, ring-buffer semantics, routing policy algebra, tokenizer
+//! round-trips, workload layout, simulator monotonicity, eigensolver
+//! conservation laws) plus end-to-end engine properties over synthetic
+//! `RefBackend` artifacts (teacher-forcing parity as a property).
 //!
 //! Uses the in-crate property runner (`util::prop`): seeded random
 //! cases; failures report the replayable seed.
 
 use flux_attention::baselines::{entropy_ranked_modes, jacobi_eigenvalues};
+use flux_attention::engine::Engine;
 use flux_attention::gpu_sim::{decode_latency_s, GpuSimConfig, SimPolicy};
 use flux_attention::kvcache::{FullCache, SparseCache};
-use flux_attention::router::{pool_descriptor, AttnMode};
-use flux_attention::runtime::HostTensor;
+use flux_attention::router::{pool_descriptor, AttnMode, Policy};
+use flux_attention::runtime::{synthetic, HostTensor};
 use flux_attention::tokenizer::Tokenizer;
 use flux_attention::util::prop::check;
 use flux_attention::util::rng::Rng;
@@ -190,6 +192,45 @@ fn jacobi_trace_preserved() {
         );
         for &e in &ev {
             prop_assert!(e > -1e-9, "negative eigenvalue {e} from PSD matrix");
+        }
+        Ok(())
+    });
+}
+
+/// Teacher-forcing parity as a *property*, not one seed: for random
+/// tasks and prompt lengths, every token the dense decode path emits
+/// must equal the first token of a naive full-prefill recompute over
+/// the extended context. This pins the RefBackend decode attention
+/// (cache append + `decode_attend_fa_*`) to the prefill rows exactly —
+/// where routed serving paths silently diverge first.
+#[test]
+fn dense_decode_matches_full_prefill_recompute_property() {
+    let dir = synthetic::ensure_default().expect("synthetic artifacts");
+    let mut engine = Engine::load(&dir).unwrap();
+    let tasks = [Task::PRe, Task::Qasper, Task::Gov, Task::Trec];
+    check("dense_decode_equals_prefill_recompute", 6, |rng| {
+        let len = rng.range(24, 96);
+        let task = tasks[rng.gen_range(tasks.len())];
+        let s = generate(task, rng, len);
+
+        let (id, report) = engine
+            .prefill(&s.prompt, &Policy::Backbone, "balanced")
+            .map_err(|e| e.to_string())?;
+        let mut toks = vec![report.first_token];
+        let n_steps = 3;
+        for _ in 0..n_steps {
+            toks.push(engine.decode_step(id).map_err(|e| e.to_string())?);
+        }
+        engine.release(id);
+
+        let mut ctx = s.prompt.clone();
+        for m in 1..=n_steps {
+            ctx.push(toks[m - 1]);
+            let (id2, r2) = engine
+                .prefill(&ctx, &Policy::Backbone, "balanced")
+                .map_err(|e| e.to_string())?;
+            engine.release(id2);
+            prop_assert_eq!(r2.first_token, toks[m]);
         }
         Ok(())
     });

@@ -1,0 +1,125 @@
+//! Type-level stub of the `xla` (PJRT C API) crate.
+//!
+//! This container has no XLA/PJRT native library, so the real `xla`
+//! crate cannot be vendored. This stub exposes the exact API surface
+//! `flux_attention::runtime::pjrt` uses, letting `--features pjrt`
+//! type-check and build everywhere; every fallible entry point returns
+//! an error at runtime (`PjRtClient::cpu()` fails first, so the PJRT
+//! backend reports a clear message instead of silently "running").
+//!
+//! To run against real PJRT, point the `xla` path dependency in
+//! rust/Cargo.toml at the real crate (plus the xla_extension C library)
+//! — the signatures below match its usage in runtime/pjrt.rs.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn stub_err<T>() -> Result<T, Error> {
+    Err(Error(
+        "xla stub: built without a real PJRT library (see DESIGN.md §3: \
+         replace the in-tree `xla` path dependency with the real crate)"
+            .to_string(),
+    ))
+}
+
+/// Opaque host literal. Carries no data in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_vals: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Ok(Literal)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        stub_err()
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        stub_err()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        stub_err()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape;
+
+impl ArrayShape {
+    pub fn dims(&self) -> Vec<i64> {
+        Vec::new()
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self, Error> {
+        stub_err()
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        stub_err()
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        stub_err()
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Always errors in the stub: the PJRT backend fails fast at
+    /// construction rather than pretending to execute.
+    pub fn cpu() -> Result<Self, Error> {
+        stub_err()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        stub_err()
+    }
+}
