@@ -14,19 +14,28 @@ fn main() {
     let (h, d) = (4usize, 32usize);
     let mut b = Bench::new("coordinator_hotpath");
 
-    // full-cache re-bucketing (dense decode argument prep)
+    // full-cache re-bucketing (the legacy cloning path) vs the
+    // zero-copy view staging the decode fast path uses
     for len in [256usize, 1024, 2048] {
         let mut cache = FullCache::new(h, d, len);
         for _ in 0..len {
             cache.append(&vec![1.0; h * d], &vec![2.0; h * d]);
         }
         b.run(&format!("kv_as_tensors/full/{len}"), 3, 50, || cache.as_tensors(len));
+        b.run(&format!("kv_view/full/{len}"), 3, 200, || {
+            let (kt, vt) = cache.view();
+            kt.data.len() + vt.data.len()
+        });
     }
     let mut sc = SparseCache::new(h, d, 16, 128, 192);
     for _ in 0..500 {
         sc.append(&vec![1.0; h * d], &vec![2.0; h * d]);
     }
     b.run("kv_as_tensors/sparse", 3, 100, || sc.as_tensors());
+    b.run("kv_view/sparse", 3, 200, || {
+        let (kt, vt, valid) = sc.view();
+        kt.data.len() + vt.data.len() + valid
+    });
 
     // host-tensor materialization of decode-sized arguments (the
     // backend-boundary copy that replaced per-call literal conversion)

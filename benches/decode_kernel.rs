@@ -36,6 +36,20 @@ fn main() {
         });
         engine.release(id);
 
+        // legacy cloning path on the same shape: the zero-copy delta
+        engine.set_zero_copy(false);
+        let (id, _) =
+            engine.prefill(&sample.prompt, &Policy::Backbone, "balanced").expect("prefill");
+        let cloned = b.run(&format!("decode/dense_clone/{seq}"), 2, 10, || {
+            engine.decode_step(id).expect("decode")
+        });
+        engine.release(id);
+        engine.set_zero_copy(true);
+        println!(
+            "  -> kv {seq}: zero-copy staging speedup {:.2}x",
+            cloned.mean_us / dense.mean_us.max(1e-9)
+        );
+
         let sparse_policy = Policy::Static {
             modes: vec![AttnMode::Ssa; n_layers],
             decode: DecodeMode::Sparse,

@@ -36,6 +36,17 @@ fn main() {
                 engine.release(id);
             });
         }
+
+        // single-worker reference point: the parallel-kernel speedup
+        // series (outputs are bit-identical for every worker count)
+        engine.set_threads(1);
+        let policy = Policy::Static { modes: vec![AttnMode::Fa; n_layers], decode: DecodeMode::Dense };
+        let iters = if seq > 1024 { 3 } else { 5 };
+        b.run(&format!("prefill/fa_1thread/{seq}"), 1, iters, || {
+            let (id, _) = engine.prefill(&sample.prompt, &policy, "balanced").expect("prefill");
+            engine.release(id);
+        });
+        engine.set_threads(flux_attention::runtime::flux_threads_default());
     }
     b.save();
 }

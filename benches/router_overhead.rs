@@ -2,7 +2,9 @@
 //! layer across context lengths — the paper's claim is ~0.2 ms/layer and
 //! length-invariant from 512 to 1M tokens; here the descriptor is fixed
 //! (2 d_model) so invariance is structural, and we measure it up to 1M
-//! rows of synthetic hidden state.
+//! rows of synthetic hidden state. The router MLP sits below the
+//! reference backend's parallelism threshold, so these numbers are
+//! single-threaded regardless of FLUX_THREADS.
 
 use flux_attention::engine::Engine;
 use flux_attention::router::pool_descriptor;

@@ -163,7 +163,8 @@ impl MetaConfig {
     ///
     /// Prefers `capacity` when it is itself a published decode bucket —
     /// the cache's internal buffer is then already in executable layout
-    /// and `FullCache::as_tensors` takes its zero-re-layout fast path.
+    /// and the engine stages it zero-copy through `FullCache::view`
+    /// (no KV bytes cloned; see DESIGN.md §7).
     /// Otherwise (prefill buckets misaligned with decode buckets, or a
     /// capacity grown past the largest bucket) falls back to the
     /// smallest published bucket that fits `len`. The old

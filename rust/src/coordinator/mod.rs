@@ -228,6 +228,13 @@ fn scheduler_loop(
                 break;
             }
         }
+
+        // refresh the zero-copy KV accounting (absolute engine totals)
+        if let Ok((moved, borrowed)) = engine.kv_transfer_totals() {
+            let mut m = metrics.lock().unwrap();
+            m.kv_bytes_moved = moved;
+            m.kv_bytes_borrowed = borrowed;
+        }
     }
 }
 

@@ -29,7 +29,7 @@ use crate::config::MetaConfig;
 use crate::kvcache::{FullCache, LayerCache, SparseCache};
 use crate::model::{argmax, ModelWeights};
 use crate::router::{pool_descriptor, AttnMode, DecodeMode, Policy, RouterNet};
-use crate::runtime::{open_backend, Arg, Backend, HostTensor, WeightStore};
+use crate::runtime::{open_backend, Arg, Backend, HostTensor, TensorView, WeightStore};
 
 /// Timing + routing info returned by prefill (feeds metrics and the
 /// paper's efficiency figures).
@@ -62,6 +62,9 @@ pub struct Engine {
     cfg: MetaConfig,
     requests: HashMap<u64, RequestState>,
     next_id: u64,
+    /// Stage decode KV arguments as borrowed views instead of cloning
+    /// (`FLUX_ZERO_COPY=0` disables, for before/after benchmarking).
+    zero_copy: bool,
 }
 
 impl Engine {
@@ -97,11 +100,36 @@ impl Engine {
                 }
             }
         }
-        Ok(Self { rt, weights, routers, cfg, requests: HashMap::new(), next_id: 0 })
+        let zero_copy = std::env::var("FLUX_ZERO_COPY").map(|v| v != "0").unwrap_or(true);
+        Ok(Self { rt, weights, routers, cfg, requests: HashMap::new(), next_id: 0, zero_copy })
     }
 
     pub fn cfg(&self) -> &MetaConfig {
         &self.cfg
+    }
+
+    /// Toggle the zero-copy KV staging path (the bench harness compares
+    /// clone vs view in-process; serving always leaves this on).
+    pub fn set_zero_copy(&mut self, on: bool) {
+        self.zero_copy = on;
+    }
+
+    pub fn zero_copy(&self) -> bool {
+        self.zero_copy
+    }
+
+    /// Set the backend kernel worker count (no-op for device backends).
+    pub fn set_threads(&mut self, n: usize) {
+        self.rt.set_threads(n);
+    }
+
+    /// Aggregate KV-interchange accounting across all executables:
+    /// `(bytes physically copied, bytes staged as borrowed views)`.
+    pub fn kv_transfer_totals(&self) -> (u64, u64) {
+        self.rt
+            .stats()
+            .values()
+            .fold((0, 0), |(m, b), s| (m + s.kv_bytes_moved, b + s.kv_bytes_borrowed))
     }
 
     pub fn router(&self, name: &str) -> Result<&RouterNet> {
@@ -149,6 +177,10 @@ impl Engine {
         let mut modes = Vec::with_capacity(n_layers);
         let mut caches = Vec::with_capacity(n_layers);
         let mut router_us = 0u64;
+        // padded tail rows are skipped inside the layer kernels when the
+        // backend opts in (AOT artifacts keep the 9-input signature)
+        let valid_arr = [valid as i32];
+        let pass_valid = self.rt.accepts_prefill_valid_arg();
 
         for layer in 0..n_layers {
             // --- routing decision for this layer ---
@@ -176,20 +208,21 @@ impl Engine {
             // --- layer execution ---
             let exe = format!("{}_{}", mode.exe_prefix(), bucket);
             let w = &self.weights.layers[layer];
-            let mut out = self.rt.run(
-                &exe,
-                &[
-                    Arg::F32(&hidden),
-                    Arg::F32(&w.norm1),
-                    Arg::F32(&w.wq),
-                    Arg::F32(&w.wk),
-                    Arg::F32(&w.wv),
-                    Arg::F32(&w.wo),
-                    Arg::F32(&w.norm2),
-                    Arg::F32(&w.w_ff1),
-                    Arg::F32(&w.w_ff2),
-                ],
-            )?;
+            let mut call_args = vec![
+                Arg::F32(&hidden),
+                Arg::F32(&w.norm1),
+                Arg::F32(&w.wq),
+                Arg::F32(&w.wk),
+                Arg::F32(&w.wv),
+                Arg::F32(&w.wo),
+                Arg::F32(&w.norm2),
+                Arg::F32(&w.w_ff1),
+                Arg::F32(&w.w_ff2),
+            ];
+            if pass_valid {
+                call_args.push(Arg::I32(&valid_arr));
+            }
+            let mut out = self.rt.run(&exe, &call_args)?;
             anyhow::ensure!(out.len() == 3, "prefill layer must return (hidden, k, v)");
             let v = out.pop().unwrap();
             let k = out.pop().unwrap();
@@ -209,15 +242,17 @@ impl Engine {
             caches.push(cache);
         }
 
-        // first generated token from the last valid position
-        let last_hidden = HostTensor::new(
-            vec![d],
-            hidden.data[(valid - 1) * d..valid * d].to_vec(),
-        );
+        // first generated token from the last valid position — staged
+        // as a borrowed view of the hidden state, no row copy
+        let d_shape = [d];
+        let last_hidden = TensorView {
+            shape: &d_shape,
+            data: &hidden.data[(valid - 1) * d..valid * d],
+        };
         let logits = self.rt.run(
             "lm_head",
             &[
-                Arg::F32(&last_hidden),
+                Arg::F32View(last_hidden),
                 Arg::F32(&self.weights.norm_f),
                 Arg::F32(&self.weights.lm_head),
             ],
@@ -283,7 +318,12 @@ impl Engine {
             anyhow::ensure!(qkv.len() == 3, "decode_qkv must return (q, k, v)");
             let (q, k_new, v_new) = (&qkv[0], &qkv[1], &qkv[2]);
 
-            // stage 2: append then attend over the cache
+            // stage 2: append then attend over the cache. On the
+            // zero-copy fast path the KV arguments are borrowed views of
+            // the cache's internal executable-layout buffers — a decode
+            // step clones no KV at all (pinned by the
+            // `decode_fast_path_stages_kv_without_copies` integration
+            // test via the ExeStats kv_bytes counters).
             let cache = &mut state.caches[layer];
             match cache {
                 LayerCache::Full(c) => {
@@ -291,44 +331,95 @@ impl Engine {
                     let bucket = cfg
                         .decode_attend_bucket(c.len(), c.capacity())
                         .ok_or_else(|| anyhow::anyhow!("KV overflow at {}", c.len()))?;
-                    let (kt, vt) = c.as_tensors(bucket);
                     let valid_arr = [c.len() as i32];
                     let exe = format!("decode_attend_fa_{bucket}");
-                    let out = self.rt.run(
-                        &exe,
-                        &[
-                            Arg::F32(&hidden),
-                            Arg::F32(q),
-                            Arg::F32(&kt),
-                            Arg::F32(&vt),
-                            Arg::I32(&valid_arr),
-                            Arg::F32(&w.wo),
-                            Arg::F32(&w.norm2),
-                            Arg::F32(&w.w_ff1),
-                            Arg::F32(&w.w_ff2),
-                        ],
-                    )?;
+                    let kv_bytes = (2 * cfg.model.n_heads * bucket * cfg.model.head_dim * 4) as u64;
+                    let out = if self.zero_copy && bucket == c.capacity() {
+                        let (kt, vt) = c.view();
+                        let out = self.rt.run(
+                            &exe,
+                            &[
+                                Arg::F32(&hidden),
+                                Arg::F32(q),
+                                Arg::F32View(kt),
+                                Arg::F32View(vt),
+                                Arg::I32(&valid_arr),
+                                Arg::F32(&w.wo),
+                                Arg::F32(&w.norm2),
+                                Arg::F32(&w.w_ff1),
+                                Arg::F32(&w.w_ff2),
+                            ],
+                        )?;
+                        self.rt.note_kv_transfer(&exe, 0, kv_bytes);
+                        out
+                    } else {
+                        // misaligned bucket (prefill buckets not in the
+                        // decode ledger): re-bucket into owned tensors
+                        let (kt, vt) = c.as_tensors(bucket);
+                        let out = self.rt.run(
+                            &exe,
+                            &[
+                                Arg::F32(&hidden),
+                                Arg::F32(q),
+                                Arg::F32(&kt),
+                                Arg::F32(&vt),
+                                Arg::I32(&valid_arr),
+                                Arg::F32(&w.wo),
+                                Arg::F32(&w.norm2),
+                                Arg::F32(&w.w_ff1),
+                                Arg::F32(&w.w_ff2),
+                            ],
+                        )?;
+                        self.rt.note_kv_transfer(&exe, kv_bytes, 0);
+                        out
+                    };
                     anyhow::ensure!(!out.is_empty(), "decode_attend returned no output");
                     hidden = out.into_iter().next().unwrap();
                 }
                 LayerCache::Sparse(c) => {
                     c.append(&k_new.data, &v_new.data);
-                    let (kt, vt, valid) = c.as_tensors();
-                    let valid_arr = [valid as i32];
-                    let out = self.rt.run(
-                        "decode_attend_sa",
-                        &[
-                            Arg::F32(&hidden),
-                            Arg::F32(q),
-                            Arg::F32(&kt),
-                            Arg::F32(&vt),
-                            Arg::I32(&valid_arr),
-                            Arg::F32(&w.wo),
-                            Arg::F32(&w.norm2),
-                            Arg::F32(&w.w_ff1),
-                            Arg::F32(&w.w_ff2),
-                        ],
-                    )?;
+                    let kv_bytes =
+                        (2 * cfg.model.n_heads * cfg.sa_buf * cfg.model.head_dim * 4) as u64;
+                    let out = if self.zero_copy {
+                        // the sparse ring is always in executable layout
+                        let (kt, vt, valid) = c.view();
+                        let valid_arr = [valid as i32];
+                        let out = self.rt.run(
+                            "decode_attend_sa",
+                            &[
+                                Arg::F32(&hidden),
+                                Arg::F32(q),
+                                Arg::F32View(kt),
+                                Arg::F32View(vt),
+                                Arg::I32(&valid_arr),
+                                Arg::F32(&w.wo),
+                                Arg::F32(&w.norm2),
+                                Arg::F32(&w.w_ff1),
+                                Arg::F32(&w.w_ff2),
+                            ],
+                        )?;
+                        self.rt.note_kv_transfer("decode_attend_sa", 0, kv_bytes);
+                        out
+                    } else {
+                        let (kt, vt, valid) = c.as_tensors();
+                        let valid_arr = [valid as i32];
+                        let out = self.rt.run(
+                            "decode_attend_sa",
+                            &[
+                                Arg::F32(&hidden),
+                                Arg::F32(q),
+                                Arg::F32(&kt),
+                                Arg::F32(&vt),
+                                Arg::I32(&valid_arr),
+                                Arg::F32(&w.wo),
+                                Arg::F32(&w.norm2),
+                                Arg::F32(&w.w_ff1),
+                                Arg::F32(&w.w_ff2),
+                            ],
+                        )?;
+                        self.rt.note_kv_transfer("decode_attend_sa", kv_bytes, 0);
+                        out
+                    };
                     anyhow::ensure!(!out.is_empty(), "decode_attend returned no output");
                     hidden = out.into_iter().next().unwrap();
                 }
@@ -381,22 +472,25 @@ impl Engine {
         let mut hidden = self.weights.embed_tokens(tokens, bucket);
         let mut scores = Vec::with_capacity(n_layers);
         let exe = format!("layer_fa_prefill_{bucket}");
+        let valid_arr = [valid as i32];
+        let pass_valid = self.rt.accepts_prefill_valid_arg();
         for layer in 0..n_layers {
             let w = &self.weights.layers[layer];
-            let out = self.rt.run(
-                &exe,
-                &[
-                    Arg::F32(&hidden),
-                    Arg::F32(&w.norm1),
-                    Arg::F32(&w.wq),
-                    Arg::F32(&w.wk),
-                    Arg::F32(&w.wv),
-                    Arg::F32(&w.wo),
-                    Arg::F32(&w.norm2),
-                    Arg::F32(&w.w_ff1),
-                    Arg::F32(&w.w_ff2),
-                ],
-            )?;
+            let mut call_args = vec![
+                Arg::F32(&hidden),
+                Arg::F32(&w.norm1),
+                Arg::F32(&w.wq),
+                Arg::F32(&w.wk),
+                Arg::F32(&w.wv),
+                Arg::F32(&w.wo),
+                Arg::F32(&w.norm2),
+                Arg::F32(&w.w_ff1),
+                Arg::F32(&w.w_ff2),
+            ];
+            if pass_valid {
+                call_args.push(Arg::I32(&valid_arr));
+            }
+            let out = self.rt.run(&exe, &call_args)?;
             hidden = out.into_iter().next().unwrap();
             scores.push(crate::baselines::matrix_entropy(
                 &hidden.data[..valid * d],
@@ -432,6 +526,10 @@ pub enum EngineJob {
     DecodeStep {
         id: u64,
         reply: std::sync::mpsc::Sender<Result<u32>>,
+    },
+    /// Snapshot of the KV-interchange counters (bytes moved, borrowed).
+    KvTransferTotals {
+        reply: std::sync::mpsc::Sender<(u64, u64)>,
     },
     Release {
         id: u64,
@@ -473,6 +571,9 @@ impl EngineHandle {
                         EngineJob::DecodeStep { id, reply } => {
                             let _ = reply.send(engine.decode_step(id));
                         }
+                        EngineJob::KvTransferTotals { reply } => {
+                            let _ = reply.send(engine.kv_transfer_totals());
+                        }
                         EngineJob::Release { id } => {
                             engine.release(id);
                         }
@@ -503,6 +604,17 @@ impl EngineHandle {
             .send(EngineJob::DecodeStep { id, reply })
             .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
         rx.recv()?
+    }
+
+    /// KV-interchange counters `(bytes moved, bytes borrowed)` summed
+    /// over all executables — the coordinator folds this into
+    /// [`crate::metrics::ServingMetrics`].
+    pub fn kv_transfer_totals(&self) -> Result<(u64, u64)> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(EngineJob::KvTransferTotals { reply })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        Ok(rx.recv()?)
     }
 
     pub fn release(&self, id: u64) {

@@ -6,11 +6,17 @@
 //!   * full cache  -> `(H, K_bucket, D)` row-major, `valid_len` slots
 //!     filled from the front;
 //!   * sparse cache -> `(H, SA_BUF, D)` with the sink tokens first and
-//!     the local window following in temporal order. Attention is a
-//!     set operation (RoPE was applied at append time), so buffer order
-//!     only has to be consistent, not positional.
+//!     the local window following as a ring (oldest entry overwritten in
+//!     place). Attention is a set operation (RoPE was applied at append
+//!     time), so buffer order only has to be consistent, not positional.
+//!
+//! Both caches keep their internal buffers *in executable layout* and
+//! hand out zero-copy [`TensorView`]s for the decode hot path: a decode
+//! step stages its KV arguments without cloning whenever the full
+//! cache's capacity is a published bucket (the common case — capacities
+//! and buckets grow in lockstep), and always for the sparse ring.
 
-use crate::runtime::HostTensor;
+use crate::runtime::{HostTensor, TensorView};
 
 /// Full-history KV cache for one layer (FA / retrieval layers).
 #[derive(Debug, Clone)]
@@ -19,6 +25,9 @@ pub struct FullCache {
     head_dim: usize,
     capacity: usize, // current bucket
     len: usize,
+    /// executable-layout shape `[H, capacity, D]`, kept in sync with
+    /// `capacity` so [`FullCache::view`] can borrow it
+    shape: [usize; 3],
     k: Vec<f32>, // (H, capacity, D)
     v: Vec<f32>,
 }
@@ -30,6 +39,7 @@ impl FullCache {
             head_dim,
             capacity,
             len: 0,
+            shape: [n_heads, capacity, head_dim],
             k: vec![0.0; n_heads * capacity * head_dim],
             v: vec![0.0; n_heads * capacity * head_dim],
         }
@@ -108,6 +118,18 @@ impl FullCache {
         self.k = k;
         self.v = v;
         self.capacity = cap;
+        self.shape = [h, cap, d];
+    }
+
+    /// Zero-copy view of the internal `(H, capacity, D)` buffers. Valid
+    /// as decode-executable arguments only when the capacity equals the
+    /// selected bucket — [`crate::config::MetaConfig::decode_attend_bucket`]
+    /// prefers the capacity exactly so this is the decode fast path.
+    pub fn view(&self) -> (TensorView<'_>, TensorView<'_>) {
+        (
+            TensorView { shape: &self.shape, data: &self.k },
+            TensorView { shape: &self.shape, data: &self.v },
+        )
     }
 
     /// Re-bucket into `(H, bucket, D)` tensors for the decode executable.
@@ -145,8 +167,18 @@ impl FullCache {
 }
 
 /// Sink + local-window ring cache for sparse-decode layers. Holds at
-/// most `sink + local + 1` tokens; the full history is never retained —
+/// most `sink + local` live tokens; the full history is never retained —
 /// this is the paper's KV-memory reduction.
+///
+/// The backing store IS the executable layout: one `(H, SA_BUF, D)`
+/// buffer pair, incrementally maintained on `append` (the window region
+/// is a true ring — the oldest entry is overwritten in place, O(H·D)
+/// per token instead of the old O(H·SA_BUF·D) re-assembly), so decode
+/// reads it through [`SparseCache::view`] with zero copies. Slot layout:
+/// sink tokens occupy slots `0..sink_len`; the window occupies slots
+/// `sink_len..sink_len+win_len` with the write cursor cycling through
+/// them. Ring order is deterministic in the append history, and the
+/// attention executable treats the buffer as a set, so this is exact.
 #[derive(Debug, Clone)]
 pub struct SparseCache {
     n_heads: usize,
@@ -154,14 +186,12 @@ pub struct SparseCache {
     sink: usize,
     local: usize,
     buf: usize,
-    /// tokens stored: first `sink_len` are sink slots, the rest is the
-    /// window oldest->newest; each entry is an (H*D) k vec + v vec
-    sink_k: Vec<f32>,
-    sink_v: Vec<f32>,
+    /// executable-layout shape `[H, SA_BUF, D]` (borrowed by `view`)
+    shape: [usize; 3],
     sink_len: usize,
-    win_k: std::collections::VecDeque<Vec<f32>>,
-    win_v: std::collections::VecDeque<Vec<f32>>,
     total_seen: usize,
+    k: Vec<f32>, // (H, buf, D)
+    v: Vec<f32>,
 }
 
 impl SparseCache {
@@ -173,17 +203,22 @@ impl SparseCache {
             sink,
             local,
             buf,
-            sink_k: vec![0.0; sink * n_heads * head_dim],
-            sink_v: vec![0.0; sink * n_heads * head_dim],
+            shape: [n_heads, buf, head_dim],
             sink_len: 0,
-            win_k: Default::default(),
-            win_v: Default::default(),
             total_seen: 0,
+            k: vec![0.0; n_heads * buf * head_dim],
+            v: vec![0.0; n_heads * buf * head_dim],
         }
     }
 
+    /// Window entries currently live (tokens appended past the sink,
+    /// capped by the ring size).
+    fn win_len(&self) -> usize {
+        (self.total_seen - self.sink_len).min(self.local)
+    }
+
     pub fn len(&self) -> usize {
-        self.sink_len + self.win_k.len()
+        self.sink_len + self.win_len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -198,8 +233,21 @@ impl SparseCache {
         2 * self.buf * self.n_heads * self.head_dim * 4
     }
 
+    /// Scatter one token's `(H*D)` k/v into buffer slot `slot`.
+    fn write_slot(&mut self, slot: usize, k_new: &[f32], v_new: &[f32]) {
+        let (h, d) = (self.n_heads, self.head_dim);
+        for hh in 0..h {
+            let dst = (hh * self.buf + slot) * d;
+            self.k[dst..dst + d].copy_from_slice(&k_new[hh * d..(hh + 1) * d]);
+            self.v[dst..dst + d].copy_from_slice(&v_new[hh * d..(hh + 1) * d]);
+        }
+    }
+
     /// Load from prefill outputs, keeping only sink + trailing window —
-    /// the "fully bypassing full historical KV storage" step.
+    /// the "fully bypassing full historical KV storage" step. Ring
+    /// phases are primed exactly as if every prefill token had been
+    /// appended one by one, so prefill+decode and pure-append histories
+    /// produce identical buffers.
     pub fn load_prefill(&mut self, k: &HostTensor, v: &HostTensor, valid: usize) {
         let (h, d) = (self.n_heads, self.head_dim);
         let s_in = k.shape[1];
@@ -213,71 +261,62 @@ impl SparseCache {
             }
             out
         };
+        self.k.fill(0.0);
+        self.v.fill(0.0);
         self.sink_len = valid.min(self.sink);
-        for t in 0..self.sink_len {
-            let kk = grab(k, t);
-            let vv = grab(v, t);
-            self.sink_k[t * hd..(t + 1) * hd].copy_from_slice(&kk);
-            self.sink_v[t * hd..(t + 1) * hd].copy_from_slice(&vv);
-        }
-        self.win_k.clear();
-        self.win_v.clear();
-        let win_start = valid.saturating_sub(self.local).max(self.sink_len);
-        for t in win_start..valid {
-            self.win_k.push_back(grab(k, t));
-            self.win_v.push_back(grab(v, t));
-        }
         self.total_seen = valid;
+        for t in 0..self.sink_len {
+            let (kk, vv) = (grab(k, t), grab(v, t));
+            self.write_slot(t, &kk, &vv);
+        }
+        // trailing window: token t (t >= sink_len) is the
+        // (t - sink_len)-th window append, so it lands on ring slot
+        // sink_len + (t - sink_len) % local — same phase as append()
+        let win_len = self.win_len();
+        for t in (valid - win_len)..valid {
+            let slot = self.sink_len + (t - self.sink_len) % self.local.max(1);
+            let (kk, vv) = (grab(k, t), grab(v, t));
+            self.write_slot(slot, &kk, &vv);
+        }
     }
 
-    /// Append one decoded token, evicting the oldest window entry when
-    /// the window exceeds `local`.
+    /// Append one decoded token, overwriting the oldest window slot in
+    /// place once the ring is full.
     pub fn append(&mut self, k_new: &[f32], v_new: &[f32]) {
         let hd = self.n_heads * self.head_dim;
         assert_eq!(k_new.len(), hd);
         if self.sink_len < self.sink {
-            let t = self.sink_len;
-            self.sink_k[t * hd..(t + 1) * hd].copy_from_slice(k_new);
-            self.sink_v[t * hd..(t + 1) * hd].copy_from_slice(v_new);
+            let slot = self.sink_len;
+            self.write_slot(slot, k_new, v_new);
             self.sink_len += 1;
-        } else {
-            self.win_k.push_back(k_new.to_vec());
-            self.win_v.push_back(v_new.to_vec());
-            if self.win_k.len() > self.local {
-                self.win_k.pop_front();
-                self.win_v.pop_front();
-            }
+        } else if self.local > 0 {
+            let wa = self.total_seen - self.sink_len; // window appends so far
+            let slot = self.sink_len + wa % self.local;
+            self.write_slot(slot, k_new, v_new);
         }
         self.total_seen += 1;
     }
 
-    /// Compact into the `(H, SA_BUF, D)` tensor pair + valid length for
-    /// the sparse-decode executable.
+    /// Zero-copy view of the `(H, SA_BUF, D)` buffers + valid length for
+    /// the sparse-decode executable. Always available — the internal
+    /// buffer is maintained in executable layout.
+    pub fn view(&self) -> (TensorView<'_>, TensorView<'_>, usize) {
+        (
+            TensorView { shape: &self.shape, data: &self.k },
+            TensorView { shape: &self.shape, data: &self.v },
+            self.len(),
+        )
+    }
+
+    /// Owned copy of the `(H, SA_BUF, D)` tensor pair + valid length
+    /// (callers that must outlive the cache borrow; the decode hot path
+    /// uses [`SparseCache::view`] instead).
     pub fn as_tensors(&self) -> (HostTensor, HostTensor, usize) {
         let (h, d) = (self.n_heads, self.head_dim);
-        let hd = h * d;
-        let valid = self.len();
-        let mut k = vec![0.0; h * self.buf * d];
-        let mut v = vec![0.0; h * self.buf * d];
-        let write = |slot: usize, kk: &[f32], vv: &[f32], k: &mut [f32], v: &mut [f32]| {
-            for hh in 0..h {
-                let dst = (hh * self.buf + slot) * d;
-                k[dst..dst + d].copy_from_slice(&kk[hh * d..(hh + 1) * d]);
-                v[dst..dst + d].copy_from_slice(&vv[hh * d..(hh + 1) * d]);
-            }
-        };
-        for t in 0..self.sink_len {
-            let kk = &self.sink_k[t * hd..(t + 1) * hd];
-            let vv = &self.sink_v[t * hd..(t + 1) * hd];
-            write(t, kk, vv, &mut k, &mut v);
-        }
-        for (i, (kk, vv)) in self.win_k.iter().zip(&self.win_v).enumerate() {
-            write(self.sink_len + i, kk, vv, &mut k, &mut v);
-        }
         (
-            HostTensor::new(vec![h, self.buf, d], k),
-            HostTensor::new(vec![h, self.buf, d], v),
-            valid,
+            HostTensor::new(vec![h, self.buf, d], self.k.clone()),
+            HostTensor::new(vec![h, self.buf, d], self.v.clone()),
+            self.len(),
         )
     }
 }
@@ -366,12 +405,13 @@ mod tests {
         let k = ht(1, 16, 1, |_, t, _| t as f32);
         let v = ht(1, 16, 1, |_, t, _| t as f32 + 0.5);
         c.load_prefill(&k, &v, 10);
-        // sink = tokens 0,1; window = tokens 7,8,9
+        // sink = tokens 0,1; window = tokens 7,8,9 (ring-ordered: token
+        // t lands on slot sink + (t - sink) % local)
         assert_eq!(c.len(), 5);
         assert_eq!(c.total_seen(), 10);
         let (kt, _, valid) = c.as_tensors();
         assert_eq!(valid, 5);
-        assert_eq!(&kt.data[..5], &[0.0, 1.0, 7.0, 8.0, 9.0]);
+        assert_eq!(&kt.data[..5], &[0.0, 1.0, 8.0, 9.0, 7.0]);
     }
 
     #[test]
@@ -380,12 +420,13 @@ mod tests {
         for i in 0..6 {
             c.append(&[i as f32], &[i as f32]);
         }
-        // sink token 0; window = last two tokens (4, 5)
+        // sink token 0; window = last two tokens {4, 5} in ring order
+        // (5th window append overwrote slot 1 in place)
         assert_eq!(c.len(), 3);
         assert_eq!(c.total_seen(), 6);
         let (kt, _, valid) = c.as_tensors();
         assert_eq!(valid, 3);
-        assert_eq!(&kt.data[..3], &[0.0, 4.0, 5.0]);
+        assert_eq!(&kt.data[..3], &[0.0, 5.0, 4.0]);
     }
 
     #[test]
@@ -397,6 +438,58 @@ mod tests {
         }
         assert_eq!(c.bytes(), bytes0, "sparse cache must be O(1) memory");
         assert!(c.len() <= 16 + 128);
+    }
+
+    #[test]
+    fn views_alias_owned_tensors_bitwise() {
+        let mut c = FullCache::new(2, 4, 8);
+        for i in 0..5 {
+            c.append(&vec![i as f32; 8], &vec![-(i as f32); 8]);
+        }
+        let (kt, vt) = c.as_tensors(8);
+        let (kv, vv) = c.view();
+        assert_eq!(kv.shape, kt.shape.as_slice());
+        assert_eq!(kv.data, kt.data.as_slice());
+        assert_eq!(vv.data, vt.data.as_slice());
+
+        let mut s = SparseCache::new(2, 4, 1, 2, 4);
+        for i in 0..7 {
+            s.append(&vec![i as f32; 8], &vec![i as f32; 8]);
+        }
+        let (kt, vt, valid) = s.as_tensors();
+        let (kv, vv, valid2) = s.view();
+        assert_eq!(valid, valid2);
+        assert_eq!(kv.shape, kt.shape.as_slice());
+        assert_eq!(kv.data, kt.data.as_slice());
+        assert_eq!(vv.data, vt.data.as_slice());
+    }
+
+    #[test]
+    fn sparse_prefill_ring_phase_matches_appends_across_wrap() {
+        // prefill(valid) must leave the ring in the exact state that
+        // `valid` individual appends would — including the write-cursor
+        // phase, so subsequent appends overwrite the same slots
+        for valid in [1usize, 3, 4, 5, 7, 9, 12] {
+            let (sink, local, buf) = (2usize, 3usize, 8usize);
+            let data: Vec<f32> = (0..16).map(|t| t as f32).collect();
+            let kt = HostTensor::new(vec![1, 16, 1], data);
+            let mut by_prefill = SparseCache::new(1, 1, sink, local, buf);
+            by_prefill.load_prefill(&kt, &kt.clone(), valid);
+            let mut by_append = SparseCache::new(1, 1, sink, local, buf);
+            for t in 0..valid {
+                by_append.append(&[t as f32], &[t as f32]);
+            }
+            // continue appending past the wrap point on both
+            for extra in 0..4 {
+                let x = (100 + extra) as f32;
+                by_prefill.append(&[x], &[x]);
+                by_append.append(&[x], &[x]);
+            }
+            let (a, _, va) = by_append.view();
+            let (p, _, vp) = by_prefill.view();
+            assert_eq!(va, vp, "valid mismatch at prefill len {valid}");
+            assert_eq!(a.data, p.data, "ring state mismatch at prefill len {valid}");
+        }
     }
 
     #[test]

@@ -9,6 +9,8 @@
 //!        ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves all
 //!   flux [--artifacts DIR] bench-serve [--requests N] [--seq-len N]
 //!                                      [--rate R] [--policy P]
+//!   flux [--artifacts DIR] bench [--smoke] [--seq-len N] [--tokens N]
+//!                                [--threads N] [--out DIR]
 //!   flux [--artifacts DIR] synth [--seed N]
 //!   flux [--artifacts DIR] info
 //!
@@ -204,6 +206,28 @@ fn main() -> Result<()> {
             );
             Ok(())
         }
+        "bench" => {
+            // hermetic: fall back to synthetic artifacts when the
+            // requested directory has no manifest (CI smoke path)
+            let dir = if artifacts.join("manifest.json").exists() {
+                artifacts
+            } else {
+                flux_attention::runtime::synthetic::ensure_default()?
+            };
+            let defaults = flux_attention::util::bench::ServingBenchOpts::default();
+            let opts = flux_attention::util::bench::ServingBenchOpts {
+                seq_len: args.get_usize("seq-len", defaults.seq_len),
+                decode_tokens: args.get_usize("tokens", defaults.decode_tokens),
+                threads: args.get_usize("threads", defaults.threads),
+                out_dir: PathBuf::from(args.get("out", ".")),
+                smoke: args.has("smoke"),
+            };
+            let (p, d) = flux_attention::util::bench::run_serving_bench(&dir, &opts)?;
+            if opts.smoke {
+                println!("SMOKE OK: {p:?} and {d:?} validated");
+            }
+            Ok(())
+        }
         "synth" => {
             let seed = args.get_usize("seed", 0) as u64;
             let dir = flux_attention::runtime::synthetic::write_artifacts(
@@ -220,7 +244,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         _ => {
-            eprintln!("usage: flux [--artifacts DIR] <serve|generate|experiment|bench-serve|synth|info> [flags]");
+            eprintln!("usage: flux [--artifacts DIR] <serve|generate|experiment|bench-serve|bench|synth|info> [flags]");
             eprintln!("experiment ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves all");
             Ok(())
         }

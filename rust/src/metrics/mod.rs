@@ -66,6 +66,12 @@ pub struct ServingMetrics {
     pub requests_rejected: u64,
     pub tokens_generated: u64,
     pub prompt_tokens: u64,
+    /// KV-cache bytes physically copied while staging decode arguments
+    /// (absolute engine totals; ~0 on the zero-copy fast path)
+    pub kv_bytes_moved: u64,
+    /// KV-cache bytes staged as borrowed views — the copies the
+    /// zero-copy interchange avoided
+    pub kv_bytes_borrowed: u64,
     /// Omega_MSR sum + count per policy label
     omsr: HashMap<String, (f64, u64)>,
 }
@@ -92,7 +98,7 @@ impl ServingMetrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} rejected={} tokens={} ttft_p50={:.1}ms ttft_p95={:.1}ms \
-             decode_p50={:.2}ms decode_tput={:.1}tok/s",
+             decode_p50={:.2}ms decode_tput={:.1}tok/s kv_moved={}B kv_borrowed={}B",
             self.requests_completed,
             self.requests_rejected,
             self.tokens_generated,
@@ -100,6 +106,8 @@ impl ServingMetrics {
             self.ttft.p95_us() as f64 / 1e3,
             self.decode.p50_us() as f64 / 1e3,
             self.decode_throughput_tok_s(),
+            self.kv_bytes_moved,
+            self.kv_bytes_borrowed,
         )
     }
 }

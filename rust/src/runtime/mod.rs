@@ -56,20 +56,63 @@ impl HostTensor {
     }
 }
 
-/// One borrowed executable argument. Mirrors the two dtypes the AOT
-/// executables accept: f32 tensors and i32 scalar-vectors (positions,
-/// valid lengths).
+/// Borrowed view of an f32 tensor: shape + row-major data, both
+/// borrowed from whoever owns the buffer (a KV cache, a weight store, a
+/// slice of a larger tensor). This is the zero-copy half of the
+/// interchange — the KV caches hand out views of their internal
+/// executable-layout buffers so the decode hot path stages arguments
+/// without cloning (DESIGN.md §7).
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    pub shape: &'a [usize],
+    pub data: &'a [f32],
+}
+
+impl<'a> TensorView<'a> {
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+impl HostTensor {
+    /// Borrow this tensor as a zero-copy view.
+    pub fn view(&self) -> TensorView<'_> {
+        TensorView { shape: &self.shape, data: &self.data }
+    }
+}
+
+/// One borrowed executable argument. Mirrors the dtypes the AOT
+/// executables accept: f32 tensors (owned or borrowed-view) and i32
+/// scalar-vectors (positions, valid lengths).
 #[derive(Debug, Clone, Copy)]
 pub enum Arg<'a> {
     F32(&'a HostTensor),
+    /// Zero-copy variant: the backend reads straight out of the owner's
+    /// buffer (KV caches on the aligned decode fast path).
+    F32View(TensorView<'a>),
     I32(&'a [i32]),
 }
 
 impl<'a> Arg<'a> {
-    /// Unwrap as an f32 tensor (backend-side argument checking).
+    /// Unwrap as an owned f32 tensor (backend-side argument checking).
+    /// Fails on `F32View` — kernels that accept borrowed caches should
+    /// use [`Arg::view`] instead.
     pub fn f32(&self) -> Result<&'a HostTensor> {
         match self {
             Arg::F32(t) => Ok(t),
+            Arg::F32View(_) => {
+                anyhow::bail!("expected owned f32 tensor argument, got borrowed view")
+            }
+            Arg::I32(_) => anyhow::bail!("expected f32 tensor argument, got i32"),
+        }
+    }
+
+    /// Unwrap as an f32 view — works for both `F32` (borrowing the owned
+    /// tensor) and `F32View` arguments.
+    pub fn view(&self) -> Result<TensorView<'a>> {
+        match self {
+            Arg::F32(t) => Ok(t.view()),
+            Arg::F32View(v) => Ok(*v),
             Arg::I32(_) => anyhow::bail!("expected f32 tensor argument, got i32"),
         }
     }
@@ -78,7 +121,9 @@ impl<'a> Arg<'a> {
     pub fn i32(&self) -> Result<&'a [i32]> {
         match self {
             Arg::I32(v) => Ok(v),
-            Arg::F32(_) => anyhow::bail!("expected i32 argument, got f32 tensor"),
+            Arg::F32(_) | Arg::F32View(_) => {
+                anyhow::bail!("expected i32 argument, got f32 tensor")
+            }
         }
     }
 }
@@ -89,6 +134,13 @@ impl<'a> Arg<'a> {
 pub struct ExeStats {
     pub calls: u64,
     pub total_us: u64,
+    /// KV-cache bytes physically copied (re-bucketed / re-laid-out) to
+    /// stage this executable's arguments. Zero on the aligned decode
+    /// fast path — the integration suite pins this.
+    pub kv_bytes_moved: u64,
+    /// KV-cache bytes staged as borrowed views instead of copies — the
+    /// "copies avoided" counter of the zero-copy interchange.
+    pub kv_bytes_borrowed: u64,
 }
 
 /// An executable provider: loads named executables from the artifact
@@ -114,6 +166,43 @@ pub trait Backend {
     fn stats(&self) -> &HashMap<String, ExeStats>;
 
     fn reset_stats(&mut self);
+
+    /// Record KV-interchange accounting for `exe`: bytes of cache data
+    /// physically copied vs staged as borrowed views when preparing its
+    /// arguments. The engine calls this from the decode hot path;
+    /// backends fold it into [`Backend::stats`]. Default: dropped.
+    fn note_kv_transfer(&mut self, exe: &str, bytes_moved: u64, bytes_borrowed: u64) {
+        let _ = (exe, bytes_moved, bytes_borrowed);
+    }
+
+    /// Set the kernel worker count for backends with host-side compute
+    /// (the reference kernels). No-op for device backends; results are
+    /// bit-identical for every worker count (DESIGN.md §7).
+    fn set_threads(&mut self, n: usize) {
+        let _ = n;
+    }
+
+    /// Whether `layer_*_prefill_*` executables accept the optional 10th
+    /// valid-length argument (padded-tail skipping, DESIGN.md §7). The
+    /// AOT artifacts are lowered for the fixed 9-input signature, so
+    /// device backends default to `false`; the engine only appends the
+    /// argument when the backend opts in.
+    fn accepts_prefill_valid_arg(&self) -> bool {
+        false
+    }
+}
+
+/// Default kernel worker count: `FLUX_THREADS` when set (clamped to
+/// ≥ 1), otherwise the machine's available parallelism capped at 8 —
+/// the reference kernels are memory-bound well before that on typical
+/// hosts. Determinism never depends on this value.
+pub fn flux_threads_default() -> usize {
+    if let Ok(v) = std::env::var("FLUX_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
 }
 
 /// Select and construct a backend for an artifact directory.
@@ -211,6 +300,27 @@ mod tests {
         assert_eq!(Arg::I32(&pos).i32().unwrap(), &[5]);
         assert!(Arg::F32(&t).i32().is_err());
         assert!(Arg::I32(&pos).f32().is_err());
+    }
+
+    #[test]
+    fn arg_views_are_zero_copy_compatible() {
+        let t = HostTensor::new(vec![2, 1], vec![3.0, 4.0]);
+        // owned args are viewable; views report the same shape + data
+        let v1 = Arg::F32(&t).view().unwrap();
+        assert_eq!(v1.shape, &[2, 1]);
+        assert_eq!(v1.data, &[3.0, 4.0]);
+        let shape = [2usize, 1];
+        let data = [3.0f32, 4.0];
+        let v = TensorView { shape: &shape, data: &data };
+        let v2 = Arg::F32View(v).view().unwrap();
+        assert_eq!(v2.shape, v1.shape);
+        assert_eq!(v2.data, v1.data);
+        assert_eq!(v2.numel(), 2);
+        // a borrowed view never silently converts to an owned tensor
+        assert!(Arg::F32View(v).f32().is_err());
+        assert!(Arg::F32View(v).i32().is_err());
+        let pos = [1i32];
+        assert!(Arg::I32(&pos).view().is_err());
     }
 
     #[test]

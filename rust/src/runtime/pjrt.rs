@@ -23,11 +23,14 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
 
-use super::{Arg, Backend, ExeStats, HostTensor};
+use super::{Arg, Backend, ExeStats, HostTensor, TensorView};
 
-fn to_literal(t: &HostTensor) -> Result<Literal> {
+/// Device-boundary staging: both owned tensors and zero-copy views are
+/// read through [`TensorView`] — the host-side copy happens exactly once
+/// here, into the device literal.
+fn to_literal(t: TensorView<'_>) -> Result<Literal> {
     let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-    Literal::vec1(&t.data)
+    Literal::vec1(t.data)
         .reshape(&dims)
         .map_err(|e| anyhow::anyhow!("{e:?}"))
 }
@@ -109,7 +112,7 @@ impl Backend for PjrtBackend {
         let mut lits = Vec::with_capacity(args.len());
         for a in args {
             lits.push(match a {
-                Arg::F32(t) => to_literal(t)?,
+                Arg::F32(_) | Arg::F32View(_) => to_literal(a.view()?)?,
                 Arg::I32(v) => Literal::vec1(v),
             });
         }
@@ -137,5 +140,11 @@ impl Backend for PjrtBackend {
 
     fn reset_stats(&mut self) {
         self.stats.clear();
+    }
+
+    fn note_kv_transfer(&mut self, exe: &str, bytes_moved: u64, bytes_borrowed: u64) {
+        let st = self.stats.entry(exe.to_string()).or_default();
+        st.kv_bytes_moved += bytes_moved;
+        st.kv_bytes_borrowed += bytes_borrowed;
     }
 }

@@ -10,6 +10,14 @@
 //! dense layers (the teacher-forcing invariant the integration and
 //! property tests pin down).
 //!
+//! The kernels are multi-threaded (worker count from `FLUX_THREADS` /
+//! [`Backend::set_threads`]) yet bit-identical to the serial path:
+//! work is partitioned over *disjoint output rows* (matmul output rows
+//! or column stripes, attention heads) and every row keeps the serial
+//! per-row accumulation order, so a worker count only changes who
+//! computes a row, never any floating-point summation order
+//! (DESIGN.md §7).
+//!
 //! Executable name contract (same names the PJRT artifacts use):
 //!   `layer_{fa,ssa,ta,xa}_prefill_{S}`, `decode_qkv`,
 //!   `decode_attend_fa_{K}`, `decode_attend_sa`, `router`, `lm_head`.
@@ -44,13 +52,26 @@ enum ExeKind {
 /// PJRT artifacts bake these constants into the lowered HLO instead).
 pub struct RefBackend {
     cfg: MetaConfig,
+    /// kernel worker count; results are bit-identical for every value
+    threads: usize,
     loaded: HashSet<String>,
     stats: HashMap<String, ExeStats>,
 }
 
 impl RefBackend {
     pub fn new(cfg: MetaConfig) -> Self {
-        Self { cfg, loaded: HashSet::new(), stats: HashMap::new() }
+        let threads = super::flux_threads_default();
+        Self::with_threads(cfg, threads)
+    }
+
+    /// Construct with an explicit worker count (tests and the bench
+    /// harness pin this to compare serial vs parallel runs bit-for-bit).
+    pub fn with_threads(cfg: MetaConfig, threads: usize) -> Self {
+        Self { cfg, threads: threads.max(1), loaded: HashSet::new(), stats: HashMap::new() }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     fn parse_exe(&self, exe: &str) -> Result<ExeKind> {
@@ -109,12 +130,24 @@ impl RefBackend {
 
     /// One transformer layer over a bucketed prompt.
     /// Args: x (S,d), norm1 (d), wq/wk/wv/wo (d,d), norm2 (d),
-    /// w_ff1 (d,ff), w_ff2 (ff,d).
+    /// w_ff1 (d,ff), w_ff2 (ff,d), optional valid (1,) i32.
     /// Returns (x_out (S,d), k (H,S,D), v (H,S,D)); k is post-RoPE.
+    ///
+    /// When `valid < S` (prompt padded up to the bucket), only the first
+    /// `valid` rows are computed — padded tail rows of every output are
+    /// zero instead of burning full attention + MLP on dead rows. For
+    /// inputs whose tail rows are zero (the engine always embeds-with-
+    /// zero-padding) the valid rows are bit-identical to the full-bucket
+    /// computation; with 9 args `valid` defaults to `S` (old behavior,
+    /// exact).
     fn prefill_layer(&self, mode: Mode, s: usize, args: &[Arg]) -> Result<Vec<HostTensor>> {
         let m = &self.cfg.model;
         let (d, h, dd, ff) = (m.d_model, m.n_heads, m.head_dim, m.d_ff);
-        anyhow::ensure!(args.len() == 9, "prefill layer expects 9 args, got {}", args.len());
+        anyhow::ensure!(
+            args.len() == 9 || args.len() == 10,
+            "prefill layer expects 9 args (+ optional valid length), got {}",
+            args.len()
+        );
         let x = args[0].f32()?;
         want(x, &[s, d], "prefill x")?;
         let norm1 = args[1].f32()?;
@@ -129,20 +162,30 @@ impl RefBackend {
         want(wq, &[d, d], "wq")?;
         want(w_ff1, &[d, ff], "w_ff1")?;
         want(w_ff2, &[ff, d], "w_ff2")?;
+        let valid = if args.len() == 10 {
+            let va = args[9].i32()?;
+            anyhow::ensure!(va.len() == 1, "valid_len must be a single i32");
+            let v = va[0] as usize;
+            anyhow::ensure!((1..=s).contains(&v), "valid {v} out of range 1..={s}");
+            v
+        } else {
+            s
+        };
+        let nt = self.threads;
 
         let eps = m.rms_eps as f32;
-        let xn = rms_norm_rows(&x.data, &norm1.data, s, d, eps);
-        let q = matmul(&xn, &wq.data, s, d, d);
-        let k = matmul(&xn, &wk.data, s, d, d);
-        let v = matmul(&xn, &wv.data, s, d, d);
+        let xn = rms_norm_rows(&x.data, &norm1.data, valid, d, eps);
+        let q = matmul_mt(&xn, &wq.data, valid, d, d, nt);
+        let k = matmul_mt(&xn, &wk.data, valid, d, d, nt);
+        let v = matmul_mt(&xn, &wv.data, valid, d, d, nt);
 
-        // (S, d) -> per-head (H, S, D), RoPE on q and k at absolute
-        // positions 0..S (padding rows are all-zero and stay zero).
-        let mut qh = to_heads(&q, s, h, dd);
-        let mut kh = to_heads(&k, s, h, dd);
-        let vh = to_heads(&v, s, h, dd);
+        // (valid, d) -> per-head (H, S, D) with a zero tail, RoPE on q
+        // and k at absolute positions 0..valid.
+        let mut qh = to_heads_padded(&q, valid, s, h, dd);
+        let mut kh = to_heads_padded(&k, valid, s, h, dd);
+        let vh = to_heads_padded(&v, valid, s, h, dd);
         for hh in 0..h {
-            for t in 0..s {
+            for t in 0..valid {
                 let o = (hh * s + t) * dd;
                 rope_in_place(&mut qh[o..o + dd], t, m.rope_theta);
                 rope_in_place(&mut kh[o..o + dd], t, m.rope_theta);
@@ -161,10 +204,11 @@ impl RefBackend {
         let (sink, local, last_q) = (sp.sink_size, sp.local_size, sp.triangle_last_q);
         let block = sp.block_size;
 
-        let mut ctx = vec![0f32; h * s * dd];
-        let mut js: Vec<usize> = Vec::with_capacity(s);
-        for i in 0..s {
-            js.clear();
+        // per-row kv index sets, computed once and shared by all heads
+        let mut js_all: Vec<Vec<usize>> = Vec::with_capacity(valid);
+        let mut attn_pairs = 0usize;
+        for i in 0..valid {
+            let mut js: Vec<usize> = Vec::new();
             match mode {
                 Mode::Fa => js.extend(0..=i),
                 Mode::Ssa => js.extend((0..=i).filter(|&j| j < sink || i - j < local)),
@@ -181,38 +225,51 @@ impl RefBackend {
                     js.extend((0..=i).filter(|&j| sel[(i / block) * nb + j / block]));
                 }
             }
-            for hh in 0..h {
-                let base = hh * s * dd;
+            attn_pairs += js.len();
+            js_all.push(js);
+        }
+
+        // attention, parallel over heads (disjoint ctx slices; each head
+        // runs the identical serial row loop -> bit-identical results)
+        let mut ctx = vec![0f32; h * s * dd];
+        let attn_threads = par_threads(nt, h, attn_pairs * h * dd);
+        par_rows(attn_threads, &mut ctx, h, s * dd, |hh, ctx_h| {
+            let base = hh * s * dd;
+            for i in 0..valid {
                 attend_one(
                     &qh[base + i * dd..base + (i + 1) * dd],
                     &kh[base..base + s * dd],
                     &vh[base..base + s * dd],
                     dd,
-                    &js,
-                    &mut ctx[base + i * dd..base + (i + 1) * dd],
+                    &js_all[i],
+                    &mut ctx_h[i * dd..(i + 1) * dd],
                 );
             }
-        }
+        });
 
-        // merge heads back to (S, d), then residual attn output + MLP
+        // merge heads back to (S, d), then residual attn output + MLP —
+        // only the valid rows; padded output rows stay zero
         let mut merged = vec![0f32; s * d];
-        for t in 0..s {
+        for t in 0..valid {
             for hh in 0..h {
                 let src = (hh * s + t) * dd;
                 let dst = t * d + hh * dd;
                 merged[dst..dst + dd].copy_from_slice(&ctx[src..src + dd]);
             }
         }
-        let attn_out = matmul(&merged, &wo.data, s, d, d);
-        let mut x2: Vec<f32> = x.data.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
-        let xn2 = rms_norm_rows(&x2, &norm2.data, s, d, eps);
-        let mut mid = matmul(&xn2, &w_ff1.data, s, d, ff);
+        let attn_out = matmul_mt(&merged[..valid * d], &wo.data, valid, d, d, nt);
+        let mut x2 = vec![0f32; s * d];
+        for i in 0..valid * d {
+            x2[i] = x.data[i] + attn_out[i];
+        }
+        let xn2 = rms_norm_rows(&x2, &norm2.data, valid, d, eps);
+        let mut mid = matmul_mt(&xn2, &w_ff1.data, valid, d, ff, nt);
         for v in mid.iter_mut() {
             *v = gelu(*v);
         }
-        let ffo = matmul(&mid, &w_ff2.data, s, ff, d);
-        for (a, b) in x2.iter_mut().zip(&ffo) {
-            *a += b;
+        let ffo = matmul_mt(&mid, &w_ff2.data, valid, ff, d, nt);
+        for i in 0..valid * d {
+            x2[i] += ffo[i];
         }
 
         Ok(vec![
@@ -299,9 +356,9 @@ impl RefBackend {
         want(wq, &[d, d], "wq")?;
 
         let xn = rms_norm_rows(&x.data, &norm1.data, 1, d, m.rms_eps as f32);
-        let mut q = matmul(&xn, &wq.data, 1, d, d);
-        let mut k = matmul(&xn, &wk.data, 1, d, d);
-        let v = matmul(&xn, &wv.data, 1, d, d);
+        let mut q = matmul_mt(&xn, &wq.data, 1, d, d, self.threads);
+        let mut k = matmul_mt(&xn, &wk.data, 1, d, d, self.threads);
+        let v = matmul_mt(&xn, &wv.data, 1, d, d, self.threads);
         // (d,) reinterpreted as (H, D) is the same contiguous buffer
         for hh in 0..h {
             rope_in_place(&mut q[hh * dd..(hh + 1) * dd], pos, m.rope_theta);
@@ -318,6 +375,10 @@ impl RefBackend {
     /// current token) and finish the layer.
     /// Args: x (d,), q (H,D), k_cache (H,K,D), v_cache (H,K,D),
     /// valid (1,) i32, wo (d,d), norm2 (d), w_ff1 (d,ff), w_ff2 (ff,d).
+    ///
+    /// The k/v cache arguments accept borrowed views (`Arg::F32View`) —
+    /// the zero-copy decode fast path reads straight out of the KV
+    /// cache's internal buffers.
     fn decode_attend(&self, kbuf: usize, args: &[Arg]) -> Result<Vec<HostTensor>> {
         let m = &self.cfg.model;
         let (d, h, dd, ff) = (m.d_model, m.n_heads, m.head_dim, m.d_ff);
@@ -326,10 +387,10 @@ impl RefBackend {
         want(x, &[d], "decode x")?;
         let q = args[1].f32()?;
         want(q, &[h, dd], "decode q")?;
-        let kc = args[2].f32()?;
-        let vc = args[3].f32()?;
-        want(kc, &[h, kbuf, dd], "k cache")?;
-        want(vc, &[h, kbuf, dd], "v cache")?;
+        let kc = args[2].view()?;
+        let vc = args[3].view()?;
+        want_view(&kc, &[h, kbuf, dd], "k cache")?;
+        want_view(&vc, &[h, kbuf, dd], "v cache")?;
         let valid_arr = args[4].i32()?;
         anyhow::ensure!(valid_arr.len() == 1, "valid_len must be a single i32");
         let valid = valid_arr[0] as usize;
@@ -341,26 +402,27 @@ impl RefBackend {
 
         let js: Vec<usize> = (0..valid).collect();
         let mut ctx = vec![0f32; d];
-        for hh in 0..h {
+        let (q_data, kc_data, vc_data) = (&q.data, kc.data, vc.data);
+        par_rows(par_threads(self.threads, h, h * valid * dd), &mut ctx, h, dd, |hh, out| {
             let base = hh * kbuf * dd;
             attend_one(
-                &q.data[hh * dd..(hh + 1) * dd],
-                &kc.data[base..base + kbuf * dd],
-                &vc.data[base..base + kbuf * dd],
+                &q_data[hh * dd..(hh + 1) * dd],
+                &kc_data[base..base + kbuf * dd],
+                &vc_data[base..base + kbuf * dd],
                 dd,
                 &js,
-                &mut ctx[hh * dd..(hh + 1) * dd],
+                out,
             );
-        }
+        });
         let eps = m.rms_eps as f32;
-        let attn_out = matmul(&ctx, &wo.data, 1, d, d);
+        let attn_out = matmul_mt(&ctx, &wo.data, 1, d, d, self.threads);
         let mut x2: Vec<f32> = x.data.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
         let xn2 = rms_norm_rows(&x2, &norm2.data, 1, d, eps);
-        let mut mid = matmul(&xn2, &w_ff1.data, 1, d, ff);
+        let mut mid = matmul_mt(&xn2, &w_ff1.data, 1, d, ff, self.threads);
         for v in mid.iter_mut() {
             *v = gelu(*v);
         }
-        let ffo = matmul(&mid, &w_ff2.data, 1, ff, d);
+        let ffo = matmul_mt(&mid, &w_ff2.data, 1, ff, d, self.threads);
         for (a, b) in x2.iter_mut().zip(&ffo) {
             *a += b;
         }
@@ -395,19 +457,21 @@ impl RefBackend {
     }
 
     /// Final norm + vocabulary projection for one token.
-    /// Args: x (d,), norm_f (d,), lm_head (d, V).
+    /// Args: x (d,), norm_f (d,), lm_head (d, V). `x` accepts a borrowed
+    /// view (the prefill path hands over a slice of its hidden state
+    /// instead of materializing the last row).
     fn lm_head(&self, args: &[Arg]) -> Result<Vec<HostTensor>> {
         let m = &self.cfg.model;
         let (d, v) = (m.d_model, m.vocab_size);
         anyhow::ensure!(args.len() == 3, "lm_head expects 3 args, got {}", args.len());
-        let x = args[0].f32()?;
-        want(x, &[d], "lm_head x")?;
+        let x = args[0].view()?;
+        want_view(&x, &[d], "lm_head x")?;
         let norm_f = args[1].f32()?;
         let w = args[2].f32()?;
         want(norm_f, &[d], "norm_f")?;
         want(w, &[d, v], "lm_head weight")?;
-        let xn = rms_norm_rows(&x.data, &norm_f.data, 1, d, m.rms_eps as f32);
-        let logits = matmul(&xn, &w.data, 1, d, v);
+        let xn = rms_norm_rows(x.data, &norm_f.data, 1, d, m.rms_eps as f32);
+        let logits = matmul_mt(&xn, &w.data, 1, d, v, self.threads);
         Ok(vec![HostTensor::new(vec![v], logits)])
     }
 }
@@ -444,6 +508,20 @@ impl Backend for RefBackend {
     fn reset_stats(&mut self) {
         self.stats.clear();
     }
+
+    fn note_kv_transfer(&mut self, exe: &str, bytes_moved: u64, bytes_borrowed: u64) {
+        let st = self.stats.entry(exe.to_string()).or_default();
+        st.kv_bytes_moved += bytes_moved;
+        st.kv_bytes_borrowed += bytes_borrowed;
+    }
+
+    fn set_threads(&mut self, n: usize) {
+        self.threads = n.max(1);
+    }
+
+    fn accepts_prefill_valid_arg(&self) -> bool {
+        true
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -458,6 +536,111 @@ fn want(t: &HostTensor, shape: &[usize], what: &str) -> Result<()> {
         t.shape
     );
     Ok(())
+}
+
+fn want_view(t: &super::TensorView, shape: &[usize], what: &str) -> Result<()> {
+    anyhow::ensure!(
+        t.shape == shape,
+        "{what}: expected shape {shape:?}, got {:?}",
+        t.shape
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// deterministic parallelism substrate: work splits over DISJOINT output
+// rows / column stripes only; every row keeps the serial accumulation
+// order, so any worker count produces bit-identical results
+// ---------------------------------------------------------------------------
+
+/// Minimum per-kernel work (multiply-accumulates) before scoped worker
+/// threads pay for their spawn cost (~tens of µs per scope).
+const PAR_MIN_WORK: usize = 1 << 17;
+
+/// Worker count for a kernel of `work` multiply-accumulates over `rows`
+/// independent rows. Never affects results, only wall-clock.
+fn par_threads(threads: usize, rows: usize, work: usize) -> usize {
+    if threads <= 1 || work < PAR_MIN_WORK {
+        1
+    } else {
+        threads.min(rows).max(1)
+    }
+}
+
+/// Run `f(row, out_row)` over the `rows` leading rows of `out` (each
+/// `row_size` long), rows partitioned contiguously across `threads`
+/// scoped workers. Exactly one worker produces each row with the same
+/// per-row code as the serial path — bit-identical for every `threads`.
+fn par_rows(
+    threads: usize,
+    out: &mut [f32],
+    rows: usize,
+    row_size: usize,
+    f: impl Fn(usize, &mut [f32]) + Sync,
+) {
+    let out = &mut out[..rows * row_size];
+    if threads <= 1 || rows <= 1 {
+        for (r, row) in out.chunks_mut(row_size).enumerate() {
+            f(r, row);
+        }
+        return;
+    }
+    let per = rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (ci, chunk) in out.chunks_mut(per * row_size).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, row) in chunk.chunks_mut(row_size).enumerate() {
+                    f(ci * per + j, row);
+                }
+            });
+        }
+    });
+}
+
+/// `x (rows, din) @ w (din, dout)` with `threads` workers, bit-identical
+/// to [`matmul`] for every thread count (per output element the din-
+/// ascending accumulation order is preserved). Multi-row inputs split
+/// by output row; single-row inputs — the decode hot path's `lm_head`
+/// (d × V) and FF pair — use a blocked column-stripe microkernel where
+/// each worker streams its contiguous stripe of every `w` row.
+fn matmul_mt(x: &[f32], w: &[f32], rows: usize, din: usize, dout: usize, threads: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * din);
+    debug_assert_eq!(w.len(), din * dout);
+    let nt = par_threads(threads, if rows > 1 { rows } else { dout }, rows * din * dout);
+    if nt <= 1 {
+        return matmul(x, w, rows, din, dout);
+    }
+    let mut out = vec![0f32; rows * dout];
+    if rows > 1 {
+        par_rows(nt, &mut out, rows, dout, |r, or| {
+            let xr = &x[r * din..(r + 1) * din];
+            for i in 0..din {
+                let xv = xr[i];
+                let wr = &w[i * dout..(i + 1) * dout];
+                for (o, wv) in or.iter_mut().zip(wr) {
+                    *o += xv * *wv;
+                }
+            }
+        });
+    } else {
+        let per = dout.div_ceil(nt);
+        std::thread::scope(|scope| {
+            for (ci, oc) in out.chunks_mut(per).enumerate() {
+                let c0 = ci * per;
+                scope.spawn(move || {
+                    for i in 0..din {
+                        let xv = x[i];
+                        let wr = &w[i * dout + c0..i * dout + c0 + oc.len()];
+                        for (o, wv) in oc.iter_mut().zip(wr) {
+                            *o += xv * *wv;
+                        }
+                    }
+                });
+            }
+        });
+    }
+    out
 }
 
 /// Row-wise RMSNorm: `x * rsqrt(mean(x^2) + eps) * scale`.
@@ -520,11 +703,13 @@ fn rope_in_place(v: &mut [f32], pos: usize, theta: f64) {
     }
 }
 
-/// `(S, d)` row-major to `(H, S, D)` per-head layout.
-fn to_heads(x: &[f32], s: usize, h: usize, dd: usize) -> Vec<f32> {
+/// `(valid, d)` row-major to `(H, S, D)` per-head layout; rows
+/// `valid..s` (bucket padding) stay zero.
+fn to_heads_padded(x: &[f32], valid: usize, s: usize, h: usize, dd: usize) -> Vec<f32> {
+    debug_assert!(valid <= s);
     let d = h * dd;
     let mut out = vec![0f32; h * s * dd];
-    for t in 0..s {
+    for t in 0..valid {
         for hh in 0..h {
             let src = t * d + hh * dd;
             let dst = (hh * s + t) * dd;
@@ -662,6 +847,130 @@ mod tests {
         for &o in &out {
             assert!((o - 1.0).abs() < 1e-3);
         }
+    }
+
+    fn mk_tensor(shape: Vec<usize>, seed: u64) -> HostTensor {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
+        let n: usize = shape.iter().product();
+        HostTensor::new(shape, (0..n).map(|_| (rng.f64() as f32 - 0.5) * 0.2).collect())
+    }
+
+    #[test]
+    fn multithreaded_matmul_bit_identical() {
+        // covers the single-row column-stripe microkernel (above the
+        // work threshold), the multi-row row split, and the small-work
+        // serial fallback — all must match the serial kernel bitwise
+        for &(rows, din, dout) in
+            &[(1usize, 64usize, 4096usize), (1, 512, 1024), (257, 64, 96), (3, 128, 128)]
+        {
+            let x = mk_tensor(vec![rows, din], rows as u64 * 31 + dout as u64);
+            let w = mk_tensor(vec![din, dout], din as u64 * 7 + 1);
+            let base = matmul(&x.data, &w.data, rows, din, dout);
+            for threads in [1usize, 2, 3, 8] {
+                let got = matmul_mt(&x.data, &w.data, rows, din, dout, threads);
+                assert_eq!(
+                    base, got,
+                    "matmul_mt diverged: rows={rows} din={din} dout={dout} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_skips_padded_tail_rows_with_parity() {
+        // zero-tail input (what the engine's padded embedding produces):
+        // the valid-rows path must be bit-identical to the full-bucket
+        // computation on the valid rows and on all of k/v, and must zero
+        // the padded output rows instead of leaving attention garbage
+        let mut b = backend();
+        let m = b.cfg.model.clone();
+        let s = 128usize;
+        let valid = 100usize;
+        let d = m.d_model;
+        for mode in ["fa", "ssa", "ta", "xa"] {
+            let exe = format!("layer_{mode}_prefill_128");
+            b.load(&exe).unwrap();
+            let mut x = mk_tensor(vec![s, d], 11);
+            for i in valid * d..s * d {
+                x.data[i] = 0.0;
+            }
+            let n1 = HostTensor::new(vec![d], vec![1.0; d]);
+            let wq = mk_tensor(vec![d, d], 2);
+            let wk = mk_tensor(vec![d, d], 3);
+            let wv = mk_tensor(vec![d, d], 4);
+            let wo = mk_tensor(vec![d, d], 5);
+            let n2 = n1.clone();
+            let f1 = mk_tensor(vec![d, m.d_ff], 6);
+            let f2 = mk_tensor(vec![m.d_ff, d], 7);
+            let args9 = [
+                Arg::F32(&x), Arg::F32(&n1), Arg::F32(&wq), Arg::F32(&wk), Arg::F32(&wv),
+                Arg::F32(&wo), Arg::F32(&n2), Arg::F32(&f1), Arg::F32(&f2),
+            ];
+            let valid_arr = [valid as i32];
+            let args10 = [
+                Arg::F32(&x), Arg::F32(&n1), Arg::F32(&wq), Arg::F32(&wk), Arg::F32(&wv),
+                Arg::F32(&wo), Arg::F32(&n2), Arg::F32(&f1), Arg::F32(&f2),
+                Arg::I32(&valid_arr),
+            ];
+            let full = b.run(&exe, &args9).unwrap();
+            let skip = b.run(&exe, &args10).unwrap();
+            assert_eq!(full[1], skip[1], "{mode}: k must be bit-identical");
+            assert_eq!(full[2], skip[2], "{mode}: v must be bit-identical");
+            assert_eq!(
+                &full[0].data[..valid * d],
+                &skip[0].data[..valid * d],
+                "{mode}: valid hidden rows must be bit-identical"
+            );
+            assert!(
+                skip[0].data[valid * d..].iter().all(|&v| v == 0.0),
+                "{mode}: padded output rows must be zeroed"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_attend_accepts_views_and_matches_owned_path() {
+        let mut b = backend();
+        let m = b.cfg.model.clone();
+        let (d, h, dd, ff) = (m.d_model, m.n_heads, m.head_dim, m.d_ff);
+        let kbuf = 128usize;
+        b.load("decode_attend_fa_128").unwrap();
+        let x = mk_tensor(vec![d], 21);
+        let q = mk_tensor(vec![h, dd], 22);
+        let kc = mk_tensor(vec![h, kbuf, dd], 23);
+        let vc = mk_tensor(vec![h, kbuf, dd], 24);
+        let valid_arr = [57i32];
+        let wo = mk_tensor(vec![d, d], 25);
+        let n2 = HostTensor::new(vec![d], vec![1.0; d]);
+        let f1 = mk_tensor(vec![d, ff], 26);
+        let f2 = mk_tensor(vec![ff, d], 27);
+        let owned = b
+            .run(
+                "decode_attend_fa_128",
+                &[
+                    Arg::F32(&x), Arg::F32(&q), Arg::F32(&kc), Arg::F32(&vc),
+                    Arg::I32(&valid_arr), Arg::F32(&wo), Arg::F32(&n2),
+                    Arg::F32(&f1), Arg::F32(&f2),
+                ],
+            )
+            .unwrap();
+        let viewed = b
+            .run(
+                "decode_attend_fa_128",
+                &[
+                    Arg::F32(&x), Arg::F32(&q), Arg::F32View(kc.view()), Arg::F32View(vc.view()),
+                    Arg::I32(&valid_arr), Arg::F32(&wo), Arg::F32(&n2),
+                    Arg::F32(&f1), Arg::F32(&f2),
+                ],
+            )
+            .unwrap();
+        assert_eq!(owned, viewed, "view-staged KV must produce byte-identical output");
+        // kv transfer accounting lands in stats
+        b.note_kv_transfer("decode_attend_fa_128", 0, 4096);
+        b.note_kv_transfer("decode_attend_fa_128", 128, 0);
+        let st = &b.stats()["decode_attend_fa_128"];
+        assert_eq!(st.kv_bytes_borrowed, 4096);
+        assert_eq!(st.kv_bytes_moved, 128);
     }
 
     #[test]

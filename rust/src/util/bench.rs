@@ -3,8 +3,18 @@
 //! Warmup + timed iterations with mean / p50 / p95 reporting and a
 //! machine-readable JSON dump per group, so `cargo bench` output can be
 //! diffed across the §Perf optimization iterations.
+//!
+//! Also hosts the `flux bench` serving harness
+//! ([`run_serving_bench`]): prefill + decode step latency across the
+//! three staging configurations (clone+serial baseline, zero-copy
+//! serial, zero-copy parallel), emitted as `BENCH_prefill.json` /
+//! `BENCH_decode.json` — the repo-root perf trajectory every future PR
+//! measures against (DESIGN.md §7).
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+use anyhow::Result;
 
 use super::json::Json;
 
@@ -39,13 +49,7 @@ impl Bench {
             std::hint::black_box(f());
             samples.push(t0.elapsed().as_nanos() as f64 / 1e3);
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let stats = Stats {
-            iters,
-            mean_us: samples.iter().sum::<f64>() / iters as f64,
-            p50_us: samples[iters / 2],
-            p95_us: samples[((iters as f64 * 0.95) as usize).min(iters - 1)],
-        };
+        let stats = stats_of(&mut samples);
         println!(
             "{:<40} mean {:>10.2} us   p50 {:>10.2} us   p95 {:>10.2} us   ({} iters)",
             name, stats.mean_us, stats.p50_us, stats.p95_us, iters
@@ -72,6 +76,266 @@ impl Bench {
     }
 }
 
+// ---------------------------------------------------------------------------
+// `flux bench`: the serving-path benchmark behind BENCH_prefill.json /
+// BENCH_decode.json
+// ---------------------------------------------------------------------------
+
+/// Options for the `flux bench` serving benchmark.
+#[derive(Debug, Clone)]
+pub struct ServingBenchOpts {
+    /// prompt length (clamped to the artifact's largest prefill bucket)
+    pub seq_len: usize,
+    /// timed decode steps per configuration
+    pub decode_tokens: usize,
+    /// worker count for the parallel configuration
+    pub threads: usize,
+    /// where BENCH_prefill.json / BENCH_decode.json land
+    pub out_dir: PathBuf,
+    /// tiny CI run: fewer iterations, validation only
+    pub smoke: bool,
+}
+
+impl Default for ServingBenchOpts {
+    fn default() -> Self {
+        Self {
+            seq_len: 256,
+            decode_tokens: 32,
+            threads: crate::runtime::flux_threads_default(),
+            out_dir: PathBuf::from("."),
+            smoke: false,
+        }
+    }
+}
+
+fn stats_of(samples: &mut [f64]) -> Stats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let iters = samples.len();
+    Stats {
+        iters,
+        mean_us: samples.iter().sum::<f64>() / iters as f64,
+        p50_us: samples[iters / 2],
+        p95_us: samples[((iters as f64 * 0.95) as usize).min(iters - 1)],
+    }
+}
+
+fn stats_json(label: &str, st: &Stats, tokens_per_s: f64) -> Json {
+    let mut o = Json::obj();
+    o.set("label", Json::from(label));
+    o.set("iters", Json::from(st.iters));
+    o.set("mean_us", Json::from(st.mean_us));
+    o.set("p50_us", Json::from(st.p50_us));
+    o.set("p95_us", Json::from(st.p95_us));
+    o.set("tokens_per_s", Json::from(tokens_per_s));
+    o
+}
+
+/// Assert a written bench file parses and reports positive throughput —
+/// the `flux bench --smoke` CI gate.
+fn validate_bench_file(path: &Path) -> Result<()> {
+    let j = Json::parse(&std::fs::read_to_string(path)?)
+        .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+    let ok = j
+        .get("configs")
+        .and_then(Json::as_arr)
+        .map(|arr| {
+            !arr.is_empty()
+                && arr.iter().all(|c| {
+                    c.get("tokens_per_s")
+                        .and_then(Json::as_f64)
+                        .map(|v| v > 0.0)
+                        .unwrap_or(false)
+                })
+        })
+        .unwrap_or(false);
+    anyhow::ensure!(ok, "bench output {path:?} failed validation (missing/zero tokens_per_s)");
+    Ok(())
+}
+
+/// Run the serving benchmark against an artifact directory and write
+/// `BENCH_prefill.json` / `BENCH_decode.json` into `opts.out_dir`.
+/// Returns the two paths. Three staging configurations are compared
+/// in-process so the clone-vs-view and serial-vs-parallel deltas come
+/// from the same binary and artifacts:
+///   * `baseline_clone_serial` — pre-optimization behavior (KV cloned
+///     per layer per token, single-threaded kernels);
+///   * `view_serial` — zero-copy KV staging, single-threaded;
+///   * `view_parallel` — zero-copy + `opts.threads` kernel workers.
+pub fn run_serving_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<(PathBuf, PathBuf)> {
+    use crate::engine::Engine;
+    use crate::router::{AttnMode, DecodeMode, Policy};
+    use crate::runtime::Backend;
+    use crate::util::rng::Rng;
+    use crate::workload::{generate, Task};
+
+    let mut engine = Engine::load(artifacts)?;
+    let n_layers = engine.cfg().model.n_layers;
+    let max_prefill = *engine.cfg().prefill_buckets.last().unwrap();
+    let (seq, steps, prefill_iters) = if opts.smoke {
+        (opts.seq_len.min(128).min(max_prefill), opts.decode_tokens.clamp(2, 4), 2)
+    } else {
+        (opts.seq_len.min(max_prefill), opts.decode_tokens.max(2), 5)
+    };
+    let mut rng = Rng::seed_from_u64(7);
+    let sample = generate(Task::PRe, &mut rng, seq);
+    let prompt_len = sample.prompt.len();
+
+    struct RunCfg {
+        label: &'static str,
+        zero_copy: bool,
+        threads: usize,
+    }
+    let configs = [
+        RunCfg { label: "baseline_clone_serial", zero_copy: false, threads: 1 },
+        RunCfg { label: "view_serial", zero_copy: true, threads: 1 },
+        RunCfg { label: "view_parallel", zero_copy: true, threads: opts.threads },
+    ];
+
+    println!("== flux bench (seq {seq}, {steps} decode steps, {} threads) ==", opts.threads);
+
+    // ---- prefill: serial vs parallel kernels (zero-copy staging only
+    // affects decode KV, so a clone-vs-view prefill row would measure
+    // the same configuration twice) ----
+    let mut prefill_results: Vec<(String, Stats, f64)> = Vec::new();
+    for (label, threads) in [("baseline_serial", 1usize), ("parallel", opts.threads)] {
+        engine.set_zero_copy(true);
+        engine.set_threads(threads);
+        let mut samples = Vec::with_capacity(prefill_iters);
+        for _ in 0..prefill_iters {
+            let t0 = Instant::now();
+            let (id, _) = engine.prefill(&sample.prompt, &Policy::Backbone, "balanced")?;
+            samples.push(t0.elapsed().as_nanos() as f64 / 1e3);
+            engine.release(id);
+        }
+        let st = stats_of(&mut samples);
+        let tok_s = prompt_len as f64 / (st.mean_us / 1e6).max(1e-12);
+        println!(
+            "prefill/fa/{:<22} mean {:>10.1} us   p50 {:>10.1}   p95 {:>10.1}   {:>10.0} tok/s",
+            label, st.mean_us, st.p50_us, st.p95_us, tok_s
+        );
+        prefill_results.push((label.to_string(), st, tok_s));
+    }
+    // SSA prefill under the optimized configuration (FA-vs-SA ratio)
+    let ssa_policy =
+        Policy::Static { modes: vec![AttnMode::Ssa; n_layers], decode: DecodeMode::Dense };
+    let mut ssa_samples = Vec::with_capacity(prefill_iters);
+    for _ in 0..prefill_iters {
+        let t0 = Instant::now();
+        let (id, _) = engine.prefill(&sample.prompt, &ssa_policy, "balanced")?;
+        ssa_samples.push(t0.elapsed().as_nanos() as f64 / 1e3);
+        engine.release(id);
+    }
+    let ssa_st = stats_of(&mut ssa_samples);
+    let ssa_tok_s = prompt_len as f64 / (ssa_st.mean_us / 1e6).max(1e-12);
+
+    // ---- decode: per configuration ----
+    let mut decode_results: Vec<(String, Stats, f64)> = Vec::new();
+    let mut kv_fast_path = (0u64, 0u64);
+    for c in &configs {
+        engine.set_zero_copy(c.zero_copy);
+        engine.set_threads(c.threads);
+        if c.label == "view_parallel" {
+            engine.rt.reset_stats(); // capture fast-path KV accounting
+        }
+        let (id, _) = engine.prefill(&sample.prompt, &Policy::Backbone, "balanced")?;
+        for _ in 0..2 {
+            engine.decode_step(id)?; // warmup
+        }
+        let mut samples = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let t0 = Instant::now();
+            engine.decode_step(id)?;
+            samples.push(t0.elapsed().as_nanos() as f64 / 1e3);
+        }
+        engine.release(id);
+        let st = stats_of(&mut samples);
+        let tok_s = 1e6 / st.mean_us.max(1e-9);
+        println!(
+            "decode/fa/{:<23} mean {:>10.1} us   p50 {:>10.1}   p95 {:>10.1}   {:>10.1} tok/s",
+            c.label, st.mean_us, st.p50_us, st.p95_us, tok_s
+        );
+        decode_results.push((c.label.to_string(), st, tok_s));
+        if c.label == "view_parallel" {
+            kv_fast_path = engine.kv_transfer_totals();
+        }
+    }
+
+    // sparse decode under the optimized configuration (FA-vs-SA ratio)
+    let sparse_policy =
+        Policy::Static { modes: vec![AttnMode::Ssa; n_layers], decode: DecodeMode::Sparse };
+    let (id, _) = engine.prefill(&sample.prompt, &sparse_policy, "balanced")?;
+    for _ in 0..2 {
+        engine.decode_step(id)?;
+    }
+    let mut sparse_samples = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let t0 = Instant::now();
+        engine.decode_step(id)?;
+        sparse_samples.push(t0.elapsed().as_nanos() as f64 / 1e3);
+    }
+    engine.release(id);
+    let sparse_st = stats_of(&mut sparse_samples);
+
+    // ---- emit BENCH_prefill.json ----
+    let fa_base = prefill_results[0].1.mean_us;
+    let fa_par = prefill_results[1].1.mean_us;
+    let mut jp = Json::obj();
+    jp.set("schema", Json::from("flux-bench-prefill/v1"));
+    jp.set("measured", Json::from(true));
+    jp.set("seq_len", Json::from(seq));
+    jp.set("prompt_len", Json::from(prompt_len));
+    jp.set("threads", Json::from(opts.threads));
+    let mut arr = Json::Arr(vec![]);
+    for (label, st, tok) in &prefill_results {
+        arr.push(stats_json(label, st, *tok));
+    }
+    jp.set("configs", arr);
+    jp.set("ssa_optimized", stats_json("ssa_view_parallel", &ssa_st, ssa_tok_s));
+    jp.set("fa_over_ssa_latency_ratio", Json::from(fa_par / ssa_st.mean_us.max(1e-9)));
+    jp.set("speedup_parallel_over_baseline", Json::from(fa_base / fa_par.max(1e-9)));
+    let prefill_path = opts.out_dir.join("BENCH_prefill.json");
+    std::fs::write(&prefill_path, jp.to_string())?;
+
+    // ---- emit BENCH_decode.json ----
+    let d_base = decode_results[0].1.mean_us;
+    let d_view = decode_results[1].1.mean_us;
+    let d_par = decode_results[2].1.mean_us;
+    let mut jd = Json::obj();
+    jd.set("schema", Json::from("flux-bench-decode/v1"));
+    jd.set("measured", Json::from(true));
+    jd.set("seq_len", Json::from(seq));
+    jd.set("decode_tokens", Json::from(steps));
+    jd.set("threads", Json::from(opts.threads));
+    let mut arr = Json::Arr(vec![]);
+    for (label, st, tok) in &decode_results {
+        arr.push(stats_json(label, st, *tok));
+    }
+    jd.set("configs", arr);
+    jd.set("sparse_optimized", stats_json("sa_view_parallel", &sparse_st, 1e6 / sparse_st.mean_us.max(1e-9)));
+    jd.set("fa_over_sa_step_ratio", Json::from(d_par / sparse_st.mean_us.max(1e-9)));
+    jd.set("speedup_view_over_clone", Json::from(d_base / d_view.max(1e-9)));
+    jd.set("speedup_parallel_over_view_serial", Json::from(d_view / d_par.max(1e-9)));
+    jd.set("speedup_total_over_baseline", Json::from(d_base / d_par.max(1e-9)));
+    jd.set("kv_bytes_moved_fast_path", Json::from(kv_fast_path.0 as f64));
+    jd.set("kv_bytes_borrowed_fast_path", Json::from(kv_fast_path.1 as f64));
+    let decode_path = opts.out_dir.join("BENCH_decode.json");
+    std::fs::write(&decode_path, jd.to_string())?;
+
+    validate_bench_file(&prefill_path)?;
+    validate_bench_file(&decode_path)?;
+    println!(
+        "decode speedup: view/clone {:.2}x, parallel/serial {:.2}x, total {:.2}x \
+         (kv moved {} B, borrowed {} B on fast path)",
+        d_base / d_view.max(1e-9),
+        d_view / d_par.max(1e-9),
+        d_base / d_par.max(1e-9),
+        kv_fast_path.0,
+        kv_fast_path.1
+    );
+    println!("(saved {prefill_path:?} and {decode_path:?})");
+    Ok((prefill_path, decode_path))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,5 +351,21 @@ mod tests {
         assert_eq!(b.results.len(), 1);
         assert!(b.results[0].1.mean_us >= 0.0);
         assert!(b.results[0].1.p95_us >= b.results[0].1.p50_us);
+    }
+
+    #[test]
+    fn serving_bench_validation_gates_on_throughput() {
+        let dir = std::env::temp_dir().join(format!("flux-bench-validate-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.json");
+        std::fs::write(&bad, r#"{"configs": []}"#).unwrap();
+        assert!(validate_bench_file(&bad).is_err(), "empty configs must fail validation");
+        let zero = dir.join("zero.json");
+        std::fs::write(&zero, r#"{"configs": [{"tokens_per_s": 0.0}]}"#).unwrap();
+        assert!(validate_bench_file(&zero).is_err(), "zero tokens/s must fail validation");
+        let good = dir.join("good.json");
+        std::fs::write(&good, r#"{"configs": [{"tokens_per_s": 12.5}]}"#).unwrap();
+        validate_bench_file(&good).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -7,12 +7,15 @@
 //! Uses the in-crate property runner (`util::prop`): seeded random
 //! cases; failures report the replayable seed.
 
+use std::path::PathBuf;
+
 use flux_attention::baselines::{entropy_ranked_modes, jacobi_eigenvalues};
+use flux_attention::config::MetaConfig;
 use flux_attention::engine::Engine;
 use flux_attention::gpu_sim::{decode_latency_s, GpuSimConfig, SimPolicy};
 use flux_attention::kvcache::{FullCache, SparseCache};
-use flux_attention::router::{pool_descriptor, AttnMode, Policy};
-use flux_attention::runtime::{synthetic, HostTensor};
+use flux_attention::router::{pool_descriptor, AttnMode, DecodeMode, Policy};
+use flux_attention::runtime::{synthetic, Arg, Backend, HostTensor, RefBackend};
 use flux_attention::tokenizer::Tokenizer;
 use flux_attention::util::prop::check;
 use flux_attention::util::rng::Rng;
@@ -59,10 +62,14 @@ fn sparse_cache_window_invariant() {
             prop_assert_eq!(kt.data[t], t as f32);
         }
         let n_win = (n - n_sink).min(local);
-        for (j, t) in ((n - n_win)..n).enumerate() {
-            prop_assert_eq!(kt.data[n_sink + j], t as f32);
-        }
         prop_assert_eq!(valid, n_sink + n_win);
+        // the window is a ring in executable layout: the surviving token
+        // t sits at slot n_sink + (t - n_sink) % local, and only the
+        // last n_win tokens survive
+        for t in (n - n_win)..n {
+            let slot = n_sink + (t - n_sink) % local;
+            prop_assert_eq!(kt.data[slot], t as f32);
+        }
         Ok(())
     });
 }
@@ -232,6 +239,142 @@ fn dense_decode_matches_full_prefill_recompute_property() {
             engine.release(id2);
             prop_assert_eq!(r2.first_token, toks[m]);
         }
+        Ok(())
+    });
+}
+
+/// Multi-threaded kernels must be bit-identical to `FLUX_THREADS=1`:
+/// both at the kernel level (full prefill-layer output tensors over a
+/// bucket big enough to engage the parallel paths) and end-to-end
+/// (routed generation through two engines pinned to 1 vs N workers).
+#[test]
+fn multithreaded_kernels_bit_identical_to_serial() {
+    let cfg = MetaConfig::from_json_str(synthetic::DEFAULT_META, PathBuf::from("/tmp")).unwrap();
+    let m = cfg.model.clone();
+    let s = 512usize;
+    let mk = |shape: Vec<usize>, seed: u64| {
+        let mut rng = Rng::seed_from_u64(seed);
+        let n: usize = shape.iter().product();
+        HostTensor::new(shape, (0..n).map(|_| (rng.f64() as f32 - 0.5) * 0.2).collect())
+    };
+    let x = mk(vec![s, m.d_model], 1);
+    let n1 = HostTensor::new(vec![m.d_model], vec![1.0; m.d_model]);
+    let wq = mk(vec![m.d_model, m.d_model], 2);
+    let wk = mk(vec![m.d_model, m.d_model], 3);
+    let wv = mk(vec![m.d_model, m.d_model], 4);
+    let wo = mk(vec![m.d_model, m.d_model], 5);
+    let f1 = mk(vec![m.d_model, m.d_ff], 6);
+    let f2 = mk(vec![m.d_ff, m.d_model], 7);
+    let valid_arr = [490i32];
+    for mode in ["fa", "ssa", "ta", "xa"] {
+        let exe = format!("layer_{mode}_prefill_{s}");
+        let mut serial: Option<Vec<HostTensor>> = None;
+        for threads in [1usize, 4, 7] {
+            let mut b = RefBackend::with_threads(cfg.clone(), threads);
+            b.load(&exe).unwrap();
+            let out = b
+                .run(
+                    &exe,
+                    &[
+                        Arg::F32(&x), Arg::F32(&n1), Arg::F32(&wq), Arg::F32(&wk),
+                        Arg::F32(&wv), Arg::F32(&wo), Arg::F32(&n1), Arg::F32(&f1),
+                        Arg::F32(&f2), Arg::I32(&valid_arr),
+                    ],
+                )
+                .unwrap();
+            match &serial {
+                None => serial = Some(out),
+                Some(base) => assert_eq!(
+                    base, &out,
+                    "{exe} with {threads} workers diverged from the serial path"
+                ),
+            }
+        }
+    }
+
+    // end-to-end: same prompts, 1 vs 4 workers, identical generations
+    let dir = synthetic::ensure_default().unwrap();
+    let mut e1 = Engine::load(&dir).unwrap();
+    e1.set_threads(1);
+    let mut e4 = Engine::load(&dir).unwrap();
+    e4.set_threads(4);
+    let mut rng = Rng::seed_from_u64(13);
+    for task in [Task::PRe, Task::Gov] {
+        let sample = generate(task, &mut rng, 300);
+        let policy = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Dense };
+        let (g1, r1) = e1.generate(&sample.prompt, &policy, "balanced", 6).unwrap();
+        let (g4, r4) = e4.generate(&sample.prompt, &policy, "balanced", 6).unwrap();
+        assert_eq!(g1, g4, "multi-threaded generation diverged");
+        assert_eq!(r1.modes, r4.modes, "multi-threaded routing diverged");
+    }
+}
+
+/// Zero-copy property: staging the KV cache as borrowed views must
+/// produce byte-identical decode logits to the cloning path, across
+/// random cache lengths spanning capacity-growth and bucket-boundary
+/// edges.
+#[test]
+fn zero_copy_views_match_clone_path_logits() {
+    let cfg = MetaConfig::from_json_str(synthetic::DEFAULT_META, PathBuf::from("/tmp")).unwrap();
+    let m = cfg.model.clone();
+    let (d, h, dd, ff) = (m.d_model, m.n_heads, m.head_dim, m.d_ff);
+    check("zero_copy_view_vs_clone", 24, |rng| {
+        let threads = 1 + rng.gen_range(6);
+        let mut b = RefBackend::with_threads(cfg.clone(), threads);
+        // random length across the 128-capacity growth edge and the
+        // 128/256 bucket boundary
+        let len = rng.range(100, 280);
+        let mut cache = FullCache::new(h, dd, 128);
+        for t in 0..len {
+            let kv: Vec<f32> = (0..h * dd).map(|i| ((t * 31 + i) % 17) as f32 * 0.1 - 0.8).collect();
+            cache.append(&kv, &kv);
+        }
+        let bucket = cfg
+            .decode_attend_bucket(cache.len(), cache.capacity())
+            .ok_or("no decode bucket")?;
+        prop_assert!(
+            bucket == cache.capacity(),
+            "growth must stay bucket-aligned (bucket {bucket}, capacity {})",
+            cache.capacity()
+        );
+        let exe = format!("decode_attend_fa_{bucket}");
+        b.load(&exe).map_err(|e| e.to_string())?;
+
+        let mut mk = |shape: Vec<usize>| {
+            let n: usize = shape.iter().product();
+            HostTensor::new(shape, (0..n).map(|_| (rng.f64() as f32 - 0.5) * 0.2).collect())
+        };
+        let x = mk(vec![d]);
+        let q = mk(vec![h, dd]);
+        let wo = mk(vec![d, d]);
+        let f1 = mk(vec![d, ff]);
+        let f2 = mk(vec![ff, d]);
+        let n2 = HostTensor::new(vec![d], vec![1.0; d]);
+        let valid_arr = [cache.len() as i32];
+
+        let (kt, vt) = cache.as_tensors(bucket);
+        let owned = b
+            .run(
+                &exe,
+                &[
+                    Arg::F32(&x), Arg::F32(&q), Arg::F32(&kt), Arg::F32(&vt),
+                    Arg::I32(&valid_arr), Arg::F32(&wo), Arg::F32(&n2),
+                    Arg::F32(&f1), Arg::F32(&f2),
+                ],
+            )
+            .map_err(|e| e.to_string())?;
+        let (kv, vv) = cache.view();
+        let viewed = b
+            .run(
+                &exe,
+                &[
+                    Arg::F32(&x), Arg::F32(&q), Arg::F32View(kv), Arg::F32View(vv),
+                    Arg::I32(&valid_arr), Arg::F32(&wo), Arg::F32(&n2),
+                    Arg::F32(&f1), Arg::F32(&f2),
+                ],
+            )
+            .map_err(|e| e.to_string())?;
+        prop_assert_eq!(&owned, &viewed);
         Ok(())
     });
 }
