@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
                     max_new: sample.answer.len() + 1,
                     prompt: sample.prompt,
                     policy,
-                    router: "balanced".into(),
+                    ..Default::default()
                 })
             }),
         ));

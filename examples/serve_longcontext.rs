@@ -9,7 +9,8 @@
 use flux_attention::config::{MetaConfig, ServingConfig};
 use flux_attention::coordinator::Coordinator;
 use flux_attention::engine::EngineHandle;
-use flux_attention::server::{client_request, serve, WireRequest};
+use flux_attention::server::{client_request, serve, StreamClient, WireRequest};
+use flux_attention::util::json::Json;
 use flux_attention::util::rng::Rng;
 use flux_attention::workload::{generate, Task};
 
@@ -46,8 +47,8 @@ fn main() -> anyhow::Result<()> {
             prompt: sample.prompt.clone(),
             max_new: sample.answer.len() + 1,
             policy: policy.into(),
-            router: "balanced".into(),
             sparse_decode: sd,
+            ..Default::default()
         };
         let resp = client_request(addr, &req)?;
         if let Some(e) = &resp.error {
@@ -66,6 +67,56 @@ fn main() -> anyhow::Result<()> {
             resp.text
         );
     }
+    // --- wire protocol v2: multiplexed streams with mid-flight
+    // cancellation on a single connection ---
+    println!("\n-- v2 streaming: two multiplexed streams, one cancelled --");
+    let client = StreamClient::connect(addr)?;
+    let long = generate(Task::Gov, &mut rng, 1024);
+    let short = generate(Task::PRe, &mut rng, 512);
+    let victim = client.open(&WireRequest {
+        prompt: long.prompt,
+        max_new: 256,
+        ignore_eos: true,
+        ..Default::default()
+    })?;
+    let survivor = client.open(&WireRequest {
+        prompt: short.prompt,
+        max_new: short.answer.len() + 1,
+        ..Default::default()
+    })?;
+    // let the victim stream a few tokens, then shed it
+    let mut victim_tokens = 0;
+    while victim_tokens < 3 {
+        match victim.recv() {
+            Some(j) if j.get("event").and_then(Json::as_str) == Some("token") => {
+                victim_tokens += 1;
+            }
+            Some(_) => {}
+            None => break,
+        }
+    }
+    victim.cancel()?;
+    while let Some(j) = victim.recv() {
+        if j.get("event").and_then(Json::as_str) == Some("error") {
+            println!(
+                "victim    : cancelled after {victim_tokens} streamed tokens (kind={})",
+                j.get("kind").and_then(Json::as_str).unwrap_or("?")
+            );
+            break;
+        }
+    }
+    let resp = survivor.wait()?;
+    if let Some(e) = &resp.error {
+        anyhow::bail!("survivor stream failed: {e}");
+    }
+    println!(
+        "survivor  : {} tokens, ttft {:.1} ms, queue {:.1} ms -> {}",
+        resp.tokens.len(),
+        resp.ttft_ms,
+        resp.queue_ms,
+        resp.text
+    );
+
     println!("\nserver metrics: {}", coord.metrics.lock().unwrap().summary());
     Ok(())
 }

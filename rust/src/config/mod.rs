@@ -199,6 +199,15 @@ pub struct ServingConfig {
     pub decode_steps_per_prefill: usize,
     /// maximum concurrently active (prefilled, decoding) requests
     pub max_active_requests: usize,
+    /// hard per-request cap on `max_new` at admission — oversized
+    /// requests are rejected with a typed error instead of pinning an
+    /// engine slot for an unbounded generation
+    pub max_new_cap: usize,
+    /// default wall-clock deadline applied when a request carries no
+    /// `deadline_ms` of its own; `None` = no deadline. Expired requests
+    /// are evicted between decode steps (their engine slot and KV cache
+    /// are reclaimed) with `RequestError::DeadlineExceeded`.
+    pub default_deadline_ms: Option<u64>,
 }
 
 impl Default for ServingConfig {
@@ -208,6 +217,8 @@ impl Default for ServingConfig {
             queue_capacity: 256,
             decode_steps_per_prefill: 4,
             max_active_requests: 32,
+            max_new_cap: 4096,
+            default_deadline_ms: None,
         }
     }
 }

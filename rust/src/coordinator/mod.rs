@@ -8,17 +8,29 @@
 //! decisions cached at prefill time (paper section 3.3 — zero per-token
 //! routing overhead).
 //!
+//! Request lifecycle (DESIGN.md §8): [`Coordinator::open`] returns a
+//! [`SessionHandle`] whose typed event stream mirrors the request's
+//! life — `Queued` → `Prefilled` (TTFT point) → `Token`* → terminal
+//! `Done` or `Error`. Sessions support explicit [`SessionHandle::cancel`]
+//! and cancel-on-drop (the scheduler releases the engine slot and KV
+//! cache between decode steps), per-request wall-clock deadlines
+//! ([`Request::deadline_ms`], evicted with
+//! [`RequestError::DeadlineExceeded`]), and stop conditions beyond EOS
+//! ([`Request::stop_tokens`]). The legacy blocking [`Coordinator::submit`]
+//! and channel-based [`Coordinator::submit_async`] are thin adapters over
+//! the same scheduler path.
+//!
 //! Threading model (no async runtime in the offline vendor set): one
 //! scheduler thread owns the active set and drives the engine thread;
-//! clients block on a per-request reply channel. This matches the
-//! single-device execution reality — the engine serializes all kernel
-//! launches regardless.
+//! streaming clients consume a per-session event channel. This matches
+//! the single-device execution reality — the engine serializes all
+//! kernel launches regardless.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -35,9 +47,35 @@ pub struct Request {
     pub max_new: usize,
     pub policy: Policy,
     pub router: String,
+    /// Wall-clock budget measured from admission. When it elapses the
+    /// request is evicted between decode steps with
+    /// [`RequestError::DeadlineExceeded`]. `None` falls back to
+    /// [`ServingConfig::default_deadline_ms`].
+    pub deadline_ms: Option<u64>,
+    /// Stop conditions beyond EOS: generation terminates after emitting
+    /// any of these tokens (the stop token is included in the output,
+    /// like EOS).
+    pub stop_tokens: Vec<u32>,
+    /// Keep decoding through EOS until `max_new` / a stop token /
+    /// the deadline (benchmark and load-generation workloads).
+    pub ignore_eos: bool,
 }
 
-/// Completed response.
+impl Default for Request {
+    fn default() -> Self {
+        Self {
+            prompt: vec![],
+            max_new: 8,
+            policy: Policy::Backbone,
+            router: "balanced".into(),
+            deadline_ms: None,
+            stop_tokens: vec![],
+            ignore_eos: false,
+        }
+    }
+}
+
+/// Completed response (also the `stats` payload of [`SessionEvent::Done`]).
 #[derive(Debug, Clone)]
 pub struct Response {
     pub tokens: Vec<u32>,
@@ -49,31 +87,238 @@ pub struct Response {
     pub queue_us: u64,
 }
 
+/// Typed failure modes of the request lifecycle. Admission errors
+/// (`QueueFull`, `Invalid`, `PromptTooLong`) are returned synchronously
+/// from [`Coordinator::open`]; the rest arrive as terminal
+/// [`SessionEvent::Error`] events.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestError {
+    /// Admission queue full (backpressure) — retry later.
+    QueueFull,
+    /// Request rejected at admission (empty prompt, oversized `max_new`).
+    Invalid(String),
+    /// Prompt longer than the largest prefill bucket — rejected before
+    /// queueing instead of surfacing as an engine failure.
+    PromptTooLong { len: usize, max: usize },
+    /// `deadline_ms` elapsed; the request was evicted between decode
+    /// steps and its engine slot and KV cache released.
+    DeadlineExceeded,
+    /// Cancelled via [`SessionHandle::cancel`], cancel-on-drop, or a
+    /// wire `cancel` frame.
+    Cancelled,
+    /// Engine-side failure (prefill or decode step).
+    Engine(String),
+    /// Scheduler shut down.
+    Shutdown,
+}
+
+impl RequestError {
+    /// Stable machine-readable discriminator (the wire `kind` field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RequestError::QueueFull => "queue_full",
+            RequestError::Invalid(_) => "invalid",
+            RequestError::PromptTooLong { .. } => "prompt_too_long",
+            RequestError::DeadlineExceeded => "deadline_exceeded",
+            RequestError::Cancelled => "cancelled",
+            RequestError::Engine(_) => "engine",
+            RequestError::Shutdown => "shutdown",
+        }
+    }
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::QueueFull => {
+                write!(f, "admission queue full: request rejected (backpressure)")
+            }
+            RequestError::Invalid(m) => write!(f, "invalid request: {m}"),
+            RequestError::PromptTooLong { len, max } => {
+                write!(f, "prompt of {len} tokens exceeds the largest prefill bucket ({max})")
+            }
+            RequestError::DeadlineExceeded => {
+                write!(f, "deadline exceeded: request evicted mid-generation")
+            }
+            RequestError::Cancelled => write!(f, "request cancelled"),
+            RequestError::Engine(m) => write!(f, "engine failure: {m}"),
+            RequestError::Shutdown => write!(f, "scheduler shut down"),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+/// One event in a session's lifecycle. `Done` and `Error` are terminal:
+/// the stream closes after either.
+#[derive(Debug, Clone)]
+pub enum SessionEvent {
+    /// Accepted into the admission queue.
+    Queued,
+    /// Prefill finished; the first token is available (the TTFT point).
+    Prefilled { first_token: u32, omsr: f64, modes: Vec<String>, ttft_us: u64, queue_us: u64 },
+    /// One decoded token.
+    Token { tok: u32, step_us: u64 },
+    /// Generation finished (EOS, stop token, or `max_new`).
+    Done { stats: Response },
+    /// The request failed, was cancelled, or exceeded its deadline.
+    Error { error: RequestError },
+}
+
+/// Cloneable cancellation signal for a session. Setting it is
+/// idempotent; the scheduler observes it between decode steps and
+/// releases the engine slot and KV cache.
+#[derive(Debug, Clone)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    fn new() -> Self {
+        Self(Arc::new(AtomicBool::new(false)))
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Client end of one open session: a typed event stream plus the
+/// cancellation signal. Dropping the handle cancels the session
+/// (a no-op once a terminal event has been emitted).
+pub struct SessionHandle {
+    events: Receiver<SessionEvent>,
+    cancel: CancelToken,
+}
+
+impl SessionHandle {
+    /// Signal cancellation; the scheduler evicts the request between
+    /// decode steps and emits a terminal [`RequestError::Cancelled`].
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// A detached cancellation signal (e.g. for a wire `cancel` frame
+    /// handler on another thread).
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Blocking receive; `None` once the stream is closed (after a
+    /// terminal event, or scheduler shutdown).
+    pub fn recv(&self) -> Option<SessionEvent> {
+        self.events.recv().ok()
+    }
+
+    pub fn try_recv(&self) -> Option<SessionEvent> {
+        self.events.try_recv().ok()
+    }
+
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<SessionEvent> {
+        self.events.recv_timeout(timeout).ok()
+    }
+
+    /// Drain to completion — the blocking-API adapter. Returns the
+    /// `Done` stats or the terminal error.
+    pub fn wait(self) -> Result<Response> {
+        while let Some(ev) = self.recv() {
+            match ev {
+                SessionEvent::Done { stats } => return Ok(stats),
+                SessionEvent::Error { error } => return Err(error.into()),
+                _ => {}
+            }
+        }
+        Err(RequestError::Shutdown.into())
+    }
+}
+
+impl Drop for SessionHandle {
+    fn drop(&mut self) {
+        // cancel-on-drop: abandoned streams stop decoding instead of
+        // running to completion; harmless after a terminal event.
+        self.cancel.cancel();
+    }
+}
+
+/// Where a request's lifecycle events go: the session API streams every
+/// event; the legacy blocking adapters only see the terminal result.
+enum Sink {
+    Aggregate(Sender<Result<Response>>),
+    Stream(Sender<SessionEvent>),
+}
+
+impl Sink {
+    /// Emit a non-terminal event. Returns `false` when the stream's
+    /// receiver is gone (client hung up) — the scheduler treats that as
+    /// cancellation.
+    fn event(&self, ev: SessionEvent) -> bool {
+        match self {
+            Sink::Stream(tx) => tx.send(ev).is_ok(),
+            Sink::Aggregate(_) => true,
+        }
+    }
+
+    fn done(&self, resp: Response) {
+        match self {
+            Sink::Stream(tx) => {
+                let _ = tx.send(SessionEvent::Done { stats: resp });
+            }
+            Sink::Aggregate(tx) => {
+                let _ = tx.send(Ok(resp));
+            }
+        }
+    }
+
+    fn error(&self, err: RequestError) {
+        match self {
+            Sink::Stream(tx) => {
+                let _ = tx.send(SessionEvent::Error { error: err });
+            }
+            Sink::Aggregate(tx) => {
+                let _ = tx.send(Err(err.into()));
+            }
+        }
+    }
+}
+
+struct Pending {
+    req: Request,
+    sink: Sink,
+    cancel: CancelToken,
+    t_arrival: Instant,
+    deadline: Option<Instant>,
+}
+
 struct Active {
     engine_id: u64,
     generated: Vec<u32>,
     max_new: usize,
+    stop_tokens: Vec<u32>,
+    ignore_eos: bool,
     omsr: f64,
     modes: Vec<String>,
     t_arrival: Instant,
     t_first_token: Instant,
     decode_us: u64,
     queue_us: u64,
-    reply: Sender<Result<Response>>,
+    deadline: Option<Instant>,
+    cancel: CancelToken,
+    sink: Sink,
 }
 
-struct Pending {
-    req: Request,
-    reply: Sender<Result<Response>>,
-    t_arrival: Instant,
-}
-
-/// Continuous-batching coordinator handle. `submit` blocks until the
-/// request completes; clients use one thread per in-flight request
-/// (see `submit_async` for a non-blocking variant returning a channel).
+/// Continuous-batching coordinator handle. [`Coordinator::open`] is the
+/// primary API (event-driven session); [`Coordinator::submit`] /
+/// [`Coordinator::submit_async`] are compatibility adapters over it.
 pub struct Coordinator {
     queue_tx: SyncSender<Pending>,
     queue_depth: Arc<AtomicUsize>,
+    /// Largest prefill bucket, fetched from the engine at startup —
+    /// longer prompts are rejected at admission with a typed error.
+    max_prompt_len: usize,
+    max_new_cap: usize,
+    default_deadline_ms: Option<u64>,
     pub metrics: Arc<Mutex<ServingMetrics>>,
 }
 
@@ -83,9 +328,13 @@ impl Coordinator {
         let (queue_tx, queue_rx) = std::sync::mpsc::sync_channel(cfg.queue_capacity);
         let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
         let queue_depth = Arc::new(AtomicUsize::new(0));
+        let max_prompt_len = engine.max_prompt_len().unwrap_or(usize::MAX);
         let coord = Arc::new(Self {
             queue_tx,
             queue_depth: queue_depth.clone(),
+            max_prompt_len,
+            max_new_cap: cfg.max_new_cap,
+            default_deadline_ms: cfg.default_deadline_ms,
             metrics: metrics.clone(),
         });
         std::thread::Builder::new()
@@ -95,28 +344,74 @@ impl Coordinator {
         coord
     }
 
-    /// Submit and wait for completion. Fails fast when the admission
-    /// queue is full (backpressure).
-    pub fn submit(&self, req: Request) -> Result<Response> {
-        self.submit_async(req)?
-            .recv()
-            .map_err(|_| anyhow::anyhow!("scheduler shut down"))?
+    /// Open an event-driven session. Admission errors (full queue,
+    /// over-long prompt, invalid request) are returned synchronously;
+    /// everything after admission arrives on the event stream.
+    pub fn open(&self, req: Request) -> std::result::Result<SessionHandle, RequestError> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let cancel = CancelToken::new();
+        // Queued goes into the channel before enqueueing so it always
+        // precedes Prefilled, even if the scheduler admits immediately.
+        let _ = tx.send(SessionEvent::Queued);
+        self.enqueue(req, Sink::Stream(tx), cancel.clone())?;
+        Ok(SessionHandle { events: rx, cancel })
     }
 
-    /// Submit and get the reply channel immediately.
+    /// Submit and wait for completion — a thin adapter over [`open`].
+    ///
+    /// [`open`]: Coordinator::open
+    pub fn submit(&self, req: Request) -> Result<Response> {
+        self.open(req)?.wait()
+    }
+
+    /// Submit and get the reply channel immediately (legacy async
+    /// adapter; prefer [`Coordinator::open`] for streaming).
     pub fn submit_async(&self, req: Request) -> Result<Receiver<Result<Response>>> {
         let (reply, rx) = std::sync::mpsc::channel();
-        let pending = Pending { req, reply, t_arrival: Instant::now() };
+        self.enqueue(req, Sink::Aggregate(reply), CancelToken::new())?;
+        Ok(rx)
+    }
+
+    fn enqueue(
+        &self,
+        req: Request,
+        sink: Sink,
+        cancel: CancelToken,
+    ) -> std::result::Result<(), RequestError> {
+        if req.prompt.is_empty() {
+            self.metrics.lock().unwrap().requests_rejected += 1;
+            return Err(RequestError::Invalid("empty prompt".into()));
+        }
+        if req.max_new > self.max_new_cap {
+            self.metrics.lock().unwrap().requests_rejected += 1;
+            return Err(RequestError::Invalid(format!(
+                "max_new {} exceeds cap {}",
+                req.max_new, self.max_new_cap
+            )));
+        }
+        if req.prompt.len() > self.max_prompt_len {
+            self.metrics.lock().unwrap().requests_rejected += 1;
+            return Err(RequestError::PromptTooLong {
+                len: req.prompt.len(),
+                max: self.max_prompt_len,
+            });
+        }
+        let t_arrival = Instant::now();
+        let deadline = req
+            .deadline_ms
+            .or(self.default_deadline_ms)
+            .and_then(|ms| t_arrival.checked_add(Duration::from_millis(ms)));
+        let pending = Pending { req, sink, cancel, t_arrival, deadline };
         match self.queue_tx.try_send(pending) {
             Ok(()) => {
                 self.queue_depth.fetch_add(1, Ordering::Relaxed);
-                Ok(rx)
+                Ok(())
             }
             Err(TrySendError::Full(_)) => {
                 self.metrics.lock().unwrap().requests_rejected += 1;
-                anyhow::bail!("admission queue full: request rejected (backpressure)")
+                Err(RequestError::QueueFull)
             }
-            Err(TrySendError::Disconnected(_)) => anyhow::bail!("scheduler shut down"),
+            Err(TrySendError::Disconnected(_)) => Err(RequestError::Shutdown),
         }
     }
 
@@ -135,8 +430,9 @@ fn scheduler_loop(
     let mut active: VecDeque<Active> = VecDeque::new();
     let mut queue_closed = false;
     loop {
-        // --- admission: take at most one prefill per outer iteration
-        // (decode-priority), more if the active set is empty ---
+        // --- admission: at most one prefill per outer iteration
+        // (decode-priority); an idle scheduler blocks here for the
+        // next request ---
         while !queue_closed && active.len() < cfg.max_active_requests {
             let pending = if active.is_empty() {
                 match queue_rx.recv() {
@@ -156,36 +452,10 @@ fn scheduler_loop(
                     }
                 }
             };
-            let Some(Pending { req, reply, t_arrival }) = pending else { break };
+            let Some(p) = pending else { break };
             queue_depth.fetch_sub(1, Ordering::Relaxed);
-            let queue_us = t_arrival.elapsed().as_micros() as u64;
-            match engine.prefill(req.prompt.clone(), req.policy.clone(), req.router.clone()) {
-                Ok((engine_id, report)) => {
-                    {
-                        let mut m = metrics.lock().unwrap();
-                        m.prefill.record_us(report.total_us);
-                        m.router_overhead.record_us(report.router_us);
-                        m.ttft.record_us(queue_us + report.total_us);
-                        m.prompt_tokens += report.prompt_len as u64;
-                        m.record_omsr(&req.policy.label(), report.omsr);
-                    }
-                    active.push_back(Active {
-                        engine_id,
-                        generated: vec![report.first_token],
-                        max_new: req.max_new.max(1),
-                        omsr: report.omsr,
-                        modes: report.modes.iter().map(|m| m.name().into()).collect(),
-                        t_arrival,
-                        t_first_token: Instant::now(),
-                        decode_us: 0,
-                        queue_us,
-                        reply,
-                    });
-                }
-                Err(e) => {
-                    let _ = reply.send(Err(e));
-                    metrics.lock().unwrap().requests_rejected += 1;
-                }
+            if let Some(a) = admit(&engine, &metrics, p) {
+                active.push_back(a);
             }
             // decode-priority: stop admitting once something is active
             break;
@@ -202,10 +472,20 @@ fn scheduler_loop(
         for _ in 0..cfg.decode_steps_per_prefill {
             let mut still_active = VecDeque::new();
             while let Some(mut a) = active.pop_front() {
-                let done =
-                    a.generated.len() >= a.max_new || *a.generated.last().unwrap() == EOS;
+                if a.cancel.is_cancelled() {
+                    retire(&engine, &metrics, a, Retire::Cancelled);
+                    continue;
+                }
+                if a.deadline.is_some_and(|d| Instant::now() >= d) {
+                    retire(&engine, &metrics, a, Retire::Expired);
+                    continue;
+                }
+                let last = *a.generated.last().unwrap();
+                let done = a.generated.len() >= a.max_new
+                    || (last == EOS && !a.ignore_eos)
+                    || a.stop_tokens.contains(&last);
                 if done {
-                    finish(&engine, &metrics, a);
+                    retire(&engine, &metrics, a, Retire::Done);
                     continue;
                 }
                 let t0 = Instant::now();
@@ -215,11 +495,15 @@ fn scheduler_loop(
                         a.decode_us += dt;
                         metrics.lock().unwrap().decode.record_us(dt);
                         a.generated.push(tok);
-                        still_active.push_back(a);
+                        if a.sink.event(SessionEvent::Token { tok, step_us: dt }) {
+                            still_active.push_back(a);
+                        } else {
+                            // the stream's receiver is gone: stop decoding
+                            retire(&engine, &metrics, a, Retire::Cancelled);
+                        }
                     }
                     Err(e) => {
-                        let _ = a.reply.send(Err(e));
-                        engine.release(a.engine_id);
+                        retire(&engine, &metrics, a, Retire::Failed(e.to_string()));
                     }
                 }
             }
@@ -238,26 +522,123 @@ fn scheduler_loop(
     }
 }
 
-fn finish(engine: &EngineHandle, metrics: &Arc<Mutex<ServingMetrics>>, a: Active) {
+/// Prefill a pending request and emit `Prefilled`, unless it was
+/// cancelled or expired while queued.
+fn admit(engine: &EngineHandle, metrics: &Arc<Mutex<ServingMetrics>>, p: Pending) -> Option<Active> {
+    let Pending { req, sink, cancel, t_arrival, deadline } = p;
+    if cancel.is_cancelled() {
+        let mut m = metrics.lock().unwrap();
+        m.requests_cancelled += 1;
+        m.stream_tokens.record_value(0);
+        drop(m);
+        sink.error(RequestError::Cancelled);
+        return None;
+    }
+    if deadline.is_some_and(|d| Instant::now() >= d) {
+        let mut m = metrics.lock().unwrap();
+        m.requests_expired += 1;
+        m.stream_tokens.record_value(0);
+        drop(m);
+        sink.error(RequestError::DeadlineExceeded);
+        return None;
+    }
+    let queue_us = t_arrival.elapsed().as_micros() as u64;
+    match engine.prefill(req.prompt.clone(), req.policy.clone(), req.router.clone()) {
+        Ok((engine_id, report)) => {
+            let t_first_token = Instant::now();
+            let ttft_us = t_first_token.duration_since(t_arrival).as_micros() as u64;
+            {
+                let mut m = metrics.lock().unwrap();
+                m.prefill.record_us(report.total_us);
+                m.router_overhead.record_us(report.router_us);
+                m.ttft.record_us(queue_us + report.total_us);
+                m.prompt_tokens += report.prompt_len as u64;
+                m.record_omsr(&req.policy.label(), report.omsr);
+            }
+            let modes: Vec<String> = report.modes.iter().map(|m| m.name().into()).collect();
+            let alive = sink.event(SessionEvent::Prefilled {
+                first_token: report.first_token,
+                omsr: report.omsr,
+                modes: modes.clone(),
+                ttft_us,
+                queue_us,
+            });
+            let a = Active {
+                engine_id,
+                generated: vec![report.first_token],
+                max_new: req.max_new.max(1),
+                stop_tokens: req.stop_tokens,
+                ignore_eos: req.ignore_eos,
+                omsr: report.omsr,
+                modes,
+                t_arrival,
+                t_first_token,
+                decode_us: 0,
+                queue_us,
+                deadline,
+                cancel,
+                sink,
+            };
+            if alive {
+                Some(a)
+            } else {
+                retire(engine, metrics, a, Retire::Cancelled);
+                None
+            }
+        }
+        Err(e) => {
+            metrics.lock().unwrap().requests_rejected += 1;
+            sink.error(RequestError::Engine(e.to_string()));
+            None
+        }
+    }
+}
+
+enum Retire {
+    Done,
+    Cancelled,
+    Expired,
+    /// Mid-decode engine failure (the message becomes `Error::Engine`).
+    Failed(String),
+}
+
+/// Release the engine slot (freeing the KV cache) and emit the terminal
+/// event, updating the per-outcome counters.
+fn retire(engine: &EngineHandle, metrics: &Arc<Mutex<ServingMetrics>>, a: Active, how: Retire) {
     engine.release(a.engine_id);
     let e2e = a.t_arrival.elapsed().as_micros() as u64;
-    let n_dec = a.generated.len().saturating_sub(1).max(1);
-    let resp = Response {
-        omsr: a.omsr,
-        modes: a.modes,
-        ttft_us: a.t_first_token.duration_since(a.t_arrival).as_micros() as u64,
-        e2e_us: e2e,
-        decode_us_per_token: a.decode_us as f64 / n_dec as f64,
-        queue_us: a.queue_us,
-        tokens: a.generated,
-    };
+    let Active { generated, omsr, modes, t_arrival, t_first_token, decode_us, queue_us, sink, .. } =
+        a;
+    let n_dec = generated.len().saturating_sub(1).max(1);
+    let streamed = generated.len() as u64;
     {
         let mut m = metrics.lock().unwrap();
-        m.requests_completed += 1;
-        m.tokens_generated += resp.tokens.len() as u64;
-        m.e2e.record_us(e2e);
+        m.stream_tokens.record_value(streamed);
+        match &how {
+            Retire::Done => {
+                m.requests_completed += 1;
+                m.tokens_generated += streamed;
+                m.e2e.record_us(e2e);
+            }
+            Retire::Cancelled => m.requests_cancelled += 1,
+            Retire::Expired => m.requests_expired += 1,
+            Retire::Failed(_) => m.requests_failed += 1,
+        }
     }
-    let _ = a.reply.send(Ok(resp));
+    match how {
+        Retire::Done => sink.done(Response {
+            omsr,
+            modes,
+            ttft_us: t_first_token.duration_since(t_arrival).as_micros() as u64,
+            e2e_us: e2e,
+            decode_us_per_token: decode_us as f64 / n_dec as f64,
+            queue_us,
+            tokens: generated,
+        }),
+        Retire::Cancelled => sink.error(RequestError::Cancelled),
+        Retire::Expired => sink.error(RequestError::DeadlineExceeded),
+        Retire::Failed(msg) => sink.error(RequestError::Engine(msg)),
+    }
 }
 
 #[cfg(test)]
@@ -270,9 +651,33 @@ mod tests {
             prompt: vec![1, 2, 3],
             max_new: 4,
             policy: Policy::Backbone,
-            router: "balanced".into(),
+            ..Default::default()
         };
         assert_eq!(r.policy.label(), "backbone");
         assert_eq!(r.max_new, 4);
+        assert_eq!(r.deadline_ms, None);
+        assert!(r.stop_tokens.is_empty());
+        assert!(!r.ignore_eos);
+    }
+
+    #[test]
+    fn request_error_kinds_are_stable() {
+        assert_eq!(RequestError::QueueFull.kind(), "queue_full");
+        assert_eq!(RequestError::DeadlineExceeded.kind(), "deadline_exceeded");
+        assert_eq!(RequestError::Cancelled.kind(), "cancelled");
+        assert_eq!(RequestError::PromptTooLong { len: 10, max: 4 }.kind(), "prompt_too_long");
+        let msg = RequestError::PromptTooLong { len: 10, max: 4 }.to_string();
+        assert!(msg.contains("10") && msg.contains("4"), "{msg}");
+    }
+
+    #[test]
+    fn cancel_token_is_sticky_and_shared() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        assert!(!t.is_cancelled());
+        t2.cancel();
+        assert!(t.is_cancelled());
+        t.cancel(); // idempotent
+        assert!(t2.is_cancelled());
     }
 }

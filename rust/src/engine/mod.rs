@@ -531,6 +531,11 @@ pub enum EngineJob {
     KvTransferTotals {
         reply: std::sync::mpsc::Sender<(u64, u64)>,
     },
+    /// Largest admissible prompt length (the biggest prefill bucket) —
+    /// the coordinator validates prompts at admission against this.
+    MaxPromptLen {
+        reply: std::sync::mpsc::Sender<usize>,
+    },
     Release {
         id: u64,
     },
@@ -574,6 +579,11 @@ impl EngineHandle {
                         EngineJob::KvTransferTotals { reply } => {
                             let _ = reply.send(engine.kv_transfer_totals());
                         }
+                        EngineJob::MaxPromptLen { reply } => {
+                            let max =
+                                engine.cfg().prefill_buckets.last().copied().unwrap_or(usize::MAX);
+                            let _ = reply.send(max);
+                        }
                         EngineJob::Release { id } => {
                             engine.release(id);
                         }
@@ -613,6 +623,15 @@ impl EngineHandle {
         let (reply, rx) = std::sync::mpsc::channel();
         self.tx
             .send(EngineJob::KvTransferTotals { reply })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        Ok(rx.recv()?)
+    }
+
+    /// Largest admissible prompt length (the biggest prefill bucket).
+    pub fn max_prompt_len(&self) -> Result<usize> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(EngineJob::MaxPromptLen { reply })
             .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
         Ok(rx.recv()?)
     }

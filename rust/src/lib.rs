@@ -3,11 +3,13 @@
 //! for Efficient LLMs Inference* (Qiu et al., 2026).
 //!
 //! Architecture (see DESIGN.md at the repository root):
-//! * **L3 (this crate)** — the serving coordinator: request router,
+//! * **L3 (this crate)** — the serving coordinator: event-driven request
+//!   sessions (streaming tokens, cancellation, deadlines — DESIGN.md §8),
 //!   continuous batcher, prefill/decode scheduler, KV-cache manager with
 //!   full and sparse (sink+local) layouts, the Layer Router integration,
-//!   baselines, a GPU decode-latency simulator, metrics and the eval
-//!   harness. Python never runs on the request path.
+//!   baselines, a GPU decode-latency simulator, metrics, the multiplexed
+//!   NDJSON wire protocol and the eval harness. Python never runs on the
+//!   request path.
 //! * **Execution backends ([`runtime::Backend`])** — the engine calls
 //!   named executables through a pluggable backend seam. The default is
 //!   the hermetic pure-Rust [`runtime::RefBackend`] (reference CPU
@@ -41,6 +43,10 @@ pub mod util;
 pub mod workload;
 
 pub use config::MetaConfig;
+pub use coordinator::{
+    CancelToken, Coordinator, Request, RequestError, Response, SessionEvent, SessionHandle,
+};
 pub use engine::{Engine, EngineHandle};
 pub use router::{AttnMode, DecodeMode, Policy};
 pub use runtime::{Backend, HostTensor, RefBackend};
+pub use server::{ClientStream, StreamClient};

@@ -2,9 +2,10 @@
 //! no clap in the offline vendor set).
 //!
 //! Usage:
-//!   flux [--artifacts DIR] serve [--addr HOST:PORT]
+//!   flux [--artifacts DIR] serve [--addr HOST:PORT] [--deadline-ms N]
 //!   flux [--artifacts DIR] generate [--task T] [--seq-len N]
 //!                                   [--policy P] [--router R] [--sparse-decode]
+//!                                   [--stream] [--deadline-ms N]
 //!   flux [--artifacts DIR] experiment <id> [--n N] [--seq-len N]
 //!        ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves all
 //!   flux [--artifacts DIR] bench-serve [--requests N] [--seq-len N]
@@ -25,7 +26,7 @@ use std::path::PathBuf;
 use anyhow::Result;
 
 use flux_attention::config::{MetaConfig, ServingConfig};
-use flux_attention::coordinator::{Coordinator, Request};
+use flux_attention::coordinator::{Coordinator, Request, SessionEvent};
 use flux_attention::engine::{Engine, EngineHandle};
 use flux_attention::eval::experiments;
 use flux_attention::server;
@@ -73,6 +74,11 @@ impl Args {
         self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `Some(parsed)` when the flag is present and parses, else `None`.
+    fn get_opt_u64(&self, key: &str) -> Option<u64> {
+        self.flags.get(key).and_then(|v| v.parse().ok())
+    }
+
     fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
@@ -112,21 +118,27 @@ fn main() -> Result<()> {
         "serve" => {
             let cfg = MetaConfig::load(&artifacts)?;
             let engine = EngineHandle::spawn(artifacts.clone())?;
-            let coord = Coordinator::start(engine, ServingConfig::default());
+            let scfg = ServingConfig {
+                default_deadline_ms: args.get_opt_u64("deadline-ms"),
+                ..Default::default()
+            };
+            let coord = Coordinator::start(engine, scfg);
             server::serve(coord, &args.get("addr", "127.0.0.1:7070"), cfg.model.n_layers)
         }
         "generate" => {
-            let mut engine = Engine::load(&artifacts)?;
-            let n_layers = engine.cfg().model.n_layers;
-            let pol = server::parse_policy(
-                &args.get("policy", "flux-ssa"),
-                args.has("sparse-decode"),
-                n_layers,
-            )?;
             let tok = Tokenizer::new();
             let mut rng = Rng::seed_from_u64(args.get_usize("seed", 0) as u64);
             let task = parse_task(&args.get("task", "pre"))?;
             let sample = workload::generate(task, &mut rng, args.get_usize("seq-len", 256));
+            if args.has("stream") {
+                return generate_streaming(&args, artifacts, task, &sample, &tok);
+            }
+            let mut engine = Engine::load(&artifacts)?;
+            let pol = server::parse_policy(
+                &args.get("policy", "flux-ssa"),
+                args.has("sparse-decode"),
+                engine.cfg().model.n_layers,
+            )?;
             let (gen, report) =
                 engine.generate(&sample.prompt, &pol, &args.get("router", "balanced"),
                                 sample.answer.len() + 1)?;
@@ -188,7 +200,7 @@ fn main() -> Result<()> {
                         max_new: entry.sample.answer.len() + 1,
                         prompt: entry.sample.prompt,
                         policy: pol,
-                        router: "balanced".into(),
+                        ..Default::default()
                     })
                 }));
             }
@@ -223,8 +235,9 @@ fn main() -> Result<()> {
                 smoke: args.has("smoke"),
             };
             let (p, d) = flux_attention::util::bench::run_serving_bench(&dir, &opts)?;
+            let s = flux_attention::util::bench::run_streaming_bench(&dir, &opts)?;
             if opts.smoke {
-                println!("SMOKE OK: {p:?} and {d:?} validated");
+                println!("SMOKE OK: {p:?}, {d:?} and {s:?} validated");
             }
             Ok(())
         }
@@ -245,10 +258,71 @@ fn main() -> Result<()> {
         }
         _ => {
             eprintln!("usage: flux [--artifacts DIR] <serve|generate|experiment|bench-serve|bench|synth|info> [flags]");
+            eprintln!("  generate --stream streams tokens through the session API as they decode");
             eprintln!("experiment ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves all");
             Ok(())
         }
     }
+}
+
+/// `flux generate --stream`: drive one request through the event-driven
+/// session API, printing tokens as they decode (the TTFT the paper's
+/// speedups buy is visible instead of hidden behind a blocking call).
+fn generate_streaming(
+    args: &Args,
+    artifacts: PathBuf,
+    task: Task,
+    sample: &flux_attention::workload::Sample,
+    tok: &Tokenizer,
+) -> Result<()> {
+    use std::io::Write as _;
+    let n_layers = MetaConfig::load(&artifacts)?.model.n_layers;
+    let policy = server::parse_policy(
+        &args.get("policy", "flux-ssa"),
+        args.has("sparse-decode"),
+        n_layers,
+    )?;
+    let engine = EngineHandle::spawn(artifacts)?;
+    let coord = Coordinator::start(engine, ServingConfig::default());
+    let handle = coord.open(Request {
+        prompt: sample.prompt.clone(),
+        max_new: sample.answer.len() + 1,
+        policy,
+        router: args.get("router", "balanced"),
+        deadline_ms: args.get_opt_u64("deadline-ms"),
+        ..Default::default()
+    })?;
+    println!("task      : {}", task.name());
+    while let Some(ev) = handle.recv() {
+        match ev {
+            SessionEvent::Queued => {}
+            SessionEvent::Prefilled { first_token, omsr, ttft_us, .. } => {
+                println!("prefilled : omsr {omsr:.2}, ttft {:.1} ms", ttft_us as f64 / 1e3);
+                print!("generated : {}", tok.decode_token(first_token));
+                std::io::stdout().flush()?;
+            }
+            SessionEvent::Token { tok: t, .. } => {
+                print!(" {}", tok.decode_token(t));
+                std::io::stdout().flush()?;
+            }
+            SessionEvent::Done { stats } => {
+                println!();
+                println!(
+                    "done      : {} tokens, e2e {:.1} ms, {:.2} ms/token",
+                    stats.tokens.len(),
+                    stats.e2e_us as f64 / 1e3,
+                    stats.decode_us_per_token / 1e3
+                );
+                break;
+            }
+            SessionEvent::Error { error } => {
+                println!();
+                anyhow::bail!("stream failed: {error}");
+            }
+        }
+    }
+    println!("expected  : {}", tok.decode(&sample.answer));
+    Ok(())
 }
 
 fn run_experiment(engine: &mut Engine, id: &str, n: usize, seq_len: usize) -> Result<()> {

@@ -17,7 +17,13 @@ impl LatencyHistogram {
     }
 
     pub fn record_us(&mut self, us: u64) {
-        self.samples_us.push(us);
+        self.record_value(us);
+    }
+
+    /// Record a raw sample — the histogram is unit-agnostic; e.g.
+    /// `stream_tokens` stores per-session token counts, not latencies.
+    pub fn record_value(&mut self, v: u64) {
+        self.samples_us.push(v);
     }
 
     pub fn count(&self) -> usize {
@@ -64,8 +70,21 @@ pub struct ServingMetrics {
     pub router_overhead: LatencyHistogram,
     pub requests_completed: u64,
     pub requests_rejected: u64,
+    /// Sessions cancelled mid-flight (explicit cancel, cancel-on-drop,
+    /// or a wire `cancel` frame) — their engine slots were reclaimed.
+    pub requests_cancelled: u64,
+    /// Sessions evicted between decode steps because their deadline
+    /// elapsed.
+    pub requests_expired: u64,
+    /// Sessions that died to a mid-decode engine failure (admission and
+    /// prefill failures count as `requests_rejected` instead).
+    pub requests_failed: u64,
     pub tokens_generated: u64,
     pub prompt_tokens: u64,
+    /// Tokens streamed per retired session (completed, cancelled or
+    /// expired) — the wire-level work distribution, including partial
+    /// streams shed by cancellation.
+    pub stream_tokens: LatencyHistogram,
     /// KV-cache bytes physically copied while staging decode arguments
     /// (absolute engine totals; ~0 on the zero-copy fast path)
     pub kv_bytes_moved: u64,
@@ -97,11 +116,16 @@ impl ServingMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests={} rejected={} tokens={} ttft_p50={:.1}ms ttft_p95={:.1}ms \
+            "requests={} rejected={} cancelled={} expired={} failed={} tokens={} \
+             stream_p50={}tok ttft_p50={:.1}ms ttft_p95={:.1}ms \
              decode_p50={:.2}ms decode_tput={:.1}tok/s kv_moved={}B kv_borrowed={}B",
             self.requests_completed,
             self.requests_rejected,
+            self.requests_cancelled,
+            self.requests_expired,
+            self.requests_failed,
             self.tokens_generated,
+            self.stream_tokens.p50_us(),
             self.ttft.p50_us() as f64 / 1e3,
             self.ttft.p95_us() as f64 / 1e3,
             self.decode.p50_us() as f64 / 1e3,
@@ -133,6 +157,20 @@ mod tests {
         let h = LatencyHistogram::default();
         assert_eq!(h.p99_us(), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn summary_reports_lifecycle_counters() {
+        let mut m = ServingMetrics::default();
+        m.requests_completed = 3;
+        m.requests_cancelled = 2;
+        m.requests_expired = 1;
+        m.stream_tokens.record_value(5);
+        m.stream_tokens.record_value(7);
+        let s = m.summary();
+        assert!(s.contains("cancelled=2"), "{s}");
+        assert!(s.contains("expired=1"), "{s}");
+        assert!(s.contains("stream_p50="), "{s}");
     }
 
     #[test]

@@ -1,22 +1,62 @@
-//! JSON-lines TCP serving front end + client (std::net, thread-per-
+//! NDJSON TCP serving front end + clients (std::net, thread-per-
 //! connection; no async runtime in the offline vendor set).
 //!
-//! Protocol: one JSON object per line.
-//!   request:  {"prompt": [u32...], "max_new": 8, "policy": "flux-ssa",
-//!              "router": "balanced", "sparse_decode": false}
-//!   response: {"tokens": [...], "text": "...", "omsr": 0.5,
-//!              "modes": ["fa", ...], "ttft_ms": 1.2, "e2e_ms": 3.4}
+//! ## Wire protocol v2 (multiplexed streaming)
+//!
+//! One connection carries many in-flight requests. Every frame is one
+//! JSON object per line; a frame with a client-assigned `id` belongs to
+//! that stream. Ids are non-negative integers below 2^53 (JSON number
+//! precision — larger or negative ids are mangled by any f64-based
+//! JSON layer, including this one):
+//!
+//! ```text
+//! open:    {"id": 7, "prompt": [u32...], "max_new": 8,
+//!           "policy": "flux-ssa", "router": "balanced",
+//!           "sparse_decode": false, "deadline_ms": 500,
+//!           "stop_tokens": [3], "ignore_eos": false}
+//! cancel:  {"id": 7, "cancel": true}
+//!
+//! events (server -> client, interleaved across streams):
+//!   {"id":7,"event":"queued"}
+//!   {"id":7,"event":"prefilled","token":t,"omsr":0.5,"modes":[..],
+//!    "ttft_ms":1.2,"queue_ms":0.1}
+//!   {"id":7,"event":"token","token":t,"step_ms":0.8}
+//!   {"id":7,"event":"done","tokens":[..],"text":"...","omsr":0.5,
+//!    "modes":[..],"ttft_ms":1.2,"e2e_ms":3.4,
+//!    "decode_ms_per_token":0.8,"queue_ms":0.1}
+//!   {"id":7,"event":"error","kind":"cancelled|deadline_exceeded|...",
+//!    "error":"..."}
+//! ```
+//!
+//! `done` and `error` are terminal; the id may be reused afterwards.
+//! A `cancel` frame (or dropping the connection) aborts the stream:
+//! the scheduler releases the engine slot and KV cache between decode
+//! steps and answers with `{"event":"error","kind":"cancelled"}`.
+//!
+//! ## v1 compatibility shim
+//!
+//! A request frame *without* an `id` is answered, when it completes,
+//! with the original single aggregate response
+//! `{"tokens":[..],"text":"...","omsr":..,"modes":[..],
+//! "ttft_ms":..,"e2e_ms":..,"decode_ms_per_token":..,"queue_ms":..,
+//! "error":null}`. v1 requests are served in order on a dedicated
+//! per-connection worker thread — pipelined v1 responses keep their
+//! request order (as in v1), and v2 frames (including cancels) are
+//! never stalled behind a blocking v1 request.
 //!
 //! policy strings: "backbone" | "flux-ssa" | "flux-xa" | "flux-ta"
 //!                 | "static:<mode-csv>" (e.g. "static:fa,fa,ssa,...")
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Coordinator, Request};
+use crate::coordinator::{CancelToken, Coordinator, Request, SessionEvent, SessionHandle};
 use crate::router::{AttnMode, DecodeMode, Policy};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::Json;
@@ -28,6 +68,15 @@ pub struct WireRequest {
     pub policy: String,
     pub router: String,
     pub sparse_decode: bool,
+    /// v2: client-assigned stream id; `None` selects the v1 single-shot
+    /// path.
+    pub id: Option<u64>,
+    /// v2: wall-clock deadline from admission (ms).
+    pub deadline_ms: Option<u64>,
+    /// v2: stop tokens beyond EOS.
+    pub stop_tokens: Vec<u32>,
+    /// v2: decode through EOS (load generation / benchmarks).
+    pub ignore_eos: bool,
 }
 
 impl Default for WireRequest {
@@ -38,6 +87,10 @@ impl Default for WireRequest {
             policy: "flux-ssa".into(),
             router: "balanced".into(),
             sparse_decode: false,
+            id: None,
+            deadline_ms: None,
+            stop_tokens: vec![],
+            ignore_eos: false,
         }
     }
 }
@@ -66,6 +119,14 @@ impl WireRequest {
         if let Some(s) = j.get("sparse_decode").and_then(Json::as_bool) {
             w.sparse_decode = s;
         }
+        w.id = j.get("id").and_then(Json::as_usize).map(|v| v as u64);
+        w.deadline_ms = j.get("deadline_ms").and_then(Json::as_usize).map(|v| v as u64);
+        if let Some(st) = j.get("stop_tokens").and_then(Json::as_arr) {
+            w.stop_tokens = st.iter().filter_map(|v| v.as_usize().map(|x| x as u32)).collect();
+        }
+        if let Some(ie) = j.get("ignore_eos").and_then(Json::as_bool) {
+            w.ignore_eos = ie;
+        }
         Ok(w)
     }
 
@@ -76,7 +137,36 @@ impl WireRequest {
         o.set("policy", Json::from(self.policy.as_str()));
         o.set("router", Json::from(self.router.as_str()));
         o.set("sparse_decode", Json::from(self.sparse_decode));
+        if let Some(id) = self.id {
+            o.set("id", Json::from(id as usize));
+        }
+        if let Some(d) = self.deadline_ms {
+            o.set("deadline_ms", Json::from(d as usize));
+        }
+        if !self.stop_tokens.is_empty() {
+            o.set(
+                "stop_tokens",
+                Json::from(self.stop_tokens.iter().map(|&t| t as usize).collect::<Vec<_>>()),
+            );
+        }
+        if self.ignore_eos {
+            o.set("ignore_eos", Json::from(true));
+        }
         o
+    }
+
+    /// Resolve into a coordinator [`Request`] (parses the policy).
+    pub fn to_request(&self, n_layers: usize) -> Result<Request> {
+        let policy = parse_policy(&self.policy, self.sparse_decode, n_layers)?;
+        Ok(Request {
+            prompt: self.prompt.clone(),
+            max_new: self.max_new,
+            policy,
+            router: self.router.clone(),
+            deadline_ms: self.deadline_ms,
+            stop_tokens: self.stop_tokens.clone(),
+            ignore_eos: self.ignore_eos,
+        })
     }
 }
 
@@ -89,6 +179,7 @@ pub struct WireResponse {
     pub ttft_ms: f64,
     pub e2e_ms: f64,
     pub decode_ms_per_token: f64,
+    pub queue_ms: f64,
     pub error: Option<String>,
 }
 
@@ -102,6 +193,7 @@ impl WireResponse {
         o.set("ttft_ms", Json::from(self.ttft_ms));
         o.set("e2e_ms", Json::from(self.e2e_ms));
         o.set("decode_ms_per_token", Json::from(self.decode_ms_per_token));
+        o.set("queue_ms", Json::from(self.queue_ms));
         match &self.error {
             Some(e) => o.set("error", Json::from(e.as_str())),
             None => o.set("error", Json::Null),
@@ -126,6 +218,7 @@ impl WireResponse {
             ttft_ms: j.get("ttft_ms").and_then(Json::as_f64).unwrap_or(0.0),
             e2e_ms: j.get("e2e_ms").and_then(Json::as_f64).unwrap_or(0.0),
             decode_ms_per_token: j.get("decode_ms_per_token").and_then(Json::as_f64).unwrap_or(0.0),
+            queue_ms: j.get("queue_ms").and_then(Json::as_f64).unwrap_or(0.0),
             error: j.get("error").and_then(Json::as_str).map(String::from),
         }
     }
@@ -156,10 +249,59 @@ pub fn parse_policy(s: &str, sparse_decode: bool, n_layers: usize) -> Result<Pol
     }
 }
 
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Shared write half of a connection. Frames from the reader thread and
+/// the per-session pump threads interleave at line granularity.
+type SharedWriter = Arc<Mutex<TcpStream>>;
+
+/// Maximum pipelined-but-unserved v1 requests buffered per connection
+/// before the reader thread blocks (bounds per-connection memory).
+const V1_PIPELINE_DEPTH: usize = 64;
+
+/// One unit of work for a connection's v1 worker thread: a request to
+/// run, or a pre-formed error response (e.g. for an unparseable line)
+/// that must still be answered in arrival order.
+enum V1Job {
+    Request(Json),
+    Error(WireResponse),
+}
+
+/// Live v2 streams on one connection: wire id -> cancellation signal.
+type SessionMap = Arc<Mutex<HashMap<u64, CancelToken>>>;
+
+fn write_line(wr: &SharedWriter, j: &Json) -> std::io::Result<()> {
+    let mut w = wr.lock().unwrap();
+    w.write_all(format!("{j}\n").as_bytes())?;
+    w.flush()
+}
+
+fn frame(id: u64, event: &str) -> Json {
+    let mut o = Json::obj();
+    o.set("id", Json::from(id as usize));
+    o.set("event", Json::from(event));
+    o
+}
+
+fn error_frame(id: u64, kind: &str, msg: &str) -> Json {
+    let mut o = frame(id, "error");
+    o.set("kind", Json::from(kind));
+    o.set("error", Json::from(msg));
+    o
+}
+
 /// Serve forever on `addr` (thread per connection).
 pub fn serve(coord: Arc<Coordinator>, addr: &str, n_layers: usize) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!("flux server listening on {addr}");
+    serve_listener(coord, listener, n_layers)
+}
+
+/// Accept loop over an existing listener (tests and benches bind
+/// `127.0.0.1:0` first to obtain an ephemeral port).
+pub fn serve_listener(coord: Arc<Coordinator>, listener: TcpListener, n_layers: usize) -> Result<()> {
     for sock in listener.incoming() {
         let sock = sock?;
         let coord = coord.clone();
@@ -173,40 +315,198 @@ pub fn serve(coord: Arc<Coordinator>, addr: &str, n_layers: usize) -> Result<()>
 }
 
 fn handle_conn(coord: Arc<Coordinator>, sock: TcpStream, n_layers: usize) -> Result<()> {
-    let mut wr = sock.try_clone()?;
+    let wr: SharedWriter = Arc::new(Mutex::new(sock.try_clone()?));
     let rd = BufReader::new(sock);
-    let tok = Tokenizer::new();
+    let sessions: SessionMap = Arc::new(Mutex::new(HashMap::new()));
+    // One worker thread serves this connection's v1 jobs in order, off
+    // the reader thread: v2 frames (including cancels) are never
+    // stalled behind a blocking v1 request, one connection never pins
+    // more than one thread on the v1 path, and the bounded channel
+    // restores the old inline loop's backpressure (a reader blocked on
+    // a full queue throttles the sender through the socket buffer).
+    let (v1_tx, v1_rx) = std::sync::mpsc::sync_channel::<V1Job>(V1_PIPELINE_DEPTH);
+    {
+        let coord = coord.clone();
+        let wr = wr.clone();
+        std::thread::spawn(move || {
+            let tok = Tokenizer::new();
+            for job in v1_rx {
+                let resp = match job {
+                    V1Job::Request(parsed) => process_request(&coord, &tok, &parsed, n_layers),
+                    V1Job::Error(resp) => resp,
+                };
+                if write_line(&wr, &resp.to_json()).is_err() {
+                    return;
+                }
+            }
+        });
+    }
+    let mut io_result: Result<()> = Ok(());
     for line in rd.lines() {
-        let line = line?;
+        let line = match line {
+            Ok(l) => l,
+            Err(e) => {
+                // abrupt disconnect (e.g. RST mid-line) still reaches
+                // the drain below
+                io_result = Err(e.into());
+                break;
+            }
+        };
         if line.trim().is_empty() {
             continue;
         }
-        let resp = process_line(&coord, &tok, &line, n_layers);
-        wr.write_all(format!("{}\n", resp.to_json()).as_bytes())?;
-        wr.flush()?;
+        if let Err(e) = handle_frame(&coord, &v1_tx, &wr, &sessions, &line, n_layers) {
+            io_result = Err(e);
+            break;
+        }
+    }
+    // client gone (cleanly or not): abort any streams it left running
+    // so the scheduler reclaims their engine slots; dropping v1_tx
+    // winds down the worker
+    for (_, c) in sessions.lock().unwrap().drain() {
+        c.cancel();
+    }
+    io_result
+}
+
+/// Dispatch one inbound line. Protocol-level problems are answered on
+/// the wire (the connection always survives them); only I/O errors
+/// propagate.
+fn handle_frame(
+    coord: &Arc<Coordinator>,
+    v1_tx: &SyncSender<V1Job>,
+    wr: &SharedWriter,
+    sessions: &SessionMap,
+    line: &str,
+    n_layers: usize,
+) -> Result<()> {
+    let parsed = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            // unparseable line: answered v1-style, through the worker,
+            // so pipelined v1 responses keep arrival order
+            let _ = v1_tx.send(V1Job::Error(error_response(&format!("bad json: {e}"))));
+            return Ok(());
+        }
+    };
+    let Some(id) = parsed.get("id").and_then(Json::as_usize).map(|v| v as u64) else {
+        // v1 single-shot: handed to this connection's worker thread,
+        // which answers in request order when each completes
+        let _ = v1_tx.send(V1Job::Request(parsed));
+        return Ok(());
+    };
+
+    if parsed.get("cancel").and_then(Json::as_bool).unwrap_or(false) {
+        let token = sessions.lock().unwrap().get(&id).cloned();
+        match token {
+            Some(c) => c.cancel(), // terminal error frame comes from the pump
+            None => write_line(wr, &error_frame(id, "unknown_id", &format!("no live stream {id}")))?,
+        }
+        return Ok(());
+    }
+
+    if sessions.lock().unwrap().contains_key(&id) {
+        write_line(wr, &error_frame(id, "duplicate_id", &format!("stream {id} already in flight")))?;
+        return Ok(());
+    }
+    let wire = match WireRequest::from_json(&parsed) {
+        Ok(w) => w,
+        Err(e) => {
+            write_line(wr, &error_frame(id, "invalid", &format!("bad request: {e}")))?;
+            return Ok(());
+        }
+    };
+    let req = match wire.to_request(n_layers) {
+        Ok(r) => r,
+        Err(e) => {
+            write_line(wr, &error_frame(id, "invalid", &e.to_string()))?;
+            return Ok(());
+        }
+    };
+    match coord.open(req) {
+        Err(e) => write_line(wr, &error_frame(id, e.kind(), &e.to_string()))?,
+        Ok(handle) => {
+            sessions.lock().unwrap().insert(id, handle.cancel_token());
+            let wr = wr.clone();
+            let sessions = sessions.clone();
+            std::thread::spawn(move || pump_session(id, handle, &wr, &sessions));
+        }
     }
     Ok(())
 }
 
-fn process_line(coord: &Coordinator, tok: &Tokenizer, line: &str, n_layers: usize) -> WireResponse {
-    let parsed = match Json::parse(line) {
-        Ok(j) => j,
-        Err(e) => return error_response(&format!("bad json: {e}")),
-    };
-    let wire = match WireRequest::from_json(&parsed) {
+/// Forward one session's events to the connection as NDJSON frames.
+/// Exits on the terminal event, or when the socket dies — dropping the
+/// handle then cancels the session (cancel-on-drop).
+fn pump_session(id: u64, handle: SessionHandle, wr: &SharedWriter, sessions: &SessionMap) {
+    let tok = Tokenizer::new();
+    while let Some(ev) = handle.recv() {
+        let (j, terminal) = match ev {
+            SessionEvent::Queued => (frame(id, "queued"), false),
+            SessionEvent::Prefilled { first_token, omsr, modes, ttft_us, queue_us } => {
+                let mut o = frame(id, "prefilled");
+                o.set("token", Json::from(first_token as usize));
+                o.set("omsr", Json::from(omsr));
+                o.set("modes", Json::from(modes));
+                o.set("ttft_ms", Json::from(ttft_us as f64 / 1e3));
+                o.set("queue_ms", Json::from(queue_us as f64 / 1e3));
+                (o, false)
+            }
+            SessionEvent::Token { tok: t, step_us } => {
+                let mut o = frame(id, "token");
+                o.set("token", Json::from(t as usize));
+                o.set("step_ms", Json::from(step_us as f64 / 1e3));
+                (o, false)
+            }
+            SessionEvent::Done { stats } => {
+                let mut o = frame(id, "done");
+                o.set(
+                    "tokens",
+                    Json::from(stats.tokens.iter().map(|&t| t as usize).collect::<Vec<_>>()),
+                );
+                o.set("text", Json::from(tok.decode(&stats.tokens)));
+                o.set("omsr", Json::from(stats.omsr));
+                o.set("modes", Json::from(stats.modes));
+                o.set("ttft_ms", Json::from(stats.ttft_us as f64 / 1e3));
+                o.set("e2e_ms", Json::from(stats.e2e_us as f64 / 1e3));
+                o.set("decode_ms_per_token", Json::from(stats.decode_us_per_token / 1e3));
+                o.set("queue_ms", Json::from(stats.queue_us as f64 / 1e3));
+                (o, true)
+            }
+            SessionEvent::Error { error } => (error_frame(id, error.kind(), &error.to_string()), true),
+        };
+        if terminal {
+            // free the id for reuse BEFORE the terminal frame is
+            // visible to the client (the protocol permits immediate
+            // reuse after done/error); all removals live inside this
+            // function so a reused id's fresh entry is never clobbered
+            sessions.lock().unwrap().remove(&id);
+            let _ = write_line(wr, &j);
+            return;
+        }
+        if write_line(wr, &j).is_err() {
+            // socket gone; dropping `handle` cancels the session
+            sessions.lock().unwrap().remove(&id);
+            return;
+        }
+    }
+    // event channel closed without a terminal event (scheduler shutdown)
+    sessions.lock().unwrap().remove(&id);
+}
+
+/// v1 path: run the request to completion and build the aggregate
+/// response (`submit` is the session adapter, so v1 and v2 share the
+/// scheduler code path).
+fn process_request(coord: &Coordinator, tok: &Tokenizer, parsed: &Json, n_layers: usize) -> WireResponse {
+    let wire = match WireRequest::from_json(parsed) {
         Ok(w) => w,
         Err(e) => return error_response(&format!("bad request: {e}")),
     };
-    let policy = match parse_policy(&wire.policy, wire.sparse_decode, n_layers) {
-        Ok(p) => p,
+    let req = match wire.to_request(n_layers) {
+        Ok(r) => r,
         Err(e) => return error_response(&e.to_string()),
     };
-    match coord.submit(Request {
-        prompt: wire.prompt,
-        max_new: wire.max_new,
-        policy,
-        router: wire.router,
-    }) {
+    match coord.submit(req) {
         Ok(r) => WireResponse {
             text: tok.decode(&r.tokens),
             tokens: r.tokens,
@@ -215,6 +515,7 @@ fn process_line(coord: &Coordinator, tok: &Tokenizer, line: &str, n_layers: usiz
             ttft_ms: r.ttft_us as f64 / 1e3,
             e2e_ms: r.e2e_us as f64 / 1e3,
             decode_ms_per_token: r.decode_us_per_token / 1e3,
+            queue_ms: r.queue_us as f64 / 1e3,
             error: None,
         },
         Err(e) => error_response(&e.to_string()),
@@ -225,11 +526,17 @@ fn error_response(msg: &str) -> WireResponse {
     WireResponse { error: Some(msg.to_string()), ..Default::default() }
 }
 
-/// Minimal blocking client for examples and tests.
+// ---------------------------------------------------------------------------
+// Clients
+// ---------------------------------------------------------------------------
+
+/// Minimal blocking v1 client for examples and tests.
 pub fn client_request(addr: &str, req: &WireRequest) -> Result<WireResponse> {
     let sock = TcpStream::connect(addr)?;
     let mut wr = sock.try_clone()?;
-    wr.write_all(format!("{}\n", req.to_json()).as_bytes())?;
+    let mut v1 = req.clone();
+    v1.id = None; // the v1 path is selected by the absence of an id
+    wr.write_all(format!("{}\n", v1.to_json()).as_bytes())?;
     wr.flush()?;
     let mut rd = BufReader::new(sock);
     let mut line = String::new();
@@ -239,9 +546,136 @@ pub fn client_request(addr: &str, req: &WireRequest) -> Result<WireResponse> {
     Ok(WireResponse::from_json(&j))
 }
 
+/// Per-stream inbox registry of a [`StreamClient`] connection.
+type Inboxes = Arc<Mutex<HashMap<u64, Sender<Json>>>>;
+
+/// Multiplexing v2 client: one TCP connection, many in-flight streams.
+/// A background thread demultiplexes inbound frames by `id` into
+/// per-stream channels. Dropping the client shuts the connection down
+/// (winding down the demux thread and cancelling any server-side
+/// streams still in flight).
+pub struct StreamClient {
+    wr: SharedWriter,
+    next_id: AtomicU64,
+    inboxes: Inboxes,
+}
+
+impl Drop for StreamClient {
+    fn drop(&mut self) {
+        // unblock the demux thread's read; the server sees EOF and
+        // cancels this connection's live streams
+        let _ = self.wr.lock().unwrap().shutdown(std::net::Shutdown::Both);
+    }
+}
+
+impl StreamClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let sock = TcpStream::connect(addr)?;
+        let wr = Arc::new(Mutex::new(sock.try_clone()?));
+        let inboxes: Inboxes = Arc::new(Mutex::new(HashMap::new()));
+        let demux = inboxes.clone();
+        std::thread::spawn(move || {
+            let rd = BufReader::new(sock);
+            for line in rd.lines() {
+                let Ok(line) = line else { break };
+                let Ok(j) = Json::parse(&line) else { continue };
+                let Some(id) = j.get("id").and_then(Json::as_usize).map(|v| v as u64) else {
+                    continue; // v1 responses are not ours
+                };
+                let terminal =
+                    matches!(j.get("event").and_then(Json::as_str), Some("done") | Some("error"));
+                let mut map = demux.lock().unwrap();
+                if let Some(tx) = map.get(&id) {
+                    let _ = tx.send(j);
+                }
+                if terminal {
+                    // closing the inbox ends the stream's recv loop
+                    map.remove(&id);
+                }
+            }
+            // connection closed: drop every inbox so readers unblock
+            demux.lock().unwrap().clear();
+        });
+        Ok(Self { wr, next_id: AtomicU64::new(1), inboxes })
+    }
+
+    /// Open a stream; the request's `id` is assigned automatically.
+    pub fn open(&self, req: &WireRequest) -> Result<ClientStream> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.inboxes.lock().unwrap().insert(id, tx);
+        let mut w = req.clone();
+        w.id = Some(id);
+        if let Err(e) = write_line(&self.wr, &w.to_json()) {
+            self.inboxes.lock().unwrap().remove(&id);
+            return Err(e.into());
+        }
+        Ok(ClientStream { id, rx, wr: self.wr.clone() })
+    }
+}
+
+/// One in-flight stream on a [`StreamClient`] connection.
+pub struct ClientStream {
+    id: u64,
+    rx: Receiver<Json>,
+    wr: SharedWriter,
+}
+
+impl ClientStream {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Next frame (blocking); `None` after the terminal frame.
+    pub fn recv(&self) -> Option<Json> {
+        self.rx.recv().ok()
+    }
+
+    pub fn recv_timeout(&self, timeout: std::time::Duration) -> Option<Json> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+
+    /// Send a `{"id":N,"cancel":true}` frame for this stream.
+    pub fn cancel(&self) -> Result<()> {
+        let mut o = Json::obj();
+        o.set("id", Json::from(self.id as usize));
+        o.set("cancel", Json::from(true));
+        write_line(&self.wr, &o)?;
+        Ok(())
+    }
+
+    /// Drain to the terminal frame and fold the events into an
+    /// aggregate [`WireResponse`] (v1-shaped, assembled client-side).
+    /// On an `error` frame the partial token stream is preserved.
+    pub fn wait(self) -> Result<WireResponse> {
+        let mut partial: Vec<u32> = vec![];
+        while let Some(j) = self.recv() {
+            match j.get("event").and_then(Json::as_str) {
+                Some("prefilled") | Some("token") => {
+                    if let Some(t) = j.get("token").and_then(Json::as_usize) {
+                        partial.push(t as u32);
+                    }
+                }
+                Some("done") => return Ok(WireResponse::from_json(&j)),
+                Some("error") => {
+                    let mut resp = WireResponse::from_json(&j);
+                    resp.tokens = partial;
+                    if resp.error.is_none() {
+                        resp.error = Some("stream failed".into());
+                    }
+                    return Ok(resp);
+                }
+                _ => {}
+            }
+        }
+        anyhow::bail!("stream {} closed before a terminal frame", self.id)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::RequestError;
 
     #[test]
     fn policy_parsing() {
@@ -261,13 +695,37 @@ mod tests {
         assert_eq!(w.max_new, 8);
         assert_eq!(w.policy, "flux-ssa");
         assert!(!w.sparse_decode);
+        assert_eq!(w.id, None);
+        assert_eq!(w.deadline_ms, None);
         let j2 = Json::parse(&w.to_json().to_string()).unwrap();
         let w2 = WireRequest::from_json(&j2).unwrap();
         assert_eq!(w2.prompt, vec![1, 2]);
     }
 
     #[test]
-    fn wire_response_roundtrip() {
+    fn wire_request_v2_fields_roundtrip() {
+        let w = WireRequest {
+            prompt: vec![1, 2, 3],
+            id: Some(42),
+            deadline_ms: Some(250),
+            stop_tokens: vec![3, 9],
+            ignore_eos: true,
+            ..Default::default()
+        };
+        let j = Json::parse(&w.to_json().to_string()).unwrap();
+        let w2 = WireRequest::from_json(&j).unwrap();
+        assert_eq!(w2.id, Some(42));
+        assert_eq!(w2.deadline_ms, Some(250));
+        assert_eq!(w2.stop_tokens, vec![3, 9]);
+        assert!(w2.ignore_eos);
+        let req = w2.to_request(8).unwrap();
+        assert_eq!(req.deadline_ms, Some(250));
+        assert_eq!(req.stop_tokens, vec![3, 9]);
+        assert!(req.ignore_eos);
+    }
+
+    #[test]
+    fn wire_response_roundtrip_includes_queue_ms() {
         let r = WireResponse {
             tokens: vec![5, 2],
             text: "w0 <eos>".into(),
@@ -276,12 +734,25 @@ mod tests {
             ttft_ms: 1.5,
             e2e_ms: 3.0,
             decode_ms_per_token: 0.7,
+            queue_ms: 0.4,
             error: None,
         };
         let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert!(j.get("queue_ms").is_some(), "queue_ms must be serialized");
         let r2 = WireResponse::from_json(&j);
         assert_eq!(r2.tokens, r.tokens);
         assert_eq!(r2.modes, r.modes);
+        assert!((r2.queue_ms - 0.4).abs() < 1e-9);
         assert!(r2.error.is_none());
+    }
+
+    #[test]
+    fn event_frames_carry_id_and_kind() {
+        let f = frame(7, "token");
+        assert_eq!(f.get("id").and_then(Json::as_usize), Some(7));
+        assert_eq!(f.get("event").and_then(Json::as_str), Some("token"));
+        let e = error_frame(9, RequestError::DeadlineExceeded.kind(), "late");
+        assert_eq!(e.get("kind").and_then(Json::as_str), Some("deadline_exceeded"));
+        assert_eq!(e.get("event").and_then(Json::as_str), Some("error"));
     }
 }

@@ -336,6 +336,139 @@ pub fn run_serving_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<(P
     Ok((prefill_path, decode_path))
 }
 
+// ---------------------------------------------------------------------------
+// `flux bench` streaming scenario: BENCH_serving.json
+// ---------------------------------------------------------------------------
+
+/// Concurrent-streaming serving scenario over the real TCP wire: N
+/// connections × M in-flight v2 streams each, with one stream per
+/// connection cancelled mid-flight. Emits `BENCH_serving.json`
+/// recording aggregate streamed-token throughput and cancelled-request
+/// cleanup: after the cancellations a probe request must admit and
+/// complete (proving the scheduler reclaimed the engine slots), and the
+/// coordinator's cancelled counter must match what the clients aborted.
+pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<PathBuf> {
+    use crate::config::{MetaConfig, ServingConfig};
+    use crate::coordinator::{Coordinator, Request};
+    use crate::engine::EngineHandle;
+    use crate::server::{serve_listener, StreamClient, WireRequest};
+    use crate::util::rng::Rng;
+    use crate::workload::{generate, Task};
+
+    let (n_conns, n_streams, max_new) = if opts.smoke { (2usize, 2usize, 4usize) } else { (4, 4, 16) };
+    let n_layers = MetaConfig::load(artifacts)?.model.n_layers;
+    let engine = EngineHandle::spawn(artifacts.to_path_buf())?;
+    let coord = Coordinator::start(engine, ServingConfig::default());
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    {
+        let coord = coord.clone();
+        std::thread::spawn(move || {
+            let _ = serve_listener(coord, listener, n_layers);
+        });
+    }
+
+    let mut rng = Rng::seed_from_u64(21);
+    let seq = opts.seq_len.min(128);
+    let timeout = std::time::Duration::from_secs(120);
+    let t0 = Instant::now();
+    let mut workers = vec![];
+    for _ in 0..n_conns {
+        let prompts: Vec<Vec<u32>> =
+            (0..n_streams).map(|_| generate(Task::PRe, &mut rng, seq).prompt).collect();
+        let addr = addr.clone();
+        workers.push(std::thread::spawn(move || -> Result<(u64, u64)> {
+            let client = StreamClient::connect(&addr)?;
+            let mut streams = vec![];
+            for (i, prompt) in prompts.into_iter().enumerate() {
+                // stream 0 is the cancellation victim: give it a long
+                // budget so the cancel always lands mid-generation
+                let (mn, ie) = if i == 0 { (1024, true) } else { (max_new, false) };
+                streams.push(client.open(&WireRequest {
+                    prompt,
+                    max_new: mn,
+                    ignore_eos: ie,
+                    ..Default::default()
+                })?);
+            }
+            let victim = streams.remove(0);
+            // cancel only once the victim is demonstrably mid-generation
+            // (holding an engine slot): wait for a token frame, not just
+            // the queued/prefilled admission events
+            while let Some(j) = victim.recv_timeout(timeout) {
+                if j.get("event").and_then(crate::util::json::Json::as_str) == Some("token") {
+                    break;
+                }
+            }
+            victim.cancel()?;
+            let mut cancelled = 0u64;
+            while let Some(j) = victim.recv_timeout(timeout) {
+                if j.get("event").and_then(crate::util::json::Json::as_str) == Some("error") {
+                    cancelled += 1;
+                    break;
+                }
+            }
+            let mut tokens = 0u64;
+            for s in streams {
+                let r = s.wait()?;
+                anyhow::ensure!(r.error.is_none(), "stream failed: {:?}", r.error);
+                tokens += r.tokens.len() as u64;
+            }
+            Ok((tokens, cancelled))
+        }));
+    }
+    let mut tokens_streamed = 0u64;
+    let mut cancelled = 0u64;
+    for w in workers {
+        let (t, c) = w.join().map_err(|_| anyhow::anyhow!("stream worker panicked"))??;
+        tokens_streamed += t;
+        cancelled += c;
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64().max(1e-9);
+
+    // cancelled-request cleanup: a fresh request must admit and complete
+    // after the cancellations released their engine slots
+    let probe = {
+        let mut rng = Rng::seed_from_u64(22);
+        let s = generate(Task::PRe, &mut rng, seq);
+        coord.submit(Request { prompt: s.prompt, max_new: 2, ..Default::default() })
+    };
+    let cleanup_ok = probe.is_ok();
+    anyhow::ensure!(cleanup_ok, "post-cancel probe request failed: {}", probe.err().unwrap());
+
+    let m = coord.metrics.lock().unwrap().clone();
+    let mut j = Json::obj();
+    j.set("schema", Json::from("flux-bench-serving/v1"));
+    j.set("measured", Json::from(true));
+    j.set("connections", Json::from(n_conns));
+    j.set("streams_per_connection", Json::from(n_streams));
+    j.set("tokens_streamed", Json::from(tokens_streamed as usize));
+    j.set("tokens_per_s", Json::from(tokens_streamed as f64 / elapsed_s));
+    j.set("cancelled_requests", Json::from(cancelled as usize));
+    j.set("coordinator_cancelled", Json::from(m.requests_cancelled as usize));
+    j.set("requests_expired", Json::from(m.requests_expired as usize));
+    j.set("cancelled_cleanup_ok", Json::from(cleanup_ok));
+    j.set("stream_tokens_p50", Json::from(m.stream_tokens.p50_us() as usize));
+    j.set("metrics_summary", Json::from(m.summary()));
+    let path = opts.out_dir.join("BENCH_serving.json");
+    std::fs::write(&path, j.to_string())?;
+
+    anyhow::ensure!(
+        tokens_streamed > 0 && cancelled >= 1 && m.requests_cancelled >= cancelled,
+        "streaming bench failed validation: {} tokens, {} cancelled (coordinator saw {})",
+        tokens_streamed,
+        cancelled,
+        m.requests_cancelled
+    );
+    println!(
+        "streaming bench: {tokens_streamed} tokens over {n_conns} conns x {n_streams} streams \
+         ({:.1} tok/s), {cancelled} cancelled, cleanup ok",
+        tokens_streamed as f64 / elapsed_s
+    );
+    println!("(saved {path:?})");
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,452 @@
+//! Integration tests for the event-driven session API and the
+//! multiplexed wire protocol v2: streamed-vs-blocking determinism,
+//! mid-stream cancellation (engine-slot reclamation), deadlines, stop
+//! tokens, admission validation, and server robustness against
+//! malformed input on live connections.
+//!
+//! Artifacts resolution mirrors `integration.rs`: `$FLUX_ARTIFACTS`
+//! when populated, otherwise hermetic synthetic artifacts — every test
+//! executes on every `cargo test`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use flux_attention::config::{MetaConfig, ServingConfig};
+use flux_attention::coordinator::{Coordinator, Request, RequestError, SessionEvent};
+use flux_attention::engine::EngineHandle;
+use flux_attention::router::{AttnMode, DecodeMode, Policy};
+use flux_attention::runtime::synthetic;
+use flux_attention::server::{serve_listener, StreamClient, WireRequest};
+use flux_attention::util::bench::{run_streaming_bench, ServingBenchOpts};
+use flux_attention::util::json::Json;
+use flux_attention::util::rng::Rng;
+use flux_attention::workload::{generate, Task};
+
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+fn artifacts() -> PathBuf {
+    synthetic::ensure_default().expect("artifact generation must not fail")
+}
+
+fn start_coordinator(cfg: ServingConfig) -> Arc<Coordinator> {
+    let engine = EngineHandle::spawn(artifacts()).unwrap();
+    Coordinator::start(engine, cfg)
+}
+
+/// Coordinator + TCP server on an ephemeral port.
+fn start_server() -> (Arc<Coordinator>, String) {
+    let dir = artifacts();
+    let n_layers = MetaConfig::load(&dir).unwrap().model.n_layers;
+    let engine = EngineHandle::spawn(dir).unwrap();
+    let coord = Coordinator::start(engine, ServingConfig::default());
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let serve_coord = coord.clone();
+    std::thread::spawn(move || {
+        let _ = serve_listener(serve_coord, listener, n_layers);
+    });
+    (coord, addr)
+}
+
+/// Acceptance gate: the streamed token sequence (Prefilled.first_token
+/// then Token events) must equal both the Done stats and the blocking
+/// API's tokens for the same prompt — greedy determinism is preserved
+/// across the event-driven redesign.
+#[test]
+fn streamed_tokens_match_blocking_api() {
+    let coord = start_coordinator(ServingConfig::default());
+    let mut rng = Rng::seed_from_u64(31);
+    let s = generate(Task::PRe, &mut rng, 200);
+    let req = Request {
+        prompt: s.prompt.clone(),
+        max_new: 6,
+        policy: Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Dense },
+        ..Default::default()
+    };
+    let blocking = coord.submit(req.clone()).unwrap();
+
+    let handle = coord.open(req).unwrap();
+    let mut streamed = vec![];
+    let mut saw_queued = false;
+    let mut saw_prefilled = false;
+    let mut stats = None;
+    while let Some(ev) = handle.recv_timeout(TIMEOUT) {
+        match ev {
+            SessionEvent::Queued => saw_queued = true,
+            SessionEvent::Prefilled { first_token, ttft_us, .. } => {
+                saw_prefilled = true;
+                assert!(ttft_us > 0);
+                streamed.push(first_token);
+            }
+            SessionEvent::Token { tok, .. } => streamed.push(tok),
+            SessionEvent::Done { stats: st } => {
+                stats = Some(st);
+                break;
+            }
+            SessionEvent::Error { error } => panic!("unexpected error: {error}"),
+        }
+    }
+    assert!(saw_queued, "Queued must precede everything");
+    assert!(saw_prefilled, "Prefilled must be emitted");
+    let stats = stats.expect("stream must end with Done");
+    assert_eq!(streamed, stats.tokens, "event stream must mirror the final token list");
+    assert_eq!(streamed, blocking.tokens, "streaming must preserve greedy determinism");
+    assert!(stats.e2e_us >= stats.ttft_us);
+}
+
+/// Acceptance gate: cancelling a mid-stream session frees its engine
+/// slot — with `max_active_requests == 1`, a second request queued
+/// behind the victim admits and completes only after the cancel.
+#[test]
+fn mid_stream_cancel_frees_engine_slot() {
+    let coord =
+        start_coordinator(ServingConfig { max_active_requests: 1, ..Default::default() });
+    let mut rng = Rng::seed_from_u64(32);
+    let sa = generate(Task::PRe, &mut rng, 128);
+    let sb = generate(Task::Gov, &mut rng, 128);
+
+    // A occupies the single slot with a long, EOS-proof generation
+    let ha = coord
+        .open(Request { prompt: sa.prompt, max_new: 1024, ignore_eos: true, ..Default::default() })
+        .unwrap();
+    let mut tokens_before_cancel = 0;
+    while tokens_before_cancel < 3 {
+        match ha.recv_timeout(TIMEOUT) {
+            Some(SessionEvent::Token { .. }) => tokens_before_cancel += 1,
+            Some(SessionEvent::Error { error }) => panic!("A errored early: {error}"),
+            Some(_) => {}
+            None => panic!("A's stream closed early"),
+        }
+    }
+
+    // B queues behind the occupied slot, then A is cancelled
+    let hb = coord
+        .open(Request { prompt: sb.prompt, max_new: 3, ignore_eos: true, ..Default::default() })
+        .unwrap();
+    ha.cancel();
+    let err = loop {
+        match ha.recv_timeout(TIMEOUT) {
+            Some(SessionEvent::Error { error }) => break error,
+            Some(SessionEvent::Done { .. }) => panic!("cancelled session must not complete"),
+            Some(_) => {}
+            None => panic!("A's stream closed without a terminal event"),
+        }
+    };
+    assert_eq!(err, RequestError::Cancelled);
+
+    // the freed slot admits B, which runs to completion
+    let resp = hb.wait().unwrap();
+    assert_eq!(resp.tokens.len(), 3);
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.requests_cancelled, 1);
+    assert_eq!(m.requests_completed, 1);
+    assert!(m.stream_tokens.count() >= 2, "both sessions record streamed tokens");
+}
+
+#[test]
+fn deadline_exceeded_evicts_between_steps() {
+    let coord = start_coordinator(ServingConfig::default());
+    let mut rng = Rng::seed_from_u64(33);
+    // a 1024-token prompt makes prefill alone outlast a 5ms deadline,
+    // so expiry is deterministic on any machine; max_new stays inside
+    // the 2048-slot KV ledger so the only possible terminal error is
+    // the deadline
+    let s = generate(Task::PRe, &mut rng, 1024);
+    let h = coord
+        .open(Request {
+            prompt: s.prompt.clone(),
+            max_new: 500,
+            ignore_eos: true,
+            deadline_ms: Some(5),
+            ..Default::default()
+        })
+        .unwrap();
+    let err = loop {
+        match h.recv_timeout(TIMEOUT) {
+            Some(SessionEvent::Error { error }) => break error,
+            Some(SessionEvent::Done { .. }) => panic!("must expire before completing"),
+            Some(_) => {}
+            None => panic!("stream closed without a terminal event"),
+        }
+    };
+    assert_eq!(err, RequestError::DeadlineExceeded);
+    assert_eq!(coord.metrics.lock().unwrap().requests_expired, 1);
+
+    // the slot was reclaimed: a follow-up request completes
+    let resp = coord
+        .submit(Request { prompt: s.prompt, max_new: 2, ignore_eos: true, ..Default::default() })
+        .unwrap();
+    assert_eq!(resp.tokens.len(), 2);
+
+    // config-level default deadline applies when the request has none
+    let coord2 = start_coordinator(ServingConfig {
+        default_deadline_ms: Some(5),
+        ..Default::default()
+    });
+    let mut rng2 = Rng::seed_from_u64(34);
+    let s2 = generate(Task::Gov, &mut rng2, 1024);
+    let err2 = coord2
+        .submit(Request { prompt: s2.prompt, max_new: 500, ignore_eos: true, ..Default::default() })
+        .unwrap_err();
+    assert!(
+        err2.to_string().contains("deadline exceeded"),
+        "default deadline must evict: {err2}"
+    );
+}
+
+#[test]
+fn stop_tokens_terminate_generation() {
+    let coord = start_coordinator(ServingConfig::default());
+    let mut rng = Rng::seed_from_u64(35);
+    let s = generate(Task::PRe, &mut rng, 128);
+    let base = coord
+        .submit(Request { prompt: s.prompt.clone(), max_new: 8, ignore_eos: true, ..Default::default() })
+        .unwrap();
+    assert_eq!(base.tokens.len(), 8, "ignore_eos must decode to max_new");
+
+    // stopping on the value of the third token truncates at its first
+    // occurrence (inclusive), wherever that is
+    let stop = base.tokens[2];
+    let first_idx = base.tokens.iter().position(|&t| t == stop).unwrap();
+    let resp = coord
+        .submit(Request {
+            prompt: s.prompt.clone(),
+            max_new: 8,
+            ignore_eos: true,
+            stop_tokens: vec![stop],
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(
+        resp.tokens,
+        base.tokens[..=first_idx].to_vec(),
+        "generation must stop at the stop token (inclusive)"
+    );
+}
+
+#[test]
+fn admission_rejects_invalid_requests_with_typed_errors() {
+    let dir = artifacts();
+    let max = *MetaConfig::load(&dir).unwrap().prefill_buckets.last().unwrap();
+    let coord = start_coordinator(ServingConfig::default());
+
+    // over-long prompt: typed coordinator error, not an engine failure
+    match coord.open(Request { prompt: vec![7; max + 1], ..Default::default() }) {
+        Err(RequestError::PromptTooLong { len, max: m }) => {
+            assert_eq!(len, max + 1);
+            assert_eq!(m, max);
+        }
+        Err(e) => panic!("wrong error: {e:?}"),
+        Ok(_) => panic!("oversized prompt must be rejected"),
+    }
+    // empty prompt
+    assert!(matches!(
+        coord.open(Request { prompt: vec![], ..Default::default() }),
+        Err(RequestError::Invalid(_))
+    ));
+    // oversized max_new
+    assert!(matches!(
+        coord.open(Request { prompt: vec![1], max_new: 1_000_000, ..Default::default() }),
+        Err(RequestError::Invalid(_))
+    ));
+    // all three were counted as rejections and never reached the engine
+    assert_eq!(coord.metrics.lock().unwrap().requests_rejected, 3);
+    assert_eq!(coord.metrics.lock().unwrap().requests_completed, 0);
+}
+
+fn send_recv(wr: &mut TcpStream, rd: &mut BufReader<TcpStream>, msg: &str) -> Json {
+    wr.write_all(msg.as_bytes()).unwrap();
+    wr.write_all(b"\n").unwrap();
+    wr.flush().unwrap();
+    let mut line = String::new();
+    rd.read_line(&mut line).unwrap();
+    assert!(!line.is_empty(), "server must answer, not close (sent: {msg})");
+    Json::parse(&line).unwrap()
+}
+
+/// Satellite: every malformed input is answered with an error on the
+/// same connection, and the connection keeps serving afterwards.
+#[test]
+fn server_survives_malformed_inputs() {
+    let (_coord, addr) = start_server();
+    let sock = TcpStream::connect(&addr).unwrap();
+    let mut wr = sock.try_clone().unwrap();
+    let mut rd = BufReader::new(sock);
+
+    // bad JSON
+    let r = send_recv(&mut wr, &mut rd, "this is not json");
+    assert!(r.get("error").and_then(Json::as_str).unwrap().contains("bad json"));
+    // unknown policy
+    let r = send_recv(&mut wr, &mut rd, r#"{"prompt":[1,2],"policy":"nope"}"#);
+    assert!(r.get("error").and_then(Json::as_str).unwrap().contains("unknown policy"));
+    // empty prompt
+    let r = send_recv(&mut wr, &mut rd, r#"{"prompt":[]}"#);
+    assert!(r.get("error").and_then(Json::as_str).unwrap().contains("empty prompt"));
+    // oversized max_new
+    let r = send_recv(&mut wr, &mut rd, r#"{"prompt":[1],"max_new":100000000}"#);
+    assert!(r.get("error").and_then(Json::as_str).unwrap().contains("max_new"));
+    // over-long prompt: clean typed admission error
+    let big: Vec<String> = (0..5000).map(|_| "7".to_string()).collect();
+    let r = send_recv(&mut wr, &mut rd, &format!(r#"{{"prompt":[{}]}}"#, big.join(",")));
+    assert!(r.get("error").and_then(Json::as_str).unwrap().contains("prefill bucket"));
+    // v2 cancel for an unknown id
+    let r = send_recv(&mut wr, &mut rd, r#"{"id":5,"cancel":true}"#);
+    assert_eq!(r.get("kind").and_then(Json::as_str), Some("unknown_id"));
+    // v2 open with a bad policy: error frame carrying the id
+    let r = send_recv(&mut wr, &mut rd, r#"{"id":6,"prompt":[1],"policy":"zzz"}"#);
+    assert_eq!(r.get("id").and_then(Json::as_usize), Some(6));
+    assert_eq!(r.get("kind").and_then(Json::as_str), Some("invalid"));
+
+    // after all that, a valid v1 request still round-trips — with
+    // queue_ms now on the wire
+    let r = send_recv(&mut wr, &mut rd, r#"{"prompt":[1,2,3],"max_new":2,"policy":"backbone"}"#);
+    assert!(r.get("error").is_some_and(|e| e == &Json::Null), "unexpected error: {r}");
+    assert!(!r.get("tokens").and_then(Json::as_arr).unwrap().is_empty());
+    assert!(r.get("queue_ms").and_then(Json::as_f64).is_some(), "queue_ms must be on the wire");
+}
+
+/// Satellite: one connection carries a v2 stream and a v1 single-shot
+/// request at the same time; both complete, and the v2 event stream's
+/// token order matches its own done frame.
+#[test]
+fn mixed_v1_v2_connection_roundtrip() {
+    let (_coord, addr) = start_server();
+    let mut rng = Rng::seed_from_u64(36);
+    let sa = generate(Task::PRe, &mut rng, 100);
+    let sb = generate(Task::Gov, &mut rng, 100);
+
+    let sock = TcpStream::connect(&addr).unwrap();
+    let mut wr = sock.try_clone().unwrap();
+    let mut rd = BufReader::new(sock);
+
+    let v2 = WireRequest {
+        prompt: sa.prompt.clone(),
+        max_new: 4,
+        policy: "backbone".into(),
+        id: Some(1),
+        ignore_eos: true,
+        ..Default::default()
+    };
+    wr.write_all(format!("{}\n", v2.to_json()).as_bytes()).unwrap();
+    let v1 = WireRequest {
+        prompt: sb.prompt.clone(),
+        max_new: 3,
+        policy: "backbone".into(),
+        ignore_eos: true,
+        ..Default::default()
+    };
+    wr.write_all(format!("{}\n", v1.to_json()).as_bytes()).unwrap();
+    wr.flush().unwrap();
+
+    let mut v1_resp = None;
+    let mut v2_done = None;
+    let mut v2_streamed: Vec<u32> = vec![];
+    for _ in 0..200 {
+        if v1_resp.is_some() && v2_done.is_some() {
+            break;
+        }
+        let mut line = String::new();
+        rd.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "connection closed mid-conversation");
+        let j = Json::parse(&line).unwrap();
+        match j.get("id").and_then(Json::as_usize) {
+            None => v1_resp = Some(j),
+            Some(1) => match j.get("event").and_then(Json::as_str) {
+                Some("prefilled") | Some("token") => {
+                    v2_streamed.push(j.get("token").and_then(Json::as_usize).unwrap() as u32);
+                }
+                Some("done") => v2_done = Some(j),
+                Some("error") => panic!("v2 stream failed: {j}"),
+                _ => {}
+            },
+            Some(other) => panic!("unexpected stream id {other}"),
+        }
+    }
+    let v1_resp = v1_resp.expect("v1 response must arrive");
+    assert!(v1_resp.get("error").is_some_and(|e| e == &Json::Null), "{v1_resp}");
+    assert_eq!(v1_resp.get("tokens").and_then(Json::as_arr).unwrap().len(), 3);
+
+    let v2_done = v2_done.expect("v2 done frame must arrive");
+    let done_tokens: Vec<u32> = v2_done
+        .get("tokens")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(|v| v.as_usize().map(|x| x as u32))
+        .collect();
+    assert_eq!(done_tokens.len(), 4);
+    assert_eq!(v2_streamed, done_tokens, "frame order must equal the final sequence");
+}
+
+/// Wire-level cancellation through the multiplexing client: the victim
+/// gets a terminal `cancelled` error frame, a sibling stream on the
+/// same connection is unaffected, and the coordinator counts the
+/// reclaim.
+#[test]
+fn wire_cancel_aborts_stream_and_frees_slot() {
+    let (coord, addr) = start_server();
+    let mut rng = Rng::seed_from_u64(37);
+    let sv = generate(Task::PRe, &mut rng, 100);
+    let ss = generate(Task::Gov, &mut rng, 100);
+
+    let client = StreamClient::connect(&addr).unwrap();
+    let victim = client
+        .open(&WireRequest { prompt: sv.prompt, max_new: 1024, ignore_eos: true, ..Default::default() })
+        .unwrap();
+    // wait until the victim is streaming tokens
+    loop {
+        let j = victim.recv_timeout(TIMEOUT).expect("victim stream must produce frames");
+        if j.get("event").and_then(Json::as_str) == Some("token") {
+            break;
+        }
+    }
+    victim.cancel().unwrap();
+    let mut saw_cancelled = false;
+    while let Some(j) = victim.recv_timeout(TIMEOUT) {
+        if j.get("event").and_then(Json::as_str) == Some("error") {
+            assert_eq!(j.get("kind").and_then(Json::as_str), Some("cancelled"));
+            saw_cancelled = true;
+            break;
+        }
+    }
+    assert!(saw_cancelled, "victim must receive a terminal cancelled frame");
+
+    // sibling stream on the same connection completes normally
+    let sibling = client
+        .open(&WireRequest { prompt: ss.prompt, max_new: 3, ignore_eos: true, ..Default::default() })
+        .unwrap();
+    let resp = sibling.wait().unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(resp.tokens.len(), 3);
+
+    let m = coord.metrics.lock().unwrap();
+    assert!(m.requests_cancelled >= 1, "coordinator must count the wire cancel");
+    assert!(m.requests_completed >= 1);
+}
+
+/// The streaming serving bench (the CI smoke gate's third artifact)
+/// writes valid JSON with cleanup proof.
+#[test]
+fn streaming_bench_smoke_writes_valid_json() {
+    let dir = artifacts();
+    let out = std::env::temp_dir().join(format!("flux-stream-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&out).unwrap();
+    let opts = ServingBenchOpts {
+        seq_len: 96,
+        decode_tokens: 4,
+        threads: 2,
+        out_dir: out.clone(),
+        smoke: true,
+    };
+    let p = run_streaming_bench(&dir, &opts).unwrap();
+    let j = Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+    assert_eq!(j.get("measured").and_then(Json::as_bool), Some(true));
+    assert_eq!(j.get("cancelled_cleanup_ok").and_then(Json::as_bool), Some(true));
+    assert!(j.get("tokens_per_s").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(j.get("cancelled_requests").and_then(Json::as_f64).unwrap() >= 1.0);
+    assert!(j.get("metrics_summary").and_then(Json::as_str).unwrap().contains("cancelled="));
+    let _ = std::fs::remove_dir_all(&out);
+}
