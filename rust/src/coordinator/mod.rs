@@ -3,10 +3,11 @@
 //!
 //! This is the L3 systems half of the paper: the Layer Router decides
 //! *what* to compute per layer; the coordinator decides *when*, keeping
-//! decode latency low (decode-priority round-robin over the active set)
-//! while admitting new prefills, and tracking per-request routing
-//! decisions cached at prefill time (paper section 3.3 — zero per-token
-//! routing overhead).
+//! decode latency low (decode-priority batched rounds over the active
+//! set — one `DecodeBatch` engine round-trip produces every active
+//! request's next token, DESIGN.md §9) while admitting new prefills,
+//! and tracking per-request routing decisions cached at prefill time
+//! (paper section 3.3 — zero per-token routing overhead).
 //!
 //! Request lifecycle (DESIGN.md §8): [`Coordinator::open`] returns a
 //! [`SessionHandle`] whose typed event stream mirrors the request's
@@ -468,35 +469,55 @@ fn scheduler_loop(
             continue;
         }
 
-        // --- decode rounds over the active set ---
+        // --- decode rounds over the active set: one batched engine
+        // round-trip per token round (DESIGN.md §9) ---
         for _ in 0..cfg.decode_steps_per_prefill {
-            let mut still_active = VecDeque::new();
-            while let Some(mut a) = active.pop_front() {
-                if a.cancel.is_cancelled() {
-                    retire(&engine, &metrics, a, Retire::Cancelled);
-                    continue;
+            // retirement (cancel / deadline / EOS / stop / max_new) is
+            // checked once per round, before the batch is formed
+            sweep_retired(&engine, &metrics, &mut active);
+            if active.is_empty() {
+                break;
+            }
+            let ids: Vec<u64> = active.iter().map(|a| a.engine_id).collect();
+            let reply = match engine.decode_batch(ids) {
+                Ok(r) => r,
+                Err(e) => {
+                    // engine thread gone: fail the whole active set
+                    let msg = e.to_string();
+                    while let Some(a) = active.pop_front() {
+                        retire(&engine, &metrics, a, Retire::Failed(msg.clone()));
+                    }
+                    break;
                 }
-                if a.deadline.is_some_and(|d| Instant::now() >= d) {
-                    retire(&engine, &metrics, a, Retire::Expired);
-                    continue;
+            };
+            let crate::engine::DecodeBatchReport {
+                tokens, step_us, kv_transfer, fa_group_slots, sa_group_slots, ..
+            } = reply;
+            // one metrics lock per round (was one per token per request),
+            // with the KV totals riding on the batch reply instead of a
+            // separate KvTransferTotals round-trip
+            {
+                let mut m = metrics.lock().unwrap();
+                m.decode_rounds += 1;
+                m.decode_batch_size.record_value(active.len() as u64);
+                m.fa_group_slots += fa_group_slots;
+                m.sa_group_slots += sa_group_slots;
+                for (res, &us) in tokens.iter().zip(&step_us) {
+                    if res.is_ok() {
+                        m.decode.record_us(us);
+                    }
                 }
-                let last = *a.generated.last().unwrap();
-                let done = a.generated.len() >= a.max_new
-                    || (last == EOS && !a.ignore_eos)
-                    || a.stop_tokens.contains(&last);
-                if done {
-                    retire(&engine, &metrics, a, Retire::Done);
-                    continue;
-                }
-                let t0 = Instant::now();
-                match engine.decode_step(a.engine_id) {
+                m.kv_bytes_moved = kv_transfer.0;
+                m.kv_bytes_borrowed = kv_transfer.1;
+            }
+            let mut kept = VecDeque::with_capacity(active.len());
+            for ((mut a, res), &us) in active.drain(..).zip(tokens).zip(&step_us) {
+                match res {
                     Ok(tok) => {
-                        let dt = t0.elapsed().as_micros() as u64;
-                        a.decode_us += dt;
-                        metrics.lock().unwrap().decode.record_us(dt);
+                        a.decode_us += us;
                         a.generated.push(tok);
-                        if a.sink.event(SessionEvent::Token { tok, step_us: dt }) {
-                            still_active.push_back(a);
+                        if a.sink.event(SessionEvent::Token { tok, step_us: us }) {
+                            kept.push_back(a);
                         } else {
                             // the stream's receiver is gone: stop decoding
                             retire(&engine, &metrics, a, Retire::Cancelled);
@@ -507,19 +528,46 @@ fn scheduler_loop(
                     }
                 }
             }
-            active = still_active;
-            if active.is_empty() {
-                break;
-            }
+            active = kept;
         }
-
-        // refresh the zero-copy KV accounting (absolute engine totals)
-        if let Ok((moved, borrowed)) = engine.kv_transfer_totals() {
-            let mut m = metrics.lock().unwrap();
-            m.kv_bytes_moved = moved;
-            m.kv_bytes_borrowed = borrowed;
-        }
+        // finished generations retire before the next admission pass
+        // (same sweep as the round start — the policy lives in one place)
+        sweep_retired(&engine, &metrics, &mut active);
     }
+}
+
+/// Retire every request the next round must not decode: cancelled
+/// sessions, elapsed deadlines, and finished generations (EOS without
+/// `ignore_eos`, a stop token, or `max_new`). Shared by the decode
+/// round start and the post-reply handling so the retirement policy is
+/// written exactly once; survivors keep their order.
+fn sweep_retired(
+    engine: &EngineHandle,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+    active: &mut VecDeque<Active>,
+) {
+    let now = Instant::now();
+    let mut kept = VecDeque::with_capacity(active.len());
+    while let Some(a) = active.pop_front() {
+        if a.cancel.is_cancelled() {
+            retire(engine, metrics, a, Retire::Cancelled);
+            continue;
+        }
+        if a.deadline.is_some_and(|d| now >= d) {
+            retire(engine, metrics, a, Retire::Expired);
+            continue;
+        }
+        let last = *a.generated.last().unwrap();
+        let done = a.generated.len() >= a.max_new
+            || (last == EOS && !a.ignore_eos)
+            || a.stop_tokens.contains(&last);
+        if done {
+            retire(engine, metrics, a, Retire::Done);
+            continue;
+        }
+        kept.push_back(a);
+    }
+    *active = kept;
 }
 
 /// Prefill a pending request and emit `Prefilled`, unless it was

@@ -18,6 +18,10 @@
 //!           -> cache K/V (full or sink+local per routing) -> lm_head
 //! decode:   embed(tok) -> for each layer: qkv exe -> cache.append ->
 //!           attend exe (fa bucket | sa ring) -> lm_head -> next token
+//! batched:  one round over B requests (DESIGN.md §9): per layer, one
+//!           qkv_batch call, then the batch partitioned by that layer's
+//!           routed mode into one attend_batch_fa + one attend_batch_sa
+//!           call (KV staged as views), then one (B,d)x(d,V) lm_head
 //! ```
 
 use std::collections::HashMap;
@@ -54,6 +58,36 @@ pub struct RequestState {
     pub last_token: u32,
 }
 
+/// Outcome of one batched decode round (DESIGN.md §9). Everything the
+/// scheduler needs per token round rides on this one reply — including
+/// the KV-interchange totals, so the decode loop needs no separate
+/// `KvTransferTotals` poll.
+#[derive(Debug)]
+pub struct DecodeBatchReport {
+    /// Per-request results, aligned with the input ids.
+    pub tokens: Vec<Result<u32>>,
+    /// Per-request wall-clock attribution, aligned with `tokens`. The
+    /// batched path computes all tokens together, so each entry is the
+    /// round's wall time divided evenly across the batch, the division
+    /// remainder spread over the leading entries (the amortized
+    /// per-token engine cost — summing over the batch recovers the
+    /// round exactly); the serial fallback times each step individually.
+    pub step_us: Vec<u64>,
+    /// Wall-clock of the whole round.
+    pub total_us: u64,
+    /// Cumulative engine KV-interchange totals
+    /// `(bytes moved, bytes borrowed)` as of the end of this round.
+    pub kv_transfer: (u64, u64),
+    /// Sum over this round's layers of the FA-group sizes — the
+    /// (layer, mode) occupancy of the contiguous kernel groups.
+    pub fa_group_slots: u64,
+    /// Same for the SA (sparse-ring) groups.
+    pub sa_group_slots: u64,
+    /// Whether the batched kernels ran (false = serial fallback:
+    /// `FLUX_BATCH_DECODE=0` or a backend without batch support).
+    pub batched: bool,
+}
+
 /// The engine proper (not `Send`; lives on the executor thread).
 pub struct Engine {
     pub rt: Box<dyn Backend>,
@@ -65,6 +99,10 @@ pub struct Engine {
     /// Stage decode KV arguments as borrowed views instead of cloning
     /// (`FLUX_ZERO_COPY=0` disables, for before/after benchmarking).
     zero_copy: bool,
+    /// Run decode rounds through the batched (layer, mode)-bucketed
+    /// kernels when the backend supports them (`FLUX_BATCH_DECODE=0`
+    /// falls back to the serial per-request walk for A/B benchmarking).
+    batch_decode: bool,
 }
 
 impl Engine {
@@ -100,8 +138,26 @@ impl Engine {
                 }
             }
         }
+        if rt.accepts_decode_batch() {
+            // batched entry points are host-backend-only and never in
+            // the AOT manifest — prepared here when advertised
+            for exe in ["decode_qkv_batch", "attend_batch_fa", "attend_batch_sa", "lm_head_batch"]
+            {
+                rt.load(exe)?;
+            }
+        }
         let zero_copy = std::env::var("FLUX_ZERO_COPY").map(|v| v != "0").unwrap_or(true);
-        Ok(Self { rt, weights, routers, cfg, requests: HashMap::new(), next_id: 0, zero_copy })
+        let batch_decode = std::env::var("FLUX_BATCH_DECODE").map(|v| v != "0").unwrap_or(true);
+        Ok(Self {
+            rt,
+            weights,
+            routers,
+            cfg,
+            requests: HashMap::new(),
+            next_id: 0,
+            zero_copy,
+            batch_decode,
+        })
     }
 
     pub fn cfg(&self) -> &MetaConfig {
@@ -116,6 +172,16 @@ impl Engine {
 
     pub fn zero_copy(&self) -> bool {
         self.zero_copy
+    }
+
+    /// Toggle the batched decode path (the bench harness A/Bs batched
+    /// vs serial in-process; serving leaves this on).
+    pub fn set_batch_decode(&mut self, on: bool) {
+        self.batch_decode = on;
+    }
+
+    pub fn batch_decode(&self) -> bool {
+        self.batch_decode
     }
 
     /// Set the backend kernel worker count (no-op for device backends).
@@ -440,6 +506,331 @@ impl Engine {
         Ok(next)
     }
 
+    /// One decode step for every request in `ids` — a single token
+    /// round (DESIGN.md §9). Per-request results are aligned with the
+    /// input order; a failed request never poisons its batchmates.
+    pub fn decode_batch(&mut self, ids: &[u64]) -> Vec<Result<u32>> {
+        self.decode_batch_report(ids).tokens
+    }
+
+    /// [`Engine::decode_batch`] plus the round's timing, KV-transfer
+    /// totals and per-mode group occupancy — the full scheduler reply.
+    pub fn decode_batch_report(&mut self, ids: &[u64]) -> DecodeBatchReport {
+        if self.batch_decode && self.rt.accepts_decode_batch() {
+            self.decode_batch_batched(ids)
+        } else {
+            self.decode_batch_serial(ids)
+        }
+    }
+
+    /// Serial fallback: B independent `decode_step` walks (backends
+    /// without batch support, or `FLUX_BATCH_DECODE=0` for A/B runs).
+    fn decode_batch_serial(&mut self, ids: &[u64]) -> DecodeBatchReport {
+        let t0 = Instant::now();
+        let mut tokens = Vec::with_capacity(ids.len());
+        let mut step_us = Vec::with_capacity(ids.len());
+        let (mut fa_group_slots, mut sa_group_slots) = (0u64, 0u64);
+        for &id in ids {
+            if let Some(state) = self.requests.get(&id) {
+                for cache in &state.caches {
+                    match cache {
+                        LayerCache::Full(_) => fa_group_slots += 1,
+                        LayerCache::Sparse(_) => sa_group_slots += 1,
+                    }
+                }
+            }
+            let t = Instant::now();
+            tokens.push(self.decode_step(id));
+            step_us.push(t.elapsed().as_micros() as u64);
+        }
+        DecodeBatchReport {
+            tokens,
+            step_us,
+            total_us: t0.elapsed().as_micros() as u64,
+            kv_transfer: self.kv_transfer_totals(),
+            fa_group_slots,
+            sa_group_slots,
+            batched: false,
+        }
+    }
+
+    /// The batched decode hot path. Per layer, the batch is partitioned
+    /// by that layer's routed cache layout into an FA group (full
+    /// caches, per-request buckets) and an SA group (sparse rings) —
+    /// routing is per-request per-layer, so this is exactly the paper's
+    /// contiguous same-mode grouping. Each group runs as ONE backend
+    /// call with every request's KV staged zero-copy; the round ends in
+    /// one `(B,d)×(d,V)` lm_head. Token order is bit-identical to B
+    /// independent serial `decode_step` loops (pinned by
+    /// `tests/batched.rs`).
+    fn decode_batch_batched(&mut self, ids: &[u64]) -> DecodeBatchReport {
+        let t0 = Instant::now();
+        let n_layers = self.cfg.model.n_layers;
+        let d = self.cfg.model.d_model;
+        let (nh, dd) = (self.cfg.model.n_heads, self.cfg.model.head_dim);
+        let hd = nh * dd;
+        let sa_buf = self.cfg.sa_buf;
+
+        // Detach the batch's states from the request map so the layer
+        // loop can append to one slot's caches while staging borrowed
+        // views of the others; everything is re-attached before return.
+        let mut tokens: Vec<Option<Result<u32>>> =
+            std::iter::repeat_with(|| None).take(ids.len()).collect();
+        let mut slots: Vec<(usize, u64, RequestState)> = Vec::with_capacity(ids.len());
+        for (i, &id) in ids.iter().enumerate() {
+            match self.requests.remove(&id) {
+                Some(s) => slots.push((i, id, s)),
+                None => tokens[i] = Some(Err(anyhow::anyhow!("unknown request {id}"))),
+            }
+        }
+        let n_slots = slots.len();
+        let mut hidden: Vec<Vec<f32>> =
+            slots.iter().map(|(_, _, s)| self.weights.embed_one(s.last_token).data).collect();
+        let mut failed: Vec<Option<String>> = vec![None; n_slots];
+        let (mut fa_group_slots, mut sa_group_slots) = (0u64, 0u64);
+
+        for layer in 0..n_layers {
+            let live: Vec<usize> = (0..n_slots).filter(|&si| failed[si].is_none()).collect();
+            if live.is_empty() {
+                break;
+            }
+            let bb = live.len();
+            let w = &self.weights.layers[layer];
+
+            // stage 1: one batched project + RoPE over every live row
+            let mut x_data = Vec::with_capacity(bb * d);
+            let mut pos = Vec::with_capacity(bb);
+            for &si in &live {
+                x_data.extend_from_slice(&hidden[si]);
+                pos.push(slots[si].2.n_tokens as i32);
+            }
+            let x = HostTensor::new(vec![bb, d], x_data);
+            let qkv = match self.rt.run(
+                "decode_qkv_batch",
+                &[
+                    Arg::F32(&x),
+                    Arg::I32(&pos),
+                    Arg::F32(&w.norm1),
+                    Arg::F32(&w.wq),
+                    Arg::F32(&w.wk),
+                    Arg::F32(&w.wv),
+                ],
+            ) {
+                Ok(out) => out,
+                Err(e) => {
+                    let msg = e.to_string();
+                    for &si in &live {
+                        failed[si] = Some(msg.clone());
+                    }
+                    break;
+                }
+            };
+            let (q_all, k_all, v_all) = (&qkv[0], &qkv[1], &qkv[2]);
+
+            // append the new token's K/V, partitioning the batch by
+            // this layer's routed cache layout
+            let mut fa_rows: Vec<usize> = Vec::new(); // indices into `live`
+            let mut sa_rows: Vec<usize> = Vec::new();
+            for (row, &si) in live.iter().enumerate() {
+                let k_new = &k_all.data[row * hd..(row + 1) * hd];
+                let v_new = &v_all.data[row * hd..(row + 1) * hd];
+                match &mut slots[si].2.caches[layer] {
+                    LayerCache::Full(c) => {
+                        c.append(k_new, v_new);
+                        fa_rows.push(row);
+                    }
+                    LayerCache::Sparse(c) => {
+                        c.append(k_new, v_new);
+                        sa_rows.push(row);
+                    }
+                }
+            }
+
+            // stage 2: one batched attend per (layer, mode) group
+            for (sparse, rows) in [(false, &fa_rows), (true, &sa_rows)] {
+                if rows.is_empty() {
+                    continue;
+                }
+                enum Kv {
+                    View,
+                    Owned(usize),
+                }
+                struct Member {
+                    row: usize,
+                    kv: Kv,
+                    valid: usize,
+                }
+                let mut owned: Vec<(HostTensor, HostTensor)> = Vec::new();
+                let mut members: Vec<Member> = Vec::with_capacity(rows.len());
+                let (mut moved, mut borrowed) = (0u64, 0u64);
+                for &row in rows {
+                    let si = live[row];
+                    match &slots[si].2.caches[layer] {
+                        LayerCache::Full(c) => {
+                            let Some(bucket) = self.cfg.decode_attend_bucket(c.len(), c.capacity())
+                            else {
+                                failed[si] = Some(format!("KV overflow at {}", c.len()));
+                                continue;
+                            };
+                            let bytes = (2 * nh * bucket * dd * 4) as u64;
+                            if self.zero_copy && bucket == c.capacity() {
+                                members.push(Member { row, kv: Kv::View, valid: c.len() });
+                                borrowed += bytes;
+                            } else {
+                                owned.push(c.as_tensors(bucket));
+                                members.push(Member {
+                                    row,
+                                    kv: Kv::Owned(owned.len() - 1),
+                                    valid: c.len(),
+                                });
+                                moved += bytes;
+                            }
+                        }
+                        LayerCache::Sparse(c) => {
+                            let bytes = (2 * nh * sa_buf * dd * 4) as u64;
+                            if self.zero_copy {
+                                members.push(Member { row, kv: Kv::View, valid: c.len() });
+                                borrowed += bytes;
+                            } else {
+                                let (kt, vt, _) = c.as_tensors();
+                                owned.push((kt, vt));
+                                members.push(Member {
+                                    row,
+                                    kv: Kv::Owned(owned.len() - 1),
+                                    valid: c.len(),
+                                });
+                                moved += bytes;
+                            }
+                        }
+                    }
+                }
+                if members.is_empty() {
+                    continue;
+                }
+                let bg = members.len();
+                let mut xg_data = Vec::with_capacity(bg * d);
+                let mut qg_data = Vec::with_capacity(bg * hd);
+                let mut valid_arr: Vec<i32> = Vec::with_capacity(bg);
+                for mem in &members {
+                    xg_data.extend_from_slice(&x.data[mem.row * d..(mem.row + 1) * d]);
+                    qg_data.extend_from_slice(&q_all.data[mem.row * hd..(mem.row + 1) * hd]);
+                    valid_arr.push(mem.valid as i32);
+                }
+                let xg = HostTensor::new(vec![bg, d], xg_data);
+                let qg = HostTensor::new(vec![bg, nh, dd], qg_data);
+                let exe = if sparse { "attend_batch_sa" } else { "attend_batch_fa" };
+                let mut call: Vec<Arg> = vec![
+                    Arg::F32(&xg),
+                    Arg::F32(&qg),
+                    Arg::I32(&valid_arr),
+                    Arg::F32(&w.wo),
+                    Arg::F32(&w.norm2),
+                    Arg::F32(&w.w_ff1),
+                    Arg::F32(&w.w_ff2),
+                ];
+                for mem in &members {
+                    match &mem.kv {
+                        Kv::View => match &slots[live[mem.row]].2.caches[layer] {
+                            LayerCache::Full(c) => {
+                                let (kt, vt) = c.view();
+                                call.push(Arg::F32View(kt));
+                                call.push(Arg::F32View(vt));
+                            }
+                            LayerCache::Sparse(c) => {
+                                let (kt, vt, _) = c.view();
+                                call.push(Arg::F32View(kt));
+                                call.push(Arg::F32View(vt));
+                            }
+                        },
+                        Kv::Owned(j) => {
+                            call.push(Arg::F32(&owned[*j].0));
+                            call.push(Arg::F32(&owned[*j].1));
+                        }
+                    }
+                }
+                match self.rt.run(exe, &call) {
+                    Ok(out) => {
+                        self.rt.note_kv_transfer(exe, moved, borrowed);
+                        let y = &out[0];
+                        for (g, mem) in members.iter().enumerate() {
+                            hidden[live[mem.row]].copy_from_slice(&y.data[g * d..(g + 1) * d]);
+                        }
+                        if sparse {
+                            sa_group_slots += bg as u64;
+                        } else {
+                            fa_group_slots += bg as u64;
+                        }
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        for mem in &members {
+                            failed[live[mem.row]] = Some(msg.clone());
+                        }
+                    }
+                }
+            }
+        }
+
+        // the whole round's lm_head is one (B,d)×(d,V) matmul
+        let live: Vec<usize> = (0..n_slots).filter(|&si| failed[si].is_none()).collect();
+        if !live.is_empty() {
+            let bb = live.len();
+            let mut x_data = Vec::with_capacity(bb * d);
+            for &si in &live {
+                x_data.extend_from_slice(&hidden[si]);
+            }
+            let x = HostTensor::new(vec![bb, d], x_data);
+            match self.rt.run(
+                "lm_head_batch",
+                &[Arg::F32(&x), Arg::F32(&self.weights.norm_f), Arg::F32(&self.weights.lm_head)],
+            ) {
+                Ok(out) => {
+                    let logits = &out[0];
+                    let v = self.cfg.model.vocab_size;
+                    for (g, &si) in live.iter().enumerate() {
+                        let tok = argmax(&logits.data[g * v..(g + 1) * v]);
+                        let (i, _, state) = &mut slots[si];
+                        state.n_tokens += 1;
+                        state.last_token = tok;
+                        tokens[*i] = Some(Ok(tok));
+                    }
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    for &si in &live {
+                        failed[si] = Some(msg.clone());
+                    }
+                }
+            }
+        }
+
+        // re-attach states and materialize per-slot failures
+        for (si, (i, id, state)) in slots.into_iter().enumerate() {
+            if let Some(msg) = failed[si].take() {
+                tokens[i] = Some(Err(anyhow::anyhow!(msg)));
+            }
+            self.requests.insert(id, state);
+        }
+        let total_us = t0.elapsed().as_micros() as u64;
+        // amortized attribution: each slot gets total/n, with the
+        // division remainder spread over the first slots so the batch
+        // sums back to exactly the round's wall time
+        let n = ids.len().max(1) as u64;
+        let (share, rem) = (total_us / n, total_us % n);
+        DecodeBatchReport {
+            tokens: tokens
+                .into_iter()
+                .map(|t| t.unwrap_or_else(|| Err(anyhow::anyhow!("request dropped from batch"))))
+                .collect(),
+            step_us: (0..ids.len() as u64).map(|i| share + u64::from(i < rem)).collect(),
+            total_us,
+            kv_transfer: self.kv_transfer_totals(),
+            fa_group_slots,
+            sa_group_slots,
+            batched: true,
+        }
+    }
+
     /// Convenience: prefill + greedy decode until EOS or `max_new`.
     pub fn generate(
         &mut self,
@@ -527,7 +918,17 @@ pub enum EngineJob {
         id: u64,
         reply: std::sync::mpsc::Sender<Result<u32>>,
     },
+    /// One token round over the whole active set: per-request results,
+    /// timings, KV totals and group occupancy ride on a single reply —
+    /// the scheduler's one engine round-trip per decode round.
+    DecodeBatch {
+        ids: Vec<u64>,
+        reply: std::sync::mpsc::Sender<DecodeBatchReport>,
+    },
     /// Snapshot of the KV-interchange counters (bytes moved, borrowed).
+    /// The decode loop no longer polls this (totals ride on
+    /// [`EngineJob::DecodeBatch`] replies); kept for API compatibility
+    /// and tests.
     KvTransferTotals {
         reply: std::sync::mpsc::Sender<(u64, u64)>,
     },
@@ -576,6 +977,9 @@ impl EngineHandle {
                         EngineJob::DecodeStep { id, reply } => {
                             let _ = reply.send(engine.decode_step(id));
                         }
+                        EngineJob::DecodeBatch { ids, reply } => {
+                            let _ = reply.send(engine.decode_batch_report(&ids));
+                        }
                         EngineJob::KvTransferTotals { reply } => {
                             let _ = reply.send(engine.kv_transfer_totals());
                         }
@@ -614,6 +1018,18 @@ impl EngineHandle {
             .send(EngineJob::DecodeStep { id, reply })
             .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
         rx.recv()?
+    }
+
+    /// One batched token round over `ids` — a single engine round-trip
+    /// producing every active request's next token (DESIGN.md §9). The
+    /// outer `Result` is channel liveness; per-request failures are in
+    /// [`DecodeBatchReport::tokens`].
+    pub fn decode_batch(&self, ids: Vec<u64>) -> Result<DecodeBatchReport> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(EngineJob::DecodeBatch { ids, reply })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        Ok(rx.recv()?)
     }
 
     /// KV-interchange counters `(bytes moved, bytes borrowed)` summed

@@ -15,6 +15,13 @@
 //! step stages its KV arguments without cloning whenever the full
 //! cache's capacity is a published bucket (the common case — capacities
 //! and buckets grow in lockstep), and always for the sparse ring.
+//!
+//! Because every request owns its own cache objects, a batched decode
+//! round (DESIGN.md §9) stages many requests' views into ONE
+//! `attend_batch_{fa,sa}` call simultaneously — the borrows are
+//! per-cache, so multi-request staging needs no copying or locking, and
+//! per-request bucket sizes may differ within the same call (the view's
+//! shape carries the bucket).
 
 use crate::runtime::{HostTensor, TensorView};
 

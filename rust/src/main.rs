@@ -12,6 +12,8 @@
 //!                                      [--rate R] [--policy P]
 //!   flux [--artifacts DIR] bench [--smoke] [--seq-len N] [--tokens N]
 //!                                [--threads N] [--out DIR]
+//!        (includes the batched-decode batch-size sweep; serving honors
+//!        FLUX_BATCH_DECODE=0 to force the serial per-request walk)
 //!   flux [--artifacts DIR] synth [--seed N]
 //!   flux [--artifacts DIR] info
 //!
@@ -259,6 +261,7 @@ fn main() -> Result<()> {
         _ => {
             eprintln!("usage: flux [--artifacts DIR] <serve|generate|experiment|bench-serve|bench|synth|info> [flags]");
             eprintln!("  generate --stream streams tokens through the session API as they decode");
+            eprintln!("  bench sweeps batched decode at batch sizes 1/2/4/8 (FLUX_BATCH_DECODE=0 forces serial)");
             eprintln!("experiment ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves all");
             Ok(())
         }

@@ -85,6 +85,18 @@ pub struct ServingMetrics {
     /// expired) — the wire-level work distribution, including partial
     /// streams shed by cancellation.
     pub stream_tokens: LatencyHistogram,
+    /// Requests per batched decode round (value histogram, not µs) —
+    /// how full the one-round-per-token batches actually run.
+    pub decode_batch_size: LatencyHistogram,
+    /// Batched decode rounds executed (each is exactly one engine
+    /// round-trip in the scheduler loop).
+    pub decode_rounds: u64,
+    /// Sum over decode rounds and layers of the FA-group sizes — with
+    /// `sa_group_slots`, the per-mode occupancy of the contiguous
+    /// (layer, mode) kernel groups, i.e. the FA/SA mix of live traffic.
+    pub fa_group_slots: u64,
+    /// Same for the SA (sparse-ring) groups.
+    pub sa_group_slots: u64,
     /// KV-cache bytes physically copied while staging decode arguments
     /// (absolute engine totals; ~0 on the zero-copy fast path)
     pub kv_bytes_moved: u64,
@@ -118,7 +130,8 @@ impl ServingMetrics {
         format!(
             "requests={} rejected={} cancelled={} expired={} failed={} tokens={} \
              stream_p50={}tok ttft_p50={:.1}ms ttft_p95={:.1}ms \
-             decode_p50={:.2}ms decode_tput={:.1}tok/s kv_moved={}B kv_borrowed={}B",
+             decode_p50={:.2}ms decode_tput={:.1}tok/s rounds={} batch_p50={}req \
+             fa_slots={} sa_slots={} kv_moved={}B kv_borrowed={}B",
             self.requests_completed,
             self.requests_rejected,
             self.requests_cancelled,
@@ -130,6 +143,10 @@ impl ServingMetrics {
             self.ttft.p95_us() as f64 / 1e3,
             self.decode.p50_us() as f64 / 1e3,
             self.decode_throughput_tok_s(),
+            self.decode_rounds,
+            self.decode_batch_size.p50_us(),
+            self.fa_group_slots,
+            self.sa_group_slots,
             self.kv_bytes_moved,
             self.kv_bytes_borrowed,
         )
@@ -171,6 +188,21 @@ mod tests {
         assert!(s.contains("cancelled=2"), "{s}");
         assert!(s.contains("expired=1"), "{s}");
         assert!(s.contains("stream_p50="), "{s}");
+    }
+
+    #[test]
+    fn summary_reports_batched_decode_occupancy() {
+        let mut m = ServingMetrics::default();
+        m.decode_rounds = 5;
+        m.decode_batch_size.record_value(4);
+        m.decode_batch_size.record_value(2);
+        m.fa_group_slots = 12;
+        m.sa_group_slots = 8;
+        let s = m.summary();
+        assert!(s.contains("rounds=5"), "{s}");
+        assert!(s.contains("batch_p50="), "{s}");
+        assert!(s.contains("fa_slots=12"), "{s}");
+        assert!(s.contains("sa_slots=8"), "{s}");
     }
 
     #[test]

@@ -190,6 +190,18 @@ pub trait Backend {
     fn accepts_prefill_valid_arg(&self) -> bool {
         false
     }
+
+    /// Whether the backend serves the batched decode entry points
+    /// (`decode_qkv_batch`, `attend_batch_fa`, `attend_batch_sa`,
+    /// `lm_head_batch` — DESIGN.md §9), which take a whole same-mode
+    /// request group per call with per-request KV cache arguments of
+    /// possibly different bucket sizes. The AOT artifacts are lowered
+    /// per request with fixed signatures, so device backends default to
+    /// `false`; the engine then degrades transparently to the serial
+    /// per-request decode walk.
+    fn accepts_decode_batch(&self) -> bool {
+        false
+    }
 }
 
 /// Default kernel worker count: `FLUX_THREADS` when set (clamped to

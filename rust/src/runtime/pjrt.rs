@@ -147,4 +147,12 @@ impl Backend for PjrtBackend {
         st.kv_bytes_moved += bytes_moved;
         st.kv_bytes_borrowed += bytes_borrowed;
     }
+
+    /// The AOT artifacts are lowered per request with fixed signatures;
+    /// the variable-arity batched decode entry points (DESIGN.md §9)
+    /// are a host-backend capability. The engine degrades to the serial
+    /// per-request decode walk here.
+    fn accepts_decode_batch(&self) -> bool {
+        false
+    }
 }

@@ -20,7 +20,10 @@
 //!
 //! Executable name contract (same names the PJRT artifacts use):
 //!   `layer_{fa,ssa,ta,xa}_prefill_{S}`, `decode_qkv`,
-//!   `decode_attend_fa_{K}`, `decode_attend_sa`, `router`, `lm_head`.
+//!   `decode_attend_fa_{K}`, `decode_attend_sa`, `router`, `lm_head`;
+//! host-backend-only batched decode entry points (DESIGN.md §9):
+//!   `decode_qkv_batch`, `attend_batch_fa`, `attend_batch_sa`,
+//!   `lm_head_batch` — advertised via `Backend::accepts_decode_batch`.
 
 use std::collections::{HashMap, HashSet};
 use std::time::Instant;
@@ -44,6 +47,12 @@ enum ExeKind {
     Prefill { mode: Mode, bucket: usize },
     DecodeQkv,
     DecodeAttend { kbuf: usize },
+    /// batched stage-1 projection over a whole decode round (B rows)
+    DecodeQkvBatch,
+    /// batched stage-2 attend over one same-mode (layer, mode) group;
+    /// per-request KV buckets ride on the argument shapes
+    AttendBatch { sparse: bool },
+    LmHeadBatch,
     Router,
     LmHead,
 }
@@ -109,6 +118,18 @@ impl RefBackend {
         if exe == "decode_attend_sa" {
             return Ok(ExeKind::DecodeAttend { kbuf: self.cfg.sa_buf });
         }
+        if exe == "decode_qkv_batch" {
+            return Ok(ExeKind::DecodeQkvBatch);
+        }
+        if exe == "attend_batch_fa" {
+            return Ok(ExeKind::AttendBatch { sparse: false });
+        }
+        if exe == "attend_batch_sa" {
+            return Ok(ExeKind::AttendBatch { sparse: true });
+        }
+        if exe == "lm_head_batch" {
+            return Ok(ExeKind::LmHeadBatch);
+        }
         if exe == "router" {
             return Ok(ExeKind::Router);
         }
@@ -123,6 +144,9 @@ impl RefBackend {
             ExeKind::Prefill { mode, bucket } => self.prefill_layer(mode, bucket, args),
             ExeKind::DecodeQkv => self.decode_qkv(args),
             ExeKind::DecodeAttend { kbuf } => self.decode_attend(kbuf, args),
+            ExeKind::DecodeQkvBatch => self.decode_qkv_batch(args),
+            ExeKind::AttendBatch { sparse } => self.attend_batch(sparse, args),
+            ExeKind::LmHeadBatch => self.lm_head_batch(args),
             ExeKind::Router => self.router_mlp(args),
             ExeKind::LmHead => self.lm_head(args),
         }
@@ -429,6 +453,186 @@ impl RefBackend {
         Ok(vec![HostTensor::new(vec![d], x2)])
     }
 
+    /// Batched decode stage 1 over `B` requests (DESIGN.md §9).
+    /// Args: x (B,d), pos (B,) i32, norm1 (d), wq/wk/wv (d,d).
+    /// Returns q, k, v each (B, H, D). Row `b` is bit-identical to
+    /// `decode_qkv` over request `b` alone: RMSNorm, the per-output-
+    /// element matmul accumulation order and RoPE are all per-row.
+    fn decode_qkv_batch(&self, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let m = &self.cfg.model;
+        let (d, h, dd) = (m.d_model, m.n_heads, m.head_dim);
+        anyhow::ensure!(args.len() == 6, "decode_qkv_batch expects 6 args, got {}", args.len());
+        let x = args[0].f32()?;
+        anyhow::ensure!(
+            x.shape.len() == 2 && x.shape[1] == d && x.shape[0] >= 1,
+            "decode_qkv_batch x: expected (B, {d}), got {:?}",
+            x.shape
+        );
+        let bb = x.shape[0];
+        let pos = args[1].i32()?;
+        anyhow::ensure!(pos.len() == bb, "pos must carry one entry per batch row");
+        let norm1 = args[2].f32()?;
+        let wq = args[3].f32()?;
+        let wk = args[4].f32()?;
+        let wv = args[5].f32()?;
+        want(wq, &[d, d], "wq")?;
+        let nt = self.threads;
+
+        let xn = rms_norm_rows(&x.data, &norm1.data, bb, d, m.rms_eps as f32);
+        let mut q = matmul_mt(&xn, &wq.data, bb, d, d, nt);
+        let mut k = matmul_mt(&xn, &wk.data, bb, d, d, nt);
+        let v = matmul_mt(&xn, &wv.data, bb, d, d, nt);
+        // row b reinterpreted as (H, D) is the same contiguous buffer
+        for (b, &p) in pos.iter().enumerate() {
+            for hh in 0..h {
+                let o = b * d + hh * dd;
+                rope_in_place(&mut q[o..o + dd], p as usize, m.rope_theta);
+                rope_in_place(&mut k[o..o + dd], p as usize, m.rope_theta);
+            }
+        }
+        Ok(vec![
+            HostTensor::new(vec![bb, h, dd], q),
+            HostTensor::new(vec![bb, h, dd], k),
+            HostTensor::new(vec![bb, h, dd], v),
+        ])
+    }
+
+    /// Batched decode stage 2 over one same-mode request group — the
+    /// paper's contiguous (layer, mode) bucketing (DESIGN.md §9).
+    /// Args: x (B,d), q (B,H,D), valid (B,) i32, wo (d,d), norm2 (d),
+    /// w_ff1 (d,ff), w_ff2 (ff,d), then one (k_cache, v_cache) pair per
+    /// request, each (H, K_b, D) — owned or borrowed views, and K_b may
+    /// differ per request (FA requests at different cache depths share
+    /// one call; SA requests all use the ring's SA_BUF).
+    /// Returns x_out (B,d). Attention parallelizes over the
+    /// (request, head) product; every output row keeps the serial
+    /// accumulation order, so row `b` is bit-identical to
+    /// `decode_attend_{fa_K,sa}` over request `b` alone.
+    fn attend_batch(&self, sparse: bool, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let m = &self.cfg.model;
+        let (d, h, dd, ff) = (m.d_model, m.n_heads, m.head_dim, m.d_ff);
+        anyhow::ensure!(
+            args.len() >= 9 && (args.len() - 7) % 2 == 0,
+            "attend_batch expects 7 shared args + per-request (k, v) pairs, got {}",
+            args.len()
+        );
+        let bb = (args.len() - 7) / 2;
+        let x = args[0].f32()?;
+        want(x, &[bb, d], "attend_batch x")?;
+        let q = args[1].f32()?;
+        want(q, &[bb, h, dd], "attend_batch q")?;
+        let valid_arr = args[2].i32()?;
+        anyhow::ensure!(valid_arr.len() == bb, "valid must carry one entry per batch row");
+        let wo = args[3].f32()?;
+        let norm2 = args[4].f32()?;
+        let w_ff1 = args[5].f32()?;
+        let w_ff2 = args[6].f32()?;
+        want(wo, &[d, d], "wo")?;
+        want(w_ff1, &[d, ff], "w_ff1")?;
+        want(w_ff2, &[ff, d], "w_ff2")?;
+
+        // per-request caches: bucket sizes ride on the argument shapes
+        let mut caches = Vec::with_capacity(bb);
+        let mut max_valid = 0usize;
+        let mut attn_pairs = 0usize;
+        for bi in 0..bb {
+            let kc = args[7 + 2 * bi].view()?;
+            let vc = args[8 + 2 * bi].view()?;
+            anyhow::ensure!(
+                kc.shape.len() == 3 && kc.shape[0] == h && kc.shape[2] == dd,
+                "attend_batch k cache {bi}: expected (H, K, D), got {:?}",
+                kc.shape
+            );
+            let kbuf = kc.shape[1];
+            if sparse {
+                anyhow::ensure!(
+                    kbuf == self.cfg.sa_buf,
+                    "sparse cache {bi}: buffer {kbuf} != SA_BUF {}",
+                    self.cfg.sa_buf
+                );
+            } else {
+                anyhow::ensure!(
+                    self.cfg.decode_kv_buckets.contains(&kbuf),
+                    "decode bucket {kbuf} not in config buckets {:?}",
+                    self.cfg.decode_kv_buckets
+                );
+            }
+            want_view(&vc, &[h, kbuf, dd], "attend_batch v cache")?;
+            let valid = valid_arr[bi] as usize;
+            anyhow::ensure!((1..=kbuf).contains(&valid), "valid {valid} out of range 1..={kbuf}");
+            max_valid = max_valid.max(valid);
+            attn_pairs += valid;
+            caches.push((kc, vc, kbuf, valid));
+        }
+
+        // attention over the (request, head) product: B*H disjoint
+        // output rows instead of a single request's H — far better
+        // worker utilization at small H, still bit-identical
+        let js_all: Vec<usize> = (0..max_valid).collect();
+        let mut ctx = vec![0f32; bb * d];
+        let rows = bb * h;
+        let q_data = &q.data;
+        par_rows(
+            par_threads(self.threads, rows, attn_pairs * h * dd),
+            &mut ctx,
+            rows,
+            dd,
+            |r, out| {
+                let (bi, hh) = (r / h, r % h);
+                let (kc, vc, kbuf, valid) = caches[bi];
+                let base = hh * kbuf * dd;
+                attend_one(
+                    &q_data[r * dd..(r + 1) * dd],
+                    &kc.data[base..base + kbuf * dd],
+                    &vc.data[base..base + kbuf * dd],
+                    dd,
+                    &js_all[..valid],
+                    out,
+                );
+            },
+        );
+
+        // row r = bi*H + hh lands at ctx[bi*d + hh*D] — already the
+        // merged (B, d) layout the serial path builds per request
+        let eps = m.rms_eps as f32;
+        let nt = self.threads;
+        let attn_out = matmul_mt(&ctx, &wo.data, bb, d, d, nt);
+        let mut x2: Vec<f32> = x.data.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
+        let xn2 = rms_norm_rows(&x2, &norm2.data, bb, d, eps);
+        let mut mid = matmul_mt(&xn2, &w_ff1.data, bb, d, ff, nt);
+        for v in mid.iter_mut() {
+            *v = gelu(*v);
+        }
+        let ffo = matmul_mt(&mid, &w_ff2.data, bb, ff, d, nt);
+        for (a, b) in x2.iter_mut().zip(&ffo) {
+            *a += b;
+        }
+        Ok(vec![HostTensor::new(vec![bb, d], x2)])
+    }
+
+    /// Final norm + vocabulary projection for a whole decode round:
+    /// x (B,d) -> logits (B,V) in one (B,d)×(d,V) matmul. Each row is
+    /// bit-identical to a per-request `lm_head` call.
+    fn lm_head_batch(&self, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let m = &self.cfg.model;
+        let (d, v) = (m.d_model, m.vocab_size);
+        anyhow::ensure!(args.len() == 3, "lm_head_batch expects 3 args, got {}", args.len());
+        let x = args[0].view()?;
+        anyhow::ensure!(
+            x.shape.len() == 2 && x.shape[1] == d && x.shape[0] >= 1,
+            "lm_head_batch x: expected (B, {d}), got {:?}",
+            x.shape
+        );
+        let bb = x.shape[0];
+        let norm_f = args[1].f32()?;
+        let w = args[2].f32()?;
+        want(norm_f, &[d], "norm_f")?;
+        want(w, &[d, v], "lm_head weight")?;
+        let xn = rms_norm_rows(x.data, &norm_f.data, bb, d, m.rms_eps as f32);
+        let logits = matmul_mt(&xn, &w.data, bb, d, v, self.threads);
+        Ok(vec![HostTensor::new(vec![bb, v], logits)])
+    }
+
     /// Layer-Router MLP: desc (2d,) -> logits (2,) in [SA, FA] order.
     fn router_mlp(&self, args: &[Arg]) -> Result<Vec<HostTensor>> {
         let d2 = 2 * self.cfg.model.d_model;
@@ -520,6 +724,10 @@ impl Backend for RefBackend {
     }
 
     fn accepts_prefill_valid_arg(&self) -> bool {
+        true
+    }
+
+    fn accepts_decode_batch(&self) -> bool {
         true
     }
 }
@@ -788,6 +996,17 @@ mod tests {
         // sa buffer size comes from the config, not the name
         let sa = b.parse_exe("decode_attend_sa").unwrap();
         assert_eq!(sa, ExeKind::DecodeAttend { kbuf: b.cfg.sa_buf });
+        // batched decode entry points (buckets ride on argument shapes)
+        assert!(matches!(b.parse_exe("decode_qkv_batch").unwrap(), ExeKind::DecodeQkvBatch));
+        assert!(matches!(
+            b.parse_exe("attend_batch_fa").unwrap(),
+            ExeKind::AttendBatch { sparse: false }
+        ));
+        assert!(matches!(
+            b.parse_exe("attend_batch_sa").unwrap(),
+            ExeKind::AttendBatch { sparse: true }
+        ));
+        assert!(matches!(b.parse_exe("lm_head_batch").unwrap(), ExeKind::LmHeadBatch));
         assert!(b.parse_exe("layer_fa_prefill_77").is_err()); // not a bucket
         assert!(b.parse_exe("warp_drive").is_err());
     }
@@ -1003,5 +1222,180 @@ mod tests {
         assert_eq!(o1[1].shape, vec![m.n_heads, s, m.head_dim]);
         assert_eq!(o1, o2, "reference kernels must be bitwise deterministic");
         assert!(o1[0].data.iter().all(|v| v.is_finite()));
+    }
+
+    /// The batched-decode determinism contract at the kernel level:
+    /// every row of `decode_qkv_batch` / `attend_batch_fa` /
+    /// `lm_head_batch` must be bit-identical to the per-request serial
+    /// executable over that row alone — including rows at *different*
+    /// KV buckets in the same attend call, and for every worker count.
+    #[test]
+    fn batch_kernels_rowwise_bit_identical_to_serial() {
+        let cfg = MetaConfig::from_json_str(DEFAULT_META, PathBuf::from("/tmp")).unwrap();
+        let m = cfg.model.clone();
+        let (d, h, dd, ff) = (m.d_model, m.n_heads, m.head_dim, m.d_ff);
+        let buckets = [128usize, 256, 128]; // mixed buckets in one call
+        let valids = [100usize, 200, 57];
+        let bb = buckets.len();
+
+        let norm1 = HostTensor::new(vec![d], vec![1.0; d]);
+        let wq = mk_tensor(vec![d, d], 41);
+        let wk = mk_tensor(vec![d, d], 42);
+        let wv = mk_tensor(vec![d, d], 43);
+        let wo = mk_tensor(vec![d, d], 44);
+        let norm2 = norm1.clone();
+        let f1 = mk_tensor(vec![d, ff], 45);
+        let f2 = mk_tensor(vec![ff, d], 46);
+        let norm_f = norm1.clone();
+        let lm_w = mk_tensor(vec![d, m.vocab_size], 47);
+        let x_all = mk_tensor(vec![bb, d], 48);
+        let pos_all: Vec<i32> = vec![100, 200, 57];
+        let kcs: Vec<HostTensor> =
+            (0..bb).map(|i| mk_tensor(vec![h, buckets[i], dd], 50 + i as u64)).collect();
+        let vcs: Vec<HostTensor> =
+            (0..bb).map(|i| mk_tensor(vec![h, buckets[i], dd], 60 + i as u64)).collect();
+
+        for threads in [1usize, 3, 8] {
+            let mut b = RefBackend::with_threads(cfg.clone(), threads);
+            for exe in [
+                "decode_qkv", "decode_qkv_batch", "decode_attend_fa_128",
+                "decode_attend_fa_256", "attend_batch_fa", "lm_head", "lm_head_batch",
+            ] {
+                b.load(exe).unwrap();
+            }
+
+            // --- stage 1: qkv ---
+            let qkv_b = b
+                .run(
+                    "decode_qkv_batch",
+                    &[
+                        Arg::F32(&x_all), Arg::I32(&pos_all), Arg::F32(&norm1),
+                        Arg::F32(&wq), Arg::F32(&wk), Arg::F32(&wv),
+                    ],
+                )
+                .unwrap();
+            for bi in 0..bb {
+                let xr = HostTensor::new(vec![d], x_all.data[bi * d..(bi + 1) * d].to_vec());
+                let pos = [pos_all[bi]];
+                let qkv_s = b
+                    .run(
+                        "decode_qkv",
+                        &[
+                            Arg::F32(&xr), Arg::I32(&pos), Arg::F32(&norm1),
+                            Arg::F32(&wq), Arg::F32(&wk), Arg::F32(&wv),
+                        ],
+                    )
+                    .unwrap();
+                for out in 0..3 {
+                    assert_eq!(
+                        &qkv_s[out].data[..],
+                        &qkv_b[out].data[bi * d..(bi + 1) * d],
+                        "qkv output {out} row {bi} diverged ({threads} workers)"
+                    );
+                }
+            }
+
+            // --- stage 2: attend, mixed buckets in one call ---
+            let q_all = &qkv_b[0];
+            let valid_all: Vec<i32> = valids.iter().map(|&v| v as i32).collect();
+            let mut call: Vec<Arg> = vec![
+                Arg::F32(&x_all), Arg::F32(q_all), Arg::I32(&valid_all), Arg::F32(&wo),
+                Arg::F32(&norm2), Arg::F32(&f1), Arg::F32(&f2),
+            ];
+            for bi in 0..bb {
+                call.push(Arg::F32View(kcs[bi].view()));
+                call.push(Arg::F32View(vcs[bi].view()));
+            }
+            let batched = b.run("attend_batch_fa", &call).unwrap();
+            assert_eq!(batched[0].shape, vec![bb, d]);
+            for bi in 0..bb {
+                let xr = HostTensor::new(vec![d], x_all.data[bi * d..(bi + 1) * d].to_vec());
+                let qr = HostTensor::new(vec![h, dd], q_all.data[bi * d..(bi + 1) * d].to_vec());
+                let valid = [valids[bi] as i32];
+                let serial = b
+                    .run(
+                        &format!("decode_attend_fa_{}", buckets[bi]),
+                        &[
+                            Arg::F32(&xr), Arg::F32(&qr), Arg::F32(&kcs[bi]), Arg::F32(&vcs[bi]),
+                            Arg::I32(&valid), Arg::F32(&wo), Arg::F32(&norm2),
+                            Arg::F32(&f1), Arg::F32(&f2),
+                        ],
+                    )
+                    .unwrap();
+                assert_eq!(
+                    &serial[0].data[..],
+                    &batched[0].data[bi * d..(bi + 1) * d],
+                    "attend row {bi} (bucket {}) diverged ({threads} workers)",
+                    buckets[bi]
+                );
+            }
+
+            // --- lm_head over the attend output rows ---
+            let logits_b = b
+                .run(
+                    "lm_head_batch",
+                    &[Arg::F32(&batched[0]), Arg::F32(&norm_f), Arg::F32(&lm_w)],
+                )
+                .unwrap();
+            assert_eq!(logits_b[0].shape, vec![bb, m.vocab_size]);
+            for bi in 0..bb {
+                let xr =
+                    HostTensor::new(vec![d], batched[0].data[bi * d..(bi + 1) * d].to_vec());
+                let serial = b
+                    .run("lm_head", &[Arg::F32(&xr), Arg::F32(&norm_f), Arg::F32(&lm_w)])
+                    .unwrap();
+                assert_eq!(
+                    &serial[0].data[..],
+                    &logits_b[0].data[bi * m.vocab_size..(bi + 1) * m.vocab_size],
+                    "lm_head row {bi} diverged ({threads} workers)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn attend_batch_rejects_malformed_groups() {
+        let mut b = backend();
+        let m = b.cfg.model.clone();
+        let (d, h, dd) = (m.d_model, m.n_heads, m.head_dim);
+        for exe in ["attend_batch_fa", "attend_batch_sa"] {
+            b.load(exe).unwrap();
+        }
+        let x = mk_tensor(vec![1, d], 70);
+        let q = mk_tensor(vec![1, h, dd], 71);
+        let wo = mk_tensor(vec![d, d], 72);
+        let n2 = HostTensor::new(vec![d], vec![1.0; d]);
+        let f1 = mk_tensor(vec![d, m.d_ff], 73);
+        let f2 = mk_tensor(vec![m.d_ff, d], 74);
+        let valid = [5i32];
+        // a 192-slot cache is neither a published decode bucket (FA)
+        // nor SA_BUF-sized (SA): both groups must reject it
+        let kc = mk_tensor(vec![h, 192, dd], 75);
+        let vc = mk_tensor(vec![h, 192, dd], 76);
+        for exe in ["attend_batch_fa", "attend_batch_sa"] {
+            let err = b
+                .run(
+                    exe,
+                    &[
+                        Arg::F32(&x), Arg::F32(&q), Arg::I32(&valid), Arg::F32(&wo),
+                        Arg::F32(&n2), Arg::F32(&f1), Arg::F32(&f2),
+                        Arg::F32View(kc.view()), Arg::F32View(vc.view()),
+                    ],
+                )
+                .unwrap_err();
+            assert!(err.to_string().contains("192"), "{exe}: {err}");
+        }
+        // missing the v half of a (k, v) pair
+        let err = b
+            .run(
+                "attend_batch_fa",
+                &[
+                    Arg::F32(&x), Arg::F32(&q), Arg::I32(&valid), Arg::F32(&wo),
+                    Arg::F32(&n2), Arg::F32(&f1), Arg::F32(&f2),
+                    Arg::F32View(kc.view()),
+                ],
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("pairs"), "{err}");
     }
 }

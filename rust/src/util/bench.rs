@@ -7,9 +7,11 @@
 //! Also hosts the `flux bench` serving harness
 //! ([`run_serving_bench`]): prefill + decode step latency across the
 //! three staging configurations (clone+serial baseline, zero-copy
-//! serial, zero-copy parallel), emitted as `BENCH_prefill.json` /
-//! `BENCH_decode.json` — the repo-root perf trajectory every future PR
-//! measures against (DESIGN.md §7).
+//! serial, zero-copy parallel) plus the batched-decode batch-size sweep
+//! (serial vs (layer, mode)-bucketed rounds, DESIGN.md §9), emitted as
+//! `BENCH_prefill.json` / `BENCH_decode.json` (schema
+//! `flux-bench-decode/v2`) — the repo-root perf trajectory every future
+//! PR measures against (DESIGN.md §7).
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
@@ -152,6 +154,40 @@ fn validate_bench_file(path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// The `flux bench --smoke` CI gate for the decode file's v2 schema:
+/// the batched scenario must be present, every scenario's token streams
+/// must have verified bit-identical, and `speedup_batched_over_serial`
+/// must be reported.
+fn validate_decode_v2(path: &Path) -> Result<()> {
+    let j = Json::parse(&std::fs::read_to_string(path)?)
+        .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+    anyhow::ensure!(
+        j.get("schema").and_then(Json::as_str) == Some("flux-bench-decode/v2"),
+        "{path:?}: schema must be flux-bench-decode/v2"
+    );
+    anyhow::ensure!(
+        j.get("speedup_batched_over_serial").and_then(Json::as_f64).is_some(),
+        "{path:?}: missing speedup_batched_over_serial"
+    );
+    let scenarios = j
+        .get("batched")
+        .and_then(|b| b.get("scenarios"))
+        .and_then(Json::as_arr)
+        .filter(|s| !s.is_empty())
+        .ok_or_else(|| anyhow::anyhow!("{path:?}: missing batched.scenarios"))?;
+    for s in scenarios {
+        anyhow::ensure!(
+            s.get("bit_identical").and_then(Json::as_bool) == Some(true),
+            "{path:?}: batched scenario not verified bit-identical"
+        );
+        anyhow::ensure!(
+            s.get("batched_tokens_per_s").and_then(Json::as_f64).map(|v| v > 0.0).unwrap_or(false),
+            "{path:?}: batched scenario reports no throughput"
+        );
+    }
+    Ok(())
+}
+
 /// Run the serving benchmark against an artifact directory and write
 /// `BENCH_prefill.json` / `BENCH_decode.json` into `opts.out_dir`.
 /// Returns the two paths. Three staging configurations are compared
@@ -276,6 +312,81 @@ pub fn run_serving_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<(P
     engine.release(id);
     let sparse_st = stats_of(&mut sparse_samples);
 
+    // ---- batched decode (DESIGN.md §9): one engine round per token
+    // across B active requests, (layer, mode)-bucketed, vs B serial
+    // per-request walks — the batch-size sweep behind
+    // `speedup_batched_over_serial`. The mixed Flux policy routes the
+    // balanced router's even layers FA / odd layers SA with sparse
+    // decode, so every round exercises both kernel groups. ----
+    let batch_sizes: &[usize] = if opts.smoke { &[2] } else { &[1, 2, 4, 8] };
+    let batch_rounds = if opts.smoke { 3 } else { steps.max(8) };
+    engine.set_zero_copy(true);
+    engine.set_threads(opts.threads);
+    let mixed_policy = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Sparse };
+    let mut batched_scenarios = Json::Arr(vec![]);
+    let mut speedup_batched = 0.0f64;
+    for &bsz in batch_sizes {
+        // fresh prefills per configuration so serial and batched start
+        // from identical state; greedy determinism makes the token
+        // streams comparable bit-for-bit
+        let mut run = |batched: bool| -> Result<(Vec<Vec<u32>>, f64, f64, f64)> {
+            engine.set_batch_decode(batched);
+            let mut ids = Vec::with_capacity(bsz);
+            for r in 0..bsz {
+                let mut rng = Rng::seed_from_u64(100 + r as u64);
+                let s = generate(Task::PRe, &mut rng, seq);
+                let (id, _) = engine.prefill(&s.prompt, &mixed_policy, "balanced")?;
+                ids.push(id);
+            }
+            for res in engine.decode_batch(&ids) {
+                res?; // warmup round
+            }
+            let mut streams: Vec<Vec<u32>> = vec![Vec::new(); bsz];
+            let (mut fa, mut sa) = (0u64, 0u64);
+            let t0 = Instant::now();
+            for _ in 0..batch_rounds {
+                let rep = engine.decode_batch_report(&ids);
+                for (stream, tok) in streams.iter_mut().zip(rep.tokens) {
+                    stream.push(tok?);
+                }
+                fa += rep.fa_group_slots;
+                sa += rep.sa_group_slots;
+            }
+            let elapsed_us = t0.elapsed().as_nanos() as f64 / 1e3;
+            for id in ids {
+                engine.release(id);
+            }
+            let per_round = batch_rounds.max(1) as f64;
+            Ok((streams, elapsed_us, fa as f64 / per_round, sa as f64 / per_round))
+        };
+        let (serial_streams, serial_us, _, _) = run(false)?;
+        let (batched_streams, batched_us, fa_per_round, sa_per_round) = run(true)?;
+        let bit_identical = serial_streams == batched_streams;
+        anyhow::ensure!(
+            bit_identical,
+            "batched decode diverged from the serial token streams at batch size {bsz}"
+        );
+        let tokens = (bsz * batch_rounds) as f64;
+        let speedup = serial_us / batched_us.max(1e-9);
+        println!(
+            "decode/batched b={bsz:<2} serial {:>10.1} us/round  batched {:>10.1} us/round  \
+             speedup {speedup:.2}x  groups fa {fa_per_round:.1} sa {sa_per_round:.1} /round",
+            serial_us / batch_rounds.max(1) as f64,
+            batched_us / batch_rounds.max(1) as f64,
+        );
+        let mut o = Json::obj();
+        o.set("batch", Json::from(bsz));
+        o.set("rounds", Json::from(batch_rounds));
+        o.set("serial_tokens_per_s", Json::from(tokens / (serial_us / 1e6).max(1e-12)));
+        o.set("batched_tokens_per_s", Json::from(tokens / (batched_us / 1e6).max(1e-12)));
+        o.set("speedup_batched_over_serial", Json::from(speedup));
+        o.set("bit_identical", Json::from(bit_identical));
+        o.set("fa_group_slots_per_round", Json::from(fa_per_round));
+        o.set("sa_group_slots_per_round", Json::from(sa_per_round));
+        batched_scenarios.push(o);
+        speedup_batched = speedup; // the sweep's largest batch size wins
+    }
+
     // ---- emit BENCH_prefill.json ----
     let fa_base = prefill_results[0].1.mean_us;
     let fa_par = prefill_results[1].1.mean_us;
@@ -301,7 +412,7 @@ pub fn run_serving_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<(P
     let d_view = decode_results[1].1.mean_us;
     let d_par = decode_results[2].1.mean_us;
     let mut jd = Json::obj();
-    jd.set("schema", Json::from("flux-bench-decode/v1"));
+    jd.set("schema", Json::from("flux-bench-decode/v2"));
     jd.set("measured", Json::from(true));
     jd.set("seq_len", Json::from(seq));
     jd.set("decode_tokens", Json::from(steps));
@@ -318,11 +429,17 @@ pub fn run_serving_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<(P
     jd.set("speedup_total_over_baseline", Json::from(d_base / d_par.max(1e-9)));
     jd.set("kv_bytes_moved_fast_path", Json::from(kv_fast_path.0 as f64));
     jd.set("kv_bytes_borrowed_fast_path", Json::from(kv_fast_path.1 as f64));
+    let mut jb = Json::obj();
+    jb.set("batch_sizes", Json::from(batch_sizes.to_vec()));
+    jb.set("scenarios", batched_scenarios);
+    jd.set("batched", jb);
+    jd.set("speedup_batched_over_serial", Json::from(speedup_batched));
     let decode_path = opts.out_dir.join("BENCH_decode.json");
     std::fs::write(&decode_path, jd.to_string())?;
 
     validate_bench_file(&prefill_path)?;
     validate_bench_file(&decode_path)?;
+    validate_decode_v2(&decode_path)?;
     println!(
         "decode speedup: view/clone {:.2}x, parallel/serial {:.2}x, total {:.2}x \
          (kv moved {} B, borrowed {} B on fast path)",
@@ -499,6 +616,42 @@ mod tests {
         let good = dir.join("good.json");
         std::fs::write(&good, r#"{"configs": [{"tokens_per_s": 12.5}]}"#).unwrap();
         validate_bench_file(&good).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn decode_v2_validation_gates_on_batched_fields() {
+        let dir = std::env::temp_dir().join(format!("flux-bench-v2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let old = dir.join("v1.json");
+        std::fs::write(&old, r#"{"schema": "flux-bench-decode/v1"}"#).unwrap();
+        assert!(validate_decode_v2(&old).is_err(), "v1 schema must fail the v2 gate");
+        let missing = dir.join("missing.json");
+        std::fs::write(
+            &missing,
+            r#"{"schema": "flux-bench-decode/v2", "speedup_batched_over_serial": 1.5,
+                "batched": {"scenarios": []}}"#,
+        )
+        .unwrap();
+        assert!(validate_decode_v2(&missing).is_err(), "empty scenarios must fail");
+        let diverged = dir.join("diverged.json");
+        std::fs::write(
+            &diverged,
+            r#"{"schema": "flux-bench-decode/v2", "speedup_batched_over_serial": 1.5,
+                "batched": {"scenarios": [{"bit_identical": false,
+                                           "batched_tokens_per_s": 10.0}]}}"#,
+        )
+        .unwrap();
+        assert!(validate_decode_v2(&diverged).is_err(), "non-bit-identical streams must fail");
+        let good = dir.join("good.json");
+        std::fs::write(
+            &good,
+            r#"{"schema": "flux-bench-decode/v2", "speedup_batched_over_serial": 1.5,
+                "batched": {"scenarios": [{"bit_identical": true,
+                                           "batched_tokens_per_s": 10.0}]}}"#,
+        )
+        .unwrap();
+        validate_decode_v2(&good).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

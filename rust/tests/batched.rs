@@ -1,0 +1,296 @@
+//! Batched-decode acceptance tests (DESIGN.md §9): `Engine::decode_batch`
+//! must be bit-identical in token order to N independent serial
+//! `decode_step` loops across per-request-divergent routing, the
+//! sparse-ring wrap and the 128 -> 256 FA bucket growth edge mid-batch;
+//! the batch reply must piggyback KV-transfer totals and per-mode group
+//! occupancy; and the scheduler must run one batched round per token
+//! with mid-round cancellation shrinking the next batch.
+//!
+//! Artifacts resolution mirrors `integration.rs`: hermetic synthetic
+//! artifacts — every test executes on every `cargo test`.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use flux_attention::config::ServingConfig;
+use flux_attention::coordinator::{Coordinator, Request, RequestError, SessionEvent};
+use flux_attention::engine::{Engine, EngineHandle};
+use flux_attention::prop_assert_eq;
+use flux_attention::router::{AttnMode, DecodeMode, Policy};
+use flux_attention::runtime::synthetic;
+use flux_attention::util::prop::check;
+use flux_attention::util::rng::Rng;
+use flux_attention::workload::{generate, Task};
+
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+fn artifacts() -> PathBuf {
+    synthetic::ensure_default().expect("artifact generation must not fail")
+}
+
+/// The tentpole determinism property: for random mixed-mode active sets
+/// (each request with its own per-layer FA/SA routing and prompt
+/// length), the batched decode path must produce token streams
+/// bit-identical to N independent serial `decode_step` loops. Prompt
+/// lengths straddle the 128 prefill bucket and 40 decode rounds push
+/// shorter requests across the 128 -> 256 FA bucket growth edge
+/// mid-batch while sparse rings (sink 16 + local 64) wrap — the edges
+/// where the two paths would diverge first.
+#[test]
+fn batched_decode_bit_identical_to_serial_property() {
+    let dir = artifacts();
+    let mut e_serial = Engine::load(&dir).unwrap();
+    e_serial.set_batch_decode(false); // the FLUX_BATCH_DECODE=0 path
+    let mut e_batch = Engine::load(&dir).unwrap();
+    assert!(e_batch.batch_decode(), "batched decode must default on");
+    let n_layers = e_serial.cfg().model.n_layers;
+    let tasks = [Task::PRe, Task::Gov, Task::Qasper, Task::Trec];
+    check("batched_decode_vs_serial", 4, |rng| {
+        let b = 2 + rng.gen_range(3); // 2..=4 requests
+        let mut prompts = Vec::with_capacity(b);
+        let mut policies = Vec::with_capacity(b);
+        for _ in 0..b {
+            let len = rng.range(100, 160);
+            let task = tasks[rng.gen_range(tasks.len())];
+            prompts.push(generate(task, rng, len).prompt);
+            // per-request-divergent per-layer routing, sparse decode:
+            // some layers full caches, some sparse rings, differently
+            // per batchmate
+            let modes: Vec<AttnMode> = (0..n_layers)
+                .map(|_| if rng.f64() < 0.5 { AttnMode::Fa } else { AttnMode::Ssa })
+                .collect();
+            policies.push(Policy::Static { modes, decode: DecodeMode::Sparse });
+        }
+        let steps = 40;
+
+        // serial reference: N independent decode loops
+        let mut serial_tokens: Vec<Vec<u32>> = Vec::with_capacity(b);
+        for (prompt, policy) in prompts.iter().zip(&policies) {
+            let (id, report) =
+                e_serial.prefill(prompt, policy, "balanced").map_err(|e| e.to_string())?;
+            let mut toks = vec![report.first_token];
+            for _ in 0..steps {
+                toks.push(e_serial.decode_step(id).map_err(|e| e.to_string())?);
+            }
+            e_serial.release(id);
+            serial_tokens.push(toks);
+        }
+
+        // batched: same prefills, then one decode_batch round per token
+        let mut ids = Vec::with_capacity(b);
+        let mut batch_tokens: Vec<Vec<u32>> = Vec::with_capacity(b);
+        for (prompt, policy) in prompts.iter().zip(&policies) {
+            let (id, report) =
+                e_batch.prefill(prompt, policy, "balanced").map_err(|e| e.to_string())?;
+            ids.push(id);
+            batch_tokens.push(vec![report.first_token]);
+        }
+        for _ in 0..steps {
+            for (toks, res) in batch_tokens.iter_mut().zip(e_batch.decode_batch(&ids)) {
+                toks.push(res.map_err(|e| e.to_string())?);
+            }
+        }
+        for &id in &ids {
+            e_batch.release(id);
+        }
+        prop_assert_eq!(&serial_tokens, &batch_tokens);
+        Ok(())
+    });
+}
+
+/// The batch reply carries everything the scheduler needs for the
+/// round: per-request tokens, KV totals (no separate poll) and the
+/// per-mode (layer, mode) group occupancy; an unknown id fails its own
+/// slot without poisoning batchmates.
+#[test]
+fn decode_batch_reply_carries_totals_and_group_occupancy() {
+    let dir = artifacts();
+    let mut engine = Engine::load(&dir).unwrap();
+    let n_layers = engine.cfg().model.n_layers;
+    let mut rng = Rng::seed_from_u64(51);
+    // balanced router: even layers FA, odd layers SA -> with sparse
+    // decode, every request contributes to both groups each round
+    let policy = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Sparse };
+    let mut ids = vec![];
+    for task in [Task::PRe, Task::Gov] {
+        let s = generate(task, &mut rng, 120);
+        let (id, _) = engine.prefill(&s.prompt, &policy, "balanced").unwrap();
+        ids.push(id);
+    }
+    ids.push(9999); // unknown request
+
+    let report = engine.decode_batch_report(&ids);
+    assert!(report.batched, "RefBackend must take the batched path");
+    assert_eq!(report.tokens.len(), 3);
+    assert_eq!(report.step_us.len(), 3);
+    assert!(report.tokens[0].is_ok() && report.tokens[1].is_ok());
+    let err = report.tokens[2].as_ref().unwrap_err().to_string();
+    assert!(err.contains("unknown request"), "{err}");
+    // 0.5 FA / 0.5 SA routing: both groups occupied every layer
+    assert_eq!(report.fa_group_slots, 2 * (n_layers / 2) as u64);
+    assert_eq!(report.sa_group_slots, 2 * (n_layers - n_layers / 2) as u64);
+    // zero-copy staging: the round borrowed KV, moved none
+    assert_eq!(report.kv_transfer.0, 0, "batched fast path must clone zero KV bytes");
+    assert!(report.kv_transfer.1 > 0, "batched decode must stage KV as borrowed views");
+    // the surviving requests keep decoding normally after the mixed round
+    for &id in &ids[..2] {
+        engine.decode_step(id).unwrap();
+        engine.release(id);
+    }
+}
+
+/// The `EngineHandle` round-trip for batched rounds, plus fallback
+/// equivalence through the channel API.
+#[test]
+fn engine_handle_decode_batch_roundtrip() {
+    let engine = EngineHandle::spawn(artifacts()).unwrap();
+    let mut rng = Rng::seed_from_u64(52);
+    let s = generate(Task::PRe, &mut rng, 96);
+    let (id, _) = engine
+        .prefill(s.prompt, Policy::Backbone, "balanced".into())
+        .unwrap();
+    let report = engine.decode_batch(vec![id]).unwrap();
+    assert_eq!(report.tokens.len(), 1);
+    let tok_batch = *report.tokens[0].as_ref().unwrap();
+    // kv totals on the reply match the standalone job (API kept)
+    assert_eq!(report.kv_transfer, engine.kv_transfer_totals().unwrap());
+    let tok_serial = engine.decode_step(id).unwrap();
+    // greedy continuation stays on one deterministic trajectory
+    assert_ne!(tok_batch, u32::MAX);
+    assert_ne!(tok_serial, u32::MAX);
+    engine.release(id);
+}
+
+fn start_coordinator(cfg: ServingConfig) -> std::sync::Arc<Coordinator> {
+    let engine = EngineHandle::spawn(artifacts()).unwrap();
+    Coordinator::start(engine, cfg)
+}
+
+/// Scheduler satellite: mid-round cancellation shrinks the next batch
+/// (rounds drop from size 2 to size 1) and frees the engine slot (a
+/// third request admits into a 2-slot coordinator and completes); the
+/// scheduler issues exactly one DecodeBatch round-trip per decode round
+/// (decode_rounds == batch-size samples).
+#[test]
+fn cancellation_shrinks_next_batch_and_frees_slot() {
+    let coord = start_coordinator(ServingConfig { max_active_requests: 2, ..Default::default() });
+    let mut rng = Rng::seed_from_u64(53);
+    let sa = generate(Task::PRe, &mut rng, 96);
+    let sb = generate(Task::Gov, &mut rng, 96);
+    let sc = generate(Task::Trec, &mut rng, 96);
+
+    let ha = coord
+        .open(Request { prompt: sa.prompt, max_new: 1024, ignore_eos: true, ..Default::default() })
+        .unwrap();
+    let hb = coord
+        .open(Request { prompt: sb.prompt, max_new: 1024, ignore_eos: true, ..Default::default() })
+        .unwrap();
+    // both decoding: the rounds are genuinely batched at size 2
+    for h in [&ha, &hb] {
+        loop {
+            match h.recv_timeout(TIMEOUT) {
+                Some(SessionEvent::Token { .. }) => break,
+                Some(SessionEvent::Error { error }) => panic!("errored early: {error}"),
+                Some(_) => {}
+                None => panic!("stream closed early"),
+            }
+        }
+    }
+
+    ha.cancel();
+    let err = loop {
+        match ha.recv_timeout(TIMEOUT) {
+            Some(SessionEvent::Error { error }) => break error,
+            Some(SessionEvent::Done { .. }) => panic!("cancelled session must not complete"),
+            Some(_) => {}
+            None => panic!("A closed without a terminal event"),
+        }
+    };
+    assert_eq!(err, RequestError::Cancelled);
+
+    // B alone in the batch now: drain enough post-cancel tokens that at
+    // least one size-1 round must have run (more than one scheduler
+    // round block past A's retirement)
+    let mut post_cancel = 0;
+    while post_cancel < 6 {
+        match hb.recv_timeout(TIMEOUT) {
+            Some(SessionEvent::Token { .. }) => post_cancel += 1,
+            Some(SessionEvent::Error { error }) => panic!("B errored: {error}"),
+            Some(_) => {}
+            None => panic!("B closed early"),
+        }
+    }
+    hb.cancel(); // release B's slot too
+
+    // the freed capacity admits and completes a fresh request
+    let resp = coord
+        .submit(Request { prompt: sc.prompt, max_new: 3, ignore_eos: true, ..Default::default() })
+        .unwrap();
+    assert_eq!(resp.tokens.len(), 3);
+
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.requests_cancelled, 2);
+    assert_eq!(m.requests_completed, 1);
+    assert!(m.decode_rounds > 0, "batched rounds must be counted");
+    assert_eq!(
+        m.decode_rounds,
+        m.decode_batch_size.count() as u64,
+        "exactly one batch-size sample per DecodeBatch round-trip"
+    );
+    assert!(
+        m.decode_batch_size.percentile_us(100.0) >= 2,
+        "A and B must have decoded in shared rounds"
+    );
+    assert_eq!(
+        m.decode_batch_size.percentile_us(0.0),
+        1,
+        "post-cancel rounds must shrink to the surviving request"
+    );
+    assert!(m.fa_group_slots > 0, "FA group occupancy must be observable");
+}
+
+/// Batched rounds preserve the full streaming contract: stop tokens
+/// still truncate inclusively and the streamed order equals the
+/// blocking API's tokens (greedy determinism through the batch path).
+#[test]
+fn batched_rounds_preserve_stop_tokens_and_stream_order() {
+    let coord = start_coordinator(ServingConfig::default());
+    let mut rng = Rng::seed_from_u64(54);
+    let s = generate(Task::PRe, &mut rng, 100);
+    let base = coord
+        .submit(Request {
+            prompt: s.prompt.clone(),
+            max_new: 8,
+            ignore_eos: true,
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(base.tokens.len(), 8);
+
+    let stop = base.tokens[3];
+    let first_idx = base.tokens.iter().position(|&t| t == stop).unwrap();
+    let h = coord
+        .open(Request {
+            prompt: s.prompt.clone(),
+            max_new: 8,
+            ignore_eos: true,
+            stop_tokens: vec![stop],
+            ..Default::default()
+        })
+        .unwrap();
+    let mut streamed = vec![];
+    loop {
+        match h.recv_timeout(TIMEOUT) {
+            Some(SessionEvent::Prefilled { first_token, .. }) => streamed.push(first_token),
+            Some(SessionEvent::Token { tok, .. }) => streamed.push(tok),
+            Some(SessionEvent::Done { stats }) => {
+                assert_eq!(streamed, stats.tokens);
+                break;
+            }
+            Some(SessionEvent::Error { error }) => panic!("stream failed: {error}"),
+            Some(_) => {}
+            None => panic!("stream closed early"),
+        }
+    }
+    assert_eq!(streamed, base.tokens[..=first_idx].to_vec());
+}
