@@ -194,10 +194,17 @@ pub struct ServingConfig {
     pub max_new_tokens: usize,
     /// admission-queue capacity before back-pressure rejects
     pub queue_capacity: usize,
-    /// decode-priority: how many decode rounds the scheduler runs per
-    /// admitted prefill (continuous batching anti-starvation knob)
-    pub decode_steps_per_prefill: usize,
-    /// maximum concurrently active (prefilled, decoding) requests
+    /// chunked prefill (DESIGN.md §10): tokens per prefill chunk. Each
+    /// chunk runs as one engine call at its smallest covering bucket,
+    /// interleaved with decode rounds so a long prompt never stalls
+    /// running streams for its whole prefill. `0` = monolithic (one
+    /// whole-prompt chunk). Rounded up to a block-size multiple.
+    pub prefill_chunk_tokens: usize,
+    /// how many prefill chunks the scheduler may run between two decode
+    /// rounds — the inter-token-latency vs prefill-throughput knob
+    /// (decode streams wait at most this many chunk calls per round)
+    pub prefill_chunk_budget: usize,
+    /// maximum concurrently active (prefilling or decoding) requests
     pub max_active_requests: usize,
     /// hard per-request cap on `max_new` at admission — oversized
     /// requests are rejected with a typed error instead of pinning an
@@ -215,7 +222,8 @@ impl Default for ServingConfig {
         Self {
             max_new_tokens: 8,
             queue_capacity: 256,
-            decode_steps_per_prefill: 4,
+            prefill_chunk_tokens: 128,
+            prefill_chunk_budget: 1,
             max_active_requests: 32,
             max_new_cap: 4096,
             default_deadline_ms: None,

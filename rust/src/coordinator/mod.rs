@@ -9,6 +9,15 @@
 //! and tracking per-request routing decisions cached at prefill time
 //! (paper section 3.3 — zero per-token routing overhead).
 //!
+//! Prefill is chunked and schedulable (DESIGN.md §10): the scheduler is
+//! one round loop that each iteration runs ONE batched decode round
+//! plus up to [`crate::config::ServingConfig::prefill_chunk_budget`]
+//! prefill chunks, so a long prompt prefills incrementally instead of
+//! stalling every running stream for its whole prefill (the
+//! head-of-line blocking the monolithic admit path had). Mid-prefill
+//! cancellation and deadline eviction are checked between chunks and
+//! free the engine-side partial KV.
+//!
 //! Request lifecycle (DESIGN.md §8): [`Coordinator::open`] returns a
 //! [`SessionHandle`] whose typed event stream mirrors the request's
 //! life — `Queued` → `Prefilled` (TTFT point) → `Token`* → terminal
@@ -36,7 +45,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::config::ServingConfig;
-use crate::engine::EngineHandle;
+use crate::engine::{ChunkOutcome, EngineHandle, PrefillReport};
 use crate::metrics::ServingMetrics;
 use crate::router::Policy;
 use crate::tokenizer::EOS;
@@ -292,6 +301,25 @@ struct Pending {
     deadline: Option<Instant>,
 }
 
+/// A request whose prefill job is open on the engine but not yet
+/// complete — it consumes an active slot (its staged KV is real memory)
+/// and advances one chunk at a time through the round loop.
+struct Prefilling {
+    job: u64,
+    max_new: usize,
+    stop_tokens: Vec<u32>,
+    ignore_eos: bool,
+    policy_label: String,
+    /// Arrival → first prefill-chunk execution, stamped when the first
+    /// chunk is about to run (NOT at job open): time parked in the
+    /// prefilling deque behind other requests' chunks is queue time.
+    queue_us: Option<u64>,
+    t_arrival: Instant,
+    deadline: Option<Instant>,
+    cancel: CancelToken,
+    sink: Sink,
+}
+
 struct Active {
     engine_id: u64,
     generated: Vec<u32>,
@@ -421,6 +449,12 @@ impl Coordinator {
     }
 }
 
+/// The unified round scheduler (DESIGN.md §10): every loop iteration
+/// runs ONE batched decode round over the active set plus up to
+/// `prefill_chunk_budget` prefill chunks off the prefilling queue, so
+/// inter-token latency of running streams stays flat while long prompts
+/// prefill incrementally — no head-of-line blocking on a monolithic
+/// prefill, no fixed decode-rounds-per-prefill ratio.
 fn scheduler_loop(
     engine: EngineHandle,
     cfg: ServingConfig,
@@ -429,13 +463,16 @@ fn scheduler_loop(
     metrics: Arc<Mutex<ServingMetrics>>,
 ) {
     let mut active: VecDeque<Active> = VecDeque::new();
+    let mut prefilling: VecDeque<Prefilling> = VecDeque::new();
     let mut queue_closed = false;
+    let chunk_budget = cfg.prefill_chunk_budget.max(1);
     loop {
-        // --- admission: at most one prefill per outer iteration
-        // (decode-priority); an idle scheduler blocks here for the
-        // next request ---
-        while !queue_closed && active.len() < cfg.max_active_requests {
-            let pending = if active.is_empty() {
+        // --- admission: drain arrivals into the prefill pipeline.
+        // Opening a job validates and allocates staging but runs no
+        // compute, so admission never stalls decode; an idle scheduler
+        // blocks here for the next request ---
+        while !queue_closed && active.len() + prefilling.len() < cfg.max_active_requests {
+            let pending = if active.is_empty() && prefilling.is_empty() {
                 match queue_rx.recv() {
                     Ok(p) => Some(p),
                     Err(_) => {
@@ -455,85 +492,185 @@ fn scheduler_loop(
             };
             let Some(p) = pending else { break };
             queue_depth.fetch_sub(1, Ordering::Relaxed);
-            if let Some(a) = admit(&engine, &metrics, p) {
-                active.push_back(a);
+            if let Some(pf) = open_prefill(&engine, &cfg, &metrics, p) {
+                prefilling.push_back(pf);
             }
-            // decode-priority: stop admitting once something is active
-            break;
         }
 
-        if active.is_empty() {
+        if active.is_empty() && prefilling.is_empty() {
             if queue_closed {
                 return;
             }
             continue;
         }
 
-        // --- decode rounds over the active set: one batched engine
-        // round-trip per token round (DESIGN.md §9) ---
-        for _ in 0..cfg.decode_steps_per_prefill {
-            // retirement (cancel / deadline / EOS / stop / max_new) is
-            // checked once per round, before the batch is formed
-            sweep_retired(&engine, &metrics, &mut active);
-            if active.is_empty() {
-                break;
-            }
+        // --- one batched decode round over the active set: one engine
+        // round-trip produces every active request's next token (§9);
+        // retirement (cancel / deadline / EOS / stop / max_new) is
+        // checked before the batch is formed ---
+        sweep_retired(&engine, &metrics, &mut active);
+        if !active.is_empty() {
             let ids: Vec<u64> = active.iter().map(|a| a.engine_id).collect();
-            let reply = match engine.decode_batch(ids) {
-                Ok(r) => r,
+            match engine.decode_batch(ids) {
                 Err(e) => {
                     // engine thread gone: fail the whole active set
                     let msg = e.to_string();
                     while let Some(a) = active.pop_front() {
                         retire(&engine, &metrics, a, Retire::Failed(msg.clone()));
                     }
-                    break;
                 }
-            };
-            let crate::engine::DecodeBatchReport {
-                tokens, step_us, kv_transfer, fa_group_slots, sa_group_slots, ..
-            } = reply;
-            // one metrics lock per round (was one per token per request),
-            // with the KV totals riding on the batch reply instead of a
-            // separate KvTransferTotals round-trip
-            {
-                let mut m = metrics.lock().unwrap();
-                m.decode_rounds += 1;
-                m.decode_batch_size.record_value(active.len() as u64);
-                m.fa_group_slots += fa_group_slots;
-                m.sa_group_slots += sa_group_slots;
-                for (res, &us) in tokens.iter().zip(&step_us) {
-                    if res.is_ok() {
-                        m.decode.record_us(us);
+                Ok(reply) => {
+                    let crate::engine::DecodeBatchReport {
+                        tokens, step_us, kv_transfer, fa_group_slots, sa_group_slots, ..
+                    } = reply;
+                    // one metrics lock per round (not per token), with
+                    // the KV totals riding on the batch reply
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        m.decode_rounds += 1;
+                        m.decode_batch_size.record_value(active.len() as u64);
+                        m.fa_group_slots += fa_group_slots;
+                        m.sa_group_slots += sa_group_slots;
+                        for (res, &us) in tokens.iter().zip(&step_us) {
+                            if res.is_ok() {
+                                m.decode.record_us(us);
+                            }
+                        }
+                        m.kv_bytes_moved = kv_transfer.0;
+                        m.kv_bytes_borrowed = kv_transfer.1;
                     }
-                }
-                m.kv_bytes_moved = kv_transfer.0;
-                m.kv_bytes_borrowed = kv_transfer.1;
-            }
-            let mut kept = VecDeque::with_capacity(active.len());
-            for ((mut a, res), &us) in active.drain(..).zip(tokens).zip(&step_us) {
-                match res {
-                    Ok(tok) => {
-                        a.decode_us += us;
-                        a.generated.push(tok);
-                        if a.sink.event(SessionEvent::Token { tok, step_us: us }) {
-                            kept.push_back(a);
-                        } else {
-                            // the stream's receiver is gone: stop decoding
-                            retire(&engine, &metrics, a, Retire::Cancelled);
+                    let mut kept = VecDeque::with_capacity(active.len());
+                    for ((mut a, res), &us) in active.drain(..).zip(tokens).zip(&step_us) {
+                        match res {
+                            Ok(tok) => {
+                                a.decode_us += us;
+                                a.generated.push(tok);
+                                if a.sink.event(SessionEvent::Token { tok, step_us: us }) {
+                                    kept.push_back(a);
+                                } else {
+                                    // receiver gone: stop decoding
+                                    retire(&engine, &metrics, a, Retire::Cancelled);
+                                }
+                            }
+                            Err(e) => {
+                                retire(&engine, &metrics, a, Retire::Failed(e.to_string()));
+                            }
                         }
                     }
-                    Err(e) => {
-                        retire(&engine, &metrics, a, Retire::Failed(e.to_string()));
-                    }
+                    active = kept;
                 }
             }
-            active = kept;
         }
+
+        // --- up to `prefill_chunk_budget` prefill chunks, FIFO across
+        // prefilling requests: running streams wait at most this many
+        // chunk calls between decode rounds ---
+        let t_chunks = Instant::now();
+        // snapshot BEFORE chunks run: a final chunk promotes its request
+        // into `active`, which must not retroactively count this phase
+        // as decode stall when no stream was actually waiting
+        let had_decoders = !active.is_empty();
+        let mut budget = chunk_budget;
+        while budget > 0 {
+            // mid-prefill cancellation / deadline eviction: checked
+            // between chunks over the WHOLE prefilling set (not just the
+            // FIFO front), so a session queued behind a long prefill
+            // releases its slot and staged KV the moment it dies
+            sweep_prefilling(&engine, &metrics, &mut prefilling);
+            let Some(mut pf) = prefilling.pop_front() else { break };
+            budget -= 1;
+            // queue time ends when the request's FIRST chunk runs —
+            // waiting parked behind other requests' chunks counts
+            if pf.queue_us.is_none() {
+                pf.queue_us = Some(pf.t_arrival.elapsed().as_micros() as u64);
+            }
+            match engine.prefill_chunk(pf.job) {
+                Ok(ChunkOutcome::More { .. }) => {
+                    metrics.lock().unwrap().prefill_chunks += 1;
+                    // front, not back: the oldest request finishes first
+                    prefilling.push_front(pf);
+                }
+                Ok(ChunkOutcome::Done { id, report }) => {
+                    metrics.lock().unwrap().prefill_chunks += 1;
+                    if let Some(a) = finish_prefill(&engine, &metrics, pf, id, report) {
+                        active.push_back(a);
+                    }
+                }
+                Err(e) => {
+                    // an ADMITTED request dying mid-prefill is an engine
+                    // failure (like a mid-decode one), not an admission
+                    // rejection; the engine already dropped the failed
+                    // job — retire_prefilling's cancel is belt-and-braces
+                    retire_prefilling(&engine, &metrics, pf, Retire::Failed(e.to_string()));
+                }
+            }
+        }
+        if had_decoders && budget < chunk_budget {
+            // stall accounting: how long decode streams waited on
+            // prefill work this round
+            let stall = t_chunks.elapsed().as_micros() as u64;
+            if stall > 0 {
+                metrics.lock().unwrap().decode_stall_us += stall;
+            }
+        }
+
         // finished generations retire before the next admission pass
         // (same sweep as the round start — the policy lives in one place)
         sweep_retired(&engine, &metrics, &mut active);
     }
+}
+
+/// Terminate one prefilling request: free the engine-side job (its
+/// staged KV) and emit the terminal event, updating the per-outcome
+/// counters — the prefilling-side mirror of [`retire`].
+fn retire_prefilling(
+    engine: &EngineHandle,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+    pf: Prefilling,
+    how: Retire,
+) {
+    engine.prefill_cancel(pf.job);
+    {
+        let mut m = metrics.lock().unwrap();
+        m.stream_tokens.record_value(0);
+        match &how {
+            Retire::Cancelled => m.requests_cancelled += 1,
+            Retire::Expired => m.requests_expired += 1,
+            Retire::Failed(_) => m.requests_failed += 1,
+            Retire::Done => unreachable!("prefilling requests never retire as Done"),
+        }
+    }
+    match how {
+        Retire::Cancelled => pf.sink.error(RequestError::Cancelled),
+        Retire::Expired => pf.sink.error(RequestError::DeadlineExceeded),
+        Retire::Failed(msg) => pf.sink.error(RequestError::Engine(msg)),
+        Retire::Done => unreachable!("prefilling requests never retire as Done"),
+    }
+}
+
+/// Terminate every prefilling request whose session was cancelled or
+/// whose deadline elapsed — anywhere in the deque, not only the FIFO
+/// front — freeing the engine-side partial KV and the active slot.
+/// Survivors keep their order.
+fn sweep_prefilling(
+    engine: &EngineHandle,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+    prefilling: &mut VecDeque<Prefilling>,
+) {
+    let now = Instant::now();
+    let mut kept = VecDeque::with_capacity(prefilling.len());
+    while let Some(pf) = prefilling.pop_front() {
+        if pf.cancel.is_cancelled() {
+            retire_prefilling(engine, metrics, pf, Retire::Cancelled);
+            continue;
+        }
+        if pf.deadline.is_some_and(|d| now >= d) {
+            retire_prefilling(engine, metrics, pf, Retire::Expired);
+            continue;
+        }
+        kept.push_back(pf);
+    }
+    *prefilling = kept;
 }
 
 /// Retire every request the next round must not decode: cancelled
@@ -570,9 +707,15 @@ fn sweep_retired(
     *active = kept;
 }
 
-/// Prefill a pending request and emit `Prefilled`, unless it was
-/// cancelled or expired while queued.
-fn admit(engine: &EngineHandle, metrics: &Arc<Mutex<ServingMetrics>>, p: Pending) -> Option<Active> {
+/// Validate a dequeued request (cancelled / expired while queued) and
+/// open its engine-side prefill job. No prefill compute happens here —
+/// chunks are scheduled by the round loop.
+fn open_prefill(
+    engine: &EngineHandle,
+    cfg: &ServingConfig,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+    p: Pending,
+) -> Option<Prefilling> {
     let Pending { req, sink, cancel, t_arrival, deadline } = p;
     if cancel.is_cancelled() {
         let mut m = metrics.lock().unwrap();
@@ -590,55 +733,85 @@ fn admit(engine: &EngineHandle, metrics: &Arc<Mutex<ServingMetrics>>, p: Pending
         sink.error(RequestError::DeadlineExceeded);
         return None;
     }
-    let queue_us = t_arrival.elapsed().as_micros() as u64;
-    match engine.prefill(req.prompt.clone(), req.policy.clone(), req.router.clone()) {
-        Ok((engine_id, report)) => {
-            let t_first_token = Instant::now();
-            let ttft_us = t_first_token.duration_since(t_arrival).as_micros() as u64;
-            {
-                let mut m = metrics.lock().unwrap();
-                m.prefill.record_us(report.total_us);
-                m.router_overhead.record_us(report.router_us);
-                m.ttft.record_us(queue_us + report.total_us);
-                m.prompt_tokens += report.prompt_len as u64;
-                m.record_omsr(&req.policy.label(), report.omsr);
-            }
-            let modes: Vec<String> = report.modes.iter().map(|m| m.name().into()).collect();
-            let alive = sink.event(SessionEvent::Prefilled {
-                first_token: report.first_token,
-                omsr: report.omsr,
-                modes: modes.clone(),
-                ttft_us,
-                queue_us,
-            });
-            let a = Active {
-                engine_id,
-                generated: vec![report.first_token],
-                max_new: req.max_new.max(1),
-                stop_tokens: req.stop_tokens,
-                ignore_eos: req.ignore_eos,
-                omsr: report.omsr,
-                modes,
-                t_arrival,
-                t_first_token,
-                decode_us: 0,
-                queue_us,
-                deadline,
-                cancel,
-                sink,
-            };
-            if alive {
-                Some(a)
-            } else {
-                retire(engine, metrics, a, Retire::Cancelled);
-                None
-            }
-        }
+    let policy_label = req.policy.label();
+    match engine.prefill_open(req.prompt, req.policy, req.router, cfg.prefill_chunk_tokens) {
+        Ok(job) => Some(Prefilling {
+            job,
+            max_new: req.max_new,
+            stop_tokens: req.stop_tokens,
+            ignore_eos: req.ignore_eos,
+            policy_label,
+            // stamped when the first chunk runs (queue time includes
+            // waiting parked in the prefilling deque)
+            queue_us: None,
+            t_arrival,
+            deadline,
+            cancel,
+            sink,
+        }),
         Err(e) => {
             metrics.lock().unwrap().requests_rejected += 1;
             sink.error(RequestError::Engine(e.to_string()));
             None
         }
+    }
+}
+
+/// Final-chunk bookkeeping: metrics (TTFT is the real arrival→first-
+/// token wall clock, so the histogram reflects chunk interleaving under
+/// load), the `Prefilled` event, and promotion into the decode set.
+fn finish_prefill(
+    engine: &EngineHandle,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+    pf: Prefilling,
+    engine_id: u64,
+    report: PrefillReport,
+) -> Option<Active> {
+    let Prefilling {
+        max_new, stop_tokens, ignore_eos, policy_label, queue_us, t_arrival, deadline, cancel,
+        sink, ..
+    } = pf;
+    // always Some by now (the first chunk stamps it before running)
+    let queue_us = queue_us.unwrap_or(0);
+    let t_first_token = Instant::now();
+    let ttft_us = t_first_token.duration_since(t_arrival).as_micros() as u64;
+    {
+        let mut m = metrics.lock().unwrap();
+        m.prefill.record_us(report.total_us);
+        m.router_overhead.record_us(report.router_us);
+        m.ttft.record_us(ttft_us);
+        m.prompt_tokens += report.prompt_len as u64;
+        m.record_omsr(&policy_label, report.omsr);
+    }
+    let modes: Vec<String> = report.modes.iter().map(|m| m.name().into()).collect();
+    let alive = sink.event(SessionEvent::Prefilled {
+        first_token: report.first_token,
+        omsr: report.omsr,
+        modes: modes.clone(),
+        ttft_us,
+        queue_us,
+    });
+    let a = Active {
+        engine_id,
+        generated: vec![report.first_token],
+        max_new: max_new.max(1),
+        stop_tokens,
+        ignore_eos,
+        omsr: report.omsr,
+        modes,
+        t_arrival,
+        t_first_token,
+        decode_us: 0,
+        queue_us,
+        deadline,
+        cancel,
+        sink,
+    };
+    if alive {
+        Some(a)
+    } else {
+        retire(engine, metrics, a, Retire::Cancelled);
+        None
     }
 }
 

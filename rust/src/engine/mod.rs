@@ -47,6 +47,48 @@ pub struct PrefillReport {
     pub router_us: u64,
     pub first_token: u32,
     pub kv_bytes: usize,
+    /// Engine calls the prefill took: 1 for a monolithic prefill, the
+    /// chunk count for a chunked one (DESIGN.md §10).
+    pub chunks: usize,
+}
+
+/// One in-flight chunked prefill job (DESIGN.md §10): the prompt is
+/// split into `chunk_tokens`-sized chunks, each run as one engine call
+/// at the smallest covering prefill bucket, attending over the
+/// already-staged KV prefix through zero-copy views. The layer router
+/// runs once on the first chunk and its per-layer decision is pinned
+/// for the rest, so every chunk's K/V lands directly in the routed
+/// cache layout (FullCache always staged for cross-chunk attention;
+/// sparse-routed layers additionally ring-prime a SparseCache and drop
+/// the staging buffer on completion).
+struct PrefillJob {
+    tokens: Vec<u32>,
+    policy: Policy,
+    router_name: String,
+    chunk_tokens: usize,
+    total_bucket: usize,
+    decode_mode: DecodeMode,
+    consumed: usize,
+    /// pinned on the first chunk; empty until then
+    modes: Vec<AttnMode>,
+    /// per-layer natural-order KV prefix, capacity `total_bucket` (the
+    /// same capacity a monolithic prefill's caches end with)
+    staging: Vec<FullCache>,
+    /// per-layer sparse rings for SA-routed layers under sparse decode
+    rings: Vec<Option<SparseCache>>,
+    router_us: u64,
+    compute_us: u64,
+    chunks_done: usize,
+}
+
+/// Result of one [`Engine::prefill_chunk`] call.
+#[derive(Debug)]
+pub enum ChunkOutcome {
+    /// The chunk ran; more prompt remains.
+    More { consumed: usize, total_tokens: usize },
+    /// The final chunk ran: the request is live (decode-ready) under
+    /// `id` and the prefill report covers the whole prompt.
+    Done { id: u64, report: PrefillReport },
 }
 
 /// One live request's state inside the engine.
@@ -60,8 +102,9 @@ pub struct RequestState {
 
 /// Outcome of one batched decode round (DESIGN.md §9). Everything the
 /// scheduler needs per token round rides on this one reply — including
-/// the KV-interchange totals, so the decode loop needs no separate
-/// `KvTransferTotals` poll.
+/// the KV-interchange totals (the reply piggyback is the only
+/// scheduler-facing totals channel; the old standalone polling job is
+/// gone).
 #[derive(Debug)]
 pub struct DecodeBatchReport {
     /// Per-request results, aligned with the input ids.
@@ -95,6 +138,9 @@ pub struct Engine {
     pub routers: HashMap<String, RouterNet>,
     cfg: MetaConfig,
     requests: HashMap<u64, RequestState>,
+    /// in-flight chunked prefill jobs (DESIGN.md §10), keyed separately
+    /// from live requests — a job becomes a request on its final chunk
+    prefill_jobs: HashMap<u64, PrefillJob>,
     next_id: u64,
     /// Stage decode KV arguments as borrowed views instead of cloning
     /// (`FLUX_ZERO_COPY=0` disables, for before/after benchmarking).
@@ -146,6 +192,15 @@ impl Engine {
                 rt.load(exe)?;
             }
         }
+        if rt.accepts_prefill_chunks() {
+            // history-aware chunked prefill entry points (DESIGN.md §10)
+            // are likewise host-backend-only
+            for mode in ["fa", "ssa", "ta", "xa"] {
+                for &b in &cfg.prefill_buckets {
+                    rt.load(&format!("layer_{mode}_prefill_chunk_{b}"))?;
+                }
+            }
+        }
         let zero_copy = std::env::var("FLUX_ZERO_COPY").map(|v| v != "0").unwrap_or(true);
         let batch_decode = std::env::var("FLUX_BATCH_DECODE").map(|v| v != "0").unwrap_or(true);
         Ok(Self {
@@ -154,6 +209,7 @@ impl Engine {
             routers,
             cfg,
             requests: HashMap::new(),
+            prefill_jobs: HashMap::new(),
             next_id: 0,
             zero_copy,
             batch_decode,
@@ -198,6 +254,16 @@ impl Engine {
             .fold((0, 0), |(m, b), s| (m + s.kv_bytes_moved, b + s.kv_bytes_borrowed))
     }
 
+    /// Aggregate prefill row accounting across all executables:
+    /// `(rows carrying real tokens, bucket-padding rows)` — the
+    /// compute-utilization ledger `flux bench` reports.
+    pub fn prefill_row_totals(&self) -> (u64, u64) {
+        self.rt
+            .stats()
+            .values()
+            .fold((0, 0), |(v, p), s| (v + s.rows_valid, p + s.rows_padded))
+    }
+
     pub fn router(&self, name: &str) -> Result<&RouterNet> {
         self.routers
             .get(name)
@@ -208,11 +274,29 @@ impl Engine {
         self.requests.len()
     }
 
+    /// In-flight chunked prefill jobs (not yet decode-ready requests).
+    pub fn active_prefill_jobs(&self) -> usize {
+        self.prefill_jobs.len()
+    }
+
+    /// KV bytes held by live requests AND by in-flight prefill jobs'
+    /// staging buffers + rings (a cancelled job must return this to the
+    /// pre-job level — pinned by `tests/chunked.rs`).
     pub fn total_kv_bytes(&self) -> usize {
-        self.requests
+        let live: usize = self
+            .requests
             .values()
             .map(|r| r.caches.iter().map(|c| c.bytes()).sum::<usize>())
-            .sum()
+            .sum();
+        let staged: usize = self
+            .prefill_jobs
+            .values()
+            .map(|j| {
+                j.staging.iter().map(|c| c.bytes()).sum::<usize>()
+                    + j.rings.iter().flatten().map(|c| c.bytes()).sum::<usize>()
+            })
+            .sum();
+        live + staged
     }
 
     /// Prefill a prompt under `policy` using router variant
@@ -236,7 +320,6 @@ impl Engine {
         let local = cfg.sparsity.local_size;
         let sa_buf = cfg.sa_buf;
         let (nh, hd) = (cfg.model.n_heads, cfg.model.head_dim);
-        let d = cfg.model.d_model;
         let decode_mode = policy.decode_mode();
 
         let mut hidden = self.weights.embed_tokens(tokens, bucket);
@@ -250,25 +333,17 @@ impl Engine {
 
         for layer in 0..n_layers {
             // --- routing decision for this layer ---
-            let mode = match policy {
-                Policy::Backbone => AttnMode::Fa,
-                Policy::Static { modes, .. } => modes[layer],
-                Policy::Flux { sa_mode, .. } => {
-                    let t0 = Instant::now();
-                    let desc = pool_descriptor(&hidden, valid, pool);
-                    let net = self
-                        .routers
-                        .get(router_name)
-                        .ok_or_else(|| anyhow::anyhow!("router '{router_name}' missing"))?;
-                    let (is_fa, _) = net.route(&mut *self.rt, layer, &desc)?;
-                    router_us += t0.elapsed().as_micros() as u64;
-                    if is_fa {
-                        AttnMode::Fa
-                    } else {
-                        *sa_mode
-                    }
-                }
-            };
+            let mode = route_layer(
+                &mut *self.rt,
+                &self.routers,
+                policy,
+                router_name,
+                &hidden,
+                valid,
+                pool,
+                layer,
+                &mut router_us,
+            )?;
             modes.push(mode);
 
             // --- layer execution ---
@@ -289,6 +364,7 @@ impl Engine {
                 call_args.push(Arg::I32(&valid_arr));
             }
             let mut out = self.rt.run(&exe, &call_args)?;
+            self.rt.note_prefill_rows(&exe, valid as u64, (bucket - valid) as u64);
             anyhow::ensure!(out.len() == 3, "prefill layer must return (hidden, k, v)");
             let v = out.pop().unwrap();
             let k = out.pop().unwrap();
@@ -310,6 +386,30 @@ impl Engine {
 
         // first generated token from the last valid position — staged
         // as a borrowed view of the hidden state, no row copy
+        let first_token = self.lm_head_last_row(&hidden, valid)?;
+        let (id, omsr, kv_bytes) =
+            self.promote_request(caches, &modes, decode_mode, valid, first_token);
+        Ok((
+            id,
+            PrefillReport {
+                bucket,
+                prompt_len: valid,
+                modes,
+                omsr,
+                total_us: t_start.elapsed().as_micros() as u64,
+                router_us,
+                first_token,
+                kv_bytes,
+                chunks: 1,
+            },
+        ))
+    }
+
+    /// Final-norm + vocabulary projection over the last valid row of
+    /// `hidden` (borrowed view, no row copy) — the greedy first token.
+    /// Shared by the monolithic and chunked prefill completions.
+    fn lm_head_last_row(&mut self, hidden: &HostTensor, valid: usize) -> Result<u32> {
+        let d = self.cfg.model.d_model;
         let d_shape = [d];
         let last_hidden = TensorView {
             shape: &d_shape,
@@ -323,36 +423,260 @@ impl Engine {
                 Arg::F32(&self.weights.lm_head),
             ],
         )?;
-        let first_token = argmax(&logits[0].data);
+        Ok(argmax(&logits[0].data))
+    }
 
+    /// Insert a freshly prefilled request into the live table and derive
+    /// the report's summary numbers — `(id, omsr, kv_bytes)`. Shared by
+    /// the monolithic and chunked prefill completions so the promotion
+    /// bookkeeping is written exactly once.
+    fn promote_request(
+        &mut self,
+        caches: Vec<LayerCache>,
+        modes: &[AttnMode],
+        decode_mode: DecodeMode,
+        n_tokens: usize,
+        first_token: u32,
+    ) -> (u64, f64, usize) {
         let omsr = modes.iter().filter(|m| **m != AttnMode::Fa).count() as f64
-            / n_layers as f64;
-        let kv_bytes: usize = caches.iter().map(|c| c.bytes()).sum();
+            / self.cfg.model.n_layers as f64;
+        let kv_bytes = caches.iter().map(|c| c.bytes()).sum();
         let id = self.next_id;
         self.next_id += 1;
         self.requests.insert(
             id,
             RequestState {
                 caches,
-                modes: modes.clone(),
+                modes: modes.to_vec(),
                 decode_mode,
-                n_tokens: valid,
+                n_tokens,
                 last_token: first_token,
             },
         );
-        Ok((
+        (id, omsr, kv_bytes)
+    }
+
+    /// Open a chunked prefill job (DESIGN.md §10): validates the prompt
+    /// against the bucket ledger and allocates per-layer staging, but
+    /// runs no compute — each subsequent [`Engine::prefill_chunk`] call
+    /// executes one chunk, so the scheduler can interleave decode
+    /// rounds between chunks. `chunk_tokens == 0` plans one whole-prompt
+    /// chunk (monolithic compute through the same code path); backends
+    /// without chunk kernels degrade to one monolithic `prefill` call
+    /// on the first `prefill_chunk`.
+    pub fn prefill_open(
+        &mut self,
+        tokens: &[u32],
+        policy: &Policy,
+        router_name: &str,
+        chunk_tokens: usize,
+    ) -> Result<u64> {
+        anyhow::ensure!(!tokens.is_empty(), "empty prompt");
+        let total_bucket = self
+            .cfg
+            .prefill_bucket(tokens.len())
+            .ok_or_else(|| anyhow::anyhow!("prompt of {} tokens exceeds max bucket", tokens.len()))?;
+        let chunked_backend = self.rt.accepts_prefill_chunks();
+        let chunk_tokens = if !chunked_backend || chunk_tokens == 0 {
+            tokens.len()
+        } else {
+            // XA chunk boundaries must be block-aligned; rounding up to
+            // a block multiple costs nothing for the other modes
+            let block = self.cfg.sparsity.block_size.max(1);
+            chunk_tokens.max(1).div_ceil(block) * block
+        };
+        let (nh, hd) = (self.cfg.model.n_heads, self.cfg.model.head_dim);
+        let n_layers = self.cfg.model.n_layers;
+        // staging capacity == the monolithic bucket, so completed FA
+        // caches are bit-identical (capacity included) to monolithic ones
+        let staging = if chunked_backend {
+            (0..n_layers).map(|_| FullCache::new(nh, hd, total_bucket)).collect()
+        } else {
+            Vec::new()
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        self.prefill_jobs.insert(
             id,
-            PrefillReport {
-                bucket,
-                prompt_len: valid,
+            PrefillJob {
+                tokens: tokens.to_vec(),
+                policy: policy.clone(),
+                router_name: router_name.to_string(),
+                chunk_tokens,
+                total_bucket,
+                decode_mode: policy.decode_mode(),
+                consumed: 0,
+                modes: Vec::new(),
+                staging,
+                rings: Vec::new(),
+                router_us: 0,
+                compute_us: 0,
+                chunks_done: 0,
+            },
+        );
+        Ok(id)
+    }
+
+    /// Run the next chunk of prefill job `job`. On the final chunk the
+    /// job is promoted to a live request (KV in its routed layout, first
+    /// token computed) and removed from the job table.
+    ///
+    /// A mid-chunk failure leaves earlier layers' KV already appended to
+    /// the staging caches, so the job is unrecoverable: it is dropped
+    /// (staged KV freed) and the error returned — retrying the same job
+    /// id fails cleanly instead of double-appending KV.
+    pub fn prefill_chunk(&mut self, job: u64) -> Result<ChunkOutcome> {
+        match self.prefill_chunk_inner(job) {
+            Ok(out) => Ok(out),
+            Err(e) => {
+                self.prefill_jobs.remove(&job);
+                Err(e)
+            }
+        }
+    }
+
+    fn prefill_chunk_inner(&mut self, job: u64) -> Result<ChunkOutcome> {
+        if !self.rt.accepts_prefill_chunks() {
+            // device backends: one monolithic call, same outcome shape
+            let j = self
+                .prefill_jobs
+                .remove(&job)
+                .ok_or_else(|| anyhow::anyhow!("unknown prefill job {job}"))?;
+            let (id, report) = self.prefill(&j.tokens, &j.policy, &j.router_name)?;
+            return Ok(ChunkOutcome::Done { id, report });
+        }
+
+        let t_start = Instant::now();
+        let n_layers = self.cfg.model.n_layers;
+        let pool = self.cfg.sparsity.pool_size;
+        let sink = self.cfg.sparsity.sink_size;
+        let local = self.cfg.sparsity.local_size;
+        let sa_buf = self.cfg.sa_buf;
+        let (nh, hd) = (self.cfg.model.n_heads, self.cfg.model.head_dim);
+
+        let j = self
+            .prefill_jobs
+            .get_mut(&job)
+            .ok_or_else(|| anyhow::anyhow!("unknown prefill job {job}"))?;
+        let len = j.tokens.len();
+        anyhow::ensure!(j.consumed < len, "prefill job {job} already complete");
+        let base = j.consumed;
+        let n = j.chunk_tokens.min(len - base);
+        // smallest covering bucket for THIS chunk, not the request-level
+        // maximum — the bucket-padding-waste fix
+        let chunk_bucket = self
+            .cfg
+            .prefill_bucket(n)
+            .ok_or_else(|| anyhow::anyhow!("chunk of {n} tokens exceeds max bucket"))?;
+        let first = base == 0;
+        let meta = [base as i32, n as i32, j.total_bucket as i32];
+        let last = base + n == len;
+
+        let mut hidden = self.weights.embed_tokens(&j.tokens[base..base + n], chunk_bucket);
+        for layer in 0..n_layers {
+            // --- routing: decided on the first chunk (the paper's
+            // context-aware routing on the prompt prefix), pinned after ---
+            let mode = if first {
+                route_layer(
+                    &mut *self.rt,
+                    &self.routers,
+                    &j.policy,
+                    &j.router_name,
+                    &hidden,
+                    n,
+                    pool,
+                    layer,
+                    &mut j.router_us,
+                )?
+            } else {
+                j.modes[layer]
+            };
+            if first {
+                j.modes.push(mode);
+                let sparse = j.decode_mode == DecodeMode::Sparse && mode != AttnMode::Fa;
+                j.rings.push(if sparse {
+                    Some(SparseCache::new(nh, hd, sink, local, sa_buf))
+                } else {
+                    None
+                });
+            }
+
+            // --- chunk execution over the staged prefix (zero-copy) ---
+            let exe = format!("{}_chunk_{}", mode.exe_prefix(), chunk_bucket);
+            let w = &self.weights.layers[layer];
+            let (kt, vt) = j.staging[layer].view();
+            let call_args = [
+                Arg::F32(&hidden),
+                Arg::F32(&w.norm1),
+                Arg::F32(&w.wq),
+                Arg::F32(&w.wk),
+                Arg::F32(&w.wv),
+                Arg::F32(&w.wo),
+                Arg::F32(&w.norm2),
+                Arg::F32(&w.w_ff1),
+                Arg::F32(&w.w_ff2),
+                Arg::F32View(kt),
+                Arg::F32View(vt),
+                Arg::I32(&meta),
+            ];
+            let mut out = self.rt.run(&exe, &call_args)?;
+            anyhow::ensure!(out.len() == 3, "prefill chunk must return (hidden, k, v)");
+            let hist_bytes = (2 * nh * base * hd * 4) as u64;
+            self.rt.note_kv_transfer(&exe, 0, hist_bytes);
+            self.rt.note_prefill_rows(&exe, n as u64, (chunk_bucket - n) as u64);
+            let v = out.pop().unwrap();
+            let k = out.pop().unwrap();
+            hidden = out.pop().unwrap();
+
+            // --- KV landing: staging prefix always (cross-chunk
+            // attention), plus ring-priming for sparse-routed layers ---
+            j.staging[layer].append_prefill_chunk(&k, &v, n);
+            if let Some(ring) = &mut j.rings[layer] {
+                ring.append_prefill_chunk(&k, &v, n);
+            }
+        }
+        j.consumed += n;
+        j.chunks_done += 1;
+        j.compute_us += t_start.elapsed().as_micros() as u64;
+        if !last {
+            return Ok(ChunkOutcome::More { consumed: j.consumed, total_tokens: len });
+        }
+
+        // --- final chunk: first token + promotion to a live request ---
+        let first_token = self.lm_head_last_row(&hidden, n)?;
+        let j = self.prefill_jobs.remove(&job).expect("job present");
+        let modes = j.modes;
+        let caches: Vec<LayerCache> = j
+            .staging
+            .into_iter()
+            .zip(j.rings)
+            .map(|(full, ring)| match ring {
+                Some(r) => LayerCache::Sparse(r),
+                None => LayerCache::Full(full),
+            })
+            .collect();
+        let (id, omsr, kv_bytes) =
+            self.promote_request(caches, &modes, j.decode_mode, len, first_token);
+        Ok(ChunkOutcome::Done {
+            id,
+            report: PrefillReport {
+                bucket: j.total_bucket,
+                prompt_len: len,
                 modes,
                 omsr,
-                total_us: t_start.elapsed().as_micros() as u64,
-                router_us,
+                total_us: j.compute_us,
+                router_us: j.router_us,
                 first_token,
                 kv_bytes,
+                chunks: j.chunks_done,
             },
-        ))
+        })
+    }
+
+    /// Drop a partially-prefilled job, freeing its staged KV (mid-
+    /// prefill cancellation / deadline eviction).
+    pub fn prefill_cancel(&mut self, job: u64) -> bool {
+        self.prefill_jobs.remove(&job).is_some()
     }
 
     /// One decode step: consume the request's `last_token`, produce the
@@ -903,6 +1227,44 @@ impl Engine {
     }
 }
 
+/// One layer's attention-mode decision, shared verbatim by the
+/// monolithic and chunked prefill paths (a divergence here would break
+/// the chunked-vs-monolithic routing contract): static policies are
+/// table lookups; Flux runs the Layer Router on the pooled boundary
+/// descriptor of `hidden`'s first `valid` rows, accumulating the router
+/// wall time into `router_us`.
+#[allow(clippy::too_many_arguments)]
+fn route_layer(
+    rt: &mut dyn Backend,
+    routers: &HashMap<String, RouterNet>,
+    policy: &Policy,
+    router_name: &str,
+    hidden: &HostTensor,
+    valid: usize,
+    pool: usize,
+    layer: usize,
+    router_us: &mut u64,
+) -> Result<AttnMode> {
+    Ok(match policy {
+        Policy::Backbone => AttnMode::Fa,
+        Policy::Static { modes, .. } => modes[layer],
+        Policy::Flux { sa_mode, .. } => {
+            let t0 = Instant::now();
+            let desc = pool_descriptor(hidden, valid, pool);
+            let net = routers
+                .get(router_name)
+                .ok_or_else(|| anyhow::anyhow!("router '{router_name}' missing"))?;
+            let (is_fa, _) = net.route(rt, layer, &desc)?;
+            *router_us += t0.elapsed().as_micros() as u64;
+            if is_fa {
+                AttnMode::Fa
+            } else {
+                *sa_mode
+            }
+        }
+    })
+}
+
 // ---------------------------------------------------------------------------
 // EngineHandle: Send/Sync channel facade for the coordinator
 // ---------------------------------------------------------------------------
@@ -914,23 +1276,37 @@ pub enum EngineJob {
         router: String,
         reply: std::sync::mpsc::Sender<Result<(u64, PrefillReport)>>,
     },
+    /// Open a chunked prefill job (no compute — DESIGN.md §10).
+    PrefillOpen {
+        tokens: Vec<u32>,
+        policy: Policy,
+        router: String,
+        chunk_tokens: usize,
+        reply: std::sync::mpsc::Sender<Result<u64>>,
+    },
+    /// Run the next chunk of an open prefill job.
+    PrefillChunk {
+        job: u64,
+        reply: std::sync::mpsc::Sender<Result<ChunkOutcome>>,
+    },
+    /// Drop a partially-prefilled job, freeing its staged KV.
+    PrefillCancel {
+        job: u64,
+    },
     DecodeStep {
         id: u64,
         reply: std::sync::mpsc::Sender<Result<u32>>,
     },
     /// One token round over the whole active set: per-request results,
     /// timings, KV totals and group occupancy ride on a single reply —
-    /// the scheduler's one engine round-trip per decode round.
+    /// the scheduler's one engine round-trip per decode round. This
+    /// reply piggyback is the ONLY KV-totals channel: the PR-4-era
+    /// `KvTransferTotals` polling job was dead scheduler-facing surface
+    /// and has been deleted (`Engine::kv_transfer_totals` remains for
+    /// in-process callers like the bench harness).
     DecodeBatch {
         ids: Vec<u64>,
         reply: std::sync::mpsc::Sender<DecodeBatchReport>,
-    },
-    /// Snapshot of the KV-interchange counters (bytes moved, borrowed).
-    /// The decode loop no longer polls this (totals ride on
-    /// [`EngineJob::DecodeBatch`] replies); kept for API compatibility
-    /// and tests.
-    KvTransferTotals {
-        reply: std::sync::mpsc::Sender<(u64, u64)>,
     },
     /// Largest admissible prompt length (the biggest prefill bucket) —
     /// the coordinator validates prompts at admission against this.
@@ -974,14 +1350,21 @@ impl EngineHandle {
                         EngineJob::Prefill { tokens, policy, router, reply } => {
                             let _ = reply.send(engine.prefill(&tokens, &policy, &router));
                         }
+                        EngineJob::PrefillOpen { tokens, policy, router, chunk_tokens, reply } => {
+                            let _ = reply
+                                .send(engine.prefill_open(&tokens, &policy, &router, chunk_tokens));
+                        }
+                        EngineJob::PrefillChunk { job, reply } => {
+                            let _ = reply.send(engine.prefill_chunk(job));
+                        }
+                        EngineJob::PrefillCancel { job } => {
+                            engine.prefill_cancel(job);
+                        }
                         EngineJob::DecodeStep { id, reply } => {
                             let _ = reply.send(engine.decode_step(id));
                         }
                         EngineJob::DecodeBatch { ids, reply } => {
                             let _ = reply.send(engine.decode_batch_report(&ids));
-                        }
-                        EngineJob::KvTransferTotals { reply } => {
-                            let _ = reply.send(engine.kv_transfer_totals());
                         }
                         EngineJob::MaxPromptLen { reply } => {
                             let max =
@@ -1012,6 +1395,38 @@ impl EngineHandle {
         rx.recv()?
     }
 
+    /// Open a chunked prefill job (DESIGN.md §10) — validation and
+    /// staging allocation only; chunks run via
+    /// [`EngineHandle::prefill_chunk`].
+    pub fn prefill_open(
+        &self,
+        tokens: Vec<u32>,
+        policy: Policy,
+        router: String,
+        chunk_tokens: usize,
+    ) -> Result<u64> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(EngineJob::PrefillOpen { tokens, policy, router, chunk_tokens, reply })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv()?
+    }
+
+    /// Run the next chunk of prefill job `job`; `Done` promotes the job
+    /// to a live decode-ready request.
+    pub fn prefill_chunk(&self, job: u64) -> Result<ChunkOutcome> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(EngineJob::PrefillChunk { job, reply })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv()?
+    }
+
+    /// Drop a partially-prefilled job, freeing its staged KV.
+    pub fn prefill_cancel(&self, job: u64) {
+        let _ = self.tx.send(EngineJob::PrefillCancel { job });
+    }
+
     pub fn decode_step(&self, id: u64) -> Result<u32> {
         let (reply, rx) = std::sync::mpsc::channel();
         self.tx
@@ -1028,17 +1443,6 @@ impl EngineHandle {
         let (reply, rx) = std::sync::mpsc::channel();
         self.tx
             .send(EngineJob::DecodeBatch { ids, reply })
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        Ok(rx.recv()?)
-    }
-
-    /// KV-interchange counters `(bytes moved, bytes borrowed)` summed
-    /// over all executables — the coordinator folds this into
-    /// [`crate::metrics::ServingMetrics`].
-    pub fn kv_transfer_totals(&self) -> Result<(u64, u64)> {
-        let (reply, rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(EngineJob::KvTransferTotals { reply })
             .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
         Ok(rx.recv()?)
     }

@@ -70,24 +70,11 @@ impl FullCache {
     }
 
     /// Bulk-load prefill outputs `k`, `v` shaped `(H, S_bucket, D)` of
-    /// which the first `valid` columns are real tokens.
+    /// which the first `valid` columns are real tokens — exactly one
+    /// whole-prompt [`FullCache::append_prefill_chunk`] from empty.
     pub fn load_prefill(&mut self, k: &HostTensor, v: &HostTensor, valid: usize) {
-        let (h, d) = (self.n_heads, self.head_dim);
-        assert_eq!(k.shape.len(), 3);
-        assert_eq!(k.shape[0], h);
-        assert_eq!(k.shape[2], d);
-        let s_in = k.shape[1];
-        assert!(valid <= s_in);
-        self.ensure_capacity(valid);
-        for hh in 0..h {
-            for t in 0..valid {
-                let src = (hh * s_in + t) * d;
-                let dst = (hh * self.capacity + t) * d;
-                self.k[dst..dst + d].copy_from_slice(&k.data[src..src + d]);
-                self.v[dst..dst + d].copy_from_slice(&v.data[src..src + d]);
-            }
-        }
-        self.len = valid;
+        self.len = 0;
+        self.append_prefill_chunk(k, v, valid);
     }
 
     /// Append one token's `(H, D)` k/v.
@@ -101,6 +88,31 @@ impl FullCache {
             self.v[dst..dst + d].copy_from_slice(&v_new[hh * d..(hh + 1) * d]);
         }
         self.len += 1;
+    }
+
+    /// Append-at-offset priming for chunked prefill (DESIGN.md §10):
+    /// bulk-append a chunk's `(H, S_chunk, D)` k/v outputs (first
+    /// `valid` rows real) at the current length, leaving the buffer
+    /// bit-identical to a monolithic [`FullCache::load_prefill`] of the
+    /// concatenated prompt — the staged prefix later chunks attend over
+    /// through [`FullCache::view`] with zero copies.
+    pub fn append_prefill_chunk(&mut self, k: &HostTensor, v: &HostTensor, valid: usize) {
+        let (h, d) = (self.n_heads, self.head_dim);
+        assert_eq!(k.shape.len(), 3);
+        assert_eq!(k.shape[0], h);
+        assert_eq!(k.shape[2], d);
+        let s_in = k.shape[1];
+        assert!(valid <= s_in);
+        self.ensure_capacity(self.len + valid);
+        for hh in 0..h {
+            for t in 0..valid {
+                let src = (hh * s_in + t) * d;
+                let dst = (hh * self.capacity + self.len + t) * d;
+                self.k[dst..dst + d].copy_from_slice(&k.data[src..src + d]);
+                self.v[dst..dst + d].copy_from_slice(&v.data[src..src + d]);
+            }
+        }
+        self.len += valid;
     }
 
     fn ensure_capacity(&mut self, need: usize) {
@@ -284,6 +296,34 @@ impl SparseCache {
             let slot = self.sink_len + (t - self.sink_len) % self.local.max(1);
             let (kk, vv) = (grab(k, t), grab(v, t));
             self.write_slot(slot, &kk, &vv);
+        }
+    }
+
+    /// Ring-prime one prefill chunk (DESIGN.md §10): sequentially
+    /// [`SparseCache::append`] the chunk's `(H, S_chunk, D)` k/v rows
+    /// (first `valid` real). Appending chunk by chunk in prompt order
+    /// leaves the ring in exactly the state a monolithic
+    /// [`SparseCache::load_prefill`] of the concatenated prompt would —
+    /// including the write-cursor phase across ring wraps (the
+    /// load-prefill/append equivalence is pinned by
+    /// `sparse_prefill_ring_phase_matches_appends_across_wrap`).
+    pub fn append_prefill_chunk(&mut self, k: &HostTensor, v: &HostTensor, valid: usize) {
+        let (h, d) = (self.n_heads, self.head_dim);
+        assert_eq!(k.shape.len(), 3);
+        assert_eq!(k.shape[0], h);
+        assert_eq!(k.shape[2], d);
+        let s_in = k.shape[1];
+        assert!(valid <= s_in);
+        let hd = h * d;
+        let mut kk = vec![0.0; hd];
+        let mut vv = vec![0.0; hd];
+        for t in 0..valid {
+            for hh in 0..h {
+                let src = (hh * s_in + t) * d;
+                kk[hh * d..(hh + 1) * d].copy_from_slice(&k.data[src..src + d]);
+                vv[hh * d..(hh + 1) * d].copy_from_slice(&v.data[src..src + d]);
+            }
+            self.append(&kk, &vv);
         }
     }
 
@@ -496,6 +536,68 @@ mod tests {
             let (p, _, vp) = by_prefill.view();
             assert_eq!(va, vp, "valid mismatch at prefill len {valid}");
             assert_eq!(a.data, p.data, "ring state mismatch at prefill len {valid}");
+        }
+    }
+
+    /// Chunked priming parity: appending a prompt's k/v chunk by chunk
+    /// must leave both cache kinds bit-identical to one monolithic
+    /// `load_prefill` of the whole prompt — including the sparse ring's
+    /// write-cursor phase across wraps.
+    #[test]
+    fn chunked_priming_matches_monolithic_load_prefill() {
+        let (h, d) = (2usize, 4usize);
+        let s = 16usize;
+        let k = ht(h, s, d, |hh, t, dd| (hh * 1000 + t * 10 + dd) as f32);
+        let v = ht(h, s, d, |hh, t, dd| -((hh * 1000 + t * 10 + dd) as f32));
+        for valid in [5usize, 11, 16] {
+            for chunk in [1usize, 3, 4, 16] {
+                // slice tokens base..base+n out of the (H, S, D) source
+                let slice = |src: &HostTensor, base: usize, n: usize| {
+                    let mut out = vec![0.0; h * n * d];
+                    for hh in 0..h {
+                        for t in 0..n {
+                            let so = (hh * s + base + t) * d;
+                            let dst = (hh * n + t) * d;
+                            out[dst..dst + d].copy_from_slice(&src.data[so..so + d]);
+                        }
+                    }
+                    HostTensor::new(vec![h, n, d], out)
+                };
+
+                let mut full_mono = FullCache::new(h, d, s);
+                full_mono.load_prefill(&k, &v, valid);
+                let mut full_chunked = FullCache::new(h, d, s);
+                let mut sparse_mono = SparseCache::new(h, d, 2, 3, 8);
+                sparse_mono.load_prefill(&k, &v, valid);
+                let mut sparse_chunked = SparseCache::new(h, d, 2, 3, 8);
+
+                let mut base = 0;
+                while base < valid {
+                    let n = chunk.min(valid - base);
+                    let (kc, vc) = (slice(&k, base, n), slice(&v, base, n));
+                    full_chunked.append_prefill_chunk(&kc, &vc, n);
+                    sparse_chunked.append_prefill_chunk(&kc, &vc, n);
+                    base += n;
+                }
+
+                assert_eq!(full_chunked.len(), full_mono.len());
+                let (km, vm) = full_mono.view();
+                let (kc2, vc2) = full_chunked.view();
+                assert_eq!(km.data, kc2.data, "full k diverged (valid {valid} chunk {chunk})");
+                assert_eq!(vm.data, vc2.data, "full v diverged (valid {valid} chunk {chunk})");
+
+                // ring phase must match too: keep appending past the wrap
+                for extra in 0..4 {
+                    let x = vec![(200 + extra) as f32; h * d];
+                    sparse_mono.append(&x, &x);
+                    sparse_chunked.append(&x, &x);
+                }
+                let (km2, vm2, len_m) = sparse_mono.view();
+                let (kc3, vc3, len_c) = sparse_chunked.view();
+                assert_eq!(len_m, len_c);
+                assert_eq!(km2.data, kc3.data, "ring k diverged (valid {valid} chunk {chunk})");
+                assert_eq!(vm2.data, vc3.data, "ring v diverged (valid {valid} chunk {chunk})");
+            }
         }
     }
 

@@ -3,6 +3,9 @@
 //!
 //! Usage:
 //!   flux [--artifacts DIR] serve [--addr HOST:PORT] [--deadline-ms N]
+//!                                [--chunk-tokens N] [--chunk-budget N]
+//!        (chunk-tokens 0 = monolithic prefill; default 128 interleaves
+//!        prefill chunks with batched decode rounds, DESIGN.md §10)
 //!   flux [--artifacts DIR] generate [--task T] [--seq-len N]
 //!                                   [--policy P] [--router R] [--sparse-decode]
 //!                                   [--stream] [--deadline-ms N]
@@ -120,8 +123,13 @@ fn main() -> Result<()> {
         "serve" => {
             let cfg = MetaConfig::load(&artifacts)?;
             let engine = EngineHandle::spawn(artifacts.clone())?;
+            let defaults = ServingConfig::default();
             let scfg = ServingConfig {
                 default_deadline_ms: args.get_opt_u64("deadline-ms"),
+                prefill_chunk_tokens: args
+                    .get_usize("chunk-tokens", defaults.prefill_chunk_tokens),
+                prefill_chunk_budget: args
+                    .get_usize("chunk-budget", defaults.prefill_chunk_budget),
                 ..Default::default()
             };
             let coord = Coordinator::start(engine, scfg);
@@ -262,6 +270,7 @@ fn main() -> Result<()> {
             eprintln!("usage: flux [--artifacts DIR] <serve|generate|experiment|bench-serve|bench|synth|info> [flags]");
             eprintln!("  generate --stream streams tokens through the session API as they decode");
             eprintln!("  bench sweeps batched decode at batch sizes 1/2/4/8 (FLUX_BATCH_DECODE=0 forces serial)");
+            eprintln!("  serve --chunk-tokens N sizes prefill chunks (0 = monolithic), --chunk-budget N caps chunks per decode round");
             eprintln!("experiment ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves all");
             Ok(())
         }

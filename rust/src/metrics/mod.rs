@@ -97,6 +97,14 @@ pub struct ServingMetrics {
     pub fa_group_slots: u64,
     /// Same for the SA (sparse-ring) groups.
     pub sa_group_slots: u64,
+    /// Prefill chunk calls executed (DESIGN.md §10) — a monolithic
+    /// prefill counts as one chunk, so chunks per completed request
+    /// shows how finely long prompts are being interleaved.
+    pub prefill_chunks: u64,
+    /// Cumulative time decode rounds spent waiting on prefill chunk
+    /// work between rounds — the interference the chunked scheduler
+    /// bounds at `prefill_chunk_budget` chunks per round.
+    pub decode_stall_us: u64,
     /// KV-cache bytes physically copied while staging decode arguments
     /// (absolute engine totals; ~0 on the zero-copy fast path)
     pub kv_bytes_moved: u64,
@@ -131,6 +139,7 @@ impl ServingMetrics {
             "requests={} rejected={} cancelled={} expired={} failed={} tokens={} \
              stream_p50={}tok ttft_p50={:.1}ms ttft_p95={:.1}ms \
              decode_p50={:.2}ms decode_tput={:.1}tok/s rounds={} batch_p50={}req \
+             prefill_chunks={} decode_stall={:.1}ms \
              fa_slots={} sa_slots={} kv_moved={}B kv_borrowed={}B",
             self.requests_completed,
             self.requests_rejected,
@@ -145,6 +154,8 @@ impl ServingMetrics {
             self.decode_throughput_tok_s(),
             self.decode_rounds,
             self.decode_batch_size.p50_us(),
+            self.prefill_chunks,
+            self.decode_stall_us as f64 / 1e3,
             self.fa_group_slots,
             self.sa_group_slots,
             self.kv_bytes_moved,
@@ -203,6 +214,21 @@ mod tests {
         assert!(s.contains("batch_p50="), "{s}");
         assert!(s.contains("fa_slots=12"), "{s}");
         assert!(s.contains("sa_slots=8"), "{s}");
+    }
+
+    #[test]
+    fn summary_reports_chunked_prefill_and_stall() {
+        let mut m = ServingMetrics::default();
+        m.prefill_chunks = 9;
+        m.decode_stall_us = 2500;
+        m.ttft.record_us(1000);
+        m.ttft.record_us(3000);
+        let s = m.summary();
+        assert!(s.contains("prefill_chunks=9"), "{s}");
+        assert!(s.contains("decode_stall=2.5ms"), "{s}");
+        // TTFT is a histogram: both percentiles come from samples
+        assert_eq!(m.ttft.count(), 2);
+        assert!(s.contains("ttft_p95="), "{s}");
     }
 
     #[test]

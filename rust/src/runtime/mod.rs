@@ -141,6 +141,13 @@ pub struct ExeStats {
     /// KV-cache bytes staged as borrowed views instead of copies — the
     /// "copies avoided" counter of the zero-copy interchange.
     pub kv_bytes_borrowed: u64,
+    /// Prefill rows that carried real prompt tokens — with
+    /// `rows_padded`, the bucket-padding compute-utilization ledger
+    /// (`flux bench` reports valid/(valid+padded) per configuration).
+    pub rows_valid: u64,
+    /// Prefill rows that were bucket padding (computed as zeros or
+    /// skipped, but occupying the executable's row budget either way).
+    pub rows_padded: u64,
 }
 
 /// An executable provider: loads named executables from the artifact
@@ -175,6 +182,14 @@ pub trait Backend {
         let _ = (exe, bytes_moved, bytes_borrowed);
     }
 
+    /// Record prefill row accounting for `exe`: rows that carried real
+    /// prompt tokens vs bucket-padding rows. The engine calls this once
+    /// per prefill layer call; backends fold it into [`Backend::stats`]
+    /// so `flux bench` can report compute utilization. Default: dropped.
+    fn note_prefill_rows(&mut self, exe: &str, rows_valid: u64, rows_padded: u64) {
+        let _ = (exe, rows_valid, rows_padded);
+    }
+
     /// Set the kernel worker count for backends with host-side compute
     /// (the reference kernels). No-op for device backends; results are
     /// bit-identical for every worker count (DESIGN.md §7).
@@ -188,6 +203,17 @@ pub trait Backend {
     /// device backends default to `false`; the engine only appends the
     /// argument when the backend opts in.
     fn accepts_prefill_valid_arg(&self) -> bool {
+        false
+    }
+
+    /// Whether the backend serves the history-aware chunked prefill
+    /// entry points (`layer_{mode}_prefill_chunk_{S}` — DESIGN.md §10),
+    /// which attend a bucketed prompt chunk over the request's
+    /// already-staged KV prefix passed as borrowed views. The AOT
+    /// artifacts only lower the empty-history monolithic layers, so
+    /// device backends default to `false`; the engine then degrades a
+    /// chunked prefill job to one monolithic prefill call.
+    fn accepts_prefill_chunks(&self) -> bool {
         false
     }
 

@@ -155,4 +155,12 @@ impl Backend for PjrtBackend {
     fn accepts_decode_batch(&self) -> bool {
         false
     }
+
+    /// The history-aware chunked prefill kernels (DESIGN.md §10) are
+    /// likewise host-backend-only: the AOT layers assume an empty KV
+    /// history. The engine degrades a chunked prefill job to one
+    /// monolithic prefill call here.
+    fn accepts_prefill_chunks(&self) -> bool {
+        false
+    }
 }

@@ -23,7 +23,11 @@
 //!   `decode_attend_fa_{K}`, `decode_attend_sa`, `router`, `lm_head`;
 //! host-backend-only batched decode entry points (DESIGN.md §9):
 //!   `decode_qkv_batch`, `attend_batch_fa`, `attend_batch_sa`,
-//!   `lm_head_batch` — advertised via `Backend::accepts_decode_batch`.
+//!   `lm_head_batch` — advertised via `Backend::accepts_decode_batch`;
+//! host-backend-only chunked prefill entry points (DESIGN.md §10):
+//!   `layer_{fa,ssa,ta,xa}_prefill_chunk_{S}` — a bucketed prompt chunk
+//!   attending over the request's staged KV prefix, advertised via
+//!   `Backend::accepts_prefill_chunks`.
 
 use std::collections::{HashMap, HashSet};
 use std::time::Instant;
@@ -45,6 +49,9 @@ enum Mode {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum ExeKind {
     Prefill { mode: Mode, bucket: usize },
+    /// history-aware chunked prefill: one bucketed prompt chunk
+    /// attending over the request's staged KV prefix (DESIGN.md §10)
+    PrefillChunk { mode: Mode, bucket: usize },
     DecodeQkv,
     DecodeAttend { kbuf: usize },
     /// batched stage-1 projection over a whole decode round (B rows)
@@ -95,13 +102,22 @@ impl RefBackend {
                 "xa" => Mode::Xa,
                 other => anyhow::bail!("unknown attention mode '{other}' in '{exe}'"),
             };
-            let bucket: usize = rest[sep + "_prefill_".len()..].parse()?;
+            let tail = &rest[sep + "_prefill_".len()..];
+            let (chunked, bucket_str) = match tail.strip_prefix("chunk_") {
+                Some(b) => (true, b),
+                None => (false, tail),
+            };
+            let bucket: usize = bucket_str.parse()?;
             anyhow::ensure!(
                 self.cfg.prefill_buckets.contains(&bucket),
                 "prefill bucket {bucket} not in config buckets {:?}",
                 self.cfg.prefill_buckets
             );
-            return Ok(ExeKind::Prefill { mode, bucket });
+            return Ok(if chunked {
+                ExeKind::PrefillChunk { mode, bucket }
+            } else {
+                ExeKind::Prefill { mode, bucket }
+            });
         }
         if exe == "decode_qkv" {
             return Ok(ExeKind::DecodeQkv);
@@ -142,6 +158,7 @@ impl RefBackend {
     fn dispatch(&self, exe: &str, args: &[Arg]) -> Result<Vec<HostTensor>> {
         match self.parse_exe(exe)? {
             ExeKind::Prefill { mode, bucket } => self.prefill_layer(mode, bucket, args),
+            ExeKind::PrefillChunk { mode, bucket } => self.prefill_chunk(mode, bucket, args),
             ExeKind::DecodeQkv => self.decode_qkv(args),
             ExeKind::DecodeAttend { kbuf } => self.decode_attend(kbuf, args),
             ExeKind::DecodeQkvBatch => self.decode_qkv_batch(args),
@@ -166,7 +183,7 @@ impl RefBackend {
     /// exact).
     fn prefill_layer(&self, mode: Mode, s: usize, args: &[Arg]) -> Result<Vec<HostTensor>> {
         let m = &self.cfg.model;
-        let (d, h, dd, ff) = (m.d_model, m.n_heads, m.head_dim, m.d_ff);
+        let (d, ff) = (m.d_model, m.d_ff);
         anyhow::ensure!(
             args.len() == 9 || args.len() == 10,
             "prefill layer expects 9 args (+ optional valid length), got {}",
@@ -195,6 +212,113 @@ impl RefBackend {
         } else {
             s
         };
+        self.prefill_impl(
+            mode,
+            s,
+            x,
+            [norm1, wq, wk, wv, wo, norm2, w_ff1, w_ff2],
+            valid,
+            None,
+            0,
+            s,
+        )
+    }
+
+    /// History-aware chunked prefill layer (DESIGN.md §10): one bucketed
+    /// prompt chunk attending over the request's already-staged KV
+    /// prefix, passed as zero-copy views.
+    /// Args: x (Sc,d) — chunk hidden rows with a zero tail past `valid`;
+    /// norm1 (d); wq/wk/wv/wo (d,d); norm2 (d); w_ff1 (d,ff);
+    /// w_ff2 (ff,d); k_hist/v_hist (H, C, D) — the staged prefix in
+    /// natural append order (C ≥ base; rows `base..C` are ignored);
+    /// meta (3,) i32 = [base, valid, total_bucket] where `base` is the
+    /// chunk's absolute start position (== staged history length),
+    /// `valid` the real token rows in this chunk, and `total_bucket`
+    /// the request-level monolithic bucket (governs the TA dense-tail
+    /// condition and the XA threshold row width).
+    /// Returns (x_out (Sc,d), k (H,Sc,D), v (H,Sc,D)) for the chunk
+    /// rows — bit-identical to the same rows of a monolithic prefill
+    /// at bucket `total_bucket` (pinned by `tests/chunked.rs`).
+    fn prefill_chunk(&self, mode: Mode, s: usize, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let m = &self.cfg.model;
+        let (d, h, dd, ff) = (m.d_model, m.n_heads, m.head_dim, m.d_ff);
+        anyhow::ensure!(
+            args.len() == 12,
+            "prefill chunk expects 12 args (x, 8 weights, k_hist, v_hist, meta), got {}",
+            args.len()
+        );
+        let x = args[0].f32()?;
+        want(x, &[s, d], "chunk x")?;
+        let norm1 = args[1].f32()?;
+        let wq = args[2].f32()?;
+        let wk = args[3].f32()?;
+        let wv = args[4].f32()?;
+        let wo = args[5].f32()?;
+        let norm2 = args[6].f32()?;
+        let w_ff1 = args[7].f32()?;
+        let w_ff2 = args[8].f32()?;
+        want(norm1, &[d], "norm1")?;
+        want(wq, &[d, d], "wq")?;
+        want(w_ff1, &[d, ff], "w_ff1")?;
+        want(w_ff2, &[ff, d], "w_ff2")?;
+        let kc = args[9].view()?;
+        let vc = args[10].view()?;
+        anyhow::ensure!(
+            kc.shape.len() == 3 && kc.shape[0] == h && kc.shape[2] == dd,
+            "chunk k_hist: expected (H, C, D), got {:?}",
+            kc.shape
+        );
+        let cap = kc.shape[1];
+        want_view(&vc, &[h, cap, dd], "chunk v_hist")?;
+        let meta = args[11].i32()?;
+        anyhow::ensure!(meta.len() == 3, "chunk meta must be [base, valid, total_bucket]");
+        let (base, valid, total) = (meta[0] as usize, meta[1] as usize, meta[2] as usize);
+        anyhow::ensure!((1..=s).contains(&valid), "chunk valid {valid} out of range 1..={s}");
+        anyhow::ensure!(base <= cap, "history length {base} exceeds staged capacity {cap}");
+        anyhow::ensure!(
+            base + valid <= total,
+            "chunk rows {base}+{valid} exceed total bucket {total}"
+        );
+        self.prefill_impl(
+            mode,
+            s,
+            x,
+            [norm1, wq, wk, wv, wo, norm2, w_ff1, w_ff2],
+            valid,
+            Some((kc, vc)),
+            base,
+            total,
+        )
+    }
+
+    /// Shared prefill math for the empty-history monolithic layers and
+    /// the history-aware chunk layers. `base` is the chunk's absolute
+    /// start position (== the staged history length), `total` the
+    /// request-level monolithic bucket; the monolithic path calls with
+    /// `base == 0`, no history and `total == s`. Every per-row
+    /// computation — RMSNorm, the matmul accumulation order, RoPE at
+    /// absolute positions, ascending-absolute-j attention through
+    /// [`attend_hist`] — is independent of how the prompt was split, so
+    /// chunked output is bit-identical to monolithic output.
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_impl(
+        &self,
+        mode: Mode,
+        s: usize,
+        x: &HostTensor,
+        w: [&HostTensor; 8],
+        valid: usize,
+        hist: Option<(super::TensorView<'_>, super::TensorView<'_>)>,
+        base: usize,
+        total: usize,
+    ) -> Result<Vec<HostTensor>> {
+        let m = &self.cfg.model;
+        let (d, h, dd, ff) = (m.d_model, m.n_heads, m.head_dim, m.d_ff);
+        let [norm1, wq, wk, wv, wo, norm2, w_ff1, w_ff2] = w;
+        let (hist_k, hist_v, hist_cap) = match &hist {
+            Some((k, v)) => (k.data, v.data, k.shape[1]),
+            None => (&[][..], &[][..], 0usize),
+        };
         let nt = self.threads;
 
         let eps = m.rms_eps as f32;
@@ -204,22 +328,24 @@ impl RefBackend {
         let v = matmul_mt(&xn, &wv.data, valid, d, d, nt);
 
         // (valid, d) -> per-head (H, S, D) with a zero tail, RoPE on q
-        // and k at absolute positions 0..valid.
+        // and k at absolute positions base..base+valid.
         let mut qh = to_heads_padded(&q, valid, s, h, dd);
         let mut kh = to_heads_padded(&k, valid, s, h, dd);
         let vh = to_heads_padded(&v, valid, s, h, dd);
         for hh in 0..h {
             for t in 0..valid {
                 let o = (hh * s + t) * dd;
-                rope_in_place(&mut qh[o..o + dd], t, m.rope_theta);
-                rope_in_place(&mut kh[o..o + dd], t, m.rope_theta);
+                rope_in_place(&mut qh[o..o + dd], base + t, m.rope_theta);
+                rope_in_place(&mut kh[o..o + dd], base + t, m.rope_theta);
             }
         }
 
         // XAttention selects kv blocks once per layer from the roped
-        // q/k (head-summed antidiagonal scores, ref.py xattn_block_mask).
+        // q/k (head-summed antidiagonal scores, ref.py xattn_block_mask)
+        // — scored over history + chunk so retrieval reaches any prefix
+        // block, with the threshold row width fixed by `total`.
         let xa_sel = if mode == Mode::Xa {
-            Some(self.xa_selected_blocks(&qh, &kh, s)?)
+            Some(self.xa_selected_blocks(&qh, &kh, s, valid, base, total, hist_k, hist_cap)?)
         } else {
             None
         };
@@ -227,17 +353,20 @@ impl RefBackend {
         let sp = &self.cfg.sparsity;
         let (sink, local, last_q) = (sp.sink_size, sp.local_size, sp.triangle_last_q);
         let block = sp.block_size;
+        let nb_total = if block > 0 { total / block } else { 0 };
 
-        // per-row kv index sets, computed once and shared by all heads
+        // per-row kv index sets over ABSOLUTE positions, computed once
+        // and shared by all heads
         let mut js_all: Vec<Vec<usize>> = Vec::with_capacity(valid);
         let mut attn_pairs = 0usize;
-        for i in 0..valid {
+        for t in 0..valid {
+            let i = base + t;
             let mut js: Vec<usize> = Vec::new();
             match mode {
                 Mode::Fa => js.extend(0..=i),
                 Mode::Ssa => js.extend((0..=i).filter(|&j| j < sink || i - j < local)),
                 Mode::Ta => {
-                    if i + last_q >= s {
+                    if i + last_q >= total {
                         js.extend(0..=i); // dense last-q rows
                     } else {
                         js.extend((0..=i).filter(|&j| j < sink || i - j < local));
@@ -245,8 +374,7 @@ impl RefBackend {
                 }
                 Mode::Xa => {
                     let sel = xa_sel.as_ref().unwrap();
-                    let nb = s / block;
-                    js.extend((0..=i).filter(|&j| sel[(i / block) * nb + j / block]));
+                    js.extend((0..=i).filter(|&j| sel[(t / block) * nb_total + j / block]));
                 }
             }
             attn_pairs += js.len();
@@ -254,19 +382,32 @@ impl RefBackend {
         }
 
         // attention, parallel over heads (disjoint ctx slices; each head
-        // runs the identical serial row loop -> bit-identical results)
+        // runs the identical serial row loop -> bit-identical results);
+        // absolute kv index j < base reads the staged history views,
+        // j >= base the chunk's own roped k/v
         let mut ctx = vec![0f32; h * s * dd];
         let attn_threads = par_threads(nt, h, attn_pairs * h * dd);
         par_rows(attn_threads, &mut ctx, h, s * dd, |hh, ctx_h| {
-            let base = hh * s * dd;
-            for i in 0..valid {
-                attend_one(
-                    &qh[base + i * dd..base + (i + 1) * dd],
-                    &kh[base..base + s * dd],
-                    &vh[base..base + s * dd],
+            let cur = hh * s * dd;
+            let (hk, hv) = if hist_cap > 0 {
+                (
+                    &hist_k[hh * hist_cap * dd..(hh + 1) * hist_cap * dd],
+                    &hist_v[hh * hist_cap * dd..(hh + 1) * hist_cap * dd],
+                )
+            } else {
+                (&[][..], &[][..])
+            };
+            for t in 0..valid {
+                attend_hist(
+                    &qh[cur + t * dd..cur + (t + 1) * dd],
+                    hk,
+                    hv,
+                    &kh[cur..cur + s * dd],
+                    &vh[cur..cur + s * dd],
+                    base,
                     dd,
-                    &js_all[i],
-                    &mut ctx_h[i * dd..(i + 1) * dd],
+                    &js_all[t],
+                    &mut ctx_h[t * dd..(t + 1) * dd],
                 );
             }
         });
@@ -307,26 +448,59 @@ impl RefBackend {
     /// every causal (q-block, kv-block) pair by strided antidiagonal
     /// |q.k| probes summed over heads; keep the per-row top-`keep`
     /// blocks plus the structural sink / local / diagonal blocks.
-    fn xa_selected_blocks(&self, qh: &[f32], kh: &[f32], s: usize) -> Result<Vec<bool>> {
+    ///
+    /// Generalized over a staged history prefix: q rows come from the
+    /// current chunk (`s` rows starting at absolute position `base`),
+    /// kv rows from history (`j < base`, the `hist_k` views) or the
+    /// chunk itself. `total` fixes the threshold row width (`nb_total`)
+    /// so per-row top-`keep` selection matches the monolithic
+    /// computation exactly; only row blocks holding valid rows are
+    /// scored (rows past `valid` never consult the selection).
+    #[allow(clippy::too_many_arguments)]
+    fn xa_selected_blocks(
+        &self,
+        qh: &[f32],
+        kh: &[f32],
+        s: usize,
+        valid: usize,
+        base: usize,
+        total: usize,
+        hist_k: &[f32],
+        hist_cap: usize,
+    ) -> Result<Vec<bool>> {
         let sp = &self.cfg.sparsity;
         let (h, dd) = (self.cfg.model.n_heads, self.cfg.model.head_dim);
         let block = sp.block_size;
         anyhow::ensure!(s % block == 0, "bucket {s} not divisible by block {block}");
-        let nb = s / block;
+        anyhow::ensure!(base % block == 0, "chunk base {base} not divisible by block {block}");
+        anyhow::ensure!(total % block == 0, "total bucket {total} not divisible by block {block}");
+        let nb_total = total / block;
+        let ncb = s / block;
+        let b0 = base / block;
+        // only row blocks containing valid rows need a selection — this
+        // also keeps bi < nb_total when a short last chunk's bucket
+        // overhangs the total bucket
+        let ncb_used = ncb.min(valid.div_ceil(block));
         let scale = 1.0 / (dd as f32).sqrt();
         let stride = sp.xattn_stride.max(1);
 
-        let mut scores = vec![0f32; nb * nb];
+        let mut scores = vec![0f32; ncb * nb_total];
         for hh in 0..h {
-            let base = hh * s * dd;
-            for bi in 0..nb {
+            let qbase = hh * s * dd;
+            for rb in 0..ncb_used {
+                let bi = b0 + rb;
                 for bj in 0..=bi {
                     let mut acc = 0f32;
                     let mut r = 0usize;
                     while r < block {
                         let c = block - 1 - r; // (block-1-r) % block for r < block
-                        let qrow = &qh[base + (bi * block + r) * dd..][..dd];
-                        let krow = &kh[base + (bj * block + c) * dd..][..dd];
+                        let qrow = &qh[qbase + (rb * block + r) * dd..][..dd];
+                        let j = bj * block + c; // absolute kv row
+                        let krow = if j < base {
+                            &hist_k[(hh * hist_cap + j) * dd..][..dd]
+                        } else {
+                            &kh[qbase + (j - base) * dd..][..dd]
+                        };
                         let mut dot = 0f32;
                         for t in 0..dd {
                             dot += qrow[t] * krow[t];
@@ -334,28 +508,26 @@ impl RefBackend {
                         acc += (dot * scale).abs();
                         r += stride;
                     }
-                    scores[bi * nb + bj] += acc;
+                    scores[rb * nb_total + bj] += acc;
                 }
             }
         }
         const NEG_INF: f32 = -1e30;
-        for bi in 0..nb {
-            for bj in (bi + 1)..nb {
-                scores[bi * nb + bj] = NEG_INF;
-            }
-        }
 
-        let keep = ((nb as f64 * sp.xattn_keep_ratio) as usize).max(1);
+        let keep = ((nb_total as f64 * sp.xattn_keep_ratio) as usize).max(1);
         let sink_blocks = (sp.sink_size / block).max(1);
         let local_blocks = (sp.local_size / block).max(1);
-        let mut sel = vec![false; nb * nb];
-        for bi in 0..nb {
-            let mut row: Vec<f32> = scores[bi * nb..(bi + 1) * nb].to_vec();
+        let mut sel = vec![false; ncb * nb_total];
+        for rb in 0..ncb_used {
+            let bi = b0 + rb;
+            let mut row: Vec<f32> = (0..nb_total)
+                .map(|bj| if bj <= bi { scores[rb * nb_total + bj] } else { NEG_INF })
+                .collect();
             row.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-            let thresh = row[nb - keep];
+            let thresh = row[nb_total - keep];
             for bj in 0..=bi {
                 let structural = bj < sink_blocks || (bi - bj) < local_blocks;
-                sel[bi * nb + bj] = structural || scores[bi * nb + bj] >= thresh;
+                sel[rb * nb_total + bj] = structural || scores[rb * nb_total + bj] >= thresh;
             }
         }
         Ok(sel)
@@ -719,6 +891,12 @@ impl Backend for RefBackend {
         st.kv_bytes_borrowed += bytes_borrowed;
     }
 
+    fn note_prefill_rows(&mut self, exe: &str, rows_valid: u64, rows_padded: u64) {
+        let st = self.stats.entry(exe.to_string()).or_default();
+        st.rows_valid += rows_valid;
+        st.rows_padded += rows_padded;
+    }
+
     fn set_threads(&mut self, n: usize) {
         self.threads = n.max(1);
     }
@@ -728,6 +906,10 @@ impl Backend for RefBackend {
     }
 
     fn accepts_decode_batch(&self) -> bool {
+        true
+    }
+
+    fn accepts_prefill_chunks(&self) -> bool {
         true
     }
 }
@@ -931,12 +1113,38 @@ fn to_heads_padded(x: &[f32], valid: usize, s: usize, h: usize, dd: usize) -> Ve
 /// indices into the `(K, D)` per-head k/v slices). Shared verbatim by
 /// prefill rows and decode steps — the teacher-forcing parity anchor.
 fn attend_one(q: &[f32], k: &[f32], v: &[f32], dd: usize, js: &[usize], out: &mut [f32]) {
+    attend_hist(q, &[], &[], k, v, 0, dd, js, out);
+}
+
+/// The general two-segment form of [`attend_one`]: `js` holds ascending
+/// ABSOLUTE indices; `j < split` reads row `j` of the staged-history
+/// per-head slices, `j >= split` row `j - split` of the current chunk's
+/// slices. The floating-point op sequence depends only on `js` and the
+/// row values — never on which segment a row lives in — so the chunked
+/// prefill path (`split > 0`) is bit-identical to attending over the
+/// virtual concatenation, which is what the monolithic path computes.
+#[allow(clippy::too_many_arguments)]
+fn attend_hist(
+    q: &[f32],
+    k_hist: &[f32],
+    v_hist: &[f32],
+    k_cur: &[f32],
+    v_cur: &[f32],
+    split: usize,
+    dd: usize,
+    js: &[usize],
+    out: &mut [f32],
+) {
     debug_assert!(!js.is_empty());
     let scale = 1.0 / (dd as f32).sqrt();
     let mut scores = Vec::with_capacity(js.len());
     let mut maxv = f32::NEG_INFINITY;
     for &j in js {
-        let kr = &k[j * dd..(j + 1) * dd];
+        let kr = if j < split {
+            &k_hist[j * dd..(j + 1) * dd]
+        } else {
+            &k_cur[(j - split) * dd..(j - split + 1) * dd]
+        };
         let mut dot = 0f32;
         for t in 0..dd {
             dot += q[t] * kr[t];
@@ -955,7 +1163,11 @@ fn attend_one(q: &[f32], k: &[f32], v: &[f32], dd: usize, js: &[usize], out: &mu
     out.fill(0.0);
     for (idx, &j) in js.iter().enumerate() {
         let w = scores[idx];
-        let vr = &v[j * dd..(j + 1) * dd];
+        let vr = if j < split {
+            &v_hist[j * dd..(j + 1) * dd]
+        } else {
+            &v_cur[(j - split) * dd..(j - split + 1) * dd]
+        };
         for t in 0..dd {
             out[t] += w * vr[t];
         }
@@ -1007,6 +1219,16 @@ mod tests {
             ExeKind::AttendBatch { sparse: true }
         ));
         assert!(matches!(b.parse_exe("lm_head_batch").unwrap(), ExeKind::LmHeadBatch));
+        // chunked prefill entry points (DESIGN.md §10)
+        assert!(matches!(
+            b.parse_exe("layer_fa_prefill_chunk_128").unwrap(),
+            ExeKind::PrefillChunk { mode: Mode::Fa, bucket: 128 }
+        ));
+        assert!(matches!(
+            b.parse_exe("layer_xa_prefill_chunk_256").unwrap(),
+            ExeKind::PrefillChunk { mode: Mode::Xa, bucket: 256 }
+        ));
+        assert!(b.parse_exe("layer_fa_prefill_chunk_77").is_err()); // not a bucket
         assert!(b.parse_exe("layer_fa_prefill_77").is_err()); // not a bucket
         assert!(b.parse_exe("warp_drive").is_err());
     }
@@ -1348,6 +1570,123 @@ mod tests {
                     &serial[0].data[..],
                     &logits_b[0].data[bi * m.vocab_size..(bi + 1) * m.vocab_size],
                     "lm_head row {bi} diverged ({threads} workers)"
+                );
+            }
+        }
+    }
+
+    /// The chunked-prefill determinism contract at the kernel level:
+    /// splitting a prompt into history-aware chunk calls must reproduce
+    /// the monolithic layer's outputs row for row, bit for bit — per
+    /// mode, across the TA dense tail and the XA block-threshold width.
+    #[test]
+    fn chunked_prefill_kernel_matches_monolithic_rows() {
+        let mut b = backend();
+        let m = b.cfg.model.clone();
+        let (d, h, dd) = (m.d_model, m.n_heads, m.head_dim);
+        let total = 128usize; // monolithic bucket == chunk bucket here
+        let valid = 100usize;
+        let split = 64usize; // chunk boundary (multiple of block 16)
+        let n1 = HostTensor::new(vec![d], vec![1.0; d]);
+        let wq = mk_tensor(vec![d, d], 82);
+        let wk = mk_tensor(vec![d, d], 83);
+        let wv = mk_tensor(vec![d, d], 84);
+        let wo = mk_tensor(vec![d, d], 85);
+        let n2 = n1.clone();
+        let f1 = mk_tensor(vec![d, m.d_ff], 86);
+        let f2 = mk_tensor(vec![m.d_ff, d], 87);
+        for mode in ["fa", "ssa", "ta", "xa"] {
+            let mono_exe = format!("layer_{mode}_prefill_{total}");
+            let chunk_exe = format!("layer_{mode}_prefill_chunk_{total}");
+            b.load(&mono_exe).unwrap();
+            b.load(&chunk_exe).unwrap();
+            let mut x = mk_tensor(vec![total, d], 81);
+            for i in valid * d..total * d {
+                x.data[i] = 0.0;
+            }
+            let valid_arr = [valid as i32];
+            let mono = b
+                .run(
+                    &mono_exe,
+                    &[
+                        Arg::F32(&x), Arg::F32(&n1), Arg::F32(&wq), Arg::F32(&wk),
+                        Arg::F32(&wv), Arg::F32(&wo), Arg::F32(&n2), Arg::F32(&f1),
+                        Arg::F32(&f2), Arg::I32(&valid_arr),
+                    ],
+                )
+                .unwrap();
+
+            // chunk 1: rows 0..split, empty history
+            let mut x1 = HostTensor::zeros(vec![total, d]);
+            x1.data[..split * d].copy_from_slice(&x.data[..split * d]);
+            let empty = HostTensor::zeros(vec![h, 0, dd]);
+            let meta1 = [0i32, split as i32, total as i32];
+            let c1 = b
+                .run(
+                    &chunk_exe,
+                    &[
+                        Arg::F32(&x1), Arg::F32(&n1), Arg::F32(&wq), Arg::F32(&wk),
+                        Arg::F32(&wv), Arg::F32(&wo), Arg::F32(&n2), Arg::F32(&f1),
+                        Arg::F32(&f2), Arg::F32View(empty.view()), Arg::F32View(empty.view()),
+                        Arg::I32(&meta1),
+                    ],
+                )
+                .unwrap();
+
+            // stage chunk 1's k/v as the history prefix (natural order)
+            let mut hist_k = HostTensor::zeros(vec![h, total, dd]);
+            let mut hist_v = HostTensor::zeros(vec![h, total, dd]);
+            for hh in 0..h {
+                let o = hh * total * dd;
+                hist_k.data[o..o + split * dd].copy_from_slice(&c1[1].data[o..o + split * dd]);
+                hist_v.data[o..o + split * dd].copy_from_slice(&c1[2].data[o..o + split * dd]);
+            }
+
+            // chunk 2: rows split..valid attending over the prefix
+            let n2_rows = valid - split;
+            let mut x2 = HostTensor::zeros(vec![total, d]);
+            x2.data[..n2_rows * d].copy_from_slice(&x.data[split * d..valid * d]);
+            let meta2 = [split as i32, n2_rows as i32, total as i32];
+            let c2 = b
+                .run(
+                    &chunk_exe,
+                    &[
+                        Arg::F32(&x2), Arg::F32(&n1), Arg::F32(&wq), Arg::F32(&wk),
+                        Arg::F32(&wv), Arg::F32(&wo), Arg::F32(&n2), Arg::F32(&f1),
+                        Arg::F32(&f2), Arg::F32View(hist_k.view()), Arg::F32View(hist_v.view()),
+                        Arg::I32(&meta2),
+                    ],
+                )
+                .unwrap();
+
+            // hidden rows: chunk 1 == mono[0..split], chunk 2 == mono[split..valid]
+            assert_eq!(
+                &c1[0].data[..split * d],
+                &mono[0].data[..split * d],
+                "{mode}: chunk 1 hidden rows diverged"
+            );
+            assert_eq!(
+                &c2[0].data[..n2_rows * d],
+                &mono[0].data[split * d..valid * d],
+                "{mode}: chunk 2 hidden rows diverged"
+            );
+            // k/v rows per head, at the chunk-local offsets
+            for hh in 0..h {
+                let o = hh * total * dd;
+                assert_eq!(
+                    &c1[1].data[o..o + split * dd],
+                    &mono[1].data[o..o + split * dd],
+                    "{mode}: chunk 1 k rows diverged (head {hh})"
+                );
+                assert_eq!(
+                    &c2[1].data[o..o + n2_rows * dd],
+                    &mono[1].data[o + split * dd..o + valid * dd],
+                    "{mode}: chunk 2 k rows diverged (head {hh})"
+                );
+                assert_eq!(
+                    &c2[2].data[o..o + n2_rows * dd],
+                    &mono[2].data[o + split * dd..o + valid * dd],
+                    "{mode}: chunk 2 v rows diverged (head {hh})"
                 );
             }
         }

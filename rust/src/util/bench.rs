@@ -7,11 +7,14 @@
 //! Also hosts the `flux bench` serving harness
 //! ([`run_serving_bench`]): prefill + decode step latency across the
 //! three staging configurations (clone+serial baseline, zero-copy
-//! serial, zero-copy parallel) plus the batched-decode batch-size sweep
-//! (serial vs (layer, mode)-bucketed rounds, DESIGN.md §9), emitted as
-//! `BENCH_prefill.json` / `BENCH_decode.json` (schema
-//! `flux-bench-decode/v2`) — the repo-root perf trajectory every future
-//! PR measures against (DESIGN.md §7).
+//! serial, zero-copy parallel), the batched-decode batch-size sweep
+//! (serial vs (layer, mode)-bucketed rounds, DESIGN.md §9), the
+//! bucket-padding utilization ledger and the chunked-prefill
+//! interference scenario (decode gap p95 under a concurrent long-prompt
+//! arrival, monolithic vs chunked — DESIGN.md §10), emitted as
+//! `BENCH_prefill.json` (schema `flux-bench-prefill/v2`) /
+//! `BENCH_decode.json` (schema `flux-bench-decode/v2`) — the repo-root
+//! perf trajectory every future PR measures against (DESIGN.md §7).
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
@@ -154,6 +157,59 @@ fn validate_bench_file(path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// The `flux bench --smoke` CI gate for the prefill file's v2 schema
+/// (DESIGN.md §10): the chunked-vs-monolithic interference scenario
+/// must be present with verified bit-identical token streams and the
+/// decode-gap speedup fields, and the bucket-padding utilization ledger
+/// must be recorded for both configurations.
+fn validate_prefill_v2(path: &Path) -> Result<()> {
+    let j = Json::parse(&std::fs::read_to_string(path)?)
+        .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+    anyhow::ensure!(
+        j.get("schema").and_then(Json::as_str) == Some("flux-bench-prefill/v2"),
+        "{path:?}: schema must be flux-bench-prefill/v2"
+    );
+    let inter = j
+        .get("interference")
+        .ok_or_else(|| anyhow::anyhow!("{path:?}: missing interference scenario"))?;
+    anyhow::ensure!(
+        inter.get("bit_identical").and_then(Json::as_bool) == Some(true),
+        "{path:?}: interference token streams not verified bit-identical"
+    );
+    anyhow::ensure!(
+        inter.get("speedup_decode_p95").and_then(Json::as_f64).is_some(),
+        "{path:?}: missing interference.speedup_decode_p95"
+    );
+    for cfg in ["monolithic", "chunked"] {
+        let c = inter
+            .get(cfg)
+            .ok_or_else(|| anyhow::anyhow!("{path:?}: missing interference.{cfg}"))?;
+        anyhow::ensure!(
+            c.get("decode_gap_p95_us").and_then(Json::as_f64).map(|v| v > 0.0).unwrap_or(false),
+            "{path:?}: interference.{cfg} reports no decode-gap p95"
+        );
+        anyhow::ensure!(
+            c.get("long_ttft_us").and_then(Json::as_f64).map(|v| v > 0.0).unwrap_or(false),
+            "{path:?}: interference.{cfg} reports no long-prompt TTFT"
+        );
+    }
+    let pad = j
+        .get("padding")
+        .ok_or_else(|| anyhow::anyhow!("{path:?}: missing padding utilization ledger"))?;
+    for cfg in ["monolithic", "chunked"] {
+        let u = pad
+            .get(cfg)
+            .and_then(|c| c.get("utilization"))
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("{path:?}: missing padding.{cfg}.utilization"))?;
+        anyhow::ensure!(
+            u > 0.0 && u <= 1.0,
+            "{path:?}: padding.{cfg}.utilization {u} out of (0, 1]"
+        );
+    }
+    Ok(())
+}
+
 /// The `flux bench --smoke` CI gate for the decode file's v2 schema:
 /// the batched scenario must be present, every scenario's token streams
 /// must have verified bit-identical, and `speedup_batched_over_serial`
@@ -186,6 +242,179 @@ fn validate_decode_v2(path: &Path) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// One configuration's numbers from the prefill-interference scenario.
+struct InterferenceRun {
+    long_prompt_tokens: usize,
+    gap_p50_us: f64,
+    gap_p95_us: f64,
+    gap_max_us: f64,
+    long_ttft_us: u64,
+    short_streams: Vec<Vec<u32>>,
+    long_tokens: Vec<u32>,
+    prefill_chunks: u64,
+    decode_stall_us: u64,
+}
+
+/// The prefill-interference scenario (DESIGN.md §10): N short streams
+/// decode steadily; a long prompt arrives mid-flight; we measure the
+/// short streams' inter-token gaps over the long prefill window and the
+/// long request's TTFT. `chunk_tokens == 0` is the monolithic baseline
+/// (the long prefill stalls every stream for its whole duration);
+/// chunked runs interleave decode rounds between chunks. Token streams
+/// are greedy and per-request deterministic, so the two configurations
+/// must produce bit-identical streams — the caller asserts it.
+fn run_interference(
+    artifacts: &Path,
+    opts: &ServingBenchOpts,
+    chunk_tokens: usize,
+) -> Result<InterferenceRun> {
+    use crate::config::{MetaConfig, ServingConfig};
+    use crate::coordinator::{Coordinator, Request, SessionEvent};
+    use crate::engine::EngineHandle;
+    use crate::router::{AttnMode, DecodeMode, Policy};
+    use crate::util::rng::Rng;
+    use crate::workload::{generate, Task};
+
+    let meta = MetaConfig::load(artifacts)?;
+    let n_layers = meta.model.n_layers;
+    let max_prefill = *meta.prefill_buckets.last().unwrap();
+    let (n_short, short_max_new, long_len) = if opts.smoke {
+        (2usize, 64usize, 384usize.min(max_prefill))
+    } else {
+        (3, 128, 768usize.min(max_prefill))
+    };
+    let engine = EngineHandle::spawn(artifacts.to_path_buf())?;
+    let coord = Coordinator::start(
+        engine,
+        ServingConfig {
+            prefill_chunk_tokens: chunk_tokens,
+            prefill_chunk_budget: 1,
+            ..Default::default()
+        },
+    );
+    // mixed static routing (alternate FA / SSA, sparse decode) pins the
+    // per-layer modes so the monolithic and chunked runs are comparable
+    // bit-for-bit AND every chunk exercises both cache layouts,
+    // including the sparse-ring priming path
+    let modes: Vec<AttnMode> = (0..n_layers)
+        .map(|l| if l % 2 == 0 { AttnMode::Fa } else { AttnMode::Ssa })
+        .collect();
+    let policy = Policy::Static { modes, decode: DecodeMode::Sparse };
+
+    let mut rng = Rng::seed_from_u64(31);
+    let timeout = std::time::Duration::from_secs(120);
+    let (first_tx, first_rx) = std::sync::mpsc::channel::<()>();
+    let mut workers = vec![];
+    for i in 0..n_short {
+        let s = generate(Task::PRe, &mut rng, 96);
+        let h = coord
+            .open(Request {
+                prompt: s.prompt,
+                max_new: short_max_new,
+                ignore_eos: true,
+                policy: policy.clone(),
+                ..Default::default()
+            })
+            .map_err(|e| anyhow::anyhow!("short stream {i} rejected: {e}"))?;
+        let tx = first_tx.clone();
+        workers.push(std::thread::spawn(move || -> (Vec<(Instant, u32)>, bool) {
+            let mut toks: Vec<(Instant, u32)> = vec![];
+            let mut ok = false;
+            while let Some(ev) = h.recv_timeout(timeout) {
+                match ev {
+                    SessionEvent::Prefilled { first_token, .. } => {
+                        toks.push((Instant::now(), first_token));
+                        let _ = tx.send(());
+                    }
+                    SessionEvent::Token { tok, .. } => toks.push((Instant::now(), tok)),
+                    SessionEvent::Done { .. } => {
+                        ok = true;
+                        break;
+                    }
+                    SessionEvent::Error { .. } => break,
+                    SessionEvent::Queued => {}
+                }
+            }
+            (toks, ok)
+        }));
+    }
+    drop(first_tx);
+    for _ in 0..n_short {
+        first_rx
+            .recv_timeout(timeout)
+            .map_err(|_| anyhow::anyhow!("short stream died before its first token"))?;
+    }
+
+    // the long-prompt arrival
+    let long_prompt: Vec<u32> = (0..long_len).map(|i| (i as u32) % 250 + 1).collect();
+    let t_submit = Instant::now();
+    let hl = coord
+        .open(Request {
+            prompt: long_prompt,
+            max_new: 4,
+            ignore_eos: true,
+            policy: policy.clone(),
+            ..Default::default()
+        })
+        .map_err(|e| anyhow::anyhow!("long request rejected: {e}"))?;
+    let mut long_tokens = vec![];
+    let mut t_prefilled: Option<Instant> = None;
+    while let Some(ev) = hl.recv_timeout(timeout) {
+        match ev {
+            SessionEvent::Prefilled { first_token, .. } => {
+                long_tokens.push(first_token);
+                t_prefilled = Some(Instant::now());
+            }
+            SessionEvent::Token { tok, .. } => long_tokens.push(tok),
+            SessionEvent::Done { .. } => break,
+            SessionEvent::Error { error } => anyhow::bail!("long request failed: {error}"),
+            SessionEvent::Queued => {}
+        }
+    }
+    let t_prefilled =
+        t_prefilled.ok_or_else(|| anyhow::anyhow!("long request never prefilled"))?;
+    let long_ttft_us = t_prefilled.duration_since(t_submit).as_micros() as u64;
+
+    let mut short_streams = vec![];
+    let mut window_gaps: Vec<f64> = vec![];
+    let mut all_gaps: Vec<f64> = vec![];
+    for w in workers {
+        let (toks, ok) = w.join().map_err(|_| anyhow::anyhow!("short stream panicked"))?;
+        anyhow::ensure!(
+            ok && toks.len() == short_max_new,
+            "short stream truncated at {} of {short_max_new} tokens",
+            toks.len()
+        );
+        for pair in toks.windows(2) {
+            let gap = pair[1].0.duration_since(pair[0].0).as_nanos() as f64 / 1e3;
+            all_gaps.push(gap);
+            // gaps overlapping the long prefill window measure the stall
+            if pair[1].0 >= t_submit && pair[0].0 <= t_prefilled {
+                window_gaps.push(gap);
+            }
+        }
+        short_streams.push(toks.into_iter().map(|(_, t)| t).collect());
+    }
+    // fallback for races where every short stream finished before the
+    // long prompt arrived (tiny models decode fast): report the overall
+    // gap distribution instead of an empty window
+    let mut gaps = if window_gaps.is_empty() { all_gaps } else { window_gaps };
+    anyhow::ensure!(!gaps.is_empty(), "no inter-token gaps recorded");
+    let st = stats_of(&mut gaps);
+    let m = coord.metrics.lock().unwrap().clone();
+    Ok(InterferenceRun {
+        long_prompt_tokens: long_len,
+        gap_p50_us: st.p50_us,
+        gap_p95_us: st.p95_us,
+        gap_max_us: *gaps.last().unwrap(),
+        long_ttft_us,
+        short_streams,
+        long_tokens,
+        prefill_chunks: m.prefill_chunks,
+        decode_stall_us: m.decode_stall_us,
+    })
 }
 
 /// Run the serving benchmark against an artifact directory and write
@@ -387,11 +616,65 @@ pub fn run_serving_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<(P
         speedup_batched = speedup; // the sweep's largest batch size wins
     }
 
+    // ---- bucket-padding utilization (DESIGN.md §10): monolithic pads
+    // every prompt to its request-level bucket; chunked prefill pads
+    // only the last chunk to its smallest covering bucket ----
+    let pad_prompt = if opts.smoke { 300.min(max_prefill) } else { 600.min(max_prefill) };
+    let pad_tokens: Vec<u32> = (0..pad_prompt).map(|i| (i as u32) % 250 + 1).collect();
+    engine.rt.reset_stats();
+    let (id, _) = engine.prefill(&pad_tokens, &Policy::Backbone, "balanced")?;
+    engine.release(id);
+    let (mono_rows_valid, mono_rows_padded) = engine.prefill_row_totals();
+    engine.rt.reset_stats();
+    let job = engine.prefill_open(&pad_tokens, &Policy::Backbone, "balanced", 128)?;
+    loop {
+        match engine.prefill_chunk(job)? {
+            crate::engine::ChunkOutcome::More { .. } => {}
+            crate::engine::ChunkOutcome::Done { id, .. } => {
+                engine.release(id);
+                break;
+            }
+        }
+    }
+    let (chunk_rows_valid, chunk_rows_padded) = engine.prefill_row_totals();
+    let util = |v: u64, p: u64| v as f64 / ((v + p) as f64).max(1.0);
+    let mono_util = util(mono_rows_valid, mono_rows_padded);
+    let chunk_util = util(chunk_rows_valid, chunk_rows_padded);
+    println!(
+        "prefill padding ({pad_prompt} tokens): monolithic {:.1}% vs chunked {:.1}% row utilization",
+        mono_util * 100.0,
+        chunk_util * 100.0
+    );
+
+    // ---- chunked-prefill interference scenario (DESIGN.md §10):
+    // decode gap p95 under a concurrent long-prompt arrival, monolithic
+    // vs chunked, with the token streams compared bit-for-bit ----
+    let inter_chunk_tokens = 128usize;
+    let mono = run_interference(artifacts, opts, 0)?;
+    let chunked = run_interference(artifacts, opts, inter_chunk_tokens)?;
+    let bit_identical = mono.short_streams == chunked.short_streams
+        && mono.long_tokens == chunked.long_tokens;
+    anyhow::ensure!(
+        bit_identical,
+        "chunked prefill diverged from the monolithic token streams in the interference scenario"
+    );
+    let speedup_decode_p95 = mono.gap_p95_us / chunked.gap_p95_us.max(1e-9);
+    println!(
+        "prefill interference: decode gap p95 {:.1} us (monolithic) vs {:.1} us (chunked) \
+         = {speedup_decode_p95:.2}x; long TTFT {:.1} ms vs {:.1} ms; chunks {} vs {}",
+        mono.gap_p95_us,
+        chunked.gap_p95_us,
+        mono.long_ttft_us as f64 / 1e3,
+        chunked.long_ttft_us as f64 / 1e3,
+        mono.prefill_chunks,
+        chunked.prefill_chunks
+    );
+
     // ---- emit BENCH_prefill.json ----
     let fa_base = prefill_results[0].1.mean_us;
     let fa_par = prefill_results[1].1.mean_us;
     let mut jp = Json::obj();
-    jp.set("schema", Json::from("flux-bench-prefill/v1"));
+    jp.set("schema", Json::from("flux-bench-prefill/v2"));
     jp.set("measured", Json::from(true));
     jp.set("seq_len", Json::from(seq));
     jp.set("prompt_len", Json::from(prompt_len));
@@ -404,6 +687,41 @@ pub fn run_serving_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<(P
     jp.set("ssa_optimized", stats_json("ssa_view_parallel", &ssa_st, ssa_tok_s));
     jp.set("fa_over_ssa_latency_ratio", Json::from(fa_par / ssa_st.mean_us.max(1e-9)));
     jp.set("speedup_parallel_over_baseline", Json::from(fa_base / fa_par.max(1e-9)));
+    let mut jpad = Json::obj();
+    jpad.set("prompt_tokens", Json::from(pad_prompt));
+    jpad.set("chunk_tokens", Json::from(128usize));
+    let pad_obj = |v: u64, p: u64, u: f64| {
+        let mut o = Json::obj();
+        o.set("rows_valid", Json::from(v as usize));
+        o.set("rows_padded", Json::from(p as usize));
+        o.set("utilization", Json::from(u));
+        o
+    };
+    jpad.set("monolithic", pad_obj(mono_rows_valid, mono_rows_padded, mono_util));
+    jpad.set("chunked", pad_obj(chunk_rows_valid, chunk_rows_padded, chunk_util));
+    jp.set("padding", jpad);
+    let mut ji = Json::obj();
+    ji.set("long_prompt_tokens", Json::from(mono.long_prompt_tokens));
+    ji.set("chunk_tokens", Json::from(inter_chunk_tokens));
+    let inter_obj = |r: &InterferenceRun| {
+        let mut o = Json::obj();
+        o.set("decode_gap_p50_us", Json::from(r.gap_p50_us));
+        o.set("decode_gap_p95_us", Json::from(r.gap_p95_us));
+        o.set("decode_gap_max_us", Json::from(r.gap_max_us));
+        o.set("long_ttft_us", Json::from(r.long_ttft_us as f64));
+        o.set("prefill_chunks", Json::from(r.prefill_chunks as usize));
+        o.set("decode_stall_us", Json::from(r.decode_stall_us as usize));
+        o
+    };
+    ji.set("monolithic", inter_obj(&mono));
+    ji.set("chunked", inter_obj(&chunked));
+    ji.set("speedup_decode_p95", Json::from(speedup_decode_p95));
+    ji.set(
+        "speedup_decode_max_gap",
+        Json::from(mono.gap_max_us / chunked.gap_max_us.max(1e-9)),
+    );
+    ji.set("bit_identical", Json::from(bit_identical));
+    jp.set("interference", ji);
     let prefill_path = opts.out_dir.join("BENCH_prefill.json");
     std::fs::write(&prefill_path, jp.to_string())?;
 
@@ -439,6 +757,7 @@ pub fn run_serving_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<(P
 
     validate_bench_file(&prefill_path)?;
     validate_bench_file(&decode_path)?;
+    validate_prefill_v2(&prefill_path)?;
     validate_decode_v2(&decode_path)?;
     println!(
         "decode speedup: view/clone {:.2}x, parallel/serial {:.2}x, total {:.2}x \
@@ -616,6 +935,50 @@ mod tests {
         let good = dir.join("good.json");
         std::fs::write(&good, r#"{"configs": [{"tokens_per_s": 12.5}]}"#).unwrap();
         validate_bench_file(&good).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prefill_v2_validation_gates_on_interference_fields() {
+        let dir = std::env::temp_dir().join(format!("flux-bench-pv2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let old = dir.join("v1.json");
+        std::fs::write(&old, r#"{"schema": "flux-bench-prefill/v1"}"#).unwrap();
+        assert!(validate_prefill_v2(&old).is_err(), "v1 schema must fail the v2 gate");
+        let diverged = dir.join("diverged.json");
+        std::fs::write(
+            &diverged,
+            r#"{"schema": "flux-bench-prefill/v2",
+                "interference": {"bit_identical": false, "speedup_decode_p95": 2.0,
+                    "monolithic": {"decode_gap_p95_us": 900.0, "long_ttft_us": 5000.0},
+                    "chunked": {"decode_gap_p95_us": 450.0, "long_ttft_us": 6000.0}},
+                "padding": {"monolithic": {"utilization": 0.5},
+                            "chunked": {"utilization": 0.9}}}"#,
+        )
+        .unwrap();
+        assert!(validate_prefill_v2(&diverged).is_err(), "non-bit-identical streams must fail");
+        let no_pad = dir.join("no_pad.json");
+        std::fs::write(
+            &no_pad,
+            r#"{"schema": "flux-bench-prefill/v2",
+                "interference": {"bit_identical": true, "speedup_decode_p95": 2.0,
+                    "monolithic": {"decode_gap_p95_us": 900.0, "long_ttft_us": 5000.0},
+                    "chunked": {"decode_gap_p95_us": 450.0, "long_ttft_us": 6000.0}}}"#,
+        )
+        .unwrap();
+        assert!(validate_prefill_v2(&no_pad).is_err(), "missing padding ledger must fail");
+        let good = dir.join("good.json");
+        std::fs::write(
+            &good,
+            r#"{"schema": "flux-bench-prefill/v2",
+                "interference": {"bit_identical": true, "speedup_decode_p95": 2.0,
+                    "monolithic": {"decode_gap_p95_us": 900.0, "long_ttft_us": 5000.0},
+                    "chunked": {"decode_gap_p95_us": 450.0, "long_ttft_us": 6000.0}},
+                "padding": {"monolithic": {"utilization": 0.5},
+                            "chunked": {"utilization": 0.9}}}"#,
+        )
+        .unwrap();
+        validate_prefill_v2(&good).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -140,7 +140,10 @@ fn decode_batch_reply_carries_totals_and_group_occupancy() {
 }
 
 /// The `EngineHandle` round-trip for batched rounds, plus fallback
-/// equivalence through the channel API.
+/// equivalence through the channel API. The KV-interchange totals ride
+/// ONLY on the batch reply now: the PR-4-era standalone
+/// `KvTransferTotals` polling job is deleted from the scheduler-facing
+/// surface, so the piggyback must carry live, consistent numbers.
 #[test]
 fn engine_handle_decode_batch_roundtrip() {
     let engine = EngineHandle::spawn(artifacts()).unwrap();
@@ -152,8 +155,13 @@ fn engine_handle_decode_batch_roundtrip() {
     let report = engine.decode_batch(vec![id]).unwrap();
     assert_eq!(report.tokens.len(), 1);
     let tok_batch = *report.tokens[0].as_ref().unwrap();
-    // kv totals on the reply match the standalone job (API kept)
-    assert_eq!(report.kv_transfer, engine.kv_transfer_totals().unwrap());
+    // the reply piggyback is the only totals channel: the zero-copy
+    // round must report borrowed KV bytes and no clones
+    assert_eq!(report.kv_transfer.0, 0, "fast-path round must clone zero KV bytes");
+    assert!(report.kv_transfer.1 > 0, "reply must carry the borrowed-KV totals");
+    // totals are cumulative: a second round can only grow them
+    let report2 = engine.decode_batch(vec![id]).unwrap();
+    assert!(report2.kv_transfer.1 > report.kv_transfer.1);
     let tok_serial = engine.decode_step(id).unwrap();
     // greedy continuation stays on one deterministic trajectory
     assert_ne!(tok_batch, u32::MAX);
