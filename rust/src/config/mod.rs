@@ -215,6 +215,16 @@ pub struct ServingConfig {
     /// are evicted between decode steps (their engine slot and KV cache
     /// are reclaimed) with `RequestError::DeadlineExceeded`.
     pub default_deadline_ms: Option<u64>,
+    /// token-budget admission (DESIGN.md §11): cap on the sum of prompt
+    /// tokens across requests simultaneously in prefill. A single
+    /// prompt longer than this is rejected `Overloaded` at enqueue.
+    pub max_batch_prefill_tokens: usize,
+    /// token-budget admission: cap on the sum of worst-case total
+    /// tokens (`prompt + max_new`) across every running request. The
+    /// scheduler admits a request only while its worst case fits; a
+    /// single request whose worst case exceeds the whole budget is
+    /// rejected `Overloaded` at enqueue.
+    pub max_batch_total_tokens: usize,
 }
 
 impl Default for ServingConfig {
@@ -227,6 +237,8 @@ impl Default for ServingConfig {
             max_active_requests: 32,
             max_new_cap: 4096,
             default_deadline_ms: None,
+            max_batch_prefill_tokens: 4096,
+            max_batch_total_tokens: 131072,
         }
     }
 }

@@ -45,7 +45,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::config::ServingConfig;
-use crate::engine::{ChunkOutcome, EngineHandle, PrefillReport};
+use crate::engine::{ChunkOutcome, EngineHandle, PoolProfile, PrefillReport};
 use crate::metrics::ServingMetrics;
 use crate::router::Policy;
 use crate::tokenizer::EOS;
@@ -110,6 +110,11 @@ pub enum RequestError {
     /// Prompt longer than the largest prefill bucket — rejected before
     /// queueing instead of surfacing as an engine failure.
     PromptTooLong { len: usize, max: usize },
+    /// The request's worst case can never fit the serving budgets
+    /// (`max_batch_prefill_tokens` / `max_batch_total_tokens` / the KV
+    /// page pool) — rejected at admission instead of wedging the
+    /// scheduler behind a request it could never run.
+    Overloaded(String),
     /// `deadline_ms` elapsed; the request was evicted between decode
     /// steps and its engine slot and KV cache released.
     DeadlineExceeded,
@@ -129,6 +134,7 @@ impl RequestError {
             RequestError::QueueFull => "queue_full",
             RequestError::Invalid(_) => "invalid",
             RequestError::PromptTooLong { .. } => "prompt_too_long",
+            RequestError::Overloaded(_) => "overloaded",
             RequestError::DeadlineExceeded => "deadline_exceeded",
             RequestError::Cancelled => "cancelled",
             RequestError::Engine(_) => "engine",
@@ -147,6 +153,7 @@ impl std::fmt::Display for RequestError {
             RequestError::PromptTooLong { len, max } => {
                 write!(f, "prompt of {len} tokens exceeds the largest prefill bucket ({max})")
             }
+            RequestError::Overloaded(m) => write!(f, "overloaded: {m}"),
             RequestError::DeadlineExceeded => {
                 write!(f, "deadline exceeded: request evicted mid-generation")
             }
@@ -306,6 +313,14 @@ struct Pending {
 /// and advances one chunk at a time through the round loop.
 struct Prefilling {
     job: u64,
+    /// Prompt length, released from the prefill token budget when the
+    /// final chunk promotes the request (DESIGN.md §11).
+    prompt_len: usize,
+    /// Worst-case total tokens (`prompt + max_new`) reserved against
+    /// `max_batch_total_tokens` for the request's whole lifetime.
+    budget_total: usize,
+    /// Worst-case KV pages reserved against the pool.
+    budget_pages: usize,
     max_new: usize,
     stop_tokens: Vec<u32>,
     ignore_eos: bool,
@@ -322,6 +337,10 @@ struct Prefilling {
 
 struct Active {
     engine_id: u64,
+    /// Worst-case reservations inherited from [`Prefilling`], released
+    /// at retirement.
+    budget_total: usize,
+    budget_pages: usize,
     generated: Vec<u32>,
     max_new: usize,
     stop_tokens: Vec<u32>,
@@ -347,6 +366,13 @@ pub struct Coordinator {
     /// longer prompts are rejected at admission with a typed error.
     max_prompt_len: usize,
     max_new_cap: usize,
+    /// Serving token budgets (DESIGN.md §11) — a request whose worst
+    /// case can never fit is rejected `Overloaded` at enqueue.
+    max_batch_prefill_tokens: usize,
+    max_batch_total_tokens: usize,
+    /// KV pool geometry, fetched once at startup (immutable after
+    /// engine load) — drives worst-case page admission.
+    pool_profile: Option<PoolProfile>,
     default_deadline_ms: Option<u64>,
     pub metrics: Arc<Mutex<ServingMetrics>>,
 }
@@ -358,17 +384,21 @@ impl Coordinator {
         let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
         let queue_depth = Arc::new(AtomicUsize::new(0));
         let max_prompt_len = engine.max_prompt_len().unwrap_or(usize::MAX);
+        let pool_profile = engine.pool_profile().ok();
         let coord = Arc::new(Self {
             queue_tx,
             queue_depth: queue_depth.clone(),
             max_prompt_len,
             max_new_cap: cfg.max_new_cap,
+            max_batch_prefill_tokens: cfg.max_batch_prefill_tokens,
+            max_batch_total_tokens: cfg.max_batch_total_tokens,
+            pool_profile: pool_profile.clone(),
             default_deadline_ms: cfg.default_deadline_ms,
             metrics: metrics.clone(),
         });
         std::thread::Builder::new()
             .name("flux-scheduler".into())
-            .spawn(move || scheduler_loop(engine, cfg, queue_rx, queue_depth, metrics))
+            .spawn(move || scheduler_loop(engine, cfg, pool_profile, queue_rx, queue_depth, metrics))
             .expect("spawn scheduler");
         coord
     }
@@ -411,6 +441,13 @@ impl Coordinator {
             self.metrics.lock().unwrap().requests_rejected += 1;
             return Err(RequestError::Invalid("empty prompt".into()));
         }
+        // max_new == 0 asks for zero generated tokens; the decode loop
+        // would still produce one (every prefill ends in a first token),
+        // so the degenerate request is rejected instead of clamped
+        if req.max_new == 0 {
+            self.metrics.lock().unwrap().requests_rejected += 1;
+            return Err(RequestError::Invalid("max_new must be at least 1".into()));
+        }
         if req.max_new > self.max_new_cap {
             self.metrics.lock().unwrap().requests_rejected += 1;
             return Err(RequestError::Invalid(format!(
@@ -424,6 +461,41 @@ impl Coordinator {
                 len: req.prompt.len(),
                 max: self.max_prompt_len,
             });
+        }
+        // budget feasibility (DESIGN.md §11): a request whose WORST case
+        // exceeds a whole serving budget can never be scheduled — reject
+        // it now instead of letting it wedge the admission head forever
+        if req.prompt.len() > self.max_batch_prefill_tokens {
+            let mut m = self.metrics.lock().unwrap();
+            m.requests_rejected += 1;
+            m.requests_overloaded += 1;
+            return Err(RequestError::Overloaded(format!(
+                "prompt of {} tokens exceeds max_batch_prefill_tokens {}",
+                req.prompt.len(),
+                self.max_batch_prefill_tokens
+            )));
+        }
+        if req.prompt.len() + req.max_new > self.max_batch_total_tokens {
+            let mut m = self.metrics.lock().unwrap();
+            m.requests_rejected += 1;
+            m.requests_overloaded += 1;
+            return Err(RequestError::Overloaded(format!(
+                "worst case of {} tokens exceeds max_batch_total_tokens {}",
+                req.prompt.len() + req.max_new,
+                self.max_batch_total_tokens
+            )));
+        }
+        if let Some(pp) = &self.pool_profile {
+            let pages = pp.worst_case_pages(req.prompt.len(), req.max_new);
+            if pages > pp.total_pages {
+                let mut m = self.metrics.lock().unwrap();
+                m.requests_rejected += 1;
+                m.requests_overloaded += 1;
+                return Err(RequestError::Overloaded(format!(
+                    "worst case of {pages} KV pages exceeds the pool budget of {}",
+                    pp.total_pages
+                )));
+            }
         }
         let t_arrival = Instant::now();
         let deadline = req
@@ -458,46 +530,93 @@ impl Coordinator {
 fn scheduler_loop(
     engine: EngineHandle,
     cfg: ServingConfig,
+    pool_profile: Option<PoolProfile>,
     queue_rx: Receiver<Pending>,
     queue_depth: Arc<AtomicUsize>,
     metrics: Arc<Mutex<ServingMetrics>>,
 ) {
     let mut active: VecDeque<Active> = VecDeque::new();
     let mut prefilling: VecDeque<Prefilling> = VecDeque::new();
+    let mut budgets = Budgets::default();
+    // the head-of-line request whose worst case doesn't fit the running
+    // batch's budgets right now: it parks here (FIFO preserved) until
+    // retirements free budget, instead of being dropped or skipped
+    let mut parked: Option<Pending> = None;
     let mut queue_closed = false;
     let chunk_budget = cfg.prefill_chunk_budget.max(1);
     loop {
-        // --- admission: drain arrivals into the prefill pipeline.
-        // Opening a job validates and allocates staging but runs no
-        // compute, so admission never stalls decode; an idle scheduler
-        // blocks here for the next request ---
-        while !queue_closed && active.len() + prefilling.len() < cfg.max_active_requests {
-            let pending = if active.is_empty() && prefilling.is_empty() {
+        // --- admission (DESIGN.md §11): drain arrivals into the
+        // prefill pipeline while their worst case fits the token/page
+        // budgets. Opening a job validates and allocates staging but
+        // runs no compute, so admission never stalls decode; an idle
+        // scheduler blocks here for the next request ---
+        while active.len() + prefilling.len() < cfg.max_active_requests {
+            let p = if let Some(p) = parked.take() {
+                p
+            } else if queue_closed {
+                break;
+            } else if active.is_empty() && prefilling.is_empty() && parked.is_none() {
                 match queue_rx.recv() {
-                    Ok(p) => Some(p),
+                    Ok(p) => {
+                        queue_depth.fetch_sub(1, Ordering::Relaxed);
+                        p
+                    }
                     Err(_) => {
                         queue_closed = true;
-                        None
+                        break;
                     }
                 }
             } else {
                 match queue_rx.try_recv() {
-                    Ok(p) => Some(p),
-                    Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                    Ok(p) => {
+                        queue_depth.fetch_sub(1, Ordering::Relaxed);
+                        p
+                    }
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
                     Err(std::sync::mpsc::TryRecvError::Disconnected) => {
                         queue_closed = true;
-                        None
+                        break;
                     }
                 }
             };
-            let Some(p) = pending else { break };
-            queue_depth.fetch_sub(1, Ordering::Relaxed);
-            if let Some(pf) = open_prefill(&engine, &cfg, &metrics, p) {
+            // a dead request (cancelled / expired while queued or
+            // parked) must not wedge the admission head: open_prefill
+            // rejects it with the right terminal event before touching
+            // the engine, so no budget is charged (cancel is sticky and
+            // time is monotonic, so it cannot admit here)
+            if p.cancel.is_cancelled() || p.deadline.is_some_and(|d| Instant::now() >= d) {
+                if let Some(pf) = open_prefill(&engine, &cfg, &metrics, p) {
+                    prefilling.push_back(pf);
+                }
+                continue;
+            }
+            let prompt_len = p.req.prompt.len();
+            let worst_total = prompt_len + p.req.max_new;
+            let pages =
+                pool_profile.as_ref().map_or(0, |pp| pp.worst_case_pages(prompt_len, p.req.max_new));
+            let fits = budgets.prefill_tokens + prompt_len <= cfg.max_batch_prefill_tokens
+                && budgets.total_tokens + worst_total <= cfg.max_batch_total_tokens
+                && pool_profile.as_ref().map_or(true, |pp| budgets.pages + pages <= pp.total_pages);
+            if !fits {
+                // enqueue-side feasibility checks guarantee a lone
+                // request always fits an empty batch, so parking can
+                // never deadlock: budgets drain back to zero as the
+                // running batch retires
+                parked = Some(p);
+                break;
+            }
+            if let Some(mut pf) = open_prefill(&engine, &cfg, &metrics, p) {
+                pf.prompt_len = prompt_len;
+                pf.budget_total = worst_total;
+                pf.budget_pages = pages;
+                budgets.prefill_tokens += prompt_len;
+                budgets.total_tokens += worst_total;
+                budgets.pages += pages;
                 prefilling.push_back(pf);
             }
         }
 
-        if active.is_empty() && prefilling.is_empty() {
+        if active.is_empty() && prefilling.is_empty() && parked.is_none() {
             if queue_closed {
                 return;
             }
@@ -508,7 +627,7 @@ fn scheduler_loop(
         // round-trip produces every active request's next token (§9);
         // retirement (cancel / deadline / EOS / stop / max_new) is
         // checked before the batch is formed ---
-        sweep_retired(&engine, &metrics, &mut active);
+        sweep_retired(&engine, &metrics, &mut budgets, &mut active);
         if !active.is_empty() {
             let ids: Vec<u64> = active.iter().map(|a| a.engine_id).collect();
             match engine.decode_batch(ids) {
@@ -516,12 +635,18 @@ fn scheduler_loop(
                     // engine thread gone: fail the whole active set
                     let msg = e.to_string();
                     while let Some(a) = active.pop_front() {
-                        retire(&engine, &metrics, a, Retire::Failed(msg.clone()));
+                        retire(&engine, &metrics, &mut budgets, a, Retire::Failed(msg.clone()));
                     }
                 }
                 Ok(reply) => {
                     let crate::engine::DecodeBatchReport {
-                        tokens, step_us, kv_transfer, fa_group_slots, sa_group_slots, ..
+                        tokens,
+                        step_us,
+                        kv_transfer,
+                        fa_group_slots,
+                        sa_group_slots,
+                        pool_pages,
+                        ..
                     } = reply;
                     // one metrics lock per round (not per token), with
                     // the KV totals riding on the batch reply
@@ -536,8 +661,8 @@ fn scheduler_loop(
                                 m.decode.record_us(us);
                             }
                         }
-                        m.kv_bytes_moved = kv_transfer.0;
-                        m.kv_bytes_borrowed = kv_transfer.1;
+                        m.note_kv_transfer_totals(kv_transfer.0, kv_transfer.1);
+                        m.note_pool_pages(pool_pages.0, pool_pages.1, pool_pages.2);
                     }
                     let mut kept = VecDeque::with_capacity(active.len());
                     for ((mut a, res), &us) in active.drain(..).zip(tokens).zip(&step_us) {
@@ -549,11 +674,17 @@ fn scheduler_loop(
                                     kept.push_back(a);
                                 } else {
                                     // receiver gone: stop decoding
-                                    retire(&engine, &metrics, a, Retire::Cancelled);
+                                    retire(&engine, &metrics, &mut budgets, a, Retire::Cancelled);
                                 }
                             }
                             Err(e) => {
-                                retire(&engine, &metrics, a, Retire::Failed(e.to_string()));
+                                retire(
+                                    &engine,
+                                    &metrics,
+                                    &mut budgets,
+                                    a,
+                                    Retire::Failed(e.to_string()),
+                                );
                             }
                         }
                     }
@@ -576,7 +707,7 @@ fn scheduler_loop(
             // between chunks over the WHOLE prefilling set (not just the
             // FIFO front), so a session queued behind a long prefill
             // releases its slot and staged KV the moment it dies
-            sweep_prefilling(&engine, &metrics, &mut prefilling);
+            sweep_prefilling(&engine, &metrics, &mut budgets, &mut prefilling);
             let Some(mut pf) = prefilling.pop_front() else { break };
             budget -= 1;
             // queue time ends when the request's FIRST chunk runs —
@@ -592,7 +723,8 @@ fn scheduler_loop(
                 }
                 Ok(ChunkOutcome::Done { id, report }) => {
                     metrics.lock().unwrap().prefill_chunks += 1;
-                    if let Some(a) = finish_prefill(&engine, &metrics, pf, id, report) {
+                    if let Some(a) = finish_prefill(&engine, &metrics, &mut budgets, pf, id, report)
+                    {
                         active.push_back(a);
                     }
                 }
@@ -601,7 +733,7 @@ fn scheduler_loop(
                     // failure (like a mid-decode one), not an admission
                     // rejection; the engine already dropped the failed
                     // job — retire_prefilling's cancel is belt-and-braces
-                    retire_prefilling(&engine, &metrics, pf, Retire::Failed(e.to_string()));
+                    retire_prefilling(&engine, &metrics, &mut budgets, pf, Retire::Failed(e.to_string()));
                 }
             }
         }
@@ -616,7 +748,34 @@ fn scheduler_loop(
 
         // finished generations retire before the next admission pass
         // (same sweep as the round start — the policy lives in one place)
-        sweep_retired(&engine, &metrics, &mut active);
+        sweep_retired(&engine, &metrics, &mut budgets, &mut active);
+    }
+}
+
+/// Worst-case resource reservations of the running batch (DESIGN.md
+/// §11). Charged at admission, partially released at prefill→decode
+/// promotion (the prompt leaves the prefill budget), fully released at
+/// retirement — so admission is O(1) against three counters.
+#[derive(Default)]
+struct Budgets {
+    /// Sum of prompt tokens across requests currently in prefill.
+    prefill_tokens: usize,
+    /// Sum of worst-case totals (`prompt + max_new`) across the batch.
+    total_tokens: usize,
+    /// Sum of worst-case KV pages across the batch.
+    pages: usize,
+}
+
+impl Budgets {
+    fn release_prefilling(&mut self, pf: &Prefilling) {
+        self.prefill_tokens = self.prefill_tokens.saturating_sub(pf.prompt_len);
+        self.total_tokens = self.total_tokens.saturating_sub(pf.budget_total);
+        self.pages = self.pages.saturating_sub(pf.budget_pages);
+    }
+
+    fn release_active(&mut self, a: &Active) {
+        self.total_tokens = self.total_tokens.saturating_sub(a.budget_total);
+        self.pages = self.pages.saturating_sub(a.budget_pages);
     }
 }
 
@@ -626,9 +785,11 @@ fn scheduler_loop(
 fn retire_prefilling(
     engine: &EngineHandle,
     metrics: &Arc<Mutex<ServingMetrics>>,
+    budgets: &mut Budgets,
     pf: Prefilling,
     how: Retire,
 ) {
+    budgets.release_prefilling(&pf);
     engine.prefill_cancel(pf.job);
     {
         let mut m = metrics.lock().unwrap();
@@ -655,17 +816,18 @@ fn retire_prefilling(
 fn sweep_prefilling(
     engine: &EngineHandle,
     metrics: &Arc<Mutex<ServingMetrics>>,
+    budgets: &mut Budgets,
     prefilling: &mut VecDeque<Prefilling>,
 ) {
     let now = Instant::now();
     let mut kept = VecDeque::with_capacity(prefilling.len());
     while let Some(pf) = prefilling.pop_front() {
         if pf.cancel.is_cancelled() {
-            retire_prefilling(engine, metrics, pf, Retire::Cancelled);
+            retire_prefilling(engine, metrics, budgets, pf, Retire::Cancelled);
             continue;
         }
         if pf.deadline.is_some_and(|d| now >= d) {
-            retire_prefilling(engine, metrics, pf, Retire::Expired);
+            retire_prefilling(engine, metrics, budgets, pf, Retire::Expired);
             continue;
         }
         kept.push_back(pf);
@@ -681,17 +843,18 @@ fn sweep_prefilling(
 fn sweep_retired(
     engine: &EngineHandle,
     metrics: &Arc<Mutex<ServingMetrics>>,
+    budgets: &mut Budgets,
     active: &mut VecDeque<Active>,
 ) {
     let now = Instant::now();
     let mut kept = VecDeque::with_capacity(active.len());
     while let Some(a) = active.pop_front() {
         if a.cancel.is_cancelled() {
-            retire(engine, metrics, a, Retire::Cancelled);
+            retire(engine, metrics, budgets, a, Retire::Cancelled);
             continue;
         }
         if a.deadline.is_some_and(|d| now >= d) {
-            retire(engine, metrics, a, Retire::Expired);
+            retire(engine, metrics, budgets, a, Retire::Expired);
             continue;
         }
         let last = *a.generated.last().unwrap();
@@ -699,7 +862,7 @@ fn sweep_retired(
             || (last == EOS && !a.ignore_eos)
             || a.stop_tokens.contains(&last);
         if done {
-            retire(engine, metrics, a, Retire::Done);
+            retire(engine, metrics, budgets, a, Retire::Done);
             continue;
         }
         kept.push_back(a);
@@ -737,6 +900,11 @@ fn open_prefill(
     match engine.prefill_open(req.prompt, req.policy, req.router, cfg.prefill_chunk_tokens) {
         Ok(job) => Some(Prefilling {
             job,
+            // budget reservations are stamped by the admission loop
+            // (the only caller that charges them)
+            prompt_len: 0,
+            budget_total: 0,
+            budget_pages: 0,
             max_new: req.max_new,
             stop_tokens: req.stop_tokens,
             ignore_eos: req.ignore_eos,
@@ -763,14 +931,29 @@ fn open_prefill(
 fn finish_prefill(
     engine: &EngineHandle,
     metrics: &Arc<Mutex<ServingMetrics>>,
+    budgets: &mut Budgets,
     pf: Prefilling,
     engine_id: u64,
     report: PrefillReport,
 ) -> Option<Active> {
     let Prefilling {
-        max_new, stop_tokens, ignore_eos, policy_label, queue_us, t_arrival, deadline, cancel,
-        sink, ..
+        prompt_len,
+        budget_total,
+        budget_pages,
+        max_new,
+        stop_tokens,
+        ignore_eos,
+        policy_label,
+        queue_us,
+        t_arrival,
+        deadline,
+        cancel,
+        sink,
+        ..
     } = pf;
+    // the prompt leaves the prefill budget at promotion; the total-token
+    // and page reservations ride on the Active until retirement
+    budgets.prefill_tokens = budgets.prefill_tokens.saturating_sub(prompt_len);
     // always Some by now (the first chunk stamps it before running)
     let queue_us = queue_us.unwrap_or(0);
     let t_first_token = Instant::now();
@@ -784,21 +967,16 @@ fn finish_prefill(
         m.record_omsr(&policy_label, report.omsr);
     }
     let modes: Vec<String> = report.modes.iter().map(|m| m.name().into()).collect();
-    let alive = sink.event(SessionEvent::Prefilled {
-        first_token: report.first_token,
-        omsr: report.omsr,
-        modes: modes.clone(),
-        ttft_us,
-        queue_us,
-    });
     let a = Active {
         engine_id,
+        budget_total,
+        budget_pages,
         generated: vec![report.first_token],
-        max_new: max_new.max(1),
+        max_new,
         stop_tokens,
         ignore_eos,
         omsr: report.omsr,
-        modes,
+        modes: modes.clone(),
         t_arrival,
         t_first_token,
         decode_us: 0,
@@ -807,10 +985,29 @@ fn finish_prefill(
         cancel,
         sink,
     };
+    // a session cancelled (or expired) during its FINAL prefill chunk
+    // must not receive a `Prefilled` event or hold pages for a round:
+    // re-check both before emitting, retiring through the normal path
+    // (which releases the engine-side request and its pool pages)
+    if a.cancel.is_cancelled() {
+        retire(engine, metrics, budgets, a, Retire::Cancelled);
+        return None;
+    }
+    if a.deadline.is_some_and(|d| Instant::now() >= d) {
+        retire(engine, metrics, budgets, a, Retire::Expired);
+        return None;
+    }
+    let alive = a.sink.event(SessionEvent::Prefilled {
+        first_token: report.first_token,
+        omsr: report.omsr,
+        modes,
+        ttft_us,
+        queue_us,
+    });
     if alive {
         Some(a)
     } else {
-        retire(engine, metrics, a, Retire::Cancelled);
+        retire(engine, metrics, budgets, a, Retire::Cancelled);
         None
     }
 }
@@ -825,7 +1022,14 @@ enum Retire {
 
 /// Release the engine slot (freeing the KV cache) and emit the terminal
 /// event, updating the per-outcome counters.
-fn retire(engine: &EngineHandle, metrics: &Arc<Mutex<ServingMetrics>>, a: Active, how: Retire) {
+fn retire(
+    engine: &EngineHandle,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+    budgets: &mut Budgets,
+    a: Active,
+    how: Retire,
+) {
+    budgets.release_active(&a);
     engine.release(a.engine_id);
     let e2e = a.t_arrival.elapsed().as_micros() as u64;
     let Active { generated, omsr, modes, t_arrival, t_first_token, decode_us, queue_us, sink, .. } =

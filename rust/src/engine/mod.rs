@@ -24,13 +24,13 @@
 //!           call (KV staged as views), then one (B,d)x(d,V) lm_head
 //! ```
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::config::MetaConfig;
-use crate::kvcache::{FullCache, LayerCache, SparseCache};
+use crate::kvcache::{FullCache, KvPool, LayerCache, SparseCache};
 use crate::model::{argmax, ModelWeights};
 use crate::router::{pool_descriptor, AttnMode, DecodeMode, Policy, RouterNet};
 use crate::runtime::{open_backend, Arg, Backend, HostTensor, TensorView, WeightStore};
@@ -129,6 +129,56 @@ pub struct DecodeBatchReport {
     /// Whether the batched kernels ran (false = serial fallback:
     /// `FLUX_BATCH_DECODE=0` or a backend without batch support).
     pub batched: bool,
+    /// KV-pool occupancy gauges as of the end of this round:
+    /// `(pages_allocated, pages_free, pages_peak)` — piggybacked so the
+    /// scheduler's metrics fold needs no extra engine round-trip.
+    pub pool_pages: (u64, u64, u64),
+}
+
+/// Admission-relevant pool + model geometry, fetched once by the
+/// coordinator at startup (DESIGN.md §11): everything the scheduler
+/// needs to compute a request's worst-case page reservation without
+/// asking the engine per request.
+#[derive(Debug, Clone)]
+pub struct PoolProfile {
+    /// tokens per page (pool pages are `page_tokens * H * D` floats)
+    pub page_tokens: usize,
+    /// the pool's page budget
+    pub total_pages: usize,
+    pub n_layers: usize,
+    /// sparse-ring capacity in tokens (SA_BUF)
+    pub sa_buf: usize,
+    /// published prefill buckets, ascending — initial FA capacities
+    pub prefill_buckets: Vec<usize>,
+}
+
+impl PoolProfile {
+    /// Worst-case page reservation for a `(prompt, max_new)` request:
+    /// per layer, the fully-grown FA capacity (initial capacity = the
+    /// smallest covering prefill bucket, doubled until it covers
+    /// `prompt + max_new`) PLUS one SA ring — the sum covers every
+    /// reachable layout, including the chunked-prefill transient where
+    /// a layer holds FA staging and a ring simultaneously. Engine-side
+    /// growth frees the old run before allocating the doubled one, so
+    /// this is a true upper bound (the budget-admission formula,
+    /// DESIGN.md §11).
+    pub fn worst_case_pages(&self, prompt_len: usize, max_new: usize) -> usize {
+        let per = self.page_tokens.max(1);
+        let mut cap = self
+            .prefill_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= prompt_len)
+            .or_else(|| self.prefill_buckets.last().copied())
+            .unwrap_or_else(|| prompt_len.max(1));
+        let need = prompt_len + max_new;
+        while cap < need {
+            cap *= 2;
+        }
+        let fa = cap.div_ceil(per).max(1);
+        let sa = self.sa_buf.div_ceil(per).max(1);
+        self.n_layers * (fa + sa)
+    }
 }
 
 /// The engine proper (not `Send`; lives on the executor thread).
@@ -137,6 +187,8 @@ pub struct Engine {
     pub weights: ModelWeights,
     pub routers: HashMap<String, RouterNet>,
     cfg: MetaConfig,
+    /// the paged KV block pool every cache draws from (DESIGN.md §11)
+    pool: KvPool,
     requests: HashMap<u64, RequestState>,
     /// in-flight chunked prefill jobs (DESIGN.md §10), keyed separately
     /// from live requests — a job becomes a request on its final chunk
@@ -152,9 +204,27 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Tokens per KV pool page: 32 tokens × H × D floats — small enough
+    /// that a sparse ring wastes < one page, large enough that a
+    /// 2048-token cache is a 64-entry run.
+    pub const DEFAULT_PAGE_TOKENS: usize = 32;
+
     /// Load backend + weights + every available router variant and
-    /// prepare all executables listed in the manifest.
+    /// prepare all executables listed in the manifest, with a
+    /// default-sized KV pool.
     pub fn load(artifacts: &std::path::Path) -> Result<Self> {
+        Self::load_with_pool(artifacts, None)
+    }
+
+    /// [`Engine::load`] with an explicit pool geometry
+    /// `(page_tokens, budget_tokens)` — the bench pool-pressure
+    /// scenario and tests size the pool down to force typed exhaustion;
+    /// `None` gives every request room (budget = worst case of the
+    /// default `max_active_requests`).
+    pub fn load_with_pool(
+        artifacts: &std::path::Path,
+        pool_geometry: Option<(usize, usize)>,
+    ) -> Result<Self> {
         let cfg = MetaConfig::load(artifacts)?;
         let manifest = crate::util::json::Json::parse(&std::fs::read_to_string(
             artifacts.join("manifest.json"),
@@ -203,11 +273,29 @@ impl Engine {
         }
         let zero_copy = std::env::var("FLUX_ZERO_COPY").map(|v| v != "0").unwrap_or(true);
         let batch_decode = std::env::var("FLUX_BATCH_DECODE").map(|v| v != "0").unwrap_or(true);
+        let (page_tokens, budget_tokens) = pool_geometry.unwrap_or_else(|| {
+            // default budget: every slot of the default admission cap
+            // (32 requests) at its worst case — the largest prefill
+            // bucket of FA cache plus one sparse ring, per layer. The
+            // arenas grow lazily, so an idle engine holds no KV memory.
+            let max_bucket = cfg.prefill_buckets.last().copied().unwrap_or(2048);
+            (
+                Self::DEFAULT_PAGE_TOKENS,
+                (max_bucket + cfg.sa_buf) * cfg.model.n_layers * 32,
+            )
+        });
+        let pool = KvPool::with_budget(
+            page_tokens,
+            cfg.model.n_heads,
+            cfg.model.head_dim,
+            budget_tokens,
+        );
         Ok(Self {
             rt,
             weights,
             routers,
             cfg,
+            pool,
             requests: HashMap::new(),
             prefill_jobs: HashMap::new(),
             next_id: 0,
@@ -218,6 +306,31 @@ impl Engine {
 
     pub fn cfg(&self) -> &MetaConfig {
         &self.cfg
+    }
+
+    /// The KV block pool (occupancy gauges for metrics / tests).
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    /// Admission-relevant pool + model geometry (DESIGN.md §11).
+    pub fn pool_profile(&self) -> PoolProfile {
+        let hd = (self.cfg.model.n_heads * self.cfg.model.head_dim).max(1);
+        PoolProfile {
+            page_tokens: self.pool.page_floats() / hd,
+            total_pages: self.pool.total_pages(),
+            n_layers: self.cfg.model.n_layers,
+            sa_buf: self.cfg.sa_buf,
+            prefill_buckets: self.cfg.prefill_buckets.clone(),
+        }
+    }
+
+    fn pool_gauges(&self) -> (u64, u64, u64) {
+        (
+            self.pool.pages_allocated() as u64,
+            self.pool.pages_free() as u64,
+            self.pool.pages_peak() as u64,
+        )
     }
 
     /// Toggle the zero-copy KV staging path (the bench harness compares
@@ -309,84 +422,97 @@ impl Engine {
         router_name: &str,
     ) -> Result<(u64, PrefillReport)> {
         let t_start = Instant::now();
-        let cfg = &self.cfg;
-        let n_layers = cfg.model.n_layers;
-        let bucket = cfg
+        let n_layers = self.cfg.model.n_layers;
+        let bucket = self
+            .cfg
             .prefill_bucket(tokens.len())
             .ok_or_else(|| anyhow::anyhow!("prompt of {} tokens exceeds max bucket", tokens.len()))?;
         let valid = tokens.len();
-        let pool = cfg.sparsity.pool_size;
-        let sink = cfg.sparsity.sink_size;
-        let local = cfg.sparsity.local_size;
-        let sa_buf = cfg.sa_buf;
-        let (nh, hd) = (cfg.model.n_heads, cfg.model.head_dim);
+        let desc_pool = self.cfg.sparsity.pool_size;
+        let sink = self.cfg.sparsity.sink_size;
+        let local = self.cfg.sparsity.local_size;
+        let sa_buf = self.cfg.sa_buf;
+        let (nh, hd) = (self.cfg.model.n_heads, self.cfg.model.head_dim);
         let decode_mode = policy.decode_mode();
 
         let mut hidden = self.weights.embed_tokens(tokens, bucket);
         let mut modes = Vec::with_capacity(n_layers);
-        let mut caches = Vec::with_capacity(n_layers);
+        let mut caches: Vec<LayerCache> = Vec::with_capacity(n_layers);
         let mut router_us = 0u64;
         // padded tail rows are skipped inside the layer kernels when the
         // backend opts in (AOT artifacts keep the 9-input signature)
         let valid_arr = [valid as i32];
         let pass_valid = self.rt.accepts_prefill_valid_arg();
 
-        for layer in 0..n_layers {
-            // --- routing decision for this layer ---
-            let mode = route_layer(
-                &mut *self.rt,
-                &self.routers,
-                policy,
-                router_name,
-                &hidden,
-                valid,
-                pool,
-                layer,
-                &mut router_us,
-            )?;
-            modes.push(mode);
+        // fallible section in one scope: a failure at any layer —
+        // including pool exhaustion — frees the partial caches below
+        // instead of leaking their pages
+        let run = (|| -> Result<u32> {
+            for layer in 0..n_layers {
+                // --- routing decision for this layer ---
+                let mode = route_layer(
+                    &mut *self.rt,
+                    &self.routers,
+                    policy,
+                    router_name,
+                    &hidden,
+                    valid,
+                    desc_pool,
+                    layer,
+                    &mut router_us,
+                )?;
+                modes.push(mode);
 
-            // --- layer execution ---
-            let exe = format!("{}_{}", mode.exe_prefix(), bucket);
-            let w = &self.weights.layers[layer];
-            let mut call_args = vec![
-                Arg::F32(&hidden),
-                Arg::F32(&w.norm1),
-                Arg::F32(&w.wq),
-                Arg::F32(&w.wk),
-                Arg::F32(&w.wv),
-                Arg::F32(&w.wo),
-                Arg::F32(&w.norm2),
-                Arg::F32(&w.w_ff1),
-                Arg::F32(&w.w_ff2),
-            ];
-            if pass_valid {
-                call_args.push(Arg::I32(&valid_arr));
+                // --- layer execution ---
+                let exe = format!("{}_{}", mode.exe_prefix(), bucket);
+                let w = &self.weights.layers[layer];
+                let mut call_args = vec![
+                    Arg::F32(&hidden),
+                    Arg::F32(&w.norm1),
+                    Arg::F32(&w.wq),
+                    Arg::F32(&w.wk),
+                    Arg::F32(&w.wv),
+                    Arg::F32(&w.wo),
+                    Arg::F32(&w.norm2),
+                    Arg::F32(&w.w_ff1),
+                    Arg::F32(&w.w_ff2),
+                ];
+                if pass_valid {
+                    call_args.push(Arg::I32(&valid_arr));
+                }
+                let mut out = self.rt.run(&exe, &call_args)?;
+                self.rt.note_prefill_rows(&exe, valid as u64, (bucket - valid) as u64);
+                anyhow::ensure!(out.len() == 3, "prefill layer must return (hidden, k, v)");
+                let v = out.pop().unwrap();
+                let k = out.pop().unwrap();
+                hidden = out.pop().unwrap();
+
+                // --- KV retention per routing decision + decode mode ---
+                let sparse_cache = decode_mode == DecodeMode::Sparse && mode != AttnMode::Fa;
+                let cache = if sparse_cache {
+                    let mut c = SparseCache::new(&mut self.pool, nh, hd, sink, local, sa_buf)?;
+                    c.load_prefill(&mut self.pool, &k, &v, valid);
+                    LayerCache::Sparse(c)
+                } else {
+                    let mut c = FullCache::new(&mut self.pool, nh, hd, bucket)?;
+                    c.load_prefill(&mut self.pool, &k, &v, valid)?;
+                    LayerCache::Full(c)
+                };
+                caches.push(cache);
             }
-            let mut out = self.rt.run(&exe, &call_args)?;
-            self.rt.note_prefill_rows(&exe, valid as u64, (bucket - valid) as u64);
-            anyhow::ensure!(out.len() == 3, "prefill layer must return (hidden, k, v)");
-            let v = out.pop().unwrap();
-            let k = out.pop().unwrap();
-            hidden = out.pop().unwrap();
-
-            // --- KV retention per routing decision + decode mode ---
-            let sparse_cache = decode_mode == DecodeMode::Sparse && mode != AttnMode::Fa;
-            let cache = if sparse_cache {
-                let mut c = SparseCache::new(nh, hd, sink, local, sa_buf);
-                c.load_prefill(&k, &v, valid);
-                LayerCache::Sparse(c)
-            } else {
-                let mut c = FullCache::new(nh, hd, bucket);
-                c.load_prefill(&k, &v, valid);
-                LayerCache::Full(c)
-            };
-            caches.push(cache);
-        }
-
-        // first generated token from the last valid position — staged
-        // as a borrowed view of the hidden state, no row copy
-        let first_token = self.lm_head_last_row(&hidden, valid)?;
+            // first generated token from the last valid position —
+            // staged as a borrowed view of the hidden state, no row copy
+            self.lm_head_last_row(&hidden, valid)
+        })();
+        let first_token = match run {
+            Ok(t) => t,
+            Err(e) => {
+                for c in caches {
+                    c.free(&mut self.pool);
+                }
+                return Err(e);
+            }
+        };
         let (id, omsr, kv_bytes) =
             self.promote_request(caches, &modes, decode_mode, valid, first_token);
         Ok((
@@ -488,9 +614,22 @@ impl Engine {
         let (nh, hd) = (self.cfg.model.n_heads, self.cfg.model.head_dim);
         let n_layers = self.cfg.model.n_layers;
         // staging capacity == the monolithic bucket, so completed FA
-        // caches are bit-identical (capacity included) to monolithic ones
+        // caches are bit-identical (capacity included) to monolithic
+        // ones; a partial allocation failure frees what was taken
         let staging = if chunked_backend {
-            (0..n_layers).map(|_| FullCache::new(nh, hd, total_bucket)).collect()
+            let mut v: Vec<FullCache> = Vec::with_capacity(n_layers);
+            for _ in 0..n_layers {
+                match FullCache::new(&mut self.pool, nh, hd, total_bucket) {
+                    Ok(c) => v.push(c),
+                    Err(e) => {
+                        for c in v {
+                            c.free(&mut self.pool);
+                        }
+                        return Err(e);
+                    }
+                }
+            }
+            v
         } else {
             Vec::new()
         };
@@ -523,15 +662,28 @@ impl Engine {
     ///
     /// A mid-chunk failure leaves earlier layers' KV already appended to
     /// the staging caches, so the job is unrecoverable: it is dropped
-    /// (staged KV freed) and the error returned — retrying the same job
-    /// id fails cleanly instead of double-appending KV.
+    /// (staged pages freed back to the pool) and the error returned —
+    /// retrying the same job id fails cleanly instead of
+    /// double-appending KV.
     pub fn prefill_chunk(&mut self, job: u64) -> Result<ChunkOutcome> {
         match self.prefill_chunk_inner(job) {
             Ok(out) => Ok(out),
             Err(e) => {
-                self.prefill_jobs.remove(&job);
+                if let Some(j) = self.prefill_jobs.remove(&job) {
+                    self.free_job(j);
+                }
                 Err(e)
             }
+        }
+    }
+
+    /// Return a dropped job's staging + ring pages to the pool.
+    fn free_job(&mut self, j: PrefillJob) {
+        for c in j.staging {
+            c.free(&mut self.pool);
+        }
+        for r in j.rings.into_iter().flatten() {
+            r.free(&mut self.pool);
         }
     }
 
@@ -595,7 +747,7 @@ impl Engine {
                 j.modes.push(mode);
                 let sparse = j.decode_mode == DecodeMode::Sparse && mode != AttnMode::Fa;
                 j.rings.push(if sparse {
-                    Some(SparseCache::new(nh, hd, sink, local, sa_buf))
+                    Some(SparseCache::new(&mut self.pool, nh, hd, sink, local, sa_buf)?)
                 } else {
                     None
                 });
@@ -604,7 +756,7 @@ impl Engine {
             // --- chunk execution over the staged prefix (zero-copy) ---
             let exe = format!("{}_chunk_{}", mode.exe_prefix(), chunk_bucket);
             let w = &self.weights.layers[layer];
-            let (kt, vt) = j.staging[layer].view();
+            let (kt, vt) = j.staging[layer].view(&self.pool);
             let call_args = [
                 Arg::F32(&hidden),
                 Arg::F32(&w.norm1),
@@ -630,9 +782,9 @@ impl Engine {
 
             // --- KV landing: staging prefix always (cross-chunk
             // attention), plus ring-priming for sparse-routed layers ---
-            j.staging[layer].append_prefill_chunk(&k, &v, n);
+            j.staging[layer].append_prefill_chunk(&mut self.pool, &k, &v, n)?;
             if let Some(ring) = &mut j.rings[layer] {
-                ring.append_prefill_chunk(&k, &v, n);
+                ring.append_prefill_chunk(&mut self.pool, &k, &v, n);
             }
         }
         j.consumed += n;
@@ -646,15 +798,18 @@ impl Engine {
         let first_token = self.lm_head_last_row(&hidden, n)?;
         let j = self.prefill_jobs.remove(&job).expect("job present");
         let modes = j.modes;
-        let caches: Vec<LayerCache> = j
-            .staging
-            .into_iter()
-            .zip(j.rings)
-            .map(|(full, ring)| match ring {
-                Some(r) => LayerCache::Sparse(r),
-                None => LayerCache::Full(full),
-            })
-            .collect();
+        let mut caches: Vec<LayerCache> = Vec::with_capacity(j.staging.len());
+        for (full, ring) in j.staging.into_iter().zip(j.rings) {
+            match ring {
+                Some(r) => {
+                    // sparse-routed layer keeps only the ring: the full
+                    // staging prefix returns its pages to the pool here.
+                    full.free(&mut self.pool);
+                    caches.push(LayerCache::Sparse(r));
+                }
+                None => caches.push(LayerCache::Full(full)),
+            }
+        }
         let (id, omsr, kv_bytes) =
             self.promote_request(caches, &modes, j.decode_mode, len, first_token);
         Ok(ChunkOutcome::Done {
@@ -676,7 +831,13 @@ impl Engine {
     /// Drop a partially-prefilled job, freeing its staged KV (mid-
     /// prefill cancellation / deadline eviction).
     pub fn prefill_cancel(&mut self, job: u64) -> bool {
-        self.prefill_jobs.remove(&job).is_some()
+        match self.prefill_jobs.remove(&job) {
+            Some(j) => {
+                self.free_job(j);
+                true
+            }
+            None => false,
+        }
     }
 
     /// One decode step: consume the request's `last_token`, produce the
@@ -717,7 +878,7 @@ impl Engine {
             let cache = &mut state.caches[layer];
             match cache {
                 LayerCache::Full(c) => {
-                    c.append(&k_new.data, &v_new.data);
+                    c.append(&mut self.pool, &k_new.data, &v_new.data)?;
                     let bucket = cfg
                         .decode_attend_bucket(c.len(), c.capacity())
                         .ok_or_else(|| anyhow::anyhow!("KV overflow at {}", c.len()))?;
@@ -725,7 +886,7 @@ impl Engine {
                     let exe = format!("decode_attend_fa_{bucket}");
                     let kv_bytes = (2 * cfg.model.n_heads * bucket * cfg.model.head_dim * 4) as u64;
                     let out = if self.zero_copy && bucket == c.capacity() {
-                        let (kt, vt) = c.view();
+                        let (kt, vt) = c.view(&self.pool);
                         let out = self.rt.run(
                             &exe,
                             &[
@@ -745,7 +906,7 @@ impl Engine {
                     } else {
                         // misaligned bucket (prefill buckets not in the
                         // decode ledger): re-bucket into owned tensors
-                        let (kt, vt) = c.as_tensors(bucket);
+                        let (kt, vt) = c.as_tensors(&self.pool, bucket);
                         let out = self.rt.run(
                             &exe,
                             &[
@@ -767,12 +928,12 @@ impl Engine {
                     hidden = out.into_iter().next().unwrap();
                 }
                 LayerCache::Sparse(c) => {
-                    c.append(&k_new.data, &v_new.data);
+                    c.append(&mut self.pool, &k_new.data, &v_new.data);
                     let kv_bytes =
                         (2 * cfg.model.n_heads * cfg.sa_buf * cfg.model.head_dim * 4) as u64;
                     let out = if self.zero_copy {
                         // the sparse ring is always in executable layout
-                        let (kt, vt, valid) = c.view();
+                        let (kt, vt, valid) = c.view(&self.pool);
                         let valid_arr = [valid as i32];
                         let out = self.rt.run(
                             "decode_attend_sa",
@@ -791,7 +952,7 @@ impl Engine {
                         self.rt.note_kv_transfer("decode_attend_sa", 0, kv_bytes);
                         out
                     } else {
-                        let (kt, vt, valid) = c.as_tensors();
+                        let (kt, vt, valid) = c.as_tensors(&self.pool);
                         let valid_arr = [valid as i32];
                         let out = self.rt.run(
                             "decode_attend_sa",
@@ -854,7 +1015,16 @@ impl Engine {
         let mut tokens = Vec::with_capacity(ids.len());
         let mut step_us = Vec::with_capacity(ids.len());
         let (mut fa_group_slots, mut sa_group_slots) = (0u64, 0u64);
+        let mut seen = HashSet::with_capacity(ids.len());
         for &id in ids {
+            // a repeated id must fail its own slot, exactly like the
+            // batched path — stepping it twice would silently advance
+            // the request two tokens in one round
+            if !seen.insert(id) {
+                tokens.push(Err(anyhow::anyhow!("duplicate request {id} in decode round")));
+                step_us.push(0);
+                continue;
+            }
             if let Some(state) = self.requests.get(&id) {
                 for cache in &state.caches {
                     match cache {
@@ -875,6 +1045,7 @@ impl Engine {
             fa_group_slots,
             sa_group_slots,
             batched: false,
+            pool_pages: self.pool_gauges(),
         }
     }
 
@@ -901,7 +1072,14 @@ impl Engine {
         let mut tokens: Vec<Option<Result<u32>>> =
             std::iter::repeat_with(|| None).take(ids.len()).collect();
         let mut slots: Vec<(usize, u64, RequestState)> = Vec::with_capacity(ids.len());
+        let mut seen = HashSet::with_capacity(ids.len());
         for (i, &id) in ids.iter().enumerate() {
+            // detaching on first sight makes a repeated id indistinguishable
+            // from an unknown one; name the failure explicitly instead
+            if !seen.insert(id) {
+                tokens[i] = Some(Err(anyhow::anyhow!("duplicate request {id} in decode round")));
+                continue;
+            }
             match self.requests.remove(&id) {
                 Some(s) => slots.push((i, id, s)),
                 None => tokens[i] = Some(Err(anyhow::anyhow!("unknown request {id}"))),
@@ -959,12 +1137,14 @@ impl Engine {
                 let k_new = &k_all.data[row * hd..(row + 1) * hd];
                 let v_new = &v_all.data[row * hd..(row + 1) * hd];
                 match &mut slots[si].2.caches[layer] {
-                    LayerCache::Full(c) => {
-                        c.append(k_new, v_new);
-                        fa_rows.push(row);
-                    }
+                    LayerCache::Full(c) => match c.append(&mut self.pool, k_new, v_new) {
+                        // a slot whose cache growth outruns the pool
+                        // fails alone — its batchmates keep decoding
+                        Ok(()) => fa_rows.push(row),
+                        Err(e) => failed[si] = Some(e.to_string()),
+                    },
                     LayerCache::Sparse(c) => {
-                        c.append(k_new, v_new);
+                        c.append(&mut self.pool, k_new, v_new);
                         sa_rows.push(row);
                     }
                 }
@@ -1001,7 +1181,7 @@ impl Engine {
                                 members.push(Member { row, kv: Kv::View, valid: c.len() });
                                 borrowed += bytes;
                             } else {
-                                owned.push(c.as_tensors(bucket));
+                                owned.push(c.as_tensors(&self.pool, bucket));
                                 members.push(Member {
                                     row,
                                     kv: Kv::Owned(owned.len() - 1),
@@ -1016,7 +1196,7 @@ impl Engine {
                                 members.push(Member { row, kv: Kv::View, valid: c.len() });
                                 borrowed += bytes;
                             } else {
-                                let (kt, vt, _) = c.as_tensors();
+                                let (kt, vt, _) = c.as_tensors(&self.pool);
                                 owned.push((kt, vt));
                                 members.push(Member {
                                     row,
@@ -1056,12 +1236,12 @@ impl Engine {
                     match &mem.kv {
                         Kv::View => match &slots[live[mem.row]].2.caches[layer] {
                             LayerCache::Full(c) => {
-                                let (kt, vt) = c.view();
+                                let (kt, vt) = c.view(&self.pool);
                                 call.push(Arg::F32View(kt));
                                 call.push(Arg::F32View(vt));
                             }
                             LayerCache::Sparse(c) => {
-                                let (kt, vt, _) = c.view();
+                                let (kt, vt, _) = c.view(&self.pool);
                                 call.push(Arg::F32View(kt));
                                 call.push(Arg::F32View(vt));
                             }
@@ -1152,6 +1332,7 @@ impl Engine {
             fa_group_slots,
             sa_group_slots,
             batched: true,
+            pool_pages: self.pool_gauges(),
         }
     }
 
@@ -1217,9 +1398,18 @@ impl Engine {
         Ok(scores)
     }
 
-    /// Drop a request's state (cancellation or completion).
+    /// Drop a request's state (cancellation or completion), returning
+    /// every page it held to the pool.
     pub fn release(&mut self, id: u64) -> bool {
-        self.requests.remove(&id).is_some()
+        match self.requests.remove(&id) {
+            Some(state) => {
+                for c in state.caches {
+                    c.free(&mut self.pool);
+                }
+                true
+            }
+            None => false,
+        }
     }
 
     pub fn request_state(&self, id: u64) -> Option<&RequestState> {
@@ -1313,6 +1503,11 @@ pub enum EngineJob {
     MaxPromptLen {
         reply: std::sync::mpsc::Sender<usize>,
     },
+    /// Pool geometry snapshot for worst-case page admission — fetched
+    /// once by the coordinator at startup (the geometry is immutable).
+    PoolProfile {
+        reply: std::sync::mpsc::Sender<PoolProfile>,
+    },
     Release {
         id: u64,
     },
@@ -1330,12 +1525,30 @@ pub struct EngineHandle {
 impl EngineHandle {
     /// Spawn the executor thread and load the engine on it.
     pub fn spawn(artifacts: std::path::PathBuf) -> Result<Self> {
+        Self::spawn_inner(artifacts, None)
+    }
+
+    /// [`EngineHandle::spawn`] with an explicit KV pool geometry
+    /// `(page_tokens, budget_tokens)` — the pool-pressure bench and
+    /// tests shrink the budget to force typed `Overloaded` rejections.
+    pub fn spawn_with_pool(
+        artifacts: std::path::PathBuf,
+        page_tokens: usize,
+        budget_tokens: usize,
+    ) -> Result<Self> {
+        Self::spawn_inner(artifacts, Some((page_tokens, budget_tokens)))
+    }
+
+    fn spawn_inner(
+        artifacts: std::path::PathBuf,
+        pool_geometry: Option<(usize, usize)>,
+    ) -> Result<Self> {
         let (tx, rx) = std::sync::mpsc::channel::<EngineJob>();
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
         std::thread::Builder::new()
             .name("flux-engine".into())
             .spawn(move || {
-                let mut engine = match Engine::load(&artifacts) {
+                let mut engine = match Engine::load_with_pool(&artifacts, pool_geometry) {
                     Ok(e) => {
                         let _ = ready_tx.send(Ok(()));
                         e
@@ -1370,6 +1583,9 @@ impl EngineHandle {
                             let max =
                                 engine.cfg().prefill_buckets.last().copied().unwrap_or(usize::MAX);
                             let _ = reply.send(max);
+                        }
+                        EngineJob::PoolProfile { reply } => {
+                            let _ = reply.send(engine.pool_profile());
                         }
                         EngineJob::Release { id } => {
                             engine.release(id);
@@ -1452,6 +1668,16 @@ impl EngineHandle {
         let (reply, rx) = std::sync::mpsc::channel();
         self.tx
             .send(EngineJob::MaxPromptLen { reply })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        Ok(rx.recv()?)
+    }
+
+    /// Pool geometry for worst-case page admission (immutable after
+    /// load; fetch once).
+    pub fn pool_profile(&self) -> Result<PoolProfile> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(EngineJob::PoolProfile { reply })
             .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
         Ok(rx.recv()?)
     }

@@ -1,32 +1,226 @@
-//! KV-cache manager: per-layer full caches (bucketed growth) and sparse
-//! sink+local ring buffers (the paper's sparse-decode configuration,
-//! section 3.3).
+//! KV-cache manager: a paged block pool shared by every request, with
+//! per-layer full caches (bucketed growth) and sparse sink+local ring
+//! buffers (the paper's sparse-decode configuration, section 3.3)
+//! allocated as page runs inside it.
 //!
-//! Layout contract with the AOT decode executables:
+//! ## The page pool
+//!
+//! [`KvPool`] owns two float arenas (one for K, one for V) divided into
+//! fixed-size pages (`page_floats` floats each; the engine sizes a page
+//! as 32 tokens × H × D). Every cache allocates a [`PageBlock`] — its
+//! per-layer block table — covering `ceil(needed_floats / page_floats)`
+//! pages, and retirement frees the pages back to the pool instead of
+//! dropping a monolithic buffer, so FA and SA layers (and chunked-
+//! prefill staging) all draw from ONE memory budget and the scheduler
+//! can admit against it (DESIGN.md §11).
+//!
+//! A block's pages are CONTIGUOUS (the block table is a run of
+//! consecutive page ids). This is deliberate: the decode executables
+//! consume `(H, capacity, D)` row-major buffers as zero-copy
+//! [`TensorView`]s, and a scattered page table would force a gather on
+//! every decode step — exactly the copy traffic the zero-copy fast path
+//! exists to avoid (`kv_bytes_moved == 0` on aligned buckets is pinned
+//! by tests). First-fit allocation over a coalescing free list keeps
+//! fragmentation bounded; the arenas grow lazily up to the page budget.
+//!
+//! Layout contract with the AOT decode executables (unchanged):
 //!   * full cache  -> `(H, K_bucket, D)` row-major, `valid_len` slots
 //!     filled from the front;
 //!   * sparse cache -> `(H, SA_BUF, D)` with the sink tokens first and
 //!     the local window following as a ring (oldest entry overwritten in
-//!     place). Attention is a set operation (RoPE was applied at append
-//!     time), so buffer order only has to be consistent, not positional.
+//!     place).
 //!
-//! Both caches keep their internal buffers *in executable layout* and
-//! hand out zero-copy [`TensorView`]s for the decode hot path: a decode
-//! step stages its KV arguments without cloning whenever the full
-//! cache's capacity is a published bucket (the common case — capacities
-//! and buckets grow in lockstep), and always for the sparse ring.
-//!
-//! Because every request owns its own cache objects, a batched decode
-//! round (DESIGN.md §9) stages many requests' views into ONE
-//! `attend_batch_{fa,sa}` call simultaneously — the borrows are
-//! per-cache, so multi-request staging needs no copying or locking, and
-//! per-request bucket sizes may differ within the same call (the view's
-//! shape carries the bucket).
+//! Both caches keep their pool region *in executable layout* and hand
+//! out zero-copy [`TensorView`]s for the decode hot path. Because every
+//! cache owns a disjoint page run, a batched decode round (DESIGN.md
+//! §9) stages many requests' views into ONE `attend_batch_{fa,sa}` call
+//! simultaneously — the borrows are all shared borrows of the pool.
+
+use anyhow::Result;
 
 use crate::runtime::{HostTensor, TensorView};
 
-/// Full-history KV cache for one layer (FA / retrieval layers).
-#[derive(Debug, Clone)]
+/// A contiguous run of pages inside a [`KvPool`] — the (degenerate,
+/// consecutive-ids) block table of one cache. Copy on purpose: the
+/// cache stores it by value; freeing goes through [`KvPool::free`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageBlock {
+    /// first page id of the run
+    pub start: usize,
+    /// number of pages in the run
+    pub pages: usize,
+}
+
+/// Fixed-size page pool backing every KV cache (K and V arenas grown
+/// lazily up to `total_pages`). Single-threaded by design — it lives
+/// inside the [`crate::engine::Engine`] on the executor thread.
+#[derive(Debug)]
+pub struct KvPool {
+    page_floats: usize,
+    total_pages: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// free runs over the grown region, sorted by start, coalesced
+    free: Vec<PageBlock>,
+    /// pages materialized in the arenas so far
+    grown_pages: usize,
+    allocated_pages: usize,
+    peak_pages: usize,
+}
+
+impl KvPool {
+    pub fn new(page_floats: usize, total_pages: usize) -> Self {
+        assert!(page_floats > 0, "page size must be positive");
+        Self {
+            page_floats,
+            total_pages,
+            k: Vec::new(),
+            v: Vec::new(),
+            free: Vec::new(),
+            grown_pages: 0,
+            allocated_pages: 0,
+            peak_pages: 0,
+        }
+    }
+
+    /// Pool sized in model terms: pages of `page_tokens` tokens
+    /// (`page_tokens * n_heads * head_dim` floats) covering a budget of
+    /// `budget_tokens` cacheable tokens.
+    pub fn with_budget(
+        page_tokens: usize,
+        n_heads: usize,
+        head_dim: usize,
+        budget_tokens: usize,
+    ) -> Self {
+        let page_floats = page_tokens.max(1) * n_heads * head_dim;
+        Self::new(page_floats, budget_tokens.div_ceil(page_tokens.max(1)))
+    }
+
+    pub fn page_floats(&self) -> usize {
+        self.page_floats
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    /// Pages currently allocated to caches.
+    pub fn pages_allocated(&self) -> usize {
+        self.allocated_pages
+    }
+
+    /// Pages still available against the budget (free-listed runs plus
+    /// the not-yet-grown tail — both are admissible).
+    pub fn pages_free(&self) -> usize {
+        self.total_pages - self.allocated_pages
+    }
+
+    /// High-water mark of allocated pages over the pool's lifetime.
+    pub fn pages_peak(&self) -> usize {
+        self.peak_pages
+    }
+
+    /// Pages needed to hold `n_floats` floats.
+    pub fn pages_for(&self, n_floats: usize) -> usize {
+        n_floats.div_ceil(self.page_floats).max(1)
+    }
+
+    /// Allocate a zeroed contiguous run covering `n_floats` floats (in
+    /// each of the K and V arenas). Fails — typed, no panic — when the
+    /// budget can't cover it; the caller surfaces that as a per-request
+    /// error or an `Overloaded` admission rejection.
+    pub fn alloc(&mut self, n_floats: usize) -> Result<PageBlock> {
+        let need = self.pages_for(n_floats);
+        let block = self.reserve(need)?;
+        let a = block.start * self.page_floats;
+        let b = (block.start + block.pages) * self.page_floats;
+        self.k[a..b].fill(0.0);
+        self.v[a..b].fill(0.0);
+        self.allocated_pages += block.pages;
+        self.peak_pages = self.peak_pages.max(self.allocated_pages);
+        Ok(block)
+    }
+
+    /// Find or grow a run of `need` pages (no zeroing / accounting).
+    fn reserve(&mut self, need: usize) -> Result<PageBlock> {
+        // first fit over the free list
+        if let Some(i) = self.free.iter().position(|r| r.pages >= need) {
+            let run = self.free[i];
+            if run.pages == need {
+                self.free.remove(i);
+            } else {
+                self.free[i] = PageBlock { start: run.start + need, pages: run.pages - need };
+            }
+            return Ok(PageBlock { start: run.start, pages: need });
+        }
+        // grow the arenas at the tail; a free run ending exactly at the
+        // grown edge extends into the growth so doubling patterns don't
+        // strand tail fragments
+        let (start, reuse_tail) = match self.free.last().copied() {
+            Some(r) if r.start + r.pages == self.grown_pages => (r.start, r.pages),
+            _ => (self.grown_pages, 0),
+        };
+        let grow_by = need - reuse_tail;
+        if self.grown_pages + grow_by > self.total_pages {
+            anyhow::bail!(
+                "kv pool exhausted: need {need} pages, {} free of {} budget",
+                self.pages_free(),
+                self.total_pages
+            );
+        }
+        if reuse_tail > 0 {
+            self.free.pop();
+        }
+        self.grown_pages += grow_by;
+        let floats = self.grown_pages * self.page_floats;
+        self.k.resize(floats, 0.0);
+        self.v.resize(floats, 0.0);
+        Ok(PageBlock { start, pages: need })
+    }
+
+    /// Return a block's pages to the free list (coalescing neighbours).
+    pub fn free(&mut self, block: PageBlock) {
+        debug_assert!(block.start + block.pages <= self.grown_pages, "free of unallocated block");
+        debug_assert!(self.allocated_pages >= block.pages, "double free");
+        self.allocated_pages -= block.pages;
+        let i = self.free.partition_point(|r| r.start < block.start);
+        self.free.insert(i, block);
+        // coalesce with the right then left neighbour
+        if i + 1 < self.free.len() && self.free[i].start + self.free[i].pages == self.free[i + 1].start
+        {
+            self.free[i].pages += self.free[i + 1].pages;
+            self.free.remove(i + 1);
+        }
+        if i > 0 && self.free[i - 1].start + self.free[i - 1].pages == self.free[i].start {
+            self.free[i - 1].pages += self.free[i].pages;
+            self.free.remove(i);
+        }
+    }
+
+    fn range(&self, block: PageBlock) -> std::ops::Range<usize> {
+        block.start * self.page_floats..(block.start + block.pages) * self.page_floats
+    }
+
+    /// Borrow a block's K-arena floats.
+    pub fn k_of(&self, block: PageBlock) -> &[f32] {
+        &self.k[self.range(block)]
+    }
+
+    pub fn v_of(&self, block: PageBlock) -> &[f32] {
+        &self.v[self.range(block)]
+    }
+
+    /// Borrow a block's K- and V-arena floats mutably (one call so a
+    /// cache can write both halves of an append without re-borrowing).
+    pub fn kv_mut(&mut self, block: PageBlock) -> (&mut [f32], &mut [f32]) {
+        let r = self.range(block);
+        (&mut self.k[r.clone()], &mut self.v[r])
+    }
+}
+
+/// Full-history KV cache for one layer (FA / retrieval layers): a block
+/// table over the pool holding `(H, capacity, D)` row-major.
+#[derive(Debug)]
 pub struct FullCache {
     n_heads: usize,
     head_dim: usize,
@@ -35,21 +229,20 @@ pub struct FullCache {
     /// executable-layout shape `[H, capacity, D]`, kept in sync with
     /// `capacity` so [`FullCache::view`] can borrow it
     shape: [usize; 3],
-    k: Vec<f32>, // (H, capacity, D)
-    v: Vec<f32>,
+    block: PageBlock,
 }
 
 impl FullCache {
-    pub fn new(n_heads: usize, head_dim: usize, capacity: usize) -> Self {
-        Self {
+    pub fn new(pool: &mut KvPool, n_heads: usize, head_dim: usize, capacity: usize) -> Result<Self> {
+        let block = pool.alloc(n_heads * capacity * head_dim)?;
+        Ok(Self {
             n_heads,
             head_dim,
             capacity,
             len: 0,
             shape: [n_heads, capacity, head_dim],
-            k: vec![0.0; n_heads * capacity * head_dim],
-            v: vec![0.0; n_heads * capacity * head_dim],
-        }
+            block,
+        })
     }
 
     pub fn len(&self) -> usize {
@@ -64,90 +257,165 @@ impl FullCache {
         self.capacity
     }
 
-    /// KV bytes currently held (memory accounting for Table 1 notes).
+    /// KV bytes currently held (memory accounting for Table 1 notes) —
+    /// the logical `(H, capacity, D)` extent, not the page-rounded run.
     pub fn bytes(&self) -> usize {
         2 * self.n_heads * self.capacity * self.head_dim * 4
+    }
+
+    /// Pages held in the pool.
+    pub fn pages(&self) -> usize {
+        self.block.pages
+    }
+
+    /// Return this cache's pages to the pool. Consumes the cache — a
+    /// freed block table must never be viewed again.
+    pub fn free(self, pool: &mut KvPool) {
+        pool.free(self.block);
+    }
+
+    /// number of floats the `(H, capacity, D)` layout occupies
+    fn floats(&self) -> usize {
+        self.n_heads * self.capacity * self.head_dim
     }
 
     /// Bulk-load prefill outputs `k`, `v` shaped `(H, S_bucket, D)` of
     /// which the first `valid` columns are real tokens — exactly one
     /// whole-prompt [`FullCache::append_prefill_chunk`] from empty.
-    pub fn load_prefill(&mut self, k: &HostTensor, v: &HostTensor, valid: usize) {
+    pub fn load_prefill(
+        &mut self,
+        pool: &mut KvPool,
+        k: &HostTensor,
+        v: &HostTensor,
+        valid: usize,
+    ) -> Result<()> {
         self.len = 0;
-        self.append_prefill_chunk(k, v, valid);
+        self.append_prefill_chunk(pool, k, v, valid)
     }
 
-    /// Append one token's `(H, D)` k/v.
-    pub fn append(&mut self, k_new: &[f32], v_new: &[f32]) {
+    /// Append one token's `(H, D)` k/v. Fails (typed) when the pool
+    /// can't cover the next capacity doubling.
+    pub fn append(&mut self, pool: &mut KvPool, k_new: &[f32], v_new: &[f32]) -> Result<()> {
         let (h, d) = (self.n_heads, self.head_dim);
         assert_eq!(k_new.len(), h * d);
-        self.ensure_capacity(self.len + 1);
+        self.ensure_capacity(pool, self.len + 1)?;
+        let cap = self.capacity;
+        let (kb, vb) = pool.kv_mut(self.block);
         for hh in 0..h {
-            let dst = (hh * self.capacity + self.len) * d;
-            self.k[dst..dst + d].copy_from_slice(&k_new[hh * d..(hh + 1) * d]);
-            self.v[dst..dst + d].copy_from_slice(&v_new[hh * d..(hh + 1) * d]);
+            let dst = (hh * cap + self.len) * d;
+            kb[dst..dst + d].copy_from_slice(&k_new[hh * d..(hh + 1) * d]);
+            vb[dst..dst + d].copy_from_slice(&v_new[hh * d..(hh + 1) * d]);
         }
         self.len += 1;
+        Ok(())
     }
 
     /// Append-at-offset priming for chunked prefill (DESIGN.md §10):
     /// bulk-append a chunk's `(H, S_chunk, D)` k/v outputs (first
-    /// `valid` rows real) at the current length, leaving the buffer
+    /// `valid` rows real) at the current length, leaving the pool region
     /// bit-identical to a monolithic [`FullCache::load_prefill`] of the
     /// concatenated prompt — the staged prefix later chunks attend over
     /// through [`FullCache::view`] with zero copies.
-    pub fn append_prefill_chunk(&mut self, k: &HostTensor, v: &HostTensor, valid: usize) {
+    pub fn append_prefill_chunk(
+        &mut self,
+        pool: &mut KvPool,
+        k: &HostTensor,
+        v: &HostTensor,
+        valid: usize,
+    ) -> Result<()> {
         let (h, d) = (self.n_heads, self.head_dim);
         assert_eq!(k.shape.len(), 3);
         assert_eq!(k.shape[0], h);
         assert_eq!(k.shape[2], d);
         let s_in = k.shape[1];
         assert!(valid <= s_in);
-        self.ensure_capacity(self.len + valid);
+        self.ensure_capacity(pool, self.len + valid)?;
+        let cap = self.capacity;
+        let (kb, vb) = pool.kv_mut(self.block);
         for hh in 0..h {
             for t in 0..valid {
                 let src = (hh * s_in + t) * d;
-                let dst = (hh * self.capacity + self.len + t) * d;
-                self.k[dst..dst + d].copy_from_slice(&k.data[src..src + d]);
-                self.v[dst..dst + d].copy_from_slice(&v.data[src..src + d]);
+                let dst = (hh * cap + self.len + t) * d;
+                kb[dst..dst + d].copy_from_slice(&k.data[src..src + d]);
+                vb[dst..dst + d].copy_from_slice(&v.data[src..src + d]);
             }
         }
         self.len += valid;
+        Ok(())
     }
 
-    fn ensure_capacity(&mut self, need: usize) {
+    fn ensure_capacity(&mut self, pool: &mut KvPool, need: usize) -> Result<()> {
         if need <= self.capacity {
-            return;
+            return Ok(());
         }
         let mut cap = self.capacity.max(1);
         while cap < need {
             cap *= 2;
         }
         let (h, d) = (self.n_heads, self.head_dim);
-        let mut k = vec![0.0; h * cap * d];
-        let mut v = vec![0.0; h * cap * d];
-        for hh in 0..h {
-            for t in 0..self.len {
-                let src = (hh * self.capacity + t) * d;
-                let dst = (hh * cap + t) * d;
-                k[dst..dst + d].copy_from_slice(&self.k[src..src + d]);
-                v[dst..dst + d].copy_from_slice(&self.v[src..src + d]);
+        // copy the valid prefix out, free the old run FIRST (so the
+        // grown allocation may reuse those very pages — growth never
+        // transiently holds old+new and the scheduler's worst-case page
+        // reservation stays an upper bound), then re-lay-out
+        let old_cap = self.capacity;
+        let mut k_old = vec![0.0; h * self.len * d];
+        let mut v_old = vec![0.0; h * self.len * d];
+        {
+            let ks = pool.k_of(self.block);
+            let vs = pool.v_of(self.block);
+            for hh in 0..h {
+                let src = hh * old_cap * d;
+                let dst = hh * self.len * d;
+                let n = self.len * d;
+                k_old[dst..dst + n].copy_from_slice(&ks[src..src + n]);
+                v_old[dst..dst + n].copy_from_slice(&vs[src..src + n]);
             }
         }
-        self.k = k;
-        self.v = v;
+        pool.free(self.block);
+        let block = match pool.alloc(h * cap * d) {
+            Ok(b) => b,
+            Err(e) => {
+                // the run we just freed is still free-listed, so an
+                // allocation of the old size cannot fail — restore the
+                // cache exactly as it was and surface the typed error
+                self.block = pool
+                    .alloc(h * old_cap * d)
+                    .expect("re-allocating the just-freed run cannot fail");
+                let (kb, vb) = pool.kv_mut(self.block);
+                for hh in 0..h {
+                    let src = hh * self.len * d;
+                    let dst = hh * old_cap * d;
+                    let n = self.len * d;
+                    kb[dst..dst + n].copy_from_slice(&k_old[src..src + n]);
+                    vb[dst..dst + n].copy_from_slice(&v_old[src..src + n]);
+                }
+                return Err(e);
+            }
+        };
+        let (kb, vb) = pool.kv_mut(block);
+        for hh in 0..h {
+            let src = hh * self.len * d;
+            let dst = hh * cap * d;
+            let n = self.len * d;
+            kb[dst..dst + n].copy_from_slice(&k_old[src..src + n]);
+            vb[dst..dst + n].copy_from_slice(&v_old[src..src + n]);
+        }
+        self.block = block;
         self.capacity = cap;
         self.shape = [h, cap, d];
+        Ok(())
     }
 
-    /// Zero-copy view of the internal `(H, capacity, D)` buffers. Valid
-    /// as decode-executable arguments only when the capacity equals the
-    /// selected bucket — [`crate::config::MetaConfig::decode_attend_bucket`]
-    /// prefers the capacity exactly so this is the decode fast path.
-    pub fn view(&self) -> (TensorView<'_>, TensorView<'_>) {
+    /// Zero-copy view of the pool-resident `(H, capacity, D)` region.
+    /// Valid as decode-executable arguments only when the capacity
+    /// equals the selected bucket —
+    /// [`crate::config::MetaConfig::decode_attend_bucket`] prefers the
+    /// capacity exactly so this is the decode fast path.
+    pub fn view<'a>(&'a self, pool: &'a KvPool) -> (TensorView<'a>, TensorView<'a>) {
+        let n = self.floats();
         (
-            TensorView { shape: &self.shape, data: &self.k },
-            TensorView { shape: &self.shape, data: &self.v },
+            TensorView { shape: &self.shape, data: &pool.k_of(self.block)[..n] },
+            TensorView { shape: &self.shape, data: &pool.v_of(self.block)[..n] },
         )
     }
 
@@ -157,16 +425,19 @@ impl FullCache {
     /// capacity already equals the requested bucket (the common case —
     /// both are published decode buckets grown in lockstep, and
     /// [`crate::config::MetaConfig::decode_attend_bucket`] prefers the
-    /// capacity exactly for this reason), the internal `(H, capacity, D)`
-    /// buffers are already in executable layout and are cloned wholesale
-    /// instead of re-laid-out per head (see EXPERIMENTS.md §Perf).
-    pub fn as_tensors(&self, bucket: usize) -> (HostTensor, HostTensor) {
+    /// capacity exactly for this reason), the pool region is already in
+    /// executable layout and is cloned wholesale instead of re-laid-out
+    /// per head (see EXPERIMENTS.md §Perf).
+    pub fn as_tensors(&self, pool: &KvPool, bucket: usize) -> (HostTensor, HostTensor) {
         assert!(bucket >= self.len, "bucket {bucket} < len {}", self.len);
         let (h, d) = (self.n_heads, self.head_dim);
+        let n = self.floats();
+        let ks = &pool.k_of(self.block)[..n];
+        let vs = &pool.v_of(self.block)[..n];
         if bucket == self.capacity {
             return (
-                HostTensor::new(vec![h, bucket, d], self.k.clone()),
-                HostTensor::new(vec![h, bucket, d], self.v.clone()),
+                HostTensor::new(vec![h, bucket, d], ks.to_vec()),
+                HostTensor::new(vec![h, bucket, d], vs.to_vec()),
             );
         }
         let mut k = vec![0.0; h * bucket * d];
@@ -174,9 +445,9 @@ impl FullCache {
         for hh in 0..h {
             let src0 = hh * self.capacity * d;
             let dst0 = hh * bucket * d;
-            let n = self.len * d;
-            k[dst0..dst0 + n].copy_from_slice(&self.k[src0..src0 + n]);
-            v[dst0..dst0 + n].copy_from_slice(&self.v[src0..src0 + n]);
+            let nn = self.len * d;
+            k[dst0..dst0 + nn].copy_from_slice(&ks[src0..src0 + nn]);
+            v[dst0..dst0 + nn].copy_from_slice(&vs[src0..src0 + nn]);
         }
         (
             HostTensor::new(vec![h, bucket, d], k),
@@ -190,15 +461,16 @@ impl FullCache {
 /// this is the paper's KV-memory reduction.
 ///
 /// The backing store IS the executable layout: one `(H, SA_BUF, D)`
-/// buffer pair, incrementally maintained on `append` (the window region
-/// is a true ring — the oldest entry is overwritten in place, O(H·D)
-/// per token instead of the old O(H·SA_BUF·D) re-assembly), so decode
-/// reads it through [`SparseCache::view`] with zero copies. Slot layout:
-/// sink tokens occupy slots `0..sink_len`; the window occupies slots
+/// region pair allocated from the SAME pool as the full caches (so FA
+/// and SA layers share one memory budget), incrementally maintained on
+/// `append` (the window region is a true ring — the oldest entry is
+/// overwritten in place, O(H·D) per token), so decode reads it through
+/// [`SparseCache::view`] with zero copies. Slot layout: sink tokens
+/// occupy slots `0..sink_len`; the window occupies slots
 /// `sink_len..sink_len+win_len` with the write cursor cycling through
 /// them. Ring order is deterministic in the append history, and the
 /// attention executable treats the buffer as a set, so this is exact.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct SparseCache {
     n_heads: usize,
     head_dim: usize,
@@ -209,14 +481,21 @@ pub struct SparseCache {
     shape: [usize; 3],
     sink_len: usize,
     total_seen: usize,
-    k: Vec<f32>, // (H, buf, D)
-    v: Vec<f32>,
+    block: PageBlock,
 }
 
 impl SparseCache {
-    pub fn new(n_heads: usize, head_dim: usize, sink: usize, local: usize, buf: usize) -> Self {
+    pub fn new(
+        pool: &mut KvPool,
+        n_heads: usize,
+        head_dim: usize,
+        sink: usize,
+        local: usize,
+        buf: usize,
+    ) -> Result<Self> {
         assert!(buf >= sink + local + 1);
-        Self {
+        let block = pool.alloc(n_heads * buf * head_dim)?;
+        Ok(Self {
             n_heads,
             head_dim,
             sink,
@@ -225,9 +504,8 @@ impl SparseCache {
             shape: [n_heads, buf, head_dim],
             sink_len: 0,
             total_seen: 0,
-            k: vec![0.0; n_heads * buf * head_dim],
-            v: vec![0.0; n_heads * buf * head_dim],
-        }
+            block,
+        })
     }
 
     /// Window entries currently live (tokens appended past the sink,
@@ -252,13 +530,28 @@ impl SparseCache {
         2 * self.buf * self.n_heads * self.head_dim * 4
     }
 
+    pub fn pages(&self) -> usize {
+        self.block.pages
+    }
+
+    /// Return this ring's pages to the pool (consumes the cache).
+    pub fn free(self, pool: &mut KvPool) {
+        pool.free(self.block);
+    }
+
+    fn floats(&self) -> usize {
+        self.n_heads * self.buf * self.head_dim
+    }
+
     /// Scatter one token's `(H*D)` k/v into buffer slot `slot`.
-    fn write_slot(&mut self, slot: usize, k_new: &[f32], v_new: &[f32]) {
+    fn write_slot(&mut self, pool: &mut KvPool, slot: usize, k_new: &[f32], v_new: &[f32]) {
         let (h, d) = (self.n_heads, self.head_dim);
+        let buf = self.buf;
+        let (kb, vb) = pool.kv_mut(self.block);
         for hh in 0..h {
-            let dst = (hh * self.buf + slot) * d;
-            self.k[dst..dst + d].copy_from_slice(&k_new[hh * d..(hh + 1) * d]);
-            self.v[dst..dst + d].copy_from_slice(&v_new[hh * d..(hh + 1) * d]);
+            let dst = (hh * buf + slot) * d;
+            kb[dst..dst + d].copy_from_slice(&k_new[hh * d..(hh + 1) * d]);
+            vb[dst..dst + d].copy_from_slice(&v_new[hh * d..(hh + 1) * d]);
         }
     }
 
@@ -267,7 +560,7 @@ impl SparseCache {
     /// phases are primed exactly as if every prefill token had been
     /// appended one by one, so prefill+decode and pure-append histories
     /// produce identical buffers.
-    pub fn load_prefill(&mut self, k: &HostTensor, v: &HostTensor, valid: usize) {
+    pub fn load_prefill(&mut self, pool: &mut KvPool, k: &HostTensor, v: &HostTensor, valid: usize) {
         let (h, d) = (self.n_heads, self.head_dim);
         let s_in = k.shape[1];
         assert!(valid <= s_in);
@@ -280,13 +573,16 @@ impl SparseCache {
             }
             out
         };
-        self.k.fill(0.0);
-        self.v.fill(0.0);
+        {
+            let (kb, vb) = pool.kv_mut(self.block);
+            kb.fill(0.0);
+            vb.fill(0.0);
+        }
         self.sink_len = valid.min(self.sink);
         self.total_seen = valid;
         for t in 0..self.sink_len {
             let (kk, vv) = (grab(k, t), grab(v, t));
-            self.write_slot(t, &kk, &vv);
+            self.write_slot(pool, t, &kk, &vv);
         }
         // trailing window: token t (t >= sink_len) is the
         // (t - sink_len)-th window append, so it lands on ring slot
@@ -295,7 +591,7 @@ impl SparseCache {
         for t in (valid - win_len)..valid {
             let slot = self.sink_len + (t - self.sink_len) % self.local.max(1);
             let (kk, vv) = (grab(k, t), grab(v, t));
-            self.write_slot(slot, &kk, &vv);
+            self.write_slot(pool, slot, &kk, &vv);
         }
     }
 
@@ -307,7 +603,13 @@ impl SparseCache {
     /// including the write-cursor phase across ring wraps (the
     /// load-prefill/append equivalence is pinned by
     /// `sparse_prefill_ring_phase_matches_appends_across_wrap`).
-    pub fn append_prefill_chunk(&mut self, k: &HostTensor, v: &HostTensor, valid: usize) {
+    pub fn append_prefill_chunk(
+        &mut self,
+        pool: &mut KvPool,
+        k: &HostTensor,
+        v: &HostTensor,
+        valid: usize,
+    ) {
         let (h, d) = (self.n_heads, self.head_dim);
         assert_eq!(k.shape.len(), 3);
         assert_eq!(k.shape[0], h);
@@ -323,53 +625,57 @@ impl SparseCache {
                 kk[hh * d..(hh + 1) * d].copy_from_slice(&k.data[src..src + d]);
                 vv[hh * d..(hh + 1) * d].copy_from_slice(&v.data[src..src + d]);
             }
-            self.append(&kk, &vv);
+            self.append(pool, &kk, &vv);
         }
     }
 
     /// Append one decoded token, overwriting the oldest window slot in
-    /// place once the ring is full.
-    pub fn append(&mut self, k_new: &[f32], v_new: &[f32]) {
+    /// place once the ring is full. Never allocates — the ring's pages
+    /// are fixed at construction (this is the bounded-KV property that
+    /// makes sparse layers cheap to admit).
+    pub fn append(&mut self, pool: &mut KvPool, k_new: &[f32], v_new: &[f32]) {
         let hd = self.n_heads * self.head_dim;
         assert_eq!(k_new.len(), hd);
         if self.sink_len < self.sink {
             let slot = self.sink_len;
-            self.write_slot(slot, k_new, v_new);
+            self.write_slot(pool, slot, k_new, v_new);
             self.sink_len += 1;
         } else if self.local > 0 {
             let wa = self.total_seen - self.sink_len; // window appends so far
             let slot = self.sink_len + wa % self.local;
-            self.write_slot(slot, k_new, v_new);
+            self.write_slot(pool, slot, k_new, v_new);
         }
         self.total_seen += 1;
     }
 
-    /// Zero-copy view of the `(H, SA_BUF, D)` buffers + valid length for
-    /// the sparse-decode executable. Always available — the internal
-    /// buffer is maintained in executable layout.
-    pub fn view(&self) -> (TensorView<'_>, TensorView<'_>, usize) {
+    /// Zero-copy view of the `(H, SA_BUF, D)` pool region + valid length
+    /// for the sparse-decode executable. Always available — the region
+    /// is maintained in executable layout.
+    pub fn view<'a>(&'a self, pool: &'a KvPool) -> (TensorView<'a>, TensorView<'a>, usize) {
+        let n = self.floats();
         (
-            TensorView { shape: &self.shape, data: &self.k },
-            TensorView { shape: &self.shape, data: &self.v },
+            TensorView { shape: &self.shape, data: &pool.k_of(self.block)[..n] },
+            TensorView { shape: &self.shape, data: &pool.v_of(self.block)[..n] },
             self.len(),
         )
     }
 
     /// Owned copy of the `(H, SA_BUF, D)` tensor pair + valid length
-    /// (callers that must outlive the cache borrow; the decode hot path
+    /// (callers that must outlive the pool borrow; the decode hot path
     /// uses [`SparseCache::view`] instead).
-    pub fn as_tensors(&self) -> (HostTensor, HostTensor, usize) {
+    pub fn as_tensors(&self, pool: &KvPool) -> (HostTensor, HostTensor, usize) {
         let (h, d) = (self.n_heads, self.head_dim);
+        let n = self.floats();
         (
-            HostTensor::new(vec![h, self.buf, d], self.k.clone()),
-            HostTensor::new(vec![h, self.buf, d], self.v.clone()),
+            HostTensor::new(vec![h, self.buf, d], pool.k_of(self.block)[..n].to_vec()),
+            HostTensor::new(vec![h, self.buf, d], pool.v_of(self.block)[..n].to_vec()),
             self.len(),
         )
     }
 }
 
 /// Per-layer cache: the routing decision selects the layout.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub enum LayerCache {
     Full(FullCache),
     Sparse(SparseCache),
@@ -393,11 +699,33 @@ impl LayerCache {
             LayerCache::Sparse(c) => c.bytes(),
         }
     }
+
+    pub fn pages(&self) -> usize {
+        match self {
+            LayerCache::Full(c) => c.pages(),
+            LayerCache::Sparse(c) => c.pages(),
+        }
+    }
+
+    /// Return the cache's pages to the pool (retirement path — the
+    /// tentpole's "retirement frees pages, not monoliths").
+    pub fn free(self, pool: &mut KvPool) {
+        match self {
+            LayerCache::Full(c) => c.free(pool),
+            LayerCache::Sparse(c) => c.free(pool),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Small-page pool for unit tests: page = 4 floats so the odd
+    /// capacities below exercise page rounding.
+    fn pool() -> KvPool {
+        KvPool::new(4, 4096)
+    }
 
     fn ht(h: usize, s: usize, d: usize, f: impl Fn(usize, usize, usize) -> f32) -> HostTensor {
         let mut data = vec![0.0; h * s * d];
@@ -413,14 +741,15 @@ mod tests {
 
     #[test]
     fn full_cache_prefill_then_append() {
-        let mut c = FullCache::new(2, 4, 8);
+        let mut p = pool();
+        let mut c = FullCache::new(&mut p, 2, 4, 8).unwrap();
         let k = ht(2, 8, 4, |h, t, d| (h * 100 + t * 10 + d) as f32);
         let v = ht(2, 8, 4, |h, t, d| -((h * 100 + t * 10 + d) as f32));
-        c.load_prefill(&k, &v, 5);
+        c.load_prefill(&mut p, &k, &v, 5).unwrap();
         assert_eq!(c.len(), 5);
-        c.append(&[1.0; 8], &[2.0; 8]);
+        c.append(&mut p, &[1.0; 8], &[2.0; 8]).unwrap();
         assert_eq!(c.len(), 6);
-        let (kt, _vt) = c.as_tensors(8);
+        let (kt, _vt) = c.as_tensors(&p, 8);
         // head 0, token 3, dim 2 == 32
         assert_eq!(kt.data[(0 * 8 + 3) * 4 + 2], 32.0);
         // appended token at slot 5
@@ -431,13 +760,14 @@ mod tests {
 
     #[test]
     fn full_cache_grows_buckets() {
-        let mut c = FullCache::new(1, 2, 4);
+        let mut p = pool();
+        let mut c = FullCache::new(&mut p, 1, 2, 4).unwrap();
         for i in 0..10 {
-            c.append(&[i as f32, 0.0], &[0.0, i as f32]);
+            c.append(&mut p, &[i as f32, 0.0], &[0.0, i as f32]).unwrap();
         }
         assert_eq!(c.len(), 10);
         assert!(c.capacity() >= 10);
-        let (kt, vt) = c.as_tensors(16);
+        let (kt, vt) = c.as_tensors(&p, 16);
         for i in 0..10 {
             assert_eq!(kt.data[i * 2], i as f32);
             assert_eq!(vt.data[i * 2 + 1], i as f32);
@@ -446,65 +776,71 @@ mod tests {
 
     #[test]
     fn sparse_cache_keeps_sink_and_window_only() {
+        let mut p = pool();
         let sink = 2;
         let local = 3;
-        let mut c = SparseCache::new(1, 1, sink, local, 8);
+        let mut c = SparseCache::new(&mut p, 1, 1, sink, local, 8).unwrap();
         let k = ht(1, 16, 1, |_, t, _| t as f32);
         let v = ht(1, 16, 1, |_, t, _| t as f32 + 0.5);
-        c.load_prefill(&k, &v, 10);
+        c.load_prefill(&mut p, &k, &v, 10);
         // sink = tokens 0,1; window = tokens 7,8,9 (ring-ordered: token
         // t lands on slot sink + (t - sink) % local)
         assert_eq!(c.len(), 5);
         assert_eq!(c.total_seen(), 10);
-        let (kt, _, valid) = c.as_tensors();
+        let (kt, _, valid) = c.as_tensors(&p);
         assert_eq!(valid, 5);
         assert_eq!(&kt.data[..5], &[0.0, 1.0, 8.0, 9.0, 7.0]);
     }
 
     #[test]
     fn sparse_cache_window_eviction() {
-        let mut c = SparseCache::new(1, 1, 1, 2, 4);
+        let mut p = pool();
+        let mut c = SparseCache::new(&mut p, 1, 1, 1, 2, 4).unwrap();
         for i in 0..6 {
-            c.append(&[i as f32], &[i as f32]);
+            c.append(&mut p, &[i as f32], &[i as f32]);
         }
         // sink token 0; window = last two tokens {4, 5} in ring order
         // (5th window append overwrote slot 1 in place)
         assert_eq!(c.len(), 3);
         assert_eq!(c.total_seen(), 6);
-        let (kt, _, valid) = c.as_tensors();
+        let (kt, _, valid) = c.as_tensors(&p);
         assert_eq!(valid, 3);
         assert_eq!(&kt.data[..3], &[0.0, 5.0, 4.0]);
     }
 
     #[test]
     fn sparse_cache_bounded_memory() {
-        let mut c = SparseCache::new(4, 32, 16, 128, 192);
+        let mut p = KvPool::new(128, 4096);
+        let mut c = SparseCache::new(&mut p, 4, 32, 16, 128, 192).unwrap();
         let bytes0 = c.bytes();
+        let pages0 = p.pages_allocated();
         for _ in 0..1000 {
-            c.append(&vec![0.0; 128], &vec![0.0; 128]);
+            c.append(&mut p, &vec![0.0; 128], &vec![0.0; 128]);
         }
         assert_eq!(c.bytes(), bytes0, "sparse cache must be O(1) memory");
+        assert_eq!(p.pages_allocated(), pages0, "ring must never allocate pages");
         assert!(c.len() <= 16 + 128);
     }
 
     #[test]
     fn views_alias_owned_tensors_bitwise() {
-        let mut c = FullCache::new(2, 4, 8);
+        let mut p = pool();
+        let mut c = FullCache::new(&mut p, 2, 4, 8).unwrap();
         for i in 0..5 {
-            c.append(&vec![i as f32; 8], &vec![-(i as f32); 8]);
+            c.append(&mut p, &vec![i as f32; 8], &vec![-(i as f32); 8]).unwrap();
         }
-        let (kt, vt) = c.as_tensors(8);
-        let (kv, vv) = c.view();
+        let (kt, vt) = c.as_tensors(&p, 8);
+        let (kv, vv) = c.view(&p);
         assert_eq!(kv.shape, kt.shape.as_slice());
         assert_eq!(kv.data, kt.data.as_slice());
         assert_eq!(vv.data, vt.data.as_slice());
 
-        let mut s = SparseCache::new(2, 4, 1, 2, 4);
+        let mut s = SparseCache::new(&mut p, 2, 4, 1, 2, 4).unwrap();
         for i in 0..7 {
-            s.append(&vec![i as f32; 8], &vec![i as f32; 8]);
+            s.append(&mut p, &vec![i as f32; 8], &vec![i as f32; 8]);
         }
-        let (kt, vt, valid) = s.as_tensors();
-        let (kv, vv, valid2) = s.view();
+        let (kt, vt, valid) = s.as_tensors(&p);
+        let (kv, vv, valid2) = s.view(&p);
         assert_eq!(valid, valid2);
         assert_eq!(kv.shape, kt.shape.as_slice());
         assert_eq!(kv.data, kt.data.as_slice());
@@ -516,26 +852,32 @@ mod tests {
         // prefill(valid) must leave the ring in the exact state that
         // `valid` individual appends would — including the write-cursor
         // phase, so subsequent appends overwrite the same slots
+        let mut p = pool();
         for valid in [1usize, 3, 4, 5, 7, 9, 12] {
             let (sink, local, buf) = (2usize, 3usize, 8usize);
             let data: Vec<f32> = (0..16).map(|t| t as f32).collect();
             let kt = HostTensor::new(vec![1, 16, 1], data);
-            let mut by_prefill = SparseCache::new(1, 1, sink, local, buf);
-            by_prefill.load_prefill(&kt, &kt.clone(), valid);
-            let mut by_append = SparseCache::new(1, 1, sink, local, buf);
+            let mut by_prefill = SparseCache::new(&mut p, 1, 1, sink, local, buf).unwrap();
+            by_prefill.load_prefill(&mut p, &kt, &kt.clone(), valid);
+            let mut by_append = SparseCache::new(&mut p, 1, 1, sink, local, buf).unwrap();
             for t in 0..valid {
-                by_append.append(&[t as f32], &[t as f32]);
+                by_append.append(&mut p, &[t as f32], &[t as f32]);
             }
             // continue appending past the wrap point on both
             for extra in 0..4 {
                 let x = (100 + extra) as f32;
-                by_prefill.append(&[x], &[x]);
-                by_append.append(&[x], &[x]);
+                by_prefill.append(&mut p, &[x], &[x]);
+                by_append.append(&mut p, &[x], &[x]);
             }
-            let (a, _, va) = by_append.view();
-            let (p, _, vp) = by_prefill.view();
+            let (va, vp) = (by_append.len(), by_prefill.len());
             assert_eq!(va, vp, "valid mismatch at prefill len {valid}");
-            assert_eq!(a.data, p.data, "ring state mismatch at prefill len {valid}");
+            {
+                let (a, _, _) = by_append.view(&p);
+                let (pp, _, _) = by_prefill.view(&p);
+                assert_eq!(a.data, pp.data, "ring state mismatch at prefill len {valid}");
+            }
+            by_prefill.free(&mut p);
+            by_append.free(&mut p);
         }
     }
 
@@ -545,6 +887,7 @@ mod tests {
     /// write-cursor phase across wraps.
     #[test]
     fn chunked_priming_matches_monolithic_load_prefill() {
+        let mut p = pool();
         let (h, d) = (2usize, 4usize);
         let s = 16usize;
         let k = ht(h, s, d, |hh, t, dd| (hh * 1000 + t * 10 + dd) as f32);
@@ -564,54 +907,146 @@ mod tests {
                     HostTensor::new(vec![h, n, d], out)
                 };
 
-                let mut full_mono = FullCache::new(h, d, s);
-                full_mono.load_prefill(&k, &v, valid);
-                let mut full_chunked = FullCache::new(h, d, s);
-                let mut sparse_mono = SparseCache::new(h, d, 2, 3, 8);
-                sparse_mono.load_prefill(&k, &v, valid);
-                let mut sparse_chunked = SparseCache::new(h, d, 2, 3, 8);
+                let mut full_mono = FullCache::new(&mut p, h, d, s).unwrap();
+                full_mono.load_prefill(&mut p, &k, &v, valid).unwrap();
+                let mut full_chunked = FullCache::new(&mut p, h, d, s).unwrap();
+                let mut sparse_mono = SparseCache::new(&mut p, h, d, 2, 3, 8).unwrap();
+                sparse_mono.load_prefill(&mut p, &k, &v, valid);
+                let mut sparse_chunked = SparseCache::new(&mut p, h, d, 2, 3, 8).unwrap();
 
                 let mut base = 0;
                 while base < valid {
                     let n = chunk.min(valid - base);
                     let (kc, vc) = (slice(&k, base, n), slice(&v, base, n));
-                    full_chunked.append_prefill_chunk(&kc, &vc, n);
-                    sparse_chunked.append_prefill_chunk(&kc, &vc, n);
+                    full_chunked.append_prefill_chunk(&mut p, &kc, &vc, n).unwrap();
+                    sparse_chunked.append_prefill_chunk(&mut p, &kc, &vc, n);
                     base += n;
                 }
 
                 assert_eq!(full_chunked.len(), full_mono.len());
-                let (km, vm) = full_mono.view();
-                let (kc2, vc2) = full_chunked.view();
-                assert_eq!(km.data, kc2.data, "full k diverged (valid {valid} chunk {chunk})");
-                assert_eq!(vm.data, vc2.data, "full v diverged (valid {valid} chunk {chunk})");
+                {
+                    let (km, vm) = full_mono.view(&p);
+                    let (kc2, vc2) = full_chunked.view(&p);
+                    assert_eq!(km.data, kc2.data, "full k diverged (valid {valid} chunk {chunk})");
+                    assert_eq!(vm.data, vc2.data, "full v diverged (valid {valid} chunk {chunk})");
+                }
 
                 // ring phase must match too: keep appending past the wrap
                 for extra in 0..4 {
                     let x = vec![(200 + extra) as f32; h * d];
-                    sparse_mono.append(&x, &x);
-                    sparse_chunked.append(&x, &x);
+                    sparse_mono.append(&mut p, &x, &x);
+                    sparse_chunked.append(&mut p, &x, &x);
                 }
-                let (km2, vm2, len_m) = sparse_mono.view();
-                let (kc3, vc3, len_c) = sparse_chunked.view();
-                assert_eq!(len_m, len_c);
-                assert_eq!(km2.data, kc3.data, "ring k diverged (valid {valid} chunk {chunk})");
-                assert_eq!(vm2.data, vc3.data, "ring v diverged (valid {valid} chunk {chunk})");
+                {
+                    let (km2, _, len_m) = sparse_mono.view(&p);
+                    let (kc3, _, len_c) = sparse_chunked.view(&p);
+                    assert_eq!(len_m, len_c);
+                    assert_eq!(km2.data, kc3.data, "ring k diverged (valid {valid} chunk {chunk})");
+                }
+                full_mono.free(&mut p);
+                full_chunked.free(&mut p);
+                sparse_mono.free(&mut p);
+                sparse_chunked.free(&mut p);
             }
         }
+        assert_eq!(p.pages_allocated(), 0, "every cache freed its pages");
     }
 
     #[test]
     fn sparse_prefill_shorter_than_sink() {
-        let mut c = SparseCache::new(1, 1, 4, 4, 16);
+        let mut p = pool();
+        let mut c = SparseCache::new(&mut p, 1, 1, 4, 4, 16).unwrap();
         let k = ht(1, 8, 1, |_, t, _| t as f32);
-        c.load_prefill(&k, &k.clone(), 3);
+        c.load_prefill(&mut p, &k, &k.clone(), 3);
         assert_eq!(c.len(), 3);
         // appends continue filling the sink region first
-        c.append(&[99.0], &[99.0]);
+        c.append(&mut p, &[99.0], &[99.0]);
         assert_eq!(c.len(), 4);
-        let (kt, _, valid) = c.as_tensors();
+        let (kt, _, valid) = c.as_tensors(&p);
         assert_eq!(valid, 4);
         assert_eq!(&kt.data[..4], &[0.0, 1.0, 2.0, 99.0]);
+    }
+
+    // --- pool-specific behaviour -------------------------------------
+
+    #[test]
+    fn pool_alloc_free_coalesce_and_reuse() {
+        let mut p = KvPool::new(4, 16);
+        let a = p.alloc(16).unwrap(); // 4 pages
+        let b = p.alloc(8).unwrap(); // 2 pages
+        let c = p.alloc(4).unwrap(); // 1 page
+        assert_eq!(p.pages_allocated(), 7);
+        assert_eq!(p.pages_peak(), 7);
+        // free the middle run, then the first: they must coalesce into
+        // one 6-page run that a later 6-page allocation can reuse
+        p.free(b);
+        p.free(a);
+        assert_eq!(p.pages_allocated(), 1);
+        let d = p.alloc(24).unwrap(); // 6 pages — fits only if coalesced
+        assert_eq!(d.start, 0);
+        assert_eq!(p.pages_allocated(), 7);
+        assert_eq!(p.pages_peak(), 7, "peak is a high-water mark");
+        p.free(c);
+        p.free(d);
+        assert_eq!(p.pages_allocated(), 0);
+        assert_eq!(p.pages_free(), 16);
+    }
+
+    #[test]
+    fn pool_reused_pages_are_zeroed() {
+        let mut p = KvPool::new(4, 8);
+        let a = p.alloc(8).unwrap();
+        {
+            let (kb, vb) = p.kv_mut(a);
+            kb.fill(7.0);
+            vb.fill(-7.0);
+        }
+        p.free(a);
+        let b = p.alloc(8).unwrap();
+        assert!(p.k_of(b).iter().all(|&x| x == 0.0), "reused pages must be zeroed");
+        assert!(p.v_of(b).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pool_exhaustion_is_typed_and_recoverable() {
+        let mut p = KvPool::new(4, 4);
+        let a = p.alloc(12).unwrap(); // 3 of 4 pages
+        let err = p.alloc(8).unwrap_err(); // needs 2, only 1 left
+        assert!(err.to_string().contains("kv pool exhausted"), "{err}");
+        // the failed allocation must not corrupt accounting
+        assert_eq!(p.pages_allocated(), 3);
+        p.free(a);
+        assert!(p.alloc(16).is_ok(), "full budget available after free");
+    }
+
+    #[test]
+    fn full_cache_growth_failure_preserves_contents() {
+        // pool sized so the cache fits but its doubling does not
+        let mut p = KvPool::new(2, 3);
+        let mut c = FullCache::new(&mut p, 1, 1, 4).unwrap(); // 2 pages
+        for i in 0..4 {
+            c.append(&mut p, &[i as f32], &[10.0 + i as f32]).unwrap();
+        }
+        let err = c.append(&mut p, &[99.0], &[99.0]).unwrap_err();
+        assert!(err.to_string().contains("kv pool exhausted"), "{err}");
+        // cache survives bit-identical: same len, capacity and contents
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.capacity(), 4);
+        let (kt, vt) = c.as_tensors(&p, 4);
+        assert_eq!(&kt.data[..4], &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(&vt.data[..4], &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(p.pages_allocated(), 2, "no pages leaked by the failed growth");
+    }
+
+    #[test]
+    fn fa_and_sa_share_one_budget() {
+        // 6 pages of 4 floats: a (1,1)-head SA ring of buf 8 takes 2
+        // pages, leaving 4 — a full cache of capacity 17 (5 pages) must
+        // be refused while the ring holds its pages and admitted after
+        let mut p = KvPool::new(4, 6);
+        let ring = SparseCache::new(&mut p, 1, 1, 2, 3, 8).unwrap();
+        assert!(FullCache::new(&mut p, 1, 1, 17).is_err());
+        ring.free(&mut p);
+        assert!(FullCache::new(&mut p, 1, 1, 17).is_ok());
     }
 }

@@ -111,11 +111,41 @@ pub struct ServingMetrics {
     /// KV-cache bytes staged as borrowed views — the copies the
     /// zero-copy interchange avoided
     pub kv_bytes_borrowed: u64,
+    /// Requests rejected `Overloaded` at admission because their worst
+    /// case could never fit the token/page budgets (also counted in
+    /// `requests_rejected`).
+    pub requests_overloaded: u64,
+    /// KV pool occupancy gauges (DESIGN.md §11), snapshotted from the
+    /// latest decode-round reply: pages currently allocated / still
+    /// free in the shared FA+SA page pool.
+    pub pages_allocated: u64,
+    pub pages_free: u64,
+    /// High-water mark of `pages_allocated` over the engine's lifetime.
+    pub pages_peak: u64,
     /// Omega_MSR sum + count per policy label
     omsr: HashMap<String, (f64, u64)>,
 }
 
 impl ServingMetrics {
+    /// Fold one decode-round reply's engine-absolute KV-transfer totals
+    /// into the gauges. The engine reports CUMULATIVE counters, so the
+    /// published totals must be monotonic non-decreasing across rounds —
+    /// `max` pins that semantic even if a reply arrives stale or a
+    /// restarted engine briefly reports from zero (plain assignment was
+    /// last-writer-wins and silently under-reported in those cases).
+    pub fn note_kv_transfer_totals(&mut self, moved: u64, borrowed: u64) {
+        self.kv_bytes_moved = self.kv_bytes_moved.max(moved);
+        self.kv_bytes_borrowed = self.kv_bytes_borrowed.max(borrowed);
+    }
+
+    /// Fold one decode-round reply's pool gauges: occupancy snapshots
+    /// overwrite (they are point-in-time), the peak only ratchets up.
+    pub fn note_pool_pages(&mut self, allocated: u64, free: u64, peak: u64) {
+        self.pages_allocated = allocated;
+        self.pages_free = free;
+        self.pages_peak = self.pages_peak.max(peak);
+    }
+
     pub fn record_omsr(&mut self, label: &str, omsr: f64) {
         let e = self.omsr.entry(label.to_string()).or_insert((0.0, 0));
         e.0 += omsr;
@@ -140,7 +170,8 @@ impl ServingMetrics {
              stream_p50={}tok ttft_p50={:.1}ms ttft_p95={:.1}ms \
              decode_p50={:.2}ms decode_tput={:.1}tok/s rounds={} batch_p50={}req \
              prefill_chunks={} decode_stall={:.1}ms \
-             fa_slots={} sa_slots={} kv_moved={}B kv_borrowed={}B",
+             fa_slots={} sa_slots={} kv_moved={}B kv_borrowed={}B \
+             pages={}/{} pages_peak={} overloaded={}",
             self.requests_completed,
             self.requests_rejected,
             self.requests_cancelled,
@@ -160,6 +191,10 @@ impl ServingMetrics {
             self.sa_group_slots,
             self.kv_bytes_moved,
             self.kv_bytes_borrowed,
+            self.pages_allocated,
+            self.pages_allocated + self.pages_free,
+            self.pages_peak,
+            self.requests_overloaded,
         )
     }
 }
@@ -229,6 +264,37 @@ mod tests {
         // TTFT is a histogram: both percentiles come from samples
         assert_eq!(m.ttft.count(), 2);
         assert!(s.contains("ttft_p95="), "{s}");
+    }
+
+    #[test]
+    fn kv_transfer_totals_are_monotonic_non_decreasing() {
+        let mut m = ServingMetrics::default();
+        m.note_kv_transfer_totals(100, 2000);
+        assert_eq!((m.kv_bytes_moved, m.kv_bytes_borrowed), (100, 2000));
+        m.note_kv_transfer_totals(250, 4000);
+        assert_eq!((m.kv_bytes_moved, m.kv_bytes_borrowed), (250, 4000));
+        // a stale or reset reply must never drag the published totals
+        // backwards (the old plain assignment did exactly that)
+        m.note_kv_transfer_totals(0, 0);
+        assert_eq!((m.kv_bytes_moved, m.kv_bytes_borrowed), (250, 4000));
+        m.note_kv_transfer_totals(300, 3999);
+        assert_eq!((m.kv_bytes_moved, m.kv_bytes_borrowed), (300, 4000));
+    }
+
+    #[test]
+    fn pool_gauges_snapshot_and_peak_ratchets() {
+        let mut m = ServingMetrics::default();
+        m.note_pool_pages(10, 90, 10);
+        m.note_pool_pages(4, 96, 12);
+        // occupancy is a snapshot; the peak only ratchets up
+        assert_eq!((m.pages_allocated, m.pages_free, m.pages_peak), (4, 96, 12));
+        m.note_pool_pages(6, 94, 11);
+        assert_eq!(m.pages_peak, 12);
+        let s = m.summary();
+        assert!(s.contains("pages=6/100"), "{s}");
+        assert!(s.contains("pages_peak=12"), "{s}");
+        m.requests_overloaded = 3;
+        assert!(m.summary().contains("overloaded=3"), "{}", m.summary());
     }
 
     #[test]

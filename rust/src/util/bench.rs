@@ -244,6 +244,41 @@ fn validate_decode_v2(path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// The `flux bench --smoke` CI gate for the serving file's v2 schema
+/// (DESIGN.md §11): throughput must be positive and the pool-pressure
+/// scenario must be present with a nonzero page high-water mark, at
+/// least one typed overloaded rejection, and verified bit-identical
+/// token streams across page sizes — CI fails if the paged pool
+/// silently stops being measured.
+fn validate_serving(path: &Path) -> Result<()> {
+    let j = Json::parse(&std::fs::read_to_string(path)?)
+        .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+    anyhow::ensure!(
+        j.get("schema").and_then(Json::as_str) == Some("flux-bench-serving/v2"),
+        "{path:?}: schema must be flux-bench-serving/v2"
+    );
+    anyhow::ensure!(
+        j.get("tokens_per_s").and_then(Json::as_f64).map(|v| v > 0.0).unwrap_or(false),
+        "{path:?}: missing/zero tokens_per_s"
+    );
+    let p = j
+        .get("pool_pressure")
+        .ok_or_else(|| anyhow::anyhow!("{path:?}: missing pool_pressure scenario"))?;
+    anyhow::ensure!(
+        p.get("pages_peak").and_then(Json::as_f64).map(|v| v > 0.0).unwrap_or(false),
+        "{path:?}: pool_pressure reports no page occupancy (pages_peak)"
+    );
+    anyhow::ensure!(
+        p.get("overloaded_rejections").and_then(Json::as_f64).map(|v| v >= 1.0).unwrap_or(false),
+        "{path:?}: pool_pressure recorded no typed overloaded rejection"
+    );
+    anyhow::ensure!(
+        p.get("bit_identical").and_then(Json::as_bool) == Some(true),
+        "{path:?}: page-size sweep token streams not verified bit-identical"
+    );
+    Ok(())
+}
+
 /// One configuration's numbers from the prefill-interference scenario.
 struct InterferenceRun {
     long_prompt_tokens: usize,
@@ -779,20 +814,27 @@ pub fn run_serving_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<(P
 /// Concurrent-streaming serving scenario over the real TCP wire: N
 /// connections × M in-flight v2 streams each, with one stream per
 /// connection cancelled mid-flight. Emits `BENCH_serving.json`
-/// recording aggregate streamed-token throughput and cancelled-request
-/// cleanup: after the cancellations a probe request must admit and
-/// complete (proving the scheduler reclaimed the engine slots), and the
-/// coordinator's cancelled counter must match what the clients aborted.
+/// (schema `flux-bench-serving/v2`) recording aggregate streamed-token
+/// throughput and cancelled-request cleanup: after the cancellations a
+/// probe request must admit and complete (proving the scheduler
+/// reclaimed the engine slots), and the coordinator's cancelled counter
+/// must match what the clients aborted. The v2 schema adds the
+/// pool-pressure scenario (DESIGN.md §11): a deliberately tiny page
+/// pool serves one modest request while a long-prompt arrival is
+/// rejected with a typed `overloaded` error, and the same prompts are
+/// verified to decode bit-identically under 16- and 64-token pages.
 pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<PathBuf> {
     use crate::config::{MetaConfig, ServingConfig};
-    use crate::coordinator::{Coordinator, Request};
-    use crate::engine::EngineHandle;
+    use crate::coordinator::{Coordinator, Request, RequestError};
+    use crate::engine::{Engine, EngineHandle};
+    use crate::router::{AttnMode, DecodeMode, Policy};
     use crate::server::{serve_listener, StreamClient, WireRequest};
     use crate::util::rng::Rng;
     use crate::workload::{generate, Task};
 
     let (n_conns, n_streams, max_new) = if opts.smoke { (2usize, 2usize, 4usize) } else { (4, 4, 16) };
-    let n_layers = MetaConfig::load(artifacts)?.model.n_layers;
+    let meta = MetaConfig::load(artifacts)?;
+    let n_layers = meta.model.n_layers;
     let engine = EngineHandle::spawn(artifacts.to_path_buf())?;
     let coord = Coordinator::start(engine, ServingConfig::default());
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
@@ -872,9 +914,90 @@ pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<
     let cleanup_ok = probe.is_ok();
     anyhow::ensure!(cleanup_ok, "post-cancel probe request failed: {}", probe.err().unwrap());
 
+    // ---- page-size bit-identity sweep (DESIGN.md §11): the pool's
+    // page geometry is invisible to the math — the same mixed FA/SA
+    // batch, including a mid-sweep retirement that frees and recycles
+    // pages, must decode bit-identical token streams under 16- and
+    // 64-token pages ----
+    let sweep_page_tokens: [usize; 2] = [16, 64];
+    let sweep_rounds = if opts.smoke { 6 } else { 40 };
+    let sweep_budget = (*meta.prefill_buckets.last().unwrap() + meta.sa_buf) * n_layers * 8;
+    let mixed_policy = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Sparse };
+    let mut sweep_streams: Vec<Vec<Vec<u32>>> = Vec::new();
+    for &pt in &sweep_page_tokens {
+        let mut e = Engine::load_with_pool(artifacts, Some((pt, sweep_budget)))?;
+        let mut rng = Rng::seed_from_u64(23);
+        let mut ids = Vec::new();
+        let mut order: Vec<usize> = (0..3).collect();
+        let mut streams: Vec<Vec<u32>> = vec![Vec::new(); 3];
+        for slot in 0..3 {
+            let s = generate(Task::PRe, &mut rng, seq);
+            let (id, r) = e.prefill(&s.prompt, &mixed_policy, "balanced")?;
+            ids.push(id);
+            streams[slot].push(r.first_token);
+        }
+        for round in 0..sweep_rounds {
+            if round == sweep_rounds / 2 {
+                // mid-sweep retirement: the middle request's pages go
+                // back to the pool while its batchmates keep decoding
+                let pos = 1.min(ids.len() - 1);
+                e.release(ids.remove(pos));
+                order.remove(pos);
+            }
+            for (slot, tok) in order.iter().zip(e.decode_batch(&ids)) {
+                streams[*slot].push(tok?);
+            }
+        }
+        for id in ids {
+            e.release(id);
+        }
+        sweep_streams.push(streams);
+    }
+    let bit_identical = sweep_streams.windows(2).all(|w| w[0] == w[1]);
+    anyhow::ensure!(
+        bit_identical,
+        "token streams diverged across page sizes {sweep_page_tokens:?}"
+    );
+
+    // ---- pool-pressure scenario (DESIGN.md §11): size the pool to
+    // exactly one modest request's worst case; a long-prompt arrival
+    // can then never fit and must be rejected with a typed
+    // `overloaded` error at enqueue, while the modest request streams
+    // to completion and its page occupancy lands in the metrics ----
+    let pressure_page_tokens = 32usize;
+    let pressure_budget = (meta.prefill_buckets[0] + meta.sa_buf) * n_layers;
+    let pressure_engine =
+        EngineHandle::spawn_with_pool(artifacts.to_path_buf(), pressure_page_tokens, pressure_budget)?;
+    let total_pages = pressure_engine.pool_profile()?.total_pages;
+    let pressure_coord = Coordinator::start(pressure_engine, ServingConfig::default());
+    let modest = {
+        let mut rng = Rng::seed_from_u64(24);
+        generate(Task::PRe, &mut rng, seq.min(meta.prefill_buckets[0] - 8))
+    };
+    let resp = pressure_coord
+        .submit(Request { prompt: modest.prompt, max_new: 4, ignore_eos: true, ..Default::default() })
+        .map_err(|e| anyhow::anyhow!("modest request must fit the pressure pool: {e}"))?;
+    anyhow::ensure!(resp.tokens.len() == 4, "pressure-pool request truncated");
+    let long_prompt: Vec<u32> = (0..4 * meta.prefill_buckets[0]).map(|i| (i as u32) % 250 + 1).collect();
+    let overload =
+        pressure_coord.open(Request { prompt: long_prompt, max_new: 4, ..Default::default() });
+    match overload {
+        Err(RequestError::Overloaded(_)) => {}
+        Err(e) => anyhow::bail!("expected a typed Overloaded rejection, got {e:?}"),
+        Ok(_) => anyhow::bail!("long prompt over the page budget must be rejected at enqueue"),
+    }
+    let mp = pressure_coord.metrics.lock().unwrap().clone();
+    anyhow::ensure!(mp.pages_peak > 0, "pressure scenario recorded no page occupancy");
+    anyhow::ensure!(mp.requests_overloaded >= 1, "typed overload was not counted");
+    println!(
+        "pool pressure: {} of {} pages peak under {}-token pages, {} overloaded rejection(s); \
+         page-size sweep {:?} bit-identical",
+        mp.pages_peak, total_pages, pressure_page_tokens, mp.requests_overloaded, sweep_page_tokens
+    );
+
     let m = coord.metrics.lock().unwrap().clone();
     let mut j = Json::obj();
-    j.set("schema", Json::from("flux-bench-serving/v1"));
+    j.set("schema", Json::from("flux-bench-serving/v2"));
     j.set("measured", Json::from(true));
     j.set("connections", Json::from(n_conns));
     j.set("streams_per_connection", Json::from(n_streams));
@@ -886,8 +1009,18 @@ pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<
     j.set("cancelled_cleanup_ok", Json::from(cleanup_ok));
     j.set("stream_tokens_p50", Json::from(m.stream_tokens.p50_us() as usize));
     j.set("metrics_summary", Json::from(m.summary()));
+    let mut jp = Json::obj();
+    jp.set("page_tokens", Json::from(pressure_page_tokens));
+    jp.set("total_pages", Json::from(total_pages));
+    jp.set("pages_peak", Json::from(mp.pages_peak as usize));
+    jp.set("overloaded_rejections", Json::from(mp.requests_overloaded as usize));
+    jp.set("page_size_sweep", Json::from(sweep_page_tokens.to_vec()));
+    jp.set("bit_identical", Json::from(bit_identical));
+    jp.set("pressure_metrics_summary", Json::from(mp.summary()));
+    j.set("pool_pressure", jp);
     let path = opts.out_dir.join("BENCH_serving.json");
     std::fs::write(&path, j.to_string())?;
+    validate_serving(&path)?;
 
     anyhow::ensure!(
         tokens_streamed > 0 && cancelled >= 1 && m.requests_cancelled >= cancelled,
@@ -979,6 +1112,57 @@ mod tests {
         )
         .unwrap();
         validate_prefill_v2(&good).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serving_v2_validation_gates_on_pool_pressure_fields() {
+        let dir = std::env::temp_dir().join(format!("flux-bench-sv2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let old = dir.join("v1.json");
+        std::fs::write(&old, r#"{"schema": "flux-bench-serving/v1", "tokens_per_s": 10.0}"#)
+            .unwrap();
+        assert!(validate_serving(&old).is_err(), "v1 schema must fail the v2 gate");
+        let no_pool = dir.join("no_pool.json");
+        std::fs::write(&no_pool, r#"{"schema": "flux-bench-serving/v2", "tokens_per_s": 10.0}"#)
+            .unwrap();
+        assert!(validate_serving(&no_pool).is_err(), "missing pool_pressure must fail");
+        let idle = dir.join("idle.json");
+        std::fs::write(
+            &idle,
+            r#"{"schema": "flux-bench-serving/v2", "tokens_per_s": 10.0,
+                "pool_pressure": {"pages_peak": 0, "overloaded_rejections": 1,
+                                  "bit_identical": true}}"#,
+        )
+        .unwrap();
+        assert!(validate_serving(&idle).is_err(), "zero pages_peak must fail");
+        let unrejected = dir.join("unrejected.json");
+        std::fs::write(
+            &unrejected,
+            r#"{"schema": "flux-bench-serving/v2", "tokens_per_s": 10.0,
+                "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 0,
+                                  "bit_identical": true}}"#,
+        )
+        .unwrap();
+        assert!(validate_serving(&unrejected).is_err(), "no overloaded rejection must fail");
+        let diverged = dir.join("diverged.json");
+        std::fs::write(
+            &diverged,
+            r#"{"schema": "flux-bench-serving/v2", "tokens_per_s": 10.0,
+                "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
+                                  "bit_identical": false}}"#,
+        )
+        .unwrap();
+        assert!(validate_serving(&diverged).is_err(), "diverged page-size sweep must fail");
+        let good = dir.join("good.json");
+        std::fs::write(
+            &good,
+            r#"{"schema": "flux-bench-serving/v2", "tokens_per_s": 10.0,
+                "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
+                                  "bit_identical": true}}"#,
+        )
+        .unwrap();
+        validate_serving(&good).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -169,6 +169,64 @@ fn engine_handle_decode_batch_roundtrip() {
     engine.release(id);
 }
 
+/// Lifecycle satellite (PR 6): one round holding a repeated id AND an
+/// unknown id fails exactly those slots — the first occurrence of the
+/// repeated id decodes normally, the duplicate and the unknown id get
+/// typed per-slot errors, and survivors' streams stay bit-identical to
+/// a clean engine. Pinned on both the batched path and the serial
+/// fallback (which previously stepped a duplicate twice, silently
+/// advancing the request two tokens in one round).
+#[test]
+fn duplicate_and_unknown_ids_fail_per_slot_without_corrupting_survivors() {
+    let dir = artifacts();
+    let mut engine = Engine::load(&dir).unwrap();
+    let mut reference = Engine::load(&dir).unwrap();
+    let mut rng = Rng::seed_from_u64(55);
+    let policy = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Sparse };
+
+    let mut ids = vec![];
+    let mut want: Vec<Vec<u32>> = vec![];
+    for task in [Task::PRe, Task::Gov] {
+        let s = generate(task, &mut rng, 110);
+        let (id, r) = engine.prefill(&s.prompt, &policy, "balanced").unwrap();
+        ids.push(id);
+        let (rid, rr) = reference.prefill(&s.prompt, &policy, "balanced").unwrap();
+        assert_eq!(r.first_token, rr.first_token);
+        let mut toks = vec![];
+        for _ in 0..4 {
+            toks.push(reference.decode_step(rid).unwrap());
+        }
+        reference.release(rid);
+        want.push(toks);
+    }
+
+    // poisoned round: [A, B, A again, unknown]
+    let round = vec![ids[0], ids[1], ids[0], 9999];
+    let mut got: Vec<Vec<u32>> = vec![vec![], vec![]];
+    for batched in [true, false] {
+        engine.set_batch_decode(batched);
+        let report = engine.decode_batch_report(&round);
+        assert_eq!(report.batched, batched);
+        assert_eq!(report.tokens.len(), 4);
+        got[0].push(*report.tokens[0].as_ref().expect("first occurrence must decode"));
+        got[1].push(*report.tokens[1].as_ref().expect("batchmate must survive"));
+        let dup = report.tokens[2].as_ref().unwrap_err().to_string();
+        assert!(dup.contains("duplicate request"), "{dup}");
+        let unk = report.tokens[3].as_ref().unwrap_err().to_string();
+        assert!(unk.contains("unknown request"), "{unk}");
+    }
+    engine.set_batch_decode(true);
+
+    // survivors keep decoding on the reference trajectory
+    for (si, &id) in ids.iter().enumerate() {
+        for _ in 0..2 {
+            got[si].push(engine.decode_step(id).unwrap());
+        }
+        engine.release(id);
+    }
+    assert_eq!(got, want, "poisoned rounds must not corrupt survivor state");
+}
+
 fn start_coordinator(cfg: ServingConfig) -> std::sync::Arc<Coordinator> {
     let engine = EngineHandle::spawn(artifacts()).unwrap();
     Coordinator::start(engine, cfg)

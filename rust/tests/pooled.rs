@@ -1,0 +1,306 @@
+//! Paged KV pool acceptance tests (DESIGN.md §11): token streams must
+//! be bit-identical across page sizes and decode paths (the pool's
+//! page geometry is invisible to the math), retirement must return
+//! every page to the pool, token-budget admission must park or reject
+//! with typed errors instead of panicking or stalling, and the
+//! request-lifecycle fixes of this PR (no `Prefilled` after a cancel
+//! or an elapsed deadline, `max_new == 0` rejected at enqueue) are
+//! pinned here.
+//!
+//! Artifacts resolution mirrors `integration.rs`: hermetic synthetic
+//! artifacts — every test executes on every `cargo test`.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use flux_attention::config::ServingConfig;
+use flux_attention::coordinator::{Coordinator, Request, RequestError, SessionEvent};
+use flux_attention::engine::{Engine, EngineHandle};
+use flux_attention::router::{AttnMode, DecodeMode, Policy};
+use flux_attention::runtime::synthetic;
+use flux_attention::util::prop::check;
+use flux_attention::util::rng::Rng;
+use flux_attention::workload::{generate, Task};
+use flux_attention::{prop_assert, prop_assert_eq};
+
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+fn artifacts() -> PathBuf {
+    synthetic::ensure_default().expect("artifact generation must not fail")
+}
+
+fn start_coordinator(cfg: ServingConfig) -> std::sync::Arc<Coordinator> {
+    let engine = EngineHandle::spawn(artifacts()).unwrap();
+    Coordinator::start(engine, cfg)
+}
+
+/// The tentpole safety net: for random mixed-mode batches (per-request
+/// per-layer FA/SA routing, prompt lengths straddling the 128 prefill
+/// bucket), batched decode on 16- and 64-token page pools must produce
+/// token streams bit-identical to independent serial `decode_step`
+/// loops on the default pool. 40 rounds push short prompts across the
+/// 128 -> 256 FA growth edge (a copy + free + realloc inside the pool)
+/// while sparse rings wrap, and a mid-round retirement frees one
+/// request's pages for batchmates to recycle — the edges where paging
+/// would corrupt state first. Every page must be back in the pool once
+/// the batch drains.
+#[test]
+fn paged_pool_streams_bit_identical_across_page_sizes_and_paths() {
+    let dir = artifacts();
+    let mut reference = Engine::load(&dir).unwrap();
+    let budget_tokens = 1 << 20; // generous: the pool arena grows lazily
+    let mut engines: Vec<Engine> = [16usize, 64]
+        .iter()
+        .map(|&pt| Engine::load_with_pool(&dir, Some((pt, budget_tokens))).unwrap())
+        .collect();
+    let n_layers = reference.cfg().model.n_layers;
+    let tasks = [Task::PRe, Task::Gov, Task::Qasper, Task::Trec];
+    check("paged_pool_bit_identity", 3, |rng| {
+        let b = 3usize;
+        let steps = 40;
+        let retire_at = steps / 2;
+        let mut prompts = Vec::with_capacity(b);
+        let mut policies = Vec::with_capacity(b);
+        for _ in 0..b {
+            let len = rng.range(100, 200);
+            let task = tasks[rng.gen_range(tasks.len())];
+            prompts.push(generate(task, rng, len).prompt);
+            let modes: Vec<AttnMode> = (0..n_layers)
+                .map(|_| if rng.f64() < 0.5 { AttnMode::Fa } else { AttnMode::Ssa })
+                .collect();
+            policies.push(Policy::Static { modes, decode: DecodeMode::Sparse });
+        }
+
+        // reference: independent serial decode loops, default pool
+        let mut want: Vec<Vec<u32>> = Vec::with_capacity(b);
+        for (prompt, policy) in prompts.iter().zip(&policies) {
+            let (id, report) =
+                reference.prefill(prompt, policy, "balanced").map_err(|e| e.to_string())?;
+            let mut toks = vec![report.first_token];
+            for _ in 0..steps {
+                toks.push(reference.decode_step(id).map_err(|e| e.to_string())?);
+            }
+            reference.release(id);
+            want.push(toks);
+        }
+
+        for e in engines.iter_mut() {
+            let mut ids = Vec::with_capacity(b);
+            let mut order: Vec<usize> = (0..b).collect();
+            let mut got: Vec<Vec<u32>> = vec![Vec::new(); b];
+            for (slot, (prompt, policy)) in prompts.iter().zip(&policies).enumerate() {
+                let (id, report) =
+                    e.prefill(prompt, policy, "balanced").map_err(|e| e.to_string())?;
+                ids.push(id);
+                got[slot].push(report.first_token);
+            }
+            for round in 0..steps {
+                if round == retire_at {
+                    // mid-round retirement: slot 1's pages return to the
+                    // pool; survivors' growth may recycle them
+                    e.release(ids.remove(1));
+                    order.remove(1);
+                }
+                for (slot, tok) in order.iter().zip(e.decode_batch(&ids)) {
+                    got[*slot].push(tok.map_err(|e| e.to_string())?);
+                }
+            }
+            for id in ids {
+                e.release(id);
+            }
+            prop_assert!(
+                e.pool().pages_allocated() == 0,
+                "retirement must return every page to the pool ({} still allocated)",
+                e.pool().pages_allocated()
+            );
+            prop_assert_eq!(got[1].len(), 1 + retire_at);
+            for (slot, stream) in got.iter().enumerate() {
+                prop_assert!(
+                    want[slot][..stream.len()] == stream[..],
+                    "slot {slot} diverged on the {}-float page pool",
+                    e.pool().page_floats()
+                );
+            }
+            prop_assert!(e.pool().pages_peak() > 0, "the batch must have touched the pool");
+        }
+        Ok(())
+    });
+}
+
+/// Typed admission under budget pressure: a request whose worst case
+/// can never fit `max_batch_total_tokens`, `max_batch_prefill_tokens`,
+/// or the page pool is rejected `Overloaded` at enqueue — not a panic,
+/// not a silent queue stall — and the rejection is counted.
+#[test]
+fn worst_case_over_budget_is_rejected_with_typed_overloaded() {
+    let mut rng = Rng::seed_from_u64(61);
+    let s = generate(Task::PRe, &mut rng, 96);
+
+    // total-token budget: prompt + max_new can never fit 64 tokens
+    let coord = start_coordinator(ServingConfig {
+        max_batch_total_tokens: 64,
+        ..Default::default()
+    });
+    let err = coord
+        .open(Request { prompt: s.prompt.clone(), max_new: 32, ..Default::default() })
+        .err()
+        .expect("over-budget request must be rejected at enqueue");
+    assert!(matches!(err, RequestError::Overloaded(_)), "{err:?}");
+    assert_eq!(err.kind(), "overloaded");
+
+    // prefill-token budget: the prompt alone exceeds the round budget
+    let coord2 = start_coordinator(ServingConfig {
+        max_batch_prefill_tokens: 32,
+        ..Default::default()
+    });
+    let err2 = coord2
+        .open(Request { prompt: s.prompt.clone(), ..Default::default() })
+        .err()
+        .expect("prompt over the prefill budget must be rejected");
+    assert!(matches!(err2, RequestError::Overloaded(_)), "{err2:?}");
+
+    // page-pool budget: a 16-page pool can never hold the request's
+    // worst case (per-layer prefill bucket + SA ring)
+    let engine = EngineHandle::spawn_with_pool(artifacts(), 32, 512).unwrap();
+    let coord3 = Coordinator::start(engine, ServingConfig::default());
+    let err3 = coord3
+        .open(Request { prompt: s.prompt, ..Default::default() })
+        .err()
+        .expect("request over the page budget must be rejected");
+    assert!(matches!(err3, RequestError::Overloaded(_)), "{err3:?}");
+    assert!(err3.to_string().contains("page"), "{err3}");
+    let m = coord3.metrics.lock().unwrap();
+    assert_eq!(m.requests_overloaded, 1);
+    assert_eq!(m.requests_rejected, 1);
+    assert!(m.summary().contains("overloaded=1"), "{}", m.summary());
+}
+
+/// A request that fits the budgets alone but not alongside the running
+/// batch parks at the head of the queue and admits once budget drains —
+/// the pair never shares a decode round, both complete, and pool
+/// occupancy is visible in the metrics summary.
+#[test]
+fn over_budget_request_parks_then_completes() {
+    // worst case per request: 96 prompt + 8 decode = 104 tokens; the
+    // 160-token budget fits exactly one at a time
+    let coord = start_coordinator(ServingConfig {
+        max_batch_total_tokens: 160,
+        ..Default::default()
+    });
+    let prompt: Vec<u32> = (0..96).map(|i| (i as u32) % 250 + 1).collect();
+    let req = || Request {
+        prompt: prompt.clone(),
+        max_new: 8,
+        ignore_eos: true,
+        ..Default::default()
+    };
+    let ha = coord.open(req()).unwrap();
+    let hb = coord.open(req()).unwrap();
+    let ra = ha.wait().unwrap();
+    let rb = hb.wait().unwrap();
+    assert_eq!(ra.tokens.len(), 8);
+    assert_eq!(rb.tokens.len(), 8, "the parked request must complete after budget drains");
+    // greedy determinism: identical prompts decode identical streams
+    assert_eq!(ra.tokens, rb.tokens);
+
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.requests_completed, 2);
+    assert_eq!(m.requests_rejected, 0, "parking must not reject");
+    assert_eq!(
+        m.decode_batch_size.percentile_us(100.0),
+        1,
+        "the pair must never share a round under the token budget"
+    );
+    assert!(m.pages_peak > 0, "decode rounds must report pool occupancy");
+    let s = m.summary();
+    assert!(s.contains("pages="), "{s}");
+    assert!(s.contains("pages_peak="), "{s}");
+}
+
+/// Lifecycle satellite: `max_new == 0` is rejected with a typed
+/// `Invalid` error at enqueue. The old path silently clamped it to one
+/// generated token — a zero-budget request must never reach the engine.
+#[test]
+fn zero_max_new_is_rejected_invalid_at_enqueue() {
+    let coord = start_coordinator(ServingConfig::default());
+    let prompt: Vec<u32> = (1..64).collect();
+    let err = coord
+        .open(Request { prompt, max_new: 0, ..Default::default() })
+        .err()
+        .expect("max_new == 0 must be rejected at enqueue");
+    assert!(matches!(err, RequestError::Invalid(_)), "{err:?}");
+    assert!(err.to_string().contains("max_new"), "{err}");
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.requests_rejected, 1);
+    assert_eq!(m.requests_completed, 0);
+    assert_eq!(m.tokens_generated, 0, "a zero-budget request must never reach the engine");
+}
+
+/// Lifecycle satellite: a session cancelled while its prefill is in
+/// flight terminates with `Cancelled` and emits NO `Prefilled` (and no
+/// tokens) — `finish_prefill` re-checks the cancel signal before
+/// emitting. The old path announced `Prefilled` and only evicted the
+/// request at the next decode sweep.
+#[test]
+fn cancel_during_prefill_emits_no_prefilled() {
+    let coord = start_coordinator(ServingConfig::default());
+    // the largest prefill bucket: the cancel always lands before the
+    // prefill completes
+    let prompt: Vec<u32> = (0..2048).map(|i| (i as u32) % 250 + 1).collect();
+    let h = coord
+        .open(Request { prompt, max_new: 64, ignore_eos: true, ..Default::default() })
+        .unwrap();
+    h.cancel();
+    let mut saw_output = false;
+    let mut terminal = None;
+    while let Some(ev) = h.recv_timeout(TIMEOUT) {
+        match ev {
+            SessionEvent::Prefilled { .. } | SessionEvent::Token { .. } => saw_output = true,
+            SessionEvent::Error { error } => {
+                terminal = Some(error);
+                break;
+            }
+            SessionEvent::Done { .. } => panic!("cancelled request must not complete"),
+            SessionEvent::Queued => {}
+        }
+    }
+    assert_eq!(terminal, Some(RequestError::Cancelled));
+    assert!(!saw_output, "no Prefilled/Token may be emitted after cancellation");
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.requests_cancelled, 1);
+}
+
+/// Deadline variant of the same fix: a deadline that elapses during the
+/// prefill terminates the session with `DeadlineExceeded` before any
+/// `Prefilled` is announced.
+#[test]
+fn deadline_elapsing_during_prefill_emits_no_prefilled() {
+    let coord = start_coordinator(ServingConfig::default());
+    let prompt: Vec<u32> = (0..2048).map(|i| (i as u32) % 250 + 1).collect();
+    let h = coord
+        .open(Request {
+            prompt,
+            max_new: 64,
+            ignore_eos: true,
+            deadline_ms: Some(1),
+            ..Default::default()
+        })
+        .unwrap();
+    let mut saw_output = false;
+    let mut terminal = None;
+    while let Some(ev) = h.recv_timeout(TIMEOUT) {
+        match ev {
+            SessionEvent::Prefilled { .. } | SessionEvent::Token { .. } => saw_output = true,
+            SessionEvent::Error { error } => {
+                terminal = Some(error);
+                break;
+            }
+            SessionEvent::Done { .. } => panic!("expired request must not complete"),
+            SessionEvent::Queued => {}
+        }
+    }
+    assert_eq!(terminal, Some(RequestError::DeadlineExceeded));
+    assert!(!saw_output, "no Prefilled/Token may be emitted after the deadline elapsed");
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.requests_expired, 1);
+}

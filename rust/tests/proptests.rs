@@ -13,7 +13,7 @@ use flux_attention::baselines::{entropy_ranked_modes, jacobi_eigenvalues};
 use flux_attention::config::MetaConfig;
 use flux_attention::engine::Engine;
 use flux_attention::gpu_sim::{decode_latency_s, GpuSimConfig, SimPolicy};
-use flux_attention::kvcache::{FullCache, SparseCache};
+use flux_attention::kvcache::{FullCache, KvPool, SparseCache};
 use flux_attention::router::{pool_descriptor, AttnMode, DecodeMode, Policy};
 use flux_attention::runtime::{synthetic, Arg, Backend, HostTensor, RefBackend};
 use flux_attention::tokenizer::Tokenizer;
@@ -27,15 +27,16 @@ fn full_cache_accounting() {
     check("full_cache_accounting", 64, |rng| {
         let n = rng.range(1, 300);
         let cap = rng.range(1, 64);
-        let mut c = FullCache::new(2, 4, cap);
+        let mut pool = KvPool::new(64, 1 << 20);
+        let mut c = FullCache::new(&mut pool, 2, 4, cap).map_err(|e| e.to_string())?;
         for i in 0..n {
             let k = vec![i as f32; 8];
-            c.append(&k, &k);
+            c.append(&mut pool, &k, &k).map_err(|e| e.to_string())?;
         }
         prop_assert_eq!(c.len(), n);
         prop_assert!(c.capacity() >= n);
         let bucket = c.len().next_power_of_two();
-        let (kt, _) = c.as_tensors(bucket);
+        let (kt, _) = c.as_tensors(&pool, bucket);
         for i in 0..n {
             prop_assert_eq!(kt.data[i * 4], i as f32);
         }
@@ -50,13 +51,14 @@ fn sparse_cache_window_invariant() {
         let sink = rng.range(1, 8);
         let local = rng.range(1, 16);
         let buf = sink + local + 1;
-        let mut c = SparseCache::new(1, 1, sink, local, buf);
+        let mut pool = KvPool::new(8, 1 << 20);
+        let mut c = SparseCache::new(&mut pool, 1, 1, sink, local, buf).map_err(|e| e.to_string())?;
         for i in 0..n {
-            c.append(&[i as f32], &[i as f32]);
+            c.append(&mut pool, &[i as f32], &[i as f32]);
         }
         prop_assert!(c.len() <= sink + local);
         prop_assert_eq!(c.total_seen(), n);
-        let (kt, _, valid) = c.as_tensors();
+        let (kt, _, valid) = c.as_tensors(&pool);
         let n_sink = n.min(sink);
         for t in 0..n_sink {
             prop_assert_eq!(kt.data[t], t as f32);
@@ -80,16 +82,19 @@ fn sparse_prefill_equals_appends() {
         let valid = rng.range(1, 64);
         let (sink, local, buf) = (4usize, 8usize, 16usize);
         let mk = |t: usize| vec![t as f32];
-        let mut by_append = SparseCache::new(1, 1, sink, local, buf);
+        let mut pool = KvPool::new(8, 1 << 20);
+        let mut by_append =
+            SparseCache::new(&mut pool, 1, 1, sink, local, buf).map_err(|e| e.to_string())?;
         for t in 0..valid {
-            by_append.append(&mk(t), &mk(t));
+            by_append.append(&mut pool, &mk(t), &mk(t));
         }
         let data: Vec<f32> = (0..64).map(|t| t as f32).collect();
         let kt = HostTensor::new(vec![1, 64, 1], data);
-        let mut by_prefill = SparseCache::new(1, 1, sink, local, buf);
-        by_prefill.load_prefill(&kt, &kt.clone(), valid);
-        let (a, _, va) = by_append.as_tensors();
-        let (p, _, vp) = by_prefill.as_tensors();
+        let mut by_prefill =
+            SparseCache::new(&mut pool, 1, 1, sink, local, buf).map_err(|e| e.to_string())?;
+        by_prefill.load_prefill(&mut pool, &kt, &kt.clone(), valid);
+        let (a, _, va) = by_append.as_tensors(&pool);
+        let (p, _, vp) = by_prefill.as_tensors(&pool);
         prop_assert_eq!(va, vp);
         prop_assert_eq!(&a.data[..va], &p.data[..vp]);
         Ok(())
@@ -324,10 +329,11 @@ fn zero_copy_views_match_clone_path_logits() {
         // random length across the 128-capacity growth edge and the
         // 128/256 bucket boundary
         let len = rng.range(100, 280);
-        let mut cache = FullCache::new(h, dd, 128);
+        let mut pool = KvPool::new(32 * h * dd, 1 << 16);
+        let mut cache = FullCache::new(&mut pool, h, dd, 128).map_err(|e| e.to_string())?;
         for t in 0..len {
             let kv: Vec<f32> = (0..h * dd).map(|i| ((t * 31 + i) % 17) as f32 * 0.1 - 0.8).collect();
-            cache.append(&kv, &kv);
+            cache.append(&mut pool, &kv, &kv).map_err(|e| e.to_string())?;
         }
         let bucket = cfg
             .decode_attend_bucket(cache.len(), cache.capacity())
@@ -352,7 +358,7 @@ fn zero_copy_views_match_clone_path_logits() {
         let n2 = HostTensor::new(vec![d], vec![1.0; d]);
         let valid_arr = [cache.len() as i32];
 
-        let (kt, vt) = cache.as_tensors(bucket);
+        let (kt, vt) = cache.as_tensors(&pool, bucket);
         let owned = b
             .run(
                 &exe,
@@ -363,7 +369,7 @@ fn zero_copy_views_match_clone_path_logits() {
                 ],
             )
             .map_err(|e| e.to_string())?;
-        let (kv, vv) = cache.view();
+        let (kv, vv) = cache.view(&pool);
         let viewed = b
             .run(
                 &exe,

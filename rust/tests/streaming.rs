@@ -443,10 +443,19 @@ fn streaming_bench_smoke_writes_valid_json() {
     };
     let p = run_streaming_bench(&dir, &opts).unwrap();
     let j = Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+    assert_eq!(j.get("schema").and_then(Json::as_str), Some("flux-bench-serving/v2"));
     assert_eq!(j.get("measured").and_then(Json::as_bool), Some(true));
     assert_eq!(j.get("cancelled_cleanup_ok").and_then(Json::as_bool), Some(true));
     assert!(j.get("tokens_per_s").and_then(Json::as_f64).unwrap() > 0.0);
     assert!(j.get("cancelled_requests").and_then(Json::as_f64).unwrap() >= 1.0);
     assert!(j.get("metrics_summary").and_then(Json::as_str).unwrap().contains("cancelled="));
+    // the pool-pressure scenario (DESIGN.md §11) must be measured: page
+    // occupancy visible, a typed overloaded rejection recorded, and the
+    // page-size sweep verified bit-identical
+    let pp = j.get("pool_pressure").expect("pool_pressure scenario missing");
+    assert!(pp.get("pages_peak").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(pp.get("overloaded_rejections").and_then(Json::as_f64).unwrap() >= 1.0);
+    assert_eq!(pp.get("bit_identical").and_then(Json::as_bool), Some(true));
+    assert!(j.get("metrics_summary").and_then(Json::as_str).unwrap().contains("pages="));
     let _ = std::fs::remove_dir_all(&out);
 }
