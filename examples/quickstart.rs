@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     eprintln!("loading engine from {artifacts:?} ...");
     let engine = EngineHandle::spawn(artifacts)?;
     let tok = Tokenizer::new();
-    let coord = Coordinator::start(engine, ServingConfig::default());
+    let coord = Coordinator::start(engine, ServingConfig::default())?;
 
     // a mixed batch: retrieval-intensive + context-holistic tasks
     let tasks = [

@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
     let engine = EngineHandle::spawn(artifacts)?;
     let addr = "127.0.0.1:7071";
 
-    let coord = Coordinator::start(engine, ServingConfig::default());
+    let coord = Coordinator::start(engine, ServingConfig::default())?;
     let server_coord = coord.clone();
     std::thread::spawn(move || {
         let _ = serve(server_coord, addr, n_layers);

@@ -1,28 +1,63 @@
 //! In-tree substitute for the `anyhow` crate (offline build environment:
 //! no registry access — DESIGN.md §4). Implements the subset of the real
 //! API this workspace uses: [`Error`], [`Result`], the [`Context`]
-//! extension trait for `Result` and `Option`, and the `anyhow!`, `bail!`
-//! and `ensure!` macros. Swapping in the registry crate requires only a
-//! Cargo.toml change — call sites are source-compatible.
+//! extension trait for `Result` and `Option`, [`Error::new`] +
+//! [`Error::downcast_ref`]/[`Error::downcast`] for typed recovery
+//! (DESIGN.md §12 routes `EngineFailed` into supervision this way), and
+//! the `anyhow!`, `bail!` and `ensure!` macros. Swapping in the
+//! registry crate requires only a Cargo.toml change — call sites are
+//! source-compatible.
 
+use std::any::Any;
 use std::fmt;
 
-/// A string-backed error value. Like the real `anyhow::Error` it
+/// A message-backed error value that, when built from a concrete error
+/// type ([`Error::new`], the blanket `From`, or `?`), also carries that
+/// value for [`Error::downcast_ref`]. Like the real `anyhow::Error` it
 /// deliberately does NOT implement `std::error::Error`, which is what
 /// allows the blanket `From<E: std::error::Error>` conversion below
 /// (and therefore `?` on `io::Error`, `RecvError`, `ParseIntError`, …).
 pub struct Error {
     msg: String,
+    /// The concrete error this was built from, kept for downcasting.
+    /// `None` for message-only errors (`anyhow!`, `Error::msg`).
+    source: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Construct from anything displayable.
     pub fn msg<M: fmt::Display>(m: M) -> Self {
-        Error { msg: m.to_string() }
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Construct from a concrete error value, keeping it for
+    /// [`Error::downcast_ref`] — the typed-recovery seam.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+
+    /// A reference to the concrete error this was built from, if it is
+    /// a `T`. Context wrapping prefixes the message but keeps the
+    /// downcast target (matching the real anyhow's chain walk).
+    pub fn downcast_ref<T: Any>(&self) -> Option<&T> {
+        self.source.as_ref()?.downcast_ref::<T>()
+    }
+
+    /// Consume into the concrete error this was built from, or give
+    /// `self` back unchanged if it is not a `T`.
+    pub fn downcast<T: Any>(self) -> std::result::Result<T, Self> {
+        let Error { msg, source } = self;
+        match source {
+            Some(b) => match b.downcast::<T>() {
+                Ok(t) => Ok(*t),
+                Err(b) => Err(Error { msg, source: Some(b) }),
+            },
+            None => Err(Error { msg, source: None }),
+        }
     }
 
     fn wrap<C: fmt::Display>(self, ctx: C) -> Self {
-        Error { msg: format!("{ctx}: {}", self.msg) }
+        Error { msg: format!("{ctx}: {}", self.msg), source: self.source }
     }
 }
 
@@ -40,7 +75,7 @@ impl fmt::Debug for Error {
 
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Self {
-        Error { msg: e.to_string() }
+        Error::new(e)
     }
 }
 
@@ -161,5 +196,34 @@ mod tests {
     fn error_is_send_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<Error>();
+    }
+
+    /// Typed recovery: `?`/`Error::new` keep the concrete error for
+    /// `downcast_ref`, context wrapping preserves it, and message-only
+    /// errors (`anyhow!`) downcast to nothing.
+    #[test]
+    fn downcast_recovers_the_concrete_error() {
+        #[derive(Debug, PartialEq)]
+        struct Marker(u32);
+        impl fmt::Display for Marker {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "marker {}", self.0)
+            }
+        }
+        impl std::error::Error for Marker {}
+
+        let e = Error::new(Marker(7));
+        assert_eq!(e.downcast_ref::<Marker>(), Some(&Marker(7)));
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+
+        let wrapped = Err::<(), _>(Marker(7)).context("during prefill").unwrap_err();
+        assert_eq!(wrapped.to_string(), "during prefill: marker 7");
+        assert_eq!(wrapped.downcast_ref::<Marker>(), Some(&Marker(7)));
+        assert_eq!(wrapped.downcast::<Marker>().unwrap(), Marker(7));
+
+        let plain = anyhow!("no source");
+        assert!(plain.downcast_ref::<Marker>().is_none());
+        let back = plain.downcast::<Marker>().unwrap_err();
+        assert_eq!(back.to_string(), "no source");
     }
 }

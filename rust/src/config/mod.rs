@@ -225,6 +225,19 @@ pub struct ServingConfig {
     /// single request whose worst case exceeds the whole budget is
     /// rejected `Overloaded` at enqueue.
     pub max_batch_total_tokens: usize,
+    /// round watchdog (DESIGN.md §12): wall-clock deadline on one
+    /// engine round-trip (`decode_batch` / `prefill_chunk`). A round
+    /// exceeding it classifies the engine as stalled and routes into
+    /// the supervision/restart path instead of hanging the scheduler
+    /// forever. `None` = no watchdog (trusted local backends).
+    pub engine_round_timeout_ms: Option<u64>,
+    /// supervision (DESIGN.md §12): how many times the scheduler may
+    /// restart a dead/stalled engine before giving up and failing all
+    /// in-flight and queued requests with `RequestError::EngineFailed`.
+    pub engine_restart_max: usize,
+    /// base backoff before the first restart attempt, doubled per
+    /// subsequent attempt.
+    pub engine_restart_backoff_ms: u64,
 }
 
 impl Default for ServingConfig {
@@ -239,6 +252,9 @@ impl Default for ServingConfig {
             default_deadline_ms: None,
             max_batch_prefill_tokens: 4096,
             max_batch_total_tokens: 131072,
+            engine_round_timeout_ms: None,
+            engine_restart_max: 2,
+            engine_restart_backoff_ms: 50,
         }
     }
 }

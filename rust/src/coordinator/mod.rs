@@ -45,7 +45,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::config::ServingConfig;
-use crate::engine::{ChunkOutcome, EngineHandle, PoolProfile, PrefillReport};
+use crate::engine::{ChunkOutcome, EngineFailed, EngineHandle, PoolProfile, PrefillReport};
 use crate::metrics::ServingMetrics;
 use crate::router::Policy;
 use crate::tokenizer::EOS;
@@ -121,8 +121,18 @@ pub enum RequestError {
     /// Cancelled via [`SessionHandle::cancel`], cancel-on-drop, or a
     /// wire `cancel` frame.
     Cancelled,
-    /// Engine-side failure (prefill or decode step).
+    /// Per-request engine-side failure (prefill or decode step) — the
+    /// engine itself survived.
     Engine(String),
+    /// The engine thread itself died (kernel panic) or stalled past the
+    /// round watchdog: every in-flight request of that engine lifetime
+    /// is retired with this, and supervision restarts the engine within
+    /// its retry budget (DESIGN.md §12). Retryable — a restarted engine
+    /// serves fresh submissions of the same request.
+    EngineFailed { cause: String, generation: u64 },
+    /// The coordinator is draining for shutdown ([`Coordinator::drain`]):
+    /// in-flight streams finish, new admissions are rejected.
+    Draining,
     /// Scheduler shut down.
     Shutdown,
 }
@@ -138,8 +148,27 @@ impl RequestError {
             RequestError::DeadlineExceeded => "deadline_exceeded",
             RequestError::Cancelled => "cancelled",
             RequestError::Engine(_) => "engine",
+            RequestError::EngineFailed { .. } => "engine_failed",
+            RequestError::Draining => "draining",
             RequestError::Shutdown => "shutdown",
         }
+    }
+
+    /// Whether an identical resubmission has a real chance of
+    /// succeeding: transient load / lifecycle states (`queue_full`,
+    /// `overloaded`, `draining` — another replica — and `engine_failed`
+    /// during restart), not request defects or terminal outcomes. The
+    /// wire protocol carries this as the error frame's `retryable` flag
+    /// and [`crate::server::StreamClient::retry_with_backoff`] keys on
+    /// it.
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            RequestError::QueueFull
+                | RequestError::Overloaded(_)
+                | RequestError::Draining
+                | RequestError::EngineFailed { .. }
+        )
     }
 }
 
@@ -159,6 +188,12 @@ impl std::fmt::Display for RequestError {
             }
             RequestError::Cancelled => write!(f, "request cancelled"),
             RequestError::Engine(m) => write!(f, "engine failure: {m}"),
+            RequestError::EngineFailed { cause, generation } => {
+                write!(f, "engine failed (generation {generation}): {cause}")
+            }
+            RequestError::Draining => {
+                write!(f, "draining: coordinator shutting down, not admitting new requests")
+            }
             RequestError::Shutdown => write!(f, "scheduler shut down"),
         }
     }
@@ -374,17 +409,47 @@ pub struct Coordinator {
     /// engine load) — drives worst-case page admission.
     pool_profile: Option<PoolProfile>,
     default_deadline_ms: Option<u64>,
+    /// Drain / shutdown handshake shared with the scheduler thread.
+    shared: Arc<SchedulerShared>,
     pub metrics: Arc<Mutex<ServingMetrics>>,
 }
 
+/// Coordinator ↔ scheduler shutdown handshake (DESIGN.md §12): the
+/// drain flag flips admission off; the scheduler signals `done` when it
+/// has retired everything and exited (whatever the reason).
+struct SchedulerShared {
+    draining: AtomicBool,
+    done: Mutex<bool>,
+    done_cv: std::sync::Condvar,
+}
+
+/// Marks the scheduler as done on every exit path — including a
+/// scheduler panic — so [`Coordinator::drain`] never waits on a thread
+/// that is already gone.
+struct SchedulerDoneGuard(Arc<SchedulerShared>);
+
+impl Drop for SchedulerDoneGuard {
+    fn drop(&mut self) {
+        *self.0.done.lock().unwrap() = true;
+        self.0.done_cv.notify_all();
+    }
+}
+
 impl Coordinator {
-    /// Start the scheduler thread.
-    pub fn start(engine: EngineHandle, cfg: ServingConfig) -> Arc<Self> {
+    /// Start the scheduler thread. Fails — typed, no panic — when the
+    /// engine is unreachable or the thread can't spawn (the serving
+    /// binary turns this into a clean CLI error).
+    pub fn start(engine: EngineHandle, cfg: ServingConfig) -> Result<Arc<Self>> {
         let (queue_tx, queue_rx) = std::sync::mpsc::sync_channel(cfg.queue_capacity);
         let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
         let queue_depth = Arc::new(AtomicUsize::new(0));
-        let max_prompt_len = engine.max_prompt_len().unwrap_or(usize::MAX);
+        let max_prompt_len = engine.max_prompt_len()?;
         let pool_profile = engine.pool_profile().ok();
+        let shared = Arc::new(SchedulerShared {
+            draining: AtomicBool::new(false),
+            done: Mutex::new(false),
+            done_cv: std::sync::Condvar::new(),
+        });
         let coord = Arc::new(Self {
             queue_tx,
             queue_depth: queue_depth.clone(),
@@ -394,13 +459,42 @@ impl Coordinator {
             max_batch_total_tokens: cfg.max_batch_total_tokens,
             pool_profile: pool_profile.clone(),
             default_deadline_ms: cfg.default_deadline_ms,
+            shared: shared.clone(),
             metrics: metrics.clone(),
         });
-        std::thread::Builder::new()
-            .name("flux-scheduler".into())
-            .spawn(move || scheduler_loop(engine, cfg, pool_profile, queue_rx, queue_depth, metrics))
-            .expect("spawn scheduler");
-        coord
+        std::thread::Builder::new().name("flux-scheduler".into()).spawn(move || {
+            let _done = SchedulerDoneGuard(shared.clone());
+            scheduler_loop(engine, cfg, pool_profile, queue_rx, queue_depth, metrics, shared)
+        })?;
+        Ok(coord)
+    }
+
+    /// Graceful drain (DESIGN.md §12): stop admitting (new submissions
+    /// get typed [`RequestError::Draining`]), let every in-flight
+    /// stream finish, then shut the engine down. Blocks until the
+    /// scheduler has fully wound down or `deadline` elapses; returns
+    /// whether the drain completed in time. Idempotent.
+    pub fn drain(&self, deadline: Duration) -> bool {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        let t0 = Instant::now();
+        let mut done = self.shared.done.lock().unwrap();
+        while !*done {
+            let Some(remaining) = deadline.checked_sub(t0.elapsed()) else {
+                return false;
+            };
+            let (guard, timeout) =
+                self.shared.done_cv.wait_timeout(done, remaining).unwrap();
+            done = guard;
+            if timeout.timed_out() && !*done {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Whether [`Coordinator::drain`] has been initiated.
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
     }
 
     /// Open an event-driven session. Admission errors (full queue,
@@ -437,6 +531,10 @@ impl Coordinator {
         sink: Sink,
         cancel: CancelToken,
     ) -> std::result::Result<(), RequestError> {
+        if self.shared.draining.load(Ordering::SeqCst) {
+            self.metrics.lock().unwrap().requests_rejected += 1;
+            return Err(RequestError::Draining);
+        }
         if req.prompt.is_empty() {
             self.metrics.lock().unwrap().requests_rejected += 1;
             return Err(RequestError::Invalid("empty prompt".into()));
@@ -534,6 +632,7 @@ fn scheduler_loop(
     queue_rx: Receiver<Pending>,
     queue_depth: Arc<AtomicUsize>,
     metrics: Arc<Mutex<ServingMetrics>>,
+    shared: Arc<SchedulerShared>,
 ) {
     let mut active: VecDeque<Active> = VecDeque::new();
     let mut prefilling: VecDeque<Prefilling> = VecDeque::new();
@@ -544,75 +643,120 @@ fn scheduler_loop(
     let mut parked: Option<Pending> = None;
     let mut queue_closed = false;
     let chunk_budget = cfg.prefill_chunk_budget.max(1);
+    let round_timeout = cfg.engine_round_timeout_ms.map(Duration::from_millis);
     loop {
-        // --- admission (DESIGN.md §11): drain arrivals into the
-        // prefill pipeline while their worst case fits the token/page
-        // budgets. Opening a job validates and allocates staging but
-        // runs no compute, so admission never stalls decode; an idle
-        // scheduler blocks here for the next request ---
-        while active.len() + prefilling.len() < cfg.max_active_requests {
-            let p = if let Some(p) = parked.take() {
-                p
-            } else if queue_closed {
-                break;
-            } else if active.is_empty() && prefilling.is_empty() && parked.is_none() {
-                match queue_rx.recv() {
-                    Ok(p) => {
-                        queue_depth.fetch_sub(1, Ordering::Relaxed);
-                        p
+        // --- drain (DESIGN.md §12): reject parked + queued arrivals
+        // with a typed error, keep running rounds until the in-flight
+        // set finishes, then shut the engine down and exit ---
+        if shared.draining.load(Ordering::SeqCst) {
+            if let Some(p) = parked.take() {
+                reject_pending(&metrics, p, RequestError::Draining);
+            }
+            while let Ok(p) = queue_rx.try_recv() {
+                queue_depth.fetch_sub(1, Ordering::Relaxed);
+                reject_pending(&metrics, p, RequestError::Draining);
+            }
+            if active.is_empty() && prefilling.is_empty() {
+                engine.shutdown();
+                return;
+            }
+        } else {
+            // --- admission (DESIGN.md §11): drain arrivals into the
+            // prefill pipeline while their worst case fits the
+            // token/page budgets. Opening a job validates and allocates
+            // staging but runs no compute, so admission never stalls
+            // decode; an idle scheduler waits here for the next request
+            // (with a short timeout so a drain can wake it) ---
+            let mut engine_down: Option<anyhow::Error> = None;
+            while active.len() + prefilling.len() < cfg.max_active_requests {
+                let p = if let Some(p) = parked.take() {
+                    p
+                } else if queue_closed {
+                    break;
+                } else if active.is_empty() && prefilling.is_empty() && parked.is_none() {
+                    match queue_rx.recv_timeout(Duration::from_millis(50)) {
+                        Ok(p) => {
+                            queue_depth.fetch_sub(1, Ordering::Relaxed);
+                            p
+                        }
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                            queue_closed = true;
+                            break;
+                        }
                     }
-                    Err(_) => {
-                        queue_closed = true;
+                } else {
+                    match queue_rx.try_recv() {
+                        Ok(p) => {
+                            queue_depth.fetch_sub(1, Ordering::Relaxed);
+                            p
+                        }
+                        Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                        Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                            queue_closed = true;
+                            break;
+                        }
+                    }
+                };
+                // a dead request (cancelled / expired while queued or
+                // parked) must not wedge the admission head: open_prefill
+                // rejects it with the right terminal event before touching
+                // the engine, so no budget is charged (cancel is sticky and
+                // time is monotonic, so it cannot admit here)
+                if p.cancel.is_cancelled() || p.deadline.is_some_and(|d| Instant::now() >= d) {
+                    match open_prefill(&engine, &cfg, &metrics, p) {
+                        OpenOutcome::Opened(pf) => prefilling.push_back(pf),
+                        OpenOutcome::Rejected => {}
+                        OpenOutcome::EngineDead(e) => {
+                            engine_down = Some(e);
+                            break;
+                        }
+                    }
+                    continue;
+                }
+                let prompt_len = p.req.prompt.len();
+                let worst_total = prompt_len + p.req.max_new;
+                let pages = pool_profile
+                    .as_ref()
+                    .map_or(0, |pp| pp.worst_case_pages(prompt_len, p.req.max_new));
+                let fits = budgets.prefill_tokens + prompt_len <= cfg.max_batch_prefill_tokens
+                    && budgets.total_tokens + worst_total <= cfg.max_batch_total_tokens
+                    && pool_profile
+                        .as_ref()
+                        .map_or(true, |pp| budgets.pages + pages <= pp.total_pages);
+                if !fits {
+                    // enqueue-side feasibility checks guarantee a lone
+                    // request always fits an empty batch, so parking can
+                    // never deadlock: budgets drain back to zero as the
+                    // running batch retires
+                    parked = Some(p);
+                    break;
+                }
+                match open_prefill(&engine, &cfg, &metrics, p) {
+                    OpenOutcome::Opened(mut pf) => {
+                        pf.prompt_len = prompt_len;
+                        pf.budget_total = worst_total;
+                        pf.budget_pages = pages;
+                        budgets.prefill_tokens += prompt_len;
+                        budgets.total_tokens += worst_total;
+                        budgets.pages += pages;
+                        prefilling.push_back(pf);
+                    }
+                    OpenOutcome::Rejected => {}
+                    OpenOutcome::EngineDead(e) => {
+                        engine_down = Some(e);
                         break;
                     }
                 }
-            } else {
-                match queue_rx.try_recv() {
-                    Ok(p) => {
-                        queue_depth.fetch_sub(1, Ordering::Relaxed);
-                        p
-                    }
-                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
-                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                        queue_closed = true;
-                        break;
-                    }
-                }
-            };
-            // a dead request (cancelled / expired while queued or
-            // parked) must not wedge the admission head: open_prefill
-            // rejects it with the right terminal event before touching
-            // the engine, so no budget is charged (cancel is sticky and
-            // time is monotonic, so it cannot admit here)
-            if p.cancel.is_cancelled() || p.deadline.is_some_and(|d| Instant::now() >= d) {
-                if let Some(pf) = open_prefill(&engine, &cfg, &metrics, p) {
-                    prefilling.push_back(pf);
+            }
+            if let Some(err) = engine_down {
+                if !supervise_engine_failure(
+                    &engine, &cfg, &metrics, &mut budgets, &mut active, &mut prefilling, err,
+                ) {
+                    fail_remaining(&metrics, &queue_rx, &queue_depth, parked.take(), &engine);
+                    return;
                 }
                 continue;
-            }
-            let prompt_len = p.req.prompt.len();
-            let worst_total = prompt_len + p.req.max_new;
-            let pages =
-                pool_profile.as_ref().map_or(0, |pp| pp.worst_case_pages(prompt_len, p.req.max_new));
-            let fits = budgets.prefill_tokens + prompt_len <= cfg.max_batch_prefill_tokens
-                && budgets.total_tokens + worst_total <= cfg.max_batch_total_tokens
-                && pool_profile.as_ref().map_or(true, |pp| budgets.pages + pages <= pp.total_pages);
-            if !fits {
-                // enqueue-side feasibility checks guarantee a lone
-                // request always fits an empty batch, so parking can
-                // never deadlock: budgets drain back to zero as the
-                // running batch retires
-                parked = Some(p);
-                break;
-            }
-            if let Some(mut pf) = open_prefill(&engine, &cfg, &metrics, p) {
-                pf.prompt_len = prompt_len;
-                pf.budget_total = worst_total;
-                pf.budget_pages = pages;
-                budgets.prefill_tokens += prompt_len;
-                budgets.total_tokens += worst_total;
-                budgets.pages += pages;
-                prefilling.push_back(pf);
             }
         }
 
@@ -630,12 +774,16 @@ fn scheduler_loop(
         sweep_retired(&engine, &metrics, &mut budgets, &mut active);
         if !active.is_empty() {
             let ids: Vec<u64> = active.iter().map(|a| a.engine_id).collect();
-            match engine.decode_batch(ids) {
+            match engine.decode_batch_deadline(ids, round_timeout) {
                 Err(e) => {
-                    // engine thread gone: fail the whole active set
-                    let msg = e.to_string();
-                    while let Some(a) = active.pop_front() {
-                        retire(&engine, &metrics, &mut budgets, a, Retire::Failed(msg.clone()));
+                    // the engine itself died or stalled mid-round:
+                    // typed retirement of everything in flight, then
+                    // restart within the retry budget (DESIGN.md §12)
+                    if !supervise_engine_failure(
+                        &engine, &cfg, &metrics, &mut budgets, &mut active, &mut prefilling, e,
+                    ) {
+                        fail_remaining(&metrics, &queue_rx, &queue_depth, parked.take(), &engine);
+                        return;
                     }
                 }
                 Ok(reply) => {
@@ -715,7 +863,7 @@ fn scheduler_loop(
             if pf.queue_us.is_none() {
                 pf.queue_us = Some(pf.t_arrival.elapsed().as_micros() as u64);
             }
-            match engine.prefill_chunk(pf.job) {
+            match engine.prefill_chunk_deadline(pf.job, round_timeout) {
                 Ok(ChunkOutcome::More { .. }) => {
                     metrics.lock().unwrap().prefill_chunks += 1;
                     // front, not back: the oldest request finishes first
@@ -727,6 +875,19 @@ fn scheduler_loop(
                     {
                         active.push_back(a);
                     }
+                }
+                Err(e) if e.downcast_ref::<EngineFailed>().is_some() => {
+                    // the engine itself died or stalled, not just this
+                    // job: put the request back with its peers so the
+                    // whole in-flight set retires typed, then supervise
+                    prefilling.push_front(pf);
+                    if !supervise_engine_failure(
+                        &engine, &cfg, &metrics, &mut budgets, &mut active, &mut prefilling, e,
+                    ) {
+                        fail_remaining(&metrics, &queue_rx, &queue_depth, parked.take(), &engine);
+                        return;
+                    }
+                    break;
                 }
                 Err(e) => {
                     // an ADMITTED request dying mid-prefill is an engine
@@ -749,6 +910,105 @@ fn scheduler_loop(
         // finished generations retire before the next admission pass
         // (same sweep as the round start — the policy lives in one place)
         sweep_retired(&engine, &metrics, &mut budgets, &mut active);
+    }
+}
+
+/// Reject a queued/parked request with a typed terminal error without
+/// it ever touching the engine (drain rejection, restart-budget
+/// exhaustion).
+fn reject_pending(metrics: &Arc<Mutex<ServingMetrics>>, p: Pending, err: RequestError) {
+    {
+        let mut m = metrics.lock().unwrap();
+        m.requests_rejected += 1;
+        m.stream_tokens.record_value(0);
+    }
+    p.sink.error(err);
+}
+
+/// The engine died (kernel panic) or stalled (round watchdog): retire
+/// every in-flight request with a typed [`RequestError::EngineFailed`],
+/// then restart the engine within the configured retry budget with
+/// exponential backoff. Arrivals keep queueing meanwhile (the bounded
+/// admission queue is the parking lot) and are admitted after the
+/// restart. Returns `false` when the budget is exhausted — the caller
+/// fails everything left and shuts the scheduler down (DESIGN.md §12).
+fn supervise_engine_failure(
+    engine: &EngineHandle,
+    cfg: &ServingConfig,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+    budgets: &mut Budgets,
+    active: &mut VecDeque<Active>,
+    prefilling: &mut VecDeque<Prefilling>,
+    err: anyhow::Error,
+) -> bool {
+    let (cause, generation, stalled) = match err.downcast_ref::<EngineFailed>() {
+        Some(f) => (f.cause.clone(), f.generation, f.stalled),
+        None => (err.to_string(), engine.generation(), false),
+    };
+    if stalled {
+        metrics.lock().unwrap().watchdog_trips += 1;
+    }
+    eprintln!(
+        "flux-scheduler: engine {} (generation {generation}): {cause}",
+        if stalled { "stalled" } else { "failed" }
+    );
+    let failed = RequestError::EngineFailed { cause, generation };
+    // every request of the dead lifetime retires typed — its engine-side
+    // state is gone (the release/cancel sends inside retire go to the
+    // dead lifetime's channel and are dropped; a merely-stalled engine
+    // processes them when it unwedges, freeing its KV before exiting)
+    while let Some(a) = active.pop_front() {
+        retire(engine, metrics, budgets, a, Retire::EngineDead(failed.clone()));
+    }
+    while let Some(pf) = prefilling.pop_front() {
+        retire_prefilling(engine, metrics, budgets, pf, Retire::EngineDead(failed.clone()));
+    }
+    let mut backoff = Duration::from_millis(cfg.engine_restart_backoff_ms.max(1));
+    for attempt in 1..=cfg.engine_restart_max {
+        std::thread::sleep(backoff);
+        match engine.respawn() {
+            Ok(new_generation) => {
+                metrics.lock().unwrap().engine_restarts += 1;
+                eprintln!(
+                    "flux-scheduler: engine restarted (generation {new_generation}, \
+                     attempt {attempt}/{})",
+                    cfg.engine_restart_max
+                );
+                return true;
+            }
+            Err(e) => {
+                eprintln!(
+                    "flux-scheduler: engine restart attempt {attempt}/{} failed: {e}",
+                    cfg.engine_restart_max
+                );
+                backoff *= 2;
+            }
+        }
+    }
+    false
+}
+
+/// Restart budget exhausted: fail the parked request and everything
+/// still queued with a typed error, then let the scheduler exit (the
+/// queue disconnects; later submissions get `Shutdown`).
+fn fail_remaining(
+    metrics: &Arc<Mutex<ServingMetrics>>,
+    queue_rx: &Receiver<Pending>,
+    queue_depth: &Arc<AtomicUsize>,
+    parked: Option<Pending>,
+    engine: &EngineHandle,
+) {
+    eprintln!("flux-scheduler: engine restart budget exhausted, shutting down");
+    let failed = RequestError::EngineFailed {
+        cause: "engine restart budget exhausted".into(),
+        generation: engine.generation(),
+    };
+    if let Some(p) = parked {
+        reject_pending(metrics, p, failed.clone());
+    }
+    while let Ok(p) = queue_rx.try_recv() {
+        queue_depth.fetch_sub(1, Ordering::Relaxed);
+        reject_pending(metrics, p, failed.clone());
     }
 }
 
@@ -797,7 +1057,7 @@ fn retire_prefilling(
         match &how {
             Retire::Cancelled => m.requests_cancelled += 1,
             Retire::Expired => m.requests_expired += 1,
-            Retire::Failed(_) => m.requests_failed += 1,
+            Retire::Failed(_) | Retire::EngineDead(_) => m.requests_failed += 1,
             Retire::Done => unreachable!("prefilling requests never retire as Done"),
         }
     }
@@ -805,6 +1065,7 @@ fn retire_prefilling(
         Retire::Cancelled => pf.sink.error(RequestError::Cancelled),
         Retire::Expired => pf.sink.error(RequestError::DeadlineExceeded),
         Retire::Failed(msg) => pf.sink.error(RequestError::Engine(msg)),
+        Retire::EngineDead(err) => pf.sink.error(err),
         Retire::Done => unreachable!("prefilling requests never retire as Done"),
     }
 }
@@ -870,6 +1131,16 @@ fn sweep_retired(
     *active = kept;
 }
 
+/// What became of a dequeued request in [`open_prefill`]: admitted into
+/// the prefill pipeline, rejected with its terminal event already
+/// emitted, or stopped by engine death (terminal event emitted; the
+/// caller routes the error into supervision).
+enum OpenOutcome {
+    Opened(Prefilling),
+    Rejected,
+    EngineDead(anyhow::Error),
+}
+
 /// Validate a dequeued request (cancelled / expired while queued) and
 /// open its engine-side prefill job. No prefill compute happens here —
 /// chunks are scheduled by the round loop.
@@ -878,7 +1149,7 @@ fn open_prefill(
     cfg: &ServingConfig,
     metrics: &Arc<Mutex<ServingMetrics>>,
     p: Pending,
-) -> Option<Prefilling> {
+) -> OpenOutcome {
     let Pending { req, sink, cancel, t_arrival, deadline } = p;
     if cancel.is_cancelled() {
         let mut m = metrics.lock().unwrap();
@@ -886,7 +1157,7 @@ fn open_prefill(
         m.stream_tokens.record_value(0);
         drop(m);
         sink.error(RequestError::Cancelled);
-        return None;
+        return OpenOutcome::Rejected;
     }
     if deadline.is_some_and(|d| Instant::now() >= d) {
         let mut m = metrics.lock().unwrap();
@@ -894,11 +1165,11 @@ fn open_prefill(
         m.stream_tokens.record_value(0);
         drop(m);
         sink.error(RequestError::DeadlineExceeded);
-        return None;
+        return OpenOutcome::Rejected;
     }
     let policy_label = req.policy.label();
     match engine.prefill_open(req.prompt, req.policy, req.router, cfg.prefill_chunk_tokens) {
-        Ok(job) => Some(Prefilling {
+        Ok(job) => OpenOutcome::Opened(Prefilling {
             job,
             // budget reservations are stamped by the admission loop
             // (the only caller that charges them)
@@ -919,8 +1190,19 @@ fn open_prefill(
         }),
         Err(e) => {
             metrics.lock().unwrap().requests_rejected += 1;
-            sink.error(RequestError::Engine(e.to_string()));
-            None
+            if let Some(f) = e.downcast_ref::<EngineFailed>() {
+                // engine death during admission routes into supervision
+                // (the caller restarts and resumes admitting); this
+                // request is its first typed casualty
+                sink.error(RequestError::EngineFailed {
+                    cause: f.cause.clone(),
+                    generation: f.generation,
+                });
+                OpenOutcome::EngineDead(e)
+            } else {
+                sink.error(RequestError::Engine(e.to_string()));
+                OpenOutcome::Rejected
+            }
         }
     }
 }
@@ -1016,8 +1298,13 @@ enum Retire {
     Done,
     Cancelled,
     Expired,
-    /// Mid-decode engine failure (the message becomes `Error::Engine`).
+    /// Per-request engine failure (the message becomes `Error::Engine`);
+    /// the engine itself survived and keeps serving its peers.
     Failed(String),
+    /// The engine lifetime died under this request: the prebuilt
+    /// [`RequestError::EngineFailed`] is emitted verbatim so every
+    /// casualty of one failure reports the same cause and generation.
+    EngineDead(RequestError),
 }
 
 /// Release the engine slot (freeing the KV cache) and emit the terminal
@@ -1047,7 +1334,7 @@ fn retire(
             }
             Retire::Cancelled => m.requests_cancelled += 1,
             Retire::Expired => m.requests_expired += 1,
-            Retire::Failed(_) => m.requests_failed += 1,
+            Retire::Failed(_) | Retire::EngineDead(_) => m.requests_failed += 1,
         }
     }
     match how {
@@ -1063,6 +1350,7 @@ fn retire(
         Retire::Cancelled => sink.error(RequestError::Cancelled),
         Retire::Expired => sink.error(RequestError::DeadlineExceeded),
         Retire::Failed(msg) => sink.error(RequestError::Engine(msg)),
+        Retire::EngineDead(err) => sink.error(err),
     }
 }
 
@@ -1093,6 +1381,29 @@ mod tests {
         assert_eq!(RequestError::PromptTooLong { len: 10, max: 4 }.kind(), "prompt_too_long");
         let msg = RequestError::PromptTooLong { len: 10, max: 4 }.to_string();
         assert!(msg.contains("10") && msg.contains("4"), "{msg}");
+        let failed = RequestError::EngineFailed { cause: "kaboom".into(), generation: 3 };
+        assert_eq!(failed.kind(), "engine_failed");
+        let msg = failed.to_string();
+        assert!(msg.contains("kaboom") && msg.contains("3"), "{msg}");
+        assert_eq!(RequestError::Draining.kind(), "draining");
+    }
+
+    /// The retryable taxonomy (DESIGN.md §12): transient load and
+    /// lifecycle states invite a resubmission; request defects and
+    /// terminal outcomes do not. The wire `retryable` flag and
+    /// `StreamClient::retry_with_backoff` both key on this.
+    #[test]
+    fn retryable_classification() {
+        assert!(RequestError::QueueFull.retryable());
+        assert!(RequestError::Overloaded("busy".into()).retryable());
+        assert!(RequestError::Draining.retryable());
+        assert!(RequestError::EngineFailed { cause: "x".into(), generation: 0 }.retryable());
+        assert!(!RequestError::Invalid("bad".into()).retryable());
+        assert!(!RequestError::PromptTooLong { len: 9, max: 8 }.retryable());
+        assert!(!RequestError::DeadlineExceeded.retryable());
+        assert!(!RequestError::Cancelled.retryable());
+        assert!(!RequestError::Engine("kernel".into()).retryable());
+        assert!(!RequestError::Shutdown.retryable());
     }
 
     #[test]

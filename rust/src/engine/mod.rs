@@ -25,6 +25,7 @@
 //! ```
 
 use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -225,6 +226,20 @@ impl Engine {
         artifacts: &std::path::Path,
         pool_geometry: Option<(usize, usize)>,
     ) -> Result<Self> {
+        Self::load_with_faults(artifacts, pool_geometry, None)
+    }
+
+    /// [`Engine::load_with_pool`] with an optional fault-injection plan
+    /// (DESIGN.md §12): the backend is wrapped in a
+    /// [`crate::runtime::chaos::ChaosBackend`] that injects the plan's
+    /// kernel failures, panics and stalls at the scheduled call
+    /// indices. A plan describes one engine lifetime — supervision
+    /// respawns fault-free.
+    pub fn load_with_faults(
+        artifacts: &std::path::Path,
+        pool_geometry: Option<(usize, usize)>,
+        faults: Option<crate::runtime::chaos::FaultPlan>,
+    ) -> Result<Self> {
         let cfg = MetaConfig::load(artifacts)?;
         let manifest = crate::util::json::Json::parse(&std::fs::read_to_string(
             artifacts.join("manifest.json"),
@@ -232,6 +247,9 @@ impl Engine {
         .map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
         let hint = manifest.get("backend").and_then(crate::util::json::Json::as_str);
         let mut rt = open_backend(&cfg, hint)?;
+        if let Some(plan) = faults {
+            rt = crate::runtime::chaos::ChaosBackend::wrap(rt, plan);
+        }
         for exe in manifest
             .get("executables")
             .and_then(crate::util::json::Json::as_arr)
@@ -1511,21 +1529,81 @@ pub enum EngineJob {
     Release {
         id: u64,
     },
+    /// KV pool drain check (tests): `Ok` when every page is free and
+    /// the free list has coalesced back to one run. Queued FIFO like
+    /// every other job, so it observes all previously-sent `Release`s.
+    PoolDrained {
+        reply: std::sync::mpsc::Sender<std::result::Result<(), String>>,
+    },
     Shutdown,
+}
+
+/// Typed engine-death error: the engine thread panicked, terminated, or
+/// (with a round watchdog configured) stalled past its deadline. The
+/// scheduler downcasts to this to route into supervision instead of
+/// treating it like a per-request failure (DESIGN.md §12).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineFailed {
+    /// Recorded panic message, or a description of how the thread died.
+    pub cause: String,
+    /// Which engine lifetime failed: 0 for the initial spawn,
+    /// incremented by every [`EngineHandle::respawn`].
+    pub generation: u64,
+    /// `true` when a round watchdog classified the engine as stalled
+    /// (the thread may still be alive inside a wedged kernel call; it
+    /// winds itself down once its job channel disconnects).
+    pub stalled: bool,
+}
+
+impl std::fmt::Display for EngineFailed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.stalled {
+            write!(f, "engine stalled (generation {}): {}", self.generation, self.cause)
+        } else {
+            write!(f, "engine failed (generation {}): {}", self.generation, self.cause)
+        }
+    }
+}
+
+impl std::error::Error for EngineFailed {}
+
+/// One engine lifetime as seen from the handle: the job channel into
+/// the executor thread, the slot where that thread records its panic
+/// cause, and the lifetime's generation number. [`EngineHandle::respawn`]
+/// swaps the whole link atomically, so every handle clone migrates to
+/// the new engine together.
+struct EngineLink {
+    tx: std::sync::mpsc::Sender<EngineJob>,
+    failure: Arc<Mutex<Option<String>>>,
+    generation: u64,
+}
+
+struct HandleInner {
+    artifacts: std::path::PathBuf,
+    pool_geometry: Option<(usize, usize)>,
+    link: std::sync::RwLock<EngineLink>,
 }
 
 /// Cloneable, `Send` handle that forwards jobs to the executor thread.
 /// Calls are blocking (the engine serializes all device work anyway);
 /// the thread-based coordinator runs them from its scheduler thread.
+///
+/// Supervision (DESIGN.md §12): the job loop runs each job under
+/// `catch_unwind`, so a kernel panic kills the *engine lifetime* (the
+/// thread records its cause and exits — a panicked engine's state is
+/// never reused) but not the process. Handle calls against a dead
+/// engine return a typed [`EngineFailed`]; [`EngineHandle::respawn`]
+/// loads a fresh engine from the original artifacts and atomically
+/// repoints every clone of the handle at it.
 #[derive(Clone)]
 pub struct EngineHandle {
-    tx: std::sync::mpsc::Sender<EngineJob>,
+    inner: Arc<HandleInner>,
 }
 
 impl EngineHandle {
     /// Spawn the executor thread and load the engine on it.
     pub fn spawn(artifacts: std::path::PathBuf) -> Result<Self> {
-        Self::spawn_inner(artifacts, None)
+        Self::spawn_inner(artifacts, None, None)
     }
 
     /// [`EngineHandle::spawn`] with an explicit KV pool geometry
@@ -1536,19 +1614,59 @@ impl EngineHandle {
         page_tokens: usize,
         budget_tokens: usize,
     ) -> Result<Self> {
-        Self::spawn_inner(artifacts, Some((page_tokens, budget_tokens)))
+        Self::spawn_inner(artifacts, Some((page_tokens, budget_tokens)), None)
+    }
+
+    /// [`EngineHandle::spawn`] with a deterministic fault-injection
+    /// plan for the FIRST engine lifetime (chaos tests and the
+    /// fault-recovery bench). Respawns are always fault-free.
+    pub fn spawn_with_faults(
+        artifacts: std::path::PathBuf,
+        pool_geometry: Option<(usize, usize)>,
+        plan: crate::runtime::chaos::FaultPlan,
+    ) -> Result<Self> {
+        Self::spawn_inner(artifacts, pool_geometry, Some(plan))
+    }
+
+    /// [`EngineHandle::spawn`] honoring the `FLUX_FAULT_PLAN` /
+    /// `FLUX_FAULT_SEED` environment (the `flux serve` / CI entry
+    /// point; tests pass plans programmatically instead).
+    pub fn spawn_from_env(artifacts: std::path::PathBuf) -> Result<Self> {
+        Self::spawn_inner(artifacts, None, crate::runtime::chaos::FaultPlan::from_env()?)
     }
 
     fn spawn_inner(
         artifacts: std::path::PathBuf,
         pool_geometry: Option<(usize, usize)>,
+        faults: Option<crate::runtime::chaos::FaultPlan>,
     ) -> Result<Self> {
+        let (tx, failure) = Self::spawn_link(&artifacts, pool_geometry, faults)?;
+        Ok(Self {
+            inner: Arc::new(HandleInner {
+                artifacts,
+                pool_geometry,
+                link: std::sync::RwLock::new(EngineLink { tx, failure, generation: 0 }),
+            }),
+        })
+    }
+
+    /// Spawn one executor thread (one engine lifetime) and wait for the
+    /// engine to load on it. The returned failure slot is written by the
+    /// thread if its job loop dies to a panic.
+    fn spawn_link(
+        artifacts: &std::path::Path,
+        pool_geometry: Option<(usize, usize)>,
+        faults: Option<crate::runtime::chaos::FaultPlan>,
+    ) -> Result<(std::sync::mpsc::Sender<EngineJob>, Arc<Mutex<Option<String>>>)> {
         let (tx, rx) = std::sync::mpsc::channel::<EngineJob>();
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        let failure: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let failure_slot = failure.clone();
+        let artifacts = artifacts.to_path_buf();
         std::thread::Builder::new()
             .name("flux-engine".into())
             .spawn(move || {
-                let mut engine = match Engine::load_with_pool(&artifacts, pool_geometry) {
+                let mut engine = match Engine::load_with_faults(&artifacts, pool_geometry, faults) {
                     Ok(e) => {
                         let _ = ready_tx.send(Ok(()));
                         e
@@ -1559,43 +1677,93 @@ impl EngineHandle {
                     }
                 };
                 while let Ok(job) = rx.recv() {
-                    match job {
-                        EngineJob::Prefill { tokens, policy, router, reply } => {
-                            let _ = reply.send(engine.prefill(&tokens, &policy, &router));
+                    // per-job panic isolation: a panicking kernel ends
+                    // this engine lifetime (its state is untrusted from
+                    // here on) but records why, so the supervisor can
+                    // surface a typed cause instead of a hung channel
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        run_engine_job(&mut engine, job)
+                    }));
+                    match outcome {
+                        Ok(true) => {}
+                        Ok(false) => break,
+                        Err(payload) => {
+                            *failure_slot.lock().unwrap() = Some(panic_message(&payload));
+                            break;
                         }
-                        EngineJob::PrefillOpen { tokens, policy, router, chunk_tokens, reply } => {
-                            let _ = reply
-                                .send(engine.prefill_open(&tokens, &policy, &router, chunk_tokens));
-                        }
-                        EngineJob::PrefillChunk { job, reply } => {
-                            let _ = reply.send(engine.prefill_chunk(job));
-                        }
-                        EngineJob::PrefillCancel { job } => {
-                            engine.prefill_cancel(job);
-                        }
-                        EngineJob::DecodeStep { id, reply } => {
-                            let _ = reply.send(engine.decode_step(id));
-                        }
-                        EngineJob::DecodeBatch { ids, reply } => {
-                            let _ = reply.send(engine.decode_batch_report(&ids));
-                        }
-                        EngineJob::MaxPromptLen { reply } => {
-                            let max =
-                                engine.cfg().prefill_buckets.last().copied().unwrap_or(usize::MAX);
-                            let _ = reply.send(max);
-                        }
-                        EngineJob::PoolProfile { reply } => {
-                            let _ = reply.send(engine.pool_profile());
-                        }
-                        EngineJob::Release { id } => {
-                            engine.release(id);
-                        }
-                        EngineJob::Shutdown => break,
                     }
                 }
             })?;
         ready_rx.recv()??;
-        Ok(Self { tx })
+        Ok((tx, failure))
+    }
+
+    /// Replace a dead (or stalled) engine with a fresh one loaded from
+    /// the original artifacts, bumping the generation. Every clone of
+    /// the handle migrates atomically; a stalled old thread winds itself
+    /// down once its job channel disconnects (finishing — and freeing —
+    /// whatever it was wedged on first). Returns the new generation.
+    pub fn respawn(&self) -> Result<u64> {
+        let mut link = self.inner.link.write().unwrap();
+        let (tx, failure) =
+            Self::spawn_link(&self.inner.artifacts, self.inner.pool_geometry, None)?;
+        let generation = link.generation + 1;
+        *link = EngineLink { tx, failure, generation };
+        Ok(generation)
+    }
+
+    /// Current engine generation: 0 for the initial spawn, +1 per
+    /// [`EngineHandle::respawn`].
+    pub fn generation(&self) -> u64 {
+        self.inner.link.read().unwrap().generation
+    }
+
+    /// Snapshot the current link (never hold the lock across a blocking
+    /// reply wait — `respawn` needs the write lock while the old engine
+    /// may still be wedged).
+    fn link(&self) -> (std::sync::mpsc::Sender<EngineJob>, Arc<Mutex<Option<String>>>, u64) {
+        let l = self.inner.link.read().unwrap();
+        (l.tx.clone(), l.failure.clone(), l.generation)
+    }
+
+    /// Typed engine-death error for the current lifetime, carrying the
+    /// recorded panic cause when there is one.
+    fn dead(failure: &Arc<Mutex<Option<String>>>, generation: u64) -> anyhow::Error {
+        let cause = failure
+            .lock()
+            .unwrap()
+            .clone()
+            .unwrap_or_else(|| "engine thread terminated".into());
+        anyhow::Error::new(EngineFailed { cause, generation, stalled: false })
+    }
+
+    /// Send `job` and wait for its reply, with an optional watchdog
+    /// deadline. A missing reply (thread dead) or a tripped deadline
+    /// (thread stalled) both surface as typed [`EngineFailed`].
+    fn roundtrip<T>(
+        &self,
+        rx: std::sync::mpsc::Receiver<T>,
+        sent: std::result::Result<(), std::sync::mpsc::SendError<EngineJob>>,
+        failure: Arc<Mutex<Option<String>>>,
+        generation: u64,
+        deadline: Option<std::time::Duration>,
+    ) -> Result<T> {
+        if sent.is_err() {
+            return Err(Self::dead(&failure, generation));
+        }
+        match deadline {
+            None => rx.recv().map_err(|_| Self::dead(&failure, generation)),
+            Some(t) => rx.recv_timeout(t).map_err(|e| match e {
+                std::sync::mpsc::RecvTimeoutError::Timeout => anyhow::Error::new(EngineFailed {
+                    cause: format!("engine round exceeded the {}ms watchdog", t.as_millis()),
+                    generation,
+                    stalled: true,
+                }),
+                std::sync::mpsc::RecvTimeoutError::Disconnected => {
+                    Self::dead(&failure, generation)
+                }
+            }),
+        }
     }
 
     pub fn prefill(
@@ -1604,11 +1772,10 @@ impl EngineHandle {
         policy: Policy,
         router: String,
     ) -> Result<(u64, PrefillReport)> {
+        let (tx, failure, generation) = self.link();
         let (reply, rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(EngineJob::Prefill { tokens, policy, router, reply })
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        rx.recv()?
+        let sent = tx.send(EngineJob::Prefill { tokens, policy, router, reply });
+        self.roundtrip(rx, sent, failure, generation, None)?
     }
 
     /// Open a chunked prefill job (DESIGN.md §10) — validation and
@@ -1621,72 +1788,152 @@ impl EngineHandle {
         router: String,
         chunk_tokens: usize,
     ) -> Result<u64> {
+        let (tx, failure, generation) = self.link();
         let (reply, rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(EngineJob::PrefillOpen { tokens, policy, router, chunk_tokens, reply })
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        rx.recv()?
+        let sent = tx.send(EngineJob::PrefillOpen { tokens, policy, router, chunk_tokens, reply });
+        self.roundtrip(rx, sent, failure, generation, None)?
     }
 
     /// Run the next chunk of prefill job `job`; `Done` promotes the job
     /// to a live decode-ready request.
     pub fn prefill_chunk(&self, job: u64) -> Result<ChunkOutcome> {
+        self.prefill_chunk_deadline(job, None)
+    }
+
+    /// [`EngineHandle::prefill_chunk`] under the round watchdog: a
+    /// chunk call exceeding `deadline` returns a typed stalled
+    /// [`EngineFailed`] instead of blocking the scheduler forever.
+    pub fn prefill_chunk_deadline(
+        &self,
+        job: u64,
+        deadline: Option<std::time::Duration>,
+    ) -> Result<ChunkOutcome> {
+        let (tx, failure, generation) = self.link();
         let (reply, rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(EngineJob::PrefillChunk { job, reply })
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        rx.recv()?
+        let sent = tx.send(EngineJob::PrefillChunk { job, reply });
+        self.roundtrip(rx, sent, failure, generation, deadline)?
     }
 
     /// Drop a partially-prefilled job, freeing its staged KV.
     pub fn prefill_cancel(&self, job: u64) {
-        let _ = self.tx.send(EngineJob::PrefillCancel { job });
+        let _ = self.link().0.send(EngineJob::PrefillCancel { job });
     }
 
     pub fn decode_step(&self, id: u64) -> Result<u32> {
+        let (tx, failure, generation) = self.link();
         let (reply, rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(EngineJob::DecodeStep { id, reply })
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        rx.recv()?
+        let sent = tx.send(EngineJob::DecodeStep { id, reply });
+        self.roundtrip(rx, sent, failure, generation, None)?
     }
 
     /// One batched token round over `ids` — a single engine round-trip
     /// producing every active request's next token (DESIGN.md §9). The
-    /// outer `Result` is channel liveness; per-request failures are in
+    /// outer `Result` is engine liveness (typed [`EngineFailed`] on a
+    /// dead engine); per-request failures are in
     /// [`DecodeBatchReport::tokens`].
     pub fn decode_batch(&self, ids: Vec<u64>) -> Result<DecodeBatchReport> {
+        self.decode_batch_deadline(ids, None)
+    }
+
+    /// [`EngineHandle::decode_batch`] under the round watchdog: a round
+    /// exceeding `deadline` returns a typed stalled [`EngineFailed`]
+    /// instead of blocking the scheduler forever.
+    pub fn decode_batch_deadline(
+        &self,
+        ids: Vec<u64>,
+        deadline: Option<std::time::Duration>,
+    ) -> Result<DecodeBatchReport> {
+        let (tx, failure, generation) = self.link();
         let (reply, rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(EngineJob::DecodeBatch { ids, reply })
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        Ok(rx.recv()?)
+        let sent = tx.send(EngineJob::DecodeBatch { ids, reply });
+        self.roundtrip(rx, sent, failure, generation, deadline)
     }
 
     /// Largest admissible prompt length (the biggest prefill bucket).
     pub fn max_prompt_len(&self) -> Result<usize> {
+        let (tx, failure, generation) = self.link();
         let (reply, rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(EngineJob::MaxPromptLen { reply })
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        Ok(rx.recv()?)
+        let sent = tx.send(EngineJob::MaxPromptLen { reply });
+        self.roundtrip(rx, sent, failure, generation, None)
     }
 
     /// Pool geometry for worst-case page admission (immutable after
     /// load; fetch once).
     pub fn pool_profile(&self) -> Result<PoolProfile> {
+        let (tx, failure, generation) = self.link();
         let (reply, rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(EngineJob::PoolProfile { reply })
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        Ok(rx.recv()?)
+        let sent = tx.send(EngineJob::PoolProfile { reply });
+        self.roundtrip(rx, sent, failure, generation, None)
+    }
+
+    /// Assert the engine-side KV pool has drained back to fully-free
+    /// (tests). FIFO-ordered behind every `Release` already sent on
+    /// this handle; errors carry the leak description (or engine death).
+    pub fn pool_drained(&self) -> Result<()> {
+        let (tx, failure, generation) = self.link();
+        let (reply, rx) = std::sync::mpsc::channel();
+        let sent = tx.send(EngineJob::PoolDrained { reply });
+        self.roundtrip(rx, sent, failure, generation, None)?
+            .map_err(|leak| anyhow::anyhow!("kv pool not drained: {leak}"))
     }
 
     pub fn release(&self, id: u64) {
-        let _ = self.tx.send(EngineJob::Release { id });
+        let _ = self.link().0.send(EngineJob::Release { id });
     }
 
     pub fn shutdown(&self) {
-        let _ = self.tx.send(EngineJob::Shutdown);
+        let _ = self.link().0.send(EngineJob::Shutdown);
+    }
+}
+
+/// Run one job against the engine; `false` means Shutdown. Every reply
+/// send ignores a hung-up receiver (a timed-out watchdog caller).
+fn run_engine_job(engine: &mut Engine, job: EngineJob) -> bool {
+    match job {
+        EngineJob::Prefill { tokens, policy, router, reply } => {
+            let _ = reply.send(engine.prefill(&tokens, &policy, &router));
+        }
+        EngineJob::PrefillOpen { tokens, policy, router, chunk_tokens, reply } => {
+            let _ = reply.send(engine.prefill_open(&tokens, &policy, &router, chunk_tokens));
+        }
+        EngineJob::PrefillChunk { job, reply } => {
+            let _ = reply.send(engine.prefill_chunk(job));
+        }
+        EngineJob::PrefillCancel { job } => {
+            engine.prefill_cancel(job);
+        }
+        EngineJob::DecodeStep { id, reply } => {
+            let _ = reply.send(engine.decode_step(id));
+        }
+        EngineJob::DecodeBatch { ids, reply } => {
+            let _ = reply.send(engine.decode_batch_report(&ids));
+        }
+        EngineJob::MaxPromptLen { reply } => {
+            let max = engine.cfg().prefill_buckets.last().copied().unwrap_or(usize::MAX);
+            let _ = reply.send(max);
+        }
+        EngineJob::PoolProfile { reply } => {
+            let _ = reply.send(engine.pool_profile());
+        }
+        EngineJob::Release { id } => {
+            engine.release(id);
+        }
+        EngineJob::PoolDrained { reply } => {
+            let _ = reply.send(engine.pool().drained());
+        }
+        EngineJob::Shutdown => return false,
+    }
+    true
+}
+
+/// Best-effort panic payload → message (panics carry `&str` or `String`
+/// in practice).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "engine thread panicked (non-string payload)".into()
     }
 }

@@ -125,6 +125,46 @@ impl KvPool {
         n_floats.div_ceil(self.page_floats).max(1)
     }
 
+    /// Whether the pool has drained back to its fully-free state: no
+    /// page allocated, and the free list coalesced to (at most) the one
+    /// run spanning the whole grown arena. A violation means a request
+    /// lifecycle leaked pages or the coalescing free-list invariant
+    /// broke — the error describes which (DESIGN.md §12).
+    pub fn drained(&self) -> std::result::Result<(), String> {
+        if self.allocated_pages != 0 {
+            return Err(format!(
+                "{} of {} pages still allocated",
+                self.allocated_pages, self.total_pages
+            ));
+        }
+        if self.free.len() > 1 {
+            return Err(format!(
+                "free list fragmented into {} runs after full drain",
+                self.free.len()
+            ));
+        }
+        if let Some(run) = self.free.first() {
+            if run.start != 0 || run.pages != self.grown_pages {
+                return Err(format!(
+                    "free run [{}, {}) does not span the grown arena of {} pages",
+                    run.start,
+                    run.start + run.pages,
+                    self.grown_pages
+                ));
+            }
+        } else if self.grown_pages != 0 {
+            return Err(format!("empty free list but {} pages grown", self.grown_pages));
+        }
+        Ok(())
+    }
+
+    /// Panicking form of [`KvPool::drained`] for test teardown.
+    pub fn debug_assert_drained(&self) {
+        if let Err(leak) = self.drained() {
+            panic!("kv pool not drained: {leak}");
+        }
+    }
+
     /// Allocate a zeroed contiguous run covering `n_floats` floats (in
     /// each of the K and V arenas). Fails — typed, no panic — when the
     /// budget can't cover it; the caller surfaces that as a per-request

@@ -4,8 +4,14 @@
 //! Usage:
 //!   flux [--artifacts DIR] serve [--addr HOST:PORT] [--deadline-ms N]
 //!                                [--chunk-tokens N] [--chunk-budget N]
+//!                                [--round-timeout-ms N] [--restart-max N]
+//!                                [--restart-backoff-ms N] [--drain-ms N]
 //!        (chunk-tokens 0 = monolithic prefill; default 128 interleaves
-//!        prefill chunks with batched decode rounds, DESIGN.md §10)
+//!        prefill chunks with batched decode rounds, DESIGN.md §10;
+//!        round-timeout-ms arms the engine-round watchdog, restart-*
+//!        bound engine respawns after a crash, and SIGINT/SIGTERM
+//!        drain in-flight streams for up to drain-ms before exit,
+//!        DESIGN.md §12)
 //!   flux [--artifacts DIR] generate [--task T] [--seq-len N]
 //!                                   [--policy P] [--router R] [--sparse-decode]
 //!                                   [--stream] [--deadline-ms N]
@@ -113,7 +119,37 @@ fn parse_task(s: &str) -> Result<Task> {
     })
 }
 
-fn main() -> Result<()> {
+/// Signal-to-drain bridge for `flux serve`: the handler only flips this
+/// flag (async-signal-safe); a watcher thread does the actual drain.
+static SHUTDOWN: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+extern "C" fn on_signal(_signum: i32) {
+    SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// Route SIGINT/SIGTERM to [`on_signal`] via the libc already linked
+/// into every binary (no signal crate in the offline vendor set).
+fn install_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    let handler = on_signal as extern "C" fn(i32) as usize;
+    unsafe {
+        signal(SIGINT, handler);
+        signal(SIGTERM, handler);
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("flux: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv);
     let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
@@ -122,7 +158,7 @@ fn main() -> Result<()> {
     match cmd {
         "serve" => {
             let cfg = MetaConfig::load(&artifacts)?;
-            let engine = EngineHandle::spawn(artifacts.clone())?;
+            let engine = EngineHandle::spawn_from_env(artifacts.clone())?;
             let defaults = ServingConfig::default();
             let scfg = ServingConfig {
                 default_deadline_ms: args.get_opt_u64("deadline-ms"),
@@ -130,9 +166,38 @@ fn main() -> Result<()> {
                     .get_usize("chunk-tokens", defaults.prefill_chunk_tokens),
                 prefill_chunk_budget: args
                     .get_usize("chunk-budget", defaults.prefill_chunk_budget),
+                engine_round_timeout_ms: args
+                    .get_opt_u64("round-timeout-ms")
+                    .or(defaults.engine_round_timeout_ms),
+                engine_restart_max: args.get_usize("restart-max", defaults.engine_restart_max),
+                engine_restart_backoff_ms: args
+                    .get_opt_u64("restart-backoff-ms")
+                    .unwrap_or(defaults.engine_restart_backoff_ms),
                 ..Default::default()
             };
-            let coord = Coordinator::start(engine, scfg);
+            let coord = Coordinator::start(engine, scfg)?;
+            let drain_ms = args.get_opt_u64("drain-ms").unwrap_or(30_000);
+            install_signal_handlers();
+            {
+                let coord = coord.clone();
+                std::thread::spawn(move || {
+                    use std::sync::atomic::Ordering;
+                    while !SHUTDOWN.load(Ordering::SeqCst) {
+                        std::thread::sleep(std::time::Duration::from_millis(100));
+                    }
+                    eprintln!("flux: signal received, draining in-flight streams (up to {drain_ms} ms)");
+                    let clean = coord.drain(std::time::Duration::from_millis(drain_ms));
+                    if clean {
+                        eprintln!("flux: drain complete");
+                    } else {
+                        eprintln!("flux: drain deadline exceeded, exiting with streams in flight");
+                    }
+                    // give session pump threads a beat to flush their
+                    // terminal frames onto the sockets
+                    std::thread::sleep(std::time::Duration::from_millis(200));
+                    std::process::exit(if clean { 0 } else { 1 });
+                });
+            }
             server::serve(coord, &args.get("addr", "127.0.0.1:7070"), cfg.model.n_layers)
         }
         "generate" => {
@@ -187,7 +252,7 @@ fn main() -> Result<()> {
             let cfg = MetaConfig::load(&artifacts)?;
             let n_layers = cfg.model.n_layers;
             let engine = EngineHandle::spawn(artifacts.clone())?;
-            let coord = Coordinator::start(engine, ServingConfig::default());
+            let coord = Coordinator::start(engine, ServingConfig::default())?;
             let tasks = [Task::PRe, Task::Gov, Task::HotQA, Task::Trec];
             let trace = workload::poisson_trace(
                 3,
@@ -271,6 +336,8 @@ fn main() -> Result<()> {
             eprintln!("  generate --stream streams tokens through the session API as they decode");
             eprintln!("  bench sweeps batched decode at batch sizes 1/2/4/8 (FLUX_BATCH_DECODE=0 forces serial)");
             eprintln!("  serve --chunk-tokens N sizes prefill chunks (0 = monolithic), --chunk-budget N caps chunks per decode round");
+            eprintln!("  serve --round-timeout-ms N arms the engine watchdog; --restart-max/--restart-backoff-ms bound respawns; --drain-ms N caps SIGINT/SIGTERM drain (default 30000)");
+            eprintln!("  serve reads FLUX_FAULT_SEED / FLUX_FAULT_PLAN for deterministic fault injection (chaos testing)");
             eprintln!("experiment ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves all");
             Ok(())
         }
@@ -295,7 +362,7 @@ fn generate_streaming(
         n_layers,
     )?;
     let engine = EngineHandle::spawn(artifacts)?;
-    let coord = Coordinator::start(engine, ServingConfig::default());
+    let coord = Coordinator::start(engine, ServingConfig::default())?;
     let handle = coord.open(Request {
         prompt: sample.prompt.clone(),
         max_new: sample.answer.len() + 1,

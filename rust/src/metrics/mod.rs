@@ -76,9 +76,18 @@ pub struct ServingMetrics {
     /// Sessions evicted between decode steps because their deadline
     /// elapsed.
     pub requests_expired: u64,
-    /// Sessions that died to a mid-decode engine failure (admission and
-    /// prefill failures count as `requests_rejected` instead).
+    /// Sessions that ended in a typed failure terminal: a per-request
+    /// engine error mid-flight, or engine death
+    /// (`RequestError::EngineFailed`) — admission failures count as
+    /// `requests_rejected` instead.
     pub requests_failed: u64,
+    /// Successful engine restarts by the supervision path (DESIGN.md
+    /// §12) — each one is a whole engine lifetime lost to a panic or
+    /// stall and recovered.
+    pub engine_restarts: u64,
+    /// Engine rounds that exceeded `engine_round_timeout_ms` and were
+    /// classified as stalled by the round watchdog.
+    pub watchdog_trips: u64,
     pub tokens_generated: u64,
     pub prompt_tokens: u64,
     /// Tokens streamed per retired session (completed, cancelled or
@@ -171,7 +180,7 @@ impl ServingMetrics {
              decode_p50={:.2}ms decode_tput={:.1}tok/s rounds={} batch_p50={}req \
              prefill_chunks={} decode_stall={:.1}ms \
              fa_slots={} sa_slots={} kv_moved={}B kv_borrowed={}B \
-             pages={}/{} pages_peak={} overloaded={}",
+             pages={}/{} pages_peak={} overloaded={} restarts={} watchdog_trips={}",
             self.requests_completed,
             self.requests_rejected,
             self.requests_cancelled,
@@ -195,6 +204,8 @@ impl ServingMetrics {
             self.pages_allocated + self.pages_free,
             self.pages_peak,
             self.requests_overloaded,
+            self.engine_restarts,
+            self.watchdog_trips,
         )
     }
 }
@@ -295,6 +306,23 @@ mod tests {
         assert!(s.contains("pages_peak=12"), "{s}");
         m.requests_overloaded = 3;
         assert!(m.summary().contains("overloaded=3"), "{}", m.summary());
+    }
+
+    /// Failure-domain counters (DESIGN.md §12) surface in the summary
+    /// line so an operator sees restarts and watchdog trips at a glance.
+    #[test]
+    fn summary_reports_failure_domain_counters() {
+        let mut m = ServingMetrics::default();
+        let s = m.summary();
+        assert!(s.contains("restarts=0"), "{s}");
+        assert!(s.contains("watchdog_trips=0"), "{s}");
+        m.engine_restarts = 2;
+        m.watchdog_trips = 1;
+        m.requests_failed = 4;
+        let s = m.summary();
+        assert!(s.contains("restarts=2"), "{s}");
+        assert!(s.contains("watchdog_trips=1"), "{s}");
+        assert!(s.contains("failed=4"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,327 @@
+//! Deterministic fault injection: [`ChaosBackend`] wraps any
+//! [`Backend`] and injects failures at chosen `run`-call indices,
+//! driven by a [`FaultPlan`] (DESIGN.md §12).
+//!
+//! This is the testing substrate for the failure-domain work: engine
+//! supervision, the round watchdog and graceful drain are only
+//! verifiable if kernel failures, panics and stalls can be produced *on
+//! demand and reproducibly*. A plan is either written out explicitly
+//! (`FLUX_FAULT_PLAN="panic@120,stall:800@40"`) or derived from a seed
+//! (`FLUX_FAULT_SEED=7`) through the same SplitMix64 RNG the workload
+//! generators use — the same seed always yields the same schedule.
+//!
+//! Fault kinds:
+//! * `err`   — the kernel call returns a typed `Err` (the per-request
+//!   failure path: the scheduler retires that request, engine survives);
+//! * `panic` — the kernel call panics on the engine thread (the engine
+//!   death path: caught by the job-loop `catch_unwind`, surfaced as
+//!   [`crate::engine::EngineFailed`], recovered by supervision);
+//! * `stall:<ms>` — the call sleeps before executing (the hang path:
+//!   trips the scheduler's round watchdog when one is configured);
+//! * `pool`  — an `Err` shaped like KV pool exhaustion (exercises the
+//!   allocation-failure error path without a real full pool).
+//!
+//! A plan describes ONE engine lifetime: a respawned engine is always
+//! fault-free, so recovery tests can assert post-restart bit-identity
+//! against a clean run.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Arg, Backend, ExeStats, HostTensor};
+use crate::util::rng::Rng;
+
+/// What to inject at one `run`-call index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Return a typed kernel `Err` instead of executing.
+    Err,
+    /// Panic on the engine thread instead of executing.
+    Panic,
+    /// Sleep this many milliseconds, then execute normally.
+    Stall(u64),
+    /// Return an `Err` shaped like KV pool exhaustion.
+    PoolExhausted,
+}
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultKind::Err => write!(f, "err"),
+            FaultKind::Panic => write!(f, "panic"),
+            FaultKind::Stall(ms) => write!(f, "stall:{ms}"),
+            FaultKind::PoolExhausted => write!(f, "pool"),
+        }
+    }
+}
+
+/// A deterministic fault schedule: `run`-call index → fault. Indices
+/// count every `Backend::run` invocation of one engine lifetime
+/// (prefill layers, router nets, decode kernels alike), starting at 0.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    faults: BTreeMap<u64, FaultKind>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Builder: inject `kind` at `run`-call number `index`.
+    pub fn with(mut self, index: u64, kind: FaultKind) -> Self {
+        self.faults.insert(index, kind);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn get(&self, index: u64) -> Option<FaultKind> {
+        self.faults.get(&index).copied()
+    }
+
+    /// Parse the `FLUX_FAULT_PLAN` syntax: comma-separated
+    /// `<kind>@<index>` entries where `<kind>` is `err`, `panic`,
+    /// `pool`, or `stall:<ms>` — e.g. `"panic@120,stall:800@40"`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = Self::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind, index) = entry
+                .split_once('@')
+                .with_context(|| format!("fault entry '{entry}' missing '@<index>'"))?;
+            let index: u64 = index
+                .trim()
+                .parse()
+                .with_context(|| format!("fault entry '{entry}': bad call index"))?;
+            let kind = match kind.trim() {
+                "err" => FaultKind::Err,
+                "panic" => FaultKind::Panic,
+                "pool" => FaultKind::PoolExhausted,
+                other => match other.strip_prefix("stall:") {
+                    Some(ms) => FaultKind::Stall(
+                        ms.parse()
+                            .with_context(|| format!("fault entry '{entry}': bad stall ms"))?,
+                    ),
+                    None => bail!("fault entry '{entry}': unknown kind '{other}'"),
+                },
+            };
+            plan.faults.insert(index, kind);
+        }
+        Ok(plan)
+    }
+
+    /// Derive a schedule from a seed: 1–3 faults at call indices in
+    /// [10, 400) — early enough that any real serving workload reaches
+    /// them — with kinds weighted toward the recoverable classes.
+    /// Deterministic: the same seed always yields the same plan.
+    pub fn seeded(seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xC0A5_F001);
+        let mut plan = Self::new();
+        let n = 1 + rng.gen_range(3);
+        for _ in 0..n {
+            let index = rng.range(10, 400) as u64;
+            let kind = match rng.categorical(&[0.35, 0.25, 0.2, 0.2]) {
+                0 => FaultKind::Err,
+                1 => FaultKind::Panic,
+                2 => FaultKind::Stall(rng.range(400, 900) as u64),
+                _ => FaultKind::PoolExhausted,
+            };
+            plan.faults.insert(index, kind);
+        }
+        plan
+    }
+
+    /// The CLI/CI entry point: `FLUX_FAULT_PLAN` (explicit schedule)
+    /// takes precedence over `FLUX_FAULT_SEED` (derived schedule);
+    /// neither set means no injection. Tests construct plans
+    /// programmatically instead — env mutation races across parallel
+    /// test threads.
+    pub fn from_env() -> Result<Option<Self>> {
+        if let Ok(spec) = std::env::var("FLUX_FAULT_PLAN") {
+            if !spec.trim().is_empty() {
+                return Ok(Some(Self::parse(&spec).context("FLUX_FAULT_PLAN")?));
+            }
+        }
+        if let Ok(seed) = std::env::var("FLUX_FAULT_SEED") {
+            if !seed.trim().is_empty() {
+                let seed: u64 = seed.trim().parse().context("FLUX_FAULT_SEED")?;
+                return Ok(Some(Self::seeded(seed)));
+            }
+        }
+        Ok(None)
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    /// Round-trips through [`FaultPlan::parse`] (logging / bench ledger).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut first = true;
+        for (index, kind) in &self.faults {
+            if !first {
+                write!(f, ",")?;
+            }
+            write!(f, "{kind}@{index}")?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
+/// A [`Backend`] decorator that counts `run` calls and injects the
+/// plan's fault when the counter hits a scheduled index. Everything
+/// else — loading, stats, capability flags — delegates to the wrapped
+/// backend, so the engine above is none the wiser until the fault fires.
+pub struct ChaosBackend {
+    inner: Box<dyn Backend>,
+    plan: FaultPlan,
+    calls: u64,
+}
+
+impl ChaosBackend {
+    pub fn new(inner: Box<dyn Backend>, plan: FaultPlan) -> Self {
+        Self { inner, plan, calls: 0 }
+    }
+
+    /// Wrap `inner` unless the plan is empty (no-fault plans add no
+    /// indirection).
+    pub fn wrap(inner: Box<dyn Backend>, plan: FaultPlan) -> Box<dyn Backend> {
+        if plan.is_empty() {
+            inner
+        } else {
+            Box::new(Self::new(inner, plan))
+        }
+    }
+}
+
+impl Backend for ChaosBackend {
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn load(&mut self, exe: &str) -> Result<()> {
+        self.inner.load(exe)
+    }
+
+    fn is_loaded(&self, exe: &str) -> bool {
+        self.inner.is_loaded(exe)
+    }
+
+    fn run(&mut self, exe: &str, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let idx = self.calls;
+        self.calls += 1;
+        match self.plan.get(idx) {
+            Some(FaultKind::Err) => {
+                bail!("chaos: injected kernel failure at call {idx} ({exe})")
+            }
+            Some(FaultKind::Panic) => {
+                panic!("chaos: injected kernel panic at call {idx} ({exe})")
+            }
+            Some(FaultKind::Stall(ms)) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                self.inner.run(exe, args)
+            }
+            Some(FaultKind::PoolExhausted) => {
+                bail!("kv pool exhausted: chaos-injected at call {idx} ({exe})")
+            }
+            None => self.inner.run(exe, args),
+        }
+    }
+
+    fn stats(&self) -> &std::collections::HashMap<String, ExeStats> {
+        self.inner.stats()
+    }
+
+    fn reset_stats(&mut self) {
+        self.inner.reset_stats()
+    }
+
+    fn note_kv_transfer(&mut self, exe: &str, bytes_moved: u64, bytes_borrowed: u64) {
+        self.inner.note_kv_transfer(exe, bytes_moved, bytes_borrowed)
+    }
+
+    fn note_prefill_rows(&mut self, exe: &str, rows_valid: u64, rows_padded: u64) {
+        self.inner.note_prefill_rows(exe, rows_valid, rows_padded)
+    }
+
+    fn set_threads(&mut self, n: usize) {
+        self.inner.set_threads(n)
+    }
+
+    fn accepts_prefill_valid_arg(&self) -> bool {
+        self.inner.accepts_prefill_valid_arg()
+    }
+
+    fn accepts_prefill_chunks(&self) -> bool {
+        self.inner.accepts_prefill_chunks()
+    }
+
+    fn accepts_decode_batch(&self) -> bool {
+        self.inner.accepts_decode_batch()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MetaConfig;
+    use crate::runtime::RefBackend;
+
+    #[test]
+    fn plan_parse_roundtrip() {
+        let plan = FaultPlan::parse("panic@120, stall:800@40,err@3,pool@9").unwrap();
+        assert_eq!(plan.get(120), Some(FaultKind::Panic));
+        assert_eq!(plan.get(40), Some(FaultKind::Stall(800)));
+        assert_eq!(plan.get(3), Some(FaultKind::Err));
+        assert_eq!(plan.get(9), Some(FaultKind::PoolExhausted));
+        assert_eq!(plan.get(4), None);
+        let reparsed = FaultPlan::parse(&plan.to_string()).unwrap();
+        assert_eq!(plan, reparsed);
+    }
+
+    #[test]
+    fn plan_parse_rejects_garbage() {
+        assert!(FaultPlan::parse("panic").is_err());
+        assert!(FaultPlan::parse("panic@x").is_err());
+        assert!(FaultPlan::parse("frobnicate@3").is_err());
+        assert!(FaultPlan::parse("stall:abc@3").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_nonempty() {
+        for seed in 0..32 {
+            let a = FaultPlan::seeded(seed);
+            let b = FaultPlan::seeded(seed);
+            assert_eq!(a, b, "seed {seed} must be reproducible");
+            assert!(!a.is_empty(), "seed {seed} produced an empty plan");
+        }
+        assert_ne!(FaultPlan::seeded(1), FaultPlan::seeded(2));
+    }
+
+    #[test]
+    fn chaos_backend_injects_at_exact_index() {
+        let cfg: MetaConfig = MetaConfig::from_json_str(
+            crate::config::TEST_META_JSON,
+            std::path::PathBuf::from("/tmp"),
+        )
+        .unwrap();
+        let plan = FaultPlan::new().with(1, FaultKind::Err).with(2, FaultKind::PoolExhausted);
+        let mut b = ChaosBackend::new(Box::new(RefBackend::new(cfg)), plan);
+        b.load("lm_head").unwrap();
+        assert!(b.is_loaded("lm_head"));
+        let h = HostTensor::zeros(vec![1, 16]);
+        // call 0: clean (delegates; argument errors from the ref kernel
+        // are fine — we only care that injection did not fire)
+        let r0 = b.run("lm_head", &[Arg::F32(&h)]);
+        let _ = r0;
+        // call 1: injected kernel failure
+        let e1 = b.run("lm_head", &[Arg::F32(&h)]).unwrap_err().to_string();
+        assert!(e1.contains("chaos: injected kernel failure at call 1"), "{e1}");
+        // call 2: pool-exhaustion-shaped failure
+        let e2 = b.run("lm_head", &[Arg::F32(&h)]).unwrap_err().to_string();
+        assert!(e2.contains("kv pool exhausted"), "{e2}");
+    }
+}

@@ -24,6 +24,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+pub mod chaos;
 pub mod ref_backend;
 pub mod synthetic;
 

@@ -25,8 +25,15 @@
 //!    "modes":[..],"ttft_ms":1.2,"e2e_ms":3.4,
 //!    "decode_ms_per_token":0.8,"queue_ms":0.1}
 //!   {"id":7,"event":"error","kind":"cancelled|deadline_exceeded|...",
-//!    "error":"..."}
+//!    "code":"cancelled|...","retryable":false,"error":"..."}
 //! ```
+//!
+//! `code` duplicates `kind` (stable machine-readable error class) and
+//! `retryable` tells clients whether resubmitting the identical request
+//! may succeed (true for transient admission/supervision failures:
+//! queue_full, overloaded, draining, engine_failed). A stream whose
+//! event channel closes without a terminal event (scheduler wound down)
+//! is answered with `kind:"shutdown"`, `retryable:false`.
 //!
 //! `done` and `error` are terminal; the id may be reused afterwards.
 //! A `cancel` frame (or dropping the connection) aborts the stream:
@@ -181,6 +188,9 @@ pub struct WireResponse {
     pub decode_ms_per_token: f64,
     pub queue_ms: f64,
     pub error: Option<String>,
+    /// Set alongside `error`: whether resubmitting the identical
+    /// request may succeed (mirrors the wire frame's `retryable`).
+    pub retryable: bool,
 }
 
 impl WireResponse {
@@ -195,7 +205,10 @@ impl WireResponse {
         o.set("decode_ms_per_token", Json::from(self.decode_ms_per_token));
         o.set("queue_ms", Json::from(self.queue_ms));
         match &self.error {
-            Some(e) => o.set("error", Json::from(e.as_str())),
+            Some(e) => {
+                o.set("error", Json::from(e.as_str()));
+                o.set("retryable", Json::from(self.retryable));
+            }
             None => o.set("error", Json::Null),
         };
         o
@@ -220,6 +233,7 @@ impl WireResponse {
             decode_ms_per_token: j.get("decode_ms_per_token").and_then(Json::as_f64).unwrap_or(0.0),
             queue_ms: j.get("queue_ms").and_then(Json::as_f64).unwrap_or(0.0),
             error: j.get("error").and_then(Json::as_str).map(String::from),
+            retryable: j.get("retryable").and_then(Json::as_bool).unwrap_or(false),
         }
     }
 }
@@ -285,9 +299,12 @@ fn frame(id: u64, event: &str) -> Json {
     o
 }
 
-fn error_frame(id: u64, kind: &str, msg: &str) -> Json {
+fn error_frame(id: u64, kind: &str, msg: &str, retryable: bool) -> Json {
     let mut o = frame(id, "error");
     o.set("kind", Json::from(kind));
+    // `code` mirrors `kind`: clients written against v2.1 key on it.
+    o.set("code", Json::from(kind));
+    o.set("retryable", Json::from(retryable));
     o.set("error", Json::from(msg));
     o
 }
@@ -400,31 +417,36 @@ fn handle_frame(
         let token = sessions.lock().unwrap().get(&id).cloned();
         match token {
             Some(c) => c.cancel(), // terminal error frame comes from the pump
-            None => write_line(wr, &error_frame(id, "unknown_id", &format!("no live stream {id}")))?,
+            None => {
+                write_line(wr, &error_frame(id, "unknown_id", &format!("no live stream {id}"), false))?
+            }
         }
         return Ok(());
     }
 
     if sessions.lock().unwrap().contains_key(&id) {
-        write_line(wr, &error_frame(id, "duplicate_id", &format!("stream {id} already in flight")))?;
+        write_line(
+            wr,
+            &error_frame(id, "duplicate_id", &format!("stream {id} already in flight"), false),
+        )?;
         return Ok(());
     }
     let wire = match WireRequest::from_json(&parsed) {
         Ok(w) => w,
         Err(e) => {
-            write_line(wr, &error_frame(id, "invalid", &format!("bad request: {e}")))?;
+            write_line(wr, &error_frame(id, "invalid", &format!("bad request: {e}"), false))?;
             return Ok(());
         }
     };
     let req = match wire.to_request(n_layers) {
         Ok(r) => r,
         Err(e) => {
-            write_line(wr, &error_frame(id, "invalid", &e.to_string()))?;
+            write_line(wr, &error_frame(id, "invalid", &e.to_string(), false))?;
             return Ok(());
         }
     };
     match coord.open(req) {
-        Err(e) => write_line(wr, &error_frame(id, e.kind(), &e.to_string()))?,
+        Err(e) => write_line(wr, &error_frame(id, e.kind(), &e.to_string(), e.retryable()))?,
         Ok(handle) => {
             sessions.lock().unwrap().insert(id, handle.cancel_token());
             let wr = wr.clone();
@@ -473,7 +495,9 @@ fn pump_session(id: u64, handle: SessionHandle, wr: &SharedWriter, sessions: &Se
                 o.set("queue_ms", Json::from(stats.queue_us as f64 / 1e3));
                 (o, true)
             }
-            SessionEvent::Error { error } => (error_frame(id, error.kind(), &error.to_string()), true),
+            SessionEvent::Error { error } => {
+                (error_frame(id, error.kind(), &error.to_string(), error.retryable()), true)
+            }
         };
         if terminal {
             // free the id for reuse BEFORE the terminal frame is
@@ -490,8 +514,15 @@ fn pump_session(id: u64, handle: SessionHandle, wr: &SharedWriter, sessions: &Se
             return;
         }
     }
-    // event channel closed without a terminal event (scheduler shutdown)
+    // Event channel closed without a terminal event (scheduler wound
+    // down mid-stream). The protocol promises exactly one terminal
+    // frame per stream, so synthesize a typed one rather than going
+    // silent — clients key retry logic on it.
     sessions.lock().unwrap().remove(&id);
+    let _ = write_line(
+        wr,
+        &error_frame(id, "shutdown", "stream closed: scheduler shut down before completion", false),
+    );
 }
 
 /// v1 path: run the request to completion and build the aggregate
@@ -611,6 +642,30 @@ impl StreamClient {
             return Err(e.into());
         }
         Ok(ClientStream { id, rx, wr: self.wr.clone() })
+    }
+
+    /// Run a request to completion, resubmitting on retryable failures
+    /// (queue_full, overloaded, draining, engine_failed) with doubling
+    /// backoff. Non-retryable errors and successes return immediately;
+    /// after `max_retries` resubmissions the last response is returned
+    /// as-is. Transport errors (connection gone) are not retried — the
+    /// connection is owned by this client and will not come back.
+    pub fn retry_with_backoff(
+        &self,
+        req: &WireRequest,
+        max_retries: usize,
+        base_backoff: std::time::Duration,
+    ) -> Result<WireResponse> {
+        let mut backoff = base_backoff;
+        for _ in 0..max_retries {
+            let resp = self.open(req)?.wait()?;
+            if resp.error.is_none() || !resp.retryable {
+                return Ok(resp);
+            }
+            std::thread::sleep(backoff);
+            backoff = backoff.saturating_mul(2);
+        }
+        self.open(req)?.wait()
     }
 }
 
@@ -751,8 +806,35 @@ mod tests {
         let f = frame(7, "token");
         assert_eq!(f.get("id").and_then(Json::as_usize), Some(7));
         assert_eq!(f.get("event").and_then(Json::as_str), Some("token"));
-        let e = error_frame(9, RequestError::DeadlineExceeded.kind(), "late");
+        let e = error_frame(9, RequestError::DeadlineExceeded.kind(), "late", false);
         assert_eq!(e.get("kind").and_then(Json::as_str), Some("deadline_exceeded"));
         assert_eq!(e.get("event").and_then(Json::as_str), Some("error"));
+    }
+
+    #[test]
+    fn error_frames_carry_code_and_retryable() {
+        let e = error_frame(3, RequestError::QueueFull.kind(), "full", true);
+        assert_eq!(e.get("code").and_then(Json::as_str), Some("queue_full"));
+        assert_eq!(e.get("retryable").and_then(Json::as_bool), Some(true));
+        let e = error_frame(3, "invalid", "bad request", false);
+        assert_eq!(e.get("code").and_then(Json::as_str), Some("invalid"));
+        assert_eq!(e.get("retryable").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn wire_response_roundtrips_retryable_with_error() {
+        let r = WireResponse {
+            error: Some("overloaded: try later".into()),
+            retryable: true,
+            ..Default::default()
+        };
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        let r2 = WireResponse::from_json(&j);
+        assert!(r2.retryable);
+        assert_eq!(r2.error.as_deref(), Some("overloaded: try later"));
+        // success responses omit the flag and parse back as false
+        let ok = WireResponse::default();
+        let j = Json::parse(&ok.to_json().to_string()).unwrap();
+        assert!(!WireResponse::from_json(&j).retryable);
     }
 }

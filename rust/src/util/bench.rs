@@ -244,18 +244,21 @@ fn validate_decode_v2(path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// The `flux bench --smoke` CI gate for the serving file's v2 schema
-/// (DESIGN.md §11): throughput must be positive and the pool-pressure
+/// The `flux bench --smoke` CI gate for the serving file's v3 schema
+/// (DESIGN.md §11–12): throughput must be positive, the pool-pressure
 /// scenario must be present with a nonzero page high-water mark, at
 /// least one typed overloaded rejection, and verified bit-identical
-/// token streams across page sizes — CI fails if the paged pool
-/// silently stops being measured.
+/// token streams across page sizes, and the fault-recovery scenario
+/// must show a mid-stream engine kill that was supervised back to
+/// life (≥1 restart, recovered, post-restart bit-identity) — CI fails
+/// if either the paged pool or the failure domain silently stops being
+/// measured.
 fn validate_serving(path: &Path) -> Result<()> {
     let j = Json::parse(&std::fs::read_to_string(path)?)
         .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
     anyhow::ensure!(
-        j.get("schema").and_then(Json::as_str) == Some("flux-bench-serving/v2"),
-        "{path:?}: schema must be flux-bench-serving/v2"
+        j.get("schema").and_then(Json::as_str) == Some("flux-bench-serving/v3"),
+        "{path:?}: schema must be flux-bench-serving/v3"
     );
     anyhow::ensure!(
         j.get("tokens_per_s").and_then(Json::as_f64).map(|v| v > 0.0).unwrap_or(false),
@@ -275,6 +278,21 @@ fn validate_serving(path: &Path) -> Result<()> {
     anyhow::ensure!(
         p.get("bit_identical").and_then(Json::as_bool) == Some(true),
         "{path:?}: page-size sweep token streams not verified bit-identical"
+    );
+    let f = j
+        .get("fault_recovery")
+        .ok_or_else(|| anyhow::anyhow!("{path:?}: missing fault_recovery scenario"))?;
+    anyhow::ensure!(
+        f.get("recovered").and_then(Json::as_bool) == Some(true),
+        "{path:?}: fault_recovery scenario did not recover"
+    );
+    anyhow::ensure!(
+        f.get("engine_restarts").and_then(Json::as_f64).map(|v| v >= 1.0).unwrap_or(false),
+        "{path:?}: fault_recovery recorded no engine restart"
+    );
+    anyhow::ensure!(
+        f.get("bit_identical").and_then(Json::as_bool) == Some(true),
+        "{path:?}: post-restart stream not verified bit-identical"
     );
     Ok(())
 }
@@ -328,7 +346,7 @@ fn run_interference(
             prefill_chunk_budget: 1,
             ..Default::default()
         },
-    );
+    )?;
     // mixed static routing (alternate FA / SSA, sparse decode) pins the
     // per-layer modes so the monolithic and chunked runs are comparable
     // bit-for-bit AND every chunk exercises both cache layouts,
@@ -814,7 +832,7 @@ pub fn run_serving_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<(P
 /// Concurrent-streaming serving scenario over the real TCP wire: N
 /// connections × M in-flight v2 streams each, with one stream per
 /// connection cancelled mid-flight. Emits `BENCH_serving.json`
-/// (schema `flux-bench-serving/v2`) recording aggregate streamed-token
+/// (schema `flux-bench-serving/v3`) recording aggregate streamed-token
 /// throughput and cancelled-request cleanup: after the cancellations a
 /// probe request must admit and complete (proving the scheduler
 /// reclaimed the engine slots), and the coordinator's cancelled counter
@@ -823,11 +841,18 @@ pub fn run_serving_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<(P
 /// pool serves one modest request while a long-prompt arrival is
 /// rejected with a typed `overloaded` error, and the same prompts are
 /// verified to decode bit-identically under 16- and 64-token pages.
+/// The v3 schema adds the fault-recovery scenario (DESIGN.md §12): an
+/// injected kernel panic kills the engine mid-decode, the victim must
+/// fail with a typed error, and the supervisor must respawn the engine
+/// fast enough that a re-submission of a known prompt completes with a
+/// bit-identical stream; the ledger records the observed
+/// time-to-readmit alongside the supervision counters.
 pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<PathBuf> {
     use crate::config::{MetaConfig, ServingConfig};
     use crate::coordinator::{Coordinator, Request, RequestError};
     use crate::engine::{Engine, EngineHandle};
     use crate::router::{AttnMode, DecodeMode, Policy};
+    use crate::runtime::chaos::{FaultKind, FaultPlan};
     use crate::server::{serve_listener, StreamClient, WireRequest};
     use crate::util::rng::Rng;
     use crate::workload::{generate, Task};
@@ -836,7 +861,7 @@ pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<
     let meta = MetaConfig::load(artifacts)?;
     let n_layers = meta.model.n_layers;
     let engine = EngineHandle::spawn(artifacts.to_path_buf())?;
-    let coord = Coordinator::start(engine, ServingConfig::default());
+    let coord = Coordinator::start(engine, ServingConfig::default())?;
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
     {
@@ -969,7 +994,7 @@ pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<
     let pressure_engine =
         EngineHandle::spawn_with_pool(artifacts.to_path_buf(), pressure_page_tokens, pressure_budget)?;
     let total_pages = pressure_engine.pool_profile()?.total_pages;
-    let pressure_coord = Coordinator::start(pressure_engine, ServingConfig::default());
+    let pressure_coord = Coordinator::start(pressure_engine, ServingConfig::default())?;
     let modest = {
         let mut rng = Rng::seed_from_u64(24);
         generate(Task::PRe, &mut rng, seq.min(meta.prefill_buckets[0] - 8))
@@ -995,9 +1020,78 @@ pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<
         mp.pages_peak, total_pages, pressure_page_tokens, mp.requests_overloaded, sweep_page_tokens
     );
 
+    // ---- fault-recovery scenario (DESIGN.md §12): inject a kernel
+    // panic mid-decode, let the supervisor retire the victim with a
+    // typed error and respawn the engine, then measure how long until
+    // a re-submission is admitted and completes — and require its
+    // token stream to be bit-identical to the pre-fault reference ----
+    let fr_reference = {
+        let mut rng = Rng::seed_from_u64(25);
+        generate(Task::PRe, &mut rng, seq)
+    };
+    let fr_request = Request {
+        prompt: fr_reference.prompt.clone(),
+        max_new: 6,
+        ignore_eos: true,
+        ..Default::default()
+    };
+    let fr_expected = coord
+        .submit(fr_request.clone())
+        .map_err(|e| anyhow::anyhow!("fault-recovery reference request failed: {e}"))?
+        .tokens;
+    let fr_plan = FaultPlan::new().with(40, FaultKind::Panic);
+    let fr_plan_spec = fr_plan.to_string();
+    let fr_engine = EngineHandle::spawn_with_faults(artifacts.to_path_buf(), None, fr_plan)?;
+    let fr_coord = Coordinator::start(
+        fr_engine,
+        ServingConfig { engine_restart_backoff_ms: 10, ..ServingConfig::default() },
+    )?;
+    let victim = fr_coord.submit(Request {
+        prompt: fr_reference.prompt.clone(),
+        max_new: 64,
+        ignore_eos: true,
+        ..Default::default()
+    });
+    anyhow::ensure!(
+        victim.is_err(),
+        "injected panic at call 40 should have killed the victim stream"
+    );
+    let t_dead = Instant::now();
+    // the respawned engine is fault-free, so a retried submission must
+    // eventually admit and complete; retry briefly to ride out the
+    // restart backoff window
+    let mut fr_tokens: Option<Vec<u32>> = None;
+    for _ in 0..10 {
+        match fr_coord.submit(fr_request.clone()) {
+            Ok(r) => {
+                fr_tokens = Some(r.tokens);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(20)),
+        }
+    }
+    let fr_tokens = fr_tokens
+        .ok_or_else(|| anyhow::anyhow!("engine never readmitted work after injected panic"))?;
+    let time_to_readmit_ms = t_dead.elapsed().as_secs_f64() * 1e3;
+    let fr_bit_identical = fr_tokens == fr_expected;
+    anyhow::ensure!(
+        fr_bit_identical,
+        "post-restart stream diverged from pre-fault reference: {fr_tokens:?} vs {fr_expected:?}"
+    );
+    let fr_m = fr_coord.metrics.lock().unwrap().clone();
+    anyhow::ensure!(
+        fr_m.engine_restarts >= 1,
+        "supervisor recorded no engine restart after injected panic"
+    );
+    println!(
+        "fault recovery: plan [{fr_plan_spec}] killed the victim, engine respawned \
+         ({} restart(s), {} failed), readmitted in {:.1}ms, post-restart stream bit-identical",
+        fr_m.engine_restarts, fr_m.requests_failed, time_to_readmit_ms
+    );
+
     let m = coord.metrics.lock().unwrap().clone();
     let mut j = Json::obj();
-    j.set("schema", Json::from("flux-bench-serving/v2"));
+    j.set("schema", Json::from("flux-bench-serving/v3"));
     j.set("measured", Json::from(true));
     j.set("connections", Json::from(n_conns));
     j.set("streams_per_connection", Json::from(n_streams));
@@ -1018,6 +1112,18 @@ pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<
     jp.set("bit_identical", Json::from(bit_identical));
     jp.set("pressure_metrics_summary", Json::from(mp.summary()));
     j.set("pool_pressure", jp);
+    j.set("requests_failed", Json::from(m.requests_failed as usize));
+    j.set("engine_restarts", Json::from(m.engine_restarts as usize));
+    j.set("watchdog_trips", Json::from(m.watchdog_trips as usize));
+    let mut jf = Json::obj();
+    jf.set("fault_plan", Json::from(fr_plan_spec));
+    jf.set("engine_restarts", Json::from(fr_m.engine_restarts as usize));
+    jf.set("watchdog_trips", Json::from(fr_m.watchdog_trips as usize));
+    jf.set("requests_failed", Json::from(fr_m.requests_failed as usize));
+    jf.set("time_to_readmit_ms", Json::from(time_to_readmit_ms));
+    jf.set("recovered", Json::from(true));
+    jf.set("bit_identical", Json::from(fr_bit_identical));
+    j.set("fault_recovery", jf);
     let path = opts.out_dir.join("BENCH_serving.json");
     std::fs::write(&path, j.to_string())?;
     validate_serving(&path)?;
@@ -1116,50 +1222,78 @@ mod tests {
     }
 
     #[test]
-    fn serving_v2_validation_gates_on_pool_pressure_fields() {
-        let dir = std::env::temp_dir().join(format!("flux-bench-sv2-{}", std::process::id()));
+    fn serving_v3_validation_gates_on_pool_pressure_and_fault_recovery() {
+        let dir = std::env::temp_dir().join(format!("flux-bench-sv3-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
-        let old = dir.join("v1.json");
-        std::fs::write(&old, r#"{"schema": "flux-bench-serving/v1", "tokens_per_s": 10.0}"#)
+        let old = dir.join("v2.json");
+        std::fs::write(&old, r#"{"schema": "flux-bench-serving/v2", "tokens_per_s": 10.0}"#)
             .unwrap();
-        assert!(validate_serving(&old).is_err(), "v1 schema must fail the v2 gate");
+        assert!(validate_serving(&old).is_err(), "v2 schema must fail the v3 gate");
         let no_pool = dir.join("no_pool.json");
-        std::fs::write(&no_pool, r#"{"schema": "flux-bench-serving/v2", "tokens_per_s": 10.0}"#)
+        std::fs::write(&no_pool, r#"{"schema": "flux-bench-serving/v3", "tokens_per_s": 10.0}"#)
             .unwrap();
         assert!(validate_serving(&no_pool).is_err(), "missing pool_pressure must fail");
         let idle = dir.join("idle.json");
         std::fs::write(
             &idle,
-            r#"{"schema": "flux-bench-serving/v2", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v3", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 0, "overloaded_rejections": 1,
-                                  "bit_identical": true}}"#,
+                                  "bit_identical": true},
+                "fault_recovery": {"recovered": true, "engine_restarts": 1,
+                                   "bit_identical": true}}"#,
         )
         .unwrap();
         assert!(validate_serving(&idle).is_err(), "zero pages_peak must fail");
         let unrejected = dir.join("unrejected.json");
         std::fs::write(
             &unrejected,
-            r#"{"schema": "flux-bench-serving/v2", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v3", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 0,
-                                  "bit_identical": true}}"#,
+                                  "bit_identical": true},
+                "fault_recovery": {"recovered": true, "engine_restarts": 1,
+                                   "bit_identical": true}}"#,
         )
         .unwrap();
         assert!(validate_serving(&unrejected).is_err(), "no overloaded rejection must fail");
         let diverged = dir.join("diverged.json");
         std::fs::write(
             &diverged,
-            r#"{"schema": "flux-bench-serving/v2", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v3", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
-                                  "bit_identical": false}}"#,
+                                  "bit_identical": false},
+                "fault_recovery": {"recovered": true, "engine_restarts": 1,
+                                   "bit_identical": true}}"#,
         )
         .unwrap();
         assert!(validate_serving(&diverged).is_err(), "diverged page-size sweep must fail");
+        let no_fault = dir.join("no_fault.json");
+        std::fs::write(
+            &no_fault,
+            r#"{"schema": "flux-bench-serving/v3", "tokens_per_s": 10.0,
+                "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
+                                  "bit_identical": true}}"#,
+        )
+        .unwrap();
+        assert!(validate_serving(&no_fault).is_err(), "missing fault_recovery must fail");
+        let unrecovered = dir.join("unrecovered.json");
+        std::fs::write(
+            &unrecovered,
+            r#"{"schema": "flux-bench-serving/v3", "tokens_per_s": 10.0,
+                "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
+                                  "bit_identical": true},
+                "fault_recovery": {"recovered": false, "engine_restarts": 0,
+                                   "bit_identical": false}}"#,
+        )
+        .unwrap();
+        assert!(validate_serving(&unrecovered).is_err(), "unrecovered engine must fail");
         let good = dir.join("good.json");
         std::fs::write(
             &good,
-            r#"{"schema": "flux-bench-serving/v2", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v3", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
-                                  "bit_identical": true}}"#,
+                                  "bit_identical": true},
+                "fault_recovery": {"recovered": true, "engine_restarts": 1,
+                                   "time_to_readmit_ms": 30.5, "bit_identical": true}}"#,
         )
         .unwrap();
         validate_serving(&good).unwrap();

@@ -22,6 +22,8 @@ use flux_attention::util::prop::check;
 use flux_attention::util::rng::Rng;
 use flux_attention::workload::{generate, Task};
 
+mod common;
+
 const TIMEOUT: Duration = Duration::from_secs(120);
 
 fn artifacts() -> PathBuf {
@@ -227,9 +229,10 @@ fn duplicate_and_unknown_ids_fail_per_slot_without_corrupting_survivors() {
     assert_eq!(got, want, "poisoned rounds must not corrupt survivor state");
 }
 
-fn start_coordinator(cfg: ServingConfig) -> std::sync::Arc<Coordinator> {
+fn start_coordinator(cfg: ServingConfig) -> (std::sync::Arc<Coordinator>, EngineHandle) {
     let engine = EngineHandle::spawn(artifacts()).unwrap();
-    Coordinator::start(engine, cfg)
+    let coord = Coordinator::start(engine.clone(), cfg).unwrap();
+    (coord, engine)
 }
 
 /// Scheduler satellite: mid-round cancellation shrinks the next batch
@@ -239,7 +242,8 @@ fn start_coordinator(cfg: ServingConfig) -> std::sync::Arc<Coordinator> {
 /// (decode_rounds == batch-size samples).
 #[test]
 fn cancellation_shrinks_next_batch_and_frees_slot() {
-    let coord = start_coordinator(ServingConfig { max_active_requests: 2, ..Default::default() });
+    let (coord, engine) =
+        start_coordinator(ServingConfig { max_active_requests: 2, ..Default::default() });
     let mut rng = Rng::seed_from_u64(53);
     let sa = generate(Task::PRe, &mut rng, 96);
     let sb = generate(Task::Gov, &mut rng, 96);
@@ -313,6 +317,8 @@ fn cancellation_shrinks_next_batch_and_frees_slot() {
         "post-cancel rounds must shrink to the surviving request"
     );
     assert!(m.fa_group_slots > 0, "FA group occupancy must be observable");
+    drop(m);
+    common::assert_pool_drained(&engine);
 }
 
 /// Batched rounds preserve the full streaming contract: stop tokens
@@ -320,7 +326,7 @@ fn cancellation_shrinks_next_batch_and_frees_slot() {
 /// blocking API's tokens (greedy determinism through the batch path).
 #[test]
 fn batched_rounds_preserve_stop_tokens_and_stream_order() {
-    let coord = start_coordinator(ServingConfig::default());
+    let (coord, engine) = start_coordinator(ServingConfig::default());
     let mut rng = Rng::seed_from_u64(54);
     let s = generate(Task::PRe, &mut rng, 100);
     let base = coord
@@ -359,4 +365,5 @@ fn batched_rounds_preserve_stop_tokens_and_stream_order() {
         }
     }
     assert_eq!(streamed, base.tokens[..=first_idx].to_vec());
+    common::assert_pool_drained(&engine);
 }

@@ -18,6 +18,8 @@ use flux_attention::engine::{ChunkOutcome, Engine, EngineHandle, PrefillReport};
 use flux_attention::router::{AttnMode, DecodeMode, Policy};
 use flux_attention::runtime::synthetic;
 
+mod common;
+
 const TIMEOUT: Duration = Duration::from_secs(120);
 
 fn artifacts() -> PathBuf {
@@ -190,13 +192,14 @@ fn mid_prefill_cancel_frees_partial_kv() {
 fn scheduler_mid_prefill_cancel_frees_slot() {
     let engine = EngineHandle::spawn(artifacts()).unwrap();
     let coord = Coordinator::start(
-        engine,
+        engine.clone(),
         ServingConfig {
             max_active_requests: 1,
             prefill_chunk_tokens: 32,
             ..Default::default()
         },
-    );
+    )
+    .unwrap();
     // long prompt: 512 tokens = 16 chunks of 32
     let ha = coord
         .open(Request {
@@ -237,6 +240,8 @@ fn scheduler_mid_prefill_cancel_frees_slot() {
     assert_eq!(m.requests_completed, 1);
     assert!(m.prefill_chunks >= 1, "chunk calls must be counted");
     assert!(m.ttft.count() >= 1, "TTFT must land in the histogram");
+    drop(m);
+    common::assert_pool_drained(&engine);
 }
 
 /// A cancelled session queued BEHIND an in-flight long prefill (both
@@ -248,13 +253,14 @@ fn scheduler_mid_prefill_cancel_frees_slot() {
 fn cancel_behind_inflight_prefill_is_swept() {
     let engine = EngineHandle::spawn(artifacts()).unwrap();
     let coord = Coordinator::start(
-        engine,
+        engine.clone(),
         ServingConfig {
             max_active_requests: 2,
             prefill_chunk_tokens: 32,
             ..Default::default()
         },
-    );
+    )
+    .unwrap();
     let ha = coord
         .open(Request {
             prompt: prompt_of(512),
@@ -295,6 +301,8 @@ fn cancel_behind_inflight_prefill_is_swept() {
     let m = coord.metrics.lock().unwrap();
     assert_eq!(m.requests_cancelled, 1);
     assert_eq!(m.requests_completed, 1);
+    drop(m);
+    common::assert_pool_drained(&engine);
 }
 
 /// Long prompts prefill incrementally while short streams keep
@@ -310,9 +318,10 @@ fn chunked_scheduler_streams_match_monolithic_scheduler() {
     let run = |chunk_tokens: usize| -> (Vec<u32>, Vec<u32>, u64) {
         let engine = EngineHandle::spawn(artifacts()).unwrap();
         let coord = Coordinator::start(
-            engine,
+            engine.clone(),
             ServingConfig { prefill_chunk_tokens: chunk_tokens, ..Default::default() },
-        );
+        )
+        .unwrap();
         let hl = coord
             .open(Request {
                 prompt: long.clone(),
@@ -345,6 +354,7 @@ fn chunked_scheduler_streams_match_monolithic_scheduler() {
         let long_toks = drain(hl);
         let short_toks = drain(hs);
         let chunks = coord.metrics.lock().unwrap().prefill_chunks;
+        common::assert_pool_drained(&engine);
         (long_toks, short_toks, chunks)
     };
     let (mono_long, mono_short, mono_chunks) = run(0);

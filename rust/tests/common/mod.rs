@@ -1,0 +1,29 @@
+//! Shared integration-test helpers.
+
+#![allow(dead_code)]
+
+use std::time::{Duration, Instant};
+
+use flux_attention::engine::EngineHandle;
+
+/// Assert the engine's KV pool has fully drained: every page free and
+/// the free list coalesced back to one contiguous run (DESIGN.md §12).
+///
+/// Polls instead of checking once: retirement releases pages from the
+/// scheduler thread between engine rounds (cancel-on-drop in
+/// particular lands on the *next* sweep), so a just-finished test can
+/// legitimately observe a page still in flight for a few rounds.
+pub fn assert_pool_drained(engine: &EngineHandle) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut last_err;
+    loop {
+        match engine.pool_drained() {
+            Ok(()) => return,
+            Err(e) => last_err = e.to_string(),
+        }
+        if Instant::now() >= deadline {
+            panic!("kv pool failed to drain within 10s: {last_err}");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}

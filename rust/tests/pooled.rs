@@ -23,15 +23,20 @@ use flux_attention::util::rng::Rng;
 use flux_attention::workload::{generate, Task};
 use flux_attention::{prop_assert, prop_assert_eq};
 
+mod common;
+
 const TIMEOUT: Duration = Duration::from_secs(120);
 
 fn artifacts() -> PathBuf {
     synthetic::ensure_default().expect("artifact generation must not fail")
 }
 
-fn start_coordinator(cfg: ServingConfig) -> std::sync::Arc<Coordinator> {
+/// Coordinator plus a clone of its engine handle, so tests can assert
+/// the KV pool drained after the traffic they drove.
+fn start_coordinator(cfg: ServingConfig) -> (std::sync::Arc<Coordinator>, EngineHandle) {
     let engine = EngineHandle::spawn(artifacts()).unwrap();
-    Coordinator::start(engine, cfg)
+    let coord = Coordinator::start(engine.clone(), cfg).unwrap();
+    (coord, engine)
 }
 
 /// The tentpole safety net: for random mixed-mode batches (per-request
@@ -137,7 +142,7 @@ fn worst_case_over_budget_is_rejected_with_typed_overloaded() {
     let s = generate(Task::PRe, &mut rng, 96);
 
     // total-token budget: prompt + max_new can never fit 64 tokens
-    let coord = start_coordinator(ServingConfig {
+    let (coord, engine) = start_coordinator(ServingConfig {
         max_batch_total_tokens: 64,
         ..Default::default()
     });
@@ -149,7 +154,7 @@ fn worst_case_over_budget_is_rejected_with_typed_overloaded() {
     assert_eq!(err.kind(), "overloaded");
 
     // prefill-token budget: the prompt alone exceeds the round budget
-    let coord2 = start_coordinator(ServingConfig {
+    let (coord2, engine2) = start_coordinator(ServingConfig {
         max_batch_prefill_tokens: 32,
         ..Default::default()
     });
@@ -161,8 +166,8 @@ fn worst_case_over_budget_is_rejected_with_typed_overloaded() {
 
     // page-pool budget: a 16-page pool can never hold the request's
     // worst case (per-layer prefill bucket + SA ring)
-    let engine = EngineHandle::spawn_with_pool(artifacts(), 32, 512).unwrap();
-    let coord3 = Coordinator::start(engine, ServingConfig::default());
+    let engine3 = EngineHandle::spawn_with_pool(artifacts(), 32, 512).unwrap();
+    let coord3 = Coordinator::start(engine3.clone(), ServingConfig::default()).unwrap();
     let err3 = coord3
         .open(Request { prompt: s.prompt, ..Default::default() })
         .err()
@@ -173,6 +178,10 @@ fn worst_case_over_budget_is_rejected_with_typed_overloaded() {
     assert_eq!(m.requests_overloaded, 1);
     assert_eq!(m.requests_rejected, 1);
     assert!(m.summary().contains("overloaded=1"), "{}", m.summary());
+    drop(m);
+    common::assert_pool_drained(&engine);
+    common::assert_pool_drained(&engine2);
+    common::assert_pool_drained(&engine3);
 }
 
 /// A request that fits the budgets alone but not alongside the running
@@ -183,7 +192,7 @@ fn worst_case_over_budget_is_rejected_with_typed_overloaded() {
 fn over_budget_request_parks_then_completes() {
     // worst case per request: 96 prompt + 8 decode = 104 tokens; the
     // 160-token budget fits exactly one at a time
-    let coord = start_coordinator(ServingConfig {
+    let (coord, engine) = start_coordinator(ServingConfig {
         max_batch_total_tokens: 160,
         ..Default::default()
     });
@@ -215,6 +224,8 @@ fn over_budget_request_parks_then_completes() {
     let s = m.summary();
     assert!(s.contains("pages="), "{s}");
     assert!(s.contains("pages_peak="), "{s}");
+    drop(m);
+    common::assert_pool_drained(&engine);
 }
 
 /// Lifecycle satellite: `max_new == 0` is rejected with a typed
@@ -222,7 +233,7 @@ fn over_budget_request_parks_then_completes() {
 /// generated token — a zero-budget request must never reach the engine.
 #[test]
 fn zero_max_new_is_rejected_invalid_at_enqueue() {
-    let coord = start_coordinator(ServingConfig::default());
+    let (coord, engine) = start_coordinator(ServingConfig::default());
     let prompt: Vec<u32> = (1..64).collect();
     let err = coord
         .open(Request { prompt, max_new: 0, ..Default::default() })
@@ -234,6 +245,8 @@ fn zero_max_new_is_rejected_invalid_at_enqueue() {
     assert_eq!(m.requests_rejected, 1);
     assert_eq!(m.requests_completed, 0);
     assert_eq!(m.tokens_generated, 0, "a zero-budget request must never reach the engine");
+    drop(m);
+    common::assert_pool_drained(&engine);
 }
 
 /// Lifecycle satellite: a session cancelled while its prefill is in
@@ -243,7 +256,7 @@ fn zero_max_new_is_rejected_invalid_at_enqueue() {
 /// request at the next decode sweep.
 #[test]
 fn cancel_during_prefill_emits_no_prefilled() {
-    let coord = start_coordinator(ServingConfig::default());
+    let (coord, engine) = start_coordinator(ServingConfig::default());
     // the largest prefill bucket: the cancel always lands before the
     // prefill completes
     let prompt: Vec<u32> = (0..2048).map(|i| (i as u32) % 250 + 1).collect();
@@ -268,6 +281,8 @@ fn cancel_during_prefill_emits_no_prefilled() {
     assert!(!saw_output, "no Prefilled/Token may be emitted after cancellation");
     let m = coord.metrics.lock().unwrap();
     assert_eq!(m.requests_cancelled, 1);
+    drop(m);
+    common::assert_pool_drained(&engine);
 }
 
 /// Deadline variant of the same fix: a deadline that elapses during the
@@ -275,7 +290,7 @@ fn cancel_during_prefill_emits_no_prefilled() {
 /// `Prefilled` is announced.
 #[test]
 fn deadline_elapsing_during_prefill_emits_no_prefilled() {
-    let coord = start_coordinator(ServingConfig::default());
+    let (coord, engine) = start_coordinator(ServingConfig::default());
     let prompt: Vec<u32> = (0..2048).map(|i| (i as u32) % 250 + 1).collect();
     let h = coord
         .open(Request {
@@ -303,4 +318,6 @@ fn deadline_elapsing_during_prefill_emits_no_prefilled() {
     assert!(!saw_output, "no Prefilled/Token may be emitted after the deadline elapsed");
     let m = coord.metrics.lock().unwrap();
     assert_eq!(m.requests_expired, 1);
+    drop(m);
+    common::assert_pool_drained(&engine);
 }

@@ -25,30 +25,33 @@ use flux_attention::util::json::Json;
 use flux_attention::util::rng::Rng;
 use flux_attention::workload::{generate, Task};
 
+mod common;
+
 const TIMEOUT: Duration = Duration::from_secs(120);
 
 fn artifacts() -> PathBuf {
     synthetic::ensure_default().expect("artifact generation must not fail")
 }
 
-fn start_coordinator(cfg: ServingConfig) -> Arc<Coordinator> {
+fn start_coordinator(cfg: ServingConfig) -> (Arc<Coordinator>, EngineHandle) {
     let engine = EngineHandle::spawn(artifacts()).unwrap();
-    Coordinator::start(engine, cfg)
+    let coord = Coordinator::start(engine.clone(), cfg).unwrap();
+    (coord, engine)
 }
 
 /// Coordinator + TCP server on an ephemeral port.
-fn start_server() -> (Arc<Coordinator>, String) {
+fn start_server() -> (Arc<Coordinator>, String, EngineHandle) {
     let dir = artifacts();
     let n_layers = MetaConfig::load(&dir).unwrap().model.n_layers;
     let engine = EngineHandle::spawn(dir).unwrap();
-    let coord = Coordinator::start(engine, ServingConfig::default());
+    let coord = Coordinator::start(engine.clone(), ServingConfig::default()).unwrap();
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let serve_coord = coord.clone();
     std::thread::spawn(move || {
         let _ = serve_listener(serve_coord, listener, n_layers);
     });
-    (coord, addr)
+    (coord, addr, engine)
 }
 
 /// Acceptance gate: the streamed token sequence (Prefilled.first_token
@@ -57,7 +60,7 @@ fn start_server() -> (Arc<Coordinator>, String) {
 /// across the event-driven redesign.
 #[test]
 fn streamed_tokens_match_blocking_api() {
-    let coord = start_coordinator(ServingConfig::default());
+    let (coord, engine) = start_coordinator(ServingConfig::default());
     let mut rng = Rng::seed_from_u64(31);
     let s = generate(Task::PRe, &mut rng, 200);
     let req = Request {
@@ -95,6 +98,7 @@ fn streamed_tokens_match_blocking_api() {
     assert_eq!(streamed, stats.tokens, "event stream must mirror the final token list");
     assert_eq!(streamed, blocking.tokens, "streaming must preserve greedy determinism");
     assert!(stats.e2e_us >= stats.ttft_us);
+    common::assert_pool_drained(&engine);
 }
 
 /// Acceptance gate: cancelling a mid-stream session frees its engine
@@ -102,7 +106,7 @@ fn streamed_tokens_match_blocking_api() {
 /// behind the victim admits and completes only after the cancel.
 #[test]
 fn mid_stream_cancel_frees_engine_slot() {
-    let coord =
+    let (coord, engine) =
         start_coordinator(ServingConfig { max_active_requests: 1, ..Default::default() });
     let mut rng = Rng::seed_from_u64(32);
     let sa = generate(Task::PRe, &mut rng, 128);
@@ -144,11 +148,13 @@ fn mid_stream_cancel_frees_engine_slot() {
     assert_eq!(m.requests_cancelled, 1);
     assert_eq!(m.requests_completed, 1);
     assert!(m.stream_tokens.count() >= 2, "both sessions record streamed tokens");
+    drop(m);
+    common::assert_pool_drained(&engine);
 }
 
 #[test]
 fn deadline_exceeded_evicts_between_steps() {
-    let coord = start_coordinator(ServingConfig::default());
+    let (coord, engine) = start_coordinator(ServingConfig::default());
     let mut rng = Rng::seed_from_u64(33);
     // a 1024-token prompt makes prefill alone outlast a 5ms deadline,
     // so expiry is deterministic on any machine; max_new stays inside
@@ -182,7 +188,7 @@ fn deadline_exceeded_evicts_between_steps() {
     assert_eq!(resp.tokens.len(), 2);
 
     // config-level default deadline applies when the request has none
-    let coord2 = start_coordinator(ServingConfig {
+    let (coord2, engine2) = start_coordinator(ServingConfig {
         default_deadline_ms: Some(5),
         ..Default::default()
     });
@@ -195,11 +201,13 @@ fn deadline_exceeded_evicts_between_steps() {
         err2.to_string().contains("deadline exceeded"),
         "default deadline must evict: {err2}"
     );
+    common::assert_pool_drained(&engine);
+    common::assert_pool_drained(&engine2);
 }
 
 #[test]
 fn stop_tokens_terminate_generation() {
-    let coord = start_coordinator(ServingConfig::default());
+    let (coord, engine) = start_coordinator(ServingConfig::default());
     let mut rng = Rng::seed_from_u64(35);
     let s = generate(Task::PRe, &mut rng, 128);
     let base = coord
@@ -225,13 +233,14 @@ fn stop_tokens_terminate_generation() {
         base.tokens[..=first_idx].to_vec(),
         "generation must stop at the stop token (inclusive)"
     );
+    common::assert_pool_drained(&engine);
 }
 
 #[test]
 fn admission_rejects_invalid_requests_with_typed_errors() {
     let dir = artifacts();
     let max = *MetaConfig::load(&dir).unwrap().prefill_buckets.last().unwrap();
-    let coord = start_coordinator(ServingConfig::default());
+    let (coord, engine) = start_coordinator(ServingConfig::default());
 
     // over-long prompt: typed coordinator error, not an engine failure
     match coord.open(Request { prompt: vec![7; max + 1], ..Default::default() }) {
@@ -255,6 +264,7 @@ fn admission_rejects_invalid_requests_with_typed_errors() {
     // all three were counted as rejections and never reached the engine
     assert_eq!(coord.metrics.lock().unwrap().requests_rejected, 3);
     assert_eq!(coord.metrics.lock().unwrap().requests_completed, 0);
+    common::assert_pool_drained(&engine);
 }
 
 fn send_recv(wr: &mut TcpStream, rd: &mut BufReader<TcpStream>, msg: &str) -> Json {
@@ -271,7 +281,7 @@ fn send_recv(wr: &mut TcpStream, rd: &mut BufReader<TcpStream>, msg: &str) -> Js
 /// same connection, and the connection keeps serving afterwards.
 #[test]
 fn server_survives_malformed_inputs() {
-    let (_coord, addr) = start_server();
+    let (_coord, addr, engine) = start_server();
     let sock = TcpStream::connect(&addr).unwrap();
     let mut wr = sock.try_clone().unwrap();
     let mut rd = BufReader::new(sock);
@@ -306,6 +316,7 @@ fn server_survives_malformed_inputs() {
     assert!(r.get("error").is_some_and(|e| e == &Json::Null), "unexpected error: {r}");
     assert!(!r.get("tokens").and_then(Json::as_arr).unwrap().is_empty());
     assert!(r.get("queue_ms").and_then(Json::as_f64).is_some(), "queue_ms must be on the wire");
+    common::assert_pool_drained(&engine);
 }
 
 /// Satellite: one connection carries a v2 stream and a v1 single-shot
@@ -313,7 +324,7 @@ fn server_survives_malformed_inputs() {
 /// token order matches its own done frame.
 #[test]
 fn mixed_v1_v2_connection_roundtrip() {
-    let (_coord, addr) = start_server();
+    let (_coord, addr, engine) = start_server();
     let mut rng = Rng::seed_from_u64(36);
     let sa = generate(Task::PRe, &mut rng, 100);
     let sb = generate(Task::Gov, &mut rng, 100);
@@ -379,6 +390,7 @@ fn mixed_v1_v2_connection_roundtrip() {
         .collect();
     assert_eq!(done_tokens.len(), 4);
     assert_eq!(v2_streamed, done_tokens, "frame order must equal the final sequence");
+    common::assert_pool_drained(&engine);
 }
 
 /// Wire-level cancellation through the multiplexing client: the victim
@@ -387,7 +399,7 @@ fn mixed_v1_v2_connection_roundtrip() {
 /// reclaim.
 #[test]
 fn wire_cancel_aborts_stream_and_frees_slot() {
-    let (coord, addr) = start_server();
+    let (coord, addr, engine) = start_server();
     let mut rng = Rng::seed_from_u64(37);
     let sv = generate(Task::PRe, &mut rng, 100);
     let ss = generate(Task::Gov, &mut rng, 100);
@@ -425,6 +437,8 @@ fn wire_cancel_aborts_stream_and_frees_slot() {
     let m = coord.metrics.lock().unwrap();
     assert!(m.requests_cancelled >= 1, "coordinator must count the wire cancel");
     assert!(m.requests_completed >= 1);
+    drop(m);
+    common::assert_pool_drained(&engine);
 }
 
 /// The streaming serving bench (the CI smoke gate's third artifact)
@@ -443,7 +457,7 @@ fn streaming_bench_smoke_writes_valid_json() {
     };
     let p = run_streaming_bench(&dir, &opts).unwrap();
     let j = Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
-    assert_eq!(j.get("schema").and_then(Json::as_str), Some("flux-bench-serving/v2"));
+    assert_eq!(j.get("schema").and_then(Json::as_str), Some("flux-bench-serving/v3"));
     assert_eq!(j.get("measured").and_then(Json::as_bool), Some(true));
     assert_eq!(j.get("cancelled_cleanup_ok").and_then(Json::as_bool), Some(true));
     assert!(j.get("tokens_per_s").and_then(Json::as_f64).unwrap() > 0.0);
@@ -457,5 +471,13 @@ fn streaming_bench_smoke_writes_valid_json() {
     assert!(pp.get("overloaded_rejections").and_then(Json::as_f64).unwrap() >= 1.0);
     assert_eq!(pp.get("bit_identical").and_then(Json::as_bool), Some(true));
     assert!(j.get("metrics_summary").and_then(Json::as_str).unwrap().contains("pages="));
+    // the fault-recovery scenario (DESIGN.md §12) must be measured: a
+    // supervised restart happened and the post-restart stream matched
+    // the pre-fault reference
+    let fr = j.get("fault_recovery").expect("fault_recovery scenario missing");
+    assert_eq!(fr.get("recovered").and_then(Json::as_bool), Some(true));
+    assert!(fr.get("engine_restarts").and_then(Json::as_f64).unwrap() >= 1.0);
+    assert_eq!(fr.get("bit_identical").and_then(Json::as_bool), Some(true));
+    assert!(fr.get("time_to_readmit_ms").and_then(Json::as_f64).unwrap() >= 0.0);
     let _ = std::fs::remove_dir_all(&out);
 }
