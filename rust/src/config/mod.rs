@@ -238,6 +238,16 @@ pub struct ServingConfig {
     /// base backoff before the first restart attempt, doubled per
     /// subsequent attempt.
     pub engine_restart_backoff_ms: u64,
+    /// cross-request prefix cache (DESIGN.md §13): reuse the KV of
+    /// shared prompt prefixes (system prompts, few-shot preambles)
+    /// across requests, pinning the cached per-layer route. Off by
+    /// default — a cache hit pins the stored route instead of
+    /// re-running the router on the full prompt.
+    pub prefix_cache: bool,
+    /// cap on KV-pool pages the prefix index may retain; `None` =
+    /// half the pool. LRU eviction reclaims unreferenced entries under
+    /// pool pressure either way.
+    pub prefix_cache_pages: Option<usize>,
 }
 
 impl Default for ServingConfig {
@@ -255,6 +265,8 @@ impl Default for ServingConfig {
             engine_round_timeout_ms: None,
             engine_restart_max: 2,
             engine_restart_backoff_ms: 50,
+            prefix_cache: false,
+            prefix_cache_pages: None,
         }
     }
 }

@@ -208,7 +208,16 @@ pub enum SessionEvent {
     /// Accepted into the admission queue.
     Queued,
     /// Prefill finished; the first token is available (the TTFT point).
-    Prefilled { first_token: u32, omsr: f64, modes: Vec<String>, ttft_us: u64, queue_us: u64 },
+    /// `cached_prefix_tokens` is how much of the prompt was reused from
+    /// the cross-request prefix cache (0 on a cold run, DESIGN.md §13).
+    Prefilled {
+        first_token: u32,
+        omsr: f64,
+        modes: Vec<String>,
+        ttft_us: u64,
+        queue_us: u64,
+        cached_prefix_tokens: usize,
+    },
     /// One decoded token.
     Token { tok: u32, step_us: u64 },
     /// Generation finished (EOS, stop token, or `max_new`).
@@ -445,6 +454,11 @@ impl Coordinator {
         let queue_depth = Arc::new(AtomicUsize::new(0));
         let max_prompt_len = engine.max_prompt_len()?;
         let pool_profile = engine.pool_profile().ok();
+        if cfg.prefix_cache {
+            // the engine boots with the prefix cache disabled; turn it
+            // on before any request can be admitted (DESIGN.md §13)
+            engine.set_prefix_cache(true, cfg.prefix_cache_pages)?;
+        }
         let shared = Arc::new(SchedulerShared {
             draining: AtomicBool::new(false),
             done: Mutex::new(false),
@@ -661,6 +675,27 @@ fn scheduler_loop(
                 return;
             }
         } else {
+            // a parked head-of-line request that died while waiting
+            // (cancelled, or deadline elapsed) must not sit holding the
+            // admission head until a slot frees up: retire it now with
+            // the same counters the open-path rejection uses
+            if let Some(p) = parked.take() {
+                if p.cancel.is_cancelled() {
+                    let mut m = metrics.lock().unwrap();
+                    m.requests_cancelled += 1;
+                    m.stream_tokens.record_value(0);
+                    drop(m);
+                    p.sink.error(RequestError::Cancelled);
+                } else if p.deadline.is_some_and(|d| Instant::now() >= d) {
+                    let mut m = metrics.lock().unwrap();
+                    m.requests_expired += 1;
+                    m.stream_tokens.record_value(0);
+                    drop(m);
+                    p.sink.error(RequestError::DeadlineExceeded);
+                } else {
+                    parked = Some(p);
+                }
+            }
             // --- admission (DESIGN.md §11): drain arrivals into the
             // prefill pipeline while their worst case fits the
             // token/page budgets. Opening a job validates and allocates
@@ -794,6 +829,8 @@ fn scheduler_loop(
                         fa_group_slots,
                         sa_group_slots,
                         pool_pages,
+                        prefix_evictions,
+                        prefix_retained_pages,
                         ..
                     } = reply;
                     // one metrics lock per round (not per token), with
@@ -811,6 +848,11 @@ fn scheduler_loop(
                         }
                         m.note_kv_transfer_totals(kv_transfer.0, kv_transfer.1);
                         m.note_pool_pages(pool_pages.0, pool_pages.1, pool_pages.2);
+                        // gauges piggybacked on the decode reply, like
+                        // the pool pages (cumulative / current values,
+                        // not per-round deltas)
+                        m.prefix_evictions = prefix_evictions;
+                        m.prefix_retained_pages = prefix_retained_pages;
                     }
                     let mut kept = VecDeque::with_capacity(active.len());
                     for ((mut a, res), &us) in active.drain(..).zip(tokens).zip(&step_us) {
@@ -871,8 +913,15 @@ fn scheduler_loop(
                 }
                 Ok(ChunkOutcome::Done { id, report }) => {
                     metrics.lock().unwrap().prefill_chunks += 1;
-                    if let Some(a) = finish_prefill(&engine, &metrics, &mut budgets, pf, id, report)
-                    {
+                    if let Some(a) = finish_prefill(
+                        &engine,
+                        &metrics,
+                        &mut budgets,
+                        pf,
+                        id,
+                        report,
+                        cfg.prefix_cache,
+                    ) {
                         active.push_back(a);
                     }
                 }
@@ -969,6 +1018,11 @@ fn supervise_engine_failure(
         match engine.respawn() {
             Ok(new_generation) => {
                 metrics.lock().unwrap().engine_restarts += 1;
+                if cfg.prefix_cache {
+                    // a fresh engine lifetime boots with the prefix
+                    // cache disabled (and an empty index) — re-arm it
+                    let _ = engine.set_prefix_cache(true, cfg.prefix_cache_pages);
+                }
                 eprintln!(
                     "flux-scheduler: engine restarted (generation {new_generation}, \
                      attempt {attempt}/{})",
@@ -1217,6 +1271,7 @@ fn finish_prefill(
     pf: Prefilling,
     engine_id: u64,
     report: PrefillReport,
+    prefix_cache: bool,
 ) -> Option<Active> {
     let Prefilling {
         prompt_len,
@@ -1247,6 +1302,14 @@ fn finish_prefill(
         m.ttft.record_us(ttft_us);
         m.prompt_tokens += report.prompt_len as u64;
         m.record_omsr(&policy_label, report.omsr);
+        if prefix_cache {
+            if report.cached_prefix_tokens > 0 {
+                m.prefix_hits += 1;
+                m.prefix_tokens_reused += report.cached_prefix_tokens as u64;
+            } else {
+                m.prefix_misses += 1;
+            }
+        }
     }
     let modes: Vec<String> = report.modes.iter().map(|m| m.name().into()).collect();
     let a = Active {
@@ -1285,6 +1348,7 @@ fn finish_prefill(
         modes,
         ttft_us,
         queue_us,
+        cached_prefix_tokens: report.cached_prefix_tokens,
     });
     if alive {
         Some(a)

@@ -31,6 +31,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::MetaConfig;
+use crate::kvcache::prefix::{context_key, PrefixCache, PrefixStats, RingSnap};
 use crate::kvcache::{FullCache, KvPool, LayerCache, SparseCache};
 use crate::model::{argmax, ModelWeights};
 use crate::router::{pool_descriptor, AttnMode, DecodeMode, Policy, RouterNet};
@@ -51,6 +52,10 @@ pub struct PrefillReport {
     /// Engine calls the prefill took: 1 for a monolithic prefill, the
     /// chunk count for a chunked one (DESIGN.md §10).
     pub chunks: usize,
+    /// Prompt tokens reused from the cross-request prefix cache
+    /// (DESIGN.md §13) — 0 on a cold run; a hit's chunks covered only
+    /// the remaining suffix.
+    pub cached_prefix_tokens: usize,
 }
 
 /// One in-flight chunked prefill job (DESIGN.md §10): the prompt is
@@ -80,6 +85,18 @@ struct PrefillJob {
     router_us: u64,
     compute_us: u64,
     chunks_done: usize,
+    /// clamp chunks so a boundary lands exactly here, then snapshot
+    /// the rings (prefix-cache insertion point for sparse decode)
+    snap_at: Option<usize>,
+    /// page-aligned prefix length to insert into the cache on
+    /// completion (0 = nothing to insert)
+    insert_upto: usize,
+    /// ring snapshots captured at `insert_upto`, handed to the index
+    ring_snaps: Vec<Option<RingSnap>>,
+    /// pinned prefix-cache endpoint this job was primed from
+    prefix_node: Option<usize>,
+    /// tokens reused from the cache (0 on a cold run)
+    cached_prefix: usize,
 }
 
 /// Result of one [`Engine::prefill_chunk`] call.
@@ -134,6 +151,11 @@ pub struct DecodeBatchReport {
     /// `(pages_allocated, pages_free, pages_peak)` — piggybacked so the
     /// scheduler's metrics fold needs no extra engine round-trip.
     pub pool_pages: (u64, u64, u64),
+    /// Cumulative prefix-cache evictions as of this round (piggybacked
+    /// like the pool gauges; 0 with the cache disabled).
+    pub prefix_evictions: u64,
+    /// Pool pages currently retained by the prefix index.
+    pub prefix_retained_pages: u64,
 }
 
 /// Admission-relevant pool + model geometry, fetched once by the
@@ -190,6 +212,9 @@ pub struct Engine {
     cfg: MetaConfig,
     /// the paged KV block pool every cache draws from (DESIGN.md §11)
     pool: KvPool,
+    /// cross-request radix prefix cache over the pool (DESIGN.md §13);
+    /// starts disabled until the coordinator configures it
+    prefix: PrefixCache,
     requests: HashMap<u64, RequestState>,
     /// in-flight chunked prefill jobs (DESIGN.md §10), keyed separately
     /// from live requests — a job becomes a request on its final chunk
@@ -308,12 +333,19 @@ impl Engine {
             cfg.model.head_dim,
             budget_tokens,
         );
+        let prefix = PrefixCache::new(
+            page_tokens,
+            cfg.model.n_layers,
+            cfg.model.n_heads,
+            cfg.model.head_dim,
+        );
         Ok(Self {
             rt,
             weights,
             routers,
             cfg,
             pool,
+            prefix,
             requests: HashMap::new(),
             prefill_jobs: HashMap::new(),
             next_id: 0,
@@ -349,6 +381,32 @@ impl Engine {
             self.pool.pages_free() as u64,
             self.pool.pages_peak() as u64,
         )
+    }
+
+    /// Enable/disable the cross-request prefix cache (DESIGN.md §13).
+    /// Reconfiguring clears the index; `capacity_pages` defaults to
+    /// half the pool so cached prefixes can never starve admissions.
+    pub fn set_prefix_cache(&mut self, enabled: bool, capacity_pages: Option<usize>) {
+        let cap = capacity_pages.unwrap_or_else(|| (self.pool.total_pages() / 2).max(1));
+        self.prefix.configure(&mut self.pool, enabled, cap);
+    }
+
+    /// Drop every cached prefix: unpinned entries free their pages now,
+    /// pinned ones on the owning job's release.
+    pub fn prefix_clear(&mut self) {
+        self.prefix.clear(&mut self.pool);
+    }
+
+    /// Prefix-cache counter snapshot (hits, misses, tokens reused,
+    /// evictions, inserts, live nodes, retained pages).
+    pub fn prefix_stats(&self) -> PrefixStats {
+        self.prefix.stats()
+    }
+
+    /// Pool pages legitimately retained by the prefix index — the
+    /// tolerance `drained()` checks run with (retained ≠ leaked).
+    pub fn prefix_retained_pages(&self) -> usize {
+        self.prefix.retained_pages()
     }
 
     /// Toggle the zero-copy KV staging path (the bench harness compares
@@ -545,6 +603,7 @@ impl Engine {
                 first_token,
                 kv_bytes,
                 chunks: 1,
+                cached_prefix_tokens: 0,
             },
         ))
     }
@@ -634,10 +693,15 @@ impl Engine {
         // staging capacity == the monolithic bucket, so completed FA
         // caches are bit-identical (capacity included) to monolithic
         // ones; a partial allocation failure frees what was taken
-        let staging = if chunked_backend {
+        let mut staging = if chunked_backend {
             let mut v: Vec<FullCache> = Vec::with_capacity(n_layers);
             for _ in 0..n_layers {
-                match FullCache::new(&mut self.pool, nh, hd, total_bucket) {
+                let need = self.pool.pages_for(nh * total_bucket * hd);
+                let mut alloc = FullCache::new(&mut self.pool, nh, hd, total_bucket);
+                if alloc.is_err() && self.prefix.evict_for(&mut self.pool, need) {
+                    alloc = FullCache::new(&mut self.pool, nh, hd, total_bucket);
+                }
+                match alloc {
                     Ok(c) => v.push(c),
                     Err(e) => {
                         for c in v {
@@ -651,6 +715,94 @@ impl Engine {
         } else {
             Vec::new()
         };
+
+        // --- cross-request prefix reuse (DESIGN.md §13): the longest
+        // cached match primes staging with a pool-internal copy and
+        // pins the stored route, so chunked compute starts after the
+        // shared prefix ---
+        let mut consumed = 0usize;
+        let mut modes: Vec<AttnMode> = Vec::new();
+        let mut rings: Vec<Option<SparseCache>> = Vec::new();
+        let mut prefix_node: Option<usize> = None;
+        let mut cached_prefix = 0usize;
+        let mut snap_at: Option<usize> = None;
+        let mut insert_upto = 0usize;
+        if chunked_backend && self.prefix.enabled() {
+            let key = context_key(policy, router_name);
+            if let Some(hit) = self.prefix.acquire(&key, tokens) {
+                let sink = self.cfg.sparsity.sink_size;
+                let local = self.cfg.sparsity.local_size;
+                let sa_buf = self.cfg.sa_buf;
+                let mut prime_err: Option<anyhow::Error> = None;
+                for (layer, &mode) in hit.route.iter().enumerate() {
+                    for sg in &hit.segs[layer] {
+                        staging[layer].prime_from_pool(
+                            &mut self.pool,
+                            sg.block,
+                            sg.cap,
+                            sg.row_off,
+                            sg.rows,
+                        );
+                    }
+                    if hit.decode_mode == DecodeMode::Sparse && mode != AttnMode::Fa {
+                        let need = self.pool.pages_for(nh * sa_buf * hd);
+                        let mut ring = SparseCache::new(&mut self.pool, nh, hd, sink, local, sa_buf);
+                        if ring.is_err() && self.prefix.evict_for(&mut self.pool, need) {
+                            ring = SparseCache::new(&mut self.pool, nh, hd, sink, local, sa_buf);
+                        }
+                        match ring {
+                            Ok(mut r) => {
+                                let snap =
+                                    hit.rings[layer].as_ref().expect("usable endpoint has ring");
+                                r.restore_snapshot(
+                                    &mut self.pool,
+                                    snap.block,
+                                    snap.sink_len,
+                                    snap.total_seen,
+                                );
+                                rings.push(Some(r));
+                            }
+                            Err(e) => {
+                                prime_err = Some(e);
+                                break;
+                            }
+                        }
+                    } else {
+                        rings.push(None);
+                    }
+                }
+                if let Some(e) = prime_err {
+                    // staging already carries primed rows, so falling
+                    // back to a cold run in place is not possible —
+                    // free everything and surface the typed pool error
+                    for r in rings.into_iter().flatten() {
+                        r.free(&mut self.pool);
+                    }
+                    for c in staging {
+                        c.free(&mut self.pool);
+                    }
+                    self.prefix.unpin(&mut self.pool, hit.node);
+                    return Err(e);
+                }
+                consumed = hit.depth;
+                cached_prefix = hit.depth;
+                modes = hit.route.clone();
+                prefix_node = Some(hit.node);
+                // plan the page-aligned extension of the cached entry:
+                // ring-routed requests must snapshot at the boundary,
+                // ring-free ones can insert straight from staging
+                let page = self.prefix.page_tokens();
+                let aligned = (tokens.len() / page) * page;
+                if aligned > hit.depth {
+                    if rings.iter().any(Option::is_some) {
+                        snap_at = Some(aligned);
+                    } else {
+                        insert_upto = aligned;
+                    }
+                }
+            }
+        }
+
         let id = self.next_id;
         self.next_id += 1;
         self.prefill_jobs.insert(
@@ -662,13 +814,18 @@ impl Engine {
                 chunk_tokens,
                 total_bucket,
                 decode_mode: policy.decode_mode(),
-                consumed: 0,
-                modes: Vec::new(),
+                consumed,
+                modes,
                 staging,
-                rings: Vec::new(),
+                rings,
                 router_us: 0,
                 compute_us: 0,
                 chunks_done: 0,
+                snap_at,
+                insert_upto,
+                ring_snaps: Vec::new(),
+                prefix_node,
+                cached_prefix,
             },
         );
         Ok(id)
@@ -695,13 +852,20 @@ impl Engine {
         }
     }
 
-    /// Return a dropped job's staging + ring pages to the pool.
+    /// Return a dropped job's staging + ring pages (and any captured
+    /// ring snapshots) to the pool, and release its prefix-cache pin.
     fn free_job(&mut self, j: PrefillJob) {
         for c in j.staging {
             c.free(&mut self.pool);
         }
         for r in j.rings.into_iter().flatten() {
             r.free(&mut self.pool);
+        }
+        for s in j.ring_snaps.into_iter().flatten() {
+            self.pool.free(s.block);
+        }
+        if let Some(nid) = j.prefix_node {
+            self.prefix.unpin(&mut self.pool, nid);
         }
     }
 
@@ -731,14 +895,24 @@ impl Engine {
         let len = j.tokens.len();
         anyhow::ensure!(j.consumed < len, "prefill job {job} already complete");
         let base = j.consumed;
-        let n = j.chunk_tokens.min(len - base);
+        let mut n = j.chunk_tokens.min(len - base);
+        // clamp so a chunk boundary lands exactly on the planned ring-
+        // snapshot point; never applies to a cold first chunk (snap_at
+        // is planned only after it), so the router's input is untouched
+        if let Some(p) = j.snap_at {
+            if base < p {
+                n = n.min(p - base);
+            }
+        }
         // smallest covering bucket for THIS chunk, not the request-level
         // maximum — the bucket-padding-waste fix
         let chunk_bucket = self
             .cfg
             .prefill_bucket(n)
             .ok_or_else(|| anyhow::anyhow!("chunk of {n} tokens exceeds max bucket"))?;
-        let first = base == 0;
+        // warm (prefix-hit) jobs arrive with the cached route pinned, so
+        // the router must not re-run even though base > 0 on chunk one
+        let first = j.modes.is_empty();
         let meta = [base as i32, n as i32, j.total_bucket as i32];
         let last = base + n == len;
 
@@ -764,11 +938,17 @@ impl Engine {
             if first {
                 j.modes.push(mode);
                 let sparse = j.decode_mode == DecodeMode::Sparse && mode != AttnMode::Fa;
-                j.rings.push(if sparse {
-                    Some(SparseCache::new(&mut self.pool, nh, hd, sink, local, sa_buf)?)
+                let ring = if sparse {
+                    let need = self.pool.pages_for(nh * sa_buf * hd);
+                    let mut r = SparseCache::new(&mut self.pool, nh, hd, sink, local, sa_buf);
+                    if r.is_err() && self.prefix.evict_for(&mut self.pool, need) {
+                        r = SparseCache::new(&mut self.pool, nh, hd, sink, local, sa_buf);
+                    }
+                    Some(r?)
                 } else {
                     None
-                });
+                };
+                j.rings.push(ring);
             }
 
             // --- chunk execution over the staged prefix (zero-copy) ---
@@ -805,16 +985,93 @@ impl Engine {
                 ring.append_prefill_chunk(&mut self.pool, &k, &v, n);
             }
         }
+        // --- prefix-cache insertion planning (DESIGN.md §13): a cold
+        // run can only decide after the first chunk, once the route
+        // (and hence ring-need) is known. Ring-routed prefixes need the
+        // ring state snapshotted exactly at the page boundary, which is
+        // impossible if the first chunk already ran past it. ---
+        if first && self.prefix.enabled() {
+            let page = self.prefix.page_tokens();
+            let aligned = (len / page) * page;
+            if aligned > 0 {
+                if j.rings.iter().any(Option::is_some) {
+                    if aligned >= base + n {
+                        j.snap_at = Some(aligned);
+                    }
+                } else {
+                    j.insert_upto = aligned;
+                }
+            }
+        }
         j.consumed += n;
         j.chunks_done += 1;
         j.compute_us += t_start.elapsed().as_micros() as u64;
+        if j.snap_at == Some(j.consumed) {
+            // boundary reached: capture every ring so the cached entry
+            // can rebuild sparse decode state on a future hit
+            j.snap_at = None;
+            let mut snaps: Vec<Option<RingSnap>> = Vec::with_capacity(n_layers);
+            let mut ok = true;
+            let need = self.pool.pages_for(nh * sa_buf * hd);
+            for r in &j.rings {
+                match r {
+                    Some(c) => {
+                        let mut snap = c.snapshot(&mut self.pool);
+                        if snap.is_err() && self.prefix.evict_for(&mut self.pool, need) {
+                            snap = c.snapshot(&mut self.pool);
+                        }
+                        match snap {
+                            Ok((block, sink_len, total_seen)) => {
+                                snaps.push(Some(RingSnap { block, sink_len, total_seen }));
+                            }
+                            Err(_) => {
+                                ok = false;
+                                break;
+                            }
+                        }
+                    }
+                    None => snaps.push(None),
+                }
+            }
+            if ok {
+                j.ring_snaps = snaps;
+                j.insert_upto = j.consumed;
+            } else {
+                // snapshot starved for pages: skip insertion, the
+                // request itself is unaffected
+                for s in snaps.into_iter().flatten() {
+                    self.pool.free(s.block);
+                }
+            }
+        }
         if !last {
             return Ok(ChunkOutcome::More { consumed: j.consumed, total_tokens: len });
         }
 
         // --- final chunk: first token + promotion to a live request ---
         let first_token = self.lm_head_last_row(&hidden, n)?;
-        let j = self.prefill_jobs.remove(&job).expect("job present");
+        let mut j = self.prefill_jobs.remove(&job).expect("job present");
+        // retire the completed prompt into the prefix index (page-
+        // aligned), then release the pin taken at admission
+        if self.prefix.enabled() && j.insert_upto > 0 {
+            let key = context_key(&j.policy, &j.router_name);
+            let snaps = std::mem::take(&mut j.ring_snaps);
+            self.prefix.insert(
+                &mut self.pool,
+                &key,
+                &j.tokens[..j.insert_upto],
+                &j.modes,
+                j.decode_mode,
+                &j.staging,
+                snaps,
+            );
+        }
+        for s in std::mem::take(&mut j.ring_snaps).into_iter().flatten() {
+            self.pool.free(s.block);
+        }
+        if let Some(nid) = j.prefix_node.take() {
+            self.prefix.unpin(&mut self.pool, nid);
+        }
         let modes = j.modes;
         let mut caches: Vec<LayerCache> = Vec::with_capacity(j.staging.len());
         for (full, ring) in j.staging.into_iter().zip(j.rings) {
@@ -842,6 +1099,7 @@ impl Engine {
                 first_token,
                 kv_bytes,
                 chunks: j.chunks_done,
+                cached_prefix_tokens: j.cached_prefix,
             },
         })
     }
@@ -896,7 +1154,18 @@ impl Engine {
             let cache = &mut state.caches[layer];
             match cache {
                 LayerCache::Full(c) => {
-                    c.append(&mut self.pool, &k_new.data, &v_new.data)?;
+                    let mut appended = c.append(&mut self.pool, &k_new.data, &v_new.data);
+                    if appended.is_err() {
+                        // cache growth starved for pages: reclaim cold
+                        // prefix-cache entries and retry once before
+                        // surfacing the typed pool error
+                        let need = self
+                            .pool
+                            .pages_for(2 * cfg.model.n_heads * c.capacity().max(1) * cfg.model.head_dim);
+                        self.prefix.evict_for(&mut self.pool, need);
+                        appended = c.append(&mut self.pool, &k_new.data, &v_new.data);
+                    }
+                    appended?;
                     let bucket = cfg
                         .decode_attend_bucket(c.len(), c.capacity())
                         .ok_or_else(|| anyhow::anyhow!("KV overflow at {}", c.len()))?;
@@ -1064,6 +1333,8 @@ impl Engine {
             sa_group_slots,
             batched: false,
             pool_pages: self.pool_gauges(),
+            prefix_evictions: self.prefix.stats().evictions,
+            prefix_retained_pages: self.prefix.retained_pages() as u64,
         }
     }
 
@@ -1155,12 +1426,22 @@ impl Engine {
                 let k_new = &k_all.data[row * hd..(row + 1) * hd];
                 let v_new = &v_all.data[row * hd..(row + 1) * hd];
                 match &mut slots[si].2.caches[layer] {
-                    LayerCache::Full(c) => match c.append(&mut self.pool, k_new, v_new) {
-                        // a slot whose cache growth outruns the pool
-                        // fails alone — its batchmates keep decoding
-                        Ok(()) => fa_rows.push(row),
-                        Err(e) => failed[si] = Some(e.to_string()),
-                    },
+                    LayerCache::Full(c) => {
+                        let mut res = c.append(&mut self.pool, k_new, v_new);
+                        if res.is_err() {
+                            // growth starved for pages: reclaim cold
+                            // prefix-cache entries and retry once
+                            let need = self.pool.pages_for(2 * nh * c.capacity().max(1) * dd);
+                            self.prefix.evict_for(&mut self.pool, need);
+                            res = c.append(&mut self.pool, k_new, v_new);
+                        }
+                        match res {
+                            // a slot whose cache growth outruns the pool
+                            // fails alone — its batchmates keep decoding
+                            Ok(()) => fa_rows.push(row),
+                            Err(e) => failed[si] = Some(e.to_string()),
+                        }
+                    }
                     LayerCache::Sparse(c) => {
                         c.append(&mut self.pool, k_new, v_new);
                         sa_rows.push(row);
@@ -1351,6 +1632,8 @@ impl Engine {
             sa_group_slots,
             batched: true,
             pool_pages: self.pool_gauges(),
+            prefix_evictions: self.prefix.stats().evictions,
+            prefix_retained_pages: self.prefix.retained_pages() as u64,
         }
     }
 
@@ -1529,11 +1812,26 @@ pub enum EngineJob {
     Release {
         id: u64,
     },
-    /// KV pool drain check (tests): `Ok` when every page is free and
-    /// the free list has coalesced back to one run. Queued FIFO like
-    /// every other job, so it observes all previously-sent `Release`s.
+    /// KV pool drain check (tests): `Ok` when every page is free apart
+    /// from those legitimately retained by the prefix index, and the
+    /// free list has coalesced. Queued FIFO like every other job, so it
+    /// observes all previously-sent `Release`s.
     PoolDrained {
         reply: std::sync::mpsc::Sender<std::result::Result<(), String>>,
+    },
+    /// Enable/disable the cross-request prefix cache (DESIGN.md §13).
+    SetPrefixCache {
+        enabled: bool,
+        capacity_pages: Option<usize>,
+        reply: std::sync::mpsc::Sender<()>,
+    },
+    /// Drop every cached prefix (pinned entries free on last unpin).
+    PrefixClear {
+        reply: std::sync::mpsc::Sender<()>,
+    },
+    /// Prefix-cache counter snapshot.
+    PrefixStats {
+        reply: std::sync::mpsc::Sender<PrefixStats>,
     },
     Shutdown,
 }
@@ -1881,6 +2179,32 @@ impl EngineHandle {
         let _ = self.link().0.send(EngineJob::Release { id });
     }
 
+    /// Enable/disable the cross-request prefix cache (DESIGN.md §13).
+    /// Reconfiguring clears the index; `capacity_pages` defaults to
+    /// half the pool.
+    pub fn set_prefix_cache(&self, enabled: bool, capacity_pages: Option<usize>) -> Result<()> {
+        let (tx, failure, generation) = self.link();
+        let (reply, rx) = std::sync::mpsc::channel();
+        let sent = tx.send(EngineJob::SetPrefixCache { enabled, capacity_pages, reply });
+        self.roundtrip(rx, sent, failure, generation, None)
+    }
+
+    /// Drop every cached prefix (pinned entries free on last unpin).
+    pub fn prefix_clear(&self) -> Result<()> {
+        let (tx, failure, generation) = self.link();
+        let (reply, rx) = std::sync::mpsc::channel();
+        let sent = tx.send(EngineJob::PrefixClear { reply });
+        self.roundtrip(rx, sent, failure, generation, None)
+    }
+
+    /// Prefix-cache counter snapshot.
+    pub fn prefix_stats(&self) -> Result<PrefixStats> {
+        let (tx, failure, generation) = self.link();
+        let (reply, rx) = std::sync::mpsc::channel();
+        let sent = tx.send(EngineJob::PrefixStats { reply });
+        self.roundtrip(rx, sent, failure, generation, None)
+    }
+
     pub fn shutdown(&self) {
         let _ = self.link().0.send(EngineJob::Shutdown);
     }
@@ -1919,7 +2243,19 @@ fn run_engine_job(engine: &mut Engine, job: EngineJob) -> bool {
             engine.release(id);
         }
         EngineJob::PoolDrained { reply } => {
-            let _ = reply.send(engine.pool().drained());
+            let retained = engine.prefix_retained_pages();
+            let _ = reply.send(engine.pool().drained_with_retained(retained));
+        }
+        EngineJob::SetPrefixCache { enabled, capacity_pages, reply } => {
+            engine.set_prefix_cache(enabled, capacity_pages);
+            let _ = reply.send(());
+        }
+        EngineJob::PrefixClear { reply } => {
+            engine.prefix_clear();
+            let _ = reply.send(());
+        }
+        EngineJob::PrefixStats { reply } => {
+            let _ = reply.send(engine.prefix_stats());
         }
         EngineJob::Shutdown => return false,
     }

@@ -4,7 +4,7 @@
 use anyhow::Result;
 
 use crate::baselines;
-use crate::engine::Engine;
+use crate::engine::{ChunkOutcome, Engine, PrefillReport};
 use crate::gpu_sim::{decode_speedup, GpuSimConfig, SimPolicy};
 use crate::jobj;
 use crate::router::{AttnMode, DecodeMode, Policy};
@@ -445,6 +445,108 @@ pub fn kv_memory(engine: &mut Engine, seq_len: usize) -> Result<()> {
         j.push(jobj! {"policy" => label, "kv_bytes" => r.kv_bytes});
     }
     save_json("kv_memory", &j)
+}
+
+/// Drive a chunked prefill job to completion (the cross-request prefix
+/// cache only engages on the chunked path, DESIGN.md §13).
+fn chunked_prefill(
+    engine: &mut Engine,
+    tokens: &[u32],
+    policy: &Policy,
+    chunk: usize,
+) -> Result<(u64, PrefillReport)> {
+    let job = engine.prefill_open(tokens, policy, "balanced", chunk)?;
+    loop {
+        if let ChunkOutcome::Done { id, report } = engine.prefill_chunk(job)? {
+            return Ok((id, report));
+        }
+    }
+}
+
+fn route_str(modes: &[AttnMode]) -> String {
+    modes.iter().map(|m| m.name()).collect::<Vec<_>>().join("-")
+}
+
+/// Route-disagreement ledger (DESIGN.md §13): a prefix-cache hit pins
+/// the route the cached KV was computed under instead of re-running the
+/// Layer Router on the new (longer) prompt — trading possible
+/// context-sensitivity drift for the skipped prefill. This harness
+/// measures that trade: each warm session's pinned route is compared
+/// against a fresh router run on the SAME full prompt (a monolithic
+/// prefill never consults the cache), and per-layer disagreement is
+/// tabulated across tasks.
+pub fn route_ledger(engine: &mut Engine, n: usize, seq_len: usize) -> Result<()> {
+    let policy = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Dense };
+    let n_layers = engine.cfg().model.n_layers;
+    let vocab = engine.cfg().model.vocab_size as u32;
+    let page = Engine::DEFAULT_PAGE_TOKENS;
+    engine.set_prefix_cache(true, None);
+    println!("== Route ledger: pinned cached route vs fresh full-prompt route ==");
+    let tasks = [Task::PRe, Task::HotQA, Task::Gov, Task::Trec];
+    let mut per_layer = vec![0u64; n_layers];
+    let mut warm_total = 0u64;
+    let mut warm_hits = 0u64;
+    let mut j = Json::Arr(vec![]);
+    for task in tasks {
+        let mut rng = Rng::seed_from_u64(131 ^ task as u64);
+        let mut shared = generate(task, &mut rng, seq_len).prompt;
+        // page-aligned shared run + distinct short suffixes per session
+        shared.truncate(shared.len() / page * page);
+        let mut cold = shared.clone();
+        cold.extend((0..8).map(|_| rng.range_u32(0, vocab)));
+        // the cold session seeds the cache with the shared run
+        let (id, _) = chunked_prefill(engine, &cold, &policy, 64)?;
+        engine.release(id);
+        let mut sessions = Json::Arr(vec![]);
+        for s in 0..n {
+            let mut prompt = shared.clone();
+            prompt.extend((0..8).map(|_| rng.range_u32(0, vocab)));
+            let (wid, warm) = chunked_prefill(engine, &prompt, &policy, 64)?;
+            engine.release(wid);
+            let (fid, fresh) = engine.prefill(&prompt, &policy, "balanced")?;
+            engine.release(fid);
+            let mut disagree = 0usize;
+            for (l, (a, b)) in warm.modes.iter().zip(&fresh.modes).enumerate() {
+                if a != b {
+                    disagree += 1;
+                    per_layer[l] += 1;
+                }
+            }
+            warm_total += 1;
+            warm_hits += (warm.cached_prefix_tokens > 0) as u64;
+            println!(
+                "  {:<8} s{s}: cached {:>4} tok  disagree {disagree}/{n_layers} layers",
+                task.name(),
+                warm.cached_prefix_tokens
+            );
+            sessions.push(jobj! {
+                "cached_prefix_tokens" => warm.cached_prefix_tokens,
+                "disagree_layers" => disagree,
+                "pinned" => route_str(&warm.modes),
+                "fresh" => route_str(&fresh.modes)
+            });
+        }
+        let mut o = jobj! {"task" => task.name(), "shared_tokens" => shared.len()};
+        o.set("sessions", sessions);
+        j.push(o);
+    }
+    let frac: Vec<f64> =
+        per_layer.iter().map(|&c| c as f64 / warm_total.max(1) as f64).collect();
+    println!("  warm sessions {warm_total}, prefix hits {warm_hits}");
+    print!("  per-layer disagreement freq:");
+    for f in &frac {
+        print!(" {f:.2}");
+    }
+    println!();
+    let mut out = Json::obj();
+    out.set("tasks", j);
+    out.set("warm_sessions", Json::from(warm_total as usize));
+    out.set("warm_hits", Json::from(warm_hits as usize));
+    out.set("per_layer_disagreement", Json::from(frac));
+    // leave the engine as found — ledger runs are standalone
+    engine.prefix_clear();
+    engine.set_prefix_cache(false, None);
+    save_json("route_ledger", &out)
 }
 
 /// Figs 6/7/10: summarize the python-side training trajectories

@@ -36,9 +36,13 @@
 //! §9) stages many requests' views into ONE `attend_batch_{fa,sa}` call
 //! simultaneously — the borrows are all shared borrows of the pool.
 
+use std::collections::HashMap;
+
 use anyhow::Result;
 
 use crate::runtime::{HostTensor, TensorView};
+
+pub mod prefix;
 
 /// A contiguous run of pages inside a [`KvPool`] — the (degenerate,
 /// consecutive-ids) block table of one cache. Copy on purpose: the
@@ -66,6 +70,12 @@ pub struct KvPool {
     grown_pages: usize,
     allocated_pages: usize,
     peak_pages: usize,
+    /// Extra shared references per block start, beyond the implicit one
+    /// the allocating owner holds. Populated only by the prefix cache
+    /// (`kvcache::prefix`) when a radix split makes two nodes window
+    /// into one page run; a block with an entry here survives `free`
+    /// until the last reference drops.
+    refs: HashMap<usize, u32>,
 }
 
 impl KvPool {
@@ -80,6 +90,7 @@ impl KvPool {
             grown_pages: 0,
             allocated_pages: 0,
             peak_pages: 0,
+            refs: HashMap::new(),
         }
     }
 
@@ -131,10 +142,31 @@ impl KvPool {
     /// lifecycle leaked pages or the coalescing free-list invariant
     /// broke — the error describes which (DESIGN.md §12).
     pub fn drained(&self) -> std::result::Result<(), String> {
-        if self.allocated_pages != 0 {
+        self.drained_with_retained(0)
+    }
+
+    /// Like [`KvPool::drained`], but tolerating exactly `retained`
+    /// pages held on purpose by the prefix index (`kvcache::prefix`):
+    /// any other allocated page is a leak, and the error says which
+    /// side of the ledger disagrees. With `retained == 0` this is the
+    /// strict full-drain check.
+    pub fn drained_with_retained(&self, retained: usize) -> std::result::Result<(), String> {
+        if self.allocated_pages != retained {
             return Err(format!(
-                "{} of {} pages still allocated",
-                self.allocated_pages, self.total_pages
+                "{} of {} pages allocated but the prefix index retains {} ({} leaked)",
+                self.allocated_pages,
+                self.total_pages,
+                retained,
+                self.allocated_pages.saturating_sub(retained)
+            ));
+        }
+        if retained != 0 {
+            return Ok(());
+        }
+        if !self.refs.is_empty() {
+            return Err(format!(
+                "{} shared page references outstanding after full drain",
+                self.refs.len()
             ));
         }
         if self.free.len() > 1 {
@@ -218,8 +250,28 @@ impl KvPool {
         Ok(PageBlock { start, pages: need })
     }
 
+    /// Add a shared reference to an allocated block: one later
+    /// [`KvPool::free`] of the same block drops the reference instead
+    /// of returning pages. Only the prefix cache calls this — request
+    /// caches always own their runs exclusively.
+    pub fn retain(&mut self, block: PageBlock) {
+        debug_assert!(block.start + block.pages <= self.grown_pages, "retain of unallocated block");
+        *self.refs.entry(block.start).or_insert(0) += 1;
+    }
+
     /// Return a block's pages to the free list (coalescing neighbours).
-    pub fn free(&mut self, block: PageBlock) {
+    /// Returns `true` when the pages were actually freed and `false`
+    /// when the block is shared ([`KvPool::retain`]) and only a
+    /// reference was dropped — callers tracking retained-page ledgers
+    /// use the return; exclusive owners may ignore it.
+    pub fn free(&mut self, block: PageBlock) -> bool {
+        if let Some(n) = self.refs.get_mut(&block.start) {
+            *n -= 1;
+            if *n == 0 {
+                self.refs.remove(&block.start);
+            }
+            return false;
+        }
         debug_assert!(block.start + block.pages <= self.grown_pages, "free of unallocated block");
         debug_assert!(self.allocated_pages >= block.pages, "double free");
         self.allocated_pages -= block.pages;
@@ -235,6 +287,46 @@ impl KvPool {
             self.free[i - 1].pages += self.free[i].pages;
             self.free.remove(i);
         }
+        true
+    }
+
+    /// Copy `rows` token rows per head between two `(H, cap, D)`
+    /// pool regions, in both the K and V arenas. This is how the
+    /// prefix cache moves page-aligned prefix runs between node
+    /// storage and request staging — a pool-internal memcpy, never a
+    /// kernel call, so prefill row counters never see reused tokens.
+    #[allow(clippy::too_many_arguments)]
+    pub fn copy_rows(
+        &mut self,
+        src: PageBlock,
+        src_cap: usize,
+        src_off: usize,
+        dst: PageBlock,
+        dst_cap: usize,
+        dst_off: usize,
+        rows: usize,
+        n_heads: usize,
+        head_dim: usize,
+    ) {
+        debug_assert!(src_off + rows <= src_cap);
+        debug_assert!(dst_off + rows <= dst_cap);
+        let d = head_dim;
+        for hh in 0..n_heads {
+            let s0 = src.start * self.page_floats + (hh * src_cap + src_off) * d;
+            let t0 = dst.start * self.page_floats + (hh * dst_cap + dst_off) * d;
+            self.k.copy_within(s0..s0 + rows * d, t0);
+            self.v.copy_within(s0..s0 + rows * d, t0);
+        }
+    }
+
+    /// Copy the first `n_floats` floats of one block's region into
+    /// another (both arenas) — whole-buffer snapshot/restore for SA
+    /// ring state held by the prefix cache.
+    pub fn copy_region(&mut self, src: PageBlock, dst: PageBlock, n_floats: usize) {
+        let s0 = src.start * self.page_floats;
+        let t0 = dst.start * self.page_floats;
+        self.k.copy_within(s0..s0 + n_floats, t0);
+        self.v.copy_within(s0..s0 + n_floats, t0);
     }
 
     fn range(&self, block: PageBlock) -> std::ops::Range<usize> {
@@ -382,6 +474,34 @@ impl FullCache {
         }
         self.len += valid;
         Ok(())
+    }
+
+    /// Prime this cache's tail with `rows` token rows per head copied
+    /// from a pool-resident prefix segment (the radix cache's node
+    /// storage, laid out `(H, src_cap, D)` starting at row `src_off`).
+    /// A prefix hit lands cached KV here without running any prefill
+    /// kernel, so the chunk loop starts after the shared prefix.
+    pub fn prime_from_pool(
+        &mut self,
+        pool: &mut KvPool,
+        src: PageBlock,
+        src_cap: usize,
+        src_off: usize,
+        rows: usize,
+    ) {
+        assert!(self.len + rows <= self.capacity, "primed prefix exceeds staging capacity");
+        pool.copy_rows(
+            src,
+            src_cap,
+            src_off,
+            self.block,
+            self.capacity,
+            self.len,
+            rows,
+            self.n_heads,
+            self.head_dim,
+        );
+        self.len += rows;
     }
 
     fn ensure_capacity(&mut self, pool: &mut KvPool, need: usize) -> Result<()> {
@@ -667,6 +787,33 @@ impl SparseCache {
             }
             self.append(pool, &kk, &vv);
         }
+    }
+
+    /// Snapshot the ring's full `(H, SA_BUF, D)` region into a fresh
+    /// pool block, returning it with the two cursor counters needed to
+    /// resume appends (`sink_len`, `total_seen`). The prefix cache
+    /// stores these because ring state at token P is not
+    /// reconstructible later — the window has already overwritten
+    /// older tokens in place.
+    pub fn snapshot(&self, pool: &mut KvPool) -> Result<(PageBlock, usize, usize)> {
+        let block = pool.alloc(self.floats())?;
+        pool.copy_region(self.block, block, self.floats());
+        Ok((block, self.sink_len, self.total_seen))
+    }
+
+    /// Restore a snapshot taken by [`SparseCache::snapshot`] into this
+    /// same-geometry ring, leaving it bit-identical (contents and
+    /// write-cursor phase) to the ring the snapshot was taken from.
+    pub fn restore_snapshot(
+        &mut self,
+        pool: &mut KvPool,
+        src: PageBlock,
+        sink_len: usize,
+        total_seen: usize,
+    ) {
+        pool.copy_region(src, self.block, self.floats());
+        self.sink_len = sink_len;
+        self.total_seen = total_seen;
     }
 
     /// Append one decoded token, overwriting the oldest window slot in
@@ -1076,6 +1223,123 @@ mod tests {
         assert_eq!(&kt.data[..4], &[0.0, 1.0, 2.0, 3.0]);
         assert_eq!(&vt.data[..4], &[10.0, 11.0, 12.0, 13.0]);
         assert_eq!(p.pages_allocated(), 2, "no pages leaked by the failed growth");
+    }
+
+    #[test]
+    fn pool_retain_makes_free_refcounted() {
+        let mut p = KvPool::new(4, 16);
+        let a = p.alloc(16).unwrap(); // 4 pages
+        p.retain(a);
+        assert!(!p.free(a), "freeing a shared block only drops the reference");
+        assert_eq!(p.pages_allocated(), 4, "pages survive while a reference remains");
+        assert!(p.drained().is_err(), "strict drain sees retained pages as allocated");
+        p.drained_with_retained(4).expect("index-retained pages are not a leak");
+        assert!(p.free(a), "last free really returns the pages");
+        assert_eq!(p.pages_allocated(), 0);
+        p.drained().unwrap();
+    }
+
+    #[test]
+    fn drained_with_retained_reports_leaks() {
+        let mut p = KvPool::new(4, 16);
+        let a = p.alloc(8).unwrap(); // 2 pages
+        let err = p.drained_with_retained(1).unwrap_err();
+        assert!(err.contains("leaked"), "{err}");
+        p.free(a);
+        p.drained_with_retained(1).unwrap_err();
+        p.drained().unwrap();
+    }
+
+    #[test]
+    fn copy_rows_moves_rows_between_pool_regions() {
+        let mut p = KvPool::new(4, 64);
+        let (h, d) = (2usize, 2usize);
+        let src_cap = 8usize;
+        let dst_cap = 6usize;
+        let src = p.alloc(h * src_cap * d).unwrap();
+        let dst = p.alloc(h * dst_cap * d).unwrap();
+        {
+            let (kb, vb) = p.kv_mut(src);
+            for (i, x) in kb.iter_mut().enumerate() {
+                *x = i as f32;
+            }
+            for (i, x) in vb.iter_mut().enumerate() {
+                *x = -(i as f32);
+            }
+        }
+        // rows 2..5 of src -> rows 1..4 of dst, per head
+        p.copy_rows(src, src_cap, 2, dst, dst_cap, 1, 3, h, d);
+        let kd = p.k_of(dst);
+        let vd = p.v_of(dst);
+        for hh in 0..h {
+            for t in 0..3 {
+                for dd in 0..d {
+                    let want = ((hh * src_cap + 2 + t) * d + dd) as f32;
+                    let got = kd[(hh * dst_cap + 1 + t) * d + dd];
+                    assert_eq!(got, want, "k head {hh} row {t} dim {dd}");
+                    assert_eq!(vd[(hh * dst_cap + 1 + t) * d + dd], -want);
+                }
+            }
+        }
+        // untouched destination rows stay zero
+        assert_eq!(kd[0], 0.0);
+        p.free(src);
+        p.free(dst);
+        p.drained().unwrap();
+    }
+
+    #[test]
+    fn sparse_snapshot_restore_roundtrip() {
+        let mut p = pool();
+        let mut c = SparseCache::new(&mut p, 1, 1, 2, 3, 8).unwrap();
+        for i in 0..7 {
+            c.append(&mut p, &[i as f32], &[i as f32 + 0.5]);
+        }
+        let (snap, sink_len, total_seen) = c.snapshot(&mut p).unwrap();
+        let mut c2 = SparseCache::new(&mut p, 1, 1, 2, 3, 8).unwrap();
+        c2.restore_snapshot(&mut p, snap, sink_len, total_seen);
+        // the restored ring must track the original under further
+        // appends — contents AND write-cursor phase
+        for i in 7..12 {
+            c.append(&mut p, &[i as f32], &[i as f32 + 0.5]);
+            c2.append(&mut p, &[i as f32], &[i as f32 + 0.5]);
+        }
+        assert_eq!(c.len(), c2.len());
+        {
+            let (ka, va, _) = c.view(&p);
+            let (kb, vb, _) = c2.view(&p);
+            assert_eq!(ka.data, kb.data);
+            assert_eq!(va.data, vb.data);
+        }
+        p.free(snap);
+        c.free(&mut p);
+        c2.free(&mut p);
+        p.drained().unwrap();
+    }
+
+    #[test]
+    fn full_cache_primes_from_pool_segment() {
+        let mut p = pool();
+        let (h, d) = (2usize, 4usize);
+        // donor: a staged prefix laid out (H, 8, D) with 6 valid rows
+        let mut donor = FullCache::new(&mut p, h, d, 8).unwrap();
+        let k = ht(h, 8, d, |hh, t, dd| (hh * 100 + t * 10 + dd) as f32);
+        let v = ht(h, 8, d, |hh, t, dd| -((hh * 100 + t * 10 + dd) as f32));
+        donor.load_prefill(&mut p, &k, &v, 6).unwrap();
+        let (src, src_cap) = (donor.block, donor.capacity());
+        // recipient primes rows [0..4) then appends one token
+        let mut c = FullCache::new(&mut p, h, d, 8).unwrap();
+        c.prime_from_pool(&mut p, src, src_cap, 0, 4);
+        assert_eq!(c.len(), 4);
+        c.append(&mut p, &[7.0; 8], &[8.0; 8]).unwrap();
+        let (kt, vt) = c.as_tensors(&p, 8);
+        // head 0, token 3, dim 2 == 32 came through the prime copy
+        assert_eq!(kt.data[3 * 4 + 2], 32.0, "primed row survived");
+        assert_eq!(kt.data[4 * 4], 7.0, "append lands after the primed rows");
+        assert_eq!(vt.data[(8 + 2) * 4 + 1], -121.0, "head-1 primed row");
+        donor.free(&mut p);
+        c.free(&mut p);
+        p.drained().unwrap();
     }
 
     #[test]

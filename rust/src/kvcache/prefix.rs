@@ -1,0 +1,980 @@
+//! Cross-request radix prefix cache over the paged [`KvPool`]
+//! (DESIGN.md §13, ROADMAP item 2).
+//!
+//! A radix tree keyed on token-id sequences: each node owns page-aligned
+//! runs of pool pages holding the KV rows its edge contributed, one
+//! [`Seg`] per layer, plus the per-layer route the rows were computed
+//! under. Admission matches the longest cached prefix ([`PrefixCache::
+//! acquire`]), pins the endpoint and primes request staging from the
+//! path's segments; retirement inserts the completed page-aligned
+//! prompt prefix ([`PrefixCache::insert`]), splitting nodes at page
+//! boundaries so divergent prompts share the common run via
+//! [`KvPool::retain`] refcounts.
+//!
+//! ## The Flux wrinkle: routes are part of the identity
+//!
+//! The Layer Router's FA/SA decision is context-dependent, so cached KV
+//! is only reusable under the route it was computed with. Two guards
+//! enforce that:
+//!
+//!   * trees are partitioned by [`context_key`] (policy label + router
+//!     name, with explicit per-layer modes for `Static` policies whose
+//!     label alone is ambiguous);
+//!   * within a tree, insert only descends into — and only splits —
+//!     nodes whose stored route and decode mode equal the incoming
+//!     request's, so every root→leaf path is route-homogeneous and a
+//!     hit can pin the endpoint's route for the whole prefix.
+//!
+//! Sparse-decode routes additionally need the SA ring state at the
+//! prefix boundary, which is *not* reconstructible later (the window
+//! overwrites in place): nodes store an optional whole-ring
+//! [`RingSnap`] per layer, captured by the engine exactly when chunked
+//! prefill crosses the page-aligned snapshot point. A node missing a
+//! needed ring is a *waypoint* — it still shares its pages with deeper
+//! nodes but cannot itself be a hit endpoint.
+//!
+//! ## Lifecycle and accounting
+//!
+//! `retained_pages` is the ledger of pool pages the index holds on
+//! behalf of future requests; [`KvPool::drained_with_retained`] checks
+//! the pool against it so leaks stay distinguishable from deliberate
+//! retention. Eviction is LRU over unpinned leaves (interior nodes are
+//! protected structurally — they have children; pinned endpoints
+//! protect themselves), cascading through childless waypoints, and
+//! runs both against the index's own `capacity_pages` budget
+//! ([`PrefixCache::insert`]) and under engine pool pressure
+//! ([`PrefixCache::evict_for`]) so `pool_pressure` admission semantics
+//! keep working with the cache enabled. `clear` detaches pinned nodes
+//! as zombies (freed on last unpin) so in-flight requests never see
+//! their node id reused.
+
+use std::collections::HashMap;
+
+use super::{FullCache, KvPool, PageBlock};
+use crate::router::{AttnMode, DecodeMode, Policy};
+
+/// Context key partitioning the radix forest: cached KV is only
+/// comparable between requests with the same policy and router. The
+/// `Static` label alone ("static-1of2") collides across different mode
+/// vectors, so per-layer mode initials are appended (the four mode
+/// names `fa/ssa/ta/xa` have distinct first characters).
+pub fn context_key(policy: &Policy, router_name: &str) -> String {
+    match policy {
+        Policy::Static { modes, .. } => {
+            let initials: String =
+                modes.iter().map(|m| m.name().chars().next().unwrap_or('?')).collect();
+            format!("{}:{}|{}", policy.label(), initials, router_name)
+        }
+        _ => format!("{}|{}", policy.label(), router_name),
+    }
+}
+
+/// One layer's window into a pool block: `rows` token rows starting at
+/// `row_off` of an `(H, cap, D)` region. Splits leave parent and child
+/// windowing the SAME block with disjoint row ranges — the block is
+/// then refcounted via [`KvPool::retain`].
+#[derive(Debug, Clone, Copy)]
+pub struct Seg {
+    pub block: PageBlock,
+    /// row capacity the block was laid out with (`(H, cap, D)`)
+    pub cap: usize,
+    pub row_off: usize,
+    pub rows: usize,
+}
+
+/// Whole-ring SA snapshot at a node's depth: the `(H, SA_BUF, D)`
+/// region copied into its own block plus the two cursor counters
+/// [`super::SparseCache::restore_snapshot`] needs.
+#[derive(Debug, Clone, Copy)]
+pub struct RingSnap {
+    pub block: PageBlock,
+    pub sink_len: usize,
+    pub total_seen: usize,
+}
+
+#[derive(Debug)]
+struct Node {
+    parent: Option<usize>,
+    children: Vec<usize>,
+    /// token ids this node contributes past its parent (always a
+    /// multiple of `page_tokens` long)
+    edge: Vec<u32>,
+    /// total prefix length at this node (parent depth + edge len)
+    depth: usize,
+    /// one per layer: the KV rows for `edge`
+    segs: Vec<Seg>,
+    /// one per layer: ring state at `depth` for sparse-decode layers
+    /// (all `None` on waypoints)
+    rings: Vec<Option<RingSnap>>,
+    route: Vec<AttnMode>,
+    decode_mode: DecodeMode,
+    /// in-flight requests holding this node as their hit endpoint
+    pins: u32,
+    last_use: u64,
+    /// detached by `clear` while pinned; freed on last unpin
+    zombie: bool,
+    key: String,
+}
+
+/// A successful prefix match: the pinned endpoint (`node` must be
+/// released via [`PrefixCache::unpin`]), the covered token count, the
+/// route to pin, and the per-layer path segments (root→endpoint order)
+/// plus endpoint ring snapshots to prime request caches from.
+#[derive(Debug)]
+pub struct Hit {
+    pub node: usize,
+    pub depth: usize,
+    pub route: Vec<AttnMode>,
+    pub decode_mode: DecodeMode,
+    /// `segs[layer]` = the path's row windows in prefix order
+    pub segs: Vec<Vec<Seg>>,
+    pub rings: Vec<Option<RingSnap>>,
+}
+
+/// Counter snapshot for metrics and the bench harness.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub tokens_reused: u64,
+    pub evictions: u64,
+    pub inserts: u64,
+    /// live non-zombie nodes
+    pub nodes: usize,
+    pub retained_pages: usize,
+}
+
+/// The radix prefix index. Single-threaded like the pool — it lives
+/// inside the engine on the executor thread.
+#[derive(Debug)]
+pub struct PrefixCache {
+    enabled: bool,
+    /// index-retained page budget; eviction keeps `retained_pages`
+    /// under it
+    capacity_pages: usize,
+    page_tokens: usize,
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    nodes: Vec<Option<Node>>,
+    free_ids: Vec<usize>,
+    /// root children per context key
+    roots: HashMap<String, Vec<usize>>,
+    /// LRU clock (bumped per acquire/insert)
+    clock: u64,
+    retained_pages: usize,
+    hits: u64,
+    misses: u64,
+    tokens_reused: u64,
+    evictions: u64,
+    inserts: u64,
+}
+
+/// Whether a layer in `mode` under `decode` needs ring state to resume
+/// decode from a cached prefix (FA layers replay from the full cache;
+/// dense decode never touches the ring).
+fn needs_ring(mode: AttnMode, decode: DecodeMode) -> bool {
+    decode == DecodeMode::Sparse && mode != AttnMode::Fa
+}
+
+/// A node is a valid hit endpoint only when every layer that needs
+/// ring state has a snapshot. Waypoints (split midpoints) fail this
+/// for sparse-decode routes.
+fn node_usable(n: &Node) -> bool {
+    n.route
+        .iter()
+        .enumerate()
+        .all(|(l, &m)| !needs_ring(m, n.decode_mode) || n.rings.get(l).is_some_and(Option::is_some))
+}
+
+fn common_prefix_len(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+/// Return incoming ring-snapshot blocks that were never adopted into
+/// the index (so they were never part of `retained_pages`).
+fn free_rings(pool: &mut KvPool, rings: Vec<Option<RingSnap>>) {
+    for r in rings.into_iter().flatten() {
+        pool.free(r.block);
+    }
+}
+
+impl PrefixCache {
+    /// Starts disabled with a zero budget; [`PrefixCache::configure`]
+    /// turns it on.
+    pub fn new(page_tokens: usize, n_layers: usize, n_heads: usize, head_dim: usize) -> Self {
+        Self {
+            enabled: false,
+            capacity_pages: 0,
+            page_tokens: page_tokens.max(1),
+            n_layers,
+            n_heads,
+            head_dim,
+            nodes: Vec::new(),
+            free_ids: Vec::new(),
+            roots: HashMap::new(),
+            clock: 0,
+            retained_pages: 0,
+            hits: 0,
+            misses: 0,
+            tokens_reused: 0,
+            evictions: 0,
+            inserts: 0,
+        }
+    }
+
+    /// Reset the index (freeing everything unpinned) and set the
+    /// enabled flag + retained-page budget.
+    pub fn configure(&mut self, pool: &mut KvPool, enabled: bool, capacity_pages: usize) {
+        self.clear(pool);
+        self.enabled = enabled;
+        self.capacity_pages = if enabled { capacity_pages.max(1) } else { 0 };
+        self.hits = 0;
+        self.misses = 0;
+        self.tokens_reused = 0;
+        self.evictions = 0;
+        self.inserts = 0;
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Pool pages deliberately held by the index (including zombie
+    /// nodes awaiting their last unpin) — feed this to
+    /// [`KvPool::drained_with_retained`].
+    pub fn retained_pages(&self) -> usize {
+        self.retained_pages
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        let nodes =
+            self.nodes.iter().flatten().filter(|n| !n.zombie).count();
+        PrefixStats {
+            hits: self.hits,
+            misses: self.misses,
+            tokens_reused: self.tokens_reused,
+            evictions: self.evictions,
+            inserts: self.inserts,
+            nodes,
+            retained_pages: self.retained_pages,
+        }
+    }
+
+    /// Longest-prefix match for `tokens` under `key`. Returns the
+    /// deepest usable node covering a STRICT prefix (the engine must
+    /// still prefill at least one token to produce router inputs and
+    /// the first output logits) and pins it; the caller owns an unpin.
+    pub fn acquire(&mut self, key: &str, tokens: &[u32]) -> Option<Hit> {
+        if !self.enabled || tokens.is_empty() {
+            return None;
+        }
+        self.clock += 1;
+        let mut depth = 0usize;
+        let mut candidates: Vec<usize> = self.roots.get(key).cloned().unwrap_or_default();
+        let mut best: Option<usize> = None;
+        loop {
+            let mut advanced = None;
+            for &cid in &candidates {
+                let n = self.nodes[cid].as_ref().expect("linked child is live");
+                if n.edge.len() <= tokens.len() - depth
+                    && tokens[depth..depth + n.edge.len()] == n.edge[..]
+                {
+                    advanced = Some(cid);
+                    break;
+                }
+            }
+            let Some(cid) = advanced else { break };
+            let clock = self.clock;
+            let n = self.nodes[cid].as_mut().expect("linked child is live");
+            n.last_use = clock;
+            depth += n.edge.len();
+            let n = self.nodes[cid].as_ref().expect("linked child is live");
+            if depth < tokens.len() && node_usable(n) {
+                best = Some(cid);
+            }
+            candidates = n.children.clone();
+        }
+        let Some(id) = best else {
+            self.misses += 1;
+            return None;
+        };
+        // collect the root→endpoint path to lay segments out in
+        // prefix order
+        let mut path = vec![id];
+        while let Some(p) = self.nodes[*path.last().expect("non-empty")]
+            .as_ref()
+            .expect("path node is live")
+            .parent
+        {
+            path.push(p);
+        }
+        path.reverse();
+        let mut segs = vec![Vec::new(); self.n_layers];
+        for &nid in &path {
+            let n = self.nodes[nid].as_ref().expect("path node is live");
+            for (l, s) in n.segs.iter().enumerate() {
+                segs[l].push(*s);
+            }
+        }
+        let endpoint = self.nodes[id].as_mut().expect("endpoint is live");
+        endpoint.pins += 1;
+        let hit = Hit {
+            node: id,
+            depth: endpoint.depth,
+            route: endpoint.route.clone(),
+            decode_mode: endpoint.decode_mode,
+            segs,
+            rings: endpoint.rings.clone(),
+        };
+        self.hits += 1;
+        self.tokens_reused += hit.depth as u64;
+        Some(hit)
+    }
+
+    /// Release a hit endpoint (or a zombie left by `clear`, which is
+    /// freed here on its last pin).
+    pub fn unpin(&mut self, pool: &mut KvPool, id: usize) {
+        let (pins, zombie) = {
+            let Some(n) = self.nodes.get_mut(id).and_then(Option::as_mut) else {
+                return;
+            };
+            n.pins = n.pins.saturating_sub(1);
+            (n.pins, n.zombie)
+        };
+        if pins == 0 && zombie {
+            self.free_node_storage(pool, id);
+            self.nodes[id] = None;
+            self.free_ids.push(id);
+        }
+    }
+
+    /// Insert the completed page-aligned prompt prefix `tokens`
+    /// (length must be a `page_tokens` multiple), copying its KV rows
+    /// out of the request's `staging` caches. `rings` are adopted into
+    /// the endpoint when the route needs them; un-adopted blocks are
+    /// freed here either way, so the caller unconditionally hands them
+    /// over.
+    pub fn insert(
+        &mut self,
+        pool: &mut KvPool,
+        key: &str,
+        tokens: &[u32],
+        route: &[AttnMode],
+        decode_mode: DecodeMode,
+        staging: &[FullCache],
+        rings: Vec<Option<RingSnap>>,
+    ) {
+        if !self.enabled
+            || tokens.is_empty()
+            || tokens.len() % self.page_tokens != 0
+            || route.len() != self.n_layers
+            || staging.len() != self.n_layers
+        {
+            free_rings(pool, rings);
+            return;
+        }
+        self.clock += 1;
+        let plen = tokens.len();
+        let mut depth = 0usize;
+        let mut parent: Option<usize> = None;
+        let mut protect: Vec<usize> = Vec::new();
+        loop {
+            let children: Vec<usize> = match parent {
+                Some(p) => self.nodes[p].as_ref().expect("parent is live").children.clone(),
+                None => self.roots.get(key).cloned().unwrap_or_default(),
+            };
+            // descend only into route-homogeneous full-edge matches —
+            // KV under a different route is a different prefix
+            let mut full = None;
+            for &cid in &children {
+                let n = self.nodes[cid].as_ref().expect("linked child is live");
+                if n.route.as_slice() == route
+                    && n.decode_mode == decode_mode
+                    && n.edge.len() <= plen - depth
+                    && tokens[depth..depth + n.edge.len()] == n.edge[..]
+                {
+                    full = Some(cid);
+                    break;
+                }
+            }
+            if let Some(cid) = full {
+                let clock = self.clock;
+                let n = self.nodes[cid].as_mut().expect("linked child is live");
+                n.last_use = clock;
+                depth += n.edge.len();
+                parent = Some(cid);
+                protect.push(cid);
+                if depth == plen {
+                    self.upgrade_endpoint(pool, cid, rings);
+                    return;
+                }
+                continue;
+            }
+            // page-aligned partial match → split so the common run is
+            // shared (refcounted), when the routes agree
+            let mut split_at = None;
+            for &cid in &children {
+                let n = self.nodes[cid].as_ref().expect("linked child is live");
+                let q = common_prefix_len(&tokens[depth..], &n.edge);
+                let s = (q / self.page_tokens) * self.page_tokens;
+                if s > 0 && n.route.as_slice() == route && n.decode_mode == decode_mode {
+                    split_at = Some((cid, s));
+                    break;
+                }
+            }
+            if let Some((cid, s)) = split_at {
+                let mid = self.split(pool, key, cid, s);
+                depth += s;
+                parent = Some(mid);
+                protect.push(mid);
+                if depth == plen {
+                    self.upgrade_endpoint(pool, mid, rings);
+                    return;
+                }
+                // anything below the aligned split point shares less
+                // than a page — the remainder becomes a fresh leaf
+            }
+            break;
+        }
+        // new leaf owning rows [depth, plen)
+        let rows = plen - depth;
+        let seg_pages = pool.pages_for(self.n_heads * rows * self.head_dim);
+        let ring_pages: usize = rings.iter().flatten().map(|r| r.block.pages).sum();
+        if !self.ensure_room(pool, seg_pages * self.n_layers + ring_pages, &protect) {
+            free_rings(pool, rings);
+            return;
+        }
+        let mut segs: Vec<Seg> = Vec::with_capacity(self.n_layers);
+        for st in staging {
+            let block = match pool.alloc(self.n_heads * rows * self.head_dim) {
+                Ok(b) => b,
+                Err(_) => {
+                    // partial failure: give back what this insert took
+                    for s in segs.drain(..) {
+                        if pool.free(s.block) {
+                            self.retained_pages -= s.block.pages;
+                        }
+                    }
+                    free_rings(pool, rings);
+                    return;
+                }
+            };
+            pool.copy_rows(
+                st.block,
+                st.capacity,
+                depth,
+                block,
+                rows,
+                0,
+                rows,
+                self.n_heads,
+                self.head_dim,
+            );
+            self.retained_pages += block.pages;
+            segs.push(Seg { block, cap: rows, row_off: 0, rows });
+        }
+        let node_rings = if rings.len() == self.n_layers && rings.iter().any(Option::is_some) {
+            for r in rings.iter().flatten() {
+                self.retained_pages += r.block.pages;
+            }
+            rings
+        } else {
+            free_rings(pool, rings);
+            vec![None; self.n_layers]
+        };
+        let node = Node {
+            parent,
+            children: Vec::new(),
+            edge: tokens[depth..].to_vec(),
+            depth: plen,
+            segs,
+            rings: node_rings,
+            route: route.to_vec(),
+            decode_mode,
+            pins: 0,
+            last_use: self.clock,
+            zombie: false,
+            key: key.to_string(),
+        };
+        let id = self.alloc_node(node);
+        match parent {
+            Some(p) => self.nodes[p].as_mut().expect("parent is live").children.push(id),
+            None => self.roots.entry(key.to_string()).or_default().push(id),
+        }
+        self.inserts += 1;
+    }
+
+    /// The insert walk ended exactly on an existing node: adopt the
+    /// incoming ring snapshots if they turn a waypoint into a usable
+    /// endpoint, otherwise drop them. (Routes already matched during
+    /// the walk.)
+    fn upgrade_endpoint(&mut self, pool: &mut KvPool, id: usize, rings: Vec<Option<RingSnap>>) {
+        let already_usable = node_usable(self.nodes[id].as_ref().expect("endpoint is live"));
+        if already_usable || rings.len() != self.n_layers || !rings.iter().any(Option::is_some) {
+            free_rings(pool, rings);
+            return;
+        }
+        let add: usize = rings.iter().flatten().map(|r| r.block.pages).sum();
+        if !self.ensure_room(pool, add, &[id]) {
+            free_rings(pool, rings);
+            return;
+        }
+        let n = self.nodes[id].as_mut().expect("endpoint is live");
+        let old = std::mem::replace(&mut n.rings, rings);
+        self.retained_pages += add;
+        for r in old.into_iter().flatten() {
+            if pool.free(r.block) {
+                self.retained_pages -= r.block.pages;
+            }
+        }
+        self.inserts += 1;
+    }
+
+    /// Split `cid`'s edge at page-aligned offset `s`, interposing a
+    /// midpoint that WINDOWS into the same blocks (refcounted). The
+    /// midpoint starts as a waypoint: it has the rows but no ring
+    /// state at its depth.
+    fn split(&mut self, pool: &mut KvPool, key: &str, cid: usize, s: usize) -> usize {
+        let (old_parent, old_edge, child_depth, child_segs, route, decode_mode, last_use) = {
+            let c = self.nodes[cid].as_ref().expect("split child is live");
+            (
+                c.parent,
+                c.edge.clone(),
+                c.depth,
+                c.segs.clone(),
+                c.route.clone(),
+                c.decode_mode,
+                c.last_use,
+            )
+        };
+        debug_assert!(s > 0 && s < old_edge.len() && s % self.page_tokens == 0);
+        for sg in &child_segs {
+            pool.retain(sg.block);
+        }
+        let mid_segs: Vec<Seg> = child_segs.iter().map(|sg| Seg { rows: s, ..*sg }).collect();
+        let mid = Node {
+            parent: old_parent,
+            children: vec![cid],
+            edge: old_edge[..s].to_vec(),
+            depth: child_depth - old_edge.len() + s,
+            segs: mid_segs,
+            rings: vec![None; self.n_layers],
+            route,
+            decode_mode,
+            pins: 0,
+            last_use,
+            zombie: false,
+            key: key.to_string(),
+        };
+        let mid_id = self.alloc_node(mid);
+        match old_parent {
+            Some(p) => {
+                for c in self.nodes[p].as_mut().expect("parent is live").children.iter_mut() {
+                    if *c == cid {
+                        *c = mid_id;
+                    }
+                }
+            }
+            None => {
+                if let Some(v) = self.roots.get_mut(key) {
+                    for c in v.iter_mut() {
+                        if *c == cid {
+                            *c = mid_id;
+                        }
+                    }
+                }
+            }
+        }
+        let c = self.nodes[cid].as_mut().expect("split child is live");
+        c.parent = Some(mid_id);
+        c.edge = old_edge[s..].to_vec();
+        for sg in c.segs.iter_mut() {
+            sg.row_off += s;
+            sg.rows -= s;
+        }
+        mid_id
+    }
+
+    /// Make room for `need` more retained pages under the index
+    /// budget, evicting LRU leaves (never the `protect` path). False
+    /// means the insert must be skipped.
+    fn ensure_room(&mut self, pool: &mut KvPool, need: usize, protect: &[usize]) -> bool {
+        if need > self.capacity_pages {
+            return false;
+        }
+        while self.retained_pages + need > self.capacity_pages {
+            if !self.evict_one(pool, protect) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Engine pool-pressure hook: evict until the pool has
+    /// `need_pages` free (or nothing evictable remains). Returns
+    /// whether the pool can now cover the request — callers retry the
+    /// failed allocation on `true`.
+    pub fn evict_for(&mut self, pool: &mut KvPool, need_pages: usize) -> bool {
+        while pool.pages_free() < need_pages {
+            if !self.evict_one(pool, &[]) {
+                return pool.pages_free() >= need_pages;
+            }
+        }
+        true
+    }
+
+    /// Evict the least-recently-used unpinned, non-zombie leaf.
+    /// Interior nodes are never candidates (they have children), so a
+    /// pinned endpoint structurally protects its whole prefix path.
+    fn evict_one(&mut self, pool: &mut KvPool, protect: &[usize]) -> bool {
+        let mut victim: Option<(u64, usize)> = None;
+        for (id, slot) in self.nodes.iter().enumerate() {
+            let Some(n) = slot else { continue };
+            if n.pins > 0 || n.zombie || !n.children.is_empty() || protect.contains(&id) {
+                continue;
+            }
+            let better = match victim {
+                None => true,
+                Some((lu, _)) => n.last_use < lu,
+            };
+            if better {
+                victim = Some((n.last_use, id));
+            }
+        }
+        let Some((_, id)) = victim else { return false };
+        self.remove_leaf(pool, id, protect);
+        true
+    }
+
+    /// Remove a leaf and cascade through ancestors left as childless
+    /// unpinned waypoints (a usable ancestor stays — it is a valid
+    /// endpoint in its own right).
+    fn remove_leaf(&mut self, pool: &mut KvPool, id: usize, protect: &[usize]) {
+        let (parent, key) = {
+            let n = self.nodes[id].as_ref().expect("leaf is live");
+            (n.parent, n.key.clone())
+        };
+        self.free_node_storage(pool, id);
+        self.nodes[id] = None;
+        self.free_ids.push(id);
+        self.evictions += 1;
+        match parent {
+            Some(p) => {
+                self.nodes[p].as_mut().expect("parent is live").children.retain(|&c| c != id);
+                let pn = self.nodes[p].as_ref().expect("parent is live");
+                let cascade = pn.children.is_empty()
+                    && pn.pins == 0
+                    && !pn.zombie
+                    && !node_usable(pn)
+                    && !protect.contains(&p);
+                if cascade {
+                    self.remove_leaf(pool, p, protect);
+                }
+            }
+            None => {
+                if let Some(v) = self.roots.get_mut(&key) {
+                    v.retain(|&c| c != id);
+                    if v.is_empty() {
+                        self.roots.remove(&key);
+                    }
+                }
+            }
+        }
+    }
+
+    fn free_node_storage(&mut self, pool: &mut KvPool, id: usize) {
+        let (segs, rings) = {
+            let n = self.nodes[id].as_mut().expect("node is live");
+            (std::mem::take(&mut n.segs), std::mem::take(&mut n.rings))
+        };
+        for s in segs {
+            if pool.free(s.block) {
+                self.retained_pages -= s.block.pages;
+            }
+        }
+        for r in rings.into_iter().flatten() {
+            if pool.free(r.block) {
+                self.retained_pages -= r.block.pages;
+            }
+        }
+    }
+
+    /// Drop the whole index. Unpinned nodes free immediately; pinned
+    /// ones detach as zombies (their storage stays on the
+    /// `retained_pages` ledger) and free on their last
+    /// [`PrefixCache::unpin`] — an in-flight hit's node id must never
+    /// be reused under it.
+    pub fn clear(&mut self, pool: &mut KvPool) {
+        for id in 0..self.nodes.len() {
+            let pinned = match &self.nodes[id] {
+                Some(n) => n.pins > 0,
+                None => continue,
+            };
+            if pinned {
+                let n = self.nodes[id].as_mut().expect("node is live");
+                n.zombie = true;
+                n.parent = None;
+                n.children.clear();
+            } else {
+                self.free_node_storage(pool, id);
+                self.nodes[id] = None;
+                self.free_ids.push(id);
+            }
+        }
+        self.roots.clear();
+    }
+
+    fn alloc_node(&mut self, node: Node) -> usize {
+        match self.free_ids.pop() {
+            Some(id) => {
+                self.nodes[id] = Some(node);
+                id
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+
+    const PAGE: usize = 4; // tokens per page; h=1, d=1 → 4 floats
+    const LAYERS: usize = 2;
+
+    fn pool() -> KvPool {
+        KvPool::new(PAGE, 64)
+    }
+
+    fn cache() -> PrefixCache {
+        let mut c = PrefixCache::new(PAGE, LAYERS, 1, 1);
+        // configure against a throwaway pool (nothing to clear yet)
+        let mut p = KvPool::new(PAGE, 1);
+        c.configure(&mut p, true, 32);
+        c
+    }
+
+    /// Build per-layer staging caches holding `tokens.len()` rows of
+    /// deterministic per-layer KV (`k = layer*1000 + token_id`).
+    fn staging(pool: &mut KvPool, tokens: &[u32]) -> Vec<FullCache> {
+        let s = tokens.len();
+        (0..LAYERS)
+            .map(|l| {
+                let mut c = FullCache::new(pool, 1, 1, s).unwrap();
+                let data: Vec<f32> =
+                    tokens.iter().map(|&t| (l * 1000) as f32 + t as f32).collect();
+                let k = HostTensor::new(vec![1, s, 1], data.clone());
+                let v = HostTensor::new(vec![1, s, 1], data.iter().map(|x| -x).collect());
+                c.load_prefill(pool, &k, &v, s).unwrap();
+                c
+            })
+            .collect()
+    }
+
+    fn fa_route() -> Vec<AttnMode> {
+        vec![AttnMode::Fa; LAYERS]
+    }
+
+    fn insert_prompt(c: &mut PrefixCache, p: &mut KvPool, tokens: &[u32]) {
+        let st = staging(p, tokens);
+        c.insert(p, "k", tokens, &fa_route(), DecodeMode::Dense, &st, Vec::new());
+        for s in st {
+            s.free(p);
+        }
+    }
+
+    /// Read the hit's primed rows for one layer back out of the pool.
+    fn rows_of(p: &KvPool, segs: &[Seg]) -> Vec<f32> {
+        let mut out = Vec::new();
+        for sg in segs {
+            let ks = p.k_of(sg.block);
+            out.extend_from_slice(&ks[sg.row_off..sg.row_off + sg.rows]);
+        }
+        out
+    }
+
+    #[test]
+    fn insert_then_acquire_roundtrip() {
+        let mut p = pool();
+        let mut c = cache();
+        let prompt: Vec<u32> = (10..18).collect(); // 8 tokens = 2 pages
+        insert_prompt(&mut c, &mut p, &prompt);
+        assert_eq!(c.stats().inserts, 1);
+        assert_eq!(c.stats().nodes, 1);
+        // exact-length query misses: a hit must leave ≥1 token to run
+        assert!(c.acquire("k", &prompt).is_none());
+        // a longer prompt sharing the prefix hits at depth 8
+        let mut longer = prompt.clone();
+        longer.extend([99, 98]);
+        let hit = c.acquire("k", &longer).expect("prefix hit");
+        assert_eq!(hit.depth, 8);
+        assert_eq!(hit.route, fa_route());
+        let want: Vec<f32> = prompt.iter().map(|&t| 1000.0 + t as f32).collect();
+        assert_eq!(rows_of(&p, &hit.segs[1]), want, "layer-1 rows primed from the cache");
+        // wrong context key misses
+        assert!(c.acquire("other", &longer).is_none());
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.tokens_reused), (1, 2, 8));
+        c.unpin(&mut p, hit.node);
+        c.clear(&mut p);
+        p.drained().unwrap();
+    }
+
+    #[test]
+    fn split_shares_pages_with_refcount() {
+        let mut p = pool();
+        let mut c = cache();
+        let a: Vec<u32> = (0..8).collect();
+        let mut b: Vec<u32> = (0..4).collect();
+        b.extend([90, 91, 92, 93]);
+        insert_prompt(&mut c, &mut p, &a);
+        let pages_after_a = p.pages_allocated();
+        assert_eq!(pages_after_a, 2 * LAYERS, "2 pages per layer for 8 rows");
+        insert_prompt(&mut c, &mut p, &b);
+        // split at 4: midpoint shares a's blocks, only b's 4-row tail
+        // allocates — 1 page per layer
+        assert_eq!(p.pages_allocated(), pages_after_a + LAYERS, "shared run not duplicated");
+        assert_eq!(c.stats().nodes, 3, "mid + two leaves");
+        assert_eq!(c.retained_pages(), p.pages_allocated());
+        p.drained_with_retained(c.retained_pages()).unwrap();
+        // both full prompts are now reachable prefixes
+        let mut qa = a.clone();
+        qa.push(7);
+        let mut qb = b.clone();
+        qb.push(7);
+        let ha = c.acquire("k", &qa).expect("a hit");
+        assert_eq!(ha.depth, 8);
+        assert_eq!(
+            rows_of(&p, &ha.segs[0]),
+            a.iter().map(|&t| t as f32).collect::<Vec<_>>()
+        );
+        let hb = c.acquire("k", &qb).expect("b hit");
+        assert_eq!(hb.depth, 8);
+        assert_eq!(
+            rows_of(&p, &hb.segs[0]),
+            b.iter().map(|&t| t as f32).collect::<Vec<_>>()
+        );
+        c.unpin(&mut p, ha.node);
+        c.unpin(&mut p, hb.node);
+        c.clear(&mut p);
+        p.drained().unwrap();
+    }
+
+    #[test]
+    fn eviction_is_lru_and_never_takes_pinned_nodes() {
+        let mut p = pool();
+        let mut c = cache();
+        let a: Vec<u32> = (0..4).collect();
+        let b: Vec<u32> = (100..104).collect();
+        insert_prompt(&mut c, &mut p, &a); // older
+        insert_prompt(&mut c, &mut p, &b); // newer
+        let hit = c.acquire("k", &[0, 1, 2, 3, 7]).expect("pin a");
+        // force pool pressure: ask for every remaining page + what the
+        // two cached prompts hold
+        let free0 = p.pages_free();
+        assert!(!c.evict_for(&mut p, free0 + 2 * LAYERS + 1), "pinned pages can't be freed");
+        assert_eq!(c.stats().evictions, 1, "the one unpinned leaf was evicted");
+        assert!(c.evict_for(&mut p, free0 + LAYERS), "freed pages now cover the need");
+        // the pinned node survived eviction pressure; the unpinned
+        // (even though more recently used) node was the only candidate
+        let hit2 = c.acquire("k", &[0, 1, 2, 3, 7]).expect("a still cached");
+        assert!(c.acquire("k", &[100, 101, 102, 103, 7]).is_none(), "b evicted");
+        c.unpin(&mut p, hit.node);
+        c.unpin(&mut p, hit2.node);
+        c.clear(&mut p);
+        p.drained().unwrap();
+    }
+
+    #[test]
+    fn clear_with_pinned_hit_defers_free_until_unpin() {
+        let mut p = pool();
+        let mut c = cache();
+        let a: Vec<u32> = (0..4).collect();
+        insert_prompt(&mut c, &mut p, &a);
+        let hit = c.acquire("k", &[0, 1, 2, 3, 9]).expect("hit");
+        c.clear(&mut p);
+        assert_eq!(c.stats().nodes, 0, "zombies are not live nodes");
+        assert!(c.retained_pages() > 0, "zombie storage stays on the ledger");
+        p.drained_with_retained(c.retained_pages()).unwrap();
+        // the detached zombie is unreachable for new requests
+        assert!(c.acquire("k", &[0, 1, 2, 3, 9]).is_none());
+        c.unpin(&mut p, hit.node);
+        assert_eq!(c.retained_pages(), 0);
+        p.drained().unwrap();
+    }
+
+    #[test]
+    fn capacity_budget_skips_oversized_inserts() {
+        let mut p = pool();
+        let mut c = PrefixCache::new(PAGE, LAYERS, 1, 1);
+        c.configure(&mut p, true, 1); // 1-page budget < 2 pages needed
+        let a: Vec<u32> = (0..4).collect();
+        insert_prompt(&mut c, &mut p, &a);
+        assert_eq!(c.stats().inserts, 0, "insert over budget is a no-op");
+        assert_eq!(c.retained_pages(), 0);
+        p.drained().unwrap();
+        // unaligned lengths are skipped too
+        let mut c2 = cache();
+        let odd: Vec<u32> = (0..6).collect();
+        insert_prompt(&mut c2, &mut p, &odd);
+        assert_eq!(c2.stats().inserts, 0, "non-page-aligned insert skipped");
+        p.drained().unwrap();
+    }
+
+    #[test]
+    fn context_key_distinguishes_static_mode_vectors() {
+        let s1 = Policy::Static {
+            modes: vec![AttnMode::Fa, AttnMode::Ssa],
+            decode: DecodeMode::Dense,
+        };
+        let s2 = Policy::Static {
+            modes: vec![AttnMode::Ssa, AttnMode::Fa],
+            decode: DecodeMode::Dense,
+        };
+        assert_eq!(s1.label(), s2.label(), "labels collide by construction");
+        assert_ne!(context_key(&s1, "r"), context_key(&s2, "r"), "keys must not");
+        assert_ne!(
+            context_key(&Policy::Backbone, "a"),
+            context_key(&Policy::Backbone, "b"),
+            "router name partitions trees"
+        );
+    }
+
+    #[test]
+    fn waypoint_nodes_are_not_endpoints_for_sparse_decode() {
+        // a sparse-decode route with no ring snapshot is unusable as a
+        // hit endpoint, but still shares pages once rings arrive via a
+        // deeper node — here we just pin the visibility rule
+        let n = Node {
+            parent: None,
+            children: Vec::new(),
+            edge: vec![0; PAGE],
+            depth: PAGE,
+            segs: Vec::new(),
+            rings: vec![None; LAYERS],
+            route: vec![AttnMode::Fa, AttnMode::Ssa],
+            decode_mode: DecodeMode::Sparse,
+            pins: 0,
+            last_use: 0,
+            zombie: false,
+            key: "k".into(),
+        };
+        assert!(!node_usable(&n), "missing ring on an SSA layer");
+        let mut ok = n;
+        ok.rings[1] = Some(RingSnap {
+            block: PageBlock { start: 0, pages: 1 },
+            sink_len: 0,
+            total_seen: PAGE,
+        });
+        assert!(node_usable(&ok), "FA layers never need rings");
+    }
+}

@@ -6,17 +6,20 @@
 //!                                [--chunk-tokens N] [--chunk-budget N]
 //!                                [--round-timeout-ms N] [--restart-max N]
 //!                                [--restart-backoff-ms N] [--drain-ms N]
+//!                                [--prefix-cache] [--prefix-cache-pages N]
 //!        (chunk-tokens 0 = monolithic prefill; default 128 interleaves
 //!        prefill chunks with batched decode rounds, DESIGN.md §10;
 //!        round-timeout-ms arms the engine-round watchdog, restart-*
 //!        bound engine respawns after a crash, and SIGINT/SIGTERM
 //!        drain in-flight streams for up to drain-ms before exit,
-//!        DESIGN.md §12)
+//!        DESIGN.md §12; prefix-cache enables cross-request KV reuse
+//!        of shared prompt prefixes, capped at prefix-cache-pages pool
+//!        pages — default half the pool — DESIGN.md §13)
 //!   flux [--artifacts DIR] generate [--task T] [--seq-len N]
 //!                                   [--policy P] [--router R] [--sparse-decode]
 //!                                   [--stream] [--deadline-ms N]
 //!   flux [--artifacts DIR] experiment <id> [--n N] [--seq-len N]
-//!        ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves all
+//!        ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves route_ledger all
 //!   flux [--artifacts DIR] bench-serve [--requests N] [--seq-len N]
 //!                                      [--rate R] [--policy P]
 //!   flux [--artifacts DIR] bench [--smoke] [--seq-len N] [--tokens N]
@@ -173,6 +176,10 @@ fn run() -> Result<()> {
                 engine_restart_backoff_ms: args
                     .get_opt_u64("restart-backoff-ms")
                     .unwrap_or(defaults.engine_restart_backoff_ms),
+                prefix_cache: args.has("prefix-cache"),
+                prefix_cache_pages: args
+                    .get_opt_u64("prefix-cache-pages")
+                    .map(|v| v as usize),
                 ..Default::default()
             };
             let coord = Coordinator::start(engine, scfg)?;
@@ -338,7 +345,7 @@ fn run() -> Result<()> {
             eprintln!("  serve --chunk-tokens N sizes prefill chunks (0 = monolithic), --chunk-budget N caps chunks per decode round");
             eprintln!("  serve --round-timeout-ms N arms the engine watchdog; --restart-max/--restart-backoff-ms bound respawns; --drain-ms N caps SIGINT/SIGTERM drain (default 30000)");
             eprintln!("  serve reads FLUX_FAULT_SEED / FLUX_FAULT_PLAN for deterministic fault injection (chaos testing)");
-            eprintln!("experiment ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves all");
+            eprintln!("experiment ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves route_ledger all");
             Ok(())
         }
     }
@@ -423,6 +430,7 @@ fn run_experiment(engine: &mut Engine, id: &str, n: usize, seq_len: usize) -> Re
         "fig9" => experiments::fig9(engine),
         "cases" => experiments::cases(engine),
         "kvmem" => experiments::kv_memory(engine, seq_len),
+        "route_ledger" => experiments::route_ledger(engine, n, seq_len),
         "curves" => {
             let dir = engine.cfg().artifacts_dir.clone();
             experiments::curves(&dir)
@@ -430,7 +438,7 @@ fn run_experiment(engine: &mut Engine, id: &str, n: usize, seq_len: usize) -> Re
         "all" => {
             for e in [
                 "fig1a", "fig1b", "table1", "table2", "fig3", "fig4", "fig5", "fig8", "fig9",
-                "cases", "kvmem", "curves",
+                "cases", "kvmem", "curves", "route_ledger",
             ] {
                 println!("\n################ {e} ################");
                 run_experiment(engine, e, n, seq_len)?;

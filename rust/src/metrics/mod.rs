@@ -131,6 +131,21 @@ pub struct ServingMetrics {
     pub pages_free: u64,
     /// High-water mark of `pages_allocated` over the engine's lifetime.
     pub pages_peak: u64,
+    /// Prefill admissions that matched a cached prefix in the radix
+    /// prefix cache (DESIGN.md §13) and skipped prefill for the shared
+    /// run; only counted while the cache is enabled.
+    pub prefix_hits: u64,
+    /// Prefill admissions that ran cold with the prefix cache enabled.
+    pub prefix_misses: u64,
+    /// Total prompt tokens whose KV was reused from the prefix cache
+    /// instead of being recomputed.
+    pub prefix_tokens_reused: u64,
+    /// Cumulative prefix-cache nodes evicted under index-capacity or
+    /// pool pressure (engine-absolute, snapshotted from decode rounds).
+    pub prefix_evictions: u64,
+    /// Pool pages currently retained by the prefix-cache index — pages
+    /// `drained()` would otherwise report as leaked (gauge).
+    pub prefix_retained_pages: u64,
     /// Omega_MSR sum + count per policy label
     omsr: HashMap<String, (f64, u64)>,
 }
@@ -180,7 +195,9 @@ impl ServingMetrics {
              decode_p50={:.2}ms decode_tput={:.1}tok/s rounds={} batch_p50={}req \
              prefill_chunks={} decode_stall={:.1}ms \
              fa_slots={} sa_slots={} kv_moved={}B kv_borrowed={}B \
-             pages={}/{} pages_peak={} overloaded={} restarts={} watchdog_trips={}",
+             pages={}/{} pages_peak={} overloaded={} restarts={} watchdog_trips={} \
+             prefix_hits={} prefix_misses={} prefix_reused={}tok \
+             prefix_evictions={} prefix_retained={}pages",
             self.requests_completed,
             self.requests_rejected,
             self.requests_cancelled,
@@ -206,6 +223,11 @@ impl ServingMetrics {
             self.requests_overloaded,
             self.engine_restarts,
             self.watchdog_trips,
+            self.prefix_hits,
+            self.prefix_misses,
+            self.prefix_tokens_reused,
+            self.prefix_evictions,
+            self.prefix_retained_pages,
         )
     }
 }
@@ -323,6 +345,27 @@ mod tests {
         assert!(s.contains("restarts=2"), "{s}");
         assert!(s.contains("watchdog_trips=1"), "{s}");
         assert!(s.contains("failed=4"), "{s}");
+    }
+
+    /// Prefix-cache counters (DESIGN.md §13) surface in the summary
+    /// line: hit/miss split, tokens reused, evictions, retained pages.
+    #[test]
+    fn summary_reports_prefix_cache_counters() {
+        let mut m = ServingMetrics::default();
+        let s = m.summary();
+        assert!(s.contains("prefix_hits=0"), "{s}");
+        assert!(s.contains("prefix_retained=0pages"), "{s}");
+        m.prefix_hits = 3;
+        m.prefix_misses = 1;
+        m.prefix_tokens_reused = 96;
+        m.prefix_evictions = 2;
+        m.prefix_retained_pages = 12;
+        let s = m.summary();
+        assert!(s.contains("prefix_hits=3"), "{s}");
+        assert!(s.contains("prefix_misses=1"), "{s}");
+        assert!(s.contains("prefix_reused=96tok"), "{s}");
+        assert!(s.contains("prefix_evictions=2"), "{s}");
+        assert!(s.contains("prefix_retained=12pages"), "{s}");
     }
 
     #[test]

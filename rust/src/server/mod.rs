@@ -19,7 +19,7 @@
 //! events (server -> client, interleaved across streams):
 //!   {"id":7,"event":"queued"}
 //!   {"id":7,"event":"prefilled","token":t,"omsr":0.5,"modes":[..],
-//!    "ttft_ms":1.2,"queue_ms":0.1}
+//!    "ttft_ms":1.2,"queue_ms":0.1,"cached_prefix_tokens":0}
 //!   {"id":7,"event":"token","token":t,"step_ms":0.8}
 //!   {"id":7,"event":"done","tokens":[..],"text":"...","omsr":0.5,
 //!    "modes":[..],"ttft_ms":1.2,"e2e_ms":3.4,
@@ -465,13 +465,21 @@ fn pump_session(id: u64, handle: SessionHandle, wr: &SharedWriter, sessions: &Se
     while let Some(ev) = handle.recv() {
         let (j, terminal) = match ev {
             SessionEvent::Queued => (frame(id, "queued"), false),
-            SessionEvent::Prefilled { first_token, omsr, modes, ttft_us, queue_us } => {
+            SessionEvent::Prefilled {
+                first_token,
+                omsr,
+                modes,
+                ttft_us,
+                queue_us,
+                cached_prefix_tokens,
+            } => {
                 let mut o = frame(id, "prefilled");
                 o.set("token", Json::from(first_token as usize));
                 o.set("omsr", Json::from(omsr));
                 o.set("modes", Json::from(modes));
                 o.set("ttft_ms", Json::from(ttft_us as f64 / 1e3));
                 o.set("queue_ms", Json::from(queue_us as f64 / 1e3));
+                o.set("cached_prefix_tokens", Json::from(cached_prefix_tokens));
                 (o, false)
             }
             SessionEvent::Token { tok: t, step_us } => {
@@ -548,6 +556,7 @@ fn process_request(coord: &Coordinator, tok: &Tokenizer, parsed: &Json, n_layers
             decode_ms_per_token: r.decode_us_per_token / 1e3,
             queue_ms: r.queue_us as f64 / 1e3,
             error: None,
+            retryable: false,
         },
         Err(e) => error_response(&e.to_string()),
     }
@@ -791,6 +800,7 @@ mod tests {
             decode_ms_per_token: 0.7,
             queue_ms: 0.4,
             error: None,
+            retryable: false,
         };
         let j = Json::parse(&r.to_json().to_string()).unwrap();
         assert!(j.get("queue_ms").is_some(), "queue_ms must be serialized");

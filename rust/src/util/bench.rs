@@ -244,21 +244,23 @@ fn validate_decode_v2(path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// The `flux bench --smoke` CI gate for the serving file's v3 schema
-/// (DESIGN.md §11–12): throughput must be positive, the pool-pressure
+/// The `flux bench --smoke` CI gate for the serving file's v4 schema
+/// (DESIGN.md §11–13): throughput must be positive, the pool-pressure
 /// scenario must be present with a nonzero page high-water mark, at
 /// least one typed overloaded rejection, and verified bit-identical
-/// token streams across page sizes, and the fault-recovery scenario
-/// must show a mid-stream engine kill that was supervised back to
-/// life (≥1 restart, recovered, post-restart bit-identity) — CI fails
-/// if either the paged pool or the failure domain silently stops being
-/// measured.
+/// token streams across page sizes, the fault-recovery scenario must
+/// show a mid-stream engine kill that was supervised back to life
+/// (≥1 restart, recovered, post-restart bit-identity), and the
+/// prefix-reuse scenario must record a nonzero hit rate with tokens
+/// actually reused and warm streams verified bit-identical to the
+/// cold run — CI fails if the paged pool, the failure domain, or the
+/// prefix cache silently stops being measured.
 fn validate_serving(path: &Path) -> Result<()> {
     let j = Json::parse(&std::fs::read_to_string(path)?)
         .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
     anyhow::ensure!(
-        j.get("schema").and_then(Json::as_str) == Some("flux-bench-serving/v3"),
-        "{path:?}: schema must be flux-bench-serving/v3"
+        j.get("schema").and_then(Json::as_str) == Some("flux-bench-serving/v4"),
+        "{path:?}: schema must be flux-bench-serving/v4"
     );
     anyhow::ensure!(
         j.get("tokens_per_s").and_then(Json::as_f64).map(|v| v > 0.0).unwrap_or(false),
@@ -293,6 +295,27 @@ fn validate_serving(path: &Path) -> Result<()> {
     anyhow::ensure!(
         f.get("bit_identical").and_then(Json::as_bool) == Some(true),
         "{path:?}: post-restart stream not verified bit-identical"
+    );
+    let r = j
+        .get("prefix_reuse")
+        .ok_or_else(|| anyhow::anyhow!("{path:?}: missing prefix_reuse scenario"))?;
+    anyhow::ensure!(
+        r.get("hit_rate").and_then(Json::as_f64).map(|v| v > 0.0).unwrap_or(false),
+        "{path:?}: prefix_reuse recorded a zero hit rate"
+    );
+    anyhow::ensure!(
+        r.get("tokens_reused").and_then(Json::as_f64).map(|v| v >= 1.0).unwrap_or(false),
+        "{path:?}: prefix_reuse reused no tokens"
+    );
+    for k in ["ttft_cold_us", "ttft_warm_p50_us"] {
+        anyhow::ensure!(
+            r.get(k).and_then(Json::as_f64).map(|v| v > 0.0).unwrap_or(false),
+            "{path:?}: prefix_reuse missing {k}"
+        );
+    }
+    anyhow::ensure!(
+        r.get("bit_identical").and_then(Json::as_bool) == Some(true),
+        "{path:?}: warm prefix-hit stream not verified bit-identical to the cold run"
     );
     Ok(())
 }
@@ -832,7 +855,7 @@ pub fn run_serving_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<(P
 /// Concurrent-streaming serving scenario over the real TCP wire: N
 /// connections × M in-flight v2 streams each, with one stream per
 /// connection cancelled mid-flight. Emits `BENCH_serving.json`
-/// (schema `flux-bench-serving/v3`) recording aggregate streamed-token
+/// (schema `flux-bench-serving/v4`) recording aggregate streamed-token
 /// throughput and cancelled-request cleanup: after the cancellations a
 /// probe request must admit and complete (proving the scheduler
 /// reclaimed the engine slots), and the coordinator's cancelled counter
@@ -846,7 +869,11 @@ pub fn run_serving_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<(P
 /// fail with a typed error, and the supervisor must respawn the engine
 /// fast enough that a re-submission of a known prompt completes with a
 /// bit-identical stream; the ledger records the observed
-/// time-to-readmit alongside the supervision counters.
+/// time-to-readmit alongside the supervision counters. The v4 schema
+/// adds the prefix-reuse scenario (DESIGN.md §13): sessions sharing a
+/// long system prompt must hit the radix prefix cache, reuse the
+/// shared run's KV, and stream bit-identically to a cold run of the
+/// same prompt, with cold-vs-warm TTFT recorded.
 pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<PathBuf> {
     use crate::config::{MetaConfig, ServingConfig};
     use crate::coordinator::{Coordinator, Request, RequestError};
@@ -1089,9 +1116,87 @@ pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<
         fr_m.engine_restarts, fr_m.requests_failed, time_to_readmit_ms
     );
 
+    // ---- prefix-reuse scenario (DESIGN.md §13): N sessions share a
+    // long system prompt. The first (cold) session seeds the radix
+    // prefix cache; every later session must hit it, skip the shared
+    // run's prefill chunks, and still stream bit-identically to a cold
+    // run of the same prompt. The mixed static FA/SSA sparse-decode
+    // route exercises both the full-cache priming and the ring-snapshot
+    // restore paths. ----
+    let (pr_sessions, pr_prefix_len, pr_decode) =
+        if opts.smoke { (2usize, 192usize, 3usize) } else { (4, 1024, 6) };
+    let pr_page = crate::engine::Engine::DEFAULT_PAGE_TOKENS;
+    let pr_prefix_len =
+        pr_prefix_len.min(*meta.prefill_buckets.last().unwrap() - 64) / pr_page * pr_page;
+    let mut pe = Engine::load(artifacts)?;
+    pe.set_prefix_cache(true, None);
+    let pr_modes: Vec<AttnMode> = (0..n_layers)
+        .map(|l| if l % 2 == 0 { AttnMode::Fa } else { AttnMode::Ssa })
+        .collect();
+    let pr_policy = Policy::Static { modes: pr_modes, decode: DecodeMode::Sparse };
+    let shared: Vec<u32> = (0..pr_prefix_len).map(|i| (i as u32) % 250 + 1).collect();
+    let pr_run = |e: &mut Engine, prompt: &[u32]| -> Result<(Vec<u32>, f64, usize)> {
+        let t_open = Instant::now();
+        let job = e.prefill_open(prompt, &pr_policy, "balanced", 64)?;
+        let (id, report) = loop {
+            if let crate::engine::ChunkOutcome::Done { id, report } = e.prefill_chunk(job)? {
+                break (id, report);
+            }
+        };
+        let ttft_us = t_open.elapsed().as_nanos() as f64 / 1e3;
+        let mut stream = vec![report.first_token];
+        for _ in 0..pr_decode {
+            stream.push(e.decode_step(id)?);
+        }
+        e.release(id);
+        Ok((stream, ttft_us, report.cached_prefix_tokens))
+    };
+    let ref_prompt: Vec<u32> = {
+        let mut p = shared.clone();
+        p.extend((0..8u32).map(|k| (k * 37) % 250 + 1));
+        p
+    };
+    let (cold_stream, ttft_cold_us, cold_cached) = pr_run(&mut pe, &ref_prompt)?;
+    anyhow::ensure!(cold_cached == 0, "the first prefix-reuse session must run cold");
+    let (warm_stream, warm_ttft_ref, warm_cached) = pr_run(&mut pe, &ref_prompt)?;
+    let pr_bit_identical = warm_stream == cold_stream;
+    anyhow::ensure!(
+        pr_bit_identical,
+        "warm prefix-hit stream diverged from the cold run: {warm_stream:?} vs {cold_stream:?}"
+    );
+    anyhow::ensure!(
+        warm_cached == pr_prefix_len,
+        "warm session reused {warm_cached} tokens, expected the {pr_prefix_len}-token shared run"
+    );
+    let mut ttft_warm: Vec<f64> = vec![warm_ttft_ref];
+    for s in 1..pr_sessions {
+        let mut p = shared.clone();
+        p.extend((0..8u32).map(|k| ((s as u32 * 53 + k) * 37) % 250 + 1));
+        let (_, t, cached) = pr_run(&mut pe, &p)?;
+        anyhow::ensure!(
+            cached == pr_prefix_len,
+            "session {s} reused {cached} tokens, expected {pr_prefix_len}"
+        );
+        ttft_warm.push(t);
+    }
+    let st_warm = stats_of(&mut ttft_warm);
+    let pstats = pe.prefix_stats();
+    let hit_rate = pstats.hits as f64 / (pstats.hits + pstats.misses).max(1) as f64;
+    let speedup_ttft = ttft_cold_us / st_warm.p50_us.max(1e-9);
+    pe.prefix_clear();
+    pe.pool().drained().map_err(|e| anyhow::anyhow!("prefix pool not drained: {e}"))?;
+    println!(
+        "prefix reuse: {pr_sessions} warm sessions over a {pr_prefix_len}-token shared prefix, \
+         hit rate {hit_rate:.2}, {} tokens reused, TTFT {:.1} ms cold vs {:.1} ms warm p50 \
+         ({speedup_ttft:.2}x), streams bit-identical",
+        pstats.tokens_reused,
+        ttft_cold_us / 1e3,
+        st_warm.p50_us / 1e3
+    );
+
     let m = coord.metrics.lock().unwrap().clone();
     let mut j = Json::obj();
-    j.set("schema", Json::from("flux-bench-serving/v3"));
+    j.set("schema", Json::from("flux-bench-serving/v4"));
     j.set("measured", Json::from(true));
     j.set("connections", Json::from(n_conns));
     j.set("streams_per_connection", Json::from(n_streams));
@@ -1124,6 +1229,19 @@ pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<
     jf.set("recovered", Json::from(true));
     jf.set("bit_identical", Json::from(fr_bit_identical));
     j.set("fault_recovery", jf);
+    let mut jr = Json::obj();
+    jr.set("sessions", Json::from(pr_sessions + 1));
+    jr.set("prefix_tokens", Json::from(pr_prefix_len));
+    jr.set("hits", Json::from(pstats.hits as usize));
+    jr.set("misses", Json::from(pstats.misses as usize));
+    jr.set("hit_rate", Json::from(hit_rate));
+    jr.set("tokens_reused", Json::from(pstats.tokens_reused as usize));
+    jr.set("evictions", Json::from(pstats.evictions as usize));
+    jr.set("ttft_cold_us", Json::from(ttft_cold_us));
+    jr.set("ttft_warm_p50_us", Json::from(st_warm.p50_us));
+    jr.set("speedup_ttft", Json::from(speedup_ttft));
+    jr.set("bit_identical", Json::from(pr_bit_identical));
+    j.set("prefix_reuse", jr);
     let path = opts.out_dir.join("BENCH_serving.json");
     std::fs::write(&path, j.to_string())?;
     validate_serving(&path)?;
@@ -1222,21 +1340,21 @@ mod tests {
     }
 
     #[test]
-    fn serving_v3_validation_gates_on_pool_pressure_and_fault_recovery() {
-        let dir = std::env::temp_dir().join(format!("flux-bench-sv3-{}", std::process::id()));
+    fn serving_v4_validation_gates_on_pool_fault_and_prefix_scenarios() {
+        let dir = std::env::temp_dir().join(format!("flux-bench-sv4-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
-        let old = dir.join("v2.json");
-        std::fs::write(&old, r#"{"schema": "flux-bench-serving/v2", "tokens_per_s": 10.0}"#)
+        let old = dir.join("v3.json");
+        std::fs::write(&old, r#"{"schema": "flux-bench-serving/v3", "tokens_per_s": 10.0}"#)
             .unwrap();
-        assert!(validate_serving(&old).is_err(), "v2 schema must fail the v3 gate");
+        assert!(validate_serving(&old).is_err(), "v3 schema must fail the v4 gate");
         let no_pool = dir.join("no_pool.json");
-        std::fs::write(&no_pool, r#"{"schema": "flux-bench-serving/v3", "tokens_per_s": 10.0}"#)
+        std::fs::write(&no_pool, r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0}"#)
             .unwrap();
         assert!(validate_serving(&no_pool).is_err(), "missing pool_pressure must fail");
         let idle = dir.join("idle.json");
         std::fs::write(
             &idle,
-            r#"{"schema": "flux-bench-serving/v3", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 0, "overloaded_rejections": 1,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
@@ -1247,7 +1365,7 @@ mod tests {
         let unrejected = dir.join("unrejected.json");
         std::fs::write(
             &unrejected,
-            r#"{"schema": "flux-bench-serving/v3", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 0,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
@@ -1258,7 +1376,7 @@ mod tests {
         let diverged = dir.join("diverged.json");
         std::fs::write(
             &diverged,
-            r#"{"schema": "flux-bench-serving/v3", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": false},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
@@ -1269,7 +1387,7 @@ mod tests {
         let no_fault = dir.join("no_fault.json");
         std::fs::write(
             &no_fault,
-            r#"{"schema": "flux-bench-serving/v3", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": true}}"#,
         )
@@ -1278,7 +1396,7 @@ mod tests {
         let unrecovered = dir.join("unrecovered.json");
         std::fs::write(
             &unrecovered,
-            r#"{"schema": "flux-bench-serving/v3", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": false, "engine_restarts": 0,
@@ -1286,14 +1404,56 @@ mod tests {
         )
         .unwrap();
         assert!(validate_serving(&unrecovered).is_err(), "unrecovered engine must fail");
-        let good = dir.join("good.json");
+        let no_prefix = dir.join("no_prefix.json");
         std::fs::write(
-            &good,
-            r#"{"schema": "flux-bench-serving/v3", "tokens_per_s": 10.0,
+            &no_prefix,
+            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
-                                   "time_to_readmit_ms": 30.5, "bit_identical": true}}"#,
+                                   "bit_identical": true}}"#,
+        )
+        .unwrap();
+        assert!(validate_serving(&no_prefix).is_err(), "missing prefix_reuse must fail");
+        let cold_prefix = dir.join("cold_prefix.json");
+        std::fs::write(
+            &cold_prefix,
+            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
+                "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
+                                  "bit_identical": true},
+                "fault_recovery": {"recovered": true, "engine_restarts": 1,
+                                   "bit_identical": true},
+                "prefix_reuse": {"hit_rate": 0.0, "tokens_reused": 0,
+                                 "ttft_cold_us": 900.0, "ttft_warm_p50_us": 300.0,
+                                 "bit_identical": true}}"#,
+        )
+        .unwrap();
+        assert!(validate_serving(&cold_prefix).is_err(), "zero hit rate must fail");
+        let warm_diverged = dir.join("warm_diverged.json");
+        std::fs::write(
+            &warm_diverged,
+            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
+                "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
+                                  "bit_identical": true},
+                "fault_recovery": {"recovered": true, "engine_restarts": 1,
+                                   "bit_identical": true},
+                "prefix_reuse": {"hit_rate": 0.8, "tokens_reused": 4096,
+                                 "ttft_cold_us": 900.0, "ttft_warm_p50_us": 300.0,
+                                 "bit_identical": false}}"#,
+        )
+        .unwrap();
+        assert!(validate_serving(&warm_diverged).is_err(), "diverged warm stream must fail");
+        let good = dir.join("good.json");
+        std::fs::write(
+            &good,
+            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
+                "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
+                                  "bit_identical": true},
+                "fault_recovery": {"recovered": true, "engine_restarts": 1,
+                                   "time_to_readmit_ms": 30.5, "bit_identical": true},
+                "prefix_reuse": {"hit_rate": 0.8, "tokens_reused": 4096,
+                                 "ttft_cold_us": 900.0, "ttft_warm_p50_us": 300.0,
+                                 "bit_identical": true}}"#,
         )
         .unwrap();
         validate_serving(&good).unwrap();

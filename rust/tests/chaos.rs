@@ -408,6 +408,70 @@ fn drain_finishes_inflight_streams_and_rejects_new_admissions() {
     drop(engine);
 }
 
+/// A head-of-line request PARKED on batch budgets must be failed when
+/// the drain starts — with the same typed retryable `Draining` a queued
+/// arrival gets — instead of sitting in the parked slot until the
+/// in-flight set retires (the pre-fix behavior left it stranded past
+/// the drain deadline). The in-flight stream still finishes normally.
+#[test]
+fn drain_rejects_parked_head_of_line_request() {
+    let mut rng = Rng::seed_from_u64(76);
+    let a_prompt = generate(Task::PRe, &mut rng, 96).prompt;
+    let b_prompt = generate(Task::Gov, &mut rng, 96).prompt;
+    // the token budget admits A's worst case (96 + 200) alone but not
+    // A + B (96 + 8) together, so B parks behind A instead of batching
+    let (coord, engine) = start_coordinator(ServingConfig {
+        max_batch_total_tokens: 320,
+        ..Default::default()
+    });
+    let ha = coord
+        .open(Request { prompt: a_prompt, max_new: 200, ignore_eos: true, ..Default::default() })
+        .unwrap();
+    // wait until A is genuinely in flight so B cannot co-admit
+    loop {
+        match ha.recv_timeout(TIMEOUT) {
+            Some(SessionEvent::Queued) => {}
+            Some(SessionEvent::Prefilled { .. }) | Some(SessionEvent::Token { .. }) => break,
+            Some(ev) => panic!("unexpected event before the drain: {ev:?}"),
+            None => panic!("stream A closed before prefill"),
+        }
+    }
+    let hb = coord
+        .open(Request { prompt: b_prompt, max_new: 8, ignore_eos: true, ..Default::default() })
+        .unwrap();
+    // wait until the scheduler has pulled B off the queue — with A
+    // holding the token budget, B is now sitting in the parked slot
+    // (A still has ~200 decode rounds to stream, so it cannot have
+    // retired and re-admitted B this early)
+    let deadline = std::time::Instant::now() + TIMEOUT;
+    while coord.queue_depth() > 0 {
+        assert!(std::time::Instant::now() < deadline, "scheduler never picked B up");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    assert!(coord.drain(Duration::from_secs(60)), "drain must complete within the deadline");
+
+    // B was parked (or at worst still queued): either way the drain
+    // must retire it synchronously with the typed retryable error and
+    // zero streamed tokens
+    let ob = drain_session(&hb);
+    assert_eq!(ob.terminals, 1, "the parked stream must see exactly one terminal event");
+    assert!(ob.tokens.is_empty(), "a parked request must never stream tokens through a drain");
+    let err = ob.error.expect("the parked request must retire with a typed error");
+    assert_eq!(err, RequestError::Draining);
+    assert!(err.retryable(), "Draining must be marked retryable (another replica may serve)");
+
+    // the in-flight stream was untouched: one Done, all 200 tokens
+    let oa = drain_session(&ha);
+    assert_eq!(oa.terminals, 1);
+    assert!(oa.error.is_none(), "drain must never error the in-flight stream: {:?}", oa.error);
+    assert_eq!(oa.done.expect("A must finish").tokens.len(), 200);
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.requests_completed, 1);
+    drop(m);
+    drop(engine);
+}
+
 /// With the restart budget exhausted (`engine_restart_max: 0`), a dead
 /// engine fails everything typed and the scheduler shuts down — no
 /// restart, no hang, and later submissions still get a typed error.

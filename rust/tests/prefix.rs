@@ -1,0 +1,333 @@
+//! Cross-request prefix cache acceptance suite (DESIGN.md §13).
+//!
+//! Pins the four gates ISSUE 8 names for `kvcache::prefix`:
+//! * a warm hit's token stream is BIT-IDENTICAL to the cold run of the
+//!   same prompt (the pinned cached route + pool-internal KV copy must
+//!   be invisible to the math), under dense AND sparse decode;
+//! * a full-prefix hit skips every prefix prefill chunk — only the
+//!   suffix runs, visible in `PrefillReport::chunks`,
+//!   `cached_prefix_tokens` and the backend's `rows_valid` ledger;
+//! * eviction under pool pressure frees pages and NEVER takes a node a
+//!   live prefill job holds pinned — the allocation fails typed
+//!   instead;
+//! * the pool drains back to fully-free once the cache is cleared, for
+//!   straight-line runs and for seeded interleavings of hits, misses,
+//!   mid-prefill cancels, evictions and clears (the satellite-3
+//!   property, wired through `common::assert_pool_drained`).
+
+use std::path::PathBuf;
+
+use flux_attention::engine::{ChunkOutcome, Engine, EngineHandle, PrefillReport};
+use flux_attention::router::{AttnMode, DecodeMode, Policy};
+use flux_attention::runtime::synthetic;
+use flux_attention::util::rng::Rng;
+
+mod common;
+
+const PAGE: usize = Engine::DEFAULT_PAGE_TOKENS;
+/// Chunk size used throughout: page-aligned so cold insert boundaries
+/// land without clamping, small enough that a 104-token prompt needs
+/// several chunks.
+const CHUNK: usize = 32;
+
+fn artifacts() -> PathBuf {
+    synthetic::ensure_default().expect("artifact generation must not fail")
+}
+
+/// Deterministic prompt: `shared_pages` full pages of shared prefix
+/// (the cacheable run) followed by a short suffix derived from `salt`.
+/// The suffix stays under one page so every prompt built from the same
+/// `shared_pages` inserts and hits the exact same page-aligned prefix.
+fn prompt_with_suffix(shared_pages: usize, salt: u32) -> Vec<u32> {
+    let mut p: Vec<u32> = (0..shared_pages * PAGE).map(|i| (i as u32 * 7) % 500 + 1).collect();
+    p.extend((0..8u32).map(|k| (salt.wrapping_mul(53) + k * 37) % 500 + 1));
+    p
+}
+
+/// Run a full chunked prefill to `Done`.
+fn chunked(e: &mut Engine, prompt: &[u32], policy: &Policy) -> (u64, PrefillReport) {
+    let job = e.prefill_open(prompt, policy, "balanced", CHUNK).expect("prefill_open");
+    loop {
+        if let ChunkOutcome::Done { id, report } = e.prefill_chunk(job).expect("prefill_chunk") {
+            return (id, report);
+        }
+    }
+}
+
+/// Chunked prefill + `n_decode` greedy steps; releases the request and
+/// returns the full stream (first token + decode tokens) and report.
+fn stream(
+    e: &mut Engine,
+    prompt: &[u32],
+    policy: &Policy,
+    n_decode: usize,
+) -> (Vec<u32>, PrefillReport) {
+    let (id, report) = chunked(e, prompt, policy);
+    let mut toks = vec![report.first_token];
+    for _ in 0..n_decode {
+        toks.push(e.decode_step(id).expect("decode_step"));
+    }
+    e.release(id);
+    (toks, report)
+}
+
+/// Gate (a), dense decode: the warm-hit stream must be byte-identical
+/// to the cold-start stream of the same prompt, and to a run on an
+/// engine with the cache disabled (the cache path must not perturb the
+/// math in either direction).
+#[test]
+fn warm_hit_stream_is_bit_identical_to_cold_dense() {
+    let policy = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Dense };
+    let prompt = prompt_with_suffix(3, 1); // 96 shared + 8 suffix
+
+    let mut off = Engine::load(&artifacts()).unwrap();
+    let (reference, off_report) = stream(&mut off, &prompt, &policy, 8);
+    assert_eq!(off_report.cached_prefix_tokens, 0, "the cache starts disabled");
+
+    let mut e = Engine::load(&artifacts()).unwrap();
+    e.set_prefix_cache(true, None);
+    let (cold, cold_report) = stream(&mut e, &prompt, &policy, 8);
+    assert_eq!(cold_report.cached_prefix_tokens, 0, "first run must be cold");
+    assert_eq!(cold, reference, "an enabled-but-empty cache must not change the stream");
+
+    let (warm, warm_report) = stream(&mut e, &prompt, &policy, 8);
+    assert_eq!(warm_report.cached_prefix_tokens, 3 * PAGE, "the warm run must hit the cache");
+    assert_eq!(warm, cold, "warm-hit stream diverged from the cold run");
+
+    // a different suffix over the same shared prefix also hits, and its
+    // own cold reference (cache off) matches bit-for-bit
+    let prompt2 = prompt_with_suffix(3, 2);
+    let (warm2, warm2_report) = stream(&mut e, &prompt2, &policy, 8);
+    assert_eq!(warm2_report.cached_prefix_tokens, 3 * PAGE);
+    let (ref2, _) = stream(&mut off, &prompt2, &policy, 8);
+    assert_eq!(warm2, ref2, "warm stream under a new suffix diverged from its cold reference");
+
+    let stats = e.prefix_stats();
+    assert_eq!(stats.hits, 2);
+    assert_eq!(stats.misses, 1);
+    assert_eq!(stats.tokens_reused, 2 * 3 * PAGE as u64);
+    e.prefix_clear();
+    e.pool().drained().expect("pool must drain after clear");
+}
+
+/// Gate (a), sparse decode: ring snapshots captured at the insert
+/// boundary must restore to the exact decode state the cold run had —
+/// streams stay bit-identical through the sparse ring path too.
+#[test]
+fn warm_hit_stream_is_bit_identical_to_cold_sparse() {
+    let policy = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Sparse };
+    let prompt = prompt_with_suffix(3, 3);
+
+    let mut e = Engine::load(&artifacts()).unwrap();
+    e.set_prefix_cache(true, None);
+    let (cold, cold_report) = stream(&mut e, &prompt, &policy, 8);
+    assert_eq!(cold_report.cached_prefix_tokens, 0);
+
+    let (warm, warm_report) = stream(&mut e, &prompt, &policy, 8);
+    assert_eq!(
+        warm_report.cached_prefix_tokens,
+        3 * PAGE,
+        "sparse-decode endpoint must be usable (ring snapshots stored)"
+    );
+    assert_eq!(warm, cold, "sparse-decode warm stream diverged from the cold run");
+    assert_eq!(warm_report.modes, cold_report.modes, "the hit must pin the stored route");
+
+    e.prefix_clear();
+    e.pool().drained().expect("pool must drain after clear");
+}
+
+/// Gate (b): a full-prefix hit runs only the suffix — one chunk instead
+/// of the cold run's four, `cached_prefix_tokens` covering the shared
+/// pages, and the backend's valid-row ledger showing the prefix rows
+/// were never recomputed.
+#[test]
+fn full_prefix_hit_skips_prefix_chunks() {
+    let policy = Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Dense };
+    let prompt = prompt_with_suffix(3, 4); // 104 tokens → 4 chunks of 32 cold
+
+    let mut e = Engine::load(&artifacts()).unwrap();
+    e.set_prefix_cache(true, None);
+
+    let (v0, _) = e.prefill_row_totals();
+    let (cold_id, cold_report) = chunked(&mut e, &prompt, &policy);
+    let (v1, _) = e.prefill_row_totals();
+    e.release(cold_id);
+    let cold_rows = v1 - v0;
+    assert!(cold_report.chunks >= 2, "the cold run must be genuinely chunked");
+    assert!(cold_rows > 0);
+
+    let (warm_id, warm_report) = chunked(&mut e, &prompt, &policy);
+    let (v2, _) = e.prefill_row_totals();
+    e.release(warm_id);
+    let warm_rows = v2 - v1;
+    assert_eq!(warm_report.chunks, 1, "a full-prefix hit must run only the suffix chunk");
+    assert_eq!(warm_report.cached_prefix_tokens, 3 * PAGE);
+    assert!(warm_rows > 0, "the suffix chunk still computes real rows");
+    assert!(
+        warm_rows < cold_rows / 2,
+        "warm run recomputed prefix rows: {warm_rows} valid rows vs {cold_rows} cold"
+    );
+
+    e.prefix_clear();
+    e.pool().drained().expect("pool must drain after clear");
+}
+
+/// Gate (c): under pool pressure `evict_for` reclaims unpinned cached
+/// prefixes but never one a live prefill job holds pinned — the
+/// allocation fails typed while the pin is held, succeeds after it
+/// drops, and the capacity budget then evicts the LRU entry to admit
+/// the next insert.
+#[test]
+fn eviction_frees_pages_and_never_takes_pinned_nodes() {
+    // Synthetic geometry (4 layers, 32-token pages): a 104-token prompt
+    // buckets to 128 → 16 staging pages; a 96-token prefix retains 12.
+    // 36 total pages fit one live job + one cached prefix but NOT a
+    // second concurrent staging allocation; capacity 12 fits exactly
+    // one cached prefix, so a second insert must evict the first.
+    let mut e = Engine::load_with_pool(&artifacts(), Some((PAGE, 36 * PAGE))).unwrap();
+    assert_eq!(e.pool().total_pages(), 36);
+    e.set_prefix_cache(true, Some(12));
+    let modes = vec![AttnMode::Fa, AttnMode::Ssa, AttnMode::Fa, AttnMode::Ssa];
+    let policy = Policy::Static { modes, decode: DecodeMode::Dense };
+
+    // seed prefix A (96 tokens = 12 pages retained)
+    let prompt_a = prompt_with_suffix(3, 10);
+    let (id, report) = chunked(&mut e, &prompt_a, &policy);
+    assert_eq!(report.cached_prefix_tokens, 0);
+    e.release(id);
+    assert_eq!(e.prefix_retained_pages(), 12);
+
+    // open (but do not run) a warm job on A: the hit pins the node for
+    // the job's whole lifetime
+    let warm_prompt = prompt_with_suffix(3, 11);
+    let warm_job = e.prefill_open(&warm_prompt, &policy, "balanced", CHUNK).unwrap();
+    assert_eq!(e.pool().pages_free(), 36 - 16 - 12, "warm staging + retained prefix");
+
+    // a second cold open needs 16 staging pages but only 8 are free;
+    // the only evictable candidate is pinned, so the open must fail
+    // typed — and must NOT have stolen the pinned pages
+    let prompt_b = {
+        let mut p: Vec<u32> = (0..3 * PAGE).map(|i| (i as u32 * 11) % 500 + 1).collect();
+        p.extend([9, 9, 9, 9, 9, 9, 9, 9]);
+        p
+    };
+    let err = e.prefill_open(&prompt_b, &policy, "balanced", CHUNK);
+    assert!(err.is_err(), "pool pressure with only pinned nodes must fail the allocation");
+    assert_eq!(e.prefix_stats().evictions, 0, "a pinned node must never be evicted");
+    assert_eq!(e.prefix_retained_pages(), 12, "the pinned prefix kept its pages");
+
+    // the pinned job still completes correctly off the cached pages
+    let (warm_id, warm_report) = loop {
+        if let ChunkOutcome::Done { id, report } = e.prefill_chunk(warm_job).unwrap() {
+            break (id, report);
+        }
+    };
+    assert_eq!(warm_report.cached_prefix_tokens, 3 * PAGE);
+    e.release(warm_id); // pin dropped with the job; request pages freed
+
+    // now the same open succeeds, and its insert evicts LRU prefix A
+    // under the 12-page capacity budget — freeing pages for real
+    let (b_id, b_report) = chunked(&mut e, &prompt_b, &policy);
+    assert_eq!(b_report.cached_prefix_tokens, 0);
+    e.release(b_id);
+    let stats = e.prefix_stats();
+    assert_eq!(stats.evictions, 1, "inserting B past capacity must evict A");
+    assert_eq!(e.prefix_retained_pages(), 12, "only B's prefix remains retained");
+
+    // B is cached (warm hit) while A was evicted (cold again). Order
+    // matters: A2's completion re-inserts A's prefix, which under the
+    // one-entry capacity budget evicts B in turn — so probe B first.
+    let warm_b = {
+        let mut p = prompt_b.clone();
+        let n = p.len();
+        p[n - 1] ^= 1;
+        p
+    };
+    let (b2_id, b2_report) = chunked(&mut e, &warm_b, &policy);
+    e.release(b2_id);
+    assert_eq!(b2_report.cached_prefix_tokens, 3 * PAGE, "the surviving prefix must hit");
+    let (a2_id, a2_report) = chunked(&mut e, &prompt_a, &policy);
+    e.release(a2_id);
+    assert_eq!(a2_report.cached_prefix_tokens, 0, "the evicted prefix must miss");
+
+    // gate (d) on the small pool: clear releases every retained page
+    e.prefix_clear();
+    e.pool().drained().expect("pool must drain to zero after cache clear");
+}
+
+/// Satellite 3: seeded interleavings of hit/miss runs, mid-prefill
+/// cancels, capacity evictions and index clears always leave the pool
+/// fully drained once the cache is cleared and every request released —
+/// checked through the shared `common::assert_pool_drained` helper the
+/// rest of the integration suite uses.
+#[test]
+fn interleaved_schedules_always_drain_the_pool() {
+    let engine = EngineHandle::spawn(artifacts()).unwrap();
+    // capacity 24 pages ≈ two 96-token prefixes: the third distinct
+    // insert forces an eviction, so schedules exercise that path too
+    engine.set_prefix_cache(true, Some(24)).unwrap();
+    let policies = [
+        Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Dense },
+        Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Sparse },
+    ];
+
+    for seed in 0..3u64 {
+        let mut rng = Rng::seed_from_u64(0xF1 + seed);
+        for op in 0..20 {
+            let shared_pages = 2 + rng.gen_range(3); // 64/96/128-token shared runs
+            let salt = (seed * 1000 + op) as u32;
+            let mut prompt = prompt_with_suffix(shared_pages, salt);
+            // occasionally extend past one page so inserts split/nest
+            for _ in 0..rng.gen_range(3) * 16 {
+                prompt.push(rng.range_u32(1, 500));
+            }
+            let policy = &policies[rng.gen_range(2)];
+            match rng.gen_range(10) {
+                // mid-prefill cancel: open, run 0-1 chunks, drop the job
+                // (a warm full-prefix hit can finish in its first chunk
+                // — release the promoted request instead)
+                0 | 1 => {
+                    let job = engine
+                        .prefill_open(prompt, policy.clone(), "balanced".into(), CHUNK)
+                        .unwrap();
+                    if rng.gen_range(2) == 1 {
+                        match engine.prefill_chunk(job).unwrap() {
+                            ChunkOutcome::Done { id, .. } => engine.release(id),
+                            ChunkOutcome::More { .. } => engine.prefill_cancel(job),
+                        }
+                    } else {
+                        engine.prefill_cancel(job);
+                    }
+                }
+                // index clear with whatever is pinned/retained right now
+                2 => engine.prefix_clear().unwrap(),
+                // ordinary run: prefill (hit or miss), a few decode
+                // steps, release
+                _ => {
+                    let job = engine
+                        .prefill_open(prompt, policy.clone(), "balanced".into(), CHUNK)
+                        .unwrap();
+                    let id = loop {
+                        if let ChunkOutcome::Done { id, .. } = engine.prefill_chunk(job).unwrap() {
+                            break id;
+                        }
+                    };
+                    for _ in 0..rng.gen_range(3) {
+                        engine.decode_step(id).unwrap();
+                    }
+                    engine.release(id);
+                }
+            }
+            let stats = engine.prefix_stats().unwrap();
+            assert!(
+                stats.retained_pages <= 24,
+                "seed {seed} op {op}: the capacity budget must bound retention, got {} pages",
+                stats.retained_pages
+            );
+        }
+        engine.prefix_clear().unwrap();
+        common::assert_pool_drained(&engine);
+    }
+    let stats = engine.prefix_stats().unwrap();
+    assert!(stats.hits + stats.misses > 0, "the schedules must have exercised the cache");
+}
