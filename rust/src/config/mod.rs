@@ -248,6 +248,26 @@ pub struct ServingConfig {
     /// half the pool. LRU eviction reclaims unreferenced entries under
     /// pool pressure either way.
     pub prefix_cache_pages: Option<usize>,
+    /// data-parallel engine replicas behind the coordinator
+    /// (DESIGN.md §14). Each replica owns its own backend, KV pool and
+    /// (optional) prefix cache, and runs its own scheduler loop;
+    /// dispatch picks the replica least loaded by committed tokens,
+    /// with session affinity toward warm prefix caches. `1` (the
+    /// default) is the single-engine layout of PRs 3–8.
+    pub replicas: usize,
+    /// queue-depth high watermark (DESIGN.md §14): when a replica's
+    /// admission queue reaches this depth it stops accepting dispatch
+    /// (new requests go to other replicas, or are rejected with a
+    /// typed retryable `Overloaded { detail: "queue_watermark" }` when
+    /// every replica is saturated) until the queue drains back to the
+    /// low watermark. `None` disables watermark backpressure — only
+    /// the hard `queue_capacity` bound (`QueueFull`) applies.
+    pub queue_high_watermark: Option<usize>,
+    /// queue-depth low watermark: a saturated replica resumes
+    /// accepting dispatch once its queue depth has drained to this.
+    /// `None` defaults to half the high watermark. The hysteresis gap
+    /// keeps admission from flapping at the boundary.
+    pub queue_low_watermark: Option<usize>,
 }
 
 impl Default for ServingConfig {
@@ -267,6 +287,9 @@ impl Default for ServingConfig {
             engine_restart_backoff_ms: 50,
             prefix_cache: false,
             prefix_cache_pages: None,
+            replicas: 1,
+            queue_high_watermark: None,
+            queue_low_watermark: None,
         }
     }
 }

@@ -95,6 +95,9 @@ pub struct Response {
     pub e2e_us: u64,
     pub decode_us_per_token: f64,
     pub queue_us: u64,
+    /// Which data-parallel replica served the request (DESIGN.md §14;
+    /// 0 on a single-replica coordinator).
+    pub replica: usize,
 }
 
 /// Typed failure modes of the request lifecycle. Admission errors
@@ -110,11 +113,14 @@ pub enum RequestError {
     /// Prompt longer than the largest prefill bucket — rejected before
     /// queueing instead of surfacing as an engine failure.
     PromptTooLong { len: usize, max: usize },
-    /// The request's worst case can never fit the serving budgets
-    /// (`max_batch_prefill_tokens` / `max_batch_total_tokens` / the KV
-    /// page pool) — rejected at admission instead of wedging the
-    /// scheduler behind a request it could never run.
-    Overloaded(String),
+    /// The request cannot be admitted right now (or ever): its worst
+    /// case exceeds a serving budget, or every replica's queue is above
+    /// its high watermark. `detail` is a STABLE token naming which
+    /// budget tripped — `"prefill_tokens"`, `"total_tokens"`,
+    /// `"pages"` (structural: the request can never fit) or
+    /// `"queue_watermark"` (transient: retry after backoff) — carried
+    /// on the wire error frame so clients can tell the two apart.
+    Overloaded { detail: &'static str, message: String },
     /// `deadline_ms` elapsed; the request was evicted between decode
     /// steps and its engine slot and KV cache released.
     DeadlineExceeded,
@@ -128,8 +134,11 @@ pub enum RequestError {
     /// round watchdog: every in-flight request of that engine lifetime
     /// is retired with this, and supervision restarts the engine within
     /// its retry budget (DESIGN.md §12). Retryable — a restarted engine
-    /// serves fresh submissions of the same request.
-    EngineFailed { cause: String, generation: u64 },
+    /// (or, in a replica set, a healthy peer) serves fresh submissions
+    /// of the same request. `replica` names the failed replica
+    /// (DESIGN.md §14; 0 on a single-replica coordinator) and is
+    /// carried on the wire error frame.
+    EngineFailed { cause: String, generation: u64, replica: usize },
     /// The coordinator is draining for shutdown ([`Coordinator::drain`]):
     /// in-flight streams finish, new admissions are rejected.
     Draining,
@@ -144,7 +153,7 @@ impl RequestError {
             RequestError::QueueFull => "queue_full",
             RequestError::Invalid(_) => "invalid",
             RequestError::PromptTooLong { .. } => "prompt_too_long",
-            RequestError::Overloaded(_) => "overloaded",
+            RequestError::Overloaded { .. } => "overloaded",
             RequestError::DeadlineExceeded => "deadline_exceeded",
             RequestError::Cancelled => "cancelled",
             RequestError::Engine(_) => "engine",
@@ -165,10 +174,28 @@ impl RequestError {
         matches!(
             self,
             RequestError::QueueFull
-                | RequestError::Overloaded(_)
+                | RequestError::Overloaded { .. }
                 | RequestError::Draining
                 | RequestError::EngineFailed { .. }
         )
+    }
+
+    /// The stable `Overloaded` detail token (which budget tripped), for
+    /// the wire error frame's `detail` field. `None` for other errors.
+    pub fn overload_detail(&self) -> Option<&'static str> {
+        match self {
+            RequestError::Overloaded { detail, .. } => Some(detail),
+            _ => None,
+        }
+    }
+
+    /// The replica a typed engine failure came from, for the wire error
+    /// frame's `replica` field. `None` for other errors.
+    pub fn failed_replica(&self) -> Option<usize> {
+        match self {
+            RequestError::EngineFailed { replica, .. } => Some(*replica),
+            _ => None,
+        }
     }
 }
 
@@ -182,14 +209,16 @@ impl std::fmt::Display for RequestError {
             RequestError::PromptTooLong { len, max } => {
                 write!(f, "prompt of {len} tokens exceeds the largest prefill bucket ({max})")
             }
-            RequestError::Overloaded(m) => write!(f, "overloaded: {m}"),
+            RequestError::Overloaded { detail, message } => {
+                write!(f, "overloaded ({detail}): {message}")
+            }
             RequestError::DeadlineExceeded => {
                 write!(f, "deadline exceeded: request evicted mid-generation")
             }
             RequestError::Cancelled => write!(f, "request cancelled"),
             RequestError::Engine(m) => write!(f, "engine failure: {m}"),
-            RequestError::EngineFailed { cause, generation } => {
-                write!(f, "engine failed (generation {generation}): {cause}")
+            RequestError::EngineFailed { cause, generation, replica } => {
+                write!(f, "engine failed (replica {replica}, generation {generation}): {cause}")
             }
             RequestError::Draining => {
                 write!(f, "draining: coordinator shutting down, not admitting new requests")
@@ -344,12 +373,38 @@ impl Sink {
     }
 }
 
+/// Committed-token charge against one replica's load gauge
+/// (DESIGN.md §14): taken at dispatch, released when the request
+/// reaches ANY terminal state — the guard rides the request through
+/// `Pending` → `Prefilling` → `Active` and the drop releases it, so no
+/// terminal path can leak load.
+struct LoadGuard {
+    committed: Arc<AtomicUsize>,
+    tokens: usize,
+}
+
+impl LoadGuard {
+    fn charge(committed: &Arc<AtomicUsize>, tokens: usize) -> Self {
+        committed.fetch_add(tokens, Ordering::Relaxed);
+        Self { committed: committed.clone(), tokens }
+    }
+}
+
+impl Drop for LoadGuard {
+    fn drop(&mut self) {
+        self.committed.fetch_sub(self.tokens, Ordering::Relaxed);
+    }
+}
+
 struct Pending {
     req: Request,
     sink: Sink,
     cancel: CancelToken,
     t_arrival: Instant,
     deadline: Option<Instant>,
+    /// Committed-token charge on the replica this request was
+    /// dispatched to; replaced when a failover re-dispatches it.
+    load: Option<LoadGuard>,
 }
 
 /// A request whose prefill job is open on the engine but not yet
@@ -377,10 +432,14 @@ struct Prefilling {
     deadline: Option<Instant>,
     cancel: CancelToken,
     sink: Sink,
+    /// Committed-token charge, released on any terminal (drop).
+    load: Option<LoadGuard>,
 }
 
 struct Active {
     engine_id: u64,
+    /// Which replica's engine owns this request (DESIGN.md §14).
+    replica: usize,
     /// Worst-case reservations inherited from [`Prefilling`], released
     /// at retirement.
     budget_total: usize,
@@ -398,14 +457,23 @@ struct Active {
     deadline: Option<Instant>,
     cancel: CancelToken,
     sink: Sink,
+    /// Committed-token charge, released on any terminal (drop).
+    load: Option<LoadGuard>,
 }
 
-/// Continuous-batching coordinator handle. [`Coordinator::open`] is the
-/// primary API (event-driven session); [`Coordinator::submit`] /
+/// Continuous-batching coordinator handle over a set of R
+/// data-parallel engine replicas (DESIGN.md §14). [`Coordinator::open`]
+/// is the primary API (event-driven session); [`Coordinator::submit`] /
 /// [`Coordinator::submit_async`] are compatibility adapters over it.
+///
+/// Each replica owns its own engine (backend + KV pool + optional
+/// prefix cache), admission queue and scheduler loop; the coordinator
+/// is the dispatch layer on top — least-loaded by committed tokens,
+/// session affinity toward warm prefix caches, queue-depth watermark
+/// backpressure, and per-replica supervision so one replica's death
+/// fails only its own in-flight streams.
 pub struct Coordinator {
-    queue_tx: SyncSender<Pending>,
-    queue_depth: Arc<AtomicUsize>,
+    set: Arc<ReplicaSetInner>,
     /// Largest prefill bucket, fetched from the engine at startup —
     /// longer prompts are rejected at admission with a typed error.
     max_prompt_len: usize,
@@ -418,18 +486,351 @@ pub struct Coordinator {
     /// engine load) — drives worst-case page admission.
     pool_profile: Option<PoolProfile>,
     default_deadline_ms: Option<u64>,
-    /// Drain / shutdown handshake shared with the scheduler thread.
-    shared: Arc<SchedulerShared>,
+    /// The serving config, kept for `drain_replica` rejoin (a fresh
+    /// scheduler loop needs the same knobs).
+    cfg: ServingConfig,
     pub metrics: Arc<Mutex<ServingMetrics>>,
 }
 
-/// Coordinator ↔ scheduler shutdown handshake (DESIGN.md §12): the
-/// drain flag flips admission off; the scheduler signals `done` when it
-/// has retired everything and exited (whatever the reason).
+/// Replica lifecycle as the dispatcher sees it (DESIGN.md §14).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ReplicaState {
+    /// In the dispatch set.
+    Serving,
+    /// `drain_replica` in progress: no new dispatch, in-flight streams
+    /// finish, then the replica respawns and rejoins.
+    Draining,
+    /// Restart budget exhausted (or respawn failed): permanently out of
+    /// the dispatch set; queued work failed over when it died.
+    Dead,
+}
+
+/// The mutable half of a replica slot, swapped atomically on
+/// death / drain-rejoin.
+struct SlotLink {
+    /// `None` once the replica left the serving set (its scheduler
+    /// loop's receiver is gone).
+    queue_tx: Option<SyncSender<Pending>>,
+    /// This replica lifetime's drain/shutdown handshake.
+    shared: Arc<SchedulerShared>,
+    state: ReplicaState,
+}
+
+/// One engine replica: its handle, queue and load gauges.
+struct ReplicaSlot {
+    engine: EngineHandle,
+    /// Depth of the replica's admission queue (shared with its
+    /// scheduler loop, which decrements on dequeue).
+    queue_depth: Arc<AtomicUsize>,
+    /// Committed tokens: Σ (prompt + max_new) over work dispatched here
+    /// and not yet retired — the load signal dispatch balances on
+    /// (tokens, not request count: one 2k-prompt request is not one
+    /// 8-token request).
+    committed_tokens: Arc<AtomicUsize>,
+    /// Watermark hysteresis latch: set when `queue_depth` reaches the
+    /// high watermark, cleared when it drains to the low watermark.
+    saturated: AtomicBool,
+    link: Mutex<SlotLink>,
+}
+
+impl ReplicaSlot {
+    /// Update and read the watermark latch (DESIGN.md §14): depth ≥
+    /// high ⇒ saturated until depth ≤ low. `None` high watermark
+    /// disables backpressure entirely.
+    fn saturated_now(&self, high: Option<usize>, low: usize) -> bool {
+        let Some(high) = high else { return false };
+        let depth = self.queue_depth.load(Ordering::Relaxed);
+        if depth >= high {
+            self.saturated.store(true, Ordering::Relaxed);
+            true
+        } else if depth <= low {
+            self.saturated.store(false, Ordering::Relaxed);
+            false
+        } else {
+            self.saturated.load(Ordering::Relaxed)
+        }
+    }
+}
+
+/// Dispatch state shared by the coordinator handle and every replica's
+/// scheduler loop (the loops hold it `Weak`, so dropping the
+/// coordinator still disconnects the queues and winds the loops down).
+struct ReplicaSetInner {
+    slots: Vec<ReplicaSlot>,
+    /// Global drain flag ([`Coordinator::drain`]): admission off
+    /// everywhere, failover disabled (a draining set has no healthy
+    /// peers to fail over to).
+    draining: AtomicBool,
+    /// Session-affinity index: hash of the prompt's first KV page →
+    /// replica last dispatched a prompt with that head (DESIGN.md §14).
+    /// Warm prefix-cache pages live in exactly one replica's pool, so
+    /// routing shared-prefix traffic there is what turns the §13 cache
+    /// into hits under scale-out. Bounded; cleared wholesale on
+    /// overflow, purged per-replica on death/respawn (the pages died
+    /// with the pool).
+    affinity: Mutex<std::collections::HashMap<u64, usize>>,
+    /// Prompt tokens hashed into the affinity key (one KV page); 0
+    /// disables affinity (prefix cache off).
+    affinity_tokens: usize,
+    queue_high_watermark: Option<usize>,
+    queue_low_watermark: usize,
+    metrics: Arc<Mutex<ServingMetrics>>,
+}
+
+/// Cap on affinity-index entries before a wholesale reset (a trivially
+/// bounded stand-in for LRU: the index is a routing hint, not state).
+const AFFINITY_CAP: usize = 4096;
+
+/// FNV-1a over the token ids of a prompt head — the affinity key.
+fn affinity_key(tokens: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+impl ReplicaSetInner {
+    /// Pick a replica and enqueue `p` (DESIGN.md §14). Policy, in
+    /// order: session affinity (warm prefix pages) when the owner is
+    /// serving and unsaturated; otherwise least committed tokens, ties
+    /// to the lowest index (deterministic). On failure the request is
+    /// handed back with the rejection. `exclude` drops one replica from
+    /// consideration (failover away from the caller).
+    fn dispatch(
+        &self,
+        mut p: Pending,
+        exclude: Option<usize>,
+    ) -> std::result::Result<(), (Pending, RequestError)> {
+        if self.draining.load(Ordering::SeqCst) {
+            return Err((p, RequestError::Draining));
+        }
+        let tokens = p.req.prompt.len() + p.req.max_new;
+        let key = (self.affinity_tokens > 0 && p.req.prompt.len() >= self.affinity_tokens)
+            .then(|| affinity_key(&p.req.prompt[..self.affinity_tokens]));
+        loop {
+            // serving replicas only — a Draining/Dead slot is out of
+            // the dispatch set even though its loop may still be running
+            let serving: Vec<usize> = (0..self.slots.len())
+                .filter(|&i| Some(i) != exclude)
+                .filter(|&i| self.slots[i].link.lock().unwrap().state == ReplicaState::Serving)
+                .collect();
+            if serving.is_empty() {
+                return Err((p, RequestError::Shutdown));
+            }
+            let open: Vec<usize> = serving
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    !self.slots[i]
+                        .saturated_now(self.queue_high_watermark, self.queue_low_watermark)
+                })
+                .collect();
+            if open.is_empty() {
+                // every serving replica is above its high watermark:
+                // typed retryable backpressure BEFORE the queues grow
+                // to the hard capacity bound
+                return Err((
+                    p,
+                    RequestError::Overloaded {
+                        detail: "queue_watermark",
+                        message: format!(
+                            "all {} serving replica queues above the high watermark",
+                            serving.len()
+                        ),
+                    },
+                ));
+            }
+            let affinity_owner = key.and_then(|k| {
+                let map = self.affinity.lock().unwrap();
+                map.get(&k).copied().filter(|i| open.contains(i))
+            });
+            let pick = affinity_owner.unwrap_or_else(|| {
+                *open
+                    .iter()
+                    .min_by_key(|&&i| {
+                        (self.slots[i].committed_tokens.load(Ordering::Relaxed), i)
+                    })
+                    .expect("open is non-empty")
+            });
+            let slot = &self.slots[pick];
+            // charge BEFORE the send so a racing dispatch on another
+            // thread sees this request's load; dropped again on a miss
+            p.load = Some(LoadGuard::charge(&slot.committed_tokens, tokens));
+            let sent = {
+                let link = slot.link.lock().unwrap();
+                match (&link.queue_tx, link.state) {
+                    (Some(tx), ReplicaState::Serving) => tx.try_send(p),
+                    // state flipped between the scan and here: retry
+                    _ => Err(TrySendError::Disconnected(p)),
+                }
+            };
+            match sent {
+                Ok(()) => {
+                    slot.queue_depth.fetch_add(1, Ordering::Relaxed);
+                    if let Some(k) = key {
+                        let mut map = self.affinity.lock().unwrap();
+                        if map.len() >= AFFINITY_CAP {
+                            map.clear();
+                        }
+                        map.insert(k, pick);
+                    }
+                    let mut m = self.metrics.lock().unwrap();
+                    if affinity_owner.is_some() {
+                        m.dispatch_affinity_hits += 1;
+                    }
+                    let r = m.replica_mut(pick);
+                    r.dispatched += 1;
+                    r.committed_tokens =
+                        slot.committed_tokens.load(Ordering::Relaxed) as u64;
+                    r.queue_depth = slot.queue_depth.load(Ordering::Relaxed) as u64;
+                    return Ok(());
+                }
+                Err(TrySendError::Full(mut back)) => {
+                    back.load = None; // release the charge
+                    return Err((back, RequestError::QueueFull));
+                }
+                Err(TrySendError::Disconnected(mut back)) => {
+                    // the replica died between the scan and the send:
+                    // take it out of the set and retry the remainder
+                    back.load = None;
+                    let mut link = slot.link.lock().unwrap();
+                    link.queue_tx = None;
+                    link.state = ReplicaState::Dead;
+                    drop(link);
+                    p = back;
+                }
+            }
+        }
+    }
+
+    /// Drop affinity entries owned by replica `i` — its warm pages died
+    /// with the pool (death, respawn, or drain-rejoin).
+    fn purge_affinity(&self, i: usize) {
+        self.affinity.lock().unwrap().retain(|_, &mut owner| owner != i);
+    }
+}
+
+/// Coordinator ↔ scheduler shutdown handshake (DESIGN.md §12), one per
+/// replica lifetime: the drain flag flips admission off; the scheduler
+/// signals `done` when it has retired everything and exited (whatever
+/// the reason).
 struct SchedulerShared {
     draining: AtomicBool,
     done: Mutex<bool>,
     done_cv: std::sync::Condvar,
+}
+
+impl SchedulerShared {
+    fn new() -> Self {
+        Self {
+            draining: AtomicBool::new(false),
+            done: Mutex::new(false),
+            done_cv: std::sync::Condvar::new(),
+        }
+    }
+
+    /// Block until the loop signals done or `deadline` elapses.
+    fn wait_done(&self, deadline: Duration) -> bool {
+        let t0 = Instant::now();
+        let mut done = self.done.lock().unwrap();
+        while !*done {
+            let Some(remaining) = deadline.checked_sub(t0.elapsed()) else {
+                return false;
+            };
+            let (guard, timeout) = self.done_cv.wait_timeout(done, remaining).unwrap();
+            done = guard;
+            if timeout.timed_out() && !*done {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Spawn (or respawn, on drain-rejoin) replica `i`'s scheduler loop:
+/// fresh queue channel + handshake, thread named `flux-scheduler-<i>`,
+/// slot link swapped in atomically so dispatch migrates with it.
+fn spawn_replica_loop(
+    set: &Arc<ReplicaSetInner>,
+    i: usize,
+    engine: EngineHandle,
+    cfg: &ServingConfig,
+    pool_profile: &Option<PoolProfile>,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+) -> Result<()> {
+    let (queue_tx, queue_rx) = std::sync::mpsc::sync_channel(cfg.queue_capacity);
+    let shared = Arc::new(SchedulerShared::new());
+    let slot = &set.slots[i];
+    let queue_depth = slot.queue_depth.clone();
+    let ctx = ReplicaCtx { index: i, set: Arc::downgrade(set) };
+    {
+        let (cfg, pool_profile, metrics, shared) =
+            (cfg.clone(), pool_profile.clone(), metrics.clone(), shared.clone());
+        std::thread::Builder::new().name(format!("flux-scheduler-{i}")).spawn(move || {
+            let _done = SchedulerDoneGuard(shared.clone());
+            scheduler_loop(engine, cfg, pool_profile, queue_rx, queue_depth, metrics, shared, ctx)
+        })?;
+    }
+    *slot.link.lock().unwrap() =
+        SlotLink { queue_tx: Some(queue_tx), shared, state: ReplicaState::Serving };
+    Ok(())
+}
+
+/// A scheduler loop's view of its own replica set membership: its index
+/// plus a weak ref back to the dispatch layer for failover (weak so a
+/// dropped coordinator still disconnects the queues and ends the loops).
+struct ReplicaCtx {
+    index: usize,
+    set: std::sync::Weak<ReplicaSetInner>,
+}
+
+impl ReplicaCtx {
+    /// Re-dispatch a queued-but-undispatched request to a healthy peer
+    /// (replica death or drain, DESIGN.md §14); falls back to a typed
+    /// rejection with `fallback` when no peer can take it (single
+    /// replica, global drain, or every peer saturated/dead).
+    fn failover_or_reject(
+        &self,
+        metrics: &Arc<Mutex<ServingMetrics>>,
+        p: Pending,
+        fallback: RequestError,
+    ) {
+        match self.set.upgrade() {
+            Some(set) => match set.dispatch(p, Some(self.index)) {
+                Ok(()) => {
+                    metrics.lock().unwrap().dispatch_failovers += 1;
+                }
+                Err((p, _)) => reject_pending(metrics, p, fallback),
+            },
+            None => reject_pending(metrics, p, fallback),
+        }
+    }
+
+    /// Mark this replica permanently failed (restart budget exhausted)
+    /// and purge its affinity entries.
+    fn mark_dead(&self, metrics: &Arc<Mutex<ServingMetrics>>) {
+        if let Some(set) = self.set.upgrade() {
+            let slot = &set.slots[self.index];
+            let mut link = slot.link.lock().unwrap();
+            link.queue_tx = None;
+            link.state = ReplicaState::Dead;
+            drop(link);
+            set.purge_affinity(self.index);
+        }
+        metrics.lock().unwrap().replica_mut(self.index).deaths += 1;
+    }
+
+    /// Purge this replica's affinity entries (fresh engine lifetime:
+    /// the warm pages died with the old pool).
+    fn purge_affinity(&self) {
+        if let Some(set) = self.set.upgrade() {
+            set.purge_affinity(self.index);
+        }
+    }
 }
 
 /// Marks the scheduler as done on every exit path — including a
@@ -445,61 +846,87 @@ impl Drop for SchedulerDoneGuard {
 }
 
 impl Coordinator {
-    /// Start the scheduler thread. Fails — typed, no panic — when the
-    /// engine is unreachable or the thread can't spawn (the serving
-    /// binary turns this into a clean CLI error).
+    /// Start a single-replica coordinator — the PR-3…8 layout, and the
+    /// common test entry point. Equivalent to
+    /// [`Coordinator::start_replicas`] with one engine.
     pub fn start(engine: EngineHandle, cfg: ServingConfig) -> Result<Arc<Self>> {
-        let (queue_tx, queue_rx) = std::sync::mpsc::sync_channel(cfg.queue_capacity);
+        Self::start_replicas(vec![engine], cfg)
+    }
+
+    /// Start the replica set (DESIGN.md §14): one scheduler loop per
+    /// engine, plus the dispatch layer. Fails — typed, no panic — when
+    /// an engine is unreachable or a thread can't spawn (the serving
+    /// binary turns this into a clean CLI error). The engines must
+    /// share artifacts (identical buckets and pool geometry); profile
+    /// data is fetched from the first.
+    pub fn start_replicas(engines: Vec<EngineHandle>, cfg: ServingConfig) -> Result<Arc<Self>> {
+        anyhow::ensure!(!engines.is_empty(), "replica set needs at least one engine");
         let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
-        let queue_depth = Arc::new(AtomicUsize::new(0));
-        let max_prompt_len = engine.max_prompt_len()?;
-        let pool_profile = engine.pool_profile().ok();
-        if cfg.prefix_cache {
-            // the engine boots with the prefix cache disabled; turn it
-            // on before any request can be admitted (DESIGN.md §13)
-            engine.set_prefix_cache(true, cfg.prefix_cache_pages)?;
-        }
-        let shared = Arc::new(SchedulerShared {
+        let max_prompt_len = engines[0].max_prompt_len()?;
+        let pool_profile = engines[0].pool_profile().ok();
+        let low_default = cfg.queue_high_watermark.map(|h| h / 2).unwrap_or(0);
+        let set = Arc::new(ReplicaSetInner {
+            slots: engines
+                .iter()
+                .map(|e| ReplicaSlot {
+                    engine: e.clone(),
+                    queue_depth: Arc::new(AtomicUsize::new(0)),
+                    committed_tokens: Arc::new(AtomicUsize::new(0)),
+                    saturated: AtomicBool::new(false),
+                    link: Mutex::new(SlotLink {
+                        queue_tx: None,
+                        shared: Arc::new(SchedulerShared::new()),
+                        state: ReplicaState::Serving,
+                    }),
+                })
+                .collect(),
             draining: AtomicBool::new(false),
-            done: Mutex::new(false),
-            done_cv: std::sync::Condvar::new(),
+            affinity: Mutex::new(std::collections::HashMap::new()),
+            affinity_tokens: if cfg.prefix_cache {
+                pool_profile.as_ref().map_or(32, |pp| pp.page_tokens.max(1))
+            } else {
+                0
+            },
+            queue_high_watermark: cfg.queue_high_watermark,
+            queue_low_watermark: cfg.queue_low_watermark.unwrap_or(low_default),
+            metrics: metrics.clone(),
         });
-        let coord = Arc::new(Self {
-            queue_tx,
-            queue_depth: queue_depth.clone(),
+        for (i, engine) in engines.into_iter().enumerate() {
+            if cfg.prefix_cache {
+                // each engine boots with the prefix cache disabled;
+                // arm every replica's before any request can be
+                // admitted (DESIGN.md §13)
+                engine.set_prefix_cache(true, cfg.prefix_cache_pages)?;
+            }
+            spawn_replica_loop(&set, i, engine, &cfg, &pool_profile, &metrics)?;
+        }
+        Ok(Arc::new(Self {
+            set,
             max_prompt_len,
             max_new_cap: cfg.max_new_cap,
             max_batch_prefill_tokens: cfg.max_batch_prefill_tokens,
             max_batch_total_tokens: cfg.max_batch_total_tokens,
-            pool_profile: pool_profile.clone(),
+            pool_profile,
             default_deadline_ms: cfg.default_deadline_ms,
-            shared: shared.clone(),
-            metrics: metrics.clone(),
-        });
-        std::thread::Builder::new().name("flux-scheduler".into()).spawn(move || {
-            let _done = SchedulerDoneGuard(shared.clone());
-            scheduler_loop(engine, cfg, pool_profile, queue_rx, queue_depth, metrics, shared)
-        })?;
-        Ok(coord)
+            cfg,
+            metrics,
+        }))
     }
 
-    /// Graceful drain (DESIGN.md §12): stop admitting (new submissions
-    /// get typed [`RequestError::Draining`]), let every in-flight
-    /// stream finish, then shut the engine down. Blocks until the
-    /// scheduler has fully wound down or `deadline` elapses; returns
-    /// whether the drain completed in time. Idempotent.
+    /// Graceful drain of the WHOLE set (DESIGN.md §12): stop admitting
+    /// (new submissions get typed [`RequestError::Draining`]), let
+    /// every in-flight stream on every replica finish, then shut the
+    /// engines down. Blocks until every scheduler loop has wound down
+    /// or `deadline` elapses; returns whether the drain completed in
+    /// time. Idempotent.
     pub fn drain(&self, deadline: Duration) -> bool {
-        self.shared.draining.store(true, Ordering::SeqCst);
+        self.set.draining.store(true, Ordering::SeqCst);
         let t0 = Instant::now();
-        let mut done = self.shared.done.lock().unwrap();
-        while !*done {
-            let Some(remaining) = deadline.checked_sub(t0.elapsed()) else {
-                return false;
-            };
-            let (guard, timeout) =
-                self.shared.done_cv.wait_timeout(done, remaining).unwrap();
-            done = guard;
-            if timeout.timed_out() && !*done {
+        for slot in &self.set.slots {
+            let shared = slot.link.lock().unwrap().shared.clone();
+            shared.draining.store(true, Ordering::SeqCst);
+            let remaining = deadline.saturating_sub(t0.elapsed());
+            if !shared.wait_done(remaining) {
                 return false;
             }
         }
@@ -508,7 +935,80 @@ impl Coordinator {
 
     /// Whether [`Coordinator::drain`] has been initiated.
     pub fn is_draining(&self) -> bool {
-        self.shared.draining.load(Ordering::SeqCst)
+        self.set.draining.load(Ordering::SeqCst)
+    }
+
+    /// Rolling restart of one replica (DESIGN.md §14): take it out of
+    /// the dispatch set, let its in-flight streams finish (queued but
+    /// undispatched work fails over to healthy peers), then respawn its
+    /// engine and rejoin. The rest of the set keeps serving throughout.
+    /// Returns `Ok(false)` when the drain didn't finish within
+    /// `deadline` (the replica stays `Draining`; a later call can
+    /// complete the cycle).
+    pub fn drain_replica(&self, i: usize, deadline: Duration) -> Result<bool> {
+        anyhow::ensure!(i < self.set.slots.len(), "no replica {i}");
+        let slot = &self.set.slots[i];
+        let shared = {
+            let mut link = slot.link.lock().unwrap();
+            if link.state == ReplicaState::Dead {
+                anyhow::bail!("replica {i} is dead");
+            }
+            link.state = ReplicaState::Draining;
+            link.shared.draining.store(true, Ordering::SeqCst);
+            link.shared.clone()
+        };
+        if !shared.wait_done(deadline) {
+            return Ok(false);
+        }
+        // the loop exited cleanly and shut its engine lifetime down;
+        // bring up a fresh one. Warm prefix pages died with the pool:
+        // purge this replica's affinity entries and (defensively) its
+        // prefix index before re-arming the cache.
+        self.set.purge_affinity(i);
+        if let Err(e) = slot.engine.respawn() {
+            slot.link.lock().unwrap().state = ReplicaState::Dead;
+            self.metrics.lock().unwrap().replica_mut(i).deaths += 1;
+            return Err(e.context(format!("replica {i} failed to respawn after drain")));
+        }
+        if self.cfg.prefix_cache {
+            let _ = slot.engine.prefix_clear();
+            slot.engine.set_prefix_cache(true, self.cfg.prefix_cache_pages)?;
+        }
+        spawn_replica_loop(
+            &self.set,
+            i,
+            slot.engine.clone(),
+            &self.cfg,
+            &self.pool_profile,
+            &self.metrics,
+        )?;
+        // a global drain that raced the rejoin must still stop this
+        // fresh loop
+        if self.set.draining.load(Ordering::SeqCst) {
+            slot.link.lock().unwrap().shared.draining.store(true, Ordering::SeqCst);
+        }
+        self.metrics.lock().unwrap().replica_mut(i).drains += 1;
+        Ok(true)
+    }
+
+    /// Number of replicas in the set (serving or not).
+    pub fn replicas(&self) -> usize {
+        self.set.slots.len()
+    }
+
+    /// Per-replica committed-token load gauges (tests / introspection).
+    pub fn replica_loads(&self) -> Vec<usize> {
+        self.set
+            .slots
+            .iter()
+            .map(|s| s.committed_tokens.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Per-replica engine generations (0 = initial lifetime; bumps on
+    /// every supervision respawn or drain-rejoin).
+    pub fn replica_generations(&self) -> Vec<u64> {
+        self.set.slots.iter().map(|s| s.engine.generation()).collect()
     }
 
     /// Open an event-driven session. Admission errors (full queue,
@@ -545,7 +1045,7 @@ impl Coordinator {
         sink: Sink,
         cancel: CancelToken,
     ) -> std::result::Result<(), RequestError> {
-        if self.shared.draining.load(Ordering::SeqCst) {
+        if self.set.draining.load(Ordering::SeqCst) {
             self.metrics.lock().unwrap().requests_rejected += 1;
             return Err(RequestError::Draining);
         }
@@ -581,21 +1081,27 @@ impl Coordinator {
             let mut m = self.metrics.lock().unwrap();
             m.requests_rejected += 1;
             m.requests_overloaded += 1;
-            return Err(RequestError::Overloaded(format!(
-                "prompt of {} tokens exceeds max_batch_prefill_tokens {}",
-                req.prompt.len(),
-                self.max_batch_prefill_tokens
-            )));
+            return Err(RequestError::Overloaded {
+                detail: "prefill_tokens",
+                message: format!(
+                    "prompt of {} tokens exceeds max_batch_prefill_tokens {}",
+                    req.prompt.len(),
+                    self.max_batch_prefill_tokens
+                ),
+            });
         }
         if req.prompt.len() + req.max_new > self.max_batch_total_tokens {
             let mut m = self.metrics.lock().unwrap();
             m.requests_rejected += 1;
             m.requests_overloaded += 1;
-            return Err(RequestError::Overloaded(format!(
-                "worst case of {} tokens exceeds max_batch_total_tokens {}",
-                req.prompt.len() + req.max_new,
-                self.max_batch_total_tokens
-            )));
+            return Err(RequestError::Overloaded {
+                detail: "total_tokens",
+                message: format!(
+                    "worst case of {} tokens exceeds max_batch_total_tokens {}",
+                    req.prompt.len() + req.max_new,
+                    self.max_batch_total_tokens
+                ),
+            });
         }
         if let Some(pp) = &self.pool_profile {
             let pages = pp.worst_case_pages(req.prompt.len(), req.max_new);
@@ -603,10 +1109,13 @@ impl Coordinator {
                 let mut m = self.metrics.lock().unwrap();
                 m.requests_rejected += 1;
                 m.requests_overloaded += 1;
-                return Err(RequestError::Overloaded(format!(
-                    "worst case of {pages} KV pages exceeds the pool budget of {}",
-                    pp.total_pages
-                )));
+                return Err(RequestError::Overloaded {
+                    detail: "pages",
+                    message: format!(
+                        "worst case of {pages} KV pages exceeds the pool budget of {}",
+                        pp.total_pages
+                    ),
+                });
             }
         }
         let t_arrival = Instant::now();
@@ -614,22 +1123,30 @@ impl Coordinator {
             .deadline_ms
             .or(self.default_deadline_ms)
             .and_then(|ms| t_arrival.checked_add(Duration::from_millis(ms)));
-        let pending = Pending { req, sink, cancel, t_arrival, deadline };
-        match self.queue_tx.try_send(pending) {
-            Ok(()) => {
-                self.queue_depth.fetch_add(1, Ordering::Relaxed);
-                Ok(())
+        let pending = Pending { req, sink, cancel, t_arrival, deadline, load: None };
+        match self.set.dispatch(pending, None) {
+            Ok(()) => Ok(()),
+            Err((_, err)) => {
+                {
+                    let mut m = self.metrics.lock().unwrap();
+                    match &err {
+                        RequestError::Shutdown => {}
+                        RequestError::Overloaded { .. } => {
+                            m.requests_rejected += 1;
+                            m.requests_overloaded += 1;
+                            m.watermark_rejections += 1;
+                        }
+                        _ => m.requests_rejected += 1,
+                    }
+                }
+                Err(err)
             }
-            Err(TrySendError::Full(_)) => {
-                self.metrics.lock().unwrap().requests_rejected += 1;
-                Err(RequestError::QueueFull)
-            }
-            Err(TrySendError::Disconnected(_)) => Err(RequestError::Shutdown),
         }
     }
 
+    /// Total queued-but-undispatched requests across every replica.
     pub fn queue_depth(&self) -> usize {
-        self.queue_depth.load(Ordering::Relaxed)
+        self.set.slots.iter().map(|s| s.queue_depth.load(Ordering::Relaxed)).sum()
     }
 }
 
@@ -647,6 +1164,7 @@ fn scheduler_loop(
     queue_depth: Arc<AtomicUsize>,
     metrics: Arc<Mutex<ServingMetrics>>,
     shared: Arc<SchedulerShared>,
+    ctx: ReplicaCtx,
 ) {
     let mut active: VecDeque<Active> = VecDeque::new();
     let mut prefilling: VecDeque<Prefilling> = VecDeque::new();
@@ -663,12 +1181,16 @@ fn scheduler_loop(
         // with a typed error, keep running rounds until the in-flight
         // set finishes, then shut the engine down and exit ---
         if shared.draining.load(Ordering::SeqCst) {
+            // queued-but-undispatched work never touched this engine:
+            // during a per-replica drain it fails over to a healthy
+            // peer; during a global drain every peer refuses and the
+            // request is rejected with the typed fallback
             if let Some(p) = parked.take() {
-                reject_pending(&metrics, p, RequestError::Draining);
+                ctx.failover_or_reject(&metrics, p, RequestError::Draining);
             }
             while let Ok(p) = queue_rx.try_recv() {
                 queue_depth.fetch_sub(1, Ordering::Relaxed);
-                reject_pending(&metrics, p, RequestError::Draining);
+                ctx.failover_or_reject(&metrics, p, RequestError::Draining);
             }
             if active.is_empty() && prefilling.is_empty() {
                 engine.shutdown();
@@ -739,7 +1261,7 @@ fn scheduler_loop(
                 // the engine, so no budget is charged (cancel is sticky and
                 // time is monotonic, so it cannot admit here)
                 if p.cancel.is_cancelled() || p.deadline.is_some_and(|d| Instant::now() >= d) {
-                    match open_prefill(&engine, &cfg, &metrics, p) {
+                    match open_prefill(&engine, &cfg, &metrics, p, ctx.index) {
                         OpenOutcome::Opened(pf) => prefilling.push_back(pf),
                         OpenOutcome::Rejected => {}
                         OpenOutcome::EngineDead(e) => {
@@ -767,7 +1289,7 @@ fn scheduler_loop(
                     parked = Some(p);
                     break;
                 }
-                match open_prefill(&engine, &cfg, &metrics, p) {
+                match open_prefill(&engine, &cfg, &metrics, p, ctx.index) {
                     OpenOutcome::Opened(mut pf) => {
                         pf.prompt_len = prompt_len;
                         pf.budget_total = worst_total;
@@ -786,9 +1308,9 @@ fn scheduler_loop(
             }
             if let Some(err) = engine_down {
                 if !supervise_engine_failure(
-                    &engine, &cfg, &metrics, &mut budgets, &mut active, &mut prefilling, err,
+                    &engine, &cfg, &metrics, &mut budgets, &mut active, &mut prefilling, err, &ctx,
                 ) {
-                    fail_remaining(&metrics, &queue_rx, &queue_depth, parked.take(), &engine);
+                    fail_remaining(&metrics, &queue_rx, &queue_depth, parked.take(), &engine, &ctx);
                     return;
                 }
                 continue;
@@ -816,8 +1338,11 @@ fn scheduler_loop(
                     // restart within the retry budget (DESIGN.md §12)
                     if !supervise_engine_failure(
                         &engine, &cfg, &metrics, &mut budgets, &mut active, &mut prefilling, e,
+                        &ctx,
                     ) {
-                        fail_remaining(&metrics, &queue_rx, &queue_depth, parked.take(), &engine);
+                        fail_remaining(
+                            &metrics, &queue_rx, &queue_depth, parked.take(), &engine, &ctx,
+                        );
                         return;
                     }
                 }
@@ -921,6 +1446,7 @@ fn scheduler_loop(
                         id,
                         report,
                         cfg.prefix_cache,
+                        ctx.index,
                     ) {
                         active.push_back(a);
                     }
@@ -932,8 +1458,11 @@ fn scheduler_loop(
                     prefilling.push_front(pf);
                     if !supervise_engine_failure(
                         &engine, &cfg, &metrics, &mut budgets, &mut active, &mut prefilling, e,
+                        &ctx,
                     ) {
-                        fail_remaining(&metrics, &queue_rx, &queue_depth, parked.take(), &engine);
+                        fail_remaining(
+                            &metrics, &queue_rx, &queue_depth, parked.take(), &engine, &ctx,
+                        );
                         return;
                     }
                     break;
@@ -989,6 +1518,7 @@ fn supervise_engine_failure(
     active: &mut VecDeque<Active>,
     prefilling: &mut VecDeque<Prefilling>,
     err: anyhow::Error,
+    ctx: &ReplicaCtx,
 ) -> bool {
     let (cause, generation, stalled) = match err.downcast_ref::<EngineFailed>() {
         Some(f) => (f.cause.clone(), f.generation, f.stalled),
@@ -998,10 +1528,11 @@ fn supervise_engine_failure(
         metrics.lock().unwrap().watchdog_trips += 1;
     }
     eprintln!(
-        "flux-scheduler: engine {} (generation {generation}): {cause}",
+        "flux-scheduler-{}: engine {} (generation {generation}): {cause}",
+        ctx.index,
         if stalled { "stalled" } else { "failed" }
     );
-    let failed = RequestError::EngineFailed { cause, generation };
+    let failed = RequestError::EngineFailed { cause, generation, replica: ctx.index };
     // every request of the dead lifetime retires typed — its engine-side
     // state is gone (the release/cancel sends inside retire go to the
     // dead lifetime's channel and are dropped; a merely-stalled engine
@@ -1017,23 +1548,34 @@ fn supervise_engine_failure(
         std::thread::sleep(backoff);
         match engine.respawn() {
             Ok(new_generation) => {
-                metrics.lock().unwrap().engine_restarts += 1;
+                {
+                    let mut m = metrics.lock().unwrap();
+                    m.engine_restarts += 1;
+                    m.replica_mut(ctx.index).restarts += 1;
+                }
                 if cfg.prefix_cache {
-                    // a fresh engine lifetime boots with the prefix
-                    // cache disabled (and an empty index) — re-arm it
+                    // the dead lifetime's prefix index refers to pages of
+                    // a pool that no longer exists: clear it explicitly
+                    // before re-arming so a fresh lifetime can never
+                    // serve (or retain) pages from the dead pool
+                    let _ = engine.prefix_clear();
                     let _ = engine.set_prefix_cache(true, cfg.prefix_cache_pages);
                 }
+                // coordinator-side mirror of the same staleness: session
+                // affinity pointing at this replica promised warm pages
+                // that died with the old pool
+                ctx.purge_affinity();
                 eprintln!(
-                    "flux-scheduler: engine restarted (generation {new_generation}, \
+                    "flux-scheduler-{}: engine restarted (generation {new_generation}, \
                      attempt {attempt}/{})",
-                    cfg.engine_restart_max
+                    ctx.index, cfg.engine_restart_max
                 );
                 return true;
             }
             Err(e) => {
                 eprintln!(
-                    "flux-scheduler: engine restart attempt {attempt}/{} failed: {e}",
-                    cfg.engine_restart_max
+                    "flux-scheduler-{}: engine restart attempt {attempt}/{} failed: {e}",
+                    ctx.index, cfg.engine_restart_max
                 );
                 backoff *= 2;
             }
@@ -1042,27 +1584,35 @@ fn supervise_engine_failure(
     false
 }
 
-/// Restart budget exhausted: fail the parked request and everything
-/// still queued with a typed error, then let the scheduler exit (the
-/// queue disconnects; later submissions get `Shutdown`).
+/// Restart budget exhausted: mark the replica dead so dispatch stops
+/// routing to it, then fail over the parked request and everything
+/// still queued — work that never touched this engine completes on a
+/// healthy peer; with no peers left it rejects typed. Later submissions
+/// are re-routed by dispatch (or get `Shutdown` with no replicas left).
 fn fail_remaining(
     metrics: &Arc<Mutex<ServingMetrics>>,
     queue_rx: &Receiver<Pending>,
     queue_depth: &Arc<AtomicUsize>,
     parked: Option<Pending>,
     engine: &EngineHandle,
+    ctx: &ReplicaCtx,
 ) {
-    eprintln!("flux-scheduler: engine restart budget exhausted, shutting down");
+    eprintln!(
+        "flux-scheduler-{}: engine restart budget exhausted, shutting down replica",
+        ctx.index
+    );
+    ctx.mark_dead(metrics);
     let failed = RequestError::EngineFailed {
         cause: "engine restart budget exhausted".into(),
         generation: engine.generation(),
+        replica: ctx.index,
     };
     if let Some(p) = parked {
-        reject_pending(metrics, p, failed.clone());
+        ctx.failover_or_reject(metrics, p, failed.clone());
     }
     while let Ok(p) = queue_rx.try_recv() {
         queue_depth.fetch_sub(1, Ordering::Relaxed);
-        reject_pending(metrics, p, failed.clone());
+        ctx.failover_or_reject(metrics, p, failed.clone());
     }
 }
 
@@ -1203,8 +1753,9 @@ fn open_prefill(
     cfg: &ServingConfig,
     metrics: &Arc<Mutex<ServingMetrics>>,
     p: Pending,
+    replica: usize,
 ) -> OpenOutcome {
-    let Pending { req, sink, cancel, t_arrival, deadline } = p;
+    let Pending { req, sink, cancel, t_arrival, deadline, load } = p;
     if cancel.is_cancelled() {
         let mut m = metrics.lock().unwrap();
         m.requests_cancelled += 1;
@@ -1241,6 +1792,7 @@ fn open_prefill(
             deadline,
             cancel,
             sink,
+            load,
         }),
         Err(e) => {
             metrics.lock().unwrap().requests_rejected += 1;
@@ -1251,6 +1803,7 @@ fn open_prefill(
                 sink.error(RequestError::EngineFailed {
                     cause: f.cause.clone(),
                     generation: f.generation,
+                    replica,
                 });
                 OpenOutcome::EngineDead(e)
             } else {
@@ -1272,6 +1825,7 @@ fn finish_prefill(
     engine_id: u64,
     report: PrefillReport,
     prefix_cache: bool,
+    replica: usize,
 ) -> Option<Active> {
     let Prefilling {
         prompt_len,
@@ -1286,6 +1840,7 @@ fn finish_prefill(
         deadline,
         cancel,
         sink,
+        load,
         ..
     } = pf;
     // the prompt leaves the prefill budget at promotion; the total-token
@@ -1329,6 +1884,8 @@ fn finish_prefill(
         deadline,
         cancel,
         sink,
+        replica,
+        load,
     };
     // a session cancelled (or expired) during its FINAL prefill chunk
     // must not receive a `Prefilled` event or hold pages for a round:
@@ -1383,8 +1940,20 @@ fn retire(
     budgets.release_active(&a);
     engine.release(a.engine_id);
     let e2e = a.t_arrival.elapsed().as_micros() as u64;
-    let Active { generated, omsr, modes, t_arrival, t_first_token, decode_us, queue_us, sink, .. } =
-        a;
+    // destructuring drops the LoadGuard here, releasing the replica's
+    // committed-token charge on every terminal path at once
+    let Active {
+        generated,
+        omsr,
+        modes,
+        t_arrival,
+        t_first_token,
+        decode_us,
+        queue_us,
+        sink,
+        replica,
+        ..
+    } = a;
     let n_dec = generated.len().saturating_sub(1).max(1);
     let streamed = generated.len() as u64;
     {
@@ -1410,6 +1979,7 @@ fn retire(
             decode_us_per_token: decode_us as f64 / n_dec as f64,
             queue_us,
             tokens: generated,
+            replica,
         }),
         Retire::Cancelled => sink.error(RequestError::Cancelled),
         Retire::Expired => sink.error(RequestError::DeadlineExceeded),
@@ -1445,11 +2015,21 @@ mod tests {
         assert_eq!(RequestError::PromptTooLong { len: 10, max: 4 }.kind(), "prompt_too_long");
         let msg = RequestError::PromptTooLong { len: 10, max: 4 }.to_string();
         assert!(msg.contains("10") && msg.contains("4"), "{msg}");
-        let failed = RequestError::EngineFailed { cause: "kaboom".into(), generation: 3 };
+        let failed =
+            RequestError::EngineFailed { cause: "kaboom".into(), generation: 3, replica: 1 };
         assert_eq!(failed.kind(), "engine_failed");
+        assert_eq!(failed.failed_replica(), Some(1));
         let msg = failed.to_string();
-        assert!(msg.contains("kaboom") && msg.contains("3"), "{msg}");
+        assert!(msg.contains("kaboom") && msg.contains("3") && msg.contains("replica 1"), "{msg}");
         assert_eq!(RequestError::Draining.kind(), "draining");
+        let over = RequestError::Overloaded {
+            detail: "queue_watermark",
+            message: "all queues saturated".into(),
+        };
+        assert_eq!(over.kind(), "overloaded");
+        assert_eq!(over.overload_detail(), Some("queue_watermark"));
+        let msg = over.to_string();
+        assert!(msg.contains("queue_watermark") && msg.contains("saturated"), "{msg}");
     }
 
     /// The retryable taxonomy (DESIGN.md §12): transient load and
@@ -1459,9 +2039,14 @@ mod tests {
     #[test]
     fn retryable_classification() {
         assert!(RequestError::QueueFull.retryable());
-        assert!(RequestError::Overloaded("busy".into()).retryable());
+        assert!(
+            RequestError::Overloaded { detail: "pages", message: "busy".into() }.retryable()
+        );
         assert!(RequestError::Draining.retryable());
-        assert!(RequestError::EngineFailed { cause: "x".into(), generation: 0 }.retryable());
+        assert!(
+            RequestError::EngineFailed { cause: "x".into(), generation: 0, replica: 0 }
+                .retryable()
+        );
         assert!(!RequestError::Invalid("bad".into()).retryable());
         assert!(!RequestError::PromptTooLong { len: 9, max: 8 }.retryable());
         assert!(!RequestError::DeadlineExceeded.retryable());

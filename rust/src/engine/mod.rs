@@ -156,6 +156,9 @@ pub struct DecodeBatchReport {
     pub prefix_evictions: u64,
     /// Pool pages currently retained by the prefix index.
     pub prefix_retained_pages: u64,
+    /// Which data-parallel replica produced this round (DESIGN.md §14;
+    /// 0 for a standalone engine).
+    pub replica: usize,
 }
 
 /// Admission-relevant pool + model geometry, fetched once by the
@@ -227,6 +230,11 @@ pub struct Engine {
     /// kernels when the backend supports them (`FLUX_BATCH_DECODE=0`
     /// falls back to the serial per-request walk for A/B benchmarking).
     batch_decode: bool,
+    /// Which data-parallel replica this engine serves (DESIGN.md §14);
+    /// stamped onto every [`DecodeBatchReport`] so the scheduler's
+    /// metrics fold attributes rounds without extra plumbing. 0 for a
+    /// standalone (single-replica) engine.
+    replica: usize,
 }
 
 impl Engine {
@@ -351,11 +359,24 @@ impl Engine {
             next_id: 0,
             zero_copy,
             batch_decode,
+            replica: 0,
         })
     }
 
     pub fn cfg(&self) -> &MetaConfig {
         &self.cfg
+    }
+
+    /// Stamp the replica identity carried on every report
+    /// (DESIGN.md §14). Set once right after load by
+    /// [`EngineHandle::spawn_replica`]-style constructors.
+    pub fn set_replica(&mut self, replica: usize) {
+        self.replica = replica;
+    }
+
+    /// This engine's replica identity (0 for standalone engines).
+    pub fn replica(&self) -> usize {
+        self.replica
     }
 
     /// The KV block pool (occupancy gauges for metrics / tests).
@@ -1335,6 +1356,7 @@ impl Engine {
             pool_pages: self.pool_gauges(),
             prefix_evictions: self.prefix.stats().evictions,
             prefix_retained_pages: self.prefix.retained_pages() as u64,
+            replica: self.replica,
         }
     }
 
@@ -1634,6 +1656,7 @@ impl Engine {
             pool_pages: self.pool_gauges(),
             prefix_evictions: self.prefix.stats().evictions,
             prefix_retained_pages: self.prefix.retained_pages() as u64,
+            replica: self.replica,
         }
     }
 
@@ -1879,6 +1902,9 @@ struct EngineLink {
 struct HandleInner {
     artifacts: std::path::PathBuf,
     pool_geometry: Option<(usize, usize)>,
+    /// Replica identity stamped onto every engine lifetime this handle
+    /// spawns (initial spawn AND respawns) — DESIGN.md §14.
+    replica: usize,
     link: std::sync::RwLock<EngineLink>,
 }
 
@@ -1901,7 +1927,7 @@ pub struct EngineHandle {
 impl EngineHandle {
     /// Spawn the executor thread and load the engine on it.
     pub fn spawn(artifacts: std::path::PathBuf) -> Result<Self> {
-        Self::spawn_inner(artifacts, None, None)
+        Self::spawn_inner(artifacts, None, None, 0)
     }
 
     /// [`EngineHandle::spawn`] with an explicit KV pool geometry
@@ -1912,7 +1938,7 @@ impl EngineHandle {
         page_tokens: usize,
         budget_tokens: usize,
     ) -> Result<Self> {
-        Self::spawn_inner(artifacts, Some((page_tokens, budget_tokens)), None)
+        Self::spawn_inner(artifacts, Some((page_tokens, budget_tokens)), None, 0)
     }
 
     /// [`EngineHandle::spawn`] with a deterministic fault-injection
@@ -1923,26 +1949,64 @@ impl EngineHandle {
         pool_geometry: Option<(usize, usize)>,
         plan: crate::runtime::chaos::FaultPlan,
     ) -> Result<Self> {
-        Self::spawn_inner(artifacts, pool_geometry, Some(plan))
+        Self::spawn_inner(artifacts, pool_geometry, Some(plan), 0)
+    }
+
+    /// [`EngineHandle::spawn`] as replica `replica` of a
+    /// [`crate::coordinator::Coordinator`] replica set (DESIGN.md §14):
+    /// the identity is stamped onto the engine (and every respawned
+    /// lifetime) and rides on its reports.
+    pub fn spawn_replica(artifacts: std::path::PathBuf, replica: usize) -> Result<Self> {
+        Self::spawn_inner(artifacts, None, None, replica)
+    }
+
+    /// [`EngineHandle::spawn_replica`] with pool geometry and fault
+    /// plan — replica-set chaos tests and the saturation bench fault
+    /// ONE replica while its peers keep serving.
+    pub fn spawn_replica_with(
+        artifacts: std::path::PathBuf,
+        pool_geometry: Option<(usize, usize)>,
+        faults: Option<crate::runtime::chaos::FaultPlan>,
+        replica: usize,
+    ) -> Result<Self> {
+        Self::spawn_inner(artifacts, pool_geometry, faults, replica)
     }
 
     /// [`EngineHandle::spawn`] honoring the `FLUX_FAULT_PLAN` /
     /// `FLUX_FAULT_SEED` environment (the `flux serve` / CI entry
     /// point; tests pass plans programmatically instead).
     pub fn spawn_from_env(artifacts: std::path::PathBuf) -> Result<Self> {
-        Self::spawn_inner(artifacts, None, crate::runtime::chaos::FaultPlan::from_env()?)
+        Self::spawn_inner(artifacts, None, crate::runtime::chaos::FaultPlan::from_env()?, 0)
+    }
+
+    /// [`EngineHandle::spawn_from_env`] as replica `replica` — the
+    /// `flux serve --replicas R` entry point. The env fault plan (when
+    /// set) applies to every replica's first lifetime; each replica
+    /// supervises and respawns independently.
+    pub fn spawn_from_env_replica(
+        artifacts: std::path::PathBuf,
+        replica: usize,
+    ) -> Result<Self> {
+        Self::spawn_inner(
+            artifacts,
+            None,
+            crate::runtime::chaos::FaultPlan::from_env()?,
+            replica,
+        )
     }
 
     fn spawn_inner(
         artifacts: std::path::PathBuf,
         pool_geometry: Option<(usize, usize)>,
         faults: Option<crate::runtime::chaos::FaultPlan>,
+        replica: usize,
     ) -> Result<Self> {
-        let (tx, failure) = Self::spawn_link(&artifacts, pool_geometry, faults)?;
+        let (tx, failure) = Self::spawn_link(&artifacts, pool_geometry, faults, replica)?;
         Ok(Self {
             inner: Arc::new(HandleInner {
                 artifacts,
                 pool_geometry,
+                replica,
                 link: std::sync::RwLock::new(EngineLink { tx, failure, generation: 0 }),
             }),
         })
@@ -1955,6 +2019,7 @@ impl EngineHandle {
         artifacts: &std::path::Path,
         pool_geometry: Option<(usize, usize)>,
         faults: Option<crate::runtime::chaos::FaultPlan>,
+        replica: usize,
     ) -> Result<(std::sync::mpsc::Sender<EngineJob>, Arc<Mutex<Option<String>>>)> {
         let (tx, rx) = std::sync::mpsc::channel::<EngineJob>();
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
@@ -1962,10 +2027,11 @@ impl EngineHandle {
         let failure_slot = failure.clone();
         let artifacts = artifacts.to_path_buf();
         std::thread::Builder::new()
-            .name("flux-engine".into())
+            .name(format!("flux-engine-{replica}"))
             .spawn(move || {
                 let mut engine = match Engine::load_with_faults(&artifacts, pool_geometry, faults) {
-                    Ok(e) => {
+                    Ok(mut e) => {
+                        e.set_replica(replica);
                         let _ = ready_tx.send(Ok(()));
                         e
                     }
@@ -2003,8 +2069,12 @@ impl EngineHandle {
     /// whatever it was wedged on first). Returns the new generation.
     pub fn respawn(&self) -> Result<u64> {
         let mut link = self.inner.link.write().unwrap();
-        let (tx, failure) =
-            Self::spawn_link(&self.inner.artifacts, self.inner.pool_geometry, None)?;
+        let (tx, failure) = Self::spawn_link(
+            &self.inner.artifacts,
+            self.inner.pool_geometry,
+            None,
+            self.inner.replica,
+        )?;
         let generation = link.generation + 1;
         *link = EngineLink { tx, failure, generation };
         Ok(generation)
@@ -2014,6 +2084,12 @@ impl EngineHandle {
     /// [`EngineHandle::respawn`].
     pub fn generation(&self) -> u64 {
         self.inner.link.read().unwrap().generation
+    }
+
+    /// Replica identity this handle spawns its engine lifetimes under
+    /// (DESIGN.md §14; 0 for standalone engines).
+    pub fn replica(&self) -> usize {
+        self.inner.replica
     }
 
     /// Snapshot the current link (never hold the lock across a blocking

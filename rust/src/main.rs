@@ -7,6 +7,8 @@
 //!                                [--round-timeout-ms N] [--restart-max N]
 //!                                [--restart-backoff-ms N] [--drain-ms N]
 //!                                [--prefix-cache] [--prefix-cache-pages N]
+//!                                [--replicas R] [--queue-high-watermark N]
+//!                                [--queue-low-watermark N]
 //!        (chunk-tokens 0 = monolithic prefill; default 128 interleaves
 //!        prefill chunks with batched decode rounds, DESIGN.md §10;
 //!        round-timeout-ms arms the engine-round watchdog, restart-*
@@ -14,7 +16,12 @@
 //!        drain in-flight streams for up to drain-ms before exit,
 //!        DESIGN.md §12; prefix-cache enables cross-request KV reuse
 //!        of shared prompt prefixes, capped at prefix-cache-pages pool
-//!        pages — default half the pool — DESIGN.md §13)
+//!        pages — default half the pool — DESIGN.md §13; replicas R
+//!        serves R data-parallel engines, each its own failure domain,
+//!        dispatched least-loaded with session affinity; the queue
+//!        watermarks reject `overloaded (queue_watermark)` when every
+//!        replica's queue is above high until it drains to low —
+//!        DESIGN.md §14)
 //!   flux [--artifacts DIR] generate [--task T] [--seq-len N]
 //!                                   [--policy P] [--router R] [--sparse-decode]
 //!                                   [--stream] [--deadline-ms N]
@@ -161,8 +168,8 @@ fn run() -> Result<()> {
     match cmd {
         "serve" => {
             let cfg = MetaConfig::load(&artifacts)?;
-            let engine = EngineHandle::spawn_from_env(artifacts.clone())?;
             let defaults = ServingConfig::default();
+            let replicas = args.get_usize("replicas", defaults.replicas).max(1);
             let scfg = ServingConfig {
                 default_deadline_ms: args.get_opt_u64("deadline-ms"),
                 prefill_chunk_tokens: args
@@ -180,9 +187,21 @@ fn run() -> Result<()> {
                 prefix_cache_pages: args
                     .get_opt_u64("prefix-cache-pages")
                     .map(|v| v as usize),
+                replicas,
+                queue_high_watermark: args
+                    .get_opt_u64("queue-high-watermark")
+                    .map(|v| v as usize),
+                queue_low_watermark: args
+                    .get_opt_u64("queue-low-watermark")
+                    .map(|v| v as usize),
                 ..Default::default()
             };
-            let coord = Coordinator::start(engine, scfg)?;
+            // R data-parallel engine replicas, each its own failure
+            // domain (backend + KV pool + optional prefix cache)
+            let engines = (0..replicas)
+                .map(|i| EngineHandle::spawn_from_env_replica(artifacts.clone(), i))
+                .collect::<Result<Vec<_>>>()?;
+            let coord = Coordinator::start_replicas(engines, scfg)?;
             let drain_ms = args.get_opt_u64("drain-ms").unwrap_or(30_000);
             install_signal_handlers();
             {
@@ -344,6 +363,8 @@ fn run() -> Result<()> {
             eprintln!("  bench sweeps batched decode at batch sizes 1/2/4/8 (FLUX_BATCH_DECODE=0 forces serial)");
             eprintln!("  serve --chunk-tokens N sizes prefill chunks (0 = monolithic), --chunk-budget N caps chunks per decode round");
             eprintln!("  serve --round-timeout-ms N arms the engine watchdog; --restart-max/--restart-backoff-ms bound respawns; --drain-ms N caps SIGINT/SIGTERM drain (default 30000)");
+            eprintln!("  serve --replicas R runs R data-parallel engine replicas (least-loaded dispatch, per-replica supervision)");
+            eprintln!("  serve --queue-high-watermark/--queue-low-watermark N bound queue depth with typed overloaded backpressure");
             eprintln!("  serve reads FLUX_FAULT_SEED / FLUX_FAULT_PLAN for deterministic fault injection (chaos testing)");
             eprintln!("experiment ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves route_ledger all");
             Ok(())

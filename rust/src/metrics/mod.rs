@@ -146,8 +146,42 @@ pub struct ServingMetrics {
     /// Pool pages currently retained by the prefix-cache index — pages
     /// `drained()` would otherwise report as leaked (gauge).
     pub prefix_retained_pages: u64,
+    /// Per-replica dispatch and supervision counters (DESIGN.md §14),
+    /// indexed by replica id; grown on first touch so a single-replica
+    /// coordinator pays nothing. Empty means "never dispatched".
+    pub replicas: Vec<ReplicaMetrics>,
+    /// Dispatches routed by session affinity to the replica owning the
+    /// warm prefix-cache pages (instead of the least-loaded pick).
+    pub dispatch_affinity_hits: u64,
+    /// Queued-but-undispatched requests transparently re-dispatched
+    /// from a dead or draining replica to a healthy one.
+    pub dispatch_failovers: u64,
+    /// Admissions rejected `Overloaded { detail: "queue_watermark" }`
+    /// because every serving replica's queue was above its high
+    /// watermark (also counted in `requests_overloaded`).
+    pub watermark_rejections: u64,
     /// Omega_MSR sum + count per policy label
     omsr: HashMap<String, (f64, u64)>,
+}
+
+/// One replica's dispatch/supervision counters (DESIGN.md §14).
+#[derive(Debug, Default, Clone)]
+pub struct ReplicaMetrics {
+    /// Requests dispatched to this replica's admission queue.
+    pub dispatched: u64,
+    /// Engine respawns on this replica (also summed into the global
+    /// `engine_restarts`).
+    pub restarts: u64,
+    /// Permanent failures: the replica exhausted its restart budget
+    /// and left the serving set.
+    pub deaths: u64,
+    /// Completed `drain_replica` rolling-restart cycles.
+    pub drains: u64,
+    /// Gauge: committed tokens (`prompt + max_new` of dispatched,
+    /// not-yet-retired work) as of the latest dispatch decision.
+    pub committed_tokens: u64,
+    /// Gauge: admission-queue depth as of the latest dispatch decision.
+    pub queue_depth: u64,
 }
 
 impl ServingMetrics {
@@ -170,6 +204,15 @@ impl ServingMetrics {
         self.pages_peak = self.pages_peak.max(peak);
     }
 
+    /// Per-replica counters for replica `i`, growing the vector on
+    /// first touch (replica ids are dense, assigned at startup).
+    pub fn replica_mut(&mut self, i: usize) -> &mut ReplicaMetrics {
+        if self.replicas.len() <= i {
+            self.replicas.resize_with(i + 1, ReplicaMetrics::default);
+        }
+        &mut self.replicas[i]
+    }
+
     pub fn record_omsr(&mut self, label: &str, omsr: f64) {
         let e = self.omsr.entry(label.to_string()).or_insert((0.0, 0));
         e.0 += omsr;
@@ -189,7 +232,7 @@ impl ServingMetrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} rejected={} cancelled={} expired={} failed={} tokens={} \
              stream_p50={}tok ttft_p50={:.1}ms ttft_p95={:.1}ms \
              decode_p50={:.2}ms decode_tput={:.1}tok/s rounds={} batch_p50={}req \
@@ -228,7 +271,28 @@ impl ServingMetrics {
             self.prefix_tokens_reused,
             self.prefix_evictions,
             self.prefix_retained_pages,
-        )
+        );
+        // the replica-set section only appears once dispatch has run
+        // (single-replica coordinators still emit it, with one entry)
+        if !self.replicas.is_empty() {
+            let dispatched: Vec<String> =
+                self.replicas.iter().map(|r| r.dispatched.to_string()).collect();
+            let committed: Vec<String> =
+                self.replicas.iter().map(|r| r.committed_tokens.to_string()).collect();
+            s.push_str(&format!(
+                " replicas={} dispatched=[{}] committed=[{}]tok affinity_hits={} \
+                 failovers={} watermark_rejections={} replica_deaths={} replica_drains={}",
+                self.replicas.len(),
+                dispatched.join(","),
+                committed.join(","),
+                self.dispatch_affinity_hits,
+                self.dispatch_failovers,
+                self.watermark_rejections,
+                self.replicas.iter().map(|r| r.deaths).sum::<u64>(),
+                self.replicas.iter().map(|r| r.drains).sum::<u64>(),
+            ));
+        }
+        s
     }
 }
 
@@ -366,6 +430,30 @@ mod tests {
         assert!(s.contains("prefix_reused=96tok"), "{s}");
         assert!(s.contains("prefix_evictions=2"), "{s}");
         assert!(s.contains("prefix_retained=12pages"), "{s}");
+    }
+
+    /// Replica-set counters (DESIGN.md §14): per-replica dispatch and
+    /// gauges appear in the summary once any replica is touched, and
+    /// the section is absent before dispatch ever runs.
+    #[test]
+    fn summary_reports_replica_dispatch_counters() {
+        let mut m = ServingMetrics::default();
+        assert!(!m.summary().contains("replicas="), "{}", m.summary());
+        m.replica_mut(1).dispatched = 4;
+        m.replica_mut(0).dispatched = 7;
+        m.replica_mut(0).committed_tokens = 320;
+        m.dispatch_affinity_hits = 2;
+        m.dispatch_failovers = 1;
+        m.watermark_rejections = 5;
+        m.replica_mut(1).deaths = 1;
+        let s = m.summary();
+        assert!(s.contains("replicas=2"), "{s}");
+        assert!(s.contains("dispatched=[7,4]"), "{s}");
+        assert!(s.contains("committed=[320,0]tok"), "{s}");
+        assert!(s.contains("affinity_hits=2"), "{s}");
+        assert!(s.contains("failovers=1"), "{s}");
+        assert!(s.contains("watermark_rejections=5"), "{s}");
+        assert!(s.contains("replica_deaths=1"), "{s}");
     }
 
     #[test]

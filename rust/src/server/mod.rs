@@ -309,6 +309,24 @@ fn error_frame(id: u64, kind: &str, msg: &str, retryable: bool) -> Json {
     o
 }
 
+/// [`error_frame`] from a typed [`RequestError`], carrying the machine-
+/// readable extras: `detail` on `overloaded` frames (WHICH budget
+/// tripped — `prefill_tokens` / `total_tokens` / `pages` are structural,
+/// `queue_watermark` is transient backpressure) and `replica` on
+/// `engine_failed` frames (which failure domain died), so clients can
+/// tell structural overload from retry-after-backoff without parsing
+/// the human-readable message.
+fn error_frame_err(id: u64, err: &RequestError) -> Json {
+    let mut o = error_frame(id, err.kind(), &err.to_string(), err.retryable());
+    if let Some(detail) = err.overload_detail() {
+        o.set("detail", Json::from(detail));
+    }
+    if let Some(replica) = err.failed_replica() {
+        o.set("replica", Json::from(replica));
+    }
+    o
+}
+
 /// Serve forever on `addr` (thread per connection).
 pub fn serve(coord: Arc<Coordinator>, addr: &str, n_layers: usize) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
@@ -446,7 +464,7 @@ fn handle_frame(
         }
     };
     match coord.open(req) {
-        Err(e) => write_line(wr, &error_frame(id, e.kind(), &e.to_string(), e.retryable()))?,
+        Err(e) => write_line(wr, &error_frame_err(id, &e))?,
         Ok(handle) => {
             sessions.lock().unwrap().insert(id, handle.cancel_token());
             let wr = wr.clone();
@@ -503,9 +521,7 @@ fn pump_session(id: u64, handle: SessionHandle, wr: &SharedWriter, sessions: &Se
                 o.set("queue_ms", Json::from(stats.queue_us as f64 / 1e3));
                 (o, true)
             }
-            SessionEvent::Error { error } => {
-                (error_frame(id, error.kind(), &error.to_string(), error.retryable()), true)
-            }
+            SessionEvent::Error { error } => (error_frame_err(id, &error), true),
         };
         if terminal {
             // free the id for reuse BEFORE the terminal frame is
@@ -654,27 +670,108 @@ impl StreamClient {
     }
 
     /// Run a request to completion, resubmitting on retryable failures
-    /// (queue_full, overloaded, draining, engine_failed) with doubling
-    /// backoff. Non-retryable errors and successes return immediately;
-    /// after `max_retries` resubmissions the last response is returned
-    /// as-is. Transport errors (connection gone) are not retried — the
-    /// connection is owned by this client and will not come back.
+    /// (queue_full, overloaded, draining, engine_failed) with
+    /// decorrelated-jitter backoff. Non-retryable errors and successes
+    /// return immediately; after `max_retries` resubmissions the last
+    /// response is returned as-is. Transport errors (connection gone)
+    /// are not retried — the connection is owned by this client and
+    /// will not come back. Equivalent to [`StreamClient::retry_with_policy`]
+    /// with a cap of `64 * base_backoff`.
     pub fn retry_with_backoff(
         &self,
         req: &WireRequest,
         max_retries: usize,
         base_backoff: std::time::Duration,
     ) -> Result<WireResponse> {
-        let mut backoff = base_backoff;
-        for _ in 0..max_retries {
+        self.retry_with_policy(
+            req,
+            &RetryPolicy {
+                max_retries,
+                base_backoff,
+                max_backoff: base_backoff.saturating_mul(64),
+                seed: self.next_id.load(Ordering::Relaxed),
+            },
+        )
+    }
+
+    /// [`StreamClient::retry_with_backoff`] with an explicit
+    /// [`RetryPolicy`] (attempt cap, backoff bounds, jitter seed).
+    pub fn retry_with_policy(
+        &self,
+        req: &WireRequest,
+        policy: &RetryPolicy,
+    ) -> Result<WireResponse> {
+        let mut jitter = RetryJitter::new(policy);
+        for _ in 0..policy.max_retries {
             let resp = self.open(req)?.wait()?;
             if resp.error.is_none() || !resp.retryable {
                 return Ok(resp);
             }
-            std::thread::sleep(backoff);
-            backoff = backoff.saturating_mul(2);
+            std::thread::sleep(jitter.next_backoff());
         }
         self.open(req)?.wait()
+    }
+}
+
+/// Retry shape for [`StreamClient::retry_with_policy`]: how many times,
+/// how long, and which jitter stream.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Resubmissions after the first attempt (the attempt cap is
+    /// `max_retries + 1` total submissions).
+    pub max_retries: usize,
+    /// Lower bound of every sleep (and the first sleep's upper bound is
+    /// `3 * base_backoff`).
+    pub base_backoff: std::time::Duration,
+    /// Hard ceiling on any single sleep.
+    pub max_backoff: std::time::Duration,
+    /// Jitter-stream seed. Clients that share a seed share a sleep
+    /// sequence — pass something per-client (connection id, stream id)
+    /// so a replica failure does not make the whole fleet retry in
+    /// lockstep.
+    pub seed: u64,
+}
+
+/// Decorrelated jitter (`sleep = min(cap, uniform(base, prev * 3))`):
+/// each sleep is drawn from a range anchored on the PREVIOUS sleep, so
+/// synchronized clients decorrelate after one round while the expected
+/// backoff still grows geometrically. The uniform draw comes from a
+/// tiny splitmix-style PRNG — deterministic per seed, no external
+/// dependencies.
+struct RetryJitter {
+    prev: std::time::Duration,
+    base: std::time::Duration,
+    cap: std::time::Duration,
+    state: u64,
+}
+
+impl RetryJitter {
+    fn new(policy: &RetryPolicy) -> Self {
+        Self {
+            prev: policy.base_backoff,
+            base: policy.base_backoff,
+            cap: policy.max_backoff,
+            state: policy.seed.wrapping_add(0x9e37_79b9_7f4a_7c15),
+        }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        // splitmix64: full-period, passes statistical tests, three lines
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    fn next_backoff(&mut self) -> std::time::Duration {
+        let base = self.base.as_nanos().max(1) as u64;
+        let hi = self.prev.saturating_mul(3).as_nanos().min(u64::MAX as u128) as u64;
+        let span = hi.saturating_sub(base);
+        let draw = base + if span == 0 { 0 } else { self.next_u64() % (span + 1) };
+        let sleep = std::time::Duration::from_nanos(draw).min(self.cap);
+        self.prev = sleep.max(self.base);
+        sleep
     }
 }
 
@@ -829,6 +926,59 @@ mod tests {
         let e = error_frame(3, "invalid", "bad request", false);
         assert_eq!(e.get("code").and_then(Json::as_str), Some("invalid"));
         assert_eq!(e.get("retryable").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn typed_error_frames_carry_detail_and_replica() {
+        let e = error_frame_err(
+            4,
+            &RequestError::Overloaded {
+                detail: "queue_watermark",
+                message: "all queues saturated".into(),
+            },
+        );
+        assert_eq!(e.get("kind").and_then(Json::as_str), Some("overloaded"));
+        assert_eq!(e.get("detail").and_then(Json::as_str), Some("queue_watermark"));
+        assert_eq!(e.get("retryable").and_then(Json::as_bool), Some(true));
+        assert!(e.get("replica").is_none());
+        let e = error_frame_err(
+            5,
+            &RequestError::EngineFailed { cause: "kaboom".into(), generation: 2, replica: 1 },
+        );
+        assert_eq!(e.get("kind").and_then(Json::as_str), Some("engine_failed"));
+        assert_eq!(e.get("replica").and_then(Json::as_usize), Some(1));
+        assert!(e.get("detail").is_none());
+        // errors without extras keep the lean frame shape
+        let e = error_frame_err(6, &RequestError::QueueFull);
+        assert!(e.get("detail").is_none() && e.get("replica").is_none());
+    }
+
+    #[test]
+    fn retry_jitter_is_bounded_decorrelated_and_seed_deterministic() {
+        let policy = RetryPolicy {
+            max_retries: 8,
+            base_backoff: std::time::Duration::from_millis(10),
+            max_backoff: std::time::Duration::from_millis(200),
+            seed: 42,
+        };
+        let mut a = RetryJitter::new(&policy);
+        let mut b = RetryJitter::new(&policy);
+        let mut prev = policy.base_backoff;
+        for _ in 0..64 {
+            let s = a.next_backoff();
+            // bounds: base ≤ sleep ≤ min(cap, prev*3)
+            assert!(s >= policy.base_backoff, "{s:?} below base");
+            assert!(s <= policy.max_backoff, "{s:?} above cap");
+            assert!(s <= prev.saturating_mul(3).max(policy.base_backoff), "{s:?} vs {prev:?}");
+            assert_eq!(s, b.next_backoff(), "same seed must give the same sequence");
+            prev = s.max(policy.base_backoff);
+        }
+        // different seeds decorrelate (the whole point): the sequences
+        // must not be identical
+        let mut c = RetryJitter::new(&RetryPolicy { seed: 43, ..policy.clone() });
+        let mut d = RetryJitter::new(&RetryPolicy { seed: 42, ..policy });
+        let diverged = (0..64).any(|_| c.next_backoff() != d.next_backoff());
+        assert!(diverged, "seeds 42 and 43 produced identical jitter streams");
     }
 
     #[test]

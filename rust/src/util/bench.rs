@@ -244,23 +244,27 @@ fn validate_decode_v2(path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// The `flux bench --smoke` CI gate for the serving file's v4 schema
-/// (DESIGN.md §11–13): throughput must be positive, the pool-pressure
+/// The `flux bench --smoke` CI gate for the serving file's v5 schema
+/// (DESIGN.md §11–14): throughput must be positive, the pool-pressure
 /// scenario must be present with a nonzero page high-water mark, at
 /// least one typed overloaded rejection, and verified bit-identical
 /// token streams across page sizes, the fault-recovery scenario must
 /// show a mid-stream engine kill that was supervised back to life
-/// (≥1 restart, recovered, post-restart bit-identity), and the
+/// (≥1 restart, recovered, post-restart bit-identity), the
 /// prefix-reuse scenario must record a nonzero hit rate with tokens
 /// actually reused and warm streams verified bit-identical to the
-/// cold run — CI fails if the paged pool, the failure domain, or the
-/// prefix cache silently stops being measured.
+/// cold run, and the saturation scenario must sweep offered load over
+/// a multi-replica set (positive goodput at every level) with a
+/// replica-kill ledger showing ≥1 failover completion bit-identical to
+/// the unfaulted reference — CI fails if the paged pool, the failure
+/// domain, the prefix cache, or the replica set silently stops being
+/// measured.
 fn validate_serving(path: &Path) -> Result<()> {
     let j = Json::parse(&std::fs::read_to_string(path)?)
         .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
     anyhow::ensure!(
-        j.get("schema").and_then(Json::as_str) == Some("flux-bench-serving/v4"),
-        "{path:?}: schema must be flux-bench-serving/v4"
+        j.get("schema").and_then(Json::as_str) == Some("flux-bench-serving/v5"),
+        "{path:?}: schema must be flux-bench-serving/v5"
     );
     anyhow::ensure!(
         j.get("tokens_per_s").and_then(Json::as_f64).map(|v| v > 0.0).unwrap_or(false),
@@ -316,6 +320,51 @@ fn validate_serving(path: &Path) -> Result<()> {
     anyhow::ensure!(
         r.get("bit_identical").and_then(Json::as_bool) == Some(true),
         "{path:?}: warm prefix-hit stream not verified bit-identical to the cold run"
+    );
+    let s = j
+        .get("saturation")
+        .ok_or_else(|| anyhow::anyhow!("{path:?}: missing saturation scenario"))?;
+    let runs = s
+        .get("runs")
+        .and_then(Json::as_arr)
+        .filter(|r| !r.is_empty())
+        .ok_or_else(|| anyhow::anyhow!("{path:?}: saturation recorded no replica runs"))?;
+    let mut max_replicas = 0usize;
+    for run in runs {
+        max_replicas = max_replicas.max(run.get("replicas").and_then(Json::as_usize).unwrap_or(0));
+        let sweep = run
+            .get("sweep")
+            .and_then(Json::as_arr)
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| anyhow::anyhow!("{path:?}: saturation run has an empty load sweep"))?;
+        for lv in sweep {
+            anyhow::ensure!(
+                lv.get("goodput_tokens_per_s")
+                    .and_then(Json::as_f64)
+                    .map(|v| v > 0.0)
+                    .unwrap_or(false),
+                "{path:?}: saturation level reports no goodput"
+            );
+        }
+    }
+    anyhow::ensure!(
+        max_replicas >= 2,
+        "{path:?}: saturation never measured a multi-replica set"
+    );
+    let k = s
+        .get("replica_kill")
+        .ok_or_else(|| anyhow::anyhow!("{path:?}: missing replica_kill ledger"))?;
+    anyhow::ensure!(
+        k.get("recovered").and_then(Json::as_bool) == Some(true),
+        "{path:?}: replica kill did not recover"
+    );
+    anyhow::ensure!(
+        k.get("failover_completions").and_then(Json::as_f64).map(|v| v >= 1.0).unwrap_or(false),
+        "{path:?}: replica kill recorded no failover completion"
+    );
+    anyhow::ensure!(
+        k.get("bit_identical").and_then(Json::as_bool) == Some(true),
+        "{path:?}: failover streams not verified bit-identical"
     );
     Ok(())
 }
@@ -873,7 +922,14 @@ pub fn run_serving_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<(P
 /// adds the prefix-reuse scenario (DESIGN.md §13): sessions sharing a
 /// long system prompt must hit the radix prefix cache, reuse the
 /// shared run's KV, and stream bit-identically to a cold run of the
-/// same prompt, with cold-vs-warm TTFT recorded.
+/// same prompt, with cold-vs-warm TTFT recorded. The v5 schema adds
+/// the saturation scenario (DESIGN.md §14): an offered-load sweep over
+/// 1-, 2- and 4-replica sets records per-level goodput and the TTFT
+/// tail (the knee moves right as replicas are added, and load past the
+/// queue watermark degrades into typed retryable rejections), plus a
+/// replica-kill ledger — one replica of two dies mid-load, its queued
+/// work fails over and completes on the survivor bit-identical to the
+/// single-replica reference.
 pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<PathBuf> {
     use crate::config::{MetaConfig, ServingConfig};
     use crate::coordinator::{Coordinator, Request, RequestError};
@@ -1034,7 +1090,7 @@ pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<
     let overload =
         pressure_coord.open(Request { prompt: long_prompt, max_new: 4, ..Default::default() });
     match overload {
-        Err(RequestError::Overloaded(_)) => {}
+        Err(RequestError::Overloaded { .. }) => {}
         Err(e) => anyhow::bail!("expected a typed Overloaded rejection, got {e:?}"),
         Ok(_) => anyhow::bail!("long prompt over the page budget must be rejected at enqueue"),
     }
@@ -1194,9 +1250,183 @@ pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<
         st_warm.p50_us / 1e3
     );
 
+    // ---- saturation scenario (DESIGN.md §14): data-parallel replica
+    // scale-out. For each replica count, sweep offered load (sessions
+    // opened back-to-back) against small per-replica active slots and
+    // a queue watermark, recording goodput (tokens of COMPLETED streams
+    // per second) and the TTFT tail. Load beyond the watermark degrades
+    // into typed retryable rejections, never collapse. ----
+    use crate::coordinator::{Response, SessionEvent, SessionHandle};
+    let drain_one = |h: &SessionHandle| -> (Option<Response>, Option<RequestError>) {
+        let (mut done, mut error) = (None, None);
+        while let Some(ev) = h.recv_timeout(timeout) {
+            match ev {
+                SessionEvent::Done { stats } => done = Some(stats),
+                SessionEvent::Error { error: e } => error = Some(e),
+                _ => {}
+            }
+        }
+        (done, error)
+    };
+    let sat_replica_counts: Vec<usize> = if opts.smoke { vec![1, 2] } else { vec![1, 2, 4] };
+    let sat_levels: Vec<usize> = if opts.smoke { vec![2, 6] } else { vec![4, 12, 24] };
+    let sat_max_new = if opts.smoke { 4usize } else { 8 };
+    let sat_seq = seq.min(64);
+    let mut sat_runs: Vec<Json> = Vec::new();
+    for &nrep in &sat_replica_counts {
+        let engines = (0..nrep)
+            .map(|i| EngineHandle::spawn_replica(artifacts.to_path_buf(), i))
+            .collect::<Result<Vec<_>>>()?;
+        let sat_coord = Coordinator::start_replicas(
+            engines,
+            ServingConfig {
+                max_active_requests: 2,
+                queue_high_watermark: Some(4),
+                ..ServingConfig::default()
+            },
+        )?;
+        let mut sweep: Vec<Json> = Vec::new();
+        for &offered in &sat_levels {
+            let mut rng = Rng::seed_from_u64(26);
+            let t_level = Instant::now();
+            let opened: Vec<_> = (0..offered)
+                .map(|_| {
+                    let s = generate(Task::PRe, &mut rng, sat_seq);
+                    sat_coord.open(Request {
+                        prompt: s.prompt,
+                        max_new: sat_max_new,
+                        ignore_eos: true,
+                        ..Default::default()
+                    })
+                })
+                .collect();
+            let (mut completed, mut rejected, mut tokens) = (0usize, 0usize, 0usize);
+            let mut ttfts: Vec<f64> = Vec::new();
+            for o in opened {
+                match o {
+                    Ok(h) => match drain_one(&h) {
+                        (Some(done), None) => {
+                            completed += 1;
+                            tokens += done.tokens.len();
+                            ttfts.push(done.ttft_us as f64);
+                        }
+                        (_, err) => {
+                            anyhow::bail!("saturation stream failed without a fault: {err:?}")
+                        }
+                    },
+                    Err(e) => {
+                        anyhow::ensure!(
+                            e.retryable(),
+                            "saturation overload must reject retryable, got {e:?}"
+                        );
+                        rejected += 1;
+                    }
+                }
+            }
+            anyhow::ensure!(completed >= 1, "offered load {offered} completed nothing");
+            let level_s = t_level.elapsed().as_secs_f64().max(1e-9);
+            let st = stats_of(&mut ttfts);
+            let mut lv = Json::obj();
+            lv.set("offered_sessions", Json::from(offered));
+            lv.set("completed", Json::from(completed));
+            lv.set("rejected", Json::from(rejected));
+            lv.set("goodput_tokens_per_s", Json::from(tokens as f64 / level_s));
+            lv.set("ttft_p50_us", Json::from(st.p50_us));
+            lv.set("ttft_p95_us", Json::from(st.p95_us));
+            sweep.push(lv);
+        }
+        let sm = sat_coord.metrics.lock().unwrap().clone();
+        let mut run = Json::obj();
+        run.set("replicas", Json::from(nrep));
+        run.set("sweep", Json::from(sweep));
+        run.set("watermark_rejections", Json::from(sm.watermark_rejections as usize));
+        println!(
+            "saturation: {nrep} replica(s) over offered loads {sat_levels:?}, \
+             {} watermark rejection(s)",
+            sm.watermark_rejections
+        );
+        sat_runs.push(run);
+    }
+
+    // ---- replica-kill recovery at load: identical prompts alternate
+    // deterministically across two replicas (r0, r1, r0, r1), so when
+    // replica 1 dies at backend call 30 it holds one in-flight victim
+    // (fails typed) and one queued request, which must fail over and
+    // complete on the survivor bit-identical to the single-replica
+    // reference. `time_to_failover_ms` is measured from the first
+    // observed failure to the last completion — an upper bound, since
+    // streams are drained sequentially. ----
+    let sk_req = {
+        let mut rng = Rng::seed_from_u64(27);
+        Request {
+            prompt: generate(Task::PRe, &mut rng, sat_seq).prompt,
+            max_new: sat_max_new,
+            ignore_eos: true,
+            ..Default::default()
+        }
+    };
+    let sk_expected = coord
+        .submit(sk_req.clone())
+        .map_err(|e| anyhow::anyhow!("replica-kill reference request failed: {e}"))?
+        .tokens;
+    let sk_plan = FaultPlan::new().with(30, FaultKind::Panic);
+    let sk_plan_spec = sk_plan.to_string();
+    let sk_e0 = EngineHandle::spawn_replica(artifacts.to_path_buf(), 0)?;
+    let sk_e1 =
+        EngineHandle::spawn_replica_with(artifacts.to_path_buf(), None, Some(sk_plan), 1)?;
+    let sk_coord = Coordinator::start_replicas(
+        vec![sk_e0, sk_e1],
+        ServingConfig {
+            max_active_requests: 1,
+            engine_restart_max: 0,
+            ..ServingConfig::default()
+        },
+    )?;
+    let sk_handles: Vec<SessionHandle> = (0..4)
+        .map(|_| sk_coord.open(sk_req.clone()))
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("replica-kill pass admission failed: {e:?}"))?;
+    let (mut sk_completed, mut sk_failed) = (0usize, 0usize);
+    let mut sk_bit_identical = true;
+    let mut t_first_failure: Option<Instant> = None;
+    let mut failover_ms = 0.0f64;
+    for h in &sk_handles {
+        match drain_one(h) {
+            (Some(done), None) => {
+                sk_completed += 1;
+                sk_bit_identical &= done.tokens == sk_expected;
+                if let Some(t) = t_first_failure {
+                    failover_ms = t.elapsed().as_secs_f64() * 1e3;
+                }
+            }
+            (None, Some(RequestError::EngineFailed { replica, .. })) => {
+                anyhow::ensure!(replica == 1, "only replica 1 was faulted, got replica {replica}");
+                sk_failed += 1;
+                t_first_failure.get_or_insert_with(Instant::now);
+            }
+            other => anyhow::bail!("replica-kill pass: unexpected terminal {other:?}"),
+        }
+    }
+    anyhow::ensure!(
+        sk_failed == 1 && sk_completed == 3,
+        "replica kill must fail exactly the in-flight victim ({sk_failed} failed, \
+         {sk_completed} completed)"
+    );
+    anyhow::ensure!(sk_bit_identical, "failover streams diverged from the reference");
+    let sk_m = sk_coord.metrics.lock().unwrap().clone();
+    anyhow::ensure!(
+        sk_m.dispatch_failovers >= 1,
+        "replica kill recorded no dispatch failover"
+    );
+    println!(
+        "replica kill: plan [{sk_plan_spec}] on replica 1 of 2 — victim failed typed, \
+         {} failover(s) completed on the survivor in ≤{failover_ms:.1}ms, bit-identical",
+        sk_m.dispatch_failovers
+    );
+
     let m = coord.metrics.lock().unwrap().clone();
     let mut j = Json::obj();
-    j.set("schema", Json::from("flux-bench-serving/v4"));
+    j.set("schema", Json::from("flux-bench-serving/v5"));
     j.set("measured", Json::from(true));
     j.set("connections", Json::from(n_conns));
     j.set("streams_per_connection", Json::from(n_streams));
@@ -1242,6 +1472,22 @@ pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<
     jr.set("speedup_ttft", Json::from(speedup_ttft));
     jr.set("bit_identical", Json::from(pr_bit_identical));
     j.set("prefix_reuse", jr);
+    let mut jsat = Json::obj();
+    jsat.set("replica_counts", Json::from(sat_replica_counts.clone()));
+    jsat.set("offered_levels", Json::from(sat_levels.clone()));
+    jsat.set("max_new", Json::from(sat_max_new));
+    jsat.set("runs", Json::from(sat_runs));
+    let mut jk = Json::obj();
+    jk.set("replicas", Json::from(2usize));
+    jk.set("fault_plan", Json::from(sk_plan_spec));
+    jk.set("failed_streams", Json::from(sk_failed));
+    jk.set("failover_completions", Json::from(sk_m.dispatch_failovers as usize));
+    jk.set("replica_deaths", Json::from(sk_m.replicas[1].deaths as usize));
+    jk.set("time_to_failover_ms", Json::from(failover_ms));
+    jk.set("recovered", Json::from(true));
+    jk.set("bit_identical", Json::from(sk_bit_identical));
+    jsat.set("replica_kill", jk);
+    j.set("saturation", jsat);
     let path = opts.out_dir.join("BENCH_serving.json");
     std::fs::write(&path, j.to_string())?;
     validate_serving(&path)?;
@@ -1340,21 +1586,21 @@ mod tests {
     }
 
     #[test]
-    fn serving_v4_validation_gates_on_pool_fault_and_prefix_scenarios() {
-        let dir = std::env::temp_dir().join(format!("flux-bench-sv4-{}", std::process::id()));
+    fn serving_v5_validation_gates_on_pool_fault_prefix_and_saturation() {
+        let dir = std::env::temp_dir().join(format!("flux-bench-sv5-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
-        let old = dir.join("v3.json");
-        std::fs::write(&old, r#"{"schema": "flux-bench-serving/v3", "tokens_per_s": 10.0}"#)
+        let old = dir.join("v4.json");
+        std::fs::write(&old, r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0}"#)
             .unwrap();
-        assert!(validate_serving(&old).is_err(), "v3 schema must fail the v4 gate");
+        assert!(validate_serving(&old).is_err(), "v4 schema must fail the v5 gate");
         let no_pool = dir.join("no_pool.json");
-        std::fs::write(&no_pool, r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0}"#)
+        std::fs::write(&no_pool, r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0}"#)
             .unwrap();
         assert!(validate_serving(&no_pool).is_err(), "missing pool_pressure must fail");
         let idle = dir.join("idle.json");
         std::fs::write(
             &idle,
-            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 0, "overloaded_rejections": 1,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
@@ -1365,7 +1611,7 @@ mod tests {
         let unrejected = dir.join("unrejected.json");
         std::fs::write(
             &unrejected,
-            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 0,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
@@ -1376,7 +1622,7 @@ mod tests {
         let diverged = dir.join("diverged.json");
         std::fs::write(
             &diverged,
-            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": false},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
@@ -1387,7 +1633,7 @@ mod tests {
         let no_fault = dir.join("no_fault.json");
         std::fs::write(
             &no_fault,
-            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": true}}"#,
         )
@@ -1396,7 +1642,7 @@ mod tests {
         let unrecovered = dir.join("unrecovered.json");
         std::fs::write(
             &unrecovered,
-            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": false, "engine_restarts": 0,
@@ -1407,7 +1653,7 @@ mod tests {
         let no_prefix = dir.join("no_prefix.json");
         std::fs::write(
             &no_prefix,
-            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
@@ -1418,7 +1664,7 @@ mod tests {
         let cold_prefix = dir.join("cold_prefix.json");
         std::fs::write(
             &cold_prefix,
-            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
@@ -1432,7 +1678,7 @@ mod tests {
         let warm_diverged = dir.join("warm_diverged.json");
         std::fs::write(
             &warm_diverged,
-            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
@@ -1443,17 +1689,64 @@ mod tests {
         )
         .unwrap();
         assert!(validate_serving(&warm_diverged).is_err(), "diverged warm stream must fail");
-        let good = dir.join("good.json");
-        std::fs::write(
-            &good,
-            r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0,
-                "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
+        let complete_scenarios = r#""pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
                                    "time_to_readmit_ms": 30.5, "bit_identical": true},
                 "prefix_reuse": {"hit_rate": 0.8, "tokens_reused": 4096,
                                  "ttft_cold_us": 900.0, "ttft_warm_p50_us": 300.0,
-                                 "bit_identical": true}}"#,
+                                 "bit_identical": true}"#;
+        let no_sat = dir.join("no_sat.json");
+        std::fs::write(
+            &no_sat,
+            format!(
+                r#"{{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0, {complete_scenarios}}}"#
+            ),
+        )
+        .unwrap();
+        assert!(validate_serving(&no_sat).is_err(), "missing saturation must fail");
+        let solo = dir.join("solo.json");
+        std::fs::write(
+            &solo,
+            format!(
+                r#"{{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0, {complete_scenarios},
+                "saturation": {{"runs": [{{"replicas": 1,
+                        "sweep": [{{"goodput_tokens_per_s": 50.0}}]}}],
+                    "replica_kill": {{"recovered": true, "failover_completions": 1,
+                                      "bit_identical": true}}}}}}"#
+            ),
+        )
+        .unwrap();
+        assert!(validate_serving(&solo).is_err(), "single-replica-only saturation must fail");
+        let no_failover = dir.join("no_failover.json");
+        std::fs::write(
+            &no_failover,
+            format!(
+                r#"{{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0, {complete_scenarios},
+                "saturation": {{"runs": [
+                        {{"replicas": 1, "sweep": [{{"goodput_tokens_per_s": 50.0}}]}},
+                        {{"replicas": 2, "sweep": [{{"goodput_tokens_per_s": 90.0}}]}}],
+                    "replica_kill": {{"recovered": true, "failover_completions": 0,
+                                      "bit_identical": true}}}}}}"#
+            ),
+        )
+        .unwrap();
+        assert!(validate_serving(&no_failover).is_err(), "zero failovers must fail");
+        let good = dir.join("good.json");
+        std::fs::write(
+            &good,
+            format!(
+                r#"{{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0, {complete_scenarios},
+                "saturation": {{"replica_counts": [1, 2], "runs": [
+                        {{"replicas": 1, "sweep": [{{"offered_sessions": 4,
+                            "goodput_tokens_per_s": 50.0, "ttft_p95_us": 900.0}}]}},
+                        {{"replicas": 2, "sweep": [{{"offered_sessions": 4,
+                            "goodput_tokens_per_s": 90.0, "ttft_p95_us": 500.0}}]}}],
+                    "replica_kill": {{"replicas": 2, "recovered": true,
+                                      "failover_completions": 2,
+                                      "time_to_failover_ms": 120.5,
+                                      "bit_identical": true}}}}}}"#
+            ),
         )
         .unwrap();
         validate_serving(&good).unwrap();

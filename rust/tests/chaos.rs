@@ -472,6 +472,268 @@ fn drain_rejects_parked_head_of_line_request() {
     drop(engine);
 }
 
+/// Replica failure isolation (DESIGN.md §14, the PR-9 acceptance gate):
+/// on a 2-replica set, a panic in ONE replica (restart budget zero, so
+/// it dies for good) fails only ITS in-flight stream — with a typed
+/// retryable `EngineFailed` naming the replica — while its
+/// queued-but-undispatched work transparently fails over to the
+/// survivor and every completed stream is bit-identical to a fault-free
+/// run.
+#[test]
+fn panic_in_one_replica_isolates_failure_and_fails_over_queued_work() {
+    let mut rng = Rng::seed_from_u64(81);
+    let prompt = generate(Task::PRe, &mut rng, 96).prompt;
+    let req = || Request { prompt: prompt.clone(), max_new: 12, ignore_eos: true, ..Default::default() };
+
+    // fault-free reference (greedy decode ⇒ every completion must match)
+    let (clean, clean_engine) = start_coordinator(ServingConfig::default());
+    let reference = clean.submit(req()).unwrap().tokens;
+    common::assert_pool_drained(&clean_engine);
+
+    // replica 0 is clean; replica 1 panics at backend call 30 — inside
+    // its first request's decode (prefill ≈ 9 calls, each decode round
+    // well over 1), long before a 12-token stream can finish
+    let engine0 = EngineHandle::spawn_replica(artifacts(), 0).unwrap();
+    let engine1 = EngineHandle::spawn_replica_with(
+        artifacts(),
+        None,
+        Some(FaultPlan::new().with(30, FaultKind::Panic)),
+        1,
+    )
+    .unwrap();
+    let coord = Coordinator::start_replicas(
+        vec![engine0.clone(), engine1.clone()],
+        ServingConfig {
+            // one active request per replica: the second request each
+            // replica receives sits QUEUED, which is what failover moves
+            max_active_requests: 1,
+            // no respawns: replica 1's death is permanent, so its queued
+            // work MUST fail over to survive
+            engine_restart_max: 0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // identical prompts ⇒ identical committed tokens ⇒ least-loaded
+    // dispatch alternates deterministically: r0, r1, r0, r1
+    let handles: Vec<SessionHandle> = (0..4).map(|_| coord.open(req()).unwrap()).collect();
+    let outcomes: Vec<StreamOutcome> = handles.iter().map(drain_session).collect();
+
+    let mut completed = 0;
+    let mut failed = 0;
+    for (i, o) in outcomes.iter().enumerate() {
+        assert_eq!(o.terminals, 1, "session {i} must see exactly one terminal event");
+        match (&o.done, &o.error) {
+            (Some(done), None) => {
+                completed += 1;
+                assert_eq!(done.tokens, reference, "session {i}: completed stream diverged");
+            }
+            (None, Some(err)) => {
+                failed += 1;
+                match err {
+                    RequestError::EngineFailed { replica, .. } => {
+                        assert_eq!(*replica, 1, "only replica 1 may fail sessions");
+                    }
+                    other => panic!("session {i}: expected EngineFailed, got {other:?}"),
+                }
+                assert!(err.retryable(), "replica death must be retryable (peers serve)");
+            }
+            other => panic!("session {i}: inconsistent terminal state {other:?}"),
+        }
+    }
+    // exactly the one stream in flight on replica 1 dies; its queued
+    // request and both replica-0 streams complete
+    assert_eq!(failed, 1, "replica 1's in-flight stream must be the only casualty");
+    assert_eq!(completed, 3, "queued work must fail over to the survivor");
+
+    let m = coord.metrics.lock().unwrap();
+    assert!(m.dispatch_failovers >= 1, "the queued request must be counted as a failover");
+    assert_eq!(m.replicas[1].deaths, 1, "replica 1 must be marked dead exactly once");
+    assert_eq!(m.engine_restarts, 0);
+    drop(m);
+    // the survivor keeps serving the same stream bit-identically...
+    let got = coord.submit(req()).unwrap();
+    assert_eq!(got.tokens, reference);
+    assert_eq!(got.replica, 0, "only replica 0 is left to serve");
+    // ...and its pool drains to zero. (Replica 1's pool died with its
+    // engine lifetime — with a zero restart budget there is no live
+    // lifetime left to interrogate, same as the post-drain idiom.)
+    common::assert_pool_drained(&engine0);
+    assert_eq!(engine1.generation(), 0, "a zero restart budget must never respawn");
+}
+
+/// Satellite-1 regression (DESIGN.md §14): a respawned engine must not
+/// serve — or retain — prefix pages indexed from the DEAD lifetime's
+/// pool. After a mid-stream panic under an armed prefix cache, the
+/// fresh lifetime starts cold (the same prompt MISSES, then re-warms),
+/// streams stay bit-identical, and `drained_with_retained` holds across
+/// the restart (the pool fully drains net of legitimately retained
+/// pages).
+#[test]
+fn respawn_clears_prefix_index_and_drains_with_retention() {
+    let mut rng = Rng::seed_from_u64(82);
+    let prompt = generate(Task::PRe, &mut rng, 96).prompt;
+    let req = |max_new: usize| Request {
+        prompt: prompt.clone(),
+        max_new,
+        ignore_eos: true,
+        ..Default::default()
+    };
+
+    let (clean, clean_engine) = start_coordinator(ServingConfig::default());
+    let reference = clean.submit(req(4)).unwrap().tokens;
+    common::assert_pool_drained(&clean_engine);
+
+    // call 150 lands inside request B's decode: request A (cold 96-token
+    // prefill + 4 decode rounds) stays well under it, B (16 rounds)
+    // reaches well past it
+    let plan = FaultPlan::new().with(150, FaultKind::Panic);
+    let engine = EngineHandle::spawn_with_faults(artifacts(), None, plan).unwrap();
+    let coord = Coordinator::start(
+        engine.clone(),
+        ServingConfig {
+            prefix_cache: true,
+            engine_restart_backoff_ms: 10,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // A: cold — warms the prefix cache and retains its prompt pages
+    let a = coord.submit(req(4)).unwrap();
+    assert_eq!(a.tokens, reference, "cold prefix-cached stream must match the clean run");
+    common::assert_pool_drained(&engine); // drained_with_retained: retained pages are legitimate
+
+    // B: warm hit on the same prompt, then the injected panic kills the
+    // lifetime mid-decode — typed, retryable
+    let hb = coord.open(req(16)).unwrap();
+    let ob = drain_session(&hb);
+    assert_eq!(ob.terminals, 1);
+    let err = ob.error.expect("the panic must fail the in-flight warm stream");
+    assert!(matches!(err, RequestError::EngineFailed { .. }), "{err:?}");
+
+    // C: the respawned lifetime must start COLD — a stale index pointing
+    // at the dead pool's pages would either corrupt C or retain ghost
+    // pages. C re-warms the cache; D then hits it again.
+    let c = coord.submit(req(4)).unwrap();
+    assert_eq!(c.tokens, reference, "post-restart stream must be bit-identical");
+    let d = coord.submit(req(4)).unwrap();
+    assert_eq!(d.tokens, reference);
+
+    let m = coord.metrics.lock().unwrap();
+    assert!(m.engine_restarts >= 1, "supervision must have respawned the engine");
+    assert!(
+        m.prefix_misses >= 2,
+        "A (cold) and C (post-restart, cleared index) must both miss: {}",
+        m.summary()
+    );
+    assert!(m.prefix_hits >= 2, "B and D must hit the warm cache: {}", m.summary());
+    drop(m);
+    assert!(engine.generation() >= 1);
+    // the regression's core assert: the fresh lifetime's pool drains to
+    // zero net of ITS OWN retained prefix pages — nothing carried over
+    // from the dead pool's index
+    common::assert_pool_drained(&engine);
+    let stats = engine.prefix_stats().unwrap();
+    assert!(
+        stats.retained_pages > 0,
+        "C/D must have re-warmed the fresh lifetime's cache: {stats:?}"
+    );
+}
+
+/// Seeded chaos over a TWO-replica set (the CI sweep target): each
+/// replica's first lifetime draws its own fault schedule from
+/// `FLUX_FAULT_SEED`, and whatever mix of errs, panics and stalls they
+/// land, every session terminates exactly once (typed), the set
+/// recovers, and BOTH pools drain.
+#[test]
+fn seeded_faults_on_a_two_replica_set_terminate_and_recover() {
+    let base: u64 = std::env::var("FLUX_FAULT_SEED")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(1);
+    for seed in base..base + 4 {
+        let engines: Vec<EngineHandle> = (0..2)
+            .map(|i| {
+                EngineHandle::spawn_replica_with(
+                    artifacts(),
+                    None,
+                    Some(FaultPlan::seeded(seed.wrapping_add(i as u64 * 1000))),
+                    i,
+                )
+                .unwrap()
+            })
+            .collect();
+        let coord = Coordinator::start_replicas(
+            engines.clone(),
+            ServingConfig {
+                engine_round_timeout_ms: Some(30_000),
+                engine_restart_max: 4,
+                engine_restart_backoff_ms: 10,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::seed_from_u64(seed);
+        let reqs: Vec<Request> = (0..4)
+            .map(|_| {
+                let len = 64 + rng.gen_range(64);
+                let max_new = 6 + rng.gen_range(8);
+                Request {
+                    prompt: generate(Task::PRe, &mut rng, len).prompt,
+                    max_new,
+                    ignore_eos: true,
+                    ..Default::default()
+                }
+            })
+            .collect();
+        let handles: Vec<SessionHandle> =
+            reqs.iter().map(|r| coord.open(r.clone()).unwrap()).collect();
+        for (i, h) in handles.iter().enumerate() {
+            let o = drain_session(h);
+            assert_eq!(
+                o.terminals, 1,
+                "seed {seed}: session {i} must see exactly one terminal event"
+            );
+            if let Some(err) = &o.error {
+                assert!(
+                    matches!(err, RequestError::Engine(_) | RequestError::EngineFailed { .. }),
+                    "seed {seed}: session {i} got a mistyped terminal {err:?}"
+                );
+            } else if let Some(done) = &o.done {
+                assert_eq!(done.tokens.len(), reqs[i].max_new, "seed {seed}: max_new violated");
+                assert!(done.replica < 2, "seed {seed}: impossible replica id");
+            }
+        }
+        // recovery liveness: with per-replica restart budgets of 4 and
+        // at most one lifetime-killing fault per plan, SOME replica is
+        // serving — a probe completes within a few typed retries
+        let probe = Request {
+            prompt: generate(Task::Gov, &mut rng, 48).prompt,
+            max_new: 4,
+            ignore_eos: true,
+            ..Default::default()
+        };
+        let mut served = false;
+        for _ in 0..5 {
+            let h = coord
+                .open(probe.clone())
+                .unwrap_or_else(|e| panic!("seed {seed}: probe admission failed: {e:?}"));
+            let o = drain_session(&h);
+            assert_eq!(o.terminals, 1, "seed {seed}: probe must terminate exactly once");
+            if o.done.is_some() {
+                served = true;
+                break;
+            }
+        }
+        assert!(served, "seed {seed}: the replica set did not recover");
+        for e in &engines {
+            common::assert_pool_drained(e);
+        }
+    }
+}
+
 /// With the restart budget exhausted (`engine_restart_max: 0`), a dead
 /// engine fails everything typed and the scheduler shuts down — no
 /// restart, no hang, and later submissions still get a typed error.

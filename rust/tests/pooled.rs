@@ -150,8 +150,9 @@ fn worst_case_over_budget_is_rejected_with_typed_overloaded() {
         .open(Request { prompt: s.prompt.clone(), max_new: 32, ..Default::default() })
         .err()
         .expect("over-budget request must be rejected at enqueue");
-    assert!(matches!(err, RequestError::Overloaded(_)), "{err:?}");
+    assert!(matches!(err, RequestError::Overloaded { .. }), "{err:?}");
     assert_eq!(err.kind(), "overloaded");
+    assert_eq!(err.overload_detail(), Some("total_tokens"), "{err:?}");
 
     // prefill-token budget: the prompt alone exceeds the round budget
     let (coord2, engine2) = start_coordinator(ServingConfig {
@@ -162,7 +163,8 @@ fn worst_case_over_budget_is_rejected_with_typed_overloaded() {
         .open(Request { prompt: s.prompt.clone(), ..Default::default() })
         .err()
         .expect("prompt over the prefill budget must be rejected");
-    assert!(matches!(err2, RequestError::Overloaded(_)), "{err2:?}");
+    assert!(matches!(err2, RequestError::Overloaded { .. }), "{err2:?}");
+    assert_eq!(err2.overload_detail(), Some("prefill_tokens"), "{err2:?}");
 
     // page-pool budget: a 16-page pool can never hold the request's
     // worst case (per-layer prefill bucket + SA ring)
@@ -172,7 +174,8 @@ fn worst_case_over_budget_is_rejected_with_typed_overloaded() {
         .open(Request { prompt: s.prompt, ..Default::default() })
         .err()
         .expect("request over the page budget must be rejected");
-    assert!(matches!(err3, RequestError::Overloaded(_)), "{err3:?}");
+    assert!(matches!(err3, RequestError::Overloaded { .. }), "{err3:?}");
+    assert_eq!(err3.overload_detail(), Some("pages"), "{err3:?}");
     assert!(err3.to_string().contains("page"), "{err3}");
     let m = coord3.metrics.lock().unwrap();
     assert_eq!(m.requests_overloaded, 1);

@@ -1,0 +1,342 @@
+//! Replica-set dispatch invariants (DESIGN.md §14): load-aware
+//! dispatch is deterministic, session affinity routes warm prefixes to
+//! the replica that owns their cached pages, queue watermarks reject
+//! typed-and-retryable under saturation and recover on drain-down, a
+//! killed replica's queued work completes on survivors bit-identical to
+//! a no-fault run, and `drain_replica` rolls one replica without
+//! interrupting streams on its peers.
+//!
+//! Determinism in these tests leans on two properties pinned elsewhere:
+//! greedy decode is bit-exact regardless of batching, and dispatch
+//! breaks committed-token ties toward the lowest replica index.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use flux_attention::config::ServingConfig;
+use flux_attention::coordinator::{
+    Coordinator, Request, RequestError, Response, SessionEvent, SessionHandle,
+};
+use flux_attention::engine::EngineHandle;
+use flux_attention::runtime::chaos::{FaultKind, FaultPlan};
+use flux_attention::runtime::synthetic;
+use flux_attention::util::rng::Rng;
+use flux_attention::workload::{generate, Task};
+
+mod common;
+
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+fn artifacts() -> PathBuf {
+    synthetic::ensure_default().expect("artifact generation must not fail")
+}
+
+fn start_set(n: usize, cfg: ServingConfig) -> (Arc<Coordinator>, Vec<EngineHandle>) {
+    let engines: Vec<EngineHandle> =
+        (0..n).map(|i| EngineHandle::spawn_replica(artifacts(), i).unwrap()).collect();
+    let coord = Coordinator::start_replicas(engines.clone(), cfg).unwrap();
+    (coord, engines)
+}
+
+/// Drain one session to its single terminal event.
+fn finish(h: &SessionHandle) -> Result<Response, RequestError> {
+    let mut done = None;
+    let mut error = None;
+    let mut terminals = 0;
+    while let Some(ev) = h.recv_timeout(TIMEOUT) {
+        match ev {
+            SessionEvent::Done { stats } => {
+                terminals += 1;
+                done = Some(stats);
+            }
+            SessionEvent::Error { error: e } => {
+                terminals += 1;
+                error = Some(e);
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(terminals, 1, "every session must see exactly one terminal event");
+    match (done, error) {
+        (Some(d), None) => Ok(d),
+        (None, Some(e)) => Err(e),
+        other => panic!("inconsistent terminal state {other:?}"),
+    }
+}
+
+/// Committed-token gauges return to zero once every stream retires —
+/// the `LoadGuard` accounting leaks nothing. Retirement sends the
+/// terminal event before the guard drops, so poll briefly.
+fn assert_loads_drain(coord: &Coordinator) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let loads = coord.replica_loads();
+        if loads.iter().all(|&l| l == 0) {
+            return;
+        }
+        assert!(Instant::now() < deadline, "committed-token load leaked: {loads:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Least-loaded dispatch is a pure function of the committed-token
+/// gauges: with a seeded arrival order submitted faster than anything
+/// can retire, the replica assignment matches a greedy simulation of
+/// `argmin(committed, tie → lowest index)` — and an identical re-run
+/// reproduces it exactly.
+#[test]
+fn least_loaded_dispatch_matches_greedy_simulation_deterministically() {
+    let mut rng = Rng::seed_from_u64(91);
+    let reqs: Vec<Request> = [96usize, 64, 80, 72, 88, 68]
+        .iter()
+        .map(|&len| Request {
+            prompt: generate(Task::PRe, &mut rng, len).prompt,
+            max_new: 16,
+            ignore_eos: true,
+            ..Default::default()
+        })
+        .collect();
+
+    // greedy reference simulation over the ACTUAL prompt lengths
+    let mut loads = [0usize; 2];
+    let expected: Vec<usize> = reqs
+        .iter()
+        .map(|r| {
+            let pick = if loads[1] < loads[0] { 1 } else { 0 };
+            loads[pick] += r.prompt.len() + r.max_new;
+            pick
+        })
+        .collect();
+    assert!(expected.contains(&1), "the sweep must exercise both replicas");
+
+    let mut runs = Vec::new();
+    for _ in 0..2 {
+        let (coord, _engines) = start_set(2, ServingConfig::default());
+        // open everything back-to-back: dispatch happens at admission,
+        // and the first retirement is many decode rounds away
+        let handles: Vec<SessionHandle> =
+            reqs.iter().map(|r| coord.open(r.clone()).unwrap()).collect();
+        let assigned: Vec<usize> = handles
+            .iter()
+            .map(|h| {
+                let done = finish(h).expect("fault-free streams must complete");
+                assert_eq!(done.tokens.len(), 16);
+                done.replica
+            })
+            .collect();
+        assert_eq!(assigned, expected, "dispatch diverged from the greedy simulation");
+        assert_loads_drain(&coord);
+        runs.push(assigned);
+    }
+    assert_eq!(runs[0], runs[1], "seeded arrivals must dispatch identically across runs");
+}
+
+/// Session affinity: once a prompt's prefix pages are warm on one
+/// replica, re-submissions route back to that OWNER even when the
+/// committed-token tie-break would pick a different replica — that is
+/// the whole point of affinity (a warm hit beats an idle peer).
+#[test]
+fn session_affinity_routes_warm_prefixes_to_the_owning_replica() {
+    let mut rng = Rng::seed_from_u64(92);
+    let filler_prompt = generate(Task::Gov, &mut rng, 128).prompt;
+    let prompt = generate(Task::PRe, &mut rng, 96).prompt;
+    let (coord, _engines) = start_set(
+        2,
+        ServingConfig { prefix_cache: true, ..Default::default() },
+    );
+
+    // pin replica 0 under a long filler stream so the probe prompt's
+    // first dispatch goes least-loaded to replica 1
+    let filler = coord
+        .open(Request {
+            prompt: filler_prompt,
+            max_new: 64,
+            ignore_eos: true,
+            ..Default::default()
+        })
+        .unwrap();
+    let req = || Request {
+        prompt: prompt.clone(),
+        max_new: 8,
+        ignore_eos: true,
+        ..Default::default()
+    };
+    let cold = coord.submit(req()).unwrap();
+    assert_eq!(cold.replica, 1, "least-loaded dispatch must avoid the busy replica");
+
+    // by now replica 1 owns the prompt's prefix pages; the re-submission
+    // must follow them there (and decode bit-identically off the cache)
+    let warm = coord.submit(req()).unwrap();
+    assert_eq!(warm.replica, 1, "affinity must route the warm hit to the owner");
+    assert_eq!(warm.tokens, cold.tokens, "warm-hit stream diverged");
+
+    let filler_done = finish(&filler).expect("the filler must stream to completion undisturbed");
+    assert_eq!(filler_done.tokens.len(), 64);
+    assert_eq!(filler_done.replica, 0);
+
+    let m = coord.metrics.lock().unwrap();
+    assert!(m.dispatch_affinity_hits >= 1, "no affinity routing recorded: {}", m.summary());
+    assert!(m.prefix_hits >= 1, "the warm re-submission must hit the prefix cache");
+    drop(m);
+    assert_loads_drain(&coord);
+}
+
+/// Queue-depth watermarks (DESIGN.md §14): when the only replica's
+/// queue reaches the high watermark, admission fails with the typed,
+/// retryable `Overloaded("queue_watermark")`; once the backlog drains
+/// below the low watermark the latch clears and admission resumes.
+#[test]
+fn queue_watermark_rejects_typed_and_recovers_below_low_watermark() {
+    let mut rng = Rng::seed_from_u64(93);
+    let prompt = generate(Task::PRe, &mut rng, 96).prompt;
+    let req = || Request { prompt: prompt.clone(), max_new: 12, ignore_eos: true, ..Default::default() };
+    let (coord, _engines) = start_set(
+        1,
+        ServingConfig {
+            // one active stream; everything behind it queues in-channel
+            // (the scheduler only pops arrivals while it has a free slot)
+            max_active_requests: 1,
+            queue_high_watermark: Some(3),
+            queue_low_watermark: Some(1),
+            ..Default::default()
+        },
+    );
+
+    // pin s0 mid-decode first — once it holds the only active slot the
+    // scheduler pops nothing more, so queue depth is exactly the number
+    // of backlogged opens (no race against admission)
+    let s0 = coord.open(req()).unwrap();
+    while let Some(ev) = s0.recv_timeout(TIMEOUT) {
+        if matches!(ev, SessionEvent::Token { .. }) {
+            break;
+        }
+    }
+    let mut backlog: Vec<SessionHandle> = (0..3).map(|_| coord.open(req()).unwrap()).collect();
+    backlog.insert(0, s0);
+    assert_eq!(coord.queue_depth(), 3, "the backlog must sit in the admission queue");
+    let err = coord.open(req()).expect_err("admission above the high watermark must fail");
+    assert!(
+        matches!(err, RequestError::Overloaded { .. }),
+        "expected a typed Overloaded, got {err:?}"
+    );
+    assert_eq!(err.overload_detail(), Some("queue_watermark"));
+    assert!(err.retryable(), "watermark pressure is transient — clients should back off");
+
+    // drain the backlog; depth falls to 0 ≤ low, clearing the latch
+    for h in &backlog {
+        let done = finish(h).expect("backlogged streams must still complete");
+        assert_eq!(done.tokens.len(), 12);
+    }
+    let recovered = coord.submit(req()).unwrap();
+    assert_eq!(recovered.tokens.len(), 12);
+
+    let m = coord.metrics.lock().unwrap();
+    assert!(m.watermark_rejections >= 1, "the rejection must be attributed: {}", m.summary());
+    assert!(m.requests_overloaded >= 1);
+    drop(m);
+    assert_loads_drain(&coord);
+}
+
+/// The ISSUE's failover invariant, dispatch-side: kill one replica of
+/// two mid-stream (restart budget zero) and every request that was
+/// QUEUED on it completes on the survivor with tokens bit-identical to
+/// a run where the fault never happened. Only the in-flight victim
+/// fails, typed with the dead replica's index.
+#[test]
+fn killed_replica_queued_work_completes_on_survivors_bit_identical() {
+    let mut rng = Rng::seed_from_u64(94);
+    let prompt = generate(Task::PRe, &mut rng, 96).prompt;
+    let req = || Request { prompt: prompt.clone(), max_new: 12, ignore_eos: true, ..Default::default() };
+
+    let clean_engine = EngineHandle::spawn(artifacts()).unwrap();
+    let clean = Coordinator::start(clean_engine, ServingConfig::default()).unwrap();
+    let reference = clean.submit(req()).unwrap().tokens;
+
+    let engine0 = EngineHandle::spawn_replica(artifacts(), 0).unwrap();
+    let engine1 = EngineHandle::spawn_replica_with(
+        artifacts(),
+        None,
+        // call 30 is deep inside replica 1's FIRST stream (prefill ≈ 9
+        // calls, each decode round well past one) — its other two
+        // requests are still queued when it dies
+        Some(FaultPlan::new().with(30, FaultKind::Panic)),
+        1,
+    )
+    .unwrap();
+    let coord = Coordinator::start_replicas(
+        vec![engine0, engine1],
+        ServingConfig {
+            max_active_requests: 1,
+            engine_restart_max: 0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // identical committed sizes ⇒ dispatch alternates r0,r1,r0,r1,r0,r1
+    let handles: Vec<SessionHandle> = (0..6).map(|_| coord.open(req()).unwrap()).collect();
+    let mut completed = 0;
+    let mut failed_on = Vec::new();
+    for (i, h) in handles.iter().enumerate() {
+        match finish(h) {
+            Ok(done) => {
+                completed += 1;
+                assert_eq!(done.tokens, reference, "session {i}: failover stream diverged");
+            }
+            Err(RequestError::EngineFailed { replica, .. }) => failed_on.push(replica),
+            Err(other) => panic!("session {i}: expected EngineFailed, got {other:?}"),
+        }
+    }
+    // replica 1 held one in-flight stream (the casualty) and two queued
+    // ones (the failovers); replica 0's three were never at risk
+    assert_eq!(failed_on, vec![1], "exactly the in-flight stream on replica 1 may fail");
+    assert_eq!(completed, 5);
+    let m = coord.metrics.lock().unwrap();
+    assert!(m.dispatch_failovers >= 2, "both queued requests must fail over: {}", m.summary());
+    assert_eq!(m.replicas[1].deaths, 1);
+    drop(m);
+    assert_loads_drain(&coord);
+}
+
+/// Rolling restart: `drain_replica` takes one replica out, respawns its
+/// engine (generation bump, cold caches) and rejoins it — while a
+/// stream on the OTHER replica keeps decoding uninterrupted, and the
+/// rejoined replica serves new work afterwards.
+#[test]
+fn drain_replica_rolls_one_replica_without_interrupting_its_peer() {
+    let mut rng = Rng::seed_from_u64(95);
+    let long_prompt = generate(Task::Gov, &mut rng, 128).prompt;
+    let prompt = generate(Task::PRe, &mut rng, 96).prompt;
+    let (coord, engines) = start_set(2, ServingConfig::default());
+
+    // occupy replica 0 (tie-break target) with a long-lived stream
+    let pinned = coord
+        .open(Request { prompt: long_prompt.clone(), max_new: 96, ignore_eos: true, ..Default::default() })
+        .unwrap();
+
+    // roll the idle replica 1: drains immediately, respawns, rejoins
+    assert!(coord.drain_replica(1, Duration::from_secs(30)).unwrap());
+    assert_eq!(coord.replica_generations(), vec![0, 1], "only replica 1 may bump");
+    assert!(coord.drain_replica(7, Duration::from_secs(1)).is_err(), "bounds-checked");
+
+    // the rejoined replica is back in the dispatch set: replica 0 is
+    // still busy, so least-loaded sends new work to fresh replica 1
+    let probe = coord
+        .submit(Request { prompt: prompt.clone(), max_new: 8, ignore_eos: true, ..Default::default() })
+        .unwrap();
+    assert_eq!(probe.replica, 1, "the rejoined replica must serve again");
+
+    // ...and the peer's stream was never interrupted
+    let done = finish(&pinned).expect("the pinned stream must survive the roll");
+    assert_eq!(done.tokens.len(), 96);
+    assert_eq!(done.replica, 0);
+
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.replicas[1].drains, 1, "the roll must be accounted: {}", m.summary());
+    drop(m);
+    assert_loads_drain(&coord);
+    for e in &engines {
+        common::assert_pool_drained(e);
+    }
+}
