@@ -187,6 +187,43 @@ impl MetaConfig {
     }
 }
 
+/// How admission charges a request's KV-page footprint before the
+/// router has fired (DESIGN.md §15). The true footprint is only known
+/// once the first prefill chunk pins the per-layer route: SA layers
+/// draw a small fixed `sa_buf` ring while FA layers grow to the
+/// covering bucket for `prompt + max_new`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionMode {
+    /// Charge the all-FA worst case (every layer grown to the covering
+    /// bucket). Structurally under-admits hybrid routes but can never
+    /// run the pool dry at runtime — exactly the pre-§15 behavior.
+    WorstCase,
+    /// Charge `ceil(worst_case * factor)` at admission and correct the
+    /// ledger to the routed footprint once the route is pinned at the
+    /// prefill→decode promotion. `factor < 1.0` over-admits on purpose;
+    /// a genuinely exhausted pool is handled by preempt-and-resume
+    /// instead of rejection (DESIGN.md §15).
+    Optimistic {
+        /// Fraction of the worst-case page footprint charged at
+        /// admission (clamped to a minimum of one page).
+        factor: f64,
+    },
+}
+
+impl AdmissionMode {
+    /// Pages to charge at admission for a request whose worst-case
+    /// footprint is `worst` pages.
+    pub fn admission_pages(&self, worst: usize) -> usize {
+        match *self {
+            AdmissionMode::WorstCase => worst,
+            AdmissionMode::Optimistic { factor } => {
+                let f = factor.clamp(0.0, 1.0);
+                ((worst as f64 * f).ceil() as usize).clamp(1, worst)
+            }
+        }
+    }
+}
+
 /// Serving-side knobs (the paper's deployment configuration, section 3.3).
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
@@ -268,6 +305,16 @@ pub struct ServingConfig {
     /// `None` defaults to half the high watermark. The hysteresis gap
     /// keeps admission from flapping at the boundary.
     pub queue_low_watermark: Option<usize>,
+    /// route-aware optimistic admission (DESIGN.md §15): how the page
+    /// ledger charges a request before its route is known. `WorstCase`
+    /// reproduces the pre-§15 admission decisions exactly.
+    pub admission_mode: AdmissionMode,
+    /// preempt-and-resume (DESIGN.md §15): how many times one request
+    /// may be preempted (or re-parked after a failed resume) before it
+    /// fails with typed retryable
+    /// `RequestError::PreemptionExhausted` — the starvation bound that
+    /// keeps every admitted stream terminating.
+    pub max_preemptions: u32,
 }
 
 impl Default for ServingConfig {
@@ -290,6 +337,8 @@ impl Default for ServingConfig {
             replicas: 1,
             queue_high_watermark: None,
             queue_low_watermark: None,
+            admission_mode: AdmissionMode::WorstCase,
+            max_preemptions: 4,
         }
     }
 }
@@ -363,5 +412,22 @@ mod tests {
     #[test]
     fn missing_field_is_an_error() {
         assert!(MetaConfig::from_json_str("{}", PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn admission_pages_charging() {
+        // worst case charges the full footprint
+        assert_eq!(AdmissionMode::WorstCase.admission_pages(100), 100);
+        assert_eq!(AdmissionMode::WorstCase.admission_pages(1), 1);
+        // optimistic rounds up and never charges below one page or
+        // above the worst case
+        let half = AdmissionMode::Optimistic { factor: 0.5 };
+        assert_eq!(half.admission_pages(100), 50);
+        assert_eq!(half.admission_pages(101), 51);
+        assert_eq!(half.admission_pages(1), 1);
+        assert_eq!(AdmissionMode::Optimistic { factor: 0.0 }.admission_pages(100), 1);
+        assert_eq!(AdmissionMode::Optimistic { factor: 2.0 }.admission_pages(100), 100);
+        // factor 1.0 is exactly worst case
+        assert_eq!(AdmissionMode::Optimistic { factor: 1.0 }.admission_pages(37), 37);
     }
 }

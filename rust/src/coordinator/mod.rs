@@ -44,10 +44,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::ServingConfig;
+use crate::config::{AdmissionMode, ServingConfig};
 use crate::engine::{ChunkOutcome, EngineFailed, EngineHandle, PoolProfile, PrefillReport};
+use crate::kvcache::prefix::RingSnap;
 use crate::metrics::ServingMetrics;
-use crate::router::Policy;
+use crate::router::{AttnMode, Policy};
 use crate::tokenizer::EOS;
 
 /// A client-facing request.
@@ -142,6 +143,12 @@ pub enum RequestError {
     /// The coordinator is draining for shutdown ([`Coordinator::drain`]):
     /// in-flight streams finish, new admissions are rejected.
     Draining,
+    /// The request was preempted under KV-pool pressure (DESIGN.md §15)
+    /// more than [`crate::config::ServingConfig::max_preemptions`]
+    /// times: rather than thrash park/resume forever it fails typed.
+    /// Retryable — a resubmission re-enters admission fresh, ideally
+    /// after backoff while the pool pressure clears.
+    PreemptionExhausted { preemptions: u32 },
     /// Scheduler shut down.
     Shutdown,
 }
@@ -159,6 +166,7 @@ impl RequestError {
             RequestError::Engine(_) => "engine",
             RequestError::EngineFailed { .. } => "engine_failed",
             RequestError::Draining => "draining",
+            RequestError::PreemptionExhausted { .. } => "preemption_exhausted",
             RequestError::Shutdown => "shutdown",
         }
     }
@@ -177,6 +185,7 @@ impl RequestError {
                 | RequestError::Overloaded { .. }
                 | RequestError::Draining
                 | RequestError::EngineFailed { .. }
+                | RequestError::PreemptionExhausted { .. }
         )
     }
 
@@ -223,6 +232,13 @@ impl std::fmt::Display for RequestError {
             RequestError::Draining => {
                 write!(f, "draining: coordinator shutting down, not admitting new requests")
             }
+            RequestError::PreemptionExhausted { preemptions } => {
+                write!(
+                    f,
+                    "preemption budget exhausted: preempted {preemptions} times under KV-pool \
+                     pressure"
+                )
+            }
             RequestError::Shutdown => write!(f, "scheduler shut down"),
         }
     }
@@ -249,6 +265,16 @@ pub enum SessionEvent {
     },
     /// One decoded token.
     Token { tok: u32, step_us: u64 },
+    /// The request was preempted under KV-pool pressure (DESIGN.md
+    /// §15): its pages were reclaimed for a starved peer and it is
+    /// parked for a transparent resume. The `streamed` tokens emitted
+    /// so far stay valid; the stream continues bit-identically after
+    /// [`SessionEvent::Resumed`].
+    Preempted { streamed: usize, preemptions: u32 },
+    /// A preempted request finished its recompute resume: decode
+    /// continues exactly where the stream left off (no token is ever
+    /// re-emitted). `resume_us` is park → catch-up-complete wall clock.
+    Resumed { resume_us: u64, preemptions: u32 },
     /// Generation finished (EOS, stop token, or `max_new`).
     Done { stats: Response },
     /// The request failed, was cancelled, or exceeded its deadline.
@@ -396,8 +422,48 @@ impl Drop for LoadGuard {
     }
 }
 
+/// Everything needed to transparently resume a preempted request
+/// (DESIGN.md §15): the tokens already streamed, the pinned route, and
+/// the sparse-ring snapshots still held in the pool for the catch-up
+/// integrity check. Rides on a [`Pending`] — a parked victim is a
+/// pending request that happens to carry history.
+struct ResumeState {
+    /// Tokens already emitted to the client (first token + decode
+    /// steps). Empty for a prefill-phase victim: nothing streamed yet,
+    /// so its resume is an ordinary prefill.
+    generated: Vec<u32>,
+    /// Pinned per-layer route. Empty ⇒ the router re-fires on resume
+    /// (only for prefill-phase victims preempted before the router
+    /// ran; deterministic, so it re-derives the same decision).
+    route: Vec<AttnMode>,
+    /// Per-layer sparse-ring snapshots, verified against the rebuilt
+    /// rings by [`EngineHandle::catch_up`] (which frees them). Cleared
+    /// whenever a resume crosses an engine lifetime or a replica
+    /// boundary — the pool they point into is gone.
+    snaps: Vec<Option<RingSnap>>,
+    /// Engine generation the snaps were taken under.
+    snap_generation: u64,
+    /// Pool pages the snaps still occupy, charged against the page
+    /// ledger while parked.
+    snap_pages: usize,
+    omsr: f64,
+    modes: Vec<String>,
+    t_first_token: Option<Instant>,
+    decode_us: u64,
+    queue_us: Option<u64>,
+    /// Times this request has been preempted (capped by
+    /// [`ServingConfig::max_preemptions`]).
+    preemptions: u32,
+    /// When the preemption happened — resume latency is measured
+    /// park → catch-up complete.
+    t_preempted: Instant,
+}
+
 struct Pending {
     req: Request,
+    /// `Some` for a parked preemption victim awaiting resume
+    /// (DESIGN.md §15); `None` for a fresh arrival.
+    resume: Option<ResumeState>,
     sink: Sink,
     cancel: CancelToken,
     t_arrival: Instant,
@@ -434,6 +500,12 @@ struct Prefilling {
     sink: Sink,
     /// Committed-token charge, released on any terminal (drop).
     load: Option<LoadGuard>,
+    /// The original request, kept so the request can be preempted and
+    /// resumed (the resume replays `req.prompt`, DESIGN.md §15).
+    req: Request,
+    /// `Some` when this prefill IS a resume replay of a preempted
+    /// request; consumed by the catch-up at promotion.
+    resume: Option<ResumeState>,
 }
 
 struct Active {
@@ -459,6 +531,15 @@ struct Active {
     sink: Sink,
     /// Committed-token charge, released on any terminal (drop).
     load: Option<LoadGuard>,
+    /// The original request, kept so the request can be preempted and
+    /// resumed (DESIGN.md §15).
+    req: Request,
+    /// The pinned per-layer route (typed mirror of `modes`), carried
+    /// into the resume snapshot on preemption so the router never
+    /// re-fires.
+    route: Vec<AttnMode>,
+    /// Times this request has been preempted so far.
+    preemptions: u32,
 }
 
 /// Continuous-batching coordinator handle over a set of R
@@ -796,9 +877,18 @@ impl ReplicaCtx {
     fn failover_or_reject(
         &self,
         metrics: &Arc<Mutex<ServingMetrics>>,
-        p: Pending,
+        mut p: Pending,
         fallback: RequestError,
     ) {
+        // ring snapshots are pool-local: they must never cross a
+        // replica boundary (a peer's pool coincidentally at the same
+        // generation would "verify" — and free — pages it doesn't own).
+        // Callers release the ledger charge before failing over; this
+        // is the belt-and-braces choke point.
+        if let Some(rs) = p.resume.as_mut() {
+            rs.snaps.clear();
+            rs.snap_pages = 0;
+        }
         match self.set.upgrade() {
             Some(set) => match set.dispatch(p, Some(self.index)) {
                 Ok(()) => {
@@ -1104,7 +1194,13 @@ impl Coordinator {
             });
         }
         if let Some(pp) = &self.pool_profile {
-            let pages = pp.worst_case_pages(req.prompt.len(), req.max_new);
+            // the admission charge (DESIGN.md §15): the worst case under
+            // `WorstCase` (today's behavior, bit-for-bit), a configurable
+            // fraction of it under `Optimistic` — route-aware truth
+            // replaces the estimate at the prefill→decode promotion, and
+            // runtime pool exhaustion is handled by preemption
+            let worst = pp.worst_case_pages(req.prompt.len(), req.max_new);
+            let pages = self.cfg.admission_mode.admission_pages(worst);
             if pages > pp.total_pages {
                 let mut m = self.metrics.lock().unwrap();
                 m.requests_rejected += 1;
@@ -1112,7 +1208,7 @@ impl Coordinator {
                 return Err(RequestError::Overloaded {
                     detail: "pages",
                     message: format!(
-                        "worst case of {pages} KV pages exceeds the pool budget of {}",
+                        "admission charge of {pages} KV pages exceeds the pool budget of {}",
                         pp.total_pages
                     ),
                 });
@@ -1123,7 +1219,7 @@ impl Coordinator {
             .deadline_ms
             .or(self.default_deadline_ms)
             .and_then(|ms| t_arrival.checked_add(Duration::from_millis(ms)));
-        let pending = Pending { req, sink, cancel, t_arrival, deadline, load: None };
+        let pending = Pending { req, resume: None, sink, cancel, t_arrival, deadline, load: None };
         match self.set.dispatch(pending, None) {
             Ok(()) => Ok(()),
             Err((_, err)) => {
@@ -1173,6 +1269,10 @@ fn scheduler_loop(
     // batch's budgets right now: it parks here (FIFO preserved) until
     // retirements free budget, instead of being dropped or skipped
     let mut parked: Option<Pending> = None;
+    // preemption victims awaiting resume (DESIGN.md §15): requests
+    // whose KV pages were reclaimed under pool pressure. They outrank
+    // fresh arrivals at admission — they already streamed tokens.
+    let mut victims: VecDeque<Pending> = VecDeque::new();
     let mut queue_closed = false;
     let chunk_budget = cfg.prefill_chunk_budget.max(1);
     let round_timeout = cfg.engine_round_timeout_ms.map(Duration::from_millis);
@@ -1188,8 +1288,19 @@ fn scheduler_loop(
             if let Some(p) = parked.take() {
                 ctx.failover_or_reject(&metrics, p, RequestError::Draining);
             }
-            while let Ok(p) = queue_rx.try_recv() {
-                queue_depth.fetch_sub(1, Ordering::Relaxed);
+            // parked preemption victims drain with their LOGICAL
+            // snapshot (streamed tokens + pinned route): ring snaps are
+            // pool-local, so they are freed here and a peer resumes by
+            // full recompute; with no peer the stream ends typed
+            while let Some(mut p) = victims.pop_front() {
+                if let Some(rs) = p.resume.as_mut() {
+                    budgets.pages = budgets.pages.saturating_sub(rs.snap_pages);
+                    if engine.generation() == rs.snap_generation {
+                        engine.free_snaps(std::mem::take(&mut rs.snaps));
+                    }
+                    rs.snaps.clear();
+                    rs.snap_pages = 0;
+                }
                 ctx.failover_or_reject(&metrics, p, RequestError::Draining);
             }
             if active.is_empty() && prefilling.is_empty() {
@@ -1218,13 +1329,122 @@ fn scheduler_loop(
                     parked = Some(p);
                 }
             }
+            // parked victims honor cancel and deadline while waiting
+            sweep_victims(&engine, &metrics, &mut budgets, &mut victims);
+            let mut engine_down: Option<anyhow::Error> = None;
+            // --- resume (DESIGN.md §15): parked preemption victims
+            // re-enter the prefill pipeline ahead of fresh arrivals.
+            // The route is already pinned, so the page charge is the
+            // TRUE routed peak, not an estimate ---
+            while active.len() + prefilling.len() < cfg.max_active_requests {
+                let Some(mut p) = victims.pop_front() else { break };
+                let prompt_len = p.req.prompt.len();
+                let worst_total = prompt_len + p.req.max_new;
+                let pages = pool_profile.as_ref().map_or(0, |pp| match p.resume.as_ref() {
+                    Some(rs) if !rs.route.is_empty() => pp.routed_pages(
+                        prompt_len,
+                        p.req.max_new,
+                        &rs.route,
+                        p.req.policy.decode_mode(),
+                    ),
+                    _ => cfg
+                        .admission_mode
+                        .admission_pages(pp.worst_case_pages(prompt_len, p.req.max_new)),
+                });
+                let fits = budgets.prefill_tokens + prompt_len <= cfg.max_batch_prefill_tokens
+                    && budgets.total_tokens + worst_total <= cfg.max_batch_total_tokens
+                    && pool_profile
+                        .as_ref()
+                        .map_or(true, |pp| budgets.pages + pages <= pp.total_pages);
+                if !fits {
+                    if active.is_empty() && prefilling.is_empty() {
+                        // with nothing running the budgets cannot drain
+                        // any further: the only reclaimable charge left
+                        // is the parked ring snapshots themselves, so
+                        // drop them all (resumes then verify nothing)
+                        // and re-evaluate the fit
+                        let mut freed = false;
+                        for v in std::iter::once(&mut p).chain(victims.iter_mut()) {
+                            let Some(rs) = v.resume.as_mut() else { continue };
+                            if rs.snap_pages == 0 {
+                                continue;
+                            }
+                            budgets.pages = budgets.pages.saturating_sub(rs.snap_pages);
+                            if engine.generation() == rs.snap_generation {
+                                engine.free_snaps(std::mem::take(&mut rs.snaps));
+                            }
+                            rs.snaps.clear();
+                            rs.snap_pages = 0;
+                            freed = true;
+                        }
+                        if freed {
+                            victims.push_front(p);
+                            continue;
+                        }
+                        if pool_profile.as_ref().is_some_and(|pp| pages > pp.total_pages) {
+                            // the pinned route's true peak exceeds the
+                            // whole pool — optimistic admission let the
+                            // request in, the router went dense, and no
+                            // amount of preemption can make it fit: fail
+                            // typed retryable instead of spinning forever
+                            let total = pool_profile.as_ref().map_or(0, |pp| pp.total_pages);
+                            dispose_victim(
+                                &engine,
+                                &metrics,
+                                &mut budgets,
+                                p,
+                                RequestError::Overloaded {
+                                    detail: "pages",
+                                    message: format!(
+                                        "resume needs {pages} KV pages but the pool holds only {total}"
+                                    ),
+                                },
+                            );
+                            continue;
+                        }
+                    }
+                    victims.push_front(p);
+                    break;
+                }
+                match open_prefill(&engine, &cfg, &metrics, &mut budgets, p, ctx.index) {
+                    OpenOutcome::Opened(mut pf) => {
+                        pf.prompt_len = prompt_len;
+                        pf.budget_total = worst_total;
+                        pf.budget_pages = pages;
+                        budgets.prefill_tokens += prompt_len;
+                        budgets.total_tokens += worst_total;
+                        budgets.pages += pages;
+                        prefilling.push_back(pf);
+                    }
+                    OpenOutcome::Rejected => {}
+                    OpenOutcome::PoolDry(p) => {
+                        // staging found the pool dry even after prefix
+                        // eviction: park the victim back and preempt to
+                        // actually free pages for the next attempt
+                        victims.push_front(p);
+                        preempt_one(
+                            &engine,
+                            &cfg,
+                            &metrics,
+                            &mut budgets,
+                            &mut active,
+                            &mut victims,
+                            &[],
+                        );
+                        break;
+                    }
+                    OpenOutcome::EngineDead(e) => {
+                        engine_down = Some(e);
+                        break;
+                    }
+                }
+            }
             // --- admission (DESIGN.md §11): drain arrivals into the
             // prefill pipeline while their worst case fits the
             // token/page budgets. Opening a job validates and allocates
             // staging but runs no compute, so admission never stalls
             // decode; an idle scheduler waits here for the next request
             // (with a short timeout so a drain can wake it) ---
-            let mut engine_down: Option<anyhow::Error> = None;
             while active.len() + prefilling.len() < cfg.max_active_requests {
                 let p = if let Some(p) = parked.take() {
                     p
@@ -1261,9 +1481,9 @@ fn scheduler_loop(
                 // the engine, so no budget is charged (cancel is sticky and
                 // time is monotonic, so it cannot admit here)
                 if p.cancel.is_cancelled() || p.deadline.is_some_and(|d| Instant::now() >= d) {
-                    match open_prefill(&engine, &cfg, &metrics, p, ctx.index) {
+                    match open_prefill(&engine, &cfg, &metrics, &mut budgets, p, ctx.index) {
                         OpenOutcome::Opened(pf) => prefilling.push_back(pf),
-                        OpenOutcome::Rejected => {}
+                        OpenOutcome::Rejected | OpenOutcome::PoolDry(_) => {}
                         OpenOutcome::EngineDead(e) => {
                             engine_down = Some(e);
                             break;
@@ -1273,9 +1493,10 @@ fn scheduler_loop(
                 }
                 let prompt_len = p.req.prompt.len();
                 let worst_total = prompt_len + p.req.max_new;
-                let pages = pool_profile
-                    .as_ref()
-                    .map_or(0, |pp| pp.worst_case_pages(prompt_len, p.req.max_new));
+                let pages = pool_profile.as_ref().map_or(0, |pp| {
+                    cfg.admission_mode
+                        .admission_pages(pp.worst_case_pages(prompt_len, p.req.max_new))
+                });
                 let fits = budgets.prefill_tokens + prompt_len <= cfg.max_batch_prefill_tokens
                     && budgets.total_tokens + worst_total <= cfg.max_batch_total_tokens
                     && pool_profile
@@ -1289,7 +1510,7 @@ fn scheduler_loop(
                     parked = Some(p);
                     break;
                 }
-                match open_prefill(&engine, &cfg, &metrics, p, ctx.index) {
+                match open_prefill(&engine, &cfg, &metrics, &mut budgets, p, ctx.index) {
                     OpenOutcome::Opened(mut pf) => {
                         pf.prompt_len = prompt_len;
                         pf.budget_total = worst_total;
@@ -1300,6 +1521,22 @@ fn scheduler_loop(
                         prefilling.push_back(pf);
                     }
                     OpenOutcome::Rejected => {}
+                    OpenOutcome::PoolDry(p) => {
+                        // optimism met a dry pool at staging time: hold
+                        // the request at the admission head and preempt
+                        // a victim so the retry can allocate
+                        parked = Some(p);
+                        preempt_one(
+                            &engine,
+                            &cfg,
+                            &metrics,
+                            &mut budgets,
+                            &mut active,
+                            &mut victims,
+                            &[],
+                        );
+                        break;
+                    }
                     OpenOutcome::EngineDead(e) => {
                         engine_down = Some(e);
                         break;
@@ -1308,16 +1545,25 @@ fn scheduler_loop(
             }
             if let Some(err) = engine_down {
                 if !supervise_engine_failure(
-                    &engine, &cfg, &metrics, &mut budgets, &mut active, &mut prefilling, err, &ctx,
+                    &engine, &cfg, &metrics, &mut budgets, &mut active, &mut prefilling,
+                    &mut victims, err, &ctx,
                 ) {
-                    fail_remaining(&metrics, &queue_rx, &queue_depth, parked.take(), &engine, &ctx);
+                    fail_remaining(
+                        &metrics,
+                        &queue_rx,
+                        &queue_depth,
+                        parked.take(),
+                        &mut victims,
+                        &engine,
+                        &ctx,
+                    );
                     return;
                 }
                 continue;
             }
         }
 
-        if active.is_empty() && prefilling.is_empty() && parked.is_none() {
+        if active.is_empty() && prefilling.is_empty() && parked.is_none() && victims.is_empty() {
             if queue_closed {
                 return;
             }
@@ -1337,11 +1583,17 @@ fn scheduler_loop(
                     // typed retirement of everything in flight, then
                     // restart within the retry budget (DESIGN.md §12)
                     if !supervise_engine_failure(
-                        &engine, &cfg, &metrics, &mut budgets, &mut active, &mut prefilling, e,
-                        &ctx,
+                        &engine, &cfg, &metrics, &mut budgets, &mut active, &mut prefilling,
+                        &mut victims, e, &ctx,
                     ) {
                         fail_remaining(
-                            &metrics, &queue_rx, &queue_depth, parked.take(), &engine, &ctx,
+                            &metrics,
+                            &queue_rx,
+                            &queue_depth,
+                            parked.take(),
+                            &mut victims,
+                            &engine,
+                            &ctx,
                         );
                         return;
                     }
@@ -1380,6 +1632,7 @@ fn scheduler_loop(
                         m.prefix_retained_pages = prefix_retained_pages;
                     }
                     let mut kept = VecDeque::with_capacity(active.len());
+                    let mut starved: Vec<u64> = Vec::new();
                     for ((mut a, res), &us) in active.drain(..).zip(tokens).zip(&step_us) {
                         match res {
                             Ok(tok) => {
@@ -1393,17 +1646,43 @@ fn scheduler_loop(
                                 }
                             }
                             Err(e) => {
-                                retire(
-                                    &engine,
-                                    &metrics,
-                                    &mut budgets,
-                                    a,
-                                    Retire::Failed(e.to_string()),
-                                );
+                                let msg = e.to_string();
+                                if msg.contains("kv pool exhausted") {
+                                    // pool starvation is not the
+                                    // requester's failure (DESIGN.md
+                                    // §15): the append was pre-flight
+                                    // reserved so its state is
+                                    // untouched — it retries next round
+                                    // after a victim is preempted below
+                                    starved.push(a.engine_id);
+                                    kept.push_back(a);
+                                } else {
+                                    retire(
+                                        &engine,
+                                        &metrics,
+                                        &mut budgets,
+                                        a,
+                                        Retire::Failed(msg),
+                                    );
+                                }
                             }
                         }
                     }
                     active = kept;
+                    if !starved.is_empty() {
+                        // free real pages for the starved requesters:
+                        // youngest-by-arrival victim, never a starved
+                        // requester itself unless every active is starved
+                        preempt_one(
+                            &engine,
+                            &cfg,
+                            &metrics,
+                            &mut budgets,
+                            &mut active,
+                            &mut victims,
+                            &starved,
+                        );
+                    }
                 }
             }
         }
@@ -1440,12 +1719,14 @@ fn scheduler_loop(
                     metrics.lock().unwrap().prefill_chunks += 1;
                     if let Some(a) = finish_prefill(
                         &engine,
+                        &cfg,
                         &metrics,
                         &mut budgets,
+                        &mut victims,
+                        &pool_profile,
                         pf,
                         id,
                         report,
-                        cfg.prefix_cache,
                         ctx.index,
                     ) {
                         active.push_back(a);
@@ -1457,22 +1738,48 @@ fn scheduler_loop(
                     // whole in-flight set retires typed, then supervise
                     prefilling.push_front(pf);
                     if !supervise_engine_failure(
-                        &engine, &cfg, &metrics, &mut budgets, &mut active, &mut prefilling, e,
-                        &ctx,
+                        &engine, &cfg, &metrics, &mut budgets, &mut active, &mut prefilling,
+                        &mut victims, e, &ctx,
                     ) {
                         fail_remaining(
-                            &metrics, &queue_rx, &queue_depth, parked.take(), &engine, &ctx,
+                            &metrics,
+                            &queue_rx,
+                            &queue_depth,
+                            parked.take(),
+                            &mut victims,
+                            &engine,
+                            &ctx,
                         );
                         return;
                     }
                     break;
                 }
                 Err(e) => {
-                    // an ADMITTED request dying mid-prefill is an engine
-                    // failure (like a mid-decode one), not an admission
-                    // rejection; the engine already dropped the failed
-                    // job — retire_prefilling's cancel is belt-and-braces
-                    retire_prefilling(&engine, &metrics, &mut budgets, pf, Retire::Failed(e.to_string()));
+                    let msg = e.to_string();
+                    if msg.contains("kv pool exhausted") {
+                        // mid-prefill pool starvation (DESIGN.md §15):
+                        // the engine already dropped the job, so the
+                        // requester itself parks as a victim (resume
+                        // replays the prompt), and a decode victim is
+                        // preempted so the retry can actually allocate
+                        park_prefilling(&engine, &cfg, &metrics, &mut budgets, &mut victims, pf);
+                        preempt_one(
+                            &engine,
+                            &cfg,
+                            &metrics,
+                            &mut budgets,
+                            &mut active,
+                            &mut victims,
+                            &[],
+                        );
+                    } else {
+                        // an ADMITTED request dying mid-prefill is an
+                        // engine failure (like a mid-decode one), not an
+                        // admission rejection; the engine already dropped
+                        // the failed job — retire_prefilling's cancel is
+                        // belt-and-braces
+                        retire_prefilling(&engine, &metrics, &mut budgets, pf, Retire::Failed(msg));
+                    }
                 }
             }
         }
@@ -1517,6 +1824,7 @@ fn supervise_engine_failure(
     budgets: &mut Budgets,
     active: &mut VecDeque<Active>,
     prefilling: &mut VecDeque<Prefilling>,
+    victims: &mut VecDeque<Pending>,
     err: anyhow::Error,
     ctx: &ReplicaCtx,
 ) -> bool {
@@ -1524,6 +1832,17 @@ fn supervise_engine_failure(
         Some(f) => (f.cause.clone(), f.generation, f.stalled),
         None => (err.to_string(), engine.generation(), false),
     };
+    // parked preemption victims SURVIVE the lifetime change — their
+    // engine-side state was already freed at preemption — but their
+    // ring snaps died with the old pool: drop them (no free; the pages
+    // are gone) and resume by full recompute on the fresh lifetime
+    for p in victims.iter_mut() {
+        if let Some(rs) = p.resume.as_mut() {
+            budgets.pages = budgets.pages.saturating_sub(rs.snap_pages);
+            rs.snap_pages = 0;
+            rs.snaps.clear();
+        }
+    }
     if stalled {
         metrics.lock().unwrap().watchdog_trips += 1;
     }
@@ -1594,6 +1913,7 @@ fn fail_remaining(
     queue_rx: &Receiver<Pending>,
     queue_depth: &Arc<AtomicUsize>,
     parked: Option<Pending>,
+    victims: &mut VecDeque<Pending>,
     engine: &EngineHandle,
     ctx: &ReplicaCtx,
 ) {
@@ -1608,6 +1928,12 @@ fn fail_remaining(
         replica: ctx.index,
     };
     if let Some(p) = parked {
+        ctx.failover_or_reject(metrics, p, failed.clone());
+    }
+    // parked preemption victims fail over with their logical snapshot
+    // (streamed tokens + pinned route); their ring snaps died with this
+    // replica's pool, and failover_or_reject strips them
+    while let Some(p) = victims.pop_front() {
         ctx.failover_or_reject(metrics, p, failed.clone());
     }
     while let Ok(p) = queue_rx.try_recv() {
@@ -1650,11 +1976,19 @@ fn retire_prefilling(
     engine: &EngineHandle,
     metrics: &Arc<Mutex<ServingMetrics>>,
     budgets: &mut Budgets,
-    pf: Prefilling,
+    mut pf: Prefilling,
     how: Retire,
 ) {
     budgets.release_prefilling(&pf);
     engine.prefill_cancel(pf.job);
+    // a resume-in-flight still holds its ring snapshots (catch-up never
+    // ran): free them, unless they died with an older engine lifetime
+    if let Some(rs) = pf.resume.take() {
+        budgets.pages = budgets.pages.saturating_sub(rs.snap_pages);
+        if engine.generation() == rs.snap_generation {
+            engine.free_snaps(rs.snaps);
+        }
+    }
     {
         let mut m = metrics.lock().unwrap();
         m.stream_tokens.record_value(0);
@@ -1735,13 +2069,245 @@ fn sweep_retired(
     *active = kept;
 }
 
+/// Index of the youngest-by-arrival active request outside `exclude`
+/// (the preemption victim-selection policy, DESIGN.md §15).
+fn youngest(active: &VecDeque<Active>, exclude: &[u64]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, a) in active.iter().enumerate() {
+        if exclude.contains(&a.engine_id) {
+            continue;
+        }
+        best = match best {
+            Some(j) if active[j].t_arrival >= a.t_arrival => Some(j),
+            _ => Some(i),
+        };
+    }
+    best
+}
+
+/// Preempt ONE victim to relieve KV-pool pressure (DESIGN.md §15):
+/// youngest-by-arrival among decode-phase requests, never one of the
+/// requesters whose allocation failed (`exclude`) unless every active
+/// request is starved. The victim's caches are freed (sparse rings
+/// snapshot first, reusing the prefix cache's `RingSnap`), a
+/// `Preempted` event is emitted, and the request parks on the victims
+/// queue for a transparent resume. A victim over its `max_preemptions`
+/// budget instead fails typed retryable — its retirement still frees
+/// its pages. Returns whether any pages were freed.
+fn preempt_one(
+    engine: &EngineHandle,
+    cfg: &ServingConfig,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+    budgets: &mut Budgets,
+    active: &mut VecDeque<Active>,
+    victims: &mut VecDeque<Pending>,
+    exclude: &[u64],
+) -> bool {
+    let pick = youngest(active, exclude).or_else(|| youngest(active, &[]));
+    let Some(i) = pick else { return false };
+    let Some(mut a) = active.remove(i) else { return false };
+    a.preemptions += 1;
+    if a.preemptions > cfg.max_preemptions {
+        metrics.lock().unwrap().preemption_exhausted += 1;
+        let err = RequestError::PreemptionExhausted { preemptions: a.preemptions - 1 };
+        retire(engine, metrics, budgets, a, Retire::EngineDead(err));
+        return true;
+    }
+    match engine.preempt(a.engine_id) {
+        Ok(info) => {
+            budgets.release_active(&a);
+            // the snap blocks stay in the pool while parked
+            budgets.pages += info.snap_pages;
+            {
+                let mut m = metrics.lock().unwrap();
+                m.preemptions += 1;
+                m.preempted_pages_freed += info.pages_freed as u64;
+            }
+            let alive = a.sink.event(SessionEvent::Preempted {
+                streamed: a.generated.len(),
+                preemptions: a.preemptions,
+            });
+            if !alive {
+                // receiver gone: sweep_victims disposes it next round
+                a.cancel.cancel();
+            }
+            let Active {
+                generated,
+                omsr,
+                modes,
+                t_arrival,
+                t_first_token,
+                decode_us,
+                queue_us,
+                deadline,
+                cancel,
+                sink,
+                load,
+                req,
+                route,
+                preemptions,
+                ..
+            } = a;
+            victims.push_back(Pending {
+                req,
+                resume: Some(ResumeState {
+                    generated,
+                    route,
+                    snaps: info.ring_snaps,
+                    snap_generation: engine.generation(),
+                    snap_pages: info.snap_pages,
+                    omsr,
+                    modes,
+                    t_first_token: Some(t_first_token),
+                    decode_us,
+                    queue_us: Some(queue_us),
+                    preemptions,
+                    t_preempted: Instant::now(),
+                }),
+                sink,
+                cancel,
+                t_arrival,
+                deadline,
+                load,
+            });
+            true
+        }
+        Err(e) => {
+            // the preempt round-trip itself failed; engine death
+            // surfaces on the next decode round and routes into
+            // supervision
+            retire(engine, metrics, budgets, a, Retire::Failed(format!("preemption failed: {e}")));
+            false
+        }
+    }
+}
+
+/// A prefill job died to pool starvation: the engine already freed the
+/// job's staged KV, so the requester itself parks as a resume victim
+/// (DESIGN.md §15) — its resume replays the prompt (route pinned if the
+/// router had fired on an earlier attempt). Ring snaps a
+/// resume-in-flight carried ride along untouched: its catch-up never
+/// ran, so they are still live in the pool.
+fn park_prefilling(
+    engine: &EngineHandle,
+    cfg: &ServingConfig,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+    budgets: &mut Budgets,
+    victims: &mut VecDeque<Pending>,
+    pf: Prefilling,
+) {
+    budgets.release_prefilling(&pf);
+    engine.prefill_cancel(pf.job);
+    let Prefilling { queue_us, t_arrival, deadline, cancel, sink, load, req, resume, .. } = pf;
+    let mut rs = resume.unwrap_or_else(|| ResumeState {
+        generated: vec![],
+        route: vec![],
+        snaps: vec![],
+        snap_generation: engine.generation(),
+        snap_pages: 0,
+        omsr: 0.0,
+        modes: vec![],
+        t_first_token: None,
+        decode_us: 0,
+        queue_us: None,
+        preemptions: 0,
+        t_preempted: Instant::now(),
+    });
+    rs.queue_us = queue_us.or(rs.queue_us);
+    rs.preemptions += 1;
+    rs.t_preempted = Instant::now();
+    if rs.preemptions > cfg.max_preemptions {
+        budgets.pages = budgets.pages.saturating_sub(rs.snap_pages);
+        if engine.generation() == rs.snap_generation {
+            engine.free_snaps(rs.snaps);
+        }
+        {
+            let mut m = metrics.lock().unwrap();
+            m.preemption_exhausted += 1;
+            m.requests_failed += 1;
+            m.stream_tokens.record_value(rs.generated.len() as u64);
+        }
+        sink.error(RequestError::PreemptionExhausted { preemptions: rs.preemptions - 1 });
+        return;
+    }
+    metrics.lock().unwrap().preemptions += 1;
+    let alive = sink.event(SessionEvent::Preempted {
+        streamed: rs.generated.len(),
+        preemptions: rs.preemptions,
+    });
+    if !alive {
+        cancel.cancel();
+    }
+    victims.push_back(Pending { req, resume: Some(rs), sink, cancel, t_arrival, deadline, load });
+}
+
+/// Dispose a parked preemption victim WITHOUT touching the engine's
+/// request map (its engine-side state was freed at preemption): free
+/// the ring snapshots (unless they died with an old engine lifetime),
+/// release the page ledger, and emit the terminal event.
+fn dispose_victim(
+    engine: &EngineHandle,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+    budgets: &mut Budgets,
+    p: Pending,
+    err: RequestError,
+) {
+    let Pending { resume, sink, .. } = p;
+    let streamed = resume.as_ref().map_or(0, |rs| rs.generated.len());
+    if let Some(rs) = resume {
+        budgets.pages = budgets.pages.saturating_sub(rs.snap_pages);
+        if engine.generation() == rs.snap_generation {
+            engine.free_snaps(rs.snaps);
+        }
+    }
+    {
+        let mut m = metrics.lock().unwrap();
+        m.stream_tokens.record_value(streamed as u64);
+        match &err {
+            RequestError::Cancelled => m.requests_cancelled += 1,
+            RequestError::DeadlineExceeded => m.requests_expired += 1,
+            _ => m.requests_failed += 1,
+        }
+    }
+    sink.error(err);
+}
+
+/// Parked victims honor cancel and deadline while waiting (DESIGN.md
+/// §15) — checked every round, like the active and prefilling sweeps.
+fn sweep_victims(
+    engine: &EngineHandle,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+    budgets: &mut Budgets,
+    victims: &mut VecDeque<Pending>,
+) {
+    let now = Instant::now();
+    let mut kept = VecDeque::with_capacity(victims.len());
+    while let Some(p) = victims.pop_front() {
+        if p.cancel.is_cancelled() {
+            dispose_victim(engine, metrics, budgets, p, RequestError::Cancelled);
+            continue;
+        }
+        if p.deadline.is_some_and(|d| now >= d) {
+            dispose_victim(engine, metrics, budgets, p, RequestError::DeadlineExceeded);
+            continue;
+        }
+        kept.push_back(p);
+    }
+    *victims = kept;
+}
+
 /// What became of a dequeued request in [`open_prefill`]: admitted into
 /// the prefill pipeline, rejected with its terminal event already
-/// emitted, or stopped by engine death (terminal event emitted; the
-/// caller routes the error into supervision).
+/// emitted, handed back intact because the pool is dry (the caller
+/// preempts and retries), or stopped by engine death (terminal event
+/// emitted; the caller routes the error into supervision).
 enum OpenOutcome {
     Opened(Prefilling),
     Rejected,
+    /// The staging allocation found the pool dry even after prefix
+    /// eviction (DESIGN.md §15): the request is handed back untouched
+    /// so the scheduler can preempt a victim and retry.
+    PoolDry(Pending),
     EngineDead(anyhow::Error),
 }
 
@@ -1752,62 +2318,103 @@ fn open_prefill(
     engine: &EngineHandle,
     cfg: &ServingConfig,
     metrics: &Arc<Mutex<ServingMetrics>>,
+    budgets: &mut Budgets,
     p: Pending,
     replica: usize,
 ) -> OpenOutcome {
-    let Pending { req, sink, cancel, t_arrival, deadline, load } = p;
-    if cancel.is_cancelled() {
+    // terminal paths below must release a victim's resume snapshots —
+    // a parked victim rejected here would otherwise leak its snap pages
+    let dispose_resume = |budgets: &mut Budgets, resume: Option<ResumeState>| {
+        if let Some(rs) = resume {
+            budgets.pages = budgets.pages.saturating_sub(rs.snap_pages);
+            if engine.generation() == rs.snap_generation {
+                engine.free_snaps(rs.snaps);
+            }
+        }
+    };
+    if p.cancel.is_cancelled() {
         let mut m = metrics.lock().unwrap();
         m.requests_cancelled += 1;
         m.stream_tokens.record_value(0);
         drop(m);
-        sink.error(RequestError::Cancelled);
+        dispose_resume(budgets, p.resume);
+        p.sink.error(RequestError::Cancelled);
         return OpenOutcome::Rejected;
     }
-    if deadline.is_some_and(|d| Instant::now() >= d) {
+    if p.deadline.is_some_and(|d| Instant::now() >= d) {
         let mut m = metrics.lock().unwrap();
         m.requests_expired += 1;
         m.stream_tokens.record_value(0);
         drop(m);
-        sink.error(RequestError::DeadlineExceeded);
+        dispose_resume(budgets, p.resume);
+        p.sink.error(RequestError::DeadlineExceeded);
         return OpenOutcome::Rejected;
     }
-    let policy_label = req.policy.label();
-    match engine.prefill_open(req.prompt, req.policy, req.router, cfg.prefill_chunk_tokens) {
-        Ok(job) => OpenOutcome::Opened(Prefilling {
-            job,
-            // budget reservations are stamped by the admission loop
-            // (the only caller that charges them)
-            prompt_len: 0,
-            budget_total: 0,
-            budget_pages: 0,
-            max_new: req.max_new,
-            stop_tokens: req.stop_tokens,
-            ignore_eos: req.ignore_eos,
-            policy_label,
-            // stamped when the first chunk runs (queue time includes
-            // waiting parked in the prefilling deque)
-            queue_us: None,
-            t_arrival,
-            deadline,
-            cancel,
-            sink,
-            load,
-        }),
+    // a resume replays the prompt with the route pre-pinned so the
+    // router never re-fires (DESIGN.md §15); a prefill-phase victim
+    // (empty route) re-runs its original policy — greedy determinism
+    // re-derives the same routing decision
+    let open_policy = match &p.resume {
+        Some(rs) if !rs.route.is_empty() => {
+            Policy::Static { modes: rs.route.clone(), decode: p.req.policy.decode_mode() }
+        }
+        _ => p.req.policy.clone(),
+    };
+    let policy_label = p.req.policy.label();
+    match engine.prefill_open(
+        p.req.prompt.clone(),
+        open_policy,
+        p.req.router.clone(),
+        cfg.prefill_chunk_tokens,
+    ) {
+        Ok(job) => {
+            let Pending { req, resume, sink, cancel, t_arrival, deadline, load } = p;
+            // a resume keeps its original queue-time stamp (arrival →
+            // FIRST chunk of the original run); a fresh request is
+            // stamped when its first chunk runs
+            let queue_us = resume.as_ref().and_then(|rs| rs.queue_us);
+            OpenOutcome::Opened(Prefilling {
+                job,
+                // budget reservations are stamped by the admission loop
+                // (the only caller that charges them)
+                prompt_len: 0,
+                budget_total: 0,
+                budget_pages: 0,
+                max_new: req.max_new,
+                stop_tokens: req.stop_tokens.clone(),
+                ignore_eos: req.ignore_eos,
+                policy_label,
+                queue_us,
+                t_arrival,
+                deadline,
+                cancel,
+                sink,
+                load,
+                req,
+                resume,
+            })
+        }
         Err(e) => {
-            metrics.lock().unwrap().requests_rejected += 1;
             if let Some(f) = e.downcast_ref::<EngineFailed>() {
                 // engine death during admission routes into supervision
                 // (the caller restarts and resumes admitting); this
                 // request is its first typed casualty
-                sink.error(RequestError::EngineFailed {
+                metrics.lock().unwrap().requests_rejected += 1;
+                dispose_resume(budgets, p.resume);
+                p.sink.error(RequestError::EngineFailed {
                     cause: f.cause.clone(),
                     generation: f.generation,
                     replica,
                 });
                 OpenOutcome::EngineDead(e)
+            } else if e.to_string().contains("kv pool exhausted") {
+                // not a rejection: the caller preempts a victim and
+                // retries with the request intact
+                OpenOutcome::PoolDry(p)
             } else {
-                sink.error(RequestError::Engine(e.to_string()));
+                metrics.lock().unwrap().requests_rejected += 1;
+                dispose_resume(budgets, p.resume);
+                p.sink.error(RequestError::Engine(e.to_string()));
                 OpenOutcome::Rejected
             }
         }
@@ -1816,21 +2423,25 @@ fn open_prefill(
 
 /// Final-chunk bookkeeping: metrics (TTFT is the real arrival→first-
 /// token wall clock, so the histogram reflects chunk interleaving under
-/// load), the `Prefilled` event, and promotion into the decode set.
+/// load), the route-aware ledger correction (DESIGN.md §15), the
+/// `Prefilled` event (or the resume catch-up and `Resumed` event), and
+/// promotion into the decode set.
 fn finish_prefill(
     engine: &EngineHandle,
+    cfg: &ServingConfig,
     metrics: &Arc<Mutex<ServingMetrics>>,
     budgets: &mut Budgets,
+    victims: &mut VecDeque<Pending>,
+    pool_profile: &Option<PoolProfile>,
     pf: Prefilling,
     engine_id: u64,
     report: PrefillReport,
-    prefix_cache: bool,
     replica: usize,
 ) -> Option<Active> {
     let Prefilling {
         prompt_len,
         budget_total,
-        budget_pages,
+        mut budget_pages,
         max_new,
         stop_tokens,
         ignore_eos,
@@ -1841,77 +2452,265 @@ fn finish_prefill(
         cancel,
         sink,
         load,
+        req,
+        resume,
         ..
     } = pf;
     // the prompt leaves the prefill budget at promotion; the total-token
     // and page reservations ride on the Active until retirement
     budgets.prefill_tokens = budgets.prefill_tokens.saturating_sub(prompt_len);
-    // always Some by now (the first chunk stamps it before running)
+    // --- route-aware ledger correction (DESIGN.md §15): the router has
+    // fired, so under Optimistic admission the estimated page charge is
+    // replaced by the TRUE routed peak — smaller for sparse-routed
+    // layouts, larger when the optimism undershot. WorstCase keeps the
+    // worst-case charge so §11 admission decisions stay bit-for-bit
+    // today's. (A resume was charged its routed peak at re-admission;
+    // recomputing it here is identical.) ---
+    if let (Some(pp), AdmissionMode::Optimistic { .. }) = (pool_profile.as_ref(), cfg.admission_mode)
+    {
+        let routed = pp.routed_pages(prompt_len, max_new, &report.modes, req.policy.decode_mode());
+        budgets.pages = budgets.pages.saturating_sub(budget_pages) + routed;
+        budget_pages = routed;
+    }
+    // always Some by now for a fresh request (the first chunk stamps it
+    // before running); a resume carries its original stamp
     let queue_us = queue_us.unwrap_or(0);
-    let t_first_token = Instant::now();
-    let ttft_us = t_first_token.duration_since(t_arrival).as_micros() as u64;
+    let t_now = Instant::now();
+    let ttft_us = t_now.duration_since(t_arrival).as_micros() as u64;
+    // a prefill-phase victim resumes into its FIRST token: TTFT and the
+    // per-request routing facts are recorded now, exactly once; a
+    // decode-phase victim recorded them at its original promotion
+    let first_promotion = resume.as_ref().map_or(true, |rs| rs.generated.is_empty());
     {
         let mut m = metrics.lock().unwrap();
         m.prefill.record_us(report.total_us);
         m.router_overhead.record_us(report.router_us);
-        m.ttft.record_us(ttft_us);
         m.prompt_tokens += report.prompt_len as u64;
-        m.record_omsr(&policy_label, report.omsr);
-        if prefix_cache {
-            if report.cached_prefix_tokens > 0 {
-                m.prefix_hits += 1;
-                m.prefix_tokens_reused += report.cached_prefix_tokens as u64;
-            } else {
-                m.prefix_misses += 1;
+        if first_promotion {
+            m.ttft.record_us(ttft_us);
+            m.record_omsr(&policy_label, report.omsr);
+            if cfg.prefix_cache {
+                if report.cached_prefix_tokens > 0 {
+                    m.prefix_hits += 1;
+                    m.prefix_tokens_reused += report.cached_prefix_tokens as u64;
+                } else {
+                    m.prefix_misses += 1;
+                }
             }
         }
     }
-    let modes: Vec<String> = report.modes.iter().map(|m| m.name().into()).collect();
-    let a = Active {
-        engine_id,
-        budget_total,
-        budget_pages,
-        generated: vec![report.first_token],
-        max_new,
-        stop_tokens,
-        ignore_eos,
-        omsr: report.omsr,
-        modes: modes.clone(),
-        t_arrival,
-        t_first_token,
-        decode_us: 0,
-        queue_us,
-        deadline,
-        cancel,
-        sink,
-        replica,
-        load,
+    let Some(rs) = resume else {
+        let modes: Vec<String> = report.modes.iter().map(|m| m.name().into()).collect();
+        let a = Active {
+            engine_id,
+            budget_total,
+            budget_pages,
+            generated: vec![report.first_token],
+            max_new,
+            stop_tokens,
+            ignore_eos,
+            omsr: report.omsr,
+            modes: modes.clone(),
+            t_arrival,
+            t_first_token: t_now,
+            decode_us: 0,
+            queue_us,
+            deadline,
+            cancel,
+            sink,
+            replica,
+            load,
+            route: report.modes.clone(),
+            preemptions: 0,
+            req,
+        };
+        // a session cancelled (or expired) during its FINAL prefill chunk
+        // must not receive a `Prefilled` event or hold pages for a round:
+        // re-check both before emitting, retiring through the normal path
+        // (which releases the engine-side request and its pool pages)
+        if a.cancel.is_cancelled() {
+            retire(engine, metrics, budgets, a, Retire::Cancelled);
+            return None;
+        }
+        if a.deadline.is_some_and(|d| Instant::now() >= d) {
+            retire(engine, metrics, budgets, a, Retire::Expired);
+            return None;
+        }
+        let alive = a.sink.event(SessionEvent::Prefilled {
+            first_token: report.first_token,
+            omsr: report.omsr,
+            modes,
+            ttft_us,
+            queue_us,
+            cached_prefix_tokens: report.cached_prefix_tokens,
+        });
+        return if alive {
+            Some(a)
+        } else {
+            retire(engine, metrics, budgets, a, Retire::Cancelled);
+            None
+        };
     };
-    // a session cancelled (or expired) during its FINAL prefill chunk
-    // must not receive a `Prefilled` event or hold pages for a round:
-    // re-check both before emitting, retiring through the normal path
-    // (which releases the engine-side request and its pool pages)
-    if a.cancel.is_cancelled() {
-        retire(engine, metrics, budgets, a, Retire::Cancelled);
+    // --- resume catch-up (DESIGN.md §15): the replayed prefill rebuilt
+    // the prompt KV; teacher-force the already-streamed tokens so the
+    // engine state matches the uninterrupted run exactly, then verify
+    // the rebuilt sparse rings against the preemption snapshots ---
+    // the snapshots leave the ledger here whatever happens next:
+    // catch-up frees them on every exit path, and stale ones (older
+    // engine lifetime) died with their pool
+    budgets.pages = budgets.pages.saturating_sub(rs.snap_pages);
+    let verify =
+        if engine.generation() == rs.snap_generation { rs.snaps.clone() } else { Vec::new() };
+    // greedy decode is deterministic, so the replayed prefill's first
+    // token must equal the first token the client already streamed —
+    // the bit-identity invariant, checked rather than assumed
+    if !rs.generated.is_empty() && report.first_token != rs.generated[0] {
+        engine.free_snaps(verify);
+        engine.release(engine_id);
+        budgets.total_tokens = budgets.total_tokens.saturating_sub(budget_total);
+        budgets.pages = budgets.pages.saturating_sub(budget_pages);
+        {
+            let mut m = metrics.lock().unwrap();
+            m.requests_failed += 1;
+            m.stream_tokens.record_value(rs.generated.len() as u64);
+        }
+        sink.error(RequestError::Engine(format!(
+            "resume integrity: replayed first token {} diverges from streamed {}",
+            report.first_token, rs.generated[0]
+        )));
         return None;
     }
-    if a.deadline.is_some_and(|d| Instant::now() >= d) {
-        retire(engine, metrics, budgets, a, Retire::Expired);
-        return None;
-    }
-    let alive = a.sink.event(SessionEvent::Prefilled {
-        first_token: report.first_token,
-        omsr: report.omsr,
-        modes,
-        ttft_us,
-        queue_us,
-        cached_prefix_tokens: report.cached_prefix_tokens,
-    });
-    if alive {
-        Some(a)
-    } else {
-        retire(engine, metrics, budgets, a, Retire::Cancelled);
-        None
+    let force: Vec<u32> = rs.generated.get(1..).map_or_else(Vec::new, <[u32]>::to_vec);
+    match engine.catch_up(engine_id, force, verify) {
+        Ok(()) => {
+            let resume_us = rs.t_preempted.elapsed().as_micros() as u64;
+            {
+                let mut m = metrics.lock().unwrap();
+                m.resumes += 1;
+                m.resume_latency.record_us(resume_us);
+            }
+            let (omsr, modes) = if first_promotion {
+                (report.omsr, report.modes.iter().map(|m| m.name().into()).collect())
+            } else {
+                (rs.omsr, rs.modes)
+            };
+            let a = Active {
+                engine_id,
+                budget_total,
+                budget_pages,
+                generated: if first_promotion { vec![report.first_token] } else { rs.generated },
+                max_new,
+                stop_tokens,
+                ignore_eos,
+                omsr,
+                modes: modes.clone(),
+                t_arrival,
+                t_first_token: rs.t_first_token.unwrap_or(t_now),
+                decode_us: rs.decode_us,
+                queue_us,
+                deadline,
+                cancel,
+                sink,
+                replica,
+                load,
+                route: report.modes.clone(),
+                preemptions: rs.preemptions,
+                req,
+            };
+            if a.cancel.is_cancelled() {
+                retire(engine, metrics, budgets, a, Retire::Cancelled);
+                return None;
+            }
+            if a.deadline.is_some_and(|d| Instant::now() >= d) {
+                retire(engine, metrics, budgets, a, Retire::Expired);
+                return None;
+            }
+            let mut alive =
+                a.sink.event(SessionEvent::Resumed { resume_us, preemptions: a.preemptions });
+            if alive && first_promotion {
+                // a prefill-phase victim never got its Prefilled event:
+                // the first token only exists now
+                alive = a.sink.event(SessionEvent::Prefilled {
+                    first_token: report.first_token,
+                    omsr: report.omsr,
+                    modes,
+                    ttft_us,
+                    queue_us,
+                    cached_prefix_tokens: report.cached_prefix_tokens,
+                });
+            }
+            if alive {
+                Some(a)
+            } else {
+                retire(engine, metrics, budgets, a, Retire::Cancelled);
+                None
+            }
+        }
+        Err(e) => {
+            // catch-up may have stepped partway: the engine-side state
+            // is not resumable, release it (freeing its pages)
+            engine.release(engine_id);
+            budgets.total_tokens = budgets.total_tokens.saturating_sub(budget_total);
+            budgets.pages = budgets.pages.saturating_sub(budget_pages);
+            let msg = e.to_string();
+            if msg.contains("kv pool exhausted") {
+                // starved AGAIN mid-catch-up: park once more (the ring
+                // snaps were consumed by the failed catch-up, so the
+                // next resume verifies nothing)
+                let preemptions = rs.preemptions + 1;
+                if preemptions > cfg.max_preemptions {
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        m.preemption_exhausted += 1;
+                        m.requests_failed += 1;
+                        m.stream_tokens.record_value(rs.generated.len() as u64);
+                    }
+                    sink.error(RequestError::PreemptionExhausted {
+                        preemptions: preemptions - 1,
+                    });
+                    return None;
+                }
+                metrics.lock().unwrap().preemptions += 1;
+                let alive = sink.event(SessionEvent::Preempted {
+                    streamed: rs.generated.len(),
+                    preemptions,
+                });
+                if !alive {
+                    cancel.cancel();
+                }
+                victims.push_front(Pending {
+                    req,
+                    resume: Some(ResumeState {
+                        generated: rs.generated,
+                        route: rs.route,
+                        snaps: Vec::new(),
+                        snap_generation: engine.generation(),
+                        snap_pages: 0,
+                        omsr: rs.omsr,
+                        modes: rs.modes,
+                        t_first_token: rs.t_first_token,
+                        decode_us: rs.decode_us,
+                        queue_us: Some(queue_us),
+                        preemptions,
+                        t_preempted: Instant::now(),
+                    }),
+                    sink,
+                    cancel,
+                    t_arrival,
+                    deadline,
+                    load,
+                });
+                None
+            } else {
+                {
+                    let mut m = metrics.lock().unwrap();
+                    m.requests_failed += 1;
+                    m.stream_tokens.record_value(rs.generated.len() as u64);
+                }
+                sink.error(RequestError::Engine(msg));
+                None
+            }
+        }
     }
 }
 
@@ -2030,6 +2829,10 @@ mod tests {
         assert_eq!(over.overload_detail(), Some("queue_watermark"));
         let msg = over.to_string();
         assert!(msg.contains("queue_watermark") && msg.contains("saturated"), "{msg}");
+        let exhausted = RequestError::PreemptionExhausted { preemptions: 4 };
+        assert_eq!(exhausted.kind(), "preemption_exhausted");
+        let msg = exhausted.to_string();
+        assert!(msg.contains('4'), "{msg}");
     }
 
     /// The retryable taxonomy (DESIGN.md §12): transient load and
@@ -2043,6 +2846,7 @@ mod tests {
             RequestError::Overloaded { detail: "pages", message: "busy".into() }.retryable()
         );
         assert!(RequestError::Draining.retryable());
+        assert!(RequestError::PreemptionExhausted { preemptions: 4 }.retryable());
         assert!(
             RequestError::EngineFailed { cause: "x".into(), generation: 0, replica: 0 }
                 .retryable()

@@ -109,6 +109,23 @@ pub enum ChunkOutcome {
     Done { id: u64, report: PrefillReport },
 }
 
+/// What [`Engine::preempt`] freed and kept (DESIGN.md §15). The
+/// coordinator holds `ring_snaps` while the victim is parked and hands
+/// them back to [`Engine::catch_up`] (which verifies the rebuilt rings
+/// against them and frees the blocks) — or to [`Engine::free_snaps`]
+/// when the parked request is cancelled, expired, or failed over.
+#[derive(Debug, Clone)]
+pub struct PreemptInfo {
+    /// Pool pages returned by the preemption (every cache the request
+    /// held — the pages the failing allocation can now draw on).
+    pub pages_freed: usize,
+    /// Pool pages still held by the ring snapshots in `ring_snaps`.
+    pub snap_pages: usize,
+    /// Per-layer sparse-ring snapshots (`None` for FA/dense layers and
+    /// for rings whose snapshot allocation failed).
+    pub ring_snaps: Vec<Option<RingSnap>>,
+}
+
 /// One live request's state inside the engine.
 pub struct RequestState {
     pub caches: Vec<LayerCache>,
@@ -204,6 +221,57 @@ impl PoolProfile {
         let fa = cap.div_ceil(per).max(1);
         let sa = self.sa_buf.div_ceil(per).max(1);
         self.n_layers * (fa + sa)
+    }
+
+    /// Route-aware page footprint for a request whose per-layer route
+    /// is pinned (DESIGN.md §15): FA-routed layers (and every layer
+    /// under dense decode, which keeps its `FullCache`) cost the
+    /// fully-grown FA capacity from the same covering-bucket/doubling
+    /// computation as [`PoolProfile::worst_case_pages`]; sparse-decode
+    /// SA layers end promotion holding only their fixed `sa_buf` ring.
+    /// This is the steady-state peak AFTER the prefill→decode
+    /// promotion — the value the scheduler shrinks the `Budgets` ledger
+    /// charge to once the router has fired (growth frees the old run
+    /// before allocating the doubled one, so per-layer concurrency
+    /// never exceeds the final capacity).
+    ///
+    /// Unlike the worst case, this bound is TIGHT: a full run emits
+    /// `max_new` tokens but appends KV only for the first `max_new - 1`
+    /// of them (the last emitted token is returned, never attended), so
+    /// the doubling covers `prompt + max_new - 1` tokens — exactly the
+    /// pages the request peaks at, which the charge-equals-peak
+    /// property test pins.
+    pub fn routed_pages(
+        &self,
+        prompt_len: usize,
+        max_new: usize,
+        modes: &[AttnMode],
+        decode_mode: DecodeMode,
+    ) -> usize {
+        let per = self.page_tokens.max(1);
+        let mut cap = self
+            .prefill_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= prompt_len)
+            .or_else(|| self.prefill_buckets.last().copied())
+            .unwrap_or_else(|| prompt_len.max(1));
+        let need = (prompt_len + max_new).saturating_sub(1).max(prompt_len.max(1));
+        while cap < need {
+            cap *= 2;
+        }
+        let fa = cap.div_ceil(per).max(1);
+        let sa = self.sa_buf.div_ceil(per).max(1);
+        modes
+            .iter()
+            .map(|&m| {
+                if matches!(m, AttnMode::Fa) || matches!(decode_mode, DecodeMode::Dense) {
+                    fa
+                } else {
+                    sa
+                }
+            })
+            .sum()
     }
 }
 
@@ -1137,9 +1205,41 @@ impl Engine {
         }
     }
 
+    /// Pre-flight one decode append for request `id` (DESIGN.md §15):
+    /// grow every Full layer's capacity for one more token BEFORE any
+    /// layer writes its K/V, retrying each growth once through
+    /// prefix-cache eviction. Sparse rings never allocate. A sparse
+    /// ring append is an irreversible in-place overwrite, so without
+    /// this a growth failure at layer L would leave layers `0..L`
+    /// already advanced by the new token; with it, a pool-starved step
+    /// fails with every cache bit-identical to before the call and is
+    /// safe to retry once the scheduler has freed pages by preemption.
+    fn reserve_decode_append(&mut self, id: u64) -> Result<()> {
+        let state = self
+            .requests
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("unknown request {id}"))?;
+        for cache in state.caches.iter_mut() {
+            let LayerCache::Full(c) = cache else { continue };
+            let mut reserved = c.reserve_for_append(&mut self.pool);
+            if reserved.is_err() {
+                let need = self
+                    .pool
+                    .pages_for(2 * self.cfg.model.n_heads * c.capacity().max(1) * self.cfg.model.head_dim);
+                self.prefix.evict_for(&mut self.pool, need);
+                reserved = c.reserve_for_append(&mut self.pool);
+            }
+            reserved?;
+        }
+        Ok(())
+    }
+
     /// One decode step: consume the request's `last_token`, produce the
     /// next. The caller owns the stop condition (EOS / max tokens).
     pub fn decode_step(&mut self, id: u64) -> Result<u32> {
+        // pre-flight capacity for every Full layer so a pool-starved
+        // step fails with the request's caches untouched (§15)
+        self.reserve_decode_append(id)?;
         let cfg = &self.cfg;
         let state = self
             .requests
@@ -1401,6 +1501,29 @@ impl Engine {
             slots.iter().map(|(_, _, s)| self.weights.embed_one(s.last_token).data).collect();
         let mut failed: Vec<Option<String>> = vec![None; n_slots];
         let (mut fa_group_slots, mut sa_group_slots) = (0u64, 0u64);
+
+        // Pre-flight (DESIGN.md §15): grow every slot's Full layers for
+        // this token BEFORE any layer writes its K/V. A sparse ring
+        // append is an irreversible in-place overwrite, so a mid-round
+        // growth failure at layer L would otherwise leave layers 0..L
+        // already advanced; reserving up front means a pool-starved
+        // slot fails alone with its caches untouched — safe to retry
+        // next round once the scheduler has preempted a victim.
+        for (si, (_, _, state)) in slots.iter_mut().enumerate() {
+            for cache in state.caches.iter_mut() {
+                let LayerCache::Full(c) = cache else { continue };
+                let mut reserved = c.reserve_for_append(&mut self.pool);
+                if reserved.is_err() {
+                    let need = self.pool.pages_for(2 * nh * c.capacity().max(1) * dd);
+                    self.prefix.evict_for(&mut self.pool, need);
+                    reserved = c.reserve_for_append(&mut self.pool);
+                }
+                if let Err(e) = reserved {
+                    failed[si] = Some(e.to_string());
+                    break;
+                }
+            }
+        }
 
         for layer in 0..n_layers {
             let live: Vec<usize> = (0..n_slots).filter(|&si| failed[si].is_none()).collect();
@@ -1739,6 +1862,101 @@ impl Engine {
     pub fn request_state(&self, id: u64) -> Option<&RequestState> {
         self.requests.get(&id)
     }
+
+    /// Preempt a live request (DESIGN.md §15): drop its state and free
+    /// ALL its pages, but first snapshot each sparse ring into a fresh
+    /// pool block — ring state is not reconstructible by replaying the
+    /// prompt alone (the window has overwritten older tokens in place),
+    /// so the snapshots serve as the integrity oracle the resume path's
+    /// teacher-forced catch-up is checked against. Full caches are
+    /// freed FIRST so the (much smaller) snapshots can draw on their
+    /// pages even on a bone-dry pool; a snapshot that still fails
+    /// degrades to `None` (that layer just skips the catch-up check).
+    pub fn preempt(&mut self, id: u64) -> Result<PreemptInfo> {
+        let state = self
+            .requests
+            .remove(&id)
+            .ok_or_else(|| anyhow::anyhow!("unknown request {id}"))?;
+        let n_layers = state.caches.len();
+        let mut ring_snaps: Vec<Option<RingSnap>> = vec![None; n_layers];
+        let mut pages_freed = 0usize;
+        let mut rings: Vec<(usize, SparseCache)> = Vec::new();
+        for (layer, c) in state.caches.into_iter().enumerate() {
+            match c {
+                LayerCache::Full(f) => {
+                    pages_freed += f.pages();
+                    f.free(&mut self.pool);
+                }
+                LayerCache::Sparse(r) => rings.push((layer, r)),
+            }
+        }
+        let mut snap_pages = 0usize;
+        for (layer, r) in rings {
+            if let Ok((block, sink_len, total_seen)) = r.snapshot(&mut self.pool) {
+                snap_pages += block.pages;
+                ring_snaps[layer] = Some(RingSnap { block, sink_len, total_seen });
+            }
+            pages_freed += r.pages();
+            r.free(&mut self.pool);
+        }
+        Ok(PreemptInfo { pages_freed, snap_pages, ring_snaps })
+    }
+
+    /// Resume catch-up (DESIGN.md §15): after the resume prefill of the
+    /// original PROMPT has re-derived the first generated token, replay
+    /// the remaining already-streamed tokens through the real decode
+    /// path, teacher-forcing each step's sampled token to the recorded
+    /// one. Running the decode kernels (not prefill) rebuilds sparse
+    /// rings in decode append order — ring contents after a wrap depend
+    /// on the append order, so full-prompt re-prefill of
+    /// `prompt ++ generated` would NOT be bit-identical for sparse
+    /// routes; teacher-forcing through decode is. When `verify` carries
+    /// preemption-time ring snapshots, the rebuilt rings are checked
+    /// bitwise against them (cursor phase + contents); every snapshot
+    /// block is returned to the pool on all exit paths.
+    pub fn catch_up(&mut self, id: u64, force: &[u32], verify: &[Option<RingSnap>]) -> Result<()> {
+        let mut result: Result<()> = Ok(());
+        for &tok in force {
+            if let Err(e) = self.decode_step(id) {
+                result = Err(e);
+                break;
+            }
+            let state = self.requests.get_mut(&id).expect("request exists after decode_step");
+            state.last_token = tok;
+        }
+        if result.is_ok() {
+            if let Some(state) = self.requests.get(&id) {
+                for (layer, snap) in verify.iter().enumerate() {
+                    let Some(s) = snap else { continue };
+                    let ok = match state.caches.get(layer) {
+                        Some(LayerCache::Sparse(r)) => {
+                            r.matches_snapshot(&self.pool, s.block, s.sink_len, s.total_seen)
+                        }
+                        _ => false,
+                    };
+                    if !ok {
+                        result = Err(anyhow::anyhow!(
+                            "resume integrity: rebuilt ring at layer {layer} diverges from its preemption snapshot"
+                        ));
+                        break;
+                    }
+                }
+            }
+        }
+        for s in verify.iter().flatten() {
+            self.pool.free(s.block);
+        }
+        result
+    }
+
+    /// Return a batch of preemption-time ring snapshots to the pool
+    /// without resuming (the parked request was cancelled, expired, or
+    /// failed over to another replica).
+    pub fn free_snaps(&mut self, snaps: &[Option<RingSnap>]) {
+        for s in snaps.iter().flatten() {
+            self.pool.free(s.block);
+        }
+    }
 }
 
 /// One layer's attention-mode decision, shared verbatim by the
@@ -1855,6 +2073,25 @@ pub enum EngineJob {
     /// Prefix-cache counter snapshot.
     PrefixStats {
         reply: std::sync::mpsc::Sender<PrefixStats>,
+    },
+    /// Preempt a live request: free all its pages, snapshotting sparse
+    /// rings first (DESIGN.md §15).
+    Preempt {
+        id: u64,
+        reply: std::sync::mpsc::Sender<Result<PreemptInfo>>,
+    },
+    /// Teacher-forced resume catch-up after the resume prefill
+    /// (DESIGN.md §15); verifies and frees the ring snapshots.
+    CatchUp {
+        id: u64,
+        force: Vec<u32>,
+        verify: Vec<Option<RingSnap>>,
+        reply: std::sync::mpsc::Sender<Result<()>>,
+    },
+    /// Return un-resumed ring snapshots to the pool (parked request
+    /// cancelled, expired, or failed over).
+    FreeSnaps {
+        snaps: Vec<Option<RingSnap>>,
     },
     Shutdown,
 }
@@ -2281,6 +2518,33 @@ impl EngineHandle {
         self.roundtrip(rx, sent, failure, generation, None)
     }
 
+    /// Preempt request `id` (DESIGN.md §15): the engine frees every
+    /// page it holds, handing back the ring snapshots the caller must
+    /// keep for the resume catch-up (or dispose via
+    /// [`EngineHandle::free_snaps`]).
+    pub fn preempt(&self, id: u64) -> Result<PreemptInfo> {
+        let (tx, failure, generation) = self.link();
+        let (reply, rx) = std::sync::mpsc::channel();
+        let sent = tx.send(EngineJob::Preempt { id, reply });
+        self.roundtrip(rx, sent, failure, generation, None)?
+    }
+
+    /// Teacher-forced resume catch-up (DESIGN.md §15): replay the
+    /// already-streamed tokens through the decode path, verify rebuilt
+    /// rings against `verify`, and free the snapshot blocks.
+    pub fn catch_up(&self, id: u64, force: Vec<u32>, verify: Vec<Option<RingSnap>>) -> Result<()> {
+        let (tx, failure, generation) = self.link();
+        let (reply, rx) = std::sync::mpsc::channel();
+        let sent = tx.send(EngineJob::CatchUp { id, force, verify, reply });
+        self.roundtrip(rx, sent, failure, generation, None)?
+    }
+
+    /// Return un-resumed ring snapshots to the pool (fire-and-forget,
+    /// like [`EngineHandle::release`]).
+    pub fn free_snaps(&self, snaps: Vec<Option<RingSnap>>) {
+        let _ = self.link().0.send(EngineJob::FreeSnaps { snaps });
+    }
+
     pub fn shutdown(&self) {
         let _ = self.link().0.send(EngineJob::Shutdown);
     }
@@ -2332,6 +2596,15 @@ fn run_engine_job(engine: &mut Engine, job: EngineJob) -> bool {
         }
         EngineJob::PrefixStats { reply } => {
             let _ = reply.send(engine.prefix_stats());
+        }
+        EngineJob::Preempt { id, reply } => {
+            let _ = reply.send(engine.preempt(id));
+        }
+        EngineJob::CatchUp { id, force, verify, reply } => {
+            let _ = reply.send(engine.catch_up(id, &force, &verify));
+        }
+        EngineJob::FreeSnaps { snaps } => {
+            engine.free_snaps(&snaps);
         }
         EngineJob::Shutdown => return false,
     }

@@ -504,6 +504,17 @@ impl FullCache {
         self.len += rows;
     }
 
+    /// Pre-flight for [`FullCache::append`]: grow (or confirm) capacity
+    /// for one more token WITHOUT writing anything. On failure the
+    /// cache is restored bit-identically, so a scheduler can reserve
+    /// capacity for every layer of a decode step before mutating any of
+    /// them — a step that cannot reserve fails with all caches
+    /// untouched and is safe to retry after preemption frees pages
+    /// (DESIGN.md §15).
+    pub fn reserve_for_append(&mut self, pool: &mut KvPool) -> Result<()> {
+        self.ensure_capacity(pool, self.len + 1)
+    }
+
     fn ensure_capacity(&mut self, pool: &mut KvPool, need: usize) -> Result<()> {
         if need <= self.capacity {
             return Ok(());
@@ -814,6 +825,27 @@ impl SparseCache {
         pool.copy_region(src, self.block, self.floats());
         self.sink_len = sink_len;
         self.total_seen = total_seen;
+    }
+
+    /// Check this ring against a snapshot taken by
+    /// [`SparseCache::snapshot`]: cursors equal and the `(H, SA_BUF, D)`
+    /// regions bitwise identical. Preempt-and-resume uses this as a
+    /// runtime integrity check — the teacher-forced catch-up must
+    /// rebuild exactly the ring state that was snapshotted at
+    /// preemption (DESIGN.md §15).
+    pub fn matches_snapshot(
+        &self,
+        pool: &KvPool,
+        block: PageBlock,
+        sink_len: usize,
+        total_seen: usize,
+    ) -> bool {
+        if self.sink_len != sink_len || self.total_seen != total_seen {
+            return false;
+        }
+        let n = self.floats();
+        pool.k_of(self.block)[..n] == pool.k_of(block)[..n]
+            && pool.v_of(self.block)[..n] == pool.v_of(block)[..n]
     }
 
     /// Append one decoded token, overwriting the oldest window slot in

@@ -9,6 +9,8 @@
 //!                                [--prefix-cache] [--prefix-cache-pages N]
 //!                                [--replicas R] [--queue-high-watermark N]
 //!                                [--queue-low-watermark N]
+//!                                [--admission-mode worst-case|optimistic]
+//!                                [--optimistic-percent P] [--max-preemptions N]
 //!        (chunk-tokens 0 = monolithic prefill; default 128 interleaves
 //!        prefill chunks with batched decode rounds, DESIGN.md §10;
 //!        round-timeout-ms arms the engine-round watchdog, restart-*
@@ -21,7 +23,10 @@
 //!        dispatched least-loaded with session affinity; the queue
 //!        watermarks reject `overloaded (queue_watermark)` when every
 //!        replica's queue is above high until it drains to low —
-//!        DESIGN.md §14)
+//!        DESIGN.md §14; admission-mode optimistic charges
+//!        optimistic-percent% of the worst-case KV pages at admission
+//!        and preempts-and-resumes streams when the pool actually runs
+//!        dry, max-preemptions bounding starvation — DESIGN.md §15)
 //!   flux [--artifacts DIR] generate [--task T] [--seq-len N]
 //!                                   [--policy P] [--router R] [--sparse-decode]
 //!                                   [--stream] [--deadline-ms N]
@@ -194,6 +199,22 @@ fn run() -> Result<()> {
                 queue_low_watermark: args
                     .get_opt_u64("queue-low-watermark")
                     .map(|v| v as usize),
+                // route-aware optimistic admission + preemption
+                // (DESIGN.md §15): worst-case unless opted in
+                admission_mode: match args.get("admission-mode", "worst-case").as_str() {
+                    "worst-case" => flux_attention::config::AdmissionMode::WorstCase,
+                    "optimistic" => flux_attention::config::AdmissionMode::Optimistic {
+                        factor: args
+                            .get_opt_u64("optimistic-percent")
+                            .map_or(0.5, |p| p as f64 / 100.0),
+                    },
+                    other => anyhow::bail!(
+                        "unknown --admission-mode '{other}' (worst-case | optimistic)"
+                    ),
+                },
+                max_preemptions: args
+                    .get_opt_u64("max-preemptions")
+                    .map_or(defaults.max_preemptions, |v| v as u32),
                 ..Default::default()
             };
             // R data-parallel engine replicas, each its own failure
@@ -365,6 +386,8 @@ fn run() -> Result<()> {
             eprintln!("  serve --round-timeout-ms N arms the engine watchdog; --restart-max/--restart-backoff-ms bound respawns; --drain-ms N caps SIGINT/SIGTERM drain (default 30000)");
             eprintln!("  serve --replicas R runs R data-parallel engine replicas (least-loaded dispatch, per-replica supervision)");
             eprintln!("  serve --queue-high-watermark/--queue-low-watermark N bound queue depth with typed overloaded backpressure");
+            eprintln!("  serve --admission-mode worst-case|optimistic [--optimistic-percent P] charges P% of the worst-case KV pages at admission (default 50); a dry pool preempts-and-resumes instead of rejecting");
+            eprintln!("  serve --max-preemptions N caps preemptions per request before typed retryable preemption_exhausted (default 4)");
             eprintln!("  serve reads FLUX_FAULT_SEED / FLUX_FAULT_PLAN for deterministic fault injection (chaos testing)");
             eprintln!("experiment ids: fig1a fig1b table1 table2 fig3 fig4 fig5 fig8 fig9 cases kvmem curves route_ledger all");
             Ok(())
@@ -410,6 +433,14 @@ fn generate_streaming(
             }
             SessionEvent::Token { tok: t, .. } => {
                 print!(" {}", tok.decode_token(t));
+                std::io::stdout().flush()?;
+            }
+            SessionEvent::Preempted { preemptions, .. } => {
+                println!();
+                println!("preempted : KV pages reclaimed (preemption #{preemptions}), parked");
+            }
+            SessionEvent::Resumed { resume_us, .. } => {
+                print!("resumed   : after {:.1} ms; stream continues:", resume_us as f64 / 1e3);
                 std::io::stdout().flush()?;
             }
             SessionEvent::Done { stats } => {

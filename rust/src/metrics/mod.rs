@@ -146,6 +146,22 @@ pub struct ServingMetrics {
     /// Pool pages currently retained by the prefix-cache index — pages
     /// `drained()` would otherwise report as leaked (gauge).
     pub prefix_retained_pages: u64,
+    /// Requests preempted under KV-pool pressure (DESIGN.md §15): their
+    /// pages were reclaimed and they parked for a transparent resume.
+    /// Counts preemption EVENTS — one request preempted twice counts 2.
+    pub preemptions: u64,
+    /// Parked victims successfully resumed (route-pinned replay +
+    /// teacher-forced catch-up completed, stream continuing).
+    pub resumes: u64,
+    /// Pool pages reclaimed by preemptions (the supply side of
+    /// optimistic admission's graceful degradation).
+    pub preempted_pages_freed: u64,
+    /// Requests that exceeded `max_preemptions` and failed typed
+    /// retryable `preemption_exhausted` (also in `requests_failed`).
+    pub preemption_exhausted: u64,
+    /// Park → catch-up-complete latency per successful resume — the
+    /// stall a preempted stream's client actually observed.
+    pub resume_latency: LatencyHistogram,
     /// Per-replica dispatch and supervision counters (DESIGN.md §14),
     /// indexed by replica id; grown on first touch so a single-replica
     /// coordinator pays nothing. Empty means "never dispatched".
@@ -240,7 +256,9 @@ impl ServingMetrics {
              fa_slots={} sa_slots={} kv_moved={}B kv_borrowed={}B \
              pages={}/{} pages_peak={} overloaded={} restarts={} watchdog_trips={} \
              prefix_hits={} prefix_misses={} prefix_reused={}tok \
-             prefix_evictions={} prefix_retained={}pages",
+             prefix_evictions={} prefix_retained={}pages \
+             preemptions={} resumes={} preempted_pages_freed={} \
+             preemption_exhausted={} resume_p50={:.1}ms resume_p95={:.1}ms",
             self.requests_completed,
             self.requests_rejected,
             self.requests_cancelled,
@@ -271,6 +289,12 @@ impl ServingMetrics {
             self.prefix_tokens_reused,
             self.prefix_evictions,
             self.prefix_retained_pages,
+            self.preemptions,
+            self.resumes,
+            self.preempted_pages_freed,
+            self.preemption_exhausted,
+            self.resume_latency.p50_us() as f64 / 1e3,
+            self.resume_latency.p95_us() as f64 / 1e3,
         );
         // the replica-set section only appears once dispatch has run
         // (single-replica coordinators still emit it, with one entry)
@@ -454,6 +478,32 @@ mod tests {
         assert!(s.contains("failovers=1"), "{s}");
         assert!(s.contains("watermark_rejections=5"), "{s}");
         assert!(s.contains("replica_deaths=1"), "{s}");
+    }
+
+    /// Preemption counters (DESIGN.md §15) surface in the summary line:
+    /// preempt/resume event counts, pages reclaimed, starvation-cap
+    /// failures, and resume-latency percentiles.
+    #[test]
+    fn summary_reports_preemption_counters() {
+        let mut m = ServingMetrics::default();
+        let s = m.summary();
+        assert!(s.contains("preemptions=0"), "{s}");
+        assert!(s.contains("resumes=0"), "{s}");
+        assert!(s.contains("preempted_pages_freed=0"), "{s}");
+        m.preemptions = 3;
+        m.resumes = 2;
+        m.preempted_pages_freed = 48;
+        m.preemption_exhausted = 1;
+        m.resume_latency.record_us(1500);
+        m.resume_latency.record_us(2000);
+        m.resume_latency.record_us(2500);
+        let s = m.summary();
+        assert!(s.contains("preemptions=3"), "{s}");
+        assert!(s.contains("resumes=2"), "{s}");
+        assert!(s.contains("preempted_pages_freed=48"), "{s}");
+        assert!(s.contains("preemption_exhausted=1"), "{s}");
+        assert!(s.contains("resume_p50=2.0ms"), "{s}");
+        assert!(s.contains("resume_p95=2.5ms"), "{s}");
     }
 
     #[test]

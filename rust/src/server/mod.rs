@@ -21,6 +21,8 @@
 //!   {"id":7,"event":"prefilled","token":t,"omsr":0.5,"modes":[..],
 //!    "ttft_ms":1.2,"queue_ms":0.1,"cached_prefix_tokens":0}
 //!   {"id":7,"event":"token","token":t,"step_ms":0.8}
+//!   {"id":7,"event":"preempted","streamed":3,"preemptions":1}
+//!   {"id":7,"event":"resumed","resume_ms":4.2,"preemptions":1}
 //!   {"id":7,"event":"done","tokens":[..],"text":"...","omsr":0.5,
 //!    "modes":[..],"ttft_ms":1.2,"e2e_ms":3.4,
 //!    "decode_ms_per_token":0.8,"queue_ms":0.1}
@@ -28,12 +30,27 @@
 //!    "code":"cancelled|...","retryable":false,"error":"..."}
 //! ```
 //!
+//! `preempted`/`resumed` (DESIGN.md §15) are informational: the stream's
+//! KV pages were reclaimed under pool pressure and later rebuilt; no
+//! tokens are lost or repeated, the stream just pauses.
+//!
 //! `code` duplicates `kind` (stable machine-readable error class) and
 //! `retryable` tells clients whether resubmitting the identical request
 //! may succeed (true for transient admission/supervision failures:
-//! queue_full, overloaded, draining, engine_failed). A stream whose
-//! event channel closes without a terminal event (scheduler wound down)
-//! is answered with `kind:"shutdown"`, `retryable:false`.
+//! queue_full, overloaded, draining, engine_failed,
+//! preemption_exhausted). Retryable error frames also carry
+//! `retry_after_ms`, a server-suggested floor for the client's retry
+//! backoff ([`RetryPolicy`] honors it). A stream whose event channel
+//! closes without a terminal event (scheduler wound down) is answered
+//! with `kind:"shutdown"`, `retryable:false`.
+//!
+//! ## Slow-client backpressure
+//!
+//! Every connection's outbound frames flow through one bounded queue
+//! drained by a dedicated writer thread under a write deadline. A
+//! client that stops reading (full socket buffer past the deadline)
+//! gets its connection closed and ONLY its own sessions cancelled —
+//! sibling connections on the same server never stall behind it.
 //!
 //! `done` and `error` are terminal; the id may be reused afterwards.
 //! A `cancel` frame (or dropping the connection) aborts the stream:
@@ -57,9 +74,10 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -191,6 +209,10 @@ pub struct WireResponse {
     /// Set alongside `error`: whether resubmitting the identical
     /// request may succeed (mirrors the wire frame's `retryable`).
     pub retryable: bool,
+    /// Server-suggested backoff floor for retryable errors (mirrors the
+    /// wire frame's `retry_after_ms`); [`RetryPolicy`] honors it as the
+    /// lower bound of its decorrelated jitter.
+    pub retry_after_ms: Option<u64>,
 }
 
 impl WireResponse {
@@ -208,6 +230,9 @@ impl WireResponse {
             Some(e) => {
                 o.set("error", Json::from(e.as_str()));
                 o.set("retryable", Json::from(self.retryable));
+                if let Some(ms) = self.retry_after_ms {
+                    o.set("retry_after_ms", Json::from(ms as usize));
+                }
             }
             None => o.set("error", Json::Null),
         };
@@ -234,6 +259,7 @@ impl WireResponse {
             queue_ms: j.get("queue_ms").and_then(Json::as_f64).unwrap_or(0.0),
             error: j.get("error").and_then(Json::as_str).map(String::from),
             retryable: j.get("retryable").and_then(Json::as_bool).unwrap_or(false),
+            retry_after_ms: j.get("retry_after_ms").and_then(Json::as_usize).map(|v| v as u64),
         }
     }
 }
@@ -267,13 +293,70 @@ pub fn parse_policy(s: &str, sparse_decode: bool, n_layers: usize) -> Result<Pol
 // Server
 // ---------------------------------------------------------------------------
 
-/// Shared write half of a connection. Frames from the reader thread and
-/// the per-session pump threads interleave at line granularity.
+/// Shared write half of a connection (client side). Frames interleave
+/// at line granularity.
 type SharedWriter = Arc<Mutex<TcpStream>>;
 
 /// Maximum pipelined-but-unserved v1 requests buffered per connection
 /// before the reader thread blocks (bounds per-connection memory).
 const V1_PIPELINE_DEPTH: usize = 64;
+
+/// Bounded per-connection outbound frame queue: session pumps and the
+/// reader thread enqueue, one writer thread drains to the socket. Full
+/// queue = the client is reading slower than the server generates.
+const OUTBOUND_QUEUE_DEPTH: usize = 256;
+
+/// How long the writer thread may block on one socket write before the
+/// client is declared stuck and the connection torn down.
+const WRITE_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Sending half of a connection's bounded outbound queue. `send` blocks
+/// while the queue is full, but never unboundedly: the writer thread's
+/// write deadline guarantees it either drains the queue or declares the
+/// client stuck (dropping the receiver, which errors every sender out).
+/// A stuck client therefore stalls only its OWN connection's pumps, and
+/// only for about one deadline.
+#[derive(Clone)]
+struct ConnWriter {
+    tx: SyncSender<Json>,
+    dead: Arc<AtomicBool>,
+}
+
+impl ConnWriter {
+    /// Enqueue one frame; `Err` means the connection is gone (socket
+    /// error or slow-client teardown) and the caller should wind down.
+    fn send(&self, j: Json) -> Result<(), ()> {
+        if self.dead.load(Ordering::SeqCst) {
+            return Err(());
+        }
+        self.tx.send(j).map_err(|_| ())
+    }
+}
+
+/// Drain the outbound queue to the socket under [`WRITE_DEADLINE`]. On
+/// any write failure — a timeout means the client stopped reading —
+/// cancel only THIS connection's sessions (typed slow-client close: the
+/// scheduler retires them `cancelled`, siblings on other connections
+/// are untouched), shut the socket down, and exit; dropping the
+/// receiver unblocks every sender with an error.
+fn writer_loop(
+    mut sock: TcpStream,
+    rx: Receiver<Json>,
+    sessions: SessionMap,
+    dead: Arc<AtomicBool>,
+) {
+    let _ = sock.set_write_timeout(Some(WRITE_DEADLINE));
+    while let Ok(j) = rx.recv() {
+        if sock.write_all(format!("{j}\n").as_bytes()).and_then(|()| sock.flush()).is_err() {
+            dead.store(true, Ordering::SeqCst);
+            for (_, c) in sessions.lock().unwrap().drain() {
+                c.cancel();
+            }
+            let _ = sock.shutdown(std::net::Shutdown::Both);
+            return;
+        }
+    }
+}
 
 /// One unit of work for a connection's v1 worker thread: a request to
 /// run, or a pre-formed error response (e.g. for an unparseable line)
@@ -324,7 +407,27 @@ fn error_frame_err(id: u64, err: &RequestError) -> Json {
     if let Some(replica) = err.failed_replica() {
         o.set("replica", Json::from(replica));
     }
+    if let Some(ms) = retry_after_ms(err) {
+        o.set("retry_after_ms", Json::from(ms as usize));
+    }
     o
+}
+
+/// Server-suggested backoff floor for a retryable error (satellite of
+/// DESIGN.md §15): how long resubmitting is POINTLESS, by failure
+/// class. Draining dominates (the replica is finishing its in-flight
+/// set); preemption exhaustion means the pool is badly oversubscribed,
+/// so back off harder than a garden-variety full queue.
+fn retry_after_ms(err: &RequestError) -> Option<u64> {
+    if !err.retryable() {
+        return None;
+    }
+    Some(match err.kind() {
+        "draining" => 200,
+        "preemption_exhausted" => 100,
+        "engine_failed" => 50,
+        _ => 25, // queue_full, overloaded, ...
+    })
 }
 
 /// Serve forever on `addr` (thread per connection).
@@ -350,9 +453,20 @@ pub fn serve_listener(coord: Arc<Coordinator>, listener: TcpListener, n_layers: 
 }
 
 fn handle_conn(coord: Arc<Coordinator>, sock: TcpStream, n_layers: usize) -> Result<()> {
-    let wr: SharedWriter = Arc::new(Mutex::new(sock.try_clone()?));
-    let rd = BufReader::new(sock);
     let sessions: SessionMap = Arc::new(Mutex::new(HashMap::new()));
+    // all outbound frames (v2 events from the pumps, v1 responses,
+    // reader-thread protocol errors) flow through one bounded queue
+    // drained by a dedicated writer thread under a write deadline —
+    // slow-client backpressure with per-connection blast radius
+    let (out_tx, out_rx) = std::sync::mpsc::sync_channel::<Json>(OUTBOUND_QUEUE_DEPTH);
+    let out = ConnWriter { tx: out_tx, dead: Arc::new(AtomicBool::new(false)) };
+    {
+        let wsock = sock.try_clone()?;
+        let sessions = sessions.clone();
+        let dead = out.dead.clone();
+        std::thread::spawn(move || writer_loop(wsock, out_rx, sessions, dead));
+    }
+    let rd = BufReader::new(sock);
     // One worker thread serves this connection's v1 jobs in order, off
     // the reader thread: v2 frames (including cancels) are never
     // stalled behind a blocking v1 request, one connection never pins
@@ -362,7 +476,7 @@ fn handle_conn(coord: Arc<Coordinator>, sock: TcpStream, n_layers: usize) -> Res
     let (v1_tx, v1_rx) = std::sync::mpsc::sync_channel::<V1Job>(V1_PIPELINE_DEPTH);
     {
         let coord = coord.clone();
-        let wr = wr.clone();
+        let out = out.clone();
         std::thread::spawn(move || {
             let tok = Tokenizer::new();
             for job in v1_rx {
@@ -370,7 +484,7 @@ fn handle_conn(coord: Arc<Coordinator>, sock: TcpStream, n_layers: usize) -> Res
                     V1Job::Request(parsed) => process_request(&coord, &tok, &parsed, n_layers),
                     V1Job::Error(resp) => resp,
                 };
-                if write_line(&wr, &resp.to_json()).is_err() {
+                if out.send(resp.to_json()).is_err() {
                     return;
                 }
             }
@@ -390,14 +504,14 @@ fn handle_conn(coord: Arc<Coordinator>, sock: TcpStream, n_layers: usize) -> Res
         if line.trim().is_empty() {
             continue;
         }
-        if let Err(e) = handle_frame(&coord, &v1_tx, &wr, &sessions, &line, n_layers) {
+        if let Err(e) = handle_frame(&coord, &v1_tx, &out, &sessions, &line, n_layers) {
             io_result = Err(e);
             break;
         }
     }
     // client gone (cleanly or not): abort any streams it left running
-    // so the scheduler reclaims their engine slots; dropping v1_tx
-    // winds down the worker
+    // so the scheduler reclaims their engine slots; dropping v1_tx and
+    // out winds down the worker and (once the pumps finish) the writer
     for (_, c) in sessions.lock().unwrap().drain() {
         c.cancel();
     }
@@ -405,16 +519,19 @@ fn handle_conn(coord: Arc<Coordinator>, sock: TcpStream, n_layers: usize) -> Res
 }
 
 /// Dispatch one inbound line. Protocol-level problems are answered on
-/// the wire (the connection always survives them); only I/O errors
-/// propagate.
+/// the wire (the connection always survives them); only a dead outbound
+/// path (socket gone or slow-client teardown) propagates.
 fn handle_frame(
     coord: &Arc<Coordinator>,
     v1_tx: &SyncSender<V1Job>,
-    wr: &SharedWriter,
+    out: &ConnWriter,
     sessions: &SessionMap,
     line: &str,
     n_layers: usize,
 ) -> Result<()> {
+    let send = |j: Json| {
+        out.send(j).map_err(|()| anyhow::anyhow!("connection writer gone (slow client?)"))
+    };
     let parsed = match Json::parse(line) {
         Ok(j) => j,
         Err(e) => {
@@ -435,50 +552,46 @@ fn handle_frame(
         let token = sessions.lock().unwrap().get(&id).cloned();
         match token {
             Some(c) => c.cancel(), // terminal error frame comes from the pump
-            None => {
-                write_line(wr, &error_frame(id, "unknown_id", &format!("no live stream {id}"), false))?
-            }
+            None => send(error_frame(id, "unknown_id", &format!("no live stream {id}"), false))?,
         }
         return Ok(());
     }
 
     if sessions.lock().unwrap().contains_key(&id) {
-        write_line(
-            wr,
-            &error_frame(id, "duplicate_id", &format!("stream {id} already in flight"), false),
-        )?;
+        send(error_frame(id, "duplicate_id", &format!("stream {id} already in flight"), false))?;
         return Ok(());
     }
     let wire = match WireRequest::from_json(&parsed) {
         Ok(w) => w,
         Err(e) => {
-            write_line(wr, &error_frame(id, "invalid", &format!("bad request: {e}"), false))?;
+            send(error_frame(id, "invalid", &format!("bad request: {e}"), false))?;
             return Ok(());
         }
     };
     let req = match wire.to_request(n_layers) {
         Ok(r) => r,
         Err(e) => {
-            write_line(wr, &error_frame(id, "invalid", &e.to_string(), false))?;
+            send(error_frame(id, "invalid", &e.to_string(), false))?;
             return Ok(());
         }
     };
     match coord.open(req) {
-        Err(e) => write_line(wr, &error_frame_err(id, &e))?,
+        Err(e) => send(error_frame_err(id, &e))?,
         Ok(handle) => {
             sessions.lock().unwrap().insert(id, handle.cancel_token());
-            let wr = wr.clone();
+            let out = out.clone();
             let sessions = sessions.clone();
-            std::thread::spawn(move || pump_session(id, handle, &wr, &sessions));
+            std::thread::spawn(move || pump_session(id, handle, &out, &sessions));
         }
     }
     Ok(())
 }
 
 /// Forward one session's events to the connection as NDJSON frames.
-/// Exits on the terminal event, or when the socket dies — dropping the
-/// handle then cancels the session (cancel-on-drop).
-fn pump_session(id: u64, handle: SessionHandle, wr: &SharedWriter, sessions: &SessionMap) {
+/// Exits on the terminal event, or when the outbound path dies (socket
+/// gone or slow-client teardown) — dropping the handle then cancels the
+/// session (cancel-on-drop).
+fn pump_session(id: u64, handle: SessionHandle, out: &ConnWriter, sessions: &SessionMap) {
     let tok = Tokenizer::new();
     while let Some(ev) = handle.recv() {
         let (j, terminal) = match ev {
@@ -506,6 +619,18 @@ fn pump_session(id: u64, handle: SessionHandle, wr: &SharedWriter, sessions: &Se
                 o.set("step_ms", Json::from(step_us as f64 / 1e3));
                 (o, false)
             }
+            SessionEvent::Preempted { streamed, preemptions } => {
+                let mut o = frame(id, "preempted");
+                o.set("streamed", Json::from(streamed));
+                o.set("preemptions", Json::from(preemptions as usize));
+                (o, false)
+            }
+            SessionEvent::Resumed { resume_us, preemptions } => {
+                let mut o = frame(id, "resumed");
+                o.set("resume_ms", Json::from(resume_us as f64 / 1e3));
+                o.set("preemptions", Json::from(preemptions as usize));
+                (o, false)
+            }
             SessionEvent::Done { stats } => {
                 let mut o = frame(id, "done");
                 o.set(
@@ -529,11 +654,11 @@ fn pump_session(id: u64, handle: SessionHandle, wr: &SharedWriter, sessions: &Se
             // reuse after done/error); all removals live inside this
             // function so a reused id's fresh entry is never clobbered
             sessions.lock().unwrap().remove(&id);
-            let _ = write_line(wr, &j);
+            let _ = out.send(j);
             return;
         }
-        if write_line(wr, &j).is_err() {
-            // socket gone; dropping `handle` cancels the session
+        if out.send(j).is_err() {
+            // outbound path gone; dropping `handle` cancels the session
             sessions.lock().unwrap().remove(&id);
             return;
         }
@@ -543,10 +668,12 @@ fn pump_session(id: u64, handle: SessionHandle, wr: &SharedWriter, sessions: &Se
     // frame per stream, so synthesize a typed one rather than going
     // silent — clients key retry logic on it.
     sessions.lock().unwrap().remove(&id);
-    let _ = write_line(
-        wr,
-        &error_frame(id, "shutdown", "stream closed: scheduler shut down before completion", false),
-    );
+    let _ = out.send(error_frame(
+        id,
+        "shutdown",
+        "stream closed: scheduler shut down before completion",
+        false,
+    ));
 }
 
 /// v1 path: run the request to completion and build the aggregate
@@ -573,6 +700,7 @@ fn process_request(coord: &Coordinator, tok: &Tokenizer, parsed: &Json, n_layers
             queue_ms: r.queue_us as f64 / 1e3,
             error: None,
             retryable: false,
+            retry_after_ms: None,
         },
         Err(e) => error_response(&e.to_string()),
     }
@@ -707,7 +835,15 @@ impl StreamClient {
             if resp.error.is_none() || !resp.retryable {
                 return Ok(resp);
             }
-            std::thread::sleep(jitter.next_backoff());
+            let mut sleep = jitter.next_backoff();
+            // the server's retry_after_ms hint is a FLOOR under the
+            // jitter, not a replacement: the decorrelation (and its
+            // geometric growth across attempts) is preserved, the
+            // server just rules out sleeps it knows are pointless
+            if let Some(ms) = resp.retry_after_ms {
+                sleep = sleep.max(Duration::from_millis(ms));
+            }
+            std::thread::sleep(sleep);
         }
         self.open(req)?.wait()
     }
@@ -898,6 +1034,7 @@ mod tests {
             queue_ms: 0.4,
             error: None,
             retryable: false,
+            retry_after_ms: None,
         };
         let j = Json::parse(&r.to_json().to_string()).unwrap();
         assert!(j.get("queue_ms").is_some(), "queue_ms must be serialized");
@@ -951,6 +1088,34 @@ mod tests {
         // errors without extras keep the lean frame shape
         let e = error_frame_err(6, &RequestError::QueueFull);
         assert!(e.get("detail").is_none() && e.get("replica").is_none());
+    }
+
+    /// Retryable error frames carry the server-suggested backoff floor
+    /// (DESIGN.md §15 satellite); non-retryable ones never do.
+    #[test]
+    fn retryable_error_frames_carry_retry_after_hint() {
+        let e = error_frame_err(1, &RequestError::QueueFull);
+        assert_eq!(e.get("retry_after_ms").and_then(Json::as_usize), Some(25));
+        let e = error_frame_err(2, &RequestError::Draining);
+        assert_eq!(e.get("retry_after_ms").and_then(Json::as_usize), Some(200));
+        let e = error_frame_err(3, &RequestError::PreemptionExhausted { preemptions: 4 });
+        assert_eq!(e.get("kind").and_then(Json::as_str), Some("preemption_exhausted"));
+        assert_eq!(e.get("retryable").and_then(Json::as_bool), Some(true));
+        assert_eq!(e.get("retry_after_ms").and_then(Json::as_usize), Some(100));
+        let e = error_frame_err(4, &RequestError::Cancelled);
+        assert!(e.get("retry_after_ms").is_none());
+        // and the hint roundtrips through the aggregate response shape
+        let r = WireResponse {
+            error: Some("busy".into()),
+            retryable: true,
+            retry_after_ms: Some(100),
+            ..Default::default()
+        };
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(WireResponse::from_json(&j).retry_after_ms, Some(100));
+        // successes omit it
+        let j = Json::parse(&WireResponse::default().to_json().to_string()).unwrap();
+        assert_eq!(WireResponse::from_json(&j).retry_after_ms, None);
     }
 
     #[test]

@@ -244,8 +244,8 @@ fn validate_decode_v2(path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// The `flux bench --smoke` CI gate for the serving file's v5 schema
-/// (DESIGN.md §11–14): throughput must be positive, the pool-pressure
+/// The `flux bench --smoke` CI gate for the serving file's v6 schema
+/// (DESIGN.md §11–15): throughput must be positive, the pool-pressure
 /// scenario must be present with a nonzero page high-water mark, at
 /// least one typed overloaded rejection, and verified bit-identical
 /// token streams across page sizes, the fault-recovery scenario must
@@ -256,15 +256,18 @@ fn validate_decode_v2(path: &Path) -> Result<()> {
 /// cold run, and the saturation scenario must sweep offered load over
 /// a multi-replica set (positive goodput at every level) with a
 /// replica-kill ledger showing ≥1 failover completion bit-identical to
-/// the unfaulted reference — CI fails if the paged pool, the failure
-/// domain, the prefix cache, or the replica set silently stops being
-/// measured.
+/// the unfaulted reference, and the preemption scenario must show an
+/// undersized pool actually preempting AND resuming (≥1 each) with
+/// every stream completing bit-identical to the worst-case serial
+/// reference and goodput recorded for both admission modes — CI fails
+/// if the paged pool, the failure domain, the prefix cache, the
+/// replica set, or the preemption path silently stops being measured.
 fn validate_serving(path: &Path) -> Result<()> {
     let j = Json::parse(&std::fs::read_to_string(path)?)
         .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
     anyhow::ensure!(
-        j.get("schema").and_then(Json::as_str) == Some("flux-bench-serving/v5"),
-        "{path:?}: schema must be flux-bench-serving/v5"
+        j.get("schema").and_then(Json::as_str) == Some("flux-bench-serving/v6"),
+        "{path:?}: schema must be flux-bench-serving/v6"
     );
     anyhow::ensure!(
         j.get("tokens_per_s").and_then(Json::as_f64).map(|v| v > 0.0).unwrap_or(false),
@@ -366,6 +369,31 @@ fn validate_serving(path: &Path) -> Result<()> {
         k.get("bit_identical").and_then(Json::as_bool) == Some(true),
         "{path:?}: failover streams not verified bit-identical"
     );
+    let pe = j
+        .get("preemption")
+        .ok_or_else(|| anyhow::anyhow!("{path:?}: missing preemption scenario"))?;
+    anyhow::ensure!(
+        pe.get("preemptions").and_then(Json::as_f64).map(|v| v >= 1.0).unwrap_or(false),
+        "{path:?}: preemption scenario recorded no preemption"
+    );
+    anyhow::ensure!(
+        pe.get("resumes").and_then(Json::as_f64).map(|v| v >= 1.0).unwrap_or(false),
+        "{path:?}: preemption scenario recorded no resume"
+    );
+    anyhow::ensure!(
+        pe.get("all_streams_completed").and_then(Json::as_bool) == Some(true),
+        "{path:?}: preemption scenario left streams incomplete"
+    );
+    anyhow::ensure!(
+        pe.get("bit_identical").and_then(Json::as_bool) == Some(true),
+        "{path:?}: resumed streams not verified bit-identical to the worst-case reference"
+    );
+    for key in ["goodput_optimistic_tokens_per_s", "goodput_worst_case_tokens_per_s"] {
+        anyhow::ensure!(
+            pe.get(key).and_then(Json::as_f64).map(|v| v > 0.0).unwrap_or(false),
+            "{path:?}: preemption scenario missing {key}"
+        );
+    }
     Ok(())
 }
 
@@ -459,7 +487,7 @@ fn run_interference(
                         break;
                     }
                     SessionEvent::Error { .. } => break,
-                    SessionEvent::Queued => {}
+                    _ => {}
                 }
             }
             (toks, ok)
@@ -495,7 +523,7 @@ fn run_interference(
             SessionEvent::Token { tok, .. } => long_tokens.push(tok),
             SessionEvent::Done { .. } => break,
             SessionEvent::Error { error } => anyhow::bail!("long request failed: {error}"),
-            SessionEvent::Queued => {}
+            _ => {}
         }
     }
     let t_prefilled =
@@ -904,7 +932,7 @@ pub fn run_serving_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<(P
 /// Concurrent-streaming serving scenario over the real TCP wire: N
 /// connections × M in-flight v2 streams each, with one stream per
 /// connection cancelled mid-flight. Emits `BENCH_serving.json`
-/// (schema `flux-bench-serving/v4`) recording aggregate streamed-token
+/// (schema `flux-bench-serving/v6`) recording aggregate streamed-token
 /// throughput and cancelled-request cleanup: after the cancellations a
 /// probe request must admit and complete (proving the scheduler
 /// reclaimed the engine slots), and the coordinator's cancelled counter
@@ -929,7 +957,15 @@ pub fn run_serving_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<(P
 /// queue watermark degrades into typed retryable rejections), plus a
 /// replica-kill ledger — one replica of two dies mid-load, its queued
 /// work fails over and completes on the survivor bit-identical to the
-/// single-replica reference.
+/// single-replica reference. The v6 schema adds the preemption
+/// scenario (DESIGN.md §15): three dense streams co-admit under
+/// route-aware optimistic admission on a pool sized below their
+/// aggregate worst case, mid-decode capacity growth runs the pool dry,
+/// a victim is preempted (pages freed, state snapshotted) and resumed
+/// through recompute, and every stream still completes bit-identical
+/// to a worst-case serial run of the same pool; the ledger records
+/// preemption/resume counts, resume-latency percentiles, and goodput
+/// under both admission modes.
 pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<PathBuf> {
     use crate::config::{MetaConfig, ServingConfig};
     use crate::coordinator::{Coordinator, Request, RequestError};
@@ -1424,9 +1460,127 @@ pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<
         sk_m.dispatch_failovers
     );
 
+    // ---- preemption scenario (DESIGN.md §15): route-aware optimistic
+    // admission on a pool sized BELOW the aggregate worst case. Three
+    // concurrent dense streams co-admit under `Optimistic { 0.5 }`; a
+    // younger stream's capacity growth at the bucket edge runs the
+    // pool dry, the elder is preempted (pages freed, state
+    // snapshotted) and later resumed through recompute — and ALL
+    // streams complete with token streams bit-identical to the same
+    // pool under `WorstCase` serial admission, whose goodput is the
+    // comparison baseline. ----
+    use crate::config::AdmissionMode;
+    use crate::engine::PoolProfile;
+    let pm_page_tokens = 32usize;
+    let pm_bucket = *meta.prefill_buckets.first().unwrap();
+    // prompt and budget at 3/4 of the first bucket: the stream starts
+    // in bucket b0 and must double to 2*b0 mid-decode
+    let (pm_prompt, pm_max_new) = (pm_bucket * 3 / 4, pm_bucket * 3 / 4);
+    let pm_profile = PoolProfile {
+        page_tokens: pm_page_tokens,
+        total_pages: 0,
+        n_layers,
+        sa_buf: meta.sa_buf,
+        prefill_buckets: meta.prefill_buckets.clone(),
+    };
+    let pm_worst = pm_profile.worst_case_pages(pm_prompt, pm_max_new);
+    let pm_routed = pm_profile.routed_pages(
+        pm_prompt,
+        pm_max_new,
+        &vec![AttnMode::Fa; n_layers],
+        DecodeMode::Dense,
+    );
+    // one fully-grown stream plus half a worst case: two optimistic
+    // charges fit, two grown streams do not — growth must preempt
+    let pm_pages = pm_routed + pm_worst.div_ceil(2);
+    let pm_reqs: Vec<Request> = {
+        let mut rng = Rng::seed_from_u64(28);
+        (0..3)
+            .map(|_| Request {
+                prompt: generate(Task::PRe, &mut rng, pm_prompt).prompt,
+                max_new: pm_max_new,
+                ignore_eos: true,
+                ..Default::default()
+            })
+            .collect()
+    };
+    // worst-case reference on the SAME pool: serial admission — the
+    // goodput baseline and the bit-identity oracle
+    let pm_ref_engine = EngineHandle::spawn_with_pool(
+        artifacts.to_path_buf(),
+        pm_page_tokens,
+        pm_pages * pm_page_tokens,
+    )?;
+    let pm_ref_coord = Coordinator::start(pm_ref_engine, ServingConfig::default())?;
+    let t_ref = Instant::now();
+    let pm_expected: Vec<Vec<u32>> = pm_reqs
+        .iter()
+        .map(|r| pm_ref_coord.submit(r.clone()).map(|resp| resp.tokens))
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("worst-case reference stream failed: {e:?}"))?;
+    let pm_ref_s = t_ref.elapsed().as_secs_f64().max(1e-9);
+    let pm_ref_tokens: usize = pm_expected.iter().map(Vec::len).sum();
+    anyhow::ensure!(
+        pm_ref_coord.metrics.lock().unwrap().preemptions == 0,
+        "WorstCase admission must reproduce serial decisions exactly (no preemption)"
+    );
+
+    let pm_engine = EngineHandle::spawn_with_pool(
+        artifacts.to_path_buf(),
+        pm_page_tokens,
+        pm_pages * pm_page_tokens,
+    )?;
+    let pm_coord = Coordinator::start(
+        pm_engine,
+        ServingConfig {
+            admission_mode: AdmissionMode::Optimistic { factor: 0.5 },
+            ..ServingConfig::default()
+        },
+    )?;
+    let t_opt = Instant::now();
+    let pm_handles: Vec<SessionHandle> = pm_reqs
+        .iter()
+        .map(|r| pm_coord.open(r.clone()))
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("optimistic admission rejected a stream: {e:?}"))?;
+    let (mut pm_tokens, mut pm_completed) = (0usize, 0usize);
+    let mut pm_bit_identical = true;
+    for (h, expected) in pm_handles.iter().zip(&pm_expected) {
+        match drain_one(h) {
+            (Some(done), None) => {
+                pm_completed += 1;
+                pm_tokens += done.tokens.len();
+                pm_bit_identical &= &done.tokens == expected;
+            }
+            other => anyhow::bail!("preemption scenario stream failed: {other:?}"),
+        }
+    }
+    let pm_opt_s = t_opt.elapsed().as_secs_f64().max(1e-9);
+    let pm_m = pm_coord.metrics.lock().unwrap().clone();
+    anyhow::ensure!(
+        pm_m.preemptions >= 1 && pm_m.resumes >= 1,
+        "undersized pool never preempted (pool {pm_pages} pages, worst case {pm_worst} x 3)"
+    );
+    anyhow::ensure!(
+        pm_bit_identical,
+        "resumed streams diverged from the worst-case serial reference"
+    );
+    println!(
+        "preemption: {} preemption(s), {} resume(s), {} page(s) freed over a {pm_pages}-page \
+         pool (worst case {pm_worst} x 3 streams), resume p50 {}us p95 {}us, goodput \
+         {:.1} tok/s optimistic vs {:.1} tok/s worst-case",
+        pm_m.preemptions,
+        pm_m.resumes,
+        pm_m.preempted_pages_freed,
+        pm_m.resume_latency.p50_us(),
+        pm_m.resume_latency.p95_us(),
+        pm_tokens as f64 / pm_opt_s,
+        pm_ref_tokens as f64 / pm_ref_s,
+    );
+
     let m = coord.metrics.lock().unwrap().clone();
     let mut j = Json::obj();
-    j.set("schema", Json::from("flux-bench-serving/v5"));
+    j.set("schema", Json::from("flux-bench-serving/v6"));
     j.set("measured", Json::from(true));
     j.set("connections", Json::from(n_conns));
     j.set("streams_per_connection", Json::from(n_streams));
@@ -1488,6 +1642,29 @@ pub fn run_streaming_bench(artifacts: &Path, opts: &ServingBenchOpts) -> Result<
     jk.set("bit_identical", Json::from(sk_bit_identical));
     jsat.set("replica_kill", jk);
     j.set("saturation", jsat);
+    let mut jpe = Json::obj();
+    jpe.set("pool_pages", Json::from(pm_pages));
+    jpe.set("page_tokens", Json::from(pm_page_tokens));
+    jpe.set("streams", Json::from(3usize));
+    jpe.set("worst_case_pages", Json::from(pm_worst));
+    jpe.set("routed_pages", Json::from(pm_routed));
+    jpe.set("admission_factor", Json::from(0.5));
+    jpe.set("preemptions", Json::from(pm_m.preemptions as usize));
+    jpe.set("resumes", Json::from(pm_m.resumes as usize));
+    jpe.set("preempted_pages_freed", Json::from(pm_m.preempted_pages_freed as usize));
+    jpe.set("resume_p50_us", Json::from(pm_m.resume_latency.p50_us() as usize));
+    jpe.set("resume_p95_us", Json::from(pm_m.resume_latency.p95_us() as usize));
+    jpe.set(
+        "goodput_optimistic_tokens_per_s",
+        Json::from(pm_tokens as f64 / pm_opt_s),
+    );
+    jpe.set(
+        "goodput_worst_case_tokens_per_s",
+        Json::from(pm_ref_tokens as f64 / pm_ref_s),
+    );
+    jpe.set("all_streams_completed", Json::from(pm_completed == 3));
+    jpe.set("bit_identical", Json::from(pm_bit_identical));
+    j.set("preemption", jpe);
     let path = opts.out_dir.join("BENCH_serving.json");
     std::fs::write(&path, j.to_string())?;
     validate_serving(&path)?;
@@ -1586,21 +1763,21 @@ mod tests {
     }
 
     #[test]
-    fn serving_v5_validation_gates_on_pool_fault_prefix_and_saturation() {
-        let dir = std::env::temp_dir().join(format!("flux-bench-sv5-{}", std::process::id()));
+    fn serving_v6_validation_gates_on_pool_fault_prefix_saturation_and_preemption() {
+        let dir = std::env::temp_dir().join(format!("flux-bench-sv6-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
-        let old = dir.join("v4.json");
-        std::fs::write(&old, r#"{"schema": "flux-bench-serving/v4", "tokens_per_s": 10.0}"#)
+        let old = dir.join("v5.json");
+        std::fs::write(&old, r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0}"#)
             .unwrap();
-        assert!(validate_serving(&old).is_err(), "v4 schema must fail the v5 gate");
+        assert!(validate_serving(&old).is_err(), "v5 schema must fail the v6 gate");
         let no_pool = dir.join("no_pool.json");
-        std::fs::write(&no_pool, r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0}"#)
+        std::fs::write(&no_pool, r#"{"schema": "flux-bench-serving/v6", "tokens_per_s": 10.0}"#)
             .unwrap();
         assert!(validate_serving(&no_pool).is_err(), "missing pool_pressure must fail");
         let idle = dir.join("idle.json");
         std::fs::write(
             &idle,
-            r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v6", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 0, "overloaded_rejections": 1,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
@@ -1611,7 +1788,7 @@ mod tests {
         let unrejected = dir.join("unrejected.json");
         std::fs::write(
             &unrejected,
-            r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v6", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 0,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
@@ -1622,7 +1799,7 @@ mod tests {
         let diverged = dir.join("diverged.json");
         std::fs::write(
             &diverged,
-            r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v6", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": false},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
@@ -1633,7 +1810,7 @@ mod tests {
         let no_fault = dir.join("no_fault.json");
         std::fs::write(
             &no_fault,
-            r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v6", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": true}}"#,
         )
@@ -1642,7 +1819,7 @@ mod tests {
         let unrecovered = dir.join("unrecovered.json");
         std::fs::write(
             &unrecovered,
-            r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v6", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": false, "engine_restarts": 0,
@@ -1653,7 +1830,7 @@ mod tests {
         let no_prefix = dir.join("no_prefix.json");
         std::fs::write(
             &no_prefix,
-            r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v6", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
@@ -1664,7 +1841,7 @@ mod tests {
         let cold_prefix = dir.join("cold_prefix.json");
         std::fs::write(
             &cold_prefix,
-            r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v6", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
@@ -1678,7 +1855,7 @@ mod tests {
         let warm_diverged = dir.join("warm_diverged.json");
         std::fs::write(
             &warm_diverged,
-            r#"{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0,
+            r#"{"schema": "flux-bench-serving/v6", "tokens_per_s": 10.0,
                 "pool_pressure": {"pages_peak": 40, "overloaded_rejections": 1,
                                   "bit_identical": true},
                 "fault_recovery": {"recovered": true, "engine_restarts": 1,
@@ -1700,7 +1877,7 @@ mod tests {
         std::fs::write(
             &no_sat,
             format!(
-                r#"{{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0, {complete_scenarios}}}"#
+                r#"{{"schema": "flux-bench-serving/v6", "tokens_per_s": 10.0, {complete_scenarios}}}"#
             ),
         )
         .unwrap();
@@ -1709,7 +1886,7 @@ mod tests {
         std::fs::write(
             &solo,
             format!(
-                r#"{{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0, {complete_scenarios},
+                r#"{{"schema": "flux-bench-serving/v6", "tokens_per_s": 10.0, {complete_scenarios},
                 "saturation": {{"runs": [{{"replicas": 1,
                         "sweep": [{{"goodput_tokens_per_s": 50.0}}]}}],
                     "replica_kill": {{"recovered": true, "failover_completions": 1,
@@ -1722,7 +1899,7 @@ mod tests {
         std::fs::write(
             &no_failover,
             format!(
-                r#"{{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0, {complete_scenarios},
+                r#"{{"schema": "flux-bench-serving/v6", "tokens_per_s": 10.0, {complete_scenarios},
                 "saturation": {{"runs": [
                         {{"replicas": 1, "sweep": [{{"goodput_tokens_per_s": 50.0}}]}},
                         {{"replicas": 2, "sweep": [{{"goodput_tokens_per_s": 90.0}}]}}],
@@ -1732,20 +1909,71 @@ mod tests {
         )
         .unwrap();
         assert!(validate_serving(&no_failover).is_err(), "zero failovers must fail");
+        let full_saturation = r#""saturation": {"replica_counts": [1, 2], "runs": [
+                        {"replicas": 1, "sweep": [{"offered_sessions": 4,
+                            "goodput_tokens_per_s": 50.0, "ttft_p95_us": 900.0}]},
+                        {"replicas": 2, "sweep": [{"offered_sessions": 4,
+                            "goodput_tokens_per_s": 90.0, "ttft_p95_us": 500.0}]}],
+                    "replica_kill": {"replicas": 2, "recovered": true,
+                                      "failover_completions": 2,
+                                      "time_to_failover_ms": 120.5,
+                                      "bit_identical": true}}"#;
+        let no_preempt = dir.join("no_preempt.json");
+        std::fs::write(
+            &no_preempt,
+            format!(
+                r#"{{"schema": "flux-bench-serving/v6", "tokens_per_s": 10.0, {complete_scenarios},
+                {full_saturation}}}"#
+            ),
+        )
+        .unwrap();
+        assert!(validate_serving(&no_preempt).is_err(), "missing preemption ledger must fail");
+        let never_preempted = dir.join("never_preempted.json");
+        std::fs::write(
+            &never_preempted,
+            format!(
+                r#"{{"schema": "flux-bench-serving/v6", "tokens_per_s": 10.0, {complete_scenarios},
+                {full_saturation},
+                "preemption": {{"preemptions": 0, "resumes": 0,
+                    "all_streams_completed": true, "bit_identical": true,
+                    "goodput_optimistic_tokens_per_s": 60.0,
+                    "goodput_worst_case_tokens_per_s": 40.0}}}}"#
+            ),
+        )
+        .unwrap();
+        assert!(
+            validate_serving(&never_preempted).is_err(),
+            "a pool that never preempted must fail (the scenario proved nothing)"
+        );
+        let preempt_diverged = dir.join("preempt_diverged.json");
+        std::fs::write(
+            &preempt_diverged,
+            format!(
+                r#"{{"schema": "flux-bench-serving/v6", "tokens_per_s": 10.0, {complete_scenarios},
+                {full_saturation},
+                "preemption": {{"preemptions": 2, "resumes": 2,
+                    "all_streams_completed": true, "bit_identical": false,
+                    "goodput_optimistic_tokens_per_s": 60.0,
+                    "goodput_worst_case_tokens_per_s": 40.0}}}}"#
+            ),
+        )
+        .unwrap();
+        assert!(
+            validate_serving(&preempt_diverged).is_err(),
+            "resumed streams diverging from the serial reference must fail"
+        );
         let good = dir.join("good.json");
         std::fs::write(
             &good,
             format!(
-                r#"{{"schema": "flux-bench-serving/v5", "tokens_per_s": 10.0, {complete_scenarios},
-                "saturation": {{"replica_counts": [1, 2], "runs": [
-                        {{"replicas": 1, "sweep": [{{"offered_sessions": 4,
-                            "goodput_tokens_per_s": 50.0, "ttft_p95_us": 900.0}}]}},
-                        {{"replicas": 2, "sweep": [{{"offered_sessions": 4,
-                            "goodput_tokens_per_s": 90.0, "ttft_p95_us": 500.0}}]}}],
-                    "replica_kill": {{"replicas": 2, "recovered": true,
-                                      "failover_completions": 2,
-                                      "time_to_failover_ms": 120.5,
-                                      "bit_identical": true}}}}}}"#
+                r#"{{"schema": "flux-bench-serving/v6", "tokens_per_s": 10.0, {complete_scenarios},
+                {full_saturation},
+                "preemption": {{"preemptions": 2, "resumes": 2,
+                    "preempted_pages_freed": 32,
+                    "resume_p50_us": 1800, "resume_p95_us": 2400,
+                    "all_streams_completed": true, "bit_identical": true,
+                    "goodput_optimistic_tokens_per_s": 60.0,
+                    "goodput_worst_case_tokens_per_s": 40.0}}}}"#
             ),
         )
         .unwrap();

@@ -22,7 +22,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
-use flux_attention::config::ServingConfig;
+use flux_attention::config::{AdmissionMode, ServingConfig};
 use flux_attention::coordinator::{
     Coordinator, Request, RequestError, Response, SessionEvent, SessionHandle,
 };
@@ -57,15 +57,28 @@ struct StreamOutcome {
     error: Option<RequestError>,
     /// Count of terminal events seen — the exactly-one invariant.
     terminals: usize,
+    /// `Preempted` events seen (non-terminal, DESIGN.md §15).
+    preempted: usize,
+    /// `Resumed` events seen (non-terminal, DESIGN.md §15).
+    resumed: usize,
 }
 
 fn drain_session(h: &SessionHandle) -> StreamOutcome {
-    let mut out = StreamOutcome { tokens: vec![], done: None, error: None, terminals: 0 };
+    let mut out = StreamOutcome {
+        tokens: vec![],
+        done: None,
+        error: None,
+        terminals: 0,
+        preempted: 0,
+        resumed: 0,
+    };
     while let Some(ev) = h.recv_timeout(TIMEOUT) {
         match ev {
             SessionEvent::Queued => {}
             SessionEvent::Prefilled { first_token, .. } => out.tokens.push(first_token),
             SessionEvent::Token { tok, .. } => out.tokens.push(tok),
+            SessionEvent::Preempted { .. } => out.preempted += 1,
+            SessionEvent::Resumed { .. } => out.resumed += 1,
             SessionEvent::Done { stats } => {
                 out.terminals += 1;
                 out.done = Some(stats);
@@ -353,6 +366,129 @@ fn seeded_fault_schedules_terminate_every_session_exactly_once() {
         assert_eq!(served.tokens.len(), 4);
         common::assert_pool_drained(&engine);
     }
+}
+
+/// Satellite-(c) sweep (DESIGN.md §15): seeded schedules with GUARANTEED
+/// `pool@N` faults, run under `Optimistic` admission, so the
+/// preempt-park-resume machinery is exercised on every seed on top of
+/// whatever errs/panics/stalls the seed drew. Invariants: every session
+/// still terminates exactly once (typed — pool pressure may surface as
+/// the retryable `PreemptionExhausted` but never a silent close or a
+/// decode-phase `Overloaded`), the pipeline recovers, the sweep lands at
+/// least one preemption, and the pool drains fully-free afterwards.
+#[test]
+fn seeded_pool_faults_under_optimistic_admission_terminate_and_drain() {
+    let base: u64 = std::env::var("FLUX_FAULT_SEED")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(1);
+    let mut total_preemptions = 0u64;
+    for seed in base..base + 4 {
+        // the seeded schedule plus two pinned pool faults: call 40 lands
+        // inside the first request's decode, call 120 deep in the
+        // workload — every seed provokes the preemption path unless an
+        // earlier seeded panic kills the lifetime first (also fine: the
+        // respawn is fault-free and the sweep still terminates typed)
+        let plan = FaultPlan::seeded(seed)
+            .with(40, FaultKind::PoolExhausted)
+            .with(120, FaultKind::PoolExhausted);
+        let spec = plan.to_string();
+        let engine = EngineHandle::spawn_with_faults(artifacts(), None, plan).unwrap();
+        let coord = Coordinator::start(
+            engine.clone(),
+            ServingConfig {
+                admission_mode: AdmissionMode::Optimistic { factor: 0.5 },
+                max_preemptions: 8,
+                engine_round_timeout_ms: Some(30_000),
+                engine_restart_max: 4,
+                engine_restart_backoff_ms: 10,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::seed_from_u64(seed);
+        let reqs: Vec<Request> = (0..3)
+            .map(|_| {
+                let len = 64 + rng.gen_range(64);
+                let max_new = 6 + rng.gen_range(8);
+                Request {
+                    prompt: generate(Task::PRe, &mut rng, len).prompt,
+                    max_new,
+                    ignore_eos: true,
+                    ..Default::default()
+                }
+            })
+            .collect();
+        let handles: Vec<SessionHandle> =
+            reqs.iter().map(|r| coord.open(r.clone()).unwrap()).collect();
+        for (i, h) in handles.iter().enumerate() {
+            let o = drain_session(h);
+            assert_eq!(
+                o.terminals, 1,
+                "seed {seed} (plan {spec}): session {i} must see exactly one terminal event"
+            );
+            if let Some(err) = &o.error {
+                assert!(
+                    matches!(
+                        err,
+                        RequestError::Engine(_)
+                            | RequestError::EngineFailed { .. }
+                            | RequestError::PreemptionExhausted { .. }
+                    ),
+                    "seed {seed} (plan {spec}): session {i} got a mistyped terminal {err:?}"
+                );
+            } else {
+                let done = o.done.as_ref().expect("terminals == 1 but no terminal recorded");
+                assert_eq!(
+                    done.tokens.len(),
+                    reqs[i].max_new,
+                    "seed {seed}: a completed stream must honor max_new"
+                );
+                assert_eq!(o.tokens, done.tokens, "seed {seed}: events must mirror Done stats");
+                assert_eq!(
+                    o.preempted, o.resumed,
+                    "seed {seed}: a COMPLETED stream must have resumed every preemption"
+                );
+            }
+        }
+        // recovery liveness, as in the base sweep
+        let probe = Request {
+            prompt: generate(Task::Gov, &mut rng, 48).prompt,
+            max_new: 4,
+            ignore_eos: true,
+            ..Default::default()
+        };
+        let mut served = None;
+        for _ in 0..5 {
+            let h = coord
+                .open(probe.clone())
+                .unwrap_or_else(|e| panic!("seed {seed} (plan {spec}): probe admission failed: {e:?}"));
+            let o = drain_session(&h);
+            assert_eq!(
+                o.terminals, 1,
+                "seed {seed} (plan {spec}): the probe must see exactly one terminal event"
+            );
+            match o.error {
+                Some(err) => assert!(
+                    err.retryable() || matches!(err, RequestError::Engine(_)),
+                    "seed {seed} (plan {spec}): probe got a mistyped terminal {err:?}"
+                ),
+                None => {
+                    served = o.done;
+                    break;
+                }
+            }
+        }
+        let served =
+            served.unwrap_or_else(|| panic!("seed {seed} (plan {spec}): pipeline did not recover"));
+        assert_eq!(served.tokens.len(), 4);
+        total_preemptions += coord.metrics.lock().unwrap().preemptions;
+        common::assert_pool_drained(&engine);
+    }
+    assert!(
+        total_preemptions >= 1,
+        "the pinned pool@40/pool@120 faults must land at least one preemption across the sweep"
+    );
 }
 
 /// Graceful drain: in-flight streams run to a full `Done` (never a

@@ -277,7 +277,9 @@ fn cancel_during_prefill_emits_no_prefilled() {
                 break;
             }
             SessionEvent::Done { .. } => panic!("cancelled request must not complete"),
-            SessionEvent::Queued => {}
+            SessionEvent::Queued
+            | SessionEvent::Preempted { .. }
+            | SessionEvent::Resumed { .. } => {}
         }
     }
     assert_eq!(terminal, Some(RequestError::Cancelled));
@@ -314,7 +316,9 @@ fn deadline_elapsing_during_prefill_emits_no_prefilled() {
                 break;
             }
             SessionEvent::Done { .. } => panic!("expired request must not complete"),
-            SessionEvent::Queued => {}
+            SessionEvent::Queued
+            | SessionEvent::Preempted { .. }
+            | SessionEvent::Resumed { .. } => {}
         }
     }
     assert_eq!(terminal, Some(RequestError::DeadlineExceeded));

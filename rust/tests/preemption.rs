@@ -1,0 +1,443 @@
+//! DESIGN.md §15 acceptance suite: route-aware optimistic admission
+//! with preemption and recompute resume — graceful degradation when
+//! the KV pool runs dry.
+//!
+//! The invariants pinned here, per ISSUE 10's acceptance gates:
+//! * with a pool sized BELOW the aggregate worst-case demand and
+//!   `Optimistic` admission, N concurrent streams ALL complete — no
+//!   decode-phase `Overloaded`, no silent close;
+//! * preempted streams are bit-identical to uncontended runs, for both
+//!   dense and sparse (ring-routed) decode layouts — greedy decode plus
+//!   snapshot-verified recompute resume preserves determinism;
+//! * `WorstCase` admission on the same undersized pool reproduces
+//!   today's serial decisions exactly (zero preemptions);
+//! * preemptions / resumes / freed pages are observable in the metrics
+//!   summary;
+//! * parked victims honor cancel, deadline, and drain like any other
+//!   session — a preempted request is never a zombie.
+//!
+//! Pool geometries are chosen against the synthetic artifact model
+//! (4 layers, 4 heads x 8 dims, sa_buf 128, prefill buckets
+//! [128, 256, 512, 1024]) at 32-token pages: a `(prompt 100, max_new
+//! 100)` request covers bucket 128 and doubles to 256 mid-decode, so
+//! its worst case is 4 * (256/32 + 128/32) = 48 pages, its dense routed
+//! footprint 32, and its [Fa, Ssa, Fa, Ssa] sparse-decode footprint 24.
+//! The growth at the 128 -> 256 bucket edge is the deterministic
+//! starvation point every scenario below leans on.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use flux_attention::config::{AdmissionMode, ServingConfig};
+use flux_attention::coordinator::{
+    Coordinator, Request, RequestError, Response, SessionEvent, SessionHandle,
+};
+use flux_attention::engine::EngineHandle;
+use flux_attention::router::{AttnMode, DecodeMode, Policy};
+use flux_attention::runtime::synthetic;
+use flux_attention::util::rng::Rng;
+use flux_attention::workload::{generate, Task};
+
+mod common;
+
+const TIMEOUT: Duration = Duration::from_secs(120);
+/// Pool page size used by every scenario (tokens per page).
+const PAGE_TOKENS: usize = 32;
+
+fn artifacts() -> PathBuf {
+    synthetic::ensure_default().expect("artifact generation must not fail")
+}
+
+/// Coordinator over a pool of exactly `pages` 32-token pages.
+fn start_pooled(pages: usize, cfg: ServingConfig) -> (Arc<Coordinator>, EngineHandle) {
+    let engine =
+        EngineHandle::spawn_with_pool(artifacts(), PAGE_TOKENS, pages * PAGE_TOKENS).unwrap();
+    let coord = Coordinator::start(engine.clone(), cfg).unwrap();
+    (coord, engine)
+}
+
+fn optimistic(factor: f64) -> ServingConfig {
+    ServingConfig {
+        admission_mode: AdmissionMode::Optimistic { factor },
+        ..Default::default()
+    }
+}
+
+/// Everything one session's event stream produced (see `chaos.rs`).
+#[derive(Debug)]
+struct Outcome {
+    tokens: Vec<u32>,
+    done: Option<Response>,
+    error: Option<RequestError>,
+    terminals: usize,
+    preempted: usize,
+    resumed: usize,
+}
+
+fn drain(h: &SessionHandle) -> Outcome {
+    let mut out = Outcome {
+        tokens: vec![],
+        done: None,
+        error: None,
+        terminals: 0,
+        preempted: 0,
+        resumed: 0,
+    };
+    while let Some(ev) = h.recv_timeout(TIMEOUT) {
+        match ev {
+            SessionEvent::Queued => {}
+            SessionEvent::Prefilled { first_token, .. } => out.tokens.push(first_token),
+            SessionEvent::Token { tok, .. } => out.tokens.push(tok),
+            SessionEvent::Preempted { .. } => out.preempted += 1,
+            SessionEvent::Resumed { .. } => out.resumed += 1,
+            SessionEvent::Done { stats } => {
+                out.terminals += 1;
+                out.done = Some(stats);
+            }
+            SessionEvent::Error { error } => {
+                out.terminals += 1;
+                out.error = Some(error);
+            }
+        }
+    }
+    out
+}
+
+/// Pump one handle until its first `Preempted` event (the park point).
+/// Non-terminal events before it are fine; a terminal is a failure.
+fn wait_preempted(h: &SessionHandle) {
+    loop {
+        match h.recv_timeout(TIMEOUT) {
+            Some(SessionEvent::Preempted { .. }) => return,
+            Some(SessionEvent::Done { .. }) | Some(SessionEvent::Error { .. }) => {
+                panic!("stream terminated before it was ever preempted")
+            }
+            Some(_) => {}
+            None => panic!("stream closed before it was ever preempted"),
+        }
+    }
+}
+
+/// The tentpole gate, dense routes: three `(prompt 100, max_new 100)`
+/// Backbone streams against a 56-page pool — below their 144-page
+/// aggregate worst case, and too small for two grown streams (2 x 32)
+/// plus a third. `WorstCase` admission serves them strictly serially
+/// (the reference, zero preemptions); `Optimistic { 0.5 }` co-admits
+/// two, the second one's growth at the 128 -> 256 bucket edge starves,
+/// the elder is preempted and later resumed — and ALL THREE streams
+/// complete bit-identical to the serial reference.
+#[test]
+fn optimistic_admission_preempts_and_completes_all_dense_streams() {
+    let mut rng = Rng::seed_from_u64(91);
+    let reqs: Vec<Request> = (0..3)
+        .map(|_| Request {
+            prompt: generate(Task::PRe, &mut rng, 100).prompt,
+            max_new: 100,
+            policy: Policy::Backbone,
+            ignore_eos: true,
+            ..Default::default()
+        })
+        .collect();
+
+    // reference: the SAME pool under WorstCase admission — today's
+    // serial decisions reproduced exactly, no preemption machinery
+    let (wc, wc_engine) = start_pooled(56, ServingConfig::default());
+    let reference: Vec<Vec<u32>> =
+        reqs.iter().map(|r| wc.submit(r.clone()).unwrap().tokens).collect();
+    {
+        let m = wc.metrics.lock().unwrap();
+        assert_eq!(m.preemptions, 0, "WorstCase admission must never preempt");
+        assert_eq!(m.requests_completed, 3);
+    }
+    common::assert_pool_drained(&wc_engine);
+
+    let (coord, engine) = start_pooled(56, optimistic(0.5));
+    let handles: Vec<SessionHandle> =
+        reqs.iter().map(|r| coord.open(r.clone()).unwrap()).collect();
+    let outcomes: Vec<Outcome> = handles.iter().map(drain).collect();
+
+    let mut preempted_streams = 0;
+    for (i, o) in outcomes.iter().enumerate() {
+        assert_eq!(o.terminals, 1, "stream {i} must see exactly one terminal event");
+        assert!(o.error.is_none(), "stream {i} must complete, got {:?}", o.error);
+        let done = o.done.as_ref().unwrap();
+        assert_eq!(done.tokens.len(), 100, "stream {i} must honor max_new");
+        assert_eq!(o.tokens, reference[i], "stream {i}: preempted stream diverged");
+        assert_eq!(done.tokens, reference[i], "stream {i}: Done stats diverged");
+        assert_eq!(
+            o.preempted, o.resumed,
+            "stream {i}: every preemption of a completed stream must have resumed"
+        );
+        if o.preempted > 0 {
+            preempted_streams += 1;
+        }
+    }
+    assert!(preempted_streams >= 1, "the undersized pool must have forced a preemption");
+
+    let m = coord.metrics.lock().unwrap();
+    assert!(m.preemptions >= 1, "preemptions must be counted: {}", m.summary());
+    assert!(m.resumes >= 1, "resumes must be counted: {}", m.summary());
+    assert!(m.preempted_pages_freed >= 1, "freed pages must be counted: {}", m.summary());
+    assert_eq!(m.preemption_exhausted, 0, "no stream may exhaust its preemption budget");
+    assert_eq!(m.requests_completed, 3);
+    assert_eq!(m.requests_failed, 0);
+    assert_eq!(m.requests_overloaded, 0, "no decode-phase Overloaded under preemption");
+    let s = m.summary();
+    assert!(s.contains("preemptions="), "{s}");
+    assert!(s.contains("resumes="), "{s}");
+    assert!(s.contains("preempted_pages_freed="), "{s}");
+    drop(m);
+    common::assert_pool_drained(&engine);
+}
+
+/// Sparse-route variant of the tentpole gate: two `[Fa, Ssa, Fa, Ssa]`
+/// sparse-decode streams (routed footprint 24 pages each) on a 44-page
+/// pool under `Optimistic { 0.4 }`. Both co-admit; the second stream's
+/// FA growth at the bucket edge starves, so the elder — whose sparse
+/// rings have WRAPPED by then (131 tokens seen > 128 capacity) — is
+/// preempted with ring snapshots and later resumed through the
+/// snapshot-verified recompute path. Both streams complete
+/// bit-identical to uncontended references.
+#[test]
+fn preempted_sparse_ring_stream_resumes_bit_identical() {
+    let mut rng = Rng::seed_from_u64(92);
+    let policy = || Policy::Static {
+        modes: vec![AttnMode::Fa, AttnMode::Ssa, AttnMode::Fa, AttnMode::Ssa],
+        decode: DecodeMode::Sparse,
+    };
+    let reqs: Vec<Request> = (0..2)
+        .map(|_| Request {
+            prompt: generate(Task::PRe, &mut rng, 100).prompt,
+            max_new: 100,
+            policy: policy(),
+            ignore_eos: true,
+            ..Default::default()
+        })
+        .collect();
+
+    // uncontended references on a roomy default pool (pool size never
+    // affects the computed stream — only whether it must wait)
+    let ref_engine = EngineHandle::spawn(artifacts()).unwrap();
+    let ref_coord = Coordinator::start(ref_engine.clone(), ServingConfig::default()).unwrap();
+    let reference: Vec<Vec<u32>> =
+        reqs.iter().map(|r| ref_coord.submit(r.clone()).unwrap().tokens).collect();
+    common::assert_pool_drained(&ref_engine);
+
+    let (coord, engine) = start_pooled(44, optimistic(0.4));
+    let handles: Vec<SessionHandle> =
+        reqs.iter().map(|r| coord.open(r.clone()).unwrap()).collect();
+    let outcomes: Vec<Outcome> = handles.iter().map(drain).collect();
+
+    let mut preempted_streams = 0;
+    for (i, o) in outcomes.iter().enumerate() {
+        assert_eq!(o.terminals, 1, "stream {i} must see exactly one terminal event");
+        assert!(o.error.is_none(), "stream {i} must complete, got {:?}", o.error);
+        assert_eq!(
+            o.tokens, reference[i],
+            "stream {i}: resumed sparse-ring stream diverged from the uncontended run"
+        );
+        assert_eq!(o.preempted, o.resumed, "stream {i}: unbalanced preempt/resume events");
+        if o.preempted > 0 {
+            preempted_streams += 1;
+        }
+    }
+    assert!(preempted_streams >= 1, "the undersized pool must have forced a preemption");
+    let m = coord.metrics.lock().unwrap();
+    assert!(m.preemptions >= 1, "{}", m.summary());
+    assert!(m.resumes >= 1, "{}", m.summary());
+    assert_eq!(m.requests_completed, 2);
+    assert_eq!(m.requests_failed, 0);
+    drop(m);
+    common::assert_pool_drained(&engine);
+}
+
+/// A PARKED victim honors cancellation: once the elder dense stream is
+/// preempted (its `Preempted` event is the park point), cancelling it
+/// retires it with the typed `Cancelled` — it never resumes, never
+/// completes — while the surviving streams run to completion.
+#[test]
+fn parked_victim_honors_cancel() {
+    let mut rng = Rng::seed_from_u64(93);
+    let reqs: Vec<Request> = (0..3)
+        .map(|_| Request {
+            prompt: generate(Task::PRe, &mut rng, 100).prompt,
+            max_new: 100,
+            policy: Policy::Backbone,
+            ignore_eos: true,
+            ..Default::default()
+        })
+        .collect();
+    let (coord, engine) = start_pooled(56, optimistic(0.5));
+    let handles: Vec<SessionHandle> =
+        reqs.iter().map(|r| coord.open(r.clone()).unwrap()).collect();
+
+    // the first-admitted stream is deterministically the first victim:
+    // it promotes first, grows first, and is the only non-starved
+    // decode-phase candidate when its younger sibling's growth starves
+    wait_preempted(&handles[0]);
+    handles[0].cancel();
+    let o = drain(&handles[0]);
+    assert_eq!(o.terminals, 1, "the cancelled victim must see exactly one terminal event");
+    assert_eq!(o.error, Some(RequestError::Cancelled));
+    assert!(o.done.is_none(), "a cancelled parked victim must never complete");
+
+    // the siblings are untouched
+    for (i, h) in handles.iter().enumerate().skip(1) {
+        let o = drain(h);
+        assert_eq!(o.terminals, 1, "stream {i} must see exactly one terminal event");
+        assert!(o.error.is_none(), "stream {i} must complete, got {:?}", o.error);
+        assert_eq!(o.done.unwrap().tokens.len(), 100);
+    }
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.requests_cancelled, 1);
+    assert_eq!(m.requests_completed, 2);
+    assert!(m.preemptions >= 1);
+    drop(m);
+    common::assert_pool_drained(&engine);
+}
+
+/// A PARKED victim honors the drain: once the elder stream is parked,
+/// draining lets the in-flight survivor finish its full stream while
+/// the victim retires with the typed retryable `Draining` — parked
+/// work never outlives the drain deadline as a zombie.
+#[test]
+fn parked_victim_honors_drain() {
+    let mut rng = Rng::seed_from_u64(94);
+    let reqs: Vec<Request> = (0..2)
+        .map(|_| Request {
+            prompt: generate(Task::PRe, &mut rng, 100).prompt,
+            max_new: 100,
+            policy: Policy::Backbone,
+            ignore_eos: true,
+            ..Default::default()
+        })
+        .collect();
+    let (coord, engine) = start_pooled(56, optimistic(0.5));
+    let ha = coord.open(reqs[0].clone()).unwrap();
+    let hb = coord.open(reqs[1].clone()).unwrap();
+
+    wait_preempted(&ha);
+    assert!(coord.drain(Duration::from_secs(60)), "drain must complete within the deadline");
+
+    // the parked victim was retired typed and retryable at drain start
+    let oa = drain(&ha);
+    assert_eq!(oa.terminals, 1, "the parked victim must see exactly one terminal event");
+    let err = oa.error.expect("the parked victim must retire with a typed error");
+    assert_eq!(err, RequestError::Draining);
+    assert!(err.retryable(), "Draining must stay retryable for parked victims");
+
+    // the in-flight survivor finished its whole stream through the drain
+    let ob = drain(&hb);
+    assert_eq!(ob.terminals, 1);
+    assert!(ob.error.is_none(), "drain must never error the in-flight stream: {:?}", ob.error);
+    assert_eq!(ob.done.unwrap().tokens.len(), 100);
+    assert_eq!(coord.metrics.lock().unwrap().requests_completed, 1);
+    drop(engine);
+}
+
+/// A PARKED victim honors its deadline: after the elder stream is
+/// preempted, a treadmill of follow-on streams keeps at least one
+/// promoted stream (routed 32 pages) in flight, so the victim's resume
+/// (needing 32 more of the 56-page pool) can never fit while the
+/// treadmill spins. Its deadline elapses while it sits parked, and the
+/// parked revalidation retires it with the typed `DeadlineExceeded` —
+/// never a zombie. The treadmill is throughput-adaptive: a drainer
+/// thread retires finished streams while the test tops the pipeline
+/// back up, so the pool stays contended past the deadline on fast and
+/// slow machines alike.
+#[test]
+fn parked_victim_honors_deadline() {
+    const DEADLINE_MS: u64 = 1500;
+    const TREADMILL_MS: u64 = 2400;
+
+    let mut rng = Rng::seed_from_u64(95);
+    let (coord, engine) = start_pooled(
+        56,
+        ServingConfig {
+            admission_mode: AdmissionMode::Optimistic { factor: 0.5 },
+            // treadmill streams may collide at their own bucket edges;
+            // give them headroom so none exhausts its retry budget
+            max_preemptions: 8,
+            ..Default::default()
+        },
+    );
+    let fresh = |rng: &mut Rng, deadline_ms: Option<u64>| Request {
+        prompt: generate(Task::PRe, rng, 100).prompt,
+        max_new: 100,
+        policy: Policy::Backbone,
+        deadline_ms,
+        ignore_eos: true,
+        ..Default::default()
+    };
+
+    // the victim carries the deadline; its sibling forces the preemption
+    let t0 = std::time::Instant::now();
+    let ha = coord.open(fresh(&mut rng, Some(DEADLINE_MS))).unwrap();
+    let hb = coord.open(fresh(&mut rng, None)).unwrap();
+    wait_preempted(&ha);
+
+    // drainer: retires treadmill streams in FIFO order so the opener
+    // knows how many are still outstanding without consuming ha
+    let outstanding = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let (mill_tx, mill_rx) = std::sync::mpsc::channel::<SessionHandle>();
+    let drainer = {
+        let outstanding = Arc::clone(&outstanding);
+        std::thread::spawn(move || {
+            let mut failures = vec![];
+            let mut completed = 0usize;
+            while let Ok(h) = mill_rx.recv() {
+                let o = drain(&h);
+                if let Some(e) = o.error {
+                    failures.push(e);
+                } else {
+                    completed += 1;
+                }
+                outstanding.fetch_sub(1, std::sync::atomic::Ordering::SeqCst);
+            }
+            (completed, failures)
+        })
+    };
+    outstanding.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+    mill_tx.send(hb).unwrap();
+
+    // top the treadmill up to five outstanding streams until the
+    // victim's deadline has passed with margin; with FIFO admission at
+    // most two run concurrently, so the pool never goes idle in between
+    while t0.elapsed() < Duration::from_millis(TREADMILL_MS) {
+        if outstanding.load(std::sync::atomic::Ordering::SeqCst) < 5 {
+            match coord.open(fresh(&mut rng, None)) {
+                Ok(h) => {
+                    outstanding.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    mill_tx.send(h).unwrap();
+                }
+                // a full queue just means the treadmill is already deep
+                Err(e) => {
+                    assert!(e.retryable(), "treadmill admission failed non-retryably: {e:?}")
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let oa = drain(&ha);
+    assert_eq!(oa.terminals, 1, "the expired victim must see exactly one terminal event");
+    assert_eq!(
+        oa.error,
+        Some(RequestError::DeadlineExceeded),
+        "a parked victim must honor its deadline"
+    );
+    assert!(oa.done.is_none(), "an expired parked victim must never complete");
+
+    // the treadmill streams all ran to completion
+    drop(mill_tx);
+    let (completed, failures) = drainer.join().unwrap();
+    assert!(failures.is_empty(), "treadmill streams failed: {failures:?}");
+    assert!(completed >= 1);
+
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.requests_expired, 1, "{}", m.summary());
+    assert!(m.preemptions >= 1, "{}", m.summary());
+    drop(m);
+    common::assert_pool_drained(&engine);
+}

@@ -385,6 +385,105 @@ fn zero_copy_views_match_clone_path_logits() {
     });
 }
 
+/// DESIGN.md §15 route-aware footprint math as a property over the
+/// REAL engine: once the route is pinned, the promotion-time ledger
+/// charge (`PoolProfile::routed_pages`) must equal the number of pool
+/// pages the request actually peaks at through a full decode — across
+/// the 128 -> 256 bucket-growth edge, the exact capacity boundary
+/// (`prompt + max_new - 1` hitting a bucket), and the sparse-ring
+/// wrap. The prefix cache is disabled so `pages_allocated` is
+/// attributable to the single live request, and the worst-case bound
+/// must dominate the peak everywhere.
+#[test]
+fn promotion_charge_equals_actual_decode_page_peak() {
+    let dir = synthetic::ensure_default().expect("synthetic artifacts");
+    // 32-token pages, room for any single request in the sweep
+    let mut engine = Engine::load_with_pool(&dir, Some((32, 32 * 2048))).unwrap();
+    engine.set_prefix_cache(false, None);
+    let pp = engine.pool_profile();
+
+    let mut run = |plen: usize, max_new: usize, policy: &Policy| -> Result<(), String> {
+        let prompt: Vec<u32> = (0..plen).map(|i| 7 + (i % 400) as u32).collect();
+        let (id, report) =
+            engine.prefill(&prompt, policy, "balanced").map_err(|e| e.to_string())?;
+        let mut peak = engine.pool().pages_allocated();
+        for _ in 0..max_new.saturating_sub(1) {
+            engine.decode_step(id).map_err(|e| e.to_string())?;
+            peak = peak.max(engine.pool().pages_allocated());
+        }
+        engine.release(id);
+        let charge = pp.routed_pages(plen, max_new, &report.modes, policy.decode_mode());
+        let worst = pp.worst_case_pages(plen, max_new);
+        if charge != peak {
+            return Err(format!(
+                "routed charge {charge} != actual page peak {peak} \
+                 (prompt {plen}, max_new {max_new}, route {:?}, {policy:?})",
+                report.modes
+            ));
+        }
+        if worst < peak {
+            return Err(format!(
+                "worst case {worst} under actual peak {peak} (prompt {plen}, max_new {max_new})"
+            ));
+        }
+        Ok(())
+    };
+
+    // deterministic knife edges first: exact bucket fits, the one-token
+    // overflow into the next bucket, growth mid-decode, and ring wrap
+    let sparse_mix = Policy::Static {
+        modes: vec![AttnMode::Fa, AttnMode::Ssa, AttnMode::Fa, AttnMode::Ssa],
+        decode: DecodeMode::Sparse,
+    };
+    for (plen, max_new) in
+        [(128, 1), (129, 1), (100, 29), (100, 30), (100, 100), (64, 65), (64, 66)]
+    {
+        run(plen, max_new, &Policy::Backbone).unwrap();
+        run(plen, max_new, &sparse_mix).unwrap();
+    }
+
+    // random sweep over lengths and routed layouts
+    check("promotion_charge_equals_peak", 16, |rng| {
+        let plen = 100 + rng.gen_range(60);
+        let max_new = 1 + rng.gen_range(60);
+        let pick = rng.gen_range(4);
+        let modes: Vec<AttnMode> = (0..4)
+            .map(|_| if rng.gen_range(2) == 0 { AttnMode::Fa } else { AttnMode::Ssa })
+            .collect();
+        let policy = match pick {
+            0 => Policy::Backbone,
+            1 => Policy::Flux { sa_mode: AttnMode::Ssa, decode: DecodeMode::Sparse },
+            2 => Policy::Static { modes, decode: DecodeMode::Sparse },
+            _ => Policy::Static { modes, decode: DecodeMode::Dense },
+        };
+        run(plen, max_new, &policy)
+    });
+}
+
+/// `WorstCase` admission is the identity on the worst-case bound — it
+/// reproduces pre-§15 admission decisions exactly — and `Optimistic`
+/// charges are clamped to `[1, worst]`, monotone in the factor, with
+/// exact endpoints at 0.0 and 1.0 (out-of-range factors clamp).
+#[test]
+fn admission_mode_charge_bounds() {
+    use flux_attention::config::AdmissionMode;
+    check("admission_mode_charge_bounds", 64, |rng| {
+        let worst = 1 + rng.gen_range(9999);
+        prop_assert_eq!(AdmissionMode::WorstCase.admission_pages(worst), worst);
+        let f = rng.f64() * 2.0 - 0.5;
+        let charge = AdmissionMode::Optimistic { factor: f }.admission_pages(worst);
+        prop_assert!(charge >= 1 && charge <= worst, "charge {charge} outside [1, {worst}]");
+        let c2 = AdmissionMode::Optimistic { factor: f + 0.3 }.admission_pages(worst);
+        prop_assert!(c2 >= charge, "optimistic charge not monotone in factor");
+        prop_assert_eq!(AdmissionMode::Optimistic { factor: 0.0 }.admission_pages(worst), 1);
+        prop_assert_eq!(
+            AdmissionMode::Optimistic { factor: 1.0 }.admission_pages(worst),
+            worst
+        );
+        Ok(())
+    });
+}
+
 #[test]
 fn json_roundtrip_numbers_and_strings() {
     use flux_attention::util::json::Json;

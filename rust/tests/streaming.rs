@@ -90,6 +90,8 @@ fn streamed_tokens_match_blocking_api() {
                 break;
             }
             SessionEvent::Error { error } => panic!("unexpected error: {error}"),
+            // uncontended pool: preemption never fires here
+            SessionEvent::Preempted { .. } | SessionEvent::Resumed { .. } => {}
         }
     }
     assert!(saw_queued, "Queued must precede everything");
@@ -441,6 +443,72 @@ fn wire_cancel_aborts_stream_and_frees_slot() {
     common::assert_pool_drained(&engine);
 }
 
+/// Slow-client backpressure (DESIGN.md §15 hardening): a connection
+/// that opens a long stream and then never reads a byte must not stall
+/// a sibling connection — every connection's outbound frames flow
+/// through its own bounded queue, so only the slow connection's pumps
+/// ever block. Once the slow client goes away, its stream (and ONLY
+/// its stream) is cancelled and the engine reclaims slot + KV pages.
+#[test]
+fn never_reading_client_does_not_stall_sibling_stream() {
+    let (coord, addr, engine) = start_server();
+    let mut rng = Rng::seed_from_u64(39);
+    let slow_prompt = generate(Task::PRe, &mut rng, 100).prompt;
+    let sib_prompt = generate(Task::Gov, &mut rng, 100).prompt;
+
+    // the slow connection: open a long stream, then never read — the
+    // server's frames pile into its bounded outbound queue
+    let slow = TcpStream::connect(&addr).unwrap();
+    let mut wr = slow.try_clone().unwrap();
+    let req = WireRequest {
+        prompt: slow_prompt,
+        max_new: 2048,
+        policy: "backbone".into(),
+        id: Some(1),
+        ignore_eos: true,
+        ..Default::default()
+    };
+    wr.write_all(format!("{}\n", req.to_json()).as_bytes()).unwrap();
+    wr.flush().unwrap();
+    // wait until the slow stream is genuinely decoding server-side
+    let deadline = std::time::Instant::now() + TIMEOUT;
+    while coord.metrics.lock().unwrap().decode_rounds == 0 {
+        assert!(std::time::Instant::now() < deadline, "slow stream never started decoding");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // the sibling connection must stream to completion while the slow
+    // client sits on an ever-growing backlog
+    let client = StreamClient::connect(&addr).unwrap();
+    let sibling = client
+        .open(&WireRequest { prompt: sib_prompt, max_new: 8, ignore_eos: true, ..Default::default() })
+        .unwrap();
+    let resp = sibling.wait().unwrap();
+    assert!(resp.error.is_none(), "sibling stream must not error: {:?}", resp.error);
+    assert_eq!(resp.tokens.len(), 8, "sibling stream must finish all its tokens");
+    // exactly the sibling completed — the 2048-token slow stream cannot
+    // have outrun an 8-token one
+    assert_eq!(coord.metrics.lock().unwrap().requests_completed, 1);
+
+    // the slow client disappears: the server must cancel ITS stream
+    // (typed, counted) and reclaim the pages — nothing else
+    let _ = slow.shutdown(std::net::Shutdown::Both);
+    drop(slow);
+    let deadline = std::time::Instant::now() + TIMEOUT;
+    while coord.metrics.lock().unwrap().requests_cancelled == 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "the dead connection's stream was never cancelled"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.requests_cancelled, 1, "only the slow connection's own stream is cancelled");
+    assert_eq!(m.requests_completed, 1, "the sibling's completion stands");
+    drop(m);
+    common::assert_pool_drained(&engine);
+}
+
 /// The streaming serving bench (the CI smoke gate's third artifact)
 /// writes valid JSON with cleanup proof.
 #[test]
@@ -457,7 +525,7 @@ fn streaming_bench_smoke_writes_valid_json() {
     };
     let p = run_streaming_bench(&dir, &opts).unwrap();
     let j = Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
-    assert_eq!(j.get("schema").and_then(Json::as_str), Some("flux-bench-serving/v3"));
+    assert_eq!(j.get("schema").and_then(Json::as_str), Some("flux-bench-serving/v6"));
     assert_eq!(j.get("measured").and_then(Json::as_bool), Some(true));
     assert_eq!(j.get("cancelled_cleanup_ok").and_then(Json::as_bool), Some(true));
     assert!(j.get("tokens_per_s").and_then(Json::as_f64).unwrap() > 0.0);
@@ -479,5 +547,17 @@ fn streaming_bench_smoke_writes_valid_json() {
     assert!(fr.get("engine_restarts").and_then(Json::as_f64).unwrap() >= 1.0);
     assert_eq!(fr.get("bit_identical").and_then(Json::as_bool), Some(true));
     assert!(fr.get("time_to_readmit_ms").and_then(Json::as_f64).unwrap() >= 0.0);
+    // the preemption scenario (DESIGN.md §15) must be measured: an
+    // undersized pool under optimistic admission actually preempted AND
+    // resumed, every stream completed, and the resumed streams matched
+    // the worst-case serial reference bit for bit
+    let pe = j.get("preemption").expect("preemption scenario missing");
+    assert!(pe.get("preemptions").and_then(Json::as_f64).unwrap() >= 1.0);
+    assert!(pe.get("resumes").and_then(Json::as_f64).unwrap() >= 1.0);
+    assert!(pe.get("preempted_pages_freed").and_then(Json::as_f64).unwrap() >= 1.0);
+    assert_eq!(pe.get("all_streams_completed").and_then(Json::as_bool), Some(true));
+    assert_eq!(pe.get("bit_identical").and_then(Json::as_bool), Some(true));
+    assert!(pe.get("goodput_optimistic_tokens_per_s").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(pe.get("goodput_worst_case_tokens_per_s").and_then(Json::as_f64).unwrap() > 0.0);
     let _ = std::fs::remove_dir_all(&out);
 }
